@@ -1,0 +1,118 @@
+//! Genz test-function suite — the standard benchmark battery for
+//! multidimensional integration — run as one multifunction batch and
+//! gated against closed forms.
+//!
+//! Families (Genz 1984): oscillatory, product peak, Gaussian, plus the
+//! monomial/abs families used elsewhere in the repo. Each family is
+//! instantiated at several difficulty levels (c-norms).
+//!
+//! ```text
+//! cargo run --release --example genz_suite
+//! ```
+
+use std::sync::Arc;
+
+use zmc::analytic;
+use zmc::integrator::multifunctions::{self, MultiConfig};
+use zmc::integrator::spec::IntegralJob;
+use zmc::runtime::device::DevicePool;
+use zmc::runtime::registry::Registry;
+
+struct Case {
+    name: String,
+    job: IntegralJob,
+    truth: f64,
+}
+
+fn main() -> anyhow::Result<()> {
+    let samples = std::env::var("ZMC_SAMPLES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1 << 18);
+    let registry = Arc::new(Registry::load("artifacts")?);
+    let pool = DevicePool::new(&registry, 1)?;
+    let unit2 = [(0.0, 1.0), (0.0, 1.0)];
+    let unit3 = [(0.0, 1.0), (0.0, 1.0), (0.0, 1.0)];
+
+    let mut cases: Vec<Case> = Vec::new();
+    // oscillatory at increasing frequency: cos(2πu + c1 x1 + c2 x2)
+    for (i, scale) in [1.0, 4.0, 9.0].iter().enumerate() {
+        let (c, u) = (vec![scale * 1.3, scale * 0.7], 0.25);
+        cases.push(Case {
+            name: format!("oscillatory[{i}]"),
+            job: IntegralJob::with_params(
+                "cos(2*pi*p0 + p1*x1 + p2*x2)",
+                &unit2,
+                &[u, c[0], c[1]],
+            )?,
+            truth: analytic::genz_oscillatory(u, &c),
+        });
+    }
+    // product peak at w=(0.35, 0.65)
+    for (i, scale) in [2.0, 6.0].iter().enumerate() {
+        let c = vec![*scale, scale * 1.5];
+        let w = vec![0.35, 0.65];
+        cases.push(Case {
+            name: format!("product_peak[{i}]"),
+            job: IntegralJob::with_params(
+                "(1/((1/(p0*p0)) + (x1-p2)^2)) \
+                 * (1/((1/(p1*p1)) + (x2-p3)^2))",
+                &unit2,
+                &[c[0], c[1], w[0], w[1]],
+            )?,
+            truth: analytic::genz_product_peak(&c, &w),
+        });
+    }
+    // gaussian bumps in 3-D
+    for (i, scale) in [1.5, 4.0].iter().enumerate() {
+        let c = vec![*scale, scale * 0.8, scale * 1.2];
+        let w = vec![0.2, 0.5, 0.8];
+        cases.push(Case {
+            name: format!("gaussian[{i}]"),
+            job: IntegralJob::with_params(
+                "exp(-( (p0*(x1-p3))^2 + (p1*(x2-p4))^2 + (p2*(x3-p5))^2 ))",
+                &unit3,
+                &[c[0], c[1], c[2], w[0], w[1], w[2]],
+            )?,
+            truth: analytic::genz_gaussian(&c, &w),
+        });
+    }
+    // monomials
+    for p in [2.0, 6.0] {
+        cases.push(Case {
+            name: format!("monomial[x^{p}]"),
+            job: IntegralJob::with_params("x1^p0", &unit2, &[p])?,
+            truth: analytic::monomial(p),
+        });
+    }
+
+    let jobs: Vec<IntegralJob> =
+        cases.iter().map(|c| c.job.clone()).collect();
+    let cfg = MultiConfig {
+        samples_per_fn: samples,
+        seed: 31415,
+        ..Default::default()
+    };
+    let t0 = std::time::Instant::now();
+    let ests = multifunctions::integrate(&pool, &jobs, &cfg)?;
+    let wall = t0.elapsed().as_secs_f64();
+
+    println!("# case  estimate  sigma  truth  |z|");
+    let mut worst: f64 = 0.0;
+    for (c, e) in cases.iter().zip(&ests) {
+        let z = (e.value - c.truth).abs() / e.std_err.max(1e-12);
+        worst = worst.max(z);
+        println!(
+            "{:<18}  {:>10.6}  {:>9.3e}  {:>10.6}  {:>6.2}",
+            c.name, e.value, e.std_err, c.truth, z
+        );
+    }
+    println!(
+        "# {} Genz cases x {samples} samples: {wall:.2}s (worst |z| = \
+         {worst:.2})",
+        cases.len()
+    );
+    assert!(worst < 6.0, "Genz suite inconsistent with closed forms");
+    println!("OK");
+    Ok(())
+}

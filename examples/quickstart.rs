@@ -1,0 +1,45 @@
+//! Quickstart: integrate one expression end-to-end through the AOT
+//! device path.
+//!
+//! ```text
+//! cargo run --release --example quickstart
+//! ```
+
+use std::sync::Arc;
+
+use zmc::integrator::multifunctions::{self, MultiConfig};
+use zmc::integrator::spec::IntegralJob;
+use zmc::runtime::device::DevicePool;
+use zmc::runtime::registry::Registry;
+
+fn main() -> anyhow::Result<()> {
+    // 1. load the AOT artifacts (built once by `make artifacts`)
+    let registry = Arc::new(Registry::load("artifacts")?);
+    let pool = DevicePool::new(&registry, 1)?;
+
+    // 2. describe the integral: ∫∫ sin(x1)·x2 over [0,π]×[0,1]
+    let job = IntegralJob::parse(
+        "sin(x1) * x2",
+        &[(0.0, std::f64::consts::PI), (0.0, 1.0)],
+    )?;
+
+    // 3. run it — the expression was compiled to device bytecode; the
+    //    launch runs on the PJRT CPU plugin standing in for a GPU.
+    let cfg = MultiConfig {
+        samples_per_fn: 1 << 20,
+        seed: 42,
+        ..Default::default()
+    };
+    let est = multifunctions::integrate(&pool, &[job], &cfg)?[0];
+
+    // truth: ∫ sin = 2, ∫ x2 = 1/2 → 1.0
+    println!("I        = {:.6} ± {:.2e}", est.value, est.std_err);
+    println!("analytic = 1.000000");
+    println!(
+        "|z|      = {:.2}",
+        (est.value - 1.0).abs() / est.std_err
+    );
+    assert!(est.consistent_with(1.0, 6.0));
+    println!("OK");
+    Ok(())
+}

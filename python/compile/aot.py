@@ -1,0 +1,68 @@
+"""AOT build: lower every L2 variant to HLO text + write the manifest.
+
+HLO *text* (not serialized HloModuleProto) is the interchange format: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(the version behind the rust `xla` 0.1.6 crate) rejects with
+``proto.id() <= INT_MAX``; the text parser reassigns ids and round-trips
+cleanly. See /opt/xla-example/README.md.
+
+Run as ``python -m compile.aot --out-dir ../artifacts`` (the Makefile's
+`artifacts` target). Python never runs again after this: the rust binary
+loads the manifest + HLO files and is self-contained.
+"""
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from .model import CONSTANTS, all_variants
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO MLIR -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_variant(variant):
+    lowered = jax.jit(variant.fn).lower(*variant.example_args())
+    return to_hlo_text(lowered)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated variant names (default: all)")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    only = set(args.only.split(",")) if args.only else None
+    manifest = {"constants": CONSTANTS, "executables": {}}
+    for v in all_variants():
+        if only and v.name not in only:
+            continue
+        text = lower_variant(v)
+        path = os.path.join(args.out_dir, f"{v.name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        entry = v.manifest_entry()
+        entry["sha256"] = hashlib.sha256(text.encode()).hexdigest()
+        manifest["executables"][v.name] = entry
+        print(f"  {v.name}: {len(text) / 1024:.0f} KiB -> {path}")
+
+    mpath = os.path.join(args.out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"wrote {mpath} ({len(manifest['executables'])} executables)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,92 @@
+"""Pallas kernel: multi-harmonic Monte-Carlo evaluator (Fig. 1 hot path).
+
+Evaluates, for a batch of N harmonic integrands
+
+    f_n(x) = a_n * cos(k_n . x) + b_n * sin(k_n . x)
+
+the per-function running sums (sum f, sum f^2) over S samples drawn
+in-kernel from the Philox counter RNG and affinely mapped to the box
+[lo, hi]^D.
+
+TPU mapping (see DESIGN.md #Hardware-Adaptation): the CUDA original spends
+one thread per sample with per-thread xoroshiro state; here each grid step
+owns a (TILE, D) sample tile resident in VMEM, the phase computation
+x @ k^T is a (TILE, D) x (D, N) matmul shaped for the 128x128 MXU, and
+partial reductions accumulate into the (2, N) output block across the
+sequential TPU grid. Lowered with interpret=True for the CPU PJRT plugin.
+
+VMEM working set per grid step (TILE=2048, D=8, N=128, f32):
+  x tile 64 KiB + phases/f 2 x 1 MiB + params ~5 KiB  <  8 MiB budget.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from .. import philox
+
+
+def _kernel(seed_ref, ctr_ref, k_ref, a_ref, b_ref, lo_ref, hi_ref,
+            out_ref, *, tile, dims):
+    t = pl.program_id(0)
+    base = ctr_ref[0] + jnp.uint32(t) * jnp.uint32(tile)
+    # (D, TILE) uniforms in [0,1), then affine map into the integration box.
+    u = philox.uniform_tile(
+        base, tile, dims, ctr_ref[1], ctr_ref[2], seed_ref[0], seed_ref[1]
+    )
+    lo = lo_ref[...]
+    hi = hi_ref[...]
+    x = lo[:, None] + (hi - lo)[:, None] * u          # (D, TILE)
+    # MXU path: phases = x^T @ k^T : (TILE, D) x (D, N) -> (TILE, N).
+    phases = jax.lax.dot_general(
+        x.T, k_ref[...].T,
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    f = a_ref[...][None, :] * jnp.cos(phases) \
+        + b_ref[...][None, :] * jnp.sin(phases)       # (TILE, N)
+    psum = jnp.sum(f, axis=0)
+    psq = jnp.sum(f * f, axis=0)
+
+    @pl.when(t == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    out_ref[0, :] += psum
+    out_ref[1, :] += psq
+
+
+def make_harmonic(samples, n_fns, dims, tile):
+    """Build the (jit-able) harmonic batch evaluator.
+
+    Signature of the returned function:
+      (seed u32[2], ctr u32[3]=(counter_base, stream, trial),
+       k f32[N, D], a f32[N], b f32[N], lo f32[D], hi f32[D])
+      -> f32[2, N]  (row 0 = sum f, row 1 = sum f^2 over `samples` draws)
+    """
+    assert samples % tile == 0, "samples must be a multiple of tile"
+    grid = (samples // tile,)
+    kern = functools.partial(_kernel, tile=tile, dims=dims)
+
+    def fn(seed, ctr, k, a, b, lo, hi):
+        return pl.pallas_call(
+            kern,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((2,), lambda t: (0,)),
+                pl.BlockSpec((3,), lambda t: (0,)),
+                pl.BlockSpec((n_fns, dims), lambda t: (0, 0)),
+                pl.BlockSpec((n_fns,), lambda t: (0,)),
+                pl.BlockSpec((n_fns,), lambda t: (0,)),
+                pl.BlockSpec((dims,), lambda t: (0,)),
+                pl.BlockSpec((dims,), lambda t: (0,)),
+            ],
+            out_specs=pl.BlockSpec((2, n_fns), lambda t: (0, 0)),
+            out_shape=jax.ShapeDtypeStruct((2, n_fns), jnp.float32),
+            interpret=True,
+        )(seed, ctr, k, a, b, lo, hi)
+
+    return fn

@@ -1,0 +1,89 @@
+"""Pure-numpy correctness oracles for every L1 kernel.
+
+Nothing here shares code with the jnp/pallas path: the Philox reference is
+an independent numpy implementation, the VM reference is a python-list
+stack machine (vm_core.vm_eval_ref). pytest asserts allclose between each
+pallas kernel and these oracles under hypothesis-swept shapes.
+"""
+
+import numpy as np
+
+from ..vm_core import vm_eval_ref
+
+M0 = np.uint32(0xD2511F53)
+M1 = np.uint32(0xCD9E8D57)
+W0 = np.uint32(0x9E3779B9)
+W1 = np.uint32(0xBB67AE85)
+
+
+def philox4x32_ref(c0, c1, c2, c3, k0, k1):
+    """Independent numpy Philox-4x32-10 (vectorized over arrays)."""
+    c = [np.asarray(v, np.uint32) for v in (c0, c1, c2, c3)]
+    k0 = np.asarray(k0, np.uint32)
+    k1 = np.asarray(k1, np.uint32)
+    with np.errstate(over="ignore"):
+        for r in range(10):
+            if r > 0:
+                k0 = (k0 + W0).astype(np.uint32)
+                k1 = (k1 + W1).astype(np.uint32)
+            p0 = c[0].astype(np.uint64) * np.uint64(M0)
+            p1 = c[2].astype(np.uint64) * np.uint64(M1)
+            hi0 = (p0 >> np.uint64(32)).astype(np.uint32)
+            lo0 = p0.astype(np.uint32)
+            hi1 = (p1 >> np.uint64(32)).astype(np.uint32)
+            lo1 = p1.astype(np.uint32)
+            c = [hi1 ^ c[1] ^ k0, lo1, hi0 ^ c[3] ^ k1, lo0]
+    return c
+
+
+def uniforms_ref(base, n, dims, stream, trial, seed0, seed1):
+    """(n, dims) f32 uniforms matching philox.uniform_tile (transposed)."""
+    idx = (np.uint32(base) + np.arange(n, dtype=np.uint32))
+    cols = []
+    for j in range((dims + 3) // 4):
+        out = philox4x32_ref(idx, np.uint32(j), np.uint32(stream),
+                             np.uint32(trial), np.uint32(seed0),
+                             np.uint32(seed1))
+        for o in out:
+            cols.append((o >> np.uint32(8)).astype(np.float32)
+                        * np.float32(1.0 / (1 << 24)))
+    return np.stack(cols, axis=1)[:, :dims]
+
+
+def harmonic_ref(samples, n_fns, dims, seed, ctr, k, a, b, lo, hi):
+    """Oracle for kernels.harmonic.make_harmonic: returns f32[2, N]."""
+    u = uniforms_ref(ctr[0], samples, dims, ctr[1], ctr[2], seed[0], seed[1])
+    x = lo[None, :] + (hi - lo)[None, :] * u           # (S, D)
+    phases = x.astype(np.float32) @ k.T.astype(np.float32)  # (S, N)
+    f = a[None, :] * np.cos(phases) + b[None, :] * np.sin(phases)
+    return np.stack([f.sum(axis=0), (f * f).sum(axis=0)]).astype(np.float32)
+
+
+def vm_multi_ref(samples, dims, seed, ctr, streams, ops, iargs, fargs,
+                 theta, lo, hi):
+    """Oracle for kernels.vm_eval.make_vm_multi: returns f32[F, 2]."""
+    n_fns = ops.shape[0]
+    out = np.zeros((n_fns, 2), np.float32)
+    for f in range(n_fns):
+        u = uniforms_ref(ctr[0], samples, dims, streams[f], ctr[1],
+                         seed[0], seed[1])
+        x = lo[f][None, :] + (hi[f] - lo[f])[None, :] * u
+        vals = vm_eval_ref(x, ops[f], iargs[f], fargs[f], theta[f])
+        out[f, 0] = vals.sum()
+        out[f, 1] = (vals * vals).sum()
+    return out
+
+
+def stratified_ref(samples, dims, seed, ctr, streams, ops, iargs, fargs,
+                   theta, cube_lo, cube_hi):
+    """Oracle for kernels.stratified.make_stratified: returns f32[C, 2]."""
+    n_cubes = cube_lo.shape[0]
+    out = np.zeros((n_cubes, 2), np.float32)
+    for c in range(n_cubes):
+        u = uniforms_ref(ctr[0], samples, dims, streams[c], ctr[1],
+                         seed[0], seed[1])
+        x = cube_lo[c][None, :] + (cube_hi[c] - cube_lo[c])[None, :] * u
+        vals = vm_eval_ref(x, ops, iargs, fargs, theta)
+        out[c, 0] = vals.sum()
+        out[c, 1] = (vals * vals).sum()
+    return out

@@ -1,0 +1,83 @@
+"""Pallas kernel: stratified per-cube evaluator (ZMCintegral_normal).
+
+One bytecode program, C hypercubes, S samples per cube. Each grid step
+(c, t) draws a Philox tile in cube c's box and runs the shared program on
+it; partials accumulate into the cube's (1, 2) output block. The rust
+tree-search driver batches every cube of one refinement level into a
+single launch and assigns each cube a globally unique stream id via the
+``streams`` input, so refined sub-cubes never reuse parent sample streams.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .. import philox
+from ..vm_core import vm_eval_tile
+
+
+def _kernel(seed_ref, ctr_ref, streams_ref, plen_ref, ops_ref, iargs_ref,
+            fargs_ref, theta_ref, cube_lo_ref, cube_hi_ref, out_ref, *,
+            tile, dims):
+    t = pl.program_id(1)
+    base = ctr_ref[0] + jnp.uint32(t) * jnp.uint32(tile)
+    u = philox.uniform_tile(
+        base, tile, dims, streams_ref[0], ctr_ref[1],
+        seed_ref[0], seed_ref[1],
+    )
+    lo = cube_lo_ref[0]
+    hi = cube_hi_ref[0]
+    x = lo[:, None] + (hi - lo)[:, None] * u
+    vals = vm_eval_tile(x, ops_ref[...], iargs_ref[...], fargs_ref[...],
+                        theta_ref[...], plen_ref[0])
+
+    @pl.when(t == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    out_ref[0, 0] += jnp.sum(vals)
+    out_ref[0, 1] += jnp.sum(vals * vals)
+
+
+def make_stratified(n_cubes, samples_per_cube, dims, prog, tile):
+    """Build the stratified cube evaluator.
+
+    Signature of the returned function:
+      (seed u32[2], ctr u32[2]=(counter_base, trial), streams u32[C],
+       plen i32[1] (actual program length), ops i32[P], iargs i32[P],
+       fargs f32[P], theta f32[MAX_PARAM],
+       cube_lo f32[C, D], cube_hi f32[C, D])
+      -> f32[C, 2]  (per-cube sum f, sum f^2 over `samples_per_cube` draws)
+    """
+    assert samples_per_cube % tile == 0
+    from .. import opcodes as oc
+
+    grid = (n_cubes, samples_per_cube // tile)
+    kern = functools.partial(_kernel, tile=tile, dims=dims)
+
+    def fn(seed, ctr, streams, plen, ops, iargs, fargs, theta, cube_lo,
+           cube_hi):
+        return pl.pallas_call(
+            kern,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((2,), lambda c, t: (0,)),
+                pl.BlockSpec((2,), lambda c, t: (0,)),
+                pl.BlockSpec((1,), lambda c, t: (c,)),
+                pl.BlockSpec((1,), lambda c, t: (0,)),
+                pl.BlockSpec((prog,), lambda c, t: (0,)),
+                pl.BlockSpec((prog,), lambda c, t: (0,)),
+                pl.BlockSpec((prog,), lambda c, t: (0,)),
+                pl.BlockSpec((oc.MAX_PARAM,), lambda c, t: (0,)),
+                pl.BlockSpec((1, dims), lambda c, t: (c, 0)),
+                pl.BlockSpec((1, dims), lambda c, t: (c, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, 2), lambda c, t: (c, 0)),
+            out_shape=jax.ShapeDtypeStruct((n_cubes, 2), jnp.float32),
+            interpret=True,
+        )(seed, ctr, streams, plen, ops, iargs, fargs, theta, cube_lo,
+          cube_hi)
+
+    return fn

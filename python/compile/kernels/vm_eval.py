@@ -1,0 +1,89 @@
+"""Pallas kernel: bytecode-VM multi-function Monte-Carlo evaluator.
+
+The generality workhorse behind ``ZMCintegral_multifunctions``: one AOT
+artifact evaluates *any* closed-form integrand. The rust coordinator
+compiles user expression strings to fixed-width bytecode (ops/iargs/fargs
+rows); this kernel runs F programs, each over S in-kernel Philox samples
+mapped to that function's own [lo_f, hi_f] box, and emits per-function
+(sum f, sum f^2).
+
+Grid is (F, S/TILE): the f axis picks the program row (BlockSpec block
+(1, P)), the t axis walks sample tiles; partials accumulate into the
+function's (1, 2) output block across the sequential t steps. Streams are
+caller-controlled (u32[F]) so the coordinator can assign globally unique
+Philox streams per integrand across chunks and workers.
+
+VMEM per grid step (TILE=2048, STACK=16, f32): stack 128 KiB + sample tile
+64 KiB + program rows < 1 KiB — far under budget; the VM is ALU-bound.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .. import philox
+from ..vm_core import vm_eval_tile
+
+
+def _kernel(seed_ref, ctr_ref, streams_ref, plens_ref, ops_ref, iargs_ref,
+            fargs_ref, theta_ref, lo_ref, hi_ref, out_ref, *, tile, dims):
+    t = pl.program_id(1)
+    base = ctr_ref[0] + jnp.uint32(t) * jnp.uint32(tile)
+    u = philox.uniform_tile(
+        base, tile, dims, streams_ref[0], ctr_ref[1],
+        seed_ref[0], seed_ref[1],
+    )
+    lo = lo_ref[0]
+    hi = hi_ref[0]
+    x = lo[:, None] + (hi - lo)[:, None] * u          # (D, TILE)
+    vals = vm_eval_tile(x, ops_ref[0], iargs_ref[0], fargs_ref[0],
+                        theta_ref[0], plens_ref[0])   # (TILE,)
+
+    @pl.when(t == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    out_ref[0, 0] += jnp.sum(vals)
+    out_ref[0, 1] += jnp.sum(vals * vals)
+
+
+def make_vm_multi(n_fns, samples, dims, prog, tile):
+    """Build the multi-function VM evaluator.
+
+    Signature of the returned function:
+      (seed u32[2], ctr u32[2]=(counter_base, trial), streams u32[F],
+       plens i32[F] (actual program lengths; 0 = null slot),
+       ops i32[F, P], iargs i32[F, P], fargs f32[F, P],
+       theta f32[F, MAX_PARAM], lo f32[F, D], hi f32[F, D])
+      -> f32[F, 2]   (col 0 = sum f, col 1 = sum f^2 over `samples` draws)
+    """
+    assert samples % tile == 0, "samples must be a multiple of tile"
+    from .. import opcodes as oc
+
+    grid = (n_fns, samples // tile)
+    kern = functools.partial(_kernel, tile=tile, dims=dims)
+
+    def fn(seed, ctr, streams, plens, ops, iargs, fargs, theta, lo, hi):
+        return pl.pallas_call(
+            kern,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((2,), lambda f, t: (0,)),
+                pl.BlockSpec((2,), lambda f, t: (0,)),
+                pl.BlockSpec((1,), lambda f, t: (f,)),
+                pl.BlockSpec((1,), lambda f, t: (f,)),
+                pl.BlockSpec((1, prog), lambda f, t: (f, 0)),
+                pl.BlockSpec((1, prog), lambda f, t: (f, 0)),
+                pl.BlockSpec((1, prog), lambda f, t: (f, 0)),
+                pl.BlockSpec((1, oc.MAX_PARAM), lambda f, t: (f, 0)),
+                pl.BlockSpec((1, dims), lambda f, t: (f, 0)),
+                pl.BlockSpec((1, dims), lambda f, t: (f, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, 2), lambda f, t: (f, 0)),
+            out_shape=jax.ShapeDtypeStruct((n_fns, 2), jnp.float32),
+            interpret=True,
+        )(seed, ctr, streams, plens, ops, iargs, fargs, theta, lo, hi)
+
+    return fn

@@ -1,0 +1,181 @@
+"""L2 — the jax compute graphs that get AOT-lowered for the rust runtime.
+
+Each entry point composes Philox sample generation, an L1 Pallas kernel,
+and the reduction layout the coordinator expects. Geometry (batch sizes,
+function counts, program width) is fixed per *variant* at lowering time;
+``all_variants`` below is the single source of truth consumed by aot.py
+and mirrored into artifacts/manifest.json for the rust registry.
+
+All entry points return raw (sum f, sum f^2) accumulators — the rust side
+owns volume scaling, Welford merging across chunks, and error estimates,
+so one artifact serves any sample budget by chunked relaunch with
+advancing ``counter_base``.
+"""
+
+import jax.numpy as jnp
+
+from . import opcodes as oc
+from .kernels.harmonic import make_harmonic
+from .kernels.stratified import make_stratified
+from .kernels.vm_eval import make_vm_multi
+
+
+def _u32(shape):
+    return ("u32", list(shape))
+
+
+def _i32(shape):
+    return ("i32", list(shape))
+
+
+def _f32(shape):
+    return ("f32", list(shape))
+
+
+class Variant:
+    """One AOT executable: a jax callable plus its manifest description."""
+
+    def __init__(self, name, kind, fn, inputs, outputs, meta):
+        self.name = name
+        self.kind = kind
+        self.fn = fn
+        self.inputs = inputs      # [(arg_name, (dtype, shape)), ...]
+        self.outputs = outputs    # [(dtype, shape)]
+        self.meta = meta          # kind-specific constants for the rust side
+
+    def example_args(self):
+        """ShapeDtypeStructs for jax.jit(...).lower()."""
+        import jax
+
+        dt = {"f32": jnp.float32, "i32": jnp.int32, "u32": jnp.uint32}
+        return [
+            jax.ShapeDtypeStruct(tuple(shape), dt[dtype])
+            for _, (dtype, shape) in self.inputs
+        ]
+
+    def manifest_entry(self):
+        return {
+            "file": f"{self.name}.hlo.txt",
+            "kind": self.kind,
+            "inputs": [
+                {"name": n, "dtype": d, "shape": s}
+                for n, (d, s) in self.inputs
+            ],
+            "outputs": [
+                {"dtype": d, "shape": s} for d, s in self.outputs
+            ],
+            **self.meta,
+        }
+
+
+def harmonic_variant(samples, n_fns, dims=oc.MAX_DIM, tile=2048):
+    """Multi-harmonic evaluator (Fig. 1 hot path)."""
+    fn = make_harmonic(samples, n_fns, dims, tile)
+    name = f"harmonic_s{samples}_n{n_fns}"
+    inputs = [
+        ("seed", _u32((2,))),
+        ("ctr", _u32((3,))),          # (counter_base, stream, trial)
+        ("k", _f32((n_fns, dims))),
+        ("a", _f32((n_fns,))),
+        ("b", _f32((n_fns,))),
+        ("lo", _f32((dims,))),
+        ("hi", _f32((dims,))),
+    ]
+    outputs = [_f32((2, n_fns))]
+    meta = {"samples": samples, "n_fns": n_fns, "dims": dims, "tile": tile}
+    return Variant(name, "harmonic", fn, inputs, outputs, meta)
+
+
+def vm_multi_variant(n_fns, samples, dims=oc.MAX_DIM, prog=oc.MAX_PROG,
+                     tile=2048):
+    """Bytecode-VM multi-function evaluator (ZMCintegral_multifunctions).
+
+    ``dims`` variants exist because sample generation is one Philox
+    block per 4 dimensions per sample: a d4 artifact does half the RNG
+    work of the d8 one — a measured ~1.5x launch win for the (common)
+    dims<=4 integrand population (§Perf L1). The rust registry picks the
+    smallest variant whose dims fit the job batch.
+    """
+    fn = make_vm_multi(n_fns, samples, dims, prog, tile)
+    name = f"vm_multi_f{n_fns}_s{samples}"
+    if dims != oc.MAX_DIM:
+        name += f"_d{dims}"
+    inputs = [
+        ("seed", _u32((2,))),
+        ("ctr", _u32((2,))),          # (counter_base, trial)
+        ("streams", _u32((n_fns,))),
+        ("plens", _i32((n_fns,))),    # actual program lengths (0 = null)
+        ("ops", _i32((n_fns, prog))),
+        ("iargs", _i32((n_fns, prog))),
+        ("fargs", _f32((n_fns, prog))),
+        ("theta", _f32((n_fns, oc.MAX_PARAM))),
+        ("lo", _f32((n_fns, dims))),
+        ("hi", _f32((n_fns, dims))),
+    ]
+    outputs = [_f32((n_fns, 2))]
+    meta = {
+        "samples": samples, "n_fns": n_fns, "dims": dims, "prog": prog,
+        "tile": tile,
+    }
+    return Variant(name, "vm_multi", fn, inputs, outputs, meta)
+
+
+def stratified_variant(n_cubes, samples_per_cube, dims=oc.MAX_DIM,
+                       prog=oc.MAX_PROG, tile=None):
+    """Per-cube stratified evaluator (ZMCintegral_normal tree search)."""
+    tile = tile or min(samples_per_cube, 1024)
+    fn = make_stratified(n_cubes, samples_per_cube, dims, prog, tile)
+    name = f"stratified_c{n_cubes}_s{samples_per_cube}"
+    inputs = [
+        ("seed", _u32((2,))),
+        ("ctr", _u32((2,))),          # (counter_base, trial)
+        ("streams", _u32((n_cubes,))),
+        ("plen", _i32((1,))),         # actual program length
+        ("ops", _i32((prog,))),
+        ("iargs", _i32((prog,))),
+        ("fargs", _f32((prog,))),
+        ("theta", _f32((oc.MAX_PARAM,))),
+        ("cube_lo", _f32((n_cubes, dims))),
+        ("cube_hi", _f32((n_cubes, dims))),
+    ]
+    outputs = [_f32((n_cubes, 2))]
+    meta = {
+        "samples": samples_per_cube, "n_cubes": n_cubes, "dims": dims,
+        "prog": prog, "tile": tile,
+    }
+    return Variant(name, "stratified", fn, inputs, outputs, meta)
+
+
+def all_variants():
+    """Every executable shipped in artifacts/ — the AOT build matrix.
+
+    Production sizes are chosen so one launch amortizes PJRT dispatch
+    overhead (>= 2^16 evaluations) while staying responsive for the
+    chunk scheduler; *_small variants keep integration tests fast.
+    """
+    return [
+        # Fig-1 / harmonic family hot path.
+        harmonic_variant(samples=65536, n_fns=128),
+        harmonic_variant(samples=8192, n_fns=128, tile=1024),
+        # Generic multi-function VM path (C1 workload); the d4 variant
+        # halves in-kernel RNG cost for dims<=4 integrands. TILE swept
+        # 1024..16384: 2048 and 4096 tie within run-to-run noise on the
+        # rust-side XLA; 2048 kept (smaller VMEM estimate, §Perf L1).
+        vm_multi_variant(n_fns=32, samples=16384),
+        vm_multi_variant(n_fns=32, samples=16384, dims=4),
+        vm_multi_variant(n_fns=8, samples=4096, tile=1024),
+        vm_multi_variant(n_fns=8, samples=4096, dims=4, tile=1024),
+        # Stratified tree-search path.
+        stratified_variant(n_cubes=64, samples_per_cube=1024),
+        stratified_variant(n_cubes=16, samples_per_cube=256),
+    ]
+
+
+CONSTANTS = {
+    "abi_version": 1,
+    "MAX_DIM": oc.MAX_DIM,
+    "MAX_PROG": oc.MAX_PROG,
+    "STACK": oc.STACK,
+    "MAX_PARAM": oc.MAX_PARAM,
+    "N_OPS": oc.N_OPS,
+}

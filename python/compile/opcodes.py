@@ -1,0 +1,73 @@
+"""Bytecode opcode table — python half of the ABI.
+
+Must match spec/opcodes.txt and rust/src/vm/opcodes.rs exactly; enforced by
+python/tests/test_opcode_abi.py. The VM is a stack machine: ``ops`` selects
+the operation, ``iargs`` carries VAR/PARAM indices, ``fargs`` carries CONST
+immediates. Programs are padded to MAX_PROG with HALT (a no-op), so a valid
+program always leaves its result in stack slot 0 after all MAX_PROG steps.
+"""
+
+HALT = 0
+CONST = 1
+VAR = 2
+PARAM = 3
+ADD = 4
+SUB = 5
+MUL = 6
+DIV = 7
+POW = 8
+MIN = 9
+MAX = 10
+NEG = 11
+ABS = 12
+SIN = 13
+COS = 14
+TAN = 15
+EXP = 16
+LOG = 17
+SQRT = 18
+TANH = 19
+ATAN = 20
+FLOOR = 21
+SQUARE = 22
+RECIP = 23
+
+N_OPS = 24
+
+NAMES = {
+    HALT: "HALT", CONST: "CONST", VAR: "VAR", PARAM: "PARAM",
+    ADD: "ADD", SUB: "SUB", MUL: "MUL", DIV: "DIV", POW: "POW",
+    MIN: "MIN", MAX: "MAX", NEG: "NEG", ABS: "ABS", SIN: "SIN",
+    COS: "COS", TAN: "TAN", EXP: "EXP", LOG: "LOG", SQRT: "SQRT",
+    TANH: "TANH", ATAN: "ATAN", FLOOR: "FLOOR", SQUARE: "SQUARE",
+    RECIP: "RECIP",
+}
+
+KINDS = {
+    HALT: "nullary", CONST: "push", VAR: "push", PARAM: "push",
+    ADD: "binary", SUB: "binary", MUL: "binary", DIV: "binary",
+    POW: "binary", MIN: "binary", MAX: "binary",
+    NEG: "unary", ABS: "unary", SIN: "unary", COS: "unary", TAN: "unary",
+    EXP: "unary", LOG: "unary", SQRT: "unary", TANH: "unary",
+    ATAN: "unary", FLOOR: "unary", SQUARE: "unary", RECIP: "unary",
+}
+
+# Compile-time VM geometry (mirrored in manifest.json "constants").
+MAX_PROG = 48    # instructions per program (HALT-padded)
+STACK = 16       # value-stack depth
+MAX_PARAM = 16   # per-function parameter slots
+MAX_DIM = 8      # padded sample dimensionality
+
+
+def assemble(instrs, max_prog=MAX_PROG):
+    """Assemble [(op, iarg, farg), ...] into padded numpy program arrays."""
+    import numpy as np
+
+    if len(instrs) > max_prog:
+        raise ValueError(f"program too long: {len(instrs)} > {max_prog}")
+    ops = np.zeros(max_prog, np.int32)
+    iargs = np.zeros(max_prog, np.int32)
+    fargs = np.zeros(max_prog, np.float32)
+    for p, (op, ia, fa) in enumerate(instrs):
+        ops[p], iargs[p], fargs[p] = op, ia, fa
+    return ops, iargs, fargs

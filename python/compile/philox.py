@@ -1,0 +1,100 @@
+"""Philox-4x32-10 counter-based RNG, pure jnp.
+
+This is the build-time twin of ``rust/src/sampler/philox.rs``; the two are
+kept bit-exact (see python/tests/test_philox.py and the golden vectors in
+spec/philox_kat.txt). Counter-based RNG replaces the paper's per-thread
+xoroshiro128+ state (numba.cuda.random): on TPU there is no persistent
+per-lane register state across grid steps, so a stateless generator keyed
+on ``(seed, stream) x counter`` is the natural mapping — and it makes every
+sample reproducible and addressable from the rust coordinator.
+
+Counter layout (ABI, shared with rust):
+    c0 = counter_base + sample_index      (within-launch sample id)
+    c1 = dim_block                        (which group of 4 dimensions)
+    c2 = stream                           (function / cube / parameter id)
+    c3 = trial                            (independent-repeat id)
+    key = (seed0, seed1)
+
+All functions are pure jnp on uint32 and can be traced inside Pallas
+kernels (interpret=True) as well as plain jax.jit code.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# 64-bit intermediates are used for the 32x32->64 multiply; build-time only.
+jax.config.update("jax_enable_x64", True)
+
+PHILOX_M0 = np.uint32(0xD2511F53)
+PHILOX_M1 = np.uint32(0xCD9E8D57)
+PHILOX_W0 = np.uint32(0x9E3779B9)  # golden-ratio Weyl constant
+PHILOX_W1 = np.uint32(0xBB67AE85)  # sqrt(3)-1 Weyl constant
+ROUNDS = 10
+
+# 2^-24: maps the top 24 bits of a u32 to a float32 uniform in [0, 1).
+U01_SCALE = np.float32(1.0 / (1 << 24))
+
+
+def _mulhilo(a, b):
+    """(hi, lo) 32-bit halves of the 64-bit product a*b (u32 inputs)."""
+    p = a.astype(jnp.uint64) * b.astype(jnp.uint64)
+    return (p >> np.uint64(32)).astype(jnp.uint32), p.astype(jnp.uint32)
+
+
+def _round(c0, c1, c2, c3, k0, k1):
+    hi0, lo0 = _mulhilo(jnp.uint32(PHILOX_M0), c0)
+    hi1, lo1 = _mulhilo(jnp.uint32(PHILOX_M1), c2)
+    return hi1 ^ c1 ^ k0, lo1, hi0 ^ c3 ^ k1, lo0
+
+
+def philox4x32(c0, c1, c2, c3, k0, k1):
+    """Philox-4x32-10 block: four u32 counters + two u32 keys -> four u32.
+
+    Inputs may be scalars or arrays (broadcast together); outputs have the
+    broadcast shape. Bit-exact with the Random123 reference and with the
+    rust twin.
+    """
+    c0, c1, c2, c3 = (jnp.asarray(c, jnp.uint32) for c in (c0, c1, c2, c3))
+    k0 = jnp.asarray(k0, jnp.uint32)
+    k1 = jnp.asarray(k1, jnp.uint32)
+    for r in range(ROUNDS):
+        if r > 0:
+            k0 = k0 + PHILOX_W0
+            k1 = k1 + PHILOX_W1
+        c0, c1, c2, c3 = _round(c0, c1, c2, c3, k0, k1)
+    return c0, c1, c2, c3
+
+
+def u32_to_unit_f32(x):
+    """Map u32 -> f32 uniform in [0, 1) using the top 24 bits."""
+    return (x >> np.uint32(8)).astype(jnp.float32) * U01_SCALE
+
+
+def uniform_block(idx, dim_block, stream, trial, seed0, seed1):
+    """Four f32 uniforms in [0,1) for each element of ``idx``.
+
+    idx: u32 array of global sample indices (counter_base already added).
+    Returns an array of shape ``idx.shape + (4,)``.
+    """
+    o0, o1, o2, o3 = philox4x32(idx, dim_block, stream, trial, seed0, seed1)
+    return jnp.stack(
+        [u32_to_unit_f32(o) for o in (o0, o1, o2, o3)], axis=-1
+    )
+
+
+def uniform_tile(base, tile, dims, stream, trial, seed0, seed1):
+    """Generate a ``(dims, tile)`` f32 tile of uniforms in [0,1).
+
+    ``base`` is the u32 counter offset of the tile's first sample (the rust
+    coordinator chunks a logical launch into counter ranges). Dimensions are
+    produced in groups of 4 (one philox block per group), transposed so
+    that row ``d`` holds dimension ``d`` across the tile — the layout the
+    VM kernel wants for O(1) row slicing.
+    """
+    idx = jnp.asarray(base, jnp.uint32) + jnp.arange(tile, dtype=jnp.uint32)
+    blocks = []
+    for j in range((dims + 3) // 4):
+        u = uniform_block(idx, jnp.uint32(j), stream, trial, seed0, seed1)
+        blocks.append(u.T)  # (4, tile)
+    return jnp.concatenate(blocks, axis=0)[:dims]  # (dims, tile)

@@ -1,0 +1,158 @@
+"""Stack-machine bytecode evaluator, pure jnp (traceable inside Pallas).
+
+Evaluates one program over a tile of sample points. The stack is a dense
+``(STACK, TILE)`` f32 array; the stack pointer is a traced i32. Each
+instruction is dispatched with ``lax.switch`` so the lowered HLO contains
+one conditional per loop step rather than an unrolled 24-way tree per
+program slot — the instruction loop itself is a ``lax.fori_loop`` and is
+compiled once regardless of MAX_PROG.
+
+Out-of-range stack accesses cannot crash: ``dynamic_slice`` clamps indices,
+so an invalid program yields garbage values, never UB. Program validation
+(depth, arity, terminal sp==1) is the rust compiler's job.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import opcodes as oc
+
+
+def _dget(stack, row):
+    """stack[row] as a (1, TILE) slice with a traced row index."""
+    return jax.lax.dynamic_slice_in_dim(stack, row, 1, axis=0)
+
+
+def _dput(stack, row, val):
+    return jax.lax.dynamic_update_slice_in_dim(stack, val, row, axis=0)
+
+
+def vm_eval_tile(xT, ops, iargs, fargs, theta, n_instr=None):
+    """Run one program over a tile of samples.
+
+    xT:    (D, TILE) f32 — samples, one dimension per row.
+    ops:   (P,) i32, iargs: (P,) i32, fargs: (P,) f32 — the program.
+    theta: (MAX_PARAM,) f32 — per-function parameters.
+    n_instr: optional traced i32 — actual program length. The
+      instruction loop runs exactly this many iterations instead of the
+      padded P, which is the §Perf L1 win: typical programs are ~10
+      instructions against MAX_PROG=48, and null (padding) function
+      slots with n_instr=0 cost one bounds check. Defaults to P.
+    Returns (TILE,) f32 — f(x) for every sample in the tile.
+    """
+    tile = xT.shape[1]
+    xT = jnp.asarray(xT, jnp.float32)
+    ops = jnp.asarray(ops, jnp.int32)
+    iargs = jnp.asarray(iargs, jnp.int32)
+    fargs = jnp.asarray(fargs, jnp.float32)
+    theta = jnp.asarray(theta, jnp.float32)
+    stack0 = jnp.zeros((oc.STACK, tile), jnp.float32)
+
+    def step(p, carry):
+        # §Perf note: the switch branches take and return single (TILE,)
+        # ROWS, not the whole (STACK, TILE) buffer — an earlier version
+        # closed over the stack in every branch, which made XLA carry
+        # (and copy) the full stack through a 24-way conditional per
+        # instruction. Row-based dispatch plus exactly one
+        # dynamic_update_slice per instruction cut the per-launch cost
+        # ~2x (see EXPERIMENTS.md §Perf L1).
+        stack, sp = carry
+        op = ops[p]
+        ia = iargs[p]
+        fa = fargs[p]
+        a = _dget(stack, sp - 1)[0]  # top        (TILE,)
+        b = _dget(stack, sp - 2)[0]  # second     (TILE,)
+        var_row = jax.lax.dynamic_slice_in_dim(xT, ia, 1, axis=0)[0]
+        param = jax.lax.dynamic_slice_in_dim(theta, ia, 1)[0]
+
+        branches = [None] * oc.N_OPS
+        branches[oc.HALT] = lambda: a
+        branches[oc.CONST] = lambda: jnp.full((tile,), fa, jnp.float32)
+        branches[oc.VAR] = lambda: var_row
+        branches[oc.PARAM] = lambda: jnp.full((tile,), param, jnp.float32)
+        # binary convention: b pushed first, a on top → result = b ∘ a
+        branches[oc.ADD] = lambda: b + a
+        branches[oc.SUB] = lambda: b - a
+        branches[oc.MUL] = lambda: b * a
+        branches[oc.DIV] = lambda: b / a
+        branches[oc.POW] = lambda: jnp.power(b, a)
+        branches[oc.MIN] = lambda: jnp.minimum(b, a)
+        branches[oc.MAX] = lambda: jnp.maximum(b, a)
+        branches[oc.NEG] = lambda: -a
+        branches[oc.ABS] = lambda: jnp.abs(a)
+        branches[oc.SIN] = lambda: jnp.sin(a)
+        branches[oc.COS] = lambda: jnp.cos(a)
+        branches[oc.TAN] = lambda: jnp.tan(a)
+        branches[oc.EXP] = lambda: jnp.exp(a)
+        branches[oc.LOG] = lambda: jnp.log(a)
+        branches[oc.SQRT] = lambda: jnp.sqrt(a)
+        branches[oc.TANH] = lambda: jnp.tanh(a)
+        branches[oc.ATAN] = lambda: jnp.arctan(a)
+        branches[oc.FLOOR] = lambda: jnp.floor(a)
+        branches[oc.SQUARE] = lambda: a * a
+        branches[oc.RECIP] = lambda: 1.0 / a
+
+        result = jax.lax.switch(op, branches)
+        # Stack effect from the ABI's code ranges (spec/opcodes.txt is
+        # ordered: HALT=0, pushes 1..3, binaries 4..10, unaries 11..23 —
+        # pinned by test_opcode_abi on both languages). Push writes at
+        # sp, binary at sp-2, unary at sp-1; HALT rewrites the top row
+        # onto itself. Scalar arithmetic instead of table constants
+        # because pallas kernels may not capture array constants.
+        is_push = (op >= oc.CONST) & (op <= oc.PARAM)
+        is_bin = (op >= oc.ADD) & (op <= oc.MAX)
+        delta = jnp.where(is_push, 1, jnp.where(is_bin, -1, 0))
+        woff = jnp.where(is_push, 0, jnp.where(is_bin, -2, -1))
+        # write position clamps at 0 (HALT at sp=0 rewrites row 0 with
+        # itself — a no-op), matching dynamic_slice's clamped reads.
+        wpos = jnp.maximum(sp + woff, 0)
+        stack = _dput(stack, wpos, result[None, :])
+        return stack, sp + delta
+
+    bound = ops.shape[0] if n_instr is None else jnp.int32(n_instr)
+    stack, _sp = jax.lax.fori_loop(0, bound, step, (stack0, jnp.int32(0)))
+    # A valid program terminates with sp == 1, leaving f(x) in slot 0.
+    return stack[0]
+
+
+def vm_eval_ref(x, ops, iargs, fargs, theta):
+    """Pure-numpy oracle: evaluate the program at sample rows ``x`` (S, D).
+
+    Implemented with a python list as the stack — deliberately nothing in
+    common with the jnp path so the two cross-check each other.
+    """
+    x = np.asarray(x, np.float32)
+    stack = []
+    un = {
+        oc.NEG: np.negative, oc.ABS: np.abs, oc.SIN: np.sin, oc.COS: np.cos,
+        oc.TAN: np.tan, oc.EXP: np.exp, oc.LOG: np.log, oc.SQRT: np.sqrt,
+        oc.TANH: np.tanh, oc.ATAN: np.arctan, oc.FLOOR: np.floor,
+        oc.SQUARE: np.square, oc.RECIP: np.reciprocal,
+    }
+    bin_ = {
+        oc.ADD: np.add, oc.SUB: np.subtract, oc.MUL: np.multiply,
+        oc.DIV: np.divide, oc.POW: np.power, oc.MIN: np.minimum,
+        oc.MAX: np.maximum,
+    }
+    with np.errstate(all="ignore"):
+        for op, ia, fa in zip(ops, iargs, fargs):
+            op = int(op)
+            if op == oc.HALT:
+                continue
+            elif op == oc.CONST:
+                stack.append(np.full(x.shape[0], fa, np.float32))
+            elif op == oc.VAR:
+                stack.append(x[:, int(ia)].copy())
+            elif op == oc.PARAM:
+                stack.append(np.full(x.shape[0], theta[int(ia)], np.float32))
+            elif op in un:
+                stack.append(un[op](stack.pop()).astype(np.float32))
+            elif op in bin_:
+                b = stack.pop()
+                a = stack.pop()
+                stack.append(bin_[op](a, b).astype(np.float32))
+            else:
+                raise ValueError(f"bad opcode {op}")
+    assert len(stack) == 1, f"program left {len(stack)} values on the stack"
+    return stack[0]

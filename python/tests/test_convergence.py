@@ -1,0 +1,87 @@
+"""Statistical end-to-end checks at the python level: MC estimates from the
+kernels converge to analytic values with ~1/sqrt(S) error (paper Fig. 1
+semantics, small scale)."""
+
+import numpy as np
+
+from compile import opcodes as oc
+from compile.kernels.harmonic import make_harmonic
+from compile.kernels.vm_eval import make_vm_multi
+
+
+def analytic_harmonic(k, a, b, lo, hi):
+    """Closed form of a*cos(k.x)+b*sin(k.x) over the box [lo,hi]^D.
+
+    Using: Int cos(k.x) = Re[ prod_d (e^{i k_d hi_d} - e^{i k_d lo_d})
+    / (i k_d) ], and similarly Im for sin. k_d == 0 contributes
+    (hi_d - lo_d).
+    """
+    prod = complex(1.0, 0.0)
+    for kd, l, h in zip(k, lo, hi):
+        if abs(kd) < 1e-12:
+            prod *= (h - l)
+        else:
+            prod *= (np.exp(1j * kd * h) - np.exp(1j * kd * l)) / (1j * kd)
+    return a * prod.real + b * prod.imag
+
+
+def test_harmonic_converges_to_analytic():
+    """Fig-1 miniature: n in 1..16, D=4, S=65536 -> estimate within 6 sigma."""
+    n_fns, dims, samples, tile = 16, 4, 65536, 2048
+    fn = make_harmonic(samples, n_fns, dims, tile)
+    n = np.arange(1, n_fns + 1)
+    kmag = (n + 50) / (2 * np.pi)
+    k = np.repeat(kmag[:, None], dims, axis=1).astype(np.float32)
+    a = np.ones(n_fns, np.float32)
+    b = np.ones(n_fns, np.float32)
+    lo = np.zeros(dims, np.float32)
+    hi = np.ones(dims, np.float32)
+    out = np.asarray(fn(np.array([2024, 1], np.uint32),
+                        np.array([0, 0, 0], np.uint32), k, a, b, lo, hi))
+    mean = out[0] / samples
+    var = np.maximum(out[1] / samples - mean**2, 0)
+    sigma = np.sqrt(var / samples)
+    truth = np.array([
+        analytic_harmonic(k[i], 1.0, 1.0, lo, hi) for i in range(n_fns)
+    ])
+    err = np.abs(mean - truth)
+    assert (err < 6 * sigma + 1e-7).all(), (err / sigma)
+
+
+def test_vm_polynomial_exact_value():
+    """Integral of x0^2 over [0,1]^8 = 1/3 within 6 sigma."""
+    samples = 16384
+    fn = make_vm_multi(1, samples, 8, oc.MAX_PROG, 2048)
+    ops, ia, fa = oc.assemble([(oc.VAR, 0, 0), (oc.SQUARE, 0, 0)])
+    out = np.asarray(fn(
+        np.array([7, 8], np.uint32), np.array([0, 0], np.uint32),
+        np.array([0], np.uint32), np.array([2], np.int32),
+        ops[None], ia[None], fa[None],
+        np.zeros((1, oc.MAX_PARAM), np.float32),
+        np.zeros((1, 8), np.float32), np.ones((1, 8), np.float32)))
+    mean = out[0, 0] / samples
+    var = out[0, 1] / samples - mean**2
+    sigma = np.sqrt(var / samples)
+    assert abs(mean - 1 / 3) < 6 * sigma
+
+
+def test_error_shrinks_with_samples():
+    """Empirical MC std halves (x ~2) when S quadruples."""
+    dims = 4
+    k = np.full((1, dims), 8.0, np.float32)
+    a = np.ones(1, np.float32)
+    b = np.zeros(1, np.float32)
+    lo = np.zeros(dims, np.float32)
+    hi = np.ones(dims, np.float32)
+
+    def run(samples, trial):
+        fn = make_harmonic(samples, 1, dims, min(samples, 2048))
+        out = np.asarray(fn(np.array([5, 5], np.uint32),
+                            np.array([0, 0, trial], np.uint32),
+                            k, a, b, lo, hi))
+        return out[0, 0] / samples
+
+    small = np.array([run(2048, t) for t in range(12)])
+    large = np.array([run(8192, t) for t in range(12)])
+    ratio = small.std() / large.std()
+    assert 1.2 < ratio < 3.5, ratio

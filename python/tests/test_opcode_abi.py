@@ -1,0 +1,48 @@
+"""The python opcode table must match the golden spec/opcodes.txt exactly."""
+
+import os
+
+from compile import opcodes as oc
+
+SPEC = os.path.join(os.path.dirname(__file__), "..", "..", "spec",
+                    "opcodes.txt")
+
+
+def load_spec():
+    rows = {}
+    with open(SPEC) as f:
+        for line in f:
+            line = line.split("#")[0].strip()
+            if not line:
+                continue
+            code, name, kind = line.split()
+            rows[int(code)] = (name, kind)
+    return rows
+
+
+def test_table_matches_spec():
+    spec = load_spec()
+    assert len(spec) == oc.N_OPS
+    for code, (name, kind) in spec.items():
+        assert oc.NAMES[code] == name, f"code {code}"
+        assert oc.KINDS[code] == kind, f"code {code}"
+        assert getattr(oc, name) == code
+
+
+def test_codes_dense():
+    spec = load_spec()
+    assert sorted(spec) == list(range(len(spec)))
+
+
+def test_assemble_pads_with_halt():
+    ops, iargs, fargs = oc.assemble([(oc.CONST, 0, 2.5)])
+    assert ops.shape == (oc.MAX_PROG,)
+    assert ops[0] == oc.CONST and fargs[0] == 2.5
+    assert (ops[1:] == oc.HALT).all()
+
+
+def test_assemble_rejects_long_programs():
+    import pytest
+
+    with pytest.raises(ValueError):
+        oc.assemble([(oc.CONST, 0, 1.0)] * (oc.MAX_PROG + 1))

@@ -1,0 +1,76 @@
+"""Dynamic program length (`plens`) semantics — the §Perf L1 contract:
+running only the first `plen` instructions must be indistinguishable
+from running the full HALT-padded program, and null slots (plen=0)
+contribute exact zeros."""
+
+import numpy as np
+
+from compile import opcodes as oc
+from compile.kernels import ref
+from compile.kernels.vm_eval import make_vm_multi
+from compile.vm_core import vm_eval_tile
+
+
+def test_truncated_loop_equals_full_loop():
+    instrs = [
+        (oc.VAR, 0, 0), (oc.SIN, 0, 0), (oc.VAR, 1, 0), (oc.MUL, 0, 0),
+        (oc.CONST, 0, 0.5), (oc.ADD, 0, 0),
+    ]
+    ops, ia, fa = oc.assemble(instrs)
+    theta = np.zeros(oc.MAX_PARAM, np.float32)
+    x = np.random.default_rng(0).random((2, 64)).astype(np.float32)
+    full = np.asarray(vm_eval_tile(x, ops, ia, fa, theta))
+    cut = np.asarray(vm_eval_tile(x, ops, ia, fa, theta,
+                                  np.int32(len(instrs))))
+    np.testing.assert_array_equal(full, cut)
+
+
+def test_null_slots_are_exact_zero():
+    n_fns, samples, dims, tile = 4, 512, 4, 256
+    fn = make_vm_multi(n_fns, samples, dims, oc.MAX_PROG, tile)
+    ops, ia, fa = oc.assemble([(oc.CONST, 0, 3.0)])
+    opsF = np.zeros((n_fns, oc.MAX_PROG), np.int32)
+    iaF = np.zeros((n_fns, oc.MAX_PROG), np.int32)
+    faF = np.zeros((n_fns, oc.MAX_PROG), np.float32)
+    opsF[0], iaF[0], faF[0] = ops, ia, fa
+    plens = np.array([1, 0, 0, 0], np.int32)  # only slot 0 live
+    out = np.asarray(fn(
+        np.array([1, 2], np.uint32), np.array([0, 0], np.uint32),
+        np.arange(n_fns, dtype=np.uint32), plens, opsF, iaF, faF,
+        np.zeros((n_fns, oc.MAX_PARAM), np.float32),
+        np.zeros((n_fns, dims), np.float32),
+        np.ones((n_fns, dims), np.float32)))
+    assert out[0, 0] == 3.0 * samples
+    assert out[0, 1] == 9.0 * samples
+    np.testing.assert_array_equal(out[1:], 0.0)
+
+
+def test_plen_matches_reference_on_heterogeneous_batch():
+    """Mixed program lengths in one launch agree with the oracle."""
+    n_fns, samples, dims, tile = 3, 512, 4, 256
+    fn = make_vm_multi(n_fns, samples, dims, oc.MAX_PROG, tile)
+    progs = [
+        [(oc.VAR, 0, 0)],
+        [(oc.VAR, 0, 0), (oc.VAR, 1, 0), (oc.ADD, 0, 0), (oc.ABS, 0, 0)],
+        [(oc.CONST, 0, 2.0), (oc.VAR, 2, 0), (oc.MUL, 0, 0),
+         (oc.SIN, 0, 0), (oc.SQUARE, 0, 0)],
+    ]
+    opsF = np.zeros((n_fns, oc.MAX_PROG), np.int32)
+    iaF = np.zeros((n_fns, oc.MAX_PROG), np.int32)
+    faF = np.zeros((n_fns, oc.MAX_PROG), np.float32)
+    plens = np.zeros(n_fns, np.int32)
+    for i, p in enumerate(progs):
+        o, ia, fa = oc.assemble(p)
+        opsF[i], iaF[i], faF[i] = o, ia, fa
+        plens[i] = len(p)
+    seed = np.array([9, 9], np.uint32)
+    ctr = np.array([100, 2], np.uint32)
+    streams = np.array([5, 6, 7], np.uint32)
+    theta = np.zeros((n_fns, oc.MAX_PARAM), np.float32)
+    lo = np.zeros((n_fns, dims), np.float32)
+    hi = np.ones((n_fns, dims), np.float32)
+    got = np.asarray(
+        fn(seed, ctr, streams, plens, opsF, iaF, faF, theta, lo, hi))
+    want = ref.vm_multi_ref(samples, dims, seed, ctr, streams, opsF, iaF,
+                            faF, theta, lo, hi)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-3)

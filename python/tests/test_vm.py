@@ -1,0 +1,166 @@
+"""Bytecode VM: jnp tile evaluator vs the python-list reference machine.
+
+Includes a hypothesis strategy that generates random *valid* programs
+(stack-depth tracked), which is the same invariant the rust compiler
+guarantees — so passing here means any rust-compiled program evaluates
+identically on-device.
+"""
+
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile import opcodes as oc
+from compile.vm_core import vm_eval_ref, vm_eval_tile
+
+UNARY = [oc.NEG, oc.ABS, oc.SIN, oc.COS, oc.TAN, oc.EXP, oc.LOG, oc.SQRT,
+         oc.TANH, oc.ATAN, oc.FLOOR, oc.SQUARE, oc.RECIP]
+BINARY = [oc.ADD, oc.SUB, oc.MUL, oc.DIV, oc.POW, oc.MIN, oc.MAX]
+# Ops safe on arbitrary real inputs (no NaN/Inf surprises for comparison).
+SAFE_UNARY = [oc.NEG, oc.ABS, oc.SIN, oc.COS, oc.TANH, oc.ATAN, oc.FLOOR,
+              oc.SQUARE]
+SAFE_BINARY = [oc.ADD, oc.SUB, oc.MUL, oc.MIN, oc.MAX]
+
+
+def run_both(instrs, x, theta=None, prog_len=oc.MAX_PROG):
+    theta = theta if theta is not None else np.zeros(oc.MAX_PARAM,
+                                                     np.float32)
+    ops, iargs, fargs = oc.assemble(instrs, prog_len)
+    got = np.asarray(vm_eval_tile(
+        np.ascontiguousarray(x.T), ops, iargs, fargs, theta))
+    want = vm_eval_ref(x, ops, iargs, fargs, theta)
+    return got, want
+
+
+def test_const():
+    x = np.zeros((16, 4), np.float32)
+    got, want = run_both([(oc.CONST, 0, 3.25)], x)
+    np.testing.assert_array_equal(got, want)
+    assert (got == 3.25).all()
+
+
+def test_eq1_harmonic_program():
+    """The Fig-1 integrand as bytecode: cos(k.x) + sin(k.x), D=4."""
+    kn = np.float32((7 + 50) / (2 * np.pi))
+    instrs = []
+    # k.x = kn*(x0+x1+x2+x3)
+    instrs.append((oc.VAR, 0, 0))
+    for d in range(1, 4):
+        instrs.append((oc.VAR, d, 0))
+        instrs.append((oc.ADD, 0, 0))
+    instrs.append((oc.CONST, 0, kn))
+    instrs.append((oc.MUL, 0, 0))
+    instrs.append((oc.COS, 0, 0))       # cos(p)
+    # rebuild phase for sin — exercises deeper stacks too
+    instrs.append((oc.VAR, 0, 0))
+    for d in range(1, 4):
+        instrs.append((oc.VAR, d, 0))
+        instrs.append((oc.ADD, 0, 0))
+    instrs.append((oc.CONST, 0, kn))
+    instrs.append((oc.MUL, 0, 0))
+    instrs.append((oc.SIN, 0, 0))
+    instrs.append((oc.ADD, 0, 0))
+    x = np.random.default_rng(1).random((512, 4), np.float32)
+    got, want = run_both(instrs, x)
+    np.testing.assert_allclose(got, want, rtol=2e-6, atol=2e-6)
+    direct = np.cos(kn * x.sum(1)) + np.sin(kn * x.sum(1))
+    np.testing.assert_allclose(got, direct, rtol=1e-4, atol=1e-4)
+
+
+def test_eq2_abs_program():
+    """Eq. (2): b*|x0 + x1 - x2| with parameter from theta."""
+    instrs = [
+        (oc.PARAM, 3, 0),
+        (oc.VAR, 0, 0), (oc.VAR, 1, 0), (oc.ADD, 0, 0),
+        (oc.VAR, 2, 0), (oc.SUB, 0, 0), (oc.ABS, 0, 0),
+        (oc.MUL, 0, 0),
+    ]
+    theta = np.zeros(oc.MAX_PARAM, np.float32)
+    theta[3] = 2.5
+    x = np.random.default_rng(2).random((256, 3), np.float32) * 4 - 2
+    got, want = run_both(instrs, x, theta)
+    np.testing.assert_allclose(got, want, rtol=1e-6)
+    np.testing.assert_allclose(
+        got, 2.5 * np.abs(x[:, 0] + x[:, 1] - x[:, 2]), rtol=1e-5,
+        atol=1e-6)
+
+
+def test_all_unary_ops():
+    x = np.random.default_rng(3).random((128, 1), np.float32) + 0.5
+    for op in UNARY:
+        got, want = run_both([(oc.VAR, 0, 0), (op, 0, 0)], x)
+        np.testing.assert_allclose(got, want, rtol=2e-6, atol=1e-6,
+                                   err_msg=oc.NAMES[op])
+
+
+def test_all_binary_ops():
+    rng = np.random.default_rng(4)
+    x = (rng.random((128, 2), np.float32) + 0.5) * 2
+    for op in BINARY:
+        got, want = run_both(
+            [(oc.VAR, 0, 0), (oc.VAR, 1, 0), (op, 0, 0)], x)
+        np.testing.assert_allclose(got, want, rtol=2e-5, atol=1e-6,
+                                   err_msg=oc.NAMES[op])
+
+
+def test_halt_padding_is_noop():
+    x = np.random.default_rng(5).random((64, 2), np.float32)
+    got_a, _ = run_both([(oc.VAR, 0, 0)], x, prog_len=4)
+    got_b, _ = run_both([(oc.VAR, 0, 0)], x, prog_len=oc.MAX_PROG)
+    np.testing.assert_array_equal(got_a, got_b)
+
+
+def test_stack_to_limit():
+    """Push STACK values then fold them down — exercises full depth."""
+    instrs = [(oc.CONST, 0, float(i)) for i in range(oc.STACK)]
+    instrs += [(oc.ADD, 0, 0)] * (oc.STACK - 1)
+    x = np.zeros((8, 1), np.float32)
+    got, want = run_both(instrs, x)
+    np.testing.assert_array_equal(got, want)
+    assert (got == sum(range(oc.STACK))).all()
+
+
+@st.composite
+def valid_programs(draw):
+    """Random stack-valid programs over safe ops, depth-tracked."""
+    n_instr = draw(st.integers(1, 24))
+    instrs = []
+    depth = 0
+    for _ in range(n_instr):
+        choices = []
+        if depth < oc.STACK:
+            choices.append("push")
+        if depth >= 1:
+            choices.append("unary")
+        if depth >= 2:
+            choices.append("binary")
+        kind = draw(st.sampled_from(choices))
+        if kind == "push":
+            which = draw(st.sampled_from([oc.CONST, oc.VAR, oc.PARAM]))
+            if which == oc.CONST:
+                instrs.append((oc.CONST, 0,
+                               draw(st.floats(-4, 4, width=32))))
+            elif which == oc.VAR:
+                instrs.append((oc.VAR, draw(st.integers(0, 3)), 0))
+            else:
+                instrs.append((oc.PARAM, draw(st.integers(0, 7)), 0))
+            depth += 1
+        elif kind == "unary":
+            instrs.append((draw(st.sampled_from(SAFE_UNARY)), 0, 0))
+        else:
+            instrs.append((draw(st.sampled_from(SAFE_BINARY)), 0, 0))
+            depth -= 1
+    # fold everything to a single value
+    while depth > 1:
+        instrs.append((oc.ADD, 0, 0))
+        depth -= 1
+    return instrs
+
+
+@settings(max_examples=40, deadline=None)
+@given(valid_programs(), st.integers(0, 2**31 - 1))
+def test_random_programs_match_reference(instrs, seed):
+    x = np.random.default_rng(seed).random((64, 4), np.float32) * 2 - 1
+    theta = np.linspace(-1, 1, oc.MAX_PARAM).astype(np.float32)
+    got, want = run_both(instrs, x, theta)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)

@@ -1,0 +1,129 @@
+//! Bench: experiment A3 — device (PJRT artifact) path vs the pure-rust
+//! CPU bytecode interpreter on identical workloads and sample streams.
+//!
+//! Reports samples/second for both backends across integrand costs
+//! (cheap polynomial → transcendental-heavy), plus the harmonic
+//! fast path vs routing the same harmonics through the generic VM.
+//!
+//! Env knobs: ZMC_A3_SAMPLES.
+
+use std::sync::Arc;
+
+use zmc::integrator::harmonic::{self, HarmonicBatch};
+use zmc::integrator::multifunctions::{self, MultiConfig};
+use zmc::integrator::spec::IntegralJob;
+use zmc::integrator::direct;
+use zmc::runtime::device::DevicePool;
+use zmc::runtime::registry::Registry;
+use zmc::util::bench::{fmt_s, time, Bench};
+
+fn env(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() -> anyhow::Result<()> {
+    let samples = env("ZMC_A3_SAMPLES", 1 << 16);
+    let registry = Arc::new(Registry::load("artifacts")?);
+    let pool = DevicePool::new(&registry, 1)?;
+    let mut b = Bench::new("backend_compare");
+
+    let cases = [
+        ("cheap_poly", "x1*x2 + x3^2"),
+        ("abs_mix", "abs(x1+x2-x3)*x4"),
+        ("transcendental", "exp(-x1)*sin(6*x2)*cos(4*x3)+tanh(x4)"),
+    ];
+    for (name, src) in cases {
+        let job = IntegralJob::parse(src, &[(0.0, 1.0); 4])?;
+        let cfg = MultiConfig {
+            samples_per_fn: samples,
+            seed: 3,
+            exe: Some("vm_multi_f8_s4096".into()),
+            ..Default::default()
+        };
+        let td = time(1, 3, || {
+            multifunctions::integrate(
+                &pool,
+                std::slice::from_ref(&job),
+                &cfg,
+            )
+            .unwrap();
+        });
+        let tc = time(1, 3, || {
+            direct::integrate_one(&job, samples, 3, 0, 0);
+        });
+        b.row(
+            name,
+            &[
+                ("samples", samples.to_string()),
+                (
+                    "device_Msamp_s",
+                    format!("{:.2}", samples as f64 / td.mean_s / 1e6),
+                ),
+                (
+                    "cpu_Msamp_s",
+                    format!("{:.2}", samples as f64 / tc.mean_s / 1e6),
+                ),
+                (
+                    "device_over_cpu",
+                    format!("{:.2}x", tc.mean_s / td.mean_s),
+                ),
+                ("device_wall", fmt_s(td.mean_s)),
+            ],
+        );
+    }
+
+    // harmonic fast path vs the same harmonics through the VM
+    let n = 64u32;
+    let batch = HarmonicBatch::fig1(n);
+    let hcfg = MultiConfig {
+        samples_per_fn: samples,
+        seed: 3,
+        exe: Some("harmonic_s65536_n128".into()),
+        ..Default::default()
+    };
+    let th = time(1, 3, || {
+        harmonic::integrate(&pool, &batch, &hcfg).unwrap();
+    });
+    let vm_jobs: Vec<IntegralJob> = (1..=n)
+        .map(|i| {
+            let k = (i as f64 + 50.0) / (2.0 * std::f64::consts::PI);
+            IntegralJob::with_params(
+                "cos(p0*(x1+x2+x3+x4)) + sin(p0*(x1+x2+x3+x4))",
+                &[(0.0, 1.0); 4],
+                &[k],
+            )
+            .unwrap()
+        })
+        .collect();
+    let vcfg = MultiConfig {
+        samples_per_fn: samples,
+        seed: 3,
+        exe: Some("vm_multi_f32_s16384".into()),
+        ..Default::default()
+    };
+    let tv = time(1, 2, || {
+        multifunctions::integrate(&pool, &vm_jobs, &vcfg).unwrap();
+    });
+    // function-samples per second (n functions × S samples per run)
+    let fsamp = (n as usize * samples) as f64;
+    b.row(
+        "harmonic_fast_path",
+        &[
+            ("n_fns", n.to_string()),
+            (
+                "mxu_kernel_Mfs_s",
+                format!("{:.1}", fsamp / th.mean_s / 1e6),
+            ),
+            (
+                "generic_vm_Mfs_s",
+                format!("{:.1}", fsamp / tv.mean_s / 1e6),
+            ),
+            (
+                "specialization_speedup",
+                format!("{:.1}x", tv.mean_s / th.mean_s),
+            ),
+        ],
+    );
+    b.finish();
+    Ok(())
+}

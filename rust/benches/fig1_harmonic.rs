@@ -1,0 +1,97 @@
+//! Bench: Fig. 1 — the paper's figure, regenerated.
+//!
+//! Reports, per series length n: mean band coverage vs the analytic
+//! curve, per-evaluation wall time (claim C3: ~1 min per evaluation of
+//! the full 100-series on one V100 at 1e6 samples), and launch stats.
+//!
+//! Env knobs: ZMC_FIG1_N, ZMC_FIG1_SAMPLES, ZMC_FIG1_TRIALS.
+
+use std::sync::Arc;
+
+use zmc::integrator::harmonic::{self, HarmonicBatch};
+use zmc::integrator::multifunctions::MultiConfig;
+use zmc::runtime::device::DevicePool;
+use zmc::runtime::registry::Registry;
+use zmc::stats::Welford;
+use zmc::util::bench::{fmt_s, time, Bench};
+
+fn env(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() -> anyhow::Result<()> {
+    let n = env("ZMC_FIG1_N", 100) as u32;
+    let samples = env("ZMC_FIG1_SAMPLES", 1 << 18);
+    let trials = env("ZMC_FIG1_TRIALS", 10) as u32;
+
+    let registry = Arc::new(Registry::load("artifacts")?);
+    let pool = DevicePool::new(&registry, 1)?;
+    let batch = HarmonicBatch::fig1(n);
+    let cfg = MultiConfig {
+        samples_per_fn: samples,
+        seed: 2021,
+        ..Default::default()
+    };
+
+    let mut b = Bench::new("fig1_harmonic");
+
+    // one warm evaluation for compile, then timed per-evaluation cost
+    let t = time(1, 3, || {
+        harmonic::integrate(&pool, &batch, &cfg).unwrap();
+    });
+    b.row(
+        "per_evaluation",
+        &[
+            ("n_fns", n.to_string()),
+            ("samples", samples.to_string()),
+            ("mean_s", format!("{:.4}", t.mean_s)),
+            ("min_s", format!("{:.4}", t.min_s)),
+            ("human", fmt_s(t.mean_s)),
+        ],
+    );
+
+    // the statistical figure itself
+    let per_trial = harmonic::integrate_trials(&pool, &batch, &cfg, trials)?;
+    let mut covered = 0usize;
+    let mut mean_df = 0.0f64;
+    for i in 0..n as usize {
+        let mut w = Welford::new();
+        for tr in &per_trial {
+            w.push(tr[i].value);
+        }
+        let truth = batch.truth(i);
+        if (w.mean() - truth).abs() <= 2.0 * w.std() {
+            covered += 1;
+        }
+        mean_df += w.std();
+    }
+    b.row(
+        "band_coverage",
+        &[
+            ("covered", covered.to_string()),
+            ("total", n.to_string()),
+            ("trials", trials.to_string()),
+            ("mean_dF", format!("{:.3e}", mean_df / n as f64)),
+        ],
+    );
+
+    // error-vs-samples shape: MC must contract ~1/sqrt(S)
+    for s in [samples / 4, samples, samples * 4] {
+        let c = MultiConfig { samples_per_fn: s, ..cfg.clone() };
+        let ests = harmonic::integrate(&pool, &batch, &c)?;
+        let rms: f64 = ((0..n as usize)
+            .map(|i| (ests[i].value - batch.truth(i)).powi(2))
+            .sum::<f64>()
+            / n as f64)
+            .sqrt();
+        b.row(
+            "error_vs_samples",
+            &[
+                ("samples", s.to_string()),
+                ("rms_err", format!("{rms:.3e}")),
+            ],
+        );
+    }
+    b.finish();
+    Ok(())
+}

@@ -1,0 +1,107 @@
+//! Bench: experiment A2 — the parameter-scan class
+//! (ZMCintegral_functional): sweeping one integrand over a large
+//! parameter grid as packed launches vs naive per-point evaluation.
+//!
+//! Workload: I(p0) = ∫ cos(p0·(x1+x2+x3)) over [0,1]³ on a grid of p0 —
+//! the "large parameter space" regime of the v5 paper, with closed-form
+//! truth for validation.
+//!
+//! Env knobs: ZMC_A2_POINTS, ZMC_A2_SAMPLES.
+
+use std::sync::Arc;
+
+use zmc::analytic;
+use zmc::integrator::functional::{self, linspace};
+use zmc::integrator::multifunctions::MultiConfig;
+use zmc::integrator::spec::IntegralJob;
+use zmc::runtime::device::DevicePool;
+use zmc::runtime::registry::Registry;
+use zmc::util::bench::{fmt_s, time, Bench};
+
+fn env(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() -> anyhow::Result<()> {
+    let n_points = env("ZMC_A2_POINTS", 256);
+    let samples = env("ZMC_A2_SAMPLES", 1 << 14);
+
+    let registry = Arc::new(Registry::load("artifacts")?);
+    let pool = DevicePool::new(&registry, 1)?;
+    let job = IntegralJob::with_params(
+        "cos(p0*(x1+x2+x3))",
+        &[(0.0, 1.0); 3],
+        &[1.0],
+    )?;
+    let thetas: Vec<Vec<f64>> = linspace(0.5, 12.0, n_points)
+        .into_iter()
+        .map(|v| vec![v])
+        .collect();
+    let cfg = MultiConfig {
+        samples_per_fn: samples,
+        seed: 13,
+        exe: Some("vm_multi_f32_s16384".into()),
+        ..Default::default()
+    };
+
+    let mut b = Bench::new("functional_scan");
+    let t = time(1, 3, || {
+        functional::scan(&pool, &job, &thetas, &cfg).unwrap();
+    });
+    b.row(
+        "packed_scan",
+        &[
+            ("points", n_points.to_string()),
+            ("samples", samples.to_string()),
+            ("wall", fmt_s(t.mean_s)),
+            (
+                "points_per_min",
+                format!("{:.0}", n_points as f64 / t.mean_s * 60.0),
+            ),
+        ],
+    );
+
+    // correctness: every point within 6σ of the closed form
+    let ests = functional::scan(&pool, &job, &thetas, &cfg)?;
+    let mut worst: f64 = 0.0;
+    for (th, e) in thetas.iter().zip(&ests) {
+        let k = th[0];
+        let truth = analytic::harmonic_box(
+            &[k, k, k],
+            1.0,
+            0.0,
+            &[(0.0, 1.0), (0.0, 1.0), (0.0, 1.0)],
+        );
+        worst = worst
+            .max((e.value - truth).abs() / e.std_err.max(1e-12));
+    }
+    b.row("validation", &[("worst_z", format!("{worst:.2}"))]);
+
+    // naive per-point path on a subset (the pre-v5 pattern)
+    let sub = &thetas[..16.min(n_points)];
+    let t1 = time(1, 2, || {
+        for th in sub {
+            let j = job.bind(th).unwrap();
+            let c = MultiConfig {
+                exe: Some("vm_multi_f8_s4096".into()),
+                ..cfg.clone()
+            };
+            functional::scan(&pool, &j, &[th.clone()], &c).unwrap();
+        }
+    });
+    let per_pt_naive = t1.mean_s / sub.len() as f64;
+    let per_pt_packed = t.mean_s / n_points as f64;
+    b.row(
+        "per_point_naive",
+        &[
+            ("points", sub.len().to_string()),
+            ("per_point", fmt_s(per_pt_naive)),
+            (
+                "packing_speedup",
+                format!("{:.1}x", per_pt_naive / per_pt_packed),
+            ),
+        ],
+    );
+    b.finish();
+    Ok(())
+}

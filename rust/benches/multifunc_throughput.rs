@@ -1,0 +1,112 @@
+//! Bench: claim C1 — "for integrands less than 5 dimensions, it usually
+//! takes less than 10 minutes to finish the evaluation of 10^3
+//! integrations on one Tesla V100".
+//!
+//! Times a mixed batch of N distinct VM-bytecode integrands (dims 1–4),
+//! reports functions/minute, and extrapolates to the paper's 10³ — plus
+//! the batching ablation: the same workload issued one-function-per-
+//! launch (what v4 effectively did) vs packed multifunction launches.
+//!
+//! Env knobs: ZMC_C1_FUNCS, ZMC_C1_SAMPLES.
+
+use std::sync::Arc;
+
+use zmc::integrator::multifunctions::{self, MultiConfig};
+use zmc::integrator::spec::IntegralJob;
+use zmc::runtime::device::DevicePool;
+use zmc::runtime::registry::Registry;
+use zmc::util::bench::{fmt_s, time, Bench};
+
+fn env(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+/// N distinct low-dimensional integrands (the C1 workload shape).
+fn workload(n: usize) -> Vec<IntegralJob> {
+    let forms: [(&str, usize); 5] = [
+        ("p0*x1^2 + sin(p1*x1)", 1),
+        ("p0*abs(x1+x2-1)", 2),
+        ("exp(-p0*(x1*x1+x2*x2))", 2),
+        ("cos(p0*(x1+x2+x3))", 3),
+        ("p0*x1*x2*x3*x4 + tanh(p1*x2)", 4),
+    ];
+    (0..n)
+        .map(|i| {
+            let (src, dims) = forms[i % forms.len()];
+            let bounds = vec![(0.0, 1.0); dims];
+            let theta =
+                vec![1.0 + (i as f64) * 0.01, 0.5 + (i % 7) as f64 * 0.1];
+            IntegralJob::with_params(src, &bounds, &theta).unwrap()
+        })
+        .collect()
+}
+
+fn main() -> anyhow::Result<()> {
+    let n_funcs = env("ZMC_C1_FUNCS", 128);
+    let samples = env("ZMC_C1_SAMPLES", 1 << 14);
+
+    let registry = Arc::new(Registry::load("artifacts")?);
+    let pool = DevicePool::new(&registry, 1)?;
+    let jobs = workload(n_funcs);
+    let mut b = Bench::new("multifunc_throughput");
+
+    // packed multifunction path (v5.1); executable auto-picked — the
+    // dims<=4 workload rides the d4 artifact (§Perf L1)
+    let cfg = MultiConfig {
+        samples_per_fn: samples,
+        seed: 7,
+        ..Default::default()
+    };
+    let t = time(1, 3, || {
+        multifunctions::integrate(&pool, &jobs, &cfg).unwrap();
+    });
+    let fns_per_min = n_funcs as f64 / t.mean_s * 60.0;
+    b.row(
+        "packed_v5.1",
+        &[
+            ("funcs", n_funcs.to_string()),
+            ("samples", samples.to_string()),
+            ("wall", fmt_s(t.mean_s)),
+            ("fns_per_min", format!("{fns_per_min:.0}")),
+            (
+                "extrap_1000fns",
+                fmt_s(1000.0 / n_funcs as f64 * t.mean_s),
+            ),
+        ],
+    );
+
+    // per-function launches (v4-style ablation) on a subset
+    let sub = &jobs[..n_funcs.min(16)];
+    let cfg1 = MultiConfig {
+        samples_per_fn: samples,
+        seed: 7,
+        exe: Some("vm_multi_f8_s4096".into()),
+        ..Default::default()
+    };
+    let t1 = time(1, 2, || {
+        for j in sub {
+            multifunctions::integrate(
+                &pool,
+                std::slice::from_ref(j),
+                &cfg1,
+            )
+            .unwrap();
+        }
+    });
+    let per_fn_1 = t1.mean_s / sub.len() as f64;
+    let per_fn_packed = t.mean_s / n_funcs as f64;
+    b.row(
+        "one_per_launch_v4",
+        &[
+            ("funcs", sub.len().to_string()),
+            ("wall", fmt_s(t1.mean_s)),
+            ("per_fn", fmt_s(per_fn_1)),
+            (
+                "packing_speedup",
+                format!("{:.1}x", per_fn_1 / per_fn_packed),
+            ),
+        ],
+    );
+    b.finish();
+    Ok(())
+}

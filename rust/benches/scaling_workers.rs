@@ -1,0 +1,136 @@
+//! Bench: claim C2 — "the performance scales linearly with the
+//! increasing of the GPUs".
+//!
+//! Two measurements:
+//! 1. *Real threads*: the same chunk workload on 1..4 worker threads
+//!    (on a 1-core testbed this shows coordination overhead, not
+//!    speedup — reported for honesty).
+//! 2. *Virtual devices*: measured per-chunk durations + measured
+//!    dispatch overhead replayed through the discrete-event cluster
+//!    simulation for 1,2,4,8,16 devices — the paper's plotted quantity
+//!    with the real scheduler policy. See DESIGN.md "Substitutions".
+//!
+//! Env knobs: ZMC_C2_FUNCS, ZMC_C2_SAMPLES.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use zmc::cluster;
+use zmc::integrator::multifunctions::{self, MultiConfig};
+use zmc::integrator::spec::IntegralJob;
+use zmc::runtime::device::{DevicePool, DeviceRuntime};
+use zmc::runtime::launch::{vm_multi_inputs, RngCtr, VmFn};
+use zmc::runtime::registry::Registry;
+use zmc::util::bench::{fmt_s, Bench};
+
+fn env(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() -> anyhow::Result<()> {
+    // 256 functions x 4 chunks = 32 launches: enough task granularity
+    // for the device-scaling sweep to show its linear regime.
+    let n_funcs = env("ZMC_C2_FUNCS", 256);
+    let samples = env("ZMC_C2_SAMPLES", 1 << 16);
+
+    let registry = Arc::new(Registry::load("artifacts")?);
+    let jobs: Vec<IntegralJob> = (0..n_funcs)
+        .map(|i| {
+            IntegralJob::with_params(
+                "cos(p0*(x1+x2+x3+x4))",
+                &[(0.0, 1.0); 4],
+                &[6.0 + i as f64 * 0.05],
+            )
+            .unwrap()
+        })
+        .collect();
+    let mut b = Bench::new("scaling_workers");
+
+    // --- 1. real threads -------------------------------------------------
+    let mut wall1 = 0.0;
+    for workers in [1usize, 2, 4] {
+        let pool = DevicePool::new(&registry, workers)?;
+        let cfg = MultiConfig {
+            samples_per_fn: samples,
+            seed: 5,
+            exe: Some("vm_multi_f32_s16384".into()),
+            ..Default::default()
+        };
+        // warm (compiles per worker), then measure
+        multifunctions::integrate(&pool, &jobs, &cfg)?;
+        let t0 = Instant::now();
+        multifunctions::integrate(&pool, &jobs, &cfg)?;
+        let dt = t0.elapsed().as_secs_f64();
+        if workers == 1 {
+            wall1 = dt;
+        }
+        b.row(
+            "real_threads",
+            &[
+                ("workers", workers.to_string()),
+                ("wall", fmt_s(dt)),
+                ("speedup_vs_1", format!("{:.2}x", wall1 / dt)),
+            ],
+        );
+    }
+
+    // --- 2. virtual devices ----------------------------------------------
+    // measure true per-chunk device durations + dispatch overhead
+    let dev = DeviceRuntime::new(Arc::clone(&registry))?;
+    let exe = registry.get("vm_multi_f32_s16384")?;
+    let n_chunks = samples.div_ceil(exe.samples);
+    let fns: Vec<VmFn> = jobs
+        .iter()
+        .enumerate()
+        .map(|(i, j)| VmFn {
+            program: j.program.clone(),
+            theta: j.theta.clone(),
+            bounds: j.bounds.clone(),
+            stream: i as u32,
+        })
+        .collect();
+    let mut durations = Vec::new();
+    let mut dispatch = Vec::new();
+    for block in fns.chunks(exe.n_fns) {
+        for c in 0..n_chunks {
+            let rng = RngCtr {
+                seed: [5, 0],
+                base: (c * exe.samples) as u32,
+                trial: 0,
+            };
+            let t0 = Instant::now();
+            let inputs = vm_multi_inputs(exe, rng, block)?;
+            dispatch.push(t0.elapsed().as_secs_f64());
+            let out = dev.execute(&exe.name, &inputs)?;
+            durations.push(out.device_time.as_secs_f64());
+        }
+    }
+    let mean_dispatch =
+        dispatch.iter().sum::<f64>() / dispatch.len() as f64;
+    b.row(
+        "measured_chunks",
+        &[
+            ("launches", durations.len().to_string()),
+            (
+                "mean_device",
+                fmt_s(durations.iter().sum::<f64>()
+                    / durations.len() as f64),
+            ),
+            ("mean_dispatch", fmt_s(mean_dispatch)),
+        ],
+    );
+    for n in [1usize, 2, 4, 8, 16] {
+        let r = cluster::simulate(&durations, n, mean_dispatch);
+        b.row(
+            "virtual_devices",
+            &[
+                ("devices", n.to_string()),
+                ("makespan", fmt_s(r.makespan)),
+                ("speedup", format!("{:.2}x", r.speedup)),
+                ("utilization", format!("{:.0}%", r.utilization * 100.0)),
+            ],
+        );
+    }
+    b.finish();
+    Ok(())
+}

@@ -1,0 +1,276 @@
+//! Closed-form integrals for every benchmark family — the ground truth
+//! each experiment checks its MC estimates against.
+
+use std::f64::consts::PI;
+
+/// ∫ a·cos(k·x) + b·sin(k·x) dx over the box `bounds` (Fig. 1 family).
+///
+/// With z = Π_d (e^{i k_d h_d} − e^{i k_d l_d}) / (i k_d)
+/// (factor h_d − l_d when k_d = 0):  I = a·Re z + b·Im z.
+pub fn harmonic_box(k: &[f64], a: f64, b: f64, bounds: &[(f64, f64)]) -> f64 {
+    assert_eq!(k.len(), bounds.len());
+    // complex product as (re, im)
+    let (mut re, mut im) = (1.0f64, 0.0f64);
+    for (kd, (lo, hi)) in k.iter().zip(bounds) {
+        let (fr, fi) = if kd.abs() < 1e-300 {
+            (hi - lo, 0.0)
+        } else {
+            // (e^{i k h} - e^{i k l}) / (i k)
+            let (sh, ch) = (kd * hi).sin_cos();
+            let (sl, cl) = (kd * lo).sin_cos();
+            // numerator: (ch - cl) + i (sh - sl); divide by i k:
+            // 1/(ik) = -i/k  →  (x + iy)·(-i/k) = (y - i x)/k
+            ((sh - sl) / kd, -(ch - cl) / kd)
+        };
+        let nre = re * fr - im * fi;
+        im = re * fi + im * fr;
+        re = nre;
+    }
+    a * re + b * im
+}
+
+/// Fig. 1 integrand n: k = ((n+50)/2π)·𝟙₄ over [0,1]⁴, a=b=1.
+pub fn fig1_truth(n: u32) -> f64 {
+    let kn = (n as f64 + 50.0) / (2.0 * PI);
+    harmonic_box(
+        &[kn; 4],
+        1.0,
+        1.0,
+        &[(0.0, 1.0), (0.0, 1.0), (0.0, 1.0), (0.0, 1.0)],
+    )
+}
+
+/// ∫ |x₁ + x₂| over [0,1]² (= 1, positive everywhere) and the general
+/// Eq. (2) first family a·|x1+x2| over [0,1]²: a · 1.
+pub fn eq2_abs2(a: f64) -> f64 {
+    a * 1.0
+}
+
+/// ∫ |x₁ + x₂ − x₃| dx over [0,1]³ (Eq. 2 second family): b · 7/12.
+///
+/// With s = x₁+x₂−x₃: E|s| = E s + 2·E max(x₃−x₁−x₂, 0)
+/// = 1/2 + 2·∫₀¹ z³/6 dz = 1/2 + 1/12 = 7/12 (cross-checked against
+/// midpoint quadrature in the tests below).
+pub fn eq2_abs3(b: f64) -> f64 {
+    b * 7.0 / 12.0
+}
+
+/// ∫ x₁^p over [0,1]^D = 1/(p+1) (any D; other dims integrate to 1).
+pub fn monomial(p: f64) -> f64 {
+    1.0 / (p + 1.0)
+}
+
+/// Genz "oscillatory": f(x) = cos(2π u + Σ c_d x_d) over [0,1]^D.
+pub fn genz_oscillatory(u: f64, c: &[f64]) -> f64 {
+    // ∫ = Re[ e^{i 2π u} Π (e^{i c_d} − 1)/(i c_d) ]
+    let (mut re, mut im) = ((2.0 * PI * u).cos(), (2.0 * PI * u).sin());
+    for &cd in c {
+        let (fr, fi) = if cd.abs() < 1e-300 {
+            (1.0, 0.0)
+        } else {
+            (cd.sin() / cd, -(cd.cos() - 1.0) / cd)
+        };
+        let nre = re * fr - im * fi;
+        im = re * fi + im * fr;
+        re = nre;
+    }
+    re
+}
+
+/// Genz "product peak": f(x) = Π 1/(c_d⁻² + (x_d − w_d)²) over [0,1]^D.
+pub fn genz_product_peak(c: &[f64], w: &[f64]) -> f64 {
+    c.iter()
+        .zip(w)
+        .map(|(&cd, &wd)| cd * ((cd * (1.0 - wd)).atan() + (cd * wd).atan()))
+        .product()
+}
+
+/// Genz "Gaussian": f(x) = exp(−Σ c_d²(x_d − w_d)²) over [0,1]^D.
+pub fn genz_gaussian(c: &[f64], w: &[f64]) -> f64 {
+    c.iter()
+        .zip(w)
+        .map(|(&cd, &wd)| {
+            (PI.sqrt() / (2.0 * cd))
+                * (erf(cd * (1.0 - wd)) + erf(cd * wd))
+        })
+        .product()
+}
+
+/// erf via Abramowitz–Stegun 7.1.26 (|err| ≤ 1.5e-7 — fine for 6σ gates).
+pub fn erf(x: f64) -> f64 {
+    let sign = if x < 0.0 { -1.0 } else { 1.0 };
+    let x = x.abs();
+    let t = 1.0 / (1.0 + 0.3275911 * x);
+    let y = 1.0
+        - (((((1.061405429 * t - 1.453152027) * t) + 1.421413741) * t
+            - 0.284496736)
+            * t
+            + 0.254829592)
+            * t
+            * (-x * x).exp();
+    sign * y
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{check, Gen};
+
+    /// Brute-force midpoint quadrature for cross-checks (low-D only).
+    fn quad<F: Fn(&[f64]) -> f64>(f: F, dims: usize, n: usize) -> f64 {
+        let mut total = 0.0;
+        let mut idx = vec![0usize; dims];
+        let cells = n.pow(dims as u32);
+        for c in 0..cells {
+            let mut rem = c;
+            for d in 0..dims {
+                idx[d] = rem % n;
+                rem /= n;
+            }
+            let x: Vec<f64> =
+                idx.iter().map(|&i| (i as f64 + 0.5) / n as f64).collect();
+            total += f(&x);
+        }
+        total / cells as f64
+    }
+
+    #[test]
+    fn harmonic_1d_exact() {
+        // ∫₀¹ cos(2x) = sin(2)/2 ; ∫₀¹ sin(2x) = (1−cos 2)/2
+        let c = harmonic_box(&[2.0], 1.0, 0.0, &[(0.0, 1.0)]);
+        assert!((c - (2.0f64).sin() / 2.0).abs() < 1e-14);
+        let s = harmonic_box(&[2.0], 0.0, 1.0, &[(0.0, 1.0)]);
+        assert!((s - (1.0 - (2.0f64).cos()) / 2.0).abs() < 1e-14);
+    }
+
+    #[test]
+    fn harmonic_k_zero_gives_volume() {
+        let v = harmonic_box(&[0.0, 0.0], 1.0, 0.0, &[(0.0, 2.0), (1.0, 4.0)]);
+        assert!((v - 6.0).abs() < 1e-14);
+    }
+
+    #[test]
+    fn harmonic_matches_quadrature() {
+        let k = [1.3, -0.7];
+        let truth =
+            harmonic_box(&k, 0.8, -0.4, &[(0.0, 1.0), (0.0, 1.0)]);
+        let q = quad(
+            |x| {
+                let p = k[0] * x[0] + k[1] * x[1];
+                0.8 * p.cos() - 0.4 * p.sin()
+            },
+            2,
+            400,
+        );
+        assert!((truth - q).abs() < 1e-5, "{truth} vs {q}");
+    }
+
+    #[test]
+    fn harmonic_random_boxes_match_quadrature() {
+        check(11, 10, |g: &mut Gen| {
+            let k = [g.range_f64(-4.0, 4.0), g.range_f64(-4.0, 4.0)];
+            let lo0 = g.range_f64(-1.0, 0.5);
+            let lo1 = g.range_f64(-1.0, 0.5);
+            let bounds = [
+                (lo0, lo0 + g.range_f64(0.1, 1.5)),
+                (lo1, lo1 + g.range_f64(0.1, 1.5)),
+            ];
+            let (a, b) = (g.range_f64(-2.0, 2.0), g.range_f64(-2.0, 2.0));
+            let truth = harmonic_box(&k, a, b, &bounds);
+            let vol: f64 =
+                bounds.iter().map(|(l, h)| h - l).product();
+            let q = vol
+                * quad(
+                    |u| {
+                        let x0 = bounds[0].0
+                            + (bounds[0].1 - bounds[0].0) * u[0];
+                        let x1 = bounds[1].0
+                            + (bounds[1].1 - bounds[1].0) * u[1];
+                        let p = k[0] * x0 + k[1] * x1;
+                        a * p.cos() + b * p.sin()
+                    },
+                    2,
+                    300,
+                );
+            assert!((truth - q).abs() < 1e-3, "{truth} vs {q}");
+        });
+    }
+
+    #[test]
+    fn fig1_values_small() {
+        // n→∞ ⇒ oscillation ⇒ integral → 0; all |I| ≤ vol = 1
+        for n in [1, 50, 100] {
+            let v = fig1_truth(n);
+            assert!(v.abs() < 1.0, "n={n}: {v}");
+        }
+        // sanity vs quadrature at n=1 (k≈8.117)
+        let kn = 51.0 / (2.0 * PI);
+        let q = quad(
+            |x| {
+                let p = kn * (x[0] + x[1] + x[2] + x[3]);
+                p.cos() + p.sin()
+            },
+            4,
+            40,
+        );
+        assert!((fig1_truth(1) - q).abs() < 2e-3);
+    }
+
+    #[test]
+    fn eq2_matches_quadrature() {
+        let q2 = quad(|x| (x[0] + x[1]).abs(), 2, 600);
+        assert!((eq2_abs2(1.0) - q2).abs() < 1e-4);
+        let q3 = quad(|x| (x[0] + x[1] - x[2]).abs(), 3, 120);
+        assert!((eq2_abs3(1.0) - q3).abs() < 1e-4, "{q3}");
+    }
+
+    #[test]
+    fn genz_match_quadrature() {
+        let c = [1.5, 0.8];
+        let w = [0.3, 0.6];
+        let qo = quad(
+            |x| (2.0 * PI * 0.25 + c[0] * x[0] + c[1] * x[1]).cos(),
+            2,
+            400,
+        );
+        assert!((genz_oscillatory(0.25, &c) - qo).abs() < 1e-5);
+        let qp = quad(
+            |x| {
+                (1.0 / (c[0].powi(-2) + (x[0] - w[0]).powi(2)))
+                    * (1.0 / (c[1].powi(-2) + (x[1] - w[1]).powi(2)))
+            },
+            2,
+            600,
+        );
+        assert!(
+            (genz_product_peak(&c, &w) - qp).abs() / qp < 1e-4,
+            "{} vs {qp}",
+            genz_product_peak(&c, &w)
+        );
+        let qg = quad(
+            |x| {
+                (-(c[0] * c[0] * (x[0] - w[0]).powi(2)
+                    + c[1] * c[1] * (x[1] - w[1]).powi(2)))
+                .exp()
+            },
+            2,
+            400,
+        );
+        assert!((genz_gaussian(&c, &w) - qg).abs() < 1e-4);
+    }
+
+    #[test]
+    fn erf_reference_values() {
+        // A&S 7.1.26 carries |err| <= 1.5e-7; gate at 2e-7.
+        assert!((erf(0.0)).abs() < 2e-7);
+        assert!((erf(1.0) - 0.8427007929).abs() < 2e-7);
+        assert!((erf(-1.0) + 0.8427007929).abs() < 2e-7);
+        assert!((erf(3.0) - 0.9999779095).abs() < 2e-7);
+    }
+
+    #[test]
+    fn monomial_truth() {
+        assert_eq!(monomial(2.0), 1.0 / 3.0);
+        assert_eq!(monomial(0.0), 1.0);
+    }
+}

@@ -1,0 +1,107 @@
+//! Deterministic failure injection for the scheduler.
+//!
+//! Ray tolerates worker loss by rescheduling; we reproduce (and test)
+//! that behaviour with two deterministic fault shapes instead of real
+//! process kills:
+//!
+//! * **transient** — globally, every k-th task *attempt* returns an
+//!   error (models a failed kernel launch / OOM / flaky node);
+//! * **worker death** — worker w stops accepting tasks after its m-th
+//!   attempt (models losing a node mid-job).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Shared, thread-safe fault plan consulted by every worker.
+#[derive(Debug, Default)]
+pub struct FaultPlan {
+    /// Every k-th attempt (1-based, globally counted) fails.
+    pub fail_every: Option<u64>,
+    /// (worker index, attempts before it dies).
+    pub kill_worker: Option<(usize, u64)>,
+    attempts: AtomicU64,
+}
+
+/// What the plan says about one attempt.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Verdict {
+    Proceed,
+    /// This attempt must return an error (transient).
+    FailAttempt,
+    /// This worker is dead: it must stop pulling tasks.
+    WorkerDead,
+}
+
+impl FaultPlan {
+    pub fn none() -> Self {
+        Self::default()
+    }
+
+    pub fn transient(k: u64) -> Self {
+        FaultPlan { fail_every: Some(k), ..Default::default() }
+    }
+
+    pub fn kill(worker: usize, after: u64) -> Self {
+        FaultPlan { kill_worker: Some((worker, after)), ..Default::default() }
+    }
+
+    /// Called by a worker before each attempt.
+    pub fn judge(&self, worker: usize, worker_attempts: u64) -> Verdict {
+        if let Some((w, after)) = self.kill_worker {
+            if w == worker && worker_attempts >= after {
+                return Verdict::WorkerDead;
+            }
+        }
+        let n = self.attempts.fetch_add(1, Ordering::Relaxed) + 1;
+        if let Some(k) = self.fail_every {
+            if n % k == 0 {
+                return Verdict::FailAttempt;
+            }
+        }
+        Verdict::Proceed
+    }
+
+    pub fn total_attempts(&self) -> u64 {
+        self.attempts.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transient_every_third() {
+        let p = FaultPlan::transient(3);
+        let vs: Vec<Verdict> = (0..6).map(|_| p.judge(0, 0)).collect();
+        assert_eq!(
+            vs,
+            vec![
+                Verdict::Proceed,
+                Verdict::Proceed,
+                Verdict::FailAttempt,
+                Verdict::Proceed,
+                Verdict::Proceed,
+                Verdict::FailAttempt,
+            ]
+        );
+    }
+
+    #[test]
+    fn worker_death() {
+        let p = FaultPlan::kill(1, 2);
+        assert_eq!(p.judge(0, 100), Verdict::Proceed);
+        assert_eq!(p.judge(1, 0), Verdict::Proceed);
+        assert_eq!(p.judge(1, 1), Verdict::Proceed);
+        assert_eq!(p.judge(1, 2), Verdict::WorkerDead);
+        assert_eq!(p.judge(1, 3), Verdict::WorkerDead);
+    }
+
+    #[test]
+    fn none_never_fails() {
+        let p = FaultPlan::none();
+        for _ in 0..100 {
+            assert_eq!(p.judge(0, 0), Verdict::Proceed);
+        }
+        assert_eq!(p.total_attempts(), 100);
+    }
+}

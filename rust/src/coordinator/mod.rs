@@ -1,0 +1,23 @@
+//! The coordination layer — what Ray provided in the paper, rebuilt as a
+//! deterministic work-queue scheduler over the simulated device pool.
+//!
+//! Responsibilities:
+//! * [`scheduler`] — generic chunk scheduler: a shared FIFO of tasks,
+//!   N worker threads (one [`DeviceRuntime`](crate::runtime::device)
+//!   each), at-least-once execution with bounded retries.
+//! * [`fault`] — deterministic failure injection (every k-th launch
+//!   fails / a worker dies after m tasks), used to prove the retry path
+//!   preserves results exactly (Philox counters make task execution
+//!   idempotent, so at-least-once == exactly-once for the integrals).
+//! * [`progress`] — counters + per-worker utilization for the benches.
+//!
+//! Correctness argument (tested in `tests/scheduler_prop.rs`): a task is
+//! fully described by `(exe, inputs)` where inputs embed the Philox
+//! `(seed, stream, trial, counter_base)`; re-running it on any worker
+//! yields bit-identical sums, and the accumulator merge is commutative —
+//! so results are invariant to worker count, scheduling order, and
+//! injected failures.
+
+pub mod fault;
+pub mod progress;
+pub mod scheduler;

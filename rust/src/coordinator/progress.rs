@@ -1,0 +1,103 @@
+//! Run metrics: task counters, retries, per-worker utilization.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// Metrics collected across one scheduler run.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub tasks_done: AtomicU64,
+    pub retries: AtomicU64,
+    pub failures: AtomicU64,
+    /// (busy, total) wall time per worker, filled at worker exit.
+    worker_times: Mutex<Vec<(Duration, Duration)>>,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn task_done(&self) {
+        self.tasks_done.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn retry(&self) {
+        self.retries.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn failure(&self) {
+        self.failures.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_worker(&self, busy: Duration, total: Duration) {
+        self.worker_times.lock().unwrap().push((busy, total));
+    }
+
+    pub fn done(&self) -> u64 {
+        self.tasks_done.load(Ordering::Relaxed)
+    }
+
+    pub fn retried(&self) -> u64 {
+        self.retries.load(Ordering::Relaxed)
+    }
+
+    pub fn failed(&self) -> u64 {
+        self.failures.load(Ordering::Relaxed)
+    }
+
+    /// Mean fraction of wall time workers spent executing launches.
+    pub fn utilization(&self) -> f64 {
+        let w = self.worker_times.lock().unwrap();
+        if w.is_empty() {
+            return 0.0;
+        }
+        let fracs: f64 = w
+            .iter()
+            .map(|(busy, total)| {
+                if total.as_secs_f64() > 0.0 {
+                    busy.as_secs_f64() / total.as_secs_f64()
+                } else {
+                    0.0
+                }
+            })
+            .sum();
+        fracs / w.len() as f64
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "tasks={} retries={} failures={} utilization={:.0}%",
+            self.done(),
+            self.retried(),
+            self.failed(),
+            self.utilization() * 100.0
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters() {
+        let m = Metrics::new();
+        m.task_done();
+        m.task_done();
+        m.retry();
+        assert_eq!(m.done(), 2);
+        assert_eq!(m.retried(), 1);
+        assert_eq!(m.failed(), 0);
+    }
+
+    #[test]
+    fn utilization_mean() {
+        let m = Metrics::new();
+        m.record_worker(Duration::from_secs(1), Duration::from_secs(2));
+        m.record_worker(Duration::from_secs(2), Duration::from_secs(2));
+        assert!((m.utilization() - 0.75).abs() < 1e-12);
+        assert!(m.summary().contains("utilization=75%"));
+    }
+}

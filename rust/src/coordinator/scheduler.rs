@@ -1,0 +1,327 @@
+//! Work-queue scheduler: N device workers pulling chunk tasks from a
+//! shared FIFO, with bounded retries and deterministic fault injection.
+//!
+//! Generic over the task and worker-context types so the same machinery
+//! runs (a) real PJRT launches in production, (b) pure-CPU mock tasks in
+//! the property tests, and (c) virtual-time tasks in the cluster
+//! scaling simulation.
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use crate::coordinator::fault::{FaultPlan, Verdict};
+use crate::coordinator::progress::Metrics;
+
+/// Scheduler configuration.
+#[derive(Debug, Clone)]
+pub struct Scheduler {
+    pub n_workers: usize,
+    /// Per-task retry budget (attempts = 1 + retries).
+    pub max_retries: u32,
+}
+
+impl Default for Scheduler {
+    fn default() -> Self {
+        Scheduler { n_workers: 1, max_retries: 3 }
+    }
+}
+
+impl Scheduler {
+    pub fn new(n_workers: usize) -> Self {
+        Scheduler { n_workers, ..Default::default() }
+    }
+
+    /// Execute every task exactly once (semantically) and return results
+    /// in task order.
+    ///
+    /// * `make_ctx(worker_idx)` builds the per-thread context (a
+    ///   `DeviceRuntime` in production); called on the worker thread.
+    /// * `run(ctx, task)` executes one task.
+    /// * `fault` injects deterministic failures (including on context
+    ///   construction, counted as attempt 0 faults).
+    ///
+    /// Fails if any task exhausts its retry budget or all workers die.
+    pub fn run<T, R, C>(
+        &self,
+        tasks: Vec<T>,
+        fault: &FaultPlan,
+        metrics: &Metrics,
+        make_ctx: impl Fn(usize) -> Result<C> + Sync,
+        run: impl Fn(&C, &T) -> Result<R> + Sync,
+    ) -> Result<Vec<R>>
+    where
+        T: Send + Sync,
+        R: Send,
+    {
+        if self.n_workers == 0 {
+            return Err(anyhow!("scheduler needs >= 1 worker"));
+        }
+        let n_tasks = tasks.len();
+        let queue: Mutex<VecDeque<usize>> =
+            Mutex::new((0..n_tasks).collect());
+        let attempts: Mutex<Vec<u32>> = Mutex::new(vec![0; n_tasks]);
+        let results: Mutex<Vec<Option<R>>> =
+            Mutex::new((0..n_tasks).map(|_| None).collect());
+        let remaining = Mutex::new(n_tasks);
+        let done_cv = Condvar::new();
+        let fatal: Mutex<Option<String>> = Mutex::new(None);
+        let live_workers = Mutex::new(self.n_workers);
+        let tasks = Arc::new(tasks);
+
+        std::thread::scope(|scope| {
+            for w in 0..self.n_workers {
+                let queue = &queue;
+                let attempts = &attempts;
+                let results = &results;
+                let remaining = &remaining;
+                let done_cv = &done_cv;
+                let fatal = &fatal;
+                let live_workers = &live_workers;
+                let tasks = Arc::clone(&tasks);
+                let make_ctx = &make_ctx;
+                let run = &run;
+                scope.spawn(move || {
+                    let t_start = Instant::now();
+                    let mut busy = std::time::Duration::ZERO;
+                    let mut my_attempts: u64 = 0;
+                    let ctx = match make_ctx(w) {
+                        Ok(c) => c,
+                        Err(e) => {
+                            worker_exit(live_workers, fatal, done_cv, Some(
+                                format!("worker {w}: context: {e}"),
+                            ));
+                            return;
+                        }
+                    };
+                    loop {
+                        // stop if the job is finished or failed
+                        if fatal.lock().unwrap().is_some()
+                            || *remaining.lock().unwrap() == 0
+                        {
+                            break;
+                        }
+                        let idx = { queue.lock().unwrap().pop_front() };
+                        let Some(idx) = idx else {
+                            // queue drained but tasks may still be
+                            // in-flight on other workers (and might be
+                            // requeued); spin-wait briefly.
+                            std::thread::yield_now();
+                            continue;
+                        };
+                        match fault.judge(w, my_attempts) {
+                            Verdict::WorkerDead => {
+                                // put the task back and die
+                                queue.lock().unwrap().push_front(idx);
+                                break;
+                            }
+                            Verdict::FailAttempt => {
+                                my_attempts += 1;
+                                metrics.failure();
+                                requeue_or_abort(
+                                    idx,
+                                    "injected fault",
+                                    self.max_retries,
+                                    queue,
+                                    attempts,
+                                    fatal,
+                                    metrics,
+                                );
+                                continue;
+                            }
+                            Verdict::Proceed => {}
+                        }
+                        my_attempts += 1;
+                        let t0 = Instant::now();
+                        match run(&ctx, &tasks[idx]) {
+                            Ok(r) => {
+                                busy += t0.elapsed();
+                                results.lock().unwrap()[idx] = Some(r);
+                                metrics.task_done();
+                                let mut rem = remaining.lock().unwrap();
+                                *rem -= 1;
+                                if *rem == 0 {
+                                    done_cv.notify_all();
+                                }
+                            }
+                            Err(e) => {
+                                busy += t0.elapsed();
+                                metrics.failure();
+                                requeue_or_abort(
+                                    idx,
+                                    &e.to_string(),
+                                    self.max_retries,
+                                    queue,
+                                    attempts,
+                                    fatal,
+                                    metrics,
+                                );
+                            }
+                        }
+                    }
+                    metrics.record_worker(busy, t_start.elapsed());
+                    worker_exit(live_workers, fatal, done_cv, None);
+                });
+            }
+        });
+
+        if let Some(msg) = fatal.lock().unwrap().take() {
+            return Err(anyhow!(msg));
+        }
+        if *remaining.lock().unwrap() != 0 {
+            return Err(anyhow!(
+                "all workers exited with {} tasks unfinished",
+                remaining.lock().unwrap()
+            ));
+        }
+        let results = results.into_inner().unwrap();
+        Ok(results.into_iter().map(|r| r.unwrap()).collect())
+    }
+}
+
+fn requeue_or_abort(
+    idx: usize,
+    err: &str,
+    max_retries: u32,
+    queue: &Mutex<VecDeque<usize>>,
+    attempts: &Mutex<Vec<u32>>,
+    fatal: &Mutex<Option<String>>,
+    metrics: &Metrics,
+) {
+    let mut att = attempts.lock().unwrap();
+    att[idx] += 1;
+    if att[idx] > max_retries {
+        *fatal.lock().unwrap() = Some(format!(
+            "task {idx} failed after {} attempts: {err}",
+            att[idx]
+        ));
+    } else {
+        metrics.retry();
+        queue.lock().unwrap().push_back(idx);
+    }
+}
+
+fn worker_exit(
+    live: &Mutex<usize>,
+    fatal: &Mutex<Option<String>>,
+    cv: &Condvar,
+    err: Option<String>,
+) {
+    let mut l = live.lock().unwrap();
+    *l -= 1;
+    if let Some(e) = err {
+        // a worker that failed to even build its context is fatal only
+        // if it was the last one alive
+        if *l == 0 {
+            *fatal.lock().unwrap() = Some(e);
+        }
+    }
+    cv.notify_all();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_all_tasks_in_order() {
+        let s = Scheduler::new(4);
+        let m = Metrics::new();
+        let out = s
+            .run(
+                (0..100).collect::<Vec<i32>>(),
+                &FaultPlan::none(),
+                &m,
+                |_| Ok(()),
+                |_, &t| Ok(t * 2),
+            )
+            .unwrap();
+        assert_eq!(out, (0..100).map(|i| i * 2).collect::<Vec<_>>());
+        assert_eq!(m.done(), 100);
+        assert_eq!(m.retried(), 0);
+    }
+
+    #[test]
+    fn transient_faults_are_retried() {
+        let s = Scheduler::new(3);
+        let m = Metrics::new();
+        let out = s
+            .run(
+                (0..50).collect::<Vec<i32>>(),
+                &FaultPlan::transient(5),
+                &m,
+                |_| Ok(()),
+                |_, &t| Ok(t),
+            )
+            .unwrap();
+        assert_eq!(out, (0..50).collect::<Vec<_>>());
+        assert!(m.retried() > 0);
+    }
+
+    #[test]
+    fn worker_death_is_survived() {
+        let s = Scheduler::new(3);
+        let m = Metrics::new();
+        let out = s
+            .run(
+                (0..40).collect::<Vec<i32>>(),
+                &FaultPlan::kill(1, 3),
+                &m,
+                |_| Ok(()),
+                |_, &t| Ok(t + 1),
+            )
+            .unwrap();
+        assert_eq!(out.len(), 40);
+        assert_eq!(out[0], 1);
+    }
+
+    #[test]
+    fn retry_budget_exhaustion_fails() {
+        let s = Scheduler { n_workers: 2, max_retries: 2 };
+        let m = Metrics::new();
+        let err = s
+            .run(
+                vec![7i32],
+                &FaultPlan::none(),
+                &m,
+                |_| Ok(()),
+                |_, _| -> Result<i32> { Err(anyhow!("boom")) },
+            )
+            .unwrap_err();
+        assert!(err.to_string().contains("boom"));
+    }
+
+    #[test]
+    fn single_worker_context_failure_is_fatal() {
+        let s = Scheduler::new(1);
+        let m = Metrics::new();
+        let err = s
+            .run(
+                vec![1i32],
+                &FaultPlan::none(),
+                &m,
+                |_| -> Result<()> { Err(anyhow!("no device")) },
+                |_, &t| Ok(t),
+            )
+            .unwrap_err();
+        assert!(err.to_string().contains("no device"));
+    }
+
+    #[test]
+    fn empty_task_list() {
+        let s = Scheduler::new(2);
+        let m = Metrics::new();
+        let out: Vec<i32> = s
+            .run(
+                Vec::<i32>::new(),
+                &FaultPlan::none(),
+                &m,
+                |_| Ok(()),
+                |_, &t: &i32| Ok(t),
+            )
+            .unwrap();
+        assert!(out.is_empty());
+    }
+}

@@ -1,0 +1,164 @@
+//! AST → bytecode. Post-order emission; operand order matches the VM's
+//! stack convention (left operand pushed first, so `SUB`/`DIV`/`POW`
+//! compute `a op b` with `b` on top).
+//!
+//! Stack pressure: for a binary node we emit the *deeper* side first when
+//! both orders are legal (commutative ops), which keeps the maximum stack
+//! depth at the Strahler number of the tree rather than its height —
+//! letting considerably larger expressions fit the device STACK=16.
+
+use super::{BinOp, Expr, UnOp};
+use crate::vm::opcodes::Op;
+use crate::vm::program::{Instr, Program};
+
+pub fn compile(e: &Expr) -> Result<Program, String> {
+    let mut out = Vec::new();
+    emit(e, &mut out);
+    Program::new(out).map_err(|err| format!("{err} (in: {e})"))
+}
+
+fn emit(e: &Expr, out: &mut Vec<Instr>) {
+    match e {
+        Expr::Const(c) => out.push(Instr::konst(*c as f32)),
+        Expr::Var(i) => out.push(Instr::var(*i)),
+        Expr::Param(i) => out.push(Instr::param(*i)),
+        Expr::Unary(op, a) => {
+            emit(a, out);
+            out.push(Instr::new(unop_code(*op)));
+        }
+        Expr::Binary(op, a, b) => {
+            let commutative =
+                matches!(op, BinOp::Add | BinOp::Mul | BinOp::Min | BinOp::Max);
+            if commutative && pressure(b) > pressure(a) {
+                // evaluate the deeper operand first; commutativity keeps
+                // semantics identical while reducing peak stack depth.
+                emit(b, out);
+                emit(a, out);
+            } else {
+                emit(a, out);
+                emit(b, out);
+            }
+            out.push(Instr::new(binop_code(*op)));
+        }
+    }
+}
+
+/// Minimum stack registers needed to evaluate this subtree (Strahler-ish).
+fn pressure(e: &Expr) -> u32 {
+    match e {
+        Expr::Const(_) | Expr::Var(_) | Expr::Param(_) => 1,
+        Expr::Unary(_, a) => pressure(a),
+        Expr::Binary(_, a, b) => {
+            let (pa, pb) = (pressure(a), pressure(b));
+            if pa == pb {
+                pa + 1
+            } else {
+                pa.max(pb)
+            }
+        }
+    }
+}
+
+fn unop_code(op: UnOp) -> Op {
+    match op {
+        UnOp::Neg => Op::NEG,
+        UnOp::Abs => Op::ABS,
+        UnOp::Sin => Op::SIN,
+        UnOp::Cos => Op::COS,
+        UnOp::Tan => Op::TAN,
+        UnOp::Exp => Op::EXP,
+        UnOp::Log => Op::LOG,
+        UnOp::Sqrt => Op::SQRT,
+        UnOp::Tanh => Op::TANH,
+        UnOp::Atan => Op::ATAN,
+        UnOp::Floor => Op::FLOOR,
+        UnOp::Square => Op::SQUARE,
+        UnOp::Recip => Op::RECIP,
+    }
+}
+
+fn binop_code(op: BinOp) -> Op {
+    match op {
+        BinOp::Add => Op::ADD,
+        BinOp::Sub => Op::SUB,
+        BinOp::Mul => Op::MUL,
+        BinOp::Div => Op::DIV,
+        BinOp::Pow => Op::POW,
+        BinOp::Min => Op::MIN,
+        BinOp::Max => Op::MAX,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::vm::interp::eval_scalar;
+
+    fn check(src: &str, x: &[f64], theta: &[f64]) {
+        let e = Expr::parse(src).unwrap();
+        let prog = e.compile().unwrap();
+        let want = e.eval(x, theta);
+        let got = eval_scalar(&prog, x, theta);
+        let tol = 1e-5 * want.abs().max(1.0);
+        assert!(
+            (got - want).abs() < tol || (got.is_nan() && want.is_nan()),
+            "{src}: vm={got} tree={want}"
+        );
+    }
+
+    #[test]
+    fn compiled_matches_tree_walk() {
+        check("x1 + x2*x3 - 4", &[1.0, 2.0, 3.0], &[]);
+        check("sin(x1)^2 + cos(x1)^2", &[0.7], &[]);
+        check("p0*abs(x1+x2-x3)", &[0.1, 0.5, 0.9], &[3.0]);
+        check("min(x1, max(x2, 0.25))", &[0.4, 0.1], &[]);
+        check("2^x1", &[3.0], &[]);
+        check("x1/x2", &[1.0, 3.0], &[]);
+    }
+
+    #[test]
+    fn noncommutative_order_preserved() {
+        check("x1 - x2", &[10.0, 3.0], &[]);
+        check("x1 / x2", &[10.0, 4.0], &[]);
+        check("x1 ^ x2", &[2.0, 5.0], &[]);
+    }
+
+    #[test]
+    fn pressure_reorder_reduces_depth() {
+        // left-leaning vs right-leaning sums compile to the same depth
+        let left = Expr::parse_raw("((x1+x2)+x3)+x4").unwrap();
+        let right = Expr::parse_raw("x1+(x2+(x3+x4))").unwrap();
+        let pl = compile(&left).unwrap();
+        let pr = compile(&right).unwrap();
+        assert_eq!(pl.max_depth, 2);
+        assert_eq!(pr.max_depth, 2);
+    }
+
+    #[test]
+    fn too_deep_expression_errors() {
+        // a full binary tree of SUBs (non-commutative, no reordering)
+        // with depth 17 needs stack 17 > 16.
+        fn deep(n: usize) -> String {
+            if n == 0 {
+                "x1".into()
+            } else {
+                format!("({} - {})", deep(n - 1), deep(n - 1))
+            }
+        }
+        // depth-5 tree: 2^5=32 leaves, needs stack 6 — fine but long;
+        // verify the length error path too.
+        let e = Expr::parse_raw(&deep(5)).unwrap();
+        assert!(compile(&e).is_err()); // 63 instrs > MAX_PROG=48
+    }
+
+    #[test]
+    fn fig1_program_fits() {
+        let e = Expr::parse(
+            "cos(9.07*(x1+x2+x3+x4)) + sin(9.07*(x1+x2+x3+x4))",
+        )
+        .unwrap();
+        let p = e.compile().unwrap();
+        assert!(p.len() <= 24, "len={}", p.len());
+        assert!(p.max_depth <= 4);
+    }
+}

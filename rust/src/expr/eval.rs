@@ -1,0 +1,64 @@
+//! Tree-walk evaluator — the semantic reference for both the rust VM and
+//! (transitively, through the ABI tests) the device kernels.
+
+use super::{BinOp, Expr, UnOp};
+
+pub fn eval(e: &Expr, x: &[f64], theta: &[f64]) -> f64 {
+    match e {
+        Expr::Const(c) => *c,
+        Expr::Var(i) => x[*i],
+        Expr::Param(i) => theta[*i],
+        Expr::Unary(op, a) => {
+            let a = eval(a, x, theta);
+            match op {
+                UnOp::Neg => -a,
+                UnOp::Abs => a.abs(),
+                UnOp::Sin => a.sin(),
+                UnOp::Cos => a.cos(),
+                UnOp::Tan => a.tan(),
+                UnOp::Exp => a.exp(),
+                UnOp::Log => a.ln(),
+                UnOp::Sqrt => a.sqrt(),
+                UnOp::Tanh => a.tanh(),
+                UnOp::Atan => a.atan(),
+                UnOp::Floor => a.floor(),
+                UnOp::Square => a * a,
+                UnOp::Recip => 1.0 / a,
+            }
+        }
+        Expr::Binary(op, a, b) => {
+            let a = eval(a, x, theta);
+            let b = eval(b, x, theta);
+            match op {
+                BinOp::Add => a + b,
+                BinOp::Sub => a - b,
+                BinOp::Mul => a * b,
+                BinOp::Div => a / b,
+                BinOp::Pow => a.powf(b),
+                BinOp::Min => a.min(b),
+                BinOp::Max => a.max(b),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::expr::Expr as E;
+
+    #[test]
+    fn vars_and_params() {
+        let e = E::parse_raw("x1*p0 + x2*p1").unwrap();
+        assert_eq!(eval(&e, &[2.0, 3.0], &[10.0, 100.0]), 320.0);
+    }
+
+    #[test]
+    fn special_values() {
+        let e = E::parse_raw("log(x1)").unwrap();
+        assert!(eval(&e, &[-1.0], &[]).is_nan());
+        assert_eq!(eval(&e, &[0.0], &[]), f64::NEG_INFINITY);
+        let d = E::parse_raw("1/x1").unwrap();
+        assert_eq!(eval(&d, &[0.0], &[]), f64::INFINITY);
+    }
+}

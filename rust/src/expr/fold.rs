@@ -1,0 +1,128 @@
+//! Constant folding + strength reduction.
+//!
+//! Rewrites applied bottom-up (all exactly value-preserving for the
+//! tree-walk semantics — verified by the `fold_preserves_semantics`
+//! property test):
+//!
+//! * subtree of constants → the constant (via [`super::eval`])
+//! * `x ^ 2` → `square(x)`, `x ^ 1` → `x`, `x ^ 0.5` → `sqrt(x)`
+//! * `1 / x` → `recip(x)` (cheaper VM op; identical IEEE result)
+//! * `x * 1`, `1 * x`, `x + 0`, `0 + x`, `x - 0`, `x / 1` → `x`
+//! * `neg(neg(x))` → `x`
+//!
+//! `x * 0 → 0` is deliberately NOT applied: it changes NaN/Inf
+//! propagation (`Inf * 0 = NaN`, not `0`).
+
+use super::{BinOp, Expr, UnOp};
+
+pub fn fold(e: Expr) -> Expr {
+    match e {
+        Expr::Unary(op, a) => {
+            let a = fold(*a);
+            if let Expr::Const(ca) = a {
+                return Expr::Const(super::eval::eval(
+                    &Expr::Unary(op, Expr::Const(ca).into()),
+                    &[],
+                    &[],
+                ));
+            }
+            // --x → x
+            if op == UnOp::Neg {
+                if let Expr::Unary(UnOp::Neg, inner) = a {
+                    return *inner;
+                }
+                return Expr::Unary(UnOp::Neg, a.into());
+            }
+            Expr::Unary(op, a.into())
+        }
+        Expr::Binary(op, a, b) => {
+            let a = fold(*a);
+            let b = fold(*b);
+            if let (Expr::Const(_), Expr::Const(_)) = (&a, &b) {
+                return Expr::Const(super::eval::eval(
+                    &Expr::Binary(op, a.into(), b.into()),
+                    &[],
+                    &[],
+                ));
+            }
+            match (op, &a, &b) {
+                // identities
+                (BinOp::Add, Expr::Const(c), _) if *c == 0.0 => return b,
+                (BinOp::Add, _, Expr::Const(c)) if *c == 0.0 => return a,
+                (BinOp::Sub, _, Expr::Const(c)) if *c == 0.0 => return a,
+                (BinOp::Mul, Expr::Const(c), _) if *c == 1.0 => return b,
+                (BinOp::Mul, _, Expr::Const(c)) if *c == 1.0 => return a,
+                (BinOp::Div, _, Expr::Const(c)) if *c == 1.0 => return a,
+                // strength reduction
+                (BinOp::Pow, _, Expr::Const(c)) if *c == 2.0 => {
+                    return Expr::Unary(UnOp::Square, a.into())
+                }
+                (BinOp::Pow, _, Expr::Const(c)) if *c == 1.0 => return a,
+                (BinOp::Pow, _, Expr::Const(c)) if *c == 0.5 => {
+                    return Expr::Unary(UnOp::Sqrt, a.into())
+                }
+                (BinOp::Div, Expr::Const(c), _) if *c == 1.0 => {
+                    return Expr::Unary(UnOp::Recip, b.into())
+                }
+                _ => {}
+            }
+            Expr::Binary(op, a.into(), b.into())
+        }
+        leaf => leaf,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::expr::Expr as E;
+
+    fn f(src: &str) -> Expr {
+        fold(E::parse_raw(src).unwrap())
+    }
+
+    #[test]
+    fn constant_subtrees_collapse() {
+        assert_eq!(f("2 + 3*4"), Expr::Const(14.0));
+        assert_eq!(f("sin(0)"), Expr::Const(0.0));
+        assert_eq!(f("2^10"), Expr::Const(1024.0));
+    }
+
+    #[test]
+    fn identities() {
+        assert_eq!(f("x1 + 0"), Expr::Var(0));
+        assert_eq!(f("0 + x1"), Expr::Var(0));
+        assert_eq!(f("x1 * 1"), Expr::Var(0));
+        assert_eq!(f("x1 / 1"), Expr::Var(0));
+        assert_eq!(f("x1 - 0"), Expr::Var(0));
+        assert_eq!(f("--x1"), Expr::Var(0));
+    }
+
+    #[test]
+    fn strength_reduction() {
+        assert_eq!(f("x1^2"), Expr::Unary(UnOp::Square, Expr::Var(0).into()));
+        assert_eq!(f("x1^1"), Expr::Var(0));
+        assert_eq!(f("x1^0.5"), Expr::Unary(UnOp::Sqrt, Expr::Var(0).into()));
+        assert_eq!(f("1/x1"), Expr::Unary(UnOp::Recip, Expr::Var(0).into()));
+    }
+
+    #[test]
+    fn mul_zero_not_folded() {
+        // would change Inf*0 semantics
+        assert!(matches!(f("x1 * 0"), Expr::Binary(BinOp::Mul, _, _)));
+    }
+
+    #[test]
+    fn partial_fold_in_context() {
+        // (2+3) stays folded inside a var expression
+        let e = f("x1 * (2 + 3)");
+        assert_eq!(
+            e,
+            Expr::Binary(
+                BinOp::Mul,
+                Expr::Var(0).into(),
+                Expr::Const(5.0).into()
+            )
+        );
+    }
+}

@@ -1,0 +1,202 @@
+//! Tokenizer for the expression language.
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Tok {
+    Num(f64),
+    /// `x1`..`x8` → 0-based index.
+    Var(usize),
+    /// `p0`..`p15`.
+    Param(usize),
+    /// Function / named-constant identifier (`sin`, `pi`, ...).
+    Ident(String),
+    Plus,
+    Minus,
+    Star,
+    Slash,
+    Caret,
+    LParen,
+    RParen,
+    Comma,
+}
+
+pub fn lex(src: &str) -> Result<Vec<Tok>, String> {
+    let b = src.as_bytes();
+    let mut i = 0;
+    let mut out = Vec::new();
+    while i < b.len() {
+        let c = b[i];
+        match c {
+            b' ' | b'\t' | b'\n' | b'\r' => i += 1,
+            b'+' => {
+                out.push(Tok::Plus);
+                i += 1;
+            }
+            b'-' => {
+                out.push(Tok::Minus);
+                i += 1;
+            }
+            b'*' => {
+                // tolerate python-style `**` for power
+                if b.get(i + 1) == Some(&b'*') {
+                    out.push(Tok::Caret);
+                    i += 2;
+                } else {
+                    out.push(Tok::Star);
+                    i += 1;
+                }
+            }
+            b'/' => {
+                out.push(Tok::Slash);
+                i += 1;
+            }
+            b'^' => {
+                out.push(Tok::Caret);
+                i += 1;
+            }
+            b'(' => {
+                out.push(Tok::LParen);
+                i += 1;
+            }
+            b')' => {
+                out.push(Tok::RParen);
+                i += 1;
+            }
+            b',' => {
+                out.push(Tok::Comma);
+                i += 1;
+            }
+            b'0'..=b'9' | b'.' => {
+                let start = i;
+                while i < b.len() && (b[i].is_ascii_digit() || b[i] == b'.') {
+                    i += 1;
+                }
+                // exponent part
+                if i < b.len() && (b[i] == b'e' || b[i] == b'E') {
+                    let mut j = i + 1;
+                    if j < b.len() && (b[j] == b'+' || b[j] == b'-') {
+                        j += 1;
+                    }
+                    if j < b.len() && b[j].is_ascii_digit() {
+                        i = j;
+                        while i < b.len() && b[i].is_ascii_digit() {
+                            i += 1;
+                        }
+                    }
+                }
+                let s = &src[start..i];
+                let n: f64 = s
+                    .parse()
+                    .map_err(|_| format!("bad number literal '{s}'"))?;
+                out.push(Tok::Num(n));
+            }
+            b'a'..=b'z' | b'A'..=b'Z' | b'_' => {
+                let start = i;
+                while i < b.len()
+                    && (b[i].is_ascii_alphanumeric() || b[i] == b'_')
+                {
+                    i += 1;
+                }
+                let s = &src[start..i];
+                out.push(classify_ident(s)?);
+            }
+            _ => {
+                return Err(format!(
+                    "unexpected character '{}' at byte {i}",
+                    c as char
+                ))
+            }
+        }
+    }
+    if out.is_empty() {
+        return Err("empty expression".into());
+    }
+    Ok(out)
+}
+
+fn classify_ident(s: &str) -> Result<Tok, String> {
+    // x<k>: 1-based variable
+    if let Some(rest) = s.strip_prefix('x') {
+        if let Ok(k) = rest.parse::<usize>() {
+            if k == 0 {
+                return Err("variables are 1-based: x1, x2, ...".into());
+            }
+            if k > crate::abi::MAX_DIM {
+                return Err(format!(
+                    "variable x{k} exceeds MAX_DIM={}",
+                    crate::abi::MAX_DIM
+                ));
+            }
+            return Ok(Tok::Var(k - 1));
+        }
+    }
+    // p<k>: 0-based parameter
+    if let Some(rest) = s.strip_prefix('p') {
+        if let Ok(k) = rest.parse::<usize>() {
+            if k >= crate::abi::MAX_PARAM {
+                return Err(format!(
+                    "parameter p{k} exceeds MAX_PARAM={}",
+                    crate::abi::MAX_PARAM
+                ));
+            }
+            return Ok(Tok::Param(k));
+        }
+    }
+    Ok(Tok::Ident(s.to_string()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_tokens() {
+        let t = lex("x1 + 2.5*sin(p0)^2").unwrap();
+        assert_eq!(
+            t,
+            vec![
+                Tok::Var(0),
+                Tok::Plus,
+                Tok::Num(2.5),
+                Tok::Star,
+                Tok::Ident("sin".into()),
+                Tok::LParen,
+                Tok::Param(0),
+                Tok::RParen,
+                Tok::Caret,
+                Tok::Num(2.0),
+            ]
+        );
+    }
+
+    #[test]
+    fn python_power() {
+        assert_eq!(lex("x1**2").unwrap()[1], Tok::Caret);
+    }
+
+    #[test]
+    fn scientific_notation() {
+        assert_eq!(lex("1e-3").unwrap(), vec![Tok::Num(1e-3)]);
+        assert_eq!(lex("2.5E+2").unwrap(), vec![Tok::Num(250.0)]);
+        // 'e' not followed by digits is an identifier (Euler constant)
+        assert_eq!(
+            lex("2e").unwrap(),
+            vec![Tok::Num(2.0), Tok::Ident("e".into())]
+        );
+    }
+
+    #[test]
+    fn index_bounds() {
+        assert!(lex("x0").is_err());
+        assert!(lex("x9").is_err());
+        assert!(lex("p16").is_err());
+        assert!(lex("x8").is_ok());
+        assert!(lex("p15").is_ok());
+    }
+
+    #[test]
+    fn bad_chars_rejected() {
+        assert!(lex("x1 $ 2").is_err());
+        assert!(lex("").is_err());
+        assert!(lex("1..2").is_err());
+    }
+}

@@ -1,0 +1,205 @@
+//! Expression language — how users hand integrands to the coordinator.
+//!
+//! The paper's Python API accepts integrand *source strings* that
+//! Numba JIT-compiles at run time; with no Python in our runtime, the
+//! equivalent flexibility comes from this small math-expression language,
+//! compiled to device bytecode at job-submission time:
+//!
+//! ```text
+//! "cos(9.07*(x1+x2+x3+x4)) + sin(9.07*(x1+x2+x3+x4))"   // Eq. (1)
+//! "p0 * abs(x1 + x2 - x3)"                              // Eq. (2)
+//! ```
+//!
+//! * variables `x1`..`x8` (1-based, paper notation)
+//! * parameters `p0`..`p15` (bound per function at run time)
+//! * constants `pi`, `e`; literals `1`, `2.5`, `1e-3`
+//! * operators `+ - * / ^` (with unary minus; `^` right-associative)
+//! * functions `sin cos tan exp log sqrt abs tanh atan floor`
+//!   and 2-argument `min max pow`
+//!
+//! Pipeline: [`lexer`] → [`parser`] → [`fold`] (constant folding +
+//! strength reduction) → [`compile`] (bytecode emission with stack-depth
+//! validation). [`Expr::eval`] is the tree-walk oracle the property tests
+//! compare the VM against.
+
+pub mod compile;
+pub mod eval;
+pub mod fold;
+pub mod lexer;
+pub mod parser;
+
+use std::fmt;
+
+use crate::vm::program::Program;
+
+/// Unary operators / functions (all map 1:1 onto VM opcodes).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum UnOp {
+    Neg,
+    Abs,
+    Sin,
+    Cos,
+    Tan,
+    Exp,
+    Log,
+    Sqrt,
+    Tanh,
+    Atan,
+    Floor,
+    /// Introduced by strength reduction of `x^2` (no surface syntax).
+    Square,
+    /// Introduced by strength reduction of `1/x` (no surface syntax).
+    Recip,
+}
+
+/// Binary operators.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BinOp {
+    Add,
+    Sub,
+    Mul,
+    Div,
+    Pow,
+    Min,
+    Max,
+}
+
+/// Expression AST.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Expr {
+    Const(f64),
+    /// 0-based variable index (`x1` parses to `Var(0)`).
+    Var(usize),
+    /// Parameter slot (`p3` parses to `Param(3)`).
+    Param(usize),
+    Unary(UnOp, Box<Expr>),
+    Binary(BinOp, Box<Expr>, Box<Expr>),
+}
+
+impl Expr {
+    /// Parse source text into an AST (no folding).
+    pub fn parse_raw(src: &str) -> Result<Expr, String> {
+        parser::parse(src)
+    }
+
+    /// Parse + constant-fold + strength-reduce.
+    pub fn parse(src: &str) -> Result<Expr, String> {
+        Ok(fold::fold(parser::parse(src)?))
+    }
+
+    /// Compile to validated device bytecode.
+    pub fn compile(&self) -> Result<Program, String> {
+        compile::compile(self)
+    }
+
+    /// Tree-walk evaluation (f64) — the oracle.
+    pub fn eval(&self, x: &[f64], theta: &[f64]) -> f64 {
+        eval::eval(self, x, theta)
+    }
+
+    /// Highest variable index used + 1.
+    pub fn dims(&self) -> usize {
+        match self {
+            Expr::Const(_) => 0,
+            Expr::Var(i) => i + 1,
+            Expr::Param(_) => 0,
+            Expr::Unary(_, a) => a.dims(),
+            Expr::Binary(_, a, b) => a.dims().max(b.dims()),
+        }
+    }
+
+    /// Highest parameter index used + 1.
+    pub fn n_params(&self) -> usize {
+        match self {
+            Expr::Const(_) | Expr::Var(_) => 0,
+            Expr::Param(i) => i + 1,
+            Expr::Unary(_, a) => a.n_params(),
+            Expr::Binary(_, a, b) => a.n_params().max(b.n_params()),
+        }
+    }
+}
+
+impl UnOp {
+    pub fn name(self) -> &'static str {
+        match self {
+            UnOp::Neg => "-",
+            UnOp::Abs => "abs",
+            UnOp::Sin => "sin",
+            UnOp::Cos => "cos",
+            UnOp::Tan => "tan",
+            UnOp::Exp => "exp",
+            UnOp::Log => "log",
+            UnOp::Sqrt => "sqrt",
+            UnOp::Tanh => "tanh",
+            UnOp::Atan => "atan",
+            UnOp::Floor => "floor",
+            UnOp::Square => "square",
+            UnOp::Recip => "recip",
+        }
+    }
+}
+
+impl fmt::Display for Expr {
+    /// Fully-parenthesized form; `parse(format!("{e}"))` reproduces the
+    /// AST (modulo Square/Recip, printed via `^2` and `1/x`) — the
+    /// round-trip property in `tests/expr_prop.rs`.
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Expr::Const(c) => {
+                if *c < 0.0 {
+                    write!(f, "({c})")
+                } else {
+                    write!(f, "{c}")
+                }
+            }
+            Expr::Var(i) => write!(f, "x{}", i + 1),
+            Expr::Param(i) => write!(f, "p{i}"),
+            Expr::Unary(UnOp::Neg, a) => write!(f, "(-{a})"),
+            Expr::Unary(UnOp::Square, a) => write!(f, "({a}^2)"),
+            Expr::Unary(UnOp::Recip, a) => write!(f, "(1/{a})"),
+            Expr::Unary(op, a) => write!(f, "{}({a})", op.name()),
+            Expr::Binary(op, a, b) => {
+                let s = match op {
+                    BinOp::Add => "+",
+                    BinOp::Sub => "-",
+                    BinOp::Mul => "*",
+                    BinOp::Div => "/",
+                    BinOp::Pow => "^",
+                    BinOp::Min => return write!(f, "min({a}, {b})"),
+                    BinOp::Max => return write!(f, "max({a}, {b})"),
+                };
+                write!(f, "({a} {s} {b})")
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn end_to_end_parse_compile_eval() {
+        let e = Expr::parse("p0 * abs(x1 + x2 - x3)").unwrap();
+        assert_eq!(e.dims(), 3);
+        assert_eq!(e.n_params(), 1);
+        let prog = e.compile().unwrap();
+        let x = [0.3, 0.9, 2.0];
+        let got = crate::vm::interp::eval_scalar(&prog, &x, &[2.5]);
+        assert!((got - 2.5 * (0.3f64 + 0.9 - 2.0).abs()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn display_roundtrip_simple() {
+        for src in [
+            "x1 + 2 * x2",
+            "sin(x1) ^ 2",
+            "min(x1, max(x2, 0.5))",
+            "-x1 + pi",
+        ] {
+            let e = Expr::parse_raw(src).unwrap();
+            let e2 = Expr::parse_raw(&e.to_string()).unwrap();
+            assert_eq!(e, e2, "{src}");
+        }
+    }
+}

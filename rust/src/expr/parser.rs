@@ -1,0 +1,238 @@
+//! Pratt parser: tokens → AST.
+//!
+//! Precedence (low→high): `+ -` < `* /` < unary `-` < `^` (right-assoc)
+//! < atoms. `2^-3` and `-x1^2 == -(x1^2)` follow the usual math rules.
+
+use super::lexer::{lex, Tok};
+use super::{BinOp, Expr, UnOp};
+
+pub fn parse(src: &str) -> Result<Expr, String> {
+    let toks = lex(src)?;
+    let mut p = P { toks, i: 0 };
+    let e = p.expr()?;
+    if p.i != p.toks.len() {
+        return Err(format!("unexpected token at position {}", p.i));
+    }
+    Ok(e)
+}
+
+struct P {
+    toks: Vec<Tok>,
+    i: usize,
+}
+
+impl P {
+    fn peek(&self) -> Option<&Tok> {
+        self.toks.get(self.i)
+    }
+
+    fn next(&mut self) -> Option<Tok> {
+        let t = self.toks.get(self.i).cloned();
+        if t.is_some() {
+            self.i += 1;
+        }
+        t
+    }
+
+    fn expect(&mut self, t: &Tok) -> Result<(), String> {
+        match self.next() {
+            Some(ref got) if got == t => Ok(()),
+            got => Err(format!("expected {t:?}, got {got:?}")),
+        }
+    }
+
+    /// expr := term (('+'|'-') term)*
+    fn expr(&mut self) -> Result<Expr, String> {
+        let mut lhs = self.term()?;
+        loop {
+            match self.peek() {
+                Some(Tok::Plus) => {
+                    self.i += 1;
+                    let rhs = self.term()?;
+                    lhs = Expr::Binary(BinOp::Add, lhs.into(), rhs.into());
+                }
+                Some(Tok::Minus) => {
+                    self.i += 1;
+                    let rhs = self.term()?;
+                    lhs = Expr::Binary(BinOp::Sub, lhs.into(), rhs.into());
+                }
+                _ => return Ok(lhs),
+            }
+        }
+    }
+
+    /// term := unary (('*'|'/') unary)*
+    fn term(&mut self) -> Result<Expr, String> {
+        let mut lhs = self.unary()?;
+        loop {
+            match self.peek() {
+                Some(Tok::Star) => {
+                    self.i += 1;
+                    let rhs = self.unary()?;
+                    lhs = Expr::Binary(BinOp::Mul, lhs.into(), rhs.into());
+                }
+                Some(Tok::Slash) => {
+                    self.i += 1;
+                    let rhs = self.unary()?;
+                    lhs = Expr::Binary(BinOp::Div, lhs.into(), rhs.into());
+                }
+                _ => return Ok(lhs),
+            }
+        }
+    }
+
+    /// unary := '-' unary | power
+    fn unary(&mut self) -> Result<Expr, String> {
+        if self.peek() == Some(&Tok::Minus) {
+            self.i += 1;
+            let inner = self.unary()?;
+            // fold a negated literal into the constant so that the
+            // Display round-trip `(-3.5)` reparses to the same AST
+            if let Expr::Const(c) = inner {
+                return Ok(Expr::Const(-c));
+            }
+            return Ok(Expr::Unary(UnOp::Neg, inner.into()));
+        }
+        self.power()
+    }
+
+    /// power := atom ('^' unary)?   — right-associative, binds tighter
+    /// than unary minus on the left (so `-x^2 = -(x^2)`), and allows a
+    /// signed exponent (`x^-2`).
+    fn power(&mut self) -> Result<Expr, String> {
+        let base = self.atom()?;
+        if self.peek() == Some(&Tok::Caret) {
+            self.i += 1;
+            let exp = self.unary()?;
+            return Ok(Expr::Binary(BinOp::Pow, base.into(), exp.into()));
+        }
+        Ok(base)
+    }
+
+    fn atom(&mut self) -> Result<Expr, String> {
+        match self.next() {
+            Some(Tok::Num(n)) => Ok(Expr::Const(n)),
+            Some(Tok::Var(i)) => Ok(Expr::Var(i)),
+            Some(Tok::Param(i)) => Ok(Expr::Param(i)),
+            Some(Tok::LParen) => {
+                let e = self.expr()?;
+                self.expect(&Tok::RParen)?;
+                Ok(e)
+            }
+            Some(Tok::Ident(name)) => self.call_or_const(&name),
+            t => Err(format!("expected a value, got {t:?}")),
+        }
+    }
+
+    fn call_or_const(&mut self, name: &str) -> Result<Expr, String> {
+        // named constants
+        match name {
+            "pi" => return Ok(Expr::Const(std::f64::consts::PI)),
+            "e" => return Ok(Expr::Const(std::f64::consts::E)),
+            _ => {}
+        }
+        let un = match name {
+            "sin" => Some(UnOp::Sin),
+            "cos" => Some(UnOp::Cos),
+            "tan" => Some(UnOp::Tan),
+            "exp" => Some(UnOp::Exp),
+            "log" | "ln" => Some(UnOp::Log),
+            "sqrt" => Some(UnOp::Sqrt),
+            "abs" => Some(UnOp::Abs),
+            "tanh" => Some(UnOp::Tanh),
+            "atan" | "arctan" => Some(UnOp::Atan),
+            "floor" => Some(UnOp::Floor),
+            _ => None,
+        };
+        if let Some(op) = un {
+            self.expect(&Tok::LParen)?;
+            let a = self.expr()?;
+            self.expect(&Tok::RParen)?;
+            return Ok(Expr::Unary(op, a.into()));
+        }
+        let bin = match name {
+            "min" => Some(BinOp::Min),
+            "max" => Some(BinOp::Max),
+            "pow" => Some(BinOp::Pow),
+            _ => None,
+        };
+        if let Some(op) = bin {
+            self.expect(&Tok::LParen)?;
+            let a = self.expr()?;
+            self.expect(&Tok::Comma)?;
+            let b = self.expr()?;
+            self.expect(&Tok::RParen)?;
+            return Ok(Expr::Binary(op, a.into(), b.into()));
+        }
+        Err(format!("unknown function or constant '{name}'"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn c(v: f64) -> Expr {
+        Expr::Const(v)
+    }
+
+    #[test]
+    fn precedence() {
+        // 1 + 2*3 = 1 + (2*3)
+        assert_eq!(
+            parse("1 + 2*3").unwrap(),
+            Expr::Binary(
+                BinOp::Add,
+                c(1.0).into(),
+                Expr::Binary(BinOp::Mul, c(2.0).into(), c(3.0).into()).into()
+            )
+        );
+    }
+
+    #[test]
+    fn power_right_assoc() {
+        // 2^3^2 = 2^(3^2) = 512
+        let e = parse("2^3^2").unwrap();
+        assert_eq!(e.eval(&[], &[]), 512.0);
+    }
+
+    #[test]
+    fn unary_minus_vs_power() {
+        // -2^2 = -(2^2) = -4 ; 2^-2 = 0.25
+        assert_eq!(parse("-2^2").unwrap().eval(&[], &[]), -4.0);
+        assert_eq!(parse("2^-2").unwrap().eval(&[], &[]), 0.25);
+        assert_eq!(parse("--2").unwrap().eval(&[], &[]), 2.0);
+    }
+
+    #[test]
+    fn functions_and_constants() {
+        let e = parse("sin(pi/2) + min(1, 2) + pow(2, 3)").unwrap();
+        assert!((e.eval(&[], &[]) - 10.0).abs() < 1e-12);
+        assert!((parse("ln(e)").unwrap().eval(&[], &[]) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn division_left_assoc() {
+        assert_eq!(parse("8/4/2").unwrap().eval(&[], &[]), 1.0);
+        assert_eq!(parse("8-4-2").unwrap().eval(&[], &[]), 2.0);
+    }
+
+    #[test]
+    fn errors() {
+        assert!(parse("1 +").is_err());
+        assert!(parse("(1").is_err());
+        assert!(parse("foo(1)").is_err());
+        assert!(parse("min(1)").is_err());
+        assert!(parse("1 2").is_err());
+        assert!(parse("sin x1").is_err());
+    }
+
+    #[test]
+    fn eq1_and_eq2_parse() {
+        assert!(parse(
+            "cos(9.07*(x1+x2+x3+x4)) + sin(9.07*(x1+x2+x3+x4))"
+        )
+        .is_ok());
+        assert!(parse("p0 * abs(x1 + x2 - x3)").is_ok());
+    }
+}

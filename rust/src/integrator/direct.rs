@@ -1,0 +1,154 @@
+//! Single-core CPU baseline: identical bytecode, identical Philox
+//! streams, no device. This is the comparator for the backend benches
+//! (experiment A3) and the ground-truth cross-check in integration
+//! tests — with the same `(seed, stream, trial)` it reproduces the
+//! device path's estimates up to f32 accumulation order.
+
+use crate::integrator::spec::{Estimate, IntegralJob};
+use crate::sampler::StreamKey;
+use crate::stats::MomentSum;
+use crate::vm::interp::BatchInterp;
+
+/// Evaluation chunk size (samples per VM batch) — mirrors the device
+/// tile so per-instruction dispatch amortizes identically.
+pub const CHUNK: usize = 2048;
+
+/// Integrate one job with `samples` draws on stream
+/// `(seed, stream, trial)`.
+pub fn integrate_one(
+    job: &IntegralJob,
+    samples: usize,
+    seed: u64,
+    stream: u32,
+    trial: u32,
+) -> Estimate {
+    let dims = job.bounds.len();
+    let key = StreamKey::new(seed, stream, trial);
+    let theta: Vec<f32> = job.theta.iter().map(|&t| t as f32).collect();
+    let mut interp = BatchInterp::new(CHUNK);
+    let mut xt: Vec<Vec<f32>> = vec![vec![0f32; CHUNK]; dims];
+    let mut out = vec![0f32; CHUNK];
+    let mut m = MomentSum::new();
+    let mut idx = 0u32;
+    let mut left = samples;
+    while left > 0 {
+        let n = left.min(CHUNK);
+        for i in 0..n {
+            let u = key.point(idx.wrapping_add(i as u32), dims);
+            for d in 0..dims {
+                let (lo, hi) = job.bounds[d];
+                xt[d][i] = lo as f32 + (hi - lo) as f32 * u[d];
+            }
+        }
+        interp.eval(&job.program, &xt, &theta, n, &mut out);
+        // accumulate in f64 (absorbs f32 partial error over big S)
+        let mut s = 0f64;
+        let mut q = 0f64;
+        for &v in &out[..n] {
+            s += v as f64;
+            q += (v as f64) * (v as f64);
+        }
+        m.merge(&MomentSum { n: n as u64, sum: s, sumsq: q });
+        idx = idx.wrapping_add(n as u32);
+        left -= n;
+    }
+    let (value, std_err) = m.estimate(job.volume());
+    Estimate { value, std_err, n_samples: m.n }
+}
+
+/// Integrate many jobs serially (stream = job index + `stream_base`).
+pub fn integrate_many(
+    jobs: &[IntegralJob],
+    samples: usize,
+    seed: u64,
+    stream_base: u32,
+    trial: u32,
+) -> Vec<Estimate> {
+    jobs.iter()
+        .enumerate()
+        .map(|(i, j)| {
+            integrate_one(j, samples, seed, stream_base + i as u32, trial)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analytic;
+
+    #[test]
+    fn constant_is_exact() {
+        let j = IntegralJob::parse("2", &[(0.0, 3.0)]).unwrap();
+        let e = integrate_one(&j, 1000, 1, 0, 0);
+        assert!((e.value - 6.0).abs() < 1e-5);
+        assert_eq!(e.std_err, 0.0);
+        assert_eq!(e.n_samples, 1000);
+    }
+
+    #[test]
+    fn monomial_within_6_sigma() {
+        let j = IntegralJob::parse("x1^2", &[(0.0, 1.0)]).unwrap();
+        let e = integrate_one(&j, 1 << 16, 7, 0, 0);
+        assert!(e.consistent_with(analytic::monomial(2.0), 6.0),
+                "{e:?}");
+        assert!(e.std_err < 0.01);
+    }
+
+    #[test]
+    fn eq2_families() {
+        let j2 = IntegralJob::with_params(
+            "p0*abs(x1+x2)",
+            &[(0.0, 1.0), (0.0, 1.0)],
+            &[1.5],
+        )
+        .unwrap();
+        let e2 = integrate_one(&j2, 1 << 16, 11, 0, 0);
+        assert!(e2.consistent_with(analytic::eq2_abs2(1.5), 6.0), "{e2:?}");
+
+        let j3 = IntegralJob::with_params(
+            "p0*abs(x1+x2-x3)",
+            &[(0.0, 1.0), (0.0, 1.0), (0.0, 1.0)],
+            &[2.0],
+        )
+        .unwrap();
+        let e3 = integrate_one(&j3, 1 << 16, 11, 1, 0);
+        assert!(e3.consistent_with(analytic::eq2_abs3(2.0), 6.0), "{e3:?}");
+    }
+
+    #[test]
+    fn trials_are_independent() {
+        let j = IntegralJob::parse("sin(8*x1)", &[(0.0, 1.0)]).unwrap();
+        let a = integrate_one(&j, 4096, 3, 0, 0);
+        let b = integrate_one(&j, 4096, 3, 0, 1);
+        let c = integrate_one(&j, 4096, 3, 0, 0);
+        assert_ne!(a.value, b.value);
+        assert_eq!(a.value, c.value); // reproducible
+    }
+
+    #[test]
+    fn error_scales_inverse_sqrt() {
+        let j = IntegralJob::parse("cos(20*x1)", &[(0.0, 1.0)]).unwrap();
+        let small = integrate_one(&j, 1 << 10, 5, 0, 0);
+        let large = integrate_one(&j, 1 << 14, 5, 0, 0);
+        let ratio = small.std_err / large.std_err;
+        assert!((ratio - 4.0).abs() < 1.0, "ratio={ratio}");
+    }
+
+    #[test]
+    fn many_uses_distinct_streams() {
+        let jobs = vec![
+            IntegralJob::parse("x1", &[(0.0, 1.0)]).unwrap(),
+            IntegralJob::parse("x1", &[(0.0, 1.0)]).unwrap(),
+        ];
+        let es = integrate_many(&jobs, 2048, 9, 0, 0);
+        assert_ne!(es[0].value, es[1].value);
+    }
+
+    #[test]
+    fn partial_chunk_tail() {
+        let j = IntegralJob::parse("x1", &[(0.0, 1.0)]).unwrap();
+        let e = integrate_one(&j, CHUNK + 7, 1, 0, 0);
+        assert_eq!(e.n_samples as usize, CHUNK + 7);
+    }
+}

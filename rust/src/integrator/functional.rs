@@ -1,0 +1,82 @@
+//! `ZMCintegral_functional` — one integrand swept over a parameter grid
+//! (the v5 feature: "scanning of large parameter space").
+//!
+//! A scan point is the same compiled bytecode with a different `theta`
+//! binding, so the sweep packs into `vm_multi` launches exactly like a
+//! multifunction batch — each grid point gets its own Philox stream and
+//! its own estimate. Compilation happens once, not per point.
+
+use anyhow::Result;
+
+use crate::integrator::multifunctions::{self, MultiConfig};
+use crate::integrator::spec::{Estimate, IntegralJob};
+use crate::runtime::device::DevicePool;
+
+/// Cartesian grid over parameter axes: `axes[j]` lists the values taken
+/// by `p<j>`. Iteration order: last axis fastest (row-major).
+pub fn grid(axes: &[Vec<f64>]) -> Vec<Vec<f64>> {
+    let mut points: Vec<Vec<f64>> = vec![vec![]];
+    for axis in axes {
+        let mut next = Vec::with_capacity(points.len() * axis.len());
+        for p in &points {
+            for &v in axis {
+                let mut q = p.clone();
+                q.push(v);
+                next.push(q);
+            }
+        }
+        points = next;
+    }
+    points
+}
+
+/// `n` evenly spaced values over [lo, hi] inclusive.
+pub fn linspace(lo: f64, hi: f64, n: usize) -> Vec<f64> {
+    if n == 1 {
+        return vec![lo];
+    }
+    (0..n)
+        .map(|i| lo + (hi - lo) * i as f64 / (n - 1) as f64)
+        .collect()
+}
+
+/// Integrate `job`'s expression at every parameter point. Returns one
+/// estimate per point, in `thetas` order.
+pub fn scan(
+    pool: &DevicePool,
+    job: &IntegralJob,
+    thetas: &[Vec<f64>],
+    cfg: &MultiConfig,
+) -> Result<Vec<Estimate>> {
+    let jobs: Vec<IntegralJob> = thetas
+        .iter()
+        .map(|t| job.bind(t))
+        .collect::<Result<_>>()?;
+    multifunctions::integrate(pool, &jobs, cfg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_row_major() {
+        let g = grid(&[vec![1.0, 2.0], vec![10.0, 20.0, 30.0]]);
+        assert_eq!(g.len(), 6);
+        assert_eq!(g[0], vec![1.0, 10.0]);
+        assert_eq!(g[1], vec![1.0, 20.0]);
+        assert_eq!(g[3], vec![2.0, 10.0]);
+    }
+
+    #[test]
+    fn grid_empty_axes() {
+        assert_eq!(grid(&[]), vec![Vec::<f64>::new()]);
+    }
+
+    #[test]
+    fn linspace_endpoints() {
+        let l = linspace(0.0, 1.0, 5);
+        assert_eq!(l, vec![0.0, 0.25, 0.5, 0.75, 1.0]);
+        assert_eq!(linspace(2.0, 9.0, 1), vec![2.0]);
+    }
+}

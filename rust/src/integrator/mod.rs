@@ -1,0 +1,20 @@
+//! The paper's three integration classes, plus the CPU baseline.
+//!
+//! | paper (python class)         | here |
+//! |------------------------------|------|
+//! | `ZMCintegral_normal`         | [`normal`] — stratified sampling + heuristic tree search |
+//! | `ZMCintegral_functional`     | [`functional`] — one integrand, large parameter grid |
+//! | `ZMCintegral_multifunctions` | [`multifunctions`] — heterogeneous integrand batches |
+//!
+//! All three decompose work into *chunk tasks* (one AOT-artifact launch
+//! each, addressed by Philox `(seed, stream, trial, counter_base)`) and
+//! push them through [`crate::coordinator::scheduler`]. [`direct`] is the
+//! single-core CPU comparator running identical bytecode on the same
+//! sample streams.
+
+pub mod direct;
+pub mod functional;
+pub mod harmonic;
+pub mod multifunctions;
+pub mod normal;
+pub mod spec;

@@ -1,0 +1,215 @@
+//! `ZMCintegral_multifunctions` — the v5.1 headline feature.
+//!
+//! Integrates an arbitrary set of integrands (different expressions,
+//! dimensions, domains, parameters) by packing them into `vm_multi`
+//! artifact launches: F functions per launch, S samples per function per
+//! launch, chunked over the sample budget with advancing Philox counter
+//! bases, scheduled over the device pool with retries. One launch
+//! evaluates F·S integrand samples — the batching that gives the paper's
+//! "10³ integrations in under 10 minutes" throughput, reproduced as
+//! experiment C1.
+
+use anyhow::Result;
+
+use crate::coordinator::fault::FaultPlan;
+use crate::coordinator::progress::Metrics;
+use crate::coordinator::scheduler::Scheduler;
+use crate::integrator::spec::{Estimate, IntegralJob};
+use crate::runtime::device::{DevicePool, DeviceRuntime};
+use crate::runtime::launch::{vm_multi_inputs, RngCtr, Value, VmFn};
+use crate::runtime::registry::ExeKind;
+use crate::stats::MomentSum;
+
+/// Options for a multifunction run.
+#[derive(Debug, Clone)]
+pub struct MultiConfig {
+    /// Target samples per function (rounded up to whole launches).
+    pub samples_per_fn: usize,
+    pub seed: u64,
+    /// Independent-repeat id (Fig 1 uses trials 0..10).
+    pub trial: u32,
+    /// First Philox stream id; function i uses `stream_base + i`.
+    pub stream_base: u32,
+    pub max_retries: u32,
+    /// Force a specific executable (default: best fit by samples).
+    pub exe: Option<String>,
+}
+
+impl Default for MultiConfig {
+    fn default() -> Self {
+        MultiConfig {
+            samples_per_fn: 1 << 20,
+            seed: 2021,
+            trial: 0,
+            stream_base: 0,
+            max_retries: 3,
+            exe: None,
+        }
+    }
+}
+
+/// One scheduled launch: functions `block` covering chunk `chunk`.
+struct ChunkTask {
+    exe: String,
+    block: usize,
+    inputs: Vec<Value>,
+}
+
+/// Integrate a heterogeneous job set; returns one estimate per job, in
+/// order. See [`MultiConfig`] for sampling/addressing options.
+pub fn integrate(
+    pool: &DevicePool,
+    jobs: &[IntegralJob],
+    cfg: &MultiConfig,
+) -> Result<Vec<Estimate>> {
+    integrate_with_fault(pool, jobs, cfg, &FaultPlan::none(), &Metrics::new())
+}
+
+/// Full-control variant used by tests and benches.
+pub fn integrate_with_fault(
+    pool: &DevicePool,
+    jobs: &[IntegralJob],
+    cfg: &MultiConfig,
+    fault: &FaultPlan,
+    metrics: &Metrics,
+) -> Result<Vec<Estimate>> {
+    if jobs.is_empty() {
+        return Ok(vec![]);
+    }
+    let reg = &pool.registry;
+    let exe = match &cfg.exe {
+        Some(name) => reg.get(name)?,
+        None => {
+            // dims-aware: a batch of dims<=4 jobs rides the d4 artifact,
+            // halving the in-kernel RNG cost (§Perf L1).
+            let want_dims =
+                jobs.iter().map(|j| j.dims()).max().unwrap_or(1);
+            reg.pick(ExeKind::VmMulti, cfg.samples_per_fn, want_dims)?
+        }
+    };
+    let n_chunks = cfg.samples_per_fn.div_ceil(exe.samples).max(1);
+
+    // Pack jobs into function blocks of the artifact's width.
+    let fns: Vec<VmFn> = jobs
+        .iter()
+        .enumerate()
+        .map(|(i, j)| VmFn {
+            program: j.program.clone(),
+            theta: j.theta.clone(),
+            bounds: j.bounds.clone(),
+            stream: cfg.stream_base + i as u32,
+        })
+        .collect();
+
+    let mut tasks = Vec::new();
+    for (b, block) in fns.chunks(exe.n_fns).enumerate() {
+        for c in 0..n_chunks {
+            let rng = RngCtr {
+                seed: split_seed(cfg.seed),
+                base: (c * exe.samples) as u32,
+                trial: cfg.trial,
+            };
+            tasks.push(ChunkTask {
+                exe: exe.name.clone(),
+                block: b,
+                inputs: vm_multi_inputs(exe, rng, block)?,
+            });
+        }
+    }
+
+    let sched = Scheduler {
+        n_workers: pool.n_devices,
+        max_retries: cfg.max_retries,
+    };
+    let registry = std::sync::Arc::clone(reg);
+    let outs = sched.run(
+        tasks,
+        fault,
+        metrics,
+        move |_w| DeviceRuntime::new(std::sync::Arc::clone(&registry)),
+        |dev: &DeviceRuntime, t: &ChunkTask| {
+            dev.execute(&t.exe, &t.inputs).map(|o| (t.block, o.data))
+        },
+    )?;
+
+    // Merge (Σf, Σf²) per function across chunks.
+    let mut moments = vec![MomentSum::new(); jobs.len()];
+    for (block, data) in outs {
+        for f in 0..exe.n_fns {
+            let j = block * exe.n_fns + f;
+            if j >= jobs.len() {
+                break;
+            }
+            moments[j].merge(&MomentSum::from_device(
+                exe.samples as u64,
+                data[f * 2],
+                data[f * 2 + 1],
+            ));
+        }
+    }
+    Ok(moments
+        .iter()
+        .zip(jobs)
+        .map(|(m, j)| {
+            let (value, std_err) = m.estimate(j.volume());
+            Estimate { value, std_err, n_samples: m.n }
+        })
+        .collect())
+}
+
+/// Convenience: single integrand.
+pub fn integrate_one(
+    pool: &DevicePool,
+    job: &IntegralJob,
+    samples: usize,
+    seed: u64,
+) -> Result<Estimate> {
+    let cfg = MultiConfig {
+        samples_per_fn: samples,
+        seed,
+        ..Default::default()
+    };
+    Ok(integrate(pool, std::slice::from_ref(job), &cfg)?[0])
+}
+
+/// Independent repeats (the paper's "10 independent evaluations"):
+/// returns `trials` estimate vectors, each from a disjoint trial stream.
+pub fn integrate_trials(
+    pool: &DevicePool,
+    jobs: &[IntegralJob],
+    cfg: &MultiConfig,
+    trials: u32,
+) -> Result<Vec<Vec<Estimate>>> {
+    (0..trials)
+        .map(|t| {
+            let c = MultiConfig { trial: cfg.trial + t, ..cfg.clone() };
+            integrate(pool, jobs, &c)
+        })
+        .collect()
+}
+
+pub(crate) fn split_seed(seed: u64) -> [u32; 2] {
+    [(seed & 0xFFFF_FFFF) as u32, (seed >> 32) as u32]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chunk_math() {
+        // pure logic test (device tests live in tests/integrator_integration.rs)
+        assert_eq!(10usize.div_ceil(4), 3);
+        assert_eq!(split_seed(0x1122334455667788),
+                   [0x55667788, 0x11223344]);
+    }
+
+    #[test]
+    fn empty_jobs_short_circuit() {
+        // must not touch the registry at all
+        let cfg = MultiConfig::default();
+        assert_eq!(cfg.samples_per_fn, 1 << 20);
+        // (constructing a DevicePool needs artifacts; covered in
+        // integration tests)
+    }
+}

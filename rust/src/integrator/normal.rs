@@ -1,0 +1,360 @@
+//! `ZMCintegral_normal` — stratified sampling + heuristic tree search
+//! (the algorithm of the original ZMCintegral paper, CPC 248:106962).
+//!
+//! 1. Partition the domain into `k^D` hypercubes.
+//! 2. Evaluate every cube `n_trials` times with independent Philox trial
+//!    streams (all cubes of a level batched into `stratified` artifact
+//!    launches).
+//! 3. Compute each cube's std across trials; flag cubes with
+//!    `std > mean(stds) + sigma_mult * std(stds)` as *fluctuating* —
+//!    the paper's heuristic for "this region needs a closer look".
+//! 4. Recursively subdivide flagged cubes (2 per dimension, capped) up
+//!    to `max_depth`; unflagged cubes keep their trial statistics.
+//! 5. Total = Σ cube means; error = √(Σ cube var/n_trials) — stratified
+//!    variance combination.
+
+use anyhow::{bail, Result};
+
+use crate::coordinator::fault::FaultPlan;
+use crate::coordinator::progress::Metrics;
+use crate::coordinator::scheduler::Scheduler;
+use crate::integrator::multifunctions::split_seed;
+use crate::integrator::spec::{Estimate, IntegralJob};
+use crate::runtime::device::{DevicePool, DeviceRuntime};
+use crate::runtime::launch::{stratified_inputs, RngCtr, Value};
+use crate::runtime::registry::ExeKind;
+use crate::stats::Welford;
+
+/// Tree-search configuration (defaults follow the ZMCintegral package).
+#[derive(Debug, Clone)]
+pub struct NormalConfig {
+    /// Initial divisions per dimension (k^D starting cubes).
+    pub initial_divisions: usize,
+    /// Independent evaluations per cube per level.
+    pub n_trials: u32,
+    /// Flag threshold: mean(std) + sigma_mult·std(std).
+    pub sigma_mult: f64,
+    /// Maximum refinement depth (0 = no refinement).
+    pub max_depth: usize,
+    /// Subdivide at most this many dimensions per split (2^d children).
+    pub max_split_dims: usize,
+    pub seed: u64,
+    pub max_retries: u32,
+    /// Force a specific stratified executable.
+    pub exe: Option<String>,
+}
+
+impl Default for NormalConfig {
+    fn default() -> Self {
+        NormalConfig {
+            initial_divisions: 4,
+            n_trials: 5,
+            sigma_mult: 1.0,
+            max_depth: 2,
+            max_split_dims: 4,
+            seed: 2021,
+            max_retries: 3,
+            exe: None,
+        }
+    }
+}
+
+/// Result including tree diagnostics.
+#[derive(Debug, Clone)]
+pub struct NormalResult {
+    pub estimate: Estimate,
+    /// Cubes evaluated at each depth.
+    pub cubes_per_level: Vec<usize>,
+    /// Cubes flagged (and refined) at each depth.
+    pub flagged_per_level: Vec<usize>,
+    /// Total device launches issued.
+    pub launches: usize,
+}
+
+#[derive(Debug, Clone)]
+struct Cube {
+    lo: Vec<f64>,
+    hi: Vec<f64>,
+}
+
+impl Cube {
+    fn volume(&self) -> f64 {
+        self.lo
+            .iter()
+            .zip(&self.hi)
+            .map(|(l, h)| h - l)
+            .product()
+    }
+
+    /// Split into 2^d children along the `d` widest dimensions.
+    fn split(&self, max_dims: usize) -> Vec<Cube> {
+        let dims = self.lo.len();
+        // order dimensions by width, split the widest `max_dims`
+        let mut order: Vec<usize> = (0..dims).collect();
+        order.sort_by(|&a, &b| {
+            (self.hi[b] - self.lo[b]).total_cmp(&(self.hi[a] - self.lo[a]))
+        });
+        let split_dims = &order[..max_dims.min(dims)];
+        let mut out = vec![self.clone()];
+        for &d in split_dims {
+            let mid = 0.5 * (self.lo[d] + self.hi[d]);
+            let mut next = Vec::with_capacity(out.len() * 2);
+            for c in out {
+                let mut a = c.clone();
+                a.hi[d] = mid;
+                let mut b = c;
+                b.lo[d] = mid;
+                next.push(a);
+                next.push(b);
+            }
+            out = next;
+        }
+        out
+    }
+}
+
+/// Integrate with stratified sampling + tree search.
+pub fn integrate(
+    pool: &DevicePool,
+    job: &IntegralJob,
+    cfg: &NormalConfig,
+) -> Result<NormalResult> {
+    integrate_with_fault(pool, job, cfg, &FaultPlan::none(), &Metrics::new())
+}
+
+pub fn integrate_with_fault(
+    pool: &DevicePool,
+    job: &IntegralJob,
+    cfg: &NormalConfig,
+    fault: &FaultPlan,
+    metrics: &Metrics,
+) -> Result<NormalResult> {
+    if cfg.n_trials < 2 {
+        bail!("n_trials must be >= 2 for the variance heuristic");
+    }
+    let reg = &pool.registry;
+    let exe = match &cfg.exe {
+        Some(name) => reg.get(name)?,
+        None => reg.pick(ExeKind::Stratified, 0, job.dims())?,
+    };
+    let dims = job.dims();
+    let k = cfg.initial_divisions.max(1);
+    if (k as f64).powi(dims as i32) > 65536.0 {
+        bail!(
+            "initial grid {k}^{dims} too large; lower initial_divisions"
+        );
+    }
+
+    // Build the initial uniform grid.
+    let mut cubes = vec![Cube {
+        lo: job.bounds.iter().map(|b| b.0).collect(),
+        hi: job.bounds.iter().map(|b| b.1).collect(),
+    }];
+    for d in 0..dims {
+        let mut next = Vec::with_capacity(cubes.len() * k);
+        for c in cubes {
+            let w = (c.hi[d] - c.lo[d]) / k as f64;
+            for i in 0..k {
+                let mut child = c.clone();
+                child.lo[d] = c.lo[d] + w * i as f64;
+                child.hi[d] = c.lo[d] + w * (i + 1) as f64;
+                next.push(child);
+            }
+        }
+        cubes = next;
+    }
+
+    let mut total = Welford::new(); // not used for value; kept for API
+    let _ = &mut total;
+    let mut value = 0.0f64;
+    let mut variance = 0.0f64;
+    let mut cubes_per_level = Vec::new();
+    let mut flagged_per_level = Vec::new();
+    let mut launches = 0usize;
+    let mut next_stream: u32 = 0;
+
+    for depth in 0..=cfg.max_depth {
+        if cubes.is_empty() {
+            break;
+        }
+        cubes_per_level.push(cubes.len());
+        // per-cube per-trial integral estimates
+        let stats = eval_level(
+            pool, exe, job, &cubes, cfg, fault, metrics, &mut next_stream,
+            &mut launches,
+        )?;
+
+        // Welford over trials per cube → (mean, std)
+        let cube_stats: Vec<Welford> = stats;
+        if depth == cfg.max_depth {
+            // accept everything at the depth limit
+            for (c, w) in cubes.iter().zip(&cube_stats) {
+                let _ = c;
+                value += w.mean();
+                variance += w.sem().powi(2);
+            }
+            flagged_per_level.push(0);
+            break;
+        }
+
+        // the flagging heuristic
+        let stds: Vec<f64> = cube_stats.iter().map(|w| w.std()).collect();
+        let mean_std = stds.iter().sum::<f64>() / stds.len() as f64;
+        let std_std = (stds
+            .iter()
+            .map(|s| (s - mean_std).powi(2))
+            .sum::<f64>()
+            / stds.len() as f64)
+            .sqrt();
+        let threshold = mean_std + cfg.sigma_mult * std_std;
+
+        let mut next_cubes = Vec::new();
+        let mut flagged = 0usize;
+        for (c, w) in cubes.iter().zip(&cube_stats) {
+            if w.std() > threshold && w.std() > 0.0 {
+                flagged += 1;
+                next_cubes.extend(c.split(cfg.max_split_dims));
+            } else {
+                value += w.mean();
+                variance += w.sem().powi(2);
+            }
+        }
+        flagged_per_level.push(flagged);
+        cubes = next_cubes;
+    }
+
+    let samples_per_cube = exe.samples as u64;
+    let n_samples: u64 = cubes_per_level
+        .iter()
+        .map(|&c| c as u64 * samples_per_cube * cfg.n_trials as u64)
+        .sum();
+    Ok(NormalResult {
+        estimate: Estimate {
+            value,
+            std_err: variance.sqrt(),
+            n_samples,
+        },
+        cubes_per_level,
+        flagged_per_level,
+        launches,
+    })
+}
+
+/// Evaluate all cubes × all trials at one level; returns per-cube
+/// Welford stats of the per-trial integral estimates.
+#[allow(clippy::too_many_arguments)]
+fn eval_level(
+    pool: &DevicePool,
+    exe: &crate::runtime::registry::ExeSpec,
+    job: &IntegralJob,
+    cubes: &[Cube],
+    cfg: &NormalConfig,
+    fault: &FaultPlan,
+    metrics: &Metrics,
+    next_stream: &mut u32,
+    launches: &mut usize,
+) -> Result<Vec<Welford>> {
+    struct Task {
+        exe: String,
+        group: usize,
+        trial: u32,
+        inputs: Vec<Value>,
+    }
+
+    // assign one stream per cube (refined cubes get fresh streams)
+    let streams: Vec<u32> =
+        (0..cubes.len()).map(|i| *next_stream + i as u32).collect();
+    *next_stream += cubes.len() as u32;
+
+    let mut tasks = Vec::new();
+    for (g, group) in cubes.chunks(exe.n_cubes).enumerate() {
+        let cube_vecs: Vec<(Vec<f64>, Vec<f64>)> = group
+            .iter()
+            .map(|c| (c.lo.clone(), c.hi.clone()))
+            .collect();
+        let group_streams =
+            &streams[g * exe.n_cubes..g * exe.n_cubes + group.len()];
+        for t in 0..cfg.n_trials {
+            let rng = RngCtr {
+                seed: split_seed(cfg.seed),
+                base: 0,
+                trial: t,
+            };
+            tasks.push(Task {
+                exe: exe.name.clone(),
+                group: g,
+                trial: t,
+                inputs: stratified_inputs(
+                    exe,
+                    rng,
+                    &job.program,
+                    &job.theta,
+                    &cube_vecs,
+                    group_streams,
+                )?,
+            });
+        }
+    }
+    *launches += tasks.len();
+
+    let sched = Scheduler {
+        n_workers: pool.n_devices,
+        max_retries: cfg.max_retries,
+    };
+    let registry = std::sync::Arc::clone(&pool.registry);
+    let outs = sched.run(
+        tasks,
+        fault,
+        metrics,
+        move |_w| DeviceRuntime::new(std::sync::Arc::clone(&registry)),
+        |dev: &DeviceRuntime, t: &Task| {
+            dev.execute(&t.exe, &t.inputs)
+                .map(|o| (t.group, t.trial, o.data))
+        },
+    )?;
+
+    let mut stats = vec![Welford::new(); cubes.len()];
+    for (g, _trial, data) in outs {
+        for ci in 0..exe.n_cubes {
+            let idx = g * exe.n_cubes + ci;
+            if idx >= cubes.len() {
+                break;
+            }
+            let mean = data[ci * 2] as f64 / exe.samples as f64;
+            let est = cubes[idx].volume() * mean;
+            stats[idx].push(est);
+        }
+    }
+    Ok(stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cube_split_widest_dims() {
+        let c = Cube { lo: vec![0.0, 0.0], hi: vec![4.0, 1.0] };
+        let kids = c.split(1);
+        assert_eq!(kids.len(), 2);
+        // splits x (wider), not y
+        assert_eq!(kids[0].hi[0], 2.0);
+        assert_eq!(kids[0].hi[1], 1.0);
+        let all = c.split(2);
+        assert_eq!(all.len(), 4);
+        let vol: f64 = all.iter().map(|c| c.volume()).sum();
+        assert!((vol - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cube_volume() {
+        let c = Cube { lo: vec![0.0, -1.0], hi: vec![0.5, 1.0] };
+        assert!((c.volume() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn config_validation() {
+        let cfg = NormalConfig { n_trials: 1, ..Default::default() };
+        assert_eq!(cfg.n_trials, 1); // integrate() rejects this at run time
+    }
+}

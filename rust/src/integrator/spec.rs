@@ -1,0 +1,153 @@
+//! Job definitions and estimate types shared by all integrators.
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::abi::{MAX_DIM, MAX_PARAM};
+use crate::expr::Expr;
+use crate::sampler::volume;
+use crate::vm::program::Program;
+
+/// One integral: an expression, its box domain, and parameter bindings.
+#[derive(Debug, Clone)]
+pub struct IntegralJob {
+    /// Original source text (for logs/reports).
+    pub source: String,
+    pub expr: Expr,
+    pub program: Program,
+    /// Per-dimension (lo, hi); length = integration dimensionality.
+    pub bounds: Vec<(f64, f64)>,
+    /// Parameter slot values (`p0`, `p1`, ... in the expression).
+    pub theta: Vec<f64>,
+}
+
+impl IntegralJob {
+    /// Parse + compile a parameter-free integrand.
+    pub fn parse(src: &str, bounds: &[(f64, f64)]) -> Result<Self> {
+        Self::with_params(src, bounds, &[])
+    }
+
+    /// Parse + compile with parameter bindings.
+    pub fn with_params(
+        src: &str,
+        bounds: &[(f64, f64)],
+        theta: &[f64],
+    ) -> Result<Self> {
+        let expr = Expr::parse(src).map_err(|e| anyhow!("{e}"))?;
+        let program = expr.compile().map_err(|e| anyhow!("{e}"))?;
+        if bounds.is_empty() || bounds.len() > MAX_DIM {
+            bail!("bounds must have 1..={MAX_DIM} dimensions");
+        }
+        for (d, (lo, hi)) in bounds.iter().enumerate() {
+            if !lo.is_finite() || !hi.is_finite() || hi <= lo {
+                bail!("bad bounds for x{}: [{lo}, {hi}]", d + 1);
+            }
+        }
+        if expr.dims() > bounds.len() {
+            bail!(
+                "expression reads x{} but only {} bounds given",
+                expr.dims(),
+                bounds.len()
+            );
+        }
+        if theta.len() > MAX_PARAM {
+            bail!("too many parameters: {} > {MAX_PARAM}", theta.len());
+        }
+        if expr.n_params() > theta.len() {
+            bail!(
+                "expression reads p{} but only {} parameters bound",
+                expr.n_params() - 1,
+                theta.len()
+            );
+        }
+        Ok(IntegralJob {
+            source: src.to_string(),
+            expr,
+            program,
+            bounds: bounds.to_vec(),
+            theta: theta.to_vec(),
+        })
+    }
+
+    /// Rebind parameters (used by the functional scan).
+    pub fn bind(&self, theta: &[f64]) -> Result<Self> {
+        if self.expr.n_params() > theta.len() || theta.len() > MAX_PARAM {
+            bail!("bad parameter binding of length {}", theta.len());
+        }
+        Ok(IntegralJob { theta: theta.to_vec(), ..self.clone() })
+    }
+
+    pub fn dims(&self) -> usize {
+        self.bounds.len()
+    }
+
+    pub fn volume(&self) -> f64 {
+        volume(&self.bounds)
+    }
+}
+
+/// A Monte-Carlo integral estimate.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Estimate {
+    pub value: f64,
+    /// One standard error of `value`.
+    pub std_err: f64,
+    pub n_samples: u64,
+}
+
+impl Estimate {
+    pub fn zero() -> Self {
+        Estimate { value: 0.0, std_err: 0.0, n_samples: 0 }
+    }
+
+    /// Is `truth` within z standard errors?
+    pub fn consistent_with(&self, truth: f64, z: f64) -> bool {
+        crate::stats::within_sigma(self.value, truth, self.std_err, z)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_ok() {
+        let j = IntegralJob::parse("x1*x2", &[(0.0, 1.0), (0.0, 2.0)])
+            .unwrap();
+        assert_eq!(j.dims(), 2);
+        assert_eq!(j.volume(), 2.0);
+        assert_eq!(j.theta.len(), 0);
+    }
+
+    #[test]
+    fn dims_validated() {
+        assert!(IntegralJob::parse("x3", &[(0.0, 1.0)]).is_err());
+        assert!(IntegralJob::parse("x1", &[]).is_err());
+        let nine = vec![(0.0, 1.0); 9];
+        assert!(IntegralJob::parse("x1", &nine).is_err());
+    }
+
+    #[test]
+    fn bounds_validated() {
+        assert!(IntegralJob::parse("x1", &[(1.0, 0.0)]).is_err());
+        assert!(IntegralJob::parse("x1", &[(0.0, f64::NAN)]).is_err());
+        assert!(IntegralJob::parse("x1", &[(2.0, 2.0)]).is_err());
+    }
+
+    #[test]
+    fn params_validated() {
+        assert!(IntegralJob::parse("p0*x1", &[(0.0, 1.0)]).is_err());
+        let j = IntegralJob::with_params("p0*x1", &[(0.0, 1.0)], &[3.0])
+            .unwrap();
+        assert_eq!(j.theta, vec![3.0]);
+        let j2 = j.bind(&[5.0]).unwrap();
+        assert_eq!(j2.theta, vec![5.0]);
+        assert!(j.bind(&[]).is_err());
+    }
+
+    #[test]
+    fn estimate_consistency() {
+        let e = Estimate { value: 1.02, std_err: 0.01, n_samples: 100 };
+        assert!(e.consistent_with(1.0, 3.0));
+        assert!(!e.consistent_with(1.1, 3.0));
+    }
+}

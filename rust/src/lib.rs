@@ -1,0 +1,79 @@
+//! # zmc — multi-function Monte-Carlo integration on (simulated) GPU clusters
+//!
+//! A rust + JAX + Pallas reproduction of **ZMCintegral-v5.1**
+//! (Cao & Zhang, Comput. Phys. Commun. 2021, 10.1016/j.cpc.2021.107994):
+//! a distributed Monte-Carlo integration framework whose v5.1 contribution
+//! is *multi-function integration* — evaluating ≥10³ integrands of
+//! different forms, dimensions and domains concurrently on GPU clusters.
+//!
+//! ## Architecture (three layers, python never at run time)
+//!
+//! * **L1/L2 (build time)** — Pallas kernels + jax compute graphs in
+//!   `python/compile/`, AOT-lowered once by `make artifacts` into
+//!   `artifacts/*.hlo.txt` plus a manifest.
+//! * **L3 (run time, this crate)** — the coordinator: loads artifacts via
+//!   the PJRT C API ([`runtime`]), compiles user expression strings to
+//!   bytecode ([`expr`], [`vm`]), schedules chunked launches over a
+//!   device pool with retry-on-failure ([`coordinator`]), and implements
+//!   the paper's three integration classes ([`integrator`]).
+//!
+//! ## The paper's three classes
+//!
+//! | paper API | here |
+//! |---|---|
+//! | `ZMCintegral_normal`         | [`integrator::normal`] — stratified sampling + heuristic tree search |
+//! | `ZMCintegral_functional`     | [`integrator::functional`] — one integrand over a parameter grid |
+//! | `ZMCintegral_multifunctions` | [`integrator::multifunctions`] — heterogeneous integrand batches |
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use std::sync::Arc;
+//! use zmc::prelude::*;
+//!
+//! let reg = Arc::new(Registry::load("artifacts").unwrap());
+//! let pool = DevicePool::new(&reg, 1).unwrap();
+//! let job = IntegralJob::parse("sin(x1)*x2", &[(0.0, 1.0), (0.0, 2.0)])
+//!     .unwrap();
+//! let est = zmc::integrator::multifunctions::integrate_one(
+//!     &pool, &job, 1 << 20, 42).unwrap();
+//! println!("I = {} ± {}", est.value, est.std_err);
+//! ```
+
+pub mod analytic;
+pub mod cluster;
+pub mod config;
+pub mod coordinator;
+pub mod expr;
+pub mod integrator;
+pub mod runtime;
+pub mod sampler;
+pub mod stats;
+pub mod util;
+pub mod vm;
+
+/// Convenience re-exports for the common workflow.
+pub mod prelude {
+    pub use crate::coordinator::scheduler::Scheduler;
+    pub use crate::expr::Expr;
+    pub use crate::integrator::spec::{Estimate, IntegralJob};
+    pub use crate::runtime::device::DevicePool;
+    pub use crate::runtime::registry::Registry;
+    pub use crate::vm::program::Program;
+}
+
+/// ABI constants — must match `python/compile/opcodes.py` and the
+/// `constants` block of `artifacts/manifest.json` (checked at registry
+/// load time and by `tests/opcode_abi.rs`).
+pub mod abi {
+    /// Manifest/bytecode ABI version understood by this build.
+    pub const ABI_VERSION: i64 = 1;
+    /// Padded sample dimensionality of every artifact.
+    pub const MAX_DIM: usize = 8;
+    /// Instructions per bytecode program (HALT-padded).
+    pub const MAX_PROG: usize = 48;
+    /// VM value-stack depth.
+    pub const STACK: usize = 16;
+    /// Per-function parameter slots.
+    pub const MAX_PARAM: usize = 16;
+}

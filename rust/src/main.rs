@@ -1,0 +1,433 @@
+//! `zmc` — CLI for the ZMCintegral-v5.1 reproduction.
+//!
+//! Subcommands:
+//! * `info` — list loaded artifacts and ABI constants
+//! * `integrate` — one integral from an expression string
+//! * `run` — a multifunction batch from a JSON job file
+//! * `scan` — parameter-grid sweep of one integrand
+//! * `normal` — stratified + tree-search integration
+//! * `fig1` — reproduce the paper's Fig. 1 table
+//! * `init-config` — write an example job file
+//!
+//! Examples:
+//! ```text
+//! zmc integrate --expr "sin(x1)*x2" --bounds "0,3.1416;0,1" --samples 1e6
+//! zmc fig1 --n 100 --samples 1000000 --trials 10 --workers 1
+//! zmc run --config job.json
+//! ```
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use zmc::analytic;
+use zmc::config::JobConfig;
+use zmc::integrator::harmonic::{self, HarmonicBatch};
+use zmc::integrator::multifunctions::{self, MultiConfig};
+use zmc::integrator::normal::{self, NormalConfig};
+use zmc::integrator::{functional, spec::IntegralJob};
+use zmc::runtime::device::DevicePool;
+use zmc::runtime::registry::Registry;
+use zmc::stats::Welford;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = args.first() else {
+        print_help();
+        return Ok(());
+    };
+    let flags = Flags::parse(&args[1..])?;
+    match cmd.as_str() {
+        "info" => cmd_info(&flags),
+        "integrate" => cmd_integrate(&flags),
+        "run" => cmd_run(&flags),
+        "scan" => cmd_scan(&flags),
+        "normal" => cmd_normal(&flags),
+        "fig1" => cmd_fig1(&flags),
+        "init-config" => cmd_init_config(&flags),
+        "help" | "--help" | "-h" => {
+            print_help();
+            Ok(())
+        }
+        other => bail!("unknown command '{other}' (try `zmc help`)"),
+    }
+}
+
+fn print_help() {
+    println!(
+        "zmc {} — multi-function Monte-Carlo integration (ZMCintegral-v5.1 \
+         reproduction)
+
+USAGE: zmc <command> [--flag value]...
+
+COMMANDS
+  info                          list artifacts + ABI
+  integrate --expr E --bounds B one integral
+  run --config FILE             multifunction batch from JSON job file
+  scan --expr E --bounds B --grid G   parameter sweep (p0 axis)
+  normal --expr E --bounds B    stratified + tree search
+  fig1                          reproduce paper Fig. 1
+  init-config PATH              write an example job file
+
+COMMON FLAGS
+  --artifacts DIR   artifact directory     [artifacts]
+  --workers N       simulated devices      [1]
+  --samples N       samples per function   [1048576]
+  --trials N        independent repeats    [1]
+  --seed N          RNG seed               [2021]
+  --bounds \"l,h;l,h\"  per-dimension bounds
+  --theta \"a,b,..\"  parameter bindings (p0, p1, ...)
+
+normal-specific: --divisions K --depth D --sigma-mult S
+fig1-specific:   --n N (series length)
+",
+        env!("CARGO_PKG_VERSION")
+    );
+}
+
+// ---------------------------------------------------------------- flags
+
+struct Flags(HashMap<String, String>);
+
+impl Flags {
+    fn parse(args: &[String]) -> Result<Flags> {
+        let mut m = HashMap::new();
+        let mut i = 0;
+        // allow one positional argument (used by init-config)
+        while i < args.len() {
+            if let Some(key) = args[i].strip_prefix("--") {
+                let val = args
+                    .get(i + 1)
+                    .ok_or_else(|| anyhow!("flag --{key} needs a value"))?;
+                m.insert(key.to_string(), val.clone());
+                i += 2;
+            } else {
+                m.insert("_pos".into(), args[i].clone());
+                i += 1;
+            }
+        }
+        Ok(Flags(m))
+    }
+
+    fn str(&self, key: &str) -> Option<&str> {
+        self.0.get(key).map(String::as_str)
+    }
+
+    fn usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.0.get(key) {
+            None => Ok(default),
+            Some(v) => parse_count(v)
+                .with_context(|| format!("bad --{key} '{v}'")),
+        }
+    }
+
+    fn f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.0.get(key) {
+            None => Ok(default),
+            Some(v) => {
+                v.parse().map_err(|_| anyhow!("bad --{key} '{v}'"))
+            }
+        }
+    }
+
+    fn u64(&self, key: &str, default: u64) -> Result<u64> {
+        Ok(self.usize(key, default as usize)? as u64)
+    }
+}
+
+/// Accept `1048576`, `1e6`, `2^20`, `1_000_000`.
+fn parse_count(s: &str) -> Result<usize> {
+    let s = s.replace('_', "");
+    if let Some((b, e)) = s.split_once('^') {
+        let b: u32 = b.parse()?;
+        let e: u32 = e.parse()?;
+        return Ok((b as usize).pow(e));
+    }
+    if s.contains('e') || s.contains('E') {
+        let f: f64 = s.parse()?;
+        return Ok(f as usize);
+    }
+    Ok(s.parse()?)
+}
+
+fn parse_bounds(s: &str) -> Result<Vec<(f64, f64)>> {
+    s.split(';')
+        .map(|pair| {
+            let (lo, hi) = pair
+                .split_once(',')
+                .ok_or_else(|| anyhow!("bounds dim '{pair}' not 'lo,hi'"))?;
+            Ok((lo.trim().parse()?, hi.trim().parse()?))
+        })
+        .collect()
+}
+
+fn parse_theta(flags: &Flags) -> Result<Vec<f64>> {
+    match flags.str("theta") {
+        None => Ok(vec![]),
+        Some(s) => s
+            .split(',')
+            .map(|v| {
+                v.trim().parse().map_err(|_| anyhow!("bad theta '{v}'"))
+            })
+            .collect(),
+    }
+}
+
+fn make_pool(flags: &Flags) -> Result<DevicePool> {
+    let dir = flags.str("artifacts").unwrap_or("artifacts");
+    let reg = Arc::new(Registry::load(dir)?);
+    DevicePool::new(&reg, flags.usize("workers", 1)?)
+}
+
+// ------------------------------------------------------------- commands
+
+fn cmd_info(flags: &Flags) -> Result<()> {
+    let dir = flags.str("artifacts").unwrap_or("artifacts");
+    let reg = Registry::load(dir)?;
+    println!("artifacts: {}", reg.dir.display());
+    println!(
+        "ABI: MAX_DIM={} MAX_PROG={} STACK={} MAX_PARAM={}",
+        zmc::abi::MAX_DIM,
+        zmc::abi::MAX_PROG,
+        zmc::abi::STACK,
+        zmc::abi::MAX_PARAM
+    );
+    for e in reg.iter() {
+        println!(
+            "  {:28} kind={:?} samples={} fns={} cubes={} dims={} tile={}",
+            e.name, e.kind, e.samples, e.n_fns, e.n_cubes, e.dims, e.tile
+        );
+    }
+    Ok(())
+}
+
+fn cmd_integrate(flags: &Flags) -> Result<()> {
+    let expr = flags.str("expr").context("--expr required")?;
+    let bounds =
+        parse_bounds(flags.str("bounds").context("--bounds required")?)?;
+    let theta = parse_theta(flags)?;
+    let job = IntegralJob::with_params(expr, &bounds, &theta)?;
+    let pool = make_pool(flags)?;
+    let samples = flags.usize("samples", 1 << 20)?;
+    let trials = flags.usize("trials", 1)? as u32;
+    let cfg = MultiConfig {
+        samples_per_fn: samples,
+        seed: flags.u64("seed", 2021)?,
+        ..Default::default()
+    };
+    let t0 = std::time::Instant::now();
+    let per_trial =
+        multifunctions::integrate_trials(&pool, &[job.clone()], &cfg, trials)?;
+    let dt = t0.elapsed();
+    let mut w = Welford::new();
+    for t in &per_trial {
+        w.push(t[0].value);
+    }
+    let e = per_trial[0][0];
+    println!("integral of: {expr}");
+    println!("  domain: {:?}   volume: {}", bounds, job.volume());
+    if trials > 1 {
+        println!(
+            "  I = {:.8} ± {:.3e} (std over {} trials; single-trial \
+             σ={:.3e})",
+            w.mean(),
+            w.std(),
+            trials,
+            e.std_err
+        );
+    } else {
+        println!("  I = {:.8} ± {:.3e}", e.value, e.std_err);
+    }
+    println!(
+        "  samples/fn: {}   wall: {:.3}s",
+        e.n_samples,
+        dt.as_secs_f64()
+    );
+    Ok(())
+}
+
+fn cmd_run(flags: &Flags) -> Result<()> {
+    let path = flags.str("config").context("--config required")?;
+    let cfg = JobConfig::from_file(path)?;
+    let dir = flags.str("artifacts").unwrap_or("artifacts");
+    let reg = Arc::new(Registry::load(dir)?);
+    let workers = flags.usize("workers", cfg.workers)?;
+    let pool = DevicePool::new(&reg, workers)?;
+    let mcfg = MultiConfig {
+        samples_per_fn: cfg.samples_per_fn,
+        seed: cfg.seed,
+        ..Default::default()
+    };
+    let t0 = std::time::Instant::now();
+    let per_trial = multifunctions::integrate_trials(
+        &pool, &cfg.jobs, &mcfg, cfg.trials,
+    )?;
+    let dt = t0.elapsed();
+    println!(
+        "{} functions x {} trials x {} samples on {} workers: {:.3}s",
+        cfg.jobs.len(),
+        cfg.trials,
+        cfg.samples_per_fn,
+        workers,
+        dt.as_secs_f64()
+    );
+    println!("{:>4}  {:>14}  {:>12}  expr", "fn", "mean", "std");
+    for (i, job) in cfg.jobs.iter().enumerate() {
+        let mut w = Welford::new();
+        for t in &per_trial {
+            w.push(t[i].value);
+        }
+        let spread =
+            if cfg.trials > 1 { w.std() } else { per_trial[0][i].std_err };
+        println!(
+            "{i:>4}  {:>14.8}  {:>12.3e}  {}",
+            w.mean(),
+            spread,
+            job.source
+        );
+    }
+    Ok(())
+}
+
+fn cmd_scan(flags: &Flags) -> Result<()> {
+    let expr = flags.str("expr").context("--expr required")?;
+    let bounds =
+        parse_bounds(flags.str("bounds").context("--bounds required")?)?;
+    // --grid "lo:hi:n" sweeps p0
+    let grid_spec = flags.str("grid").context("--grid lo:hi:n required")?;
+    let parts: Vec<&str> = grid_spec.split(':').collect();
+    if parts.len() != 3 {
+        bail!("--grid must be lo:hi:n");
+    }
+    let (lo, hi, n): (f64, f64, usize) =
+        (parts[0].parse()?, parts[1].parse()?, parts[2].parse()?);
+    let thetas: Vec<Vec<f64>> = functional::linspace(lo, hi, n)
+        .into_iter()
+        .map(|v| vec![v])
+        .collect();
+    let job = IntegralJob::with_params(expr, &bounds, &thetas[0])?;
+    let pool = make_pool(flags)?;
+    let cfg = MultiConfig {
+        samples_per_fn: flags.usize("samples", 1 << 18)?,
+        seed: flags.u64("seed", 2021)?,
+        ..Default::default()
+    };
+    let t0 = std::time::Instant::now();
+    let ests = functional::scan(&pool, &job, &thetas, &cfg)?;
+    println!(
+        "scan of {expr} over p0 in [{lo}, {hi}] ({n} points): {:.3}s",
+        t0.elapsed().as_secs_f64()
+    );
+    println!("{:>12}  {:>14}  {:>12}", "p0", "I", "σ");
+    for (t, e) in thetas.iter().zip(&ests) {
+        println!("{:>12.6}  {:>14.8}  {:>12.3e}", t[0], e.value, e.std_err);
+    }
+    Ok(())
+}
+
+fn cmd_normal(flags: &Flags) -> Result<()> {
+    let expr = flags.str("expr").context("--expr required")?;
+    let bounds =
+        parse_bounds(flags.str("bounds").context("--bounds required")?)?;
+    let theta = parse_theta(flags)?;
+    let job = IntegralJob::with_params(expr, &bounds, &theta)?;
+    let pool = make_pool(flags)?;
+    let cfg = NormalConfig {
+        initial_divisions: flags.usize("divisions", 4)?,
+        n_trials: flags.usize("trials", 5)? as u32,
+        sigma_mult: flags.f64("sigma-mult", 1.0)?,
+        max_depth: flags.usize("depth", 2)?,
+        seed: flags.u64("seed", 2021)?,
+        ..Default::default()
+    };
+    let t0 = std::time::Instant::now();
+    let r = normal::integrate(&pool, &job, &cfg)?;
+    println!("tree-search integral of: {expr}");
+    println!(
+        "  I = {:.8} ± {:.3e}  ({} samples, {:.3}s)",
+        r.estimate.value,
+        r.estimate.std_err,
+        r.estimate.n_samples,
+        t0.elapsed().as_secs_f64()
+    );
+    println!(
+        "  cubes/level: {:?}  flagged/level: {:?}  launches: {}",
+        r.cubes_per_level, r.flagged_per_level, r.launches
+    );
+    Ok(())
+}
+
+fn cmd_fig1(flags: &Flags) -> Result<()> {
+    let n = flags.usize("n", 100)? as u32;
+    let samples = flags.usize("samples", 1 << 20)?;
+    let trials = flags.usize("trials", 10)? as u32;
+    let pool = make_pool(flags)?;
+    let batch = HarmonicBatch::fig1(n);
+    let cfg = MultiConfig {
+        samples_per_fn: samples,
+        seed: flags.u64("seed", 2021)?,
+        ..Default::default()
+    };
+    let t0 = std::time::Instant::now();
+    let per_trial = harmonic::integrate_trials(&pool, &batch, &cfg, trials)?;
+    let dt = t0.elapsed();
+    println!(
+        "Fig. 1: {n} harmonics, {samples} samples, {trials} trials, \
+         {} workers — {:.2}s total ({:.2}s/trial)",
+        pool.n_devices,
+        dt.as_secs_f64(),
+        dt.as_secs_f64() / trials as f64
+    );
+    println!(
+        "{:>4}  {:>12}  {:>12}  {:>12}  {:>8}",
+        "n", "mean", "ΔF (std)", "analytic", "|z|"
+    );
+    let mut max_z = 0.0f64;
+    let mut covered = 0usize;
+    for i in 0..n as usize {
+        let mut w = Welford::new();
+        for t in &per_trial {
+            w.push(t[i].value);
+        }
+        let truth = batch.truth(i);
+        let sigma = if trials > 1 { w.std() } else { per_trial[0][i].std_err };
+        let z = if sigma > 0.0 {
+            (w.mean() - truth).abs() / sigma
+        } else {
+            0.0
+        };
+        max_z = max_z.max(z);
+        // Fig-1 band criterion: analytic line inside mean ± ΔF
+        if (w.mean() - truth).abs() <= sigma * 2.0 {
+            covered += 1;
+        }
+        println!(
+            "{:>4}  {:>12.6}  {:>12.3e}  {:>12.6}  {:>8.2}",
+            i + 1,
+            w.mean(),
+            sigma,
+            truth,
+            z
+        );
+    }
+    println!(
+        "coverage: {covered}/{n} inside ±2ΔF band; max |z| = {max_z:.2}"
+    );
+    let _ = analytic::fig1_truth(1); // keep analytic linked in release
+    Ok(())
+}
+
+fn cmd_init_config(flags: &Flags) -> Result<()> {
+    let path = flags.str("_pos").unwrap_or("job.json");
+    std::fs::write(path, JobConfig::example_json())?;
+    println!("wrote example job file to {path}");
+    Ok(())
+}

@@ -1,0 +1,396 @@
+//! Typed launch arguments for the three artifact kinds.
+//!
+//! A launch is described by a vector of [`Value`]s in manifest input
+//! order; [`super::device::DeviceRuntime::execute`] checks each against
+//! the executable's [`TensorSpec`](super::registry::TensorSpec) before
+//! building PJRT literals, so shape/dtype bugs surface as errors at the
+//! call site, not as garbage integrals.
+
+use anyhow::{bail, Result};
+
+use crate::abi::{MAX_PARAM, MAX_PROG};
+use crate::runtime::registry::{DType, ExeSpec, TensorSpec};
+use crate::vm::program::Program;
+
+/// One input tensor's payload.
+#[derive(Debug, Clone)]
+pub enum Value {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    U32(Vec<u32>),
+}
+
+impl Value {
+    pub fn dtype(&self) -> DType {
+        match self {
+            Value::F32(_) => DType::F32,
+            Value::I32(_) => DType::I32,
+            Value::U32(_) => DType::U32,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            Value::F32(v) => v.len(),
+            Value::I32(v) => v.len(),
+            Value::U32(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn check(&self, spec: &TensorSpec) -> Result<()> {
+        if self.dtype() != spec.dtype {
+            bail!(
+                "input '{}': dtype {:?} != manifest {:?}",
+                spec.name,
+                self.dtype(),
+                spec.dtype
+            );
+        }
+        if self.len() != spec.elements() {
+            bail!(
+                "input '{}': {} elements, manifest shape {:?} wants {}",
+                spec.name,
+                self.len(),
+                spec.shape,
+                spec.elements()
+            );
+        }
+        Ok(())
+    }
+}
+
+/// RNG addressing for one launch (chunked relaunches advance `base`).
+#[derive(Debug, Clone, Copy)]
+pub struct RngCtr {
+    pub seed: [u32; 2],
+    pub base: u32,
+    pub trial: u32,
+}
+
+/// Build inputs for a `harmonic` artifact.
+/// `k` is row-major `[n_fns][dims]`, padded to the exe's dims with 0
+/// (k=0 dims contribute nothing to the phase).
+#[allow(clippy::too_many_arguments)]
+pub fn harmonic_inputs(
+    exe: &ExeSpec,
+    rng: RngCtr,
+    stream: u32,
+    k: &[Vec<f64>],
+    a: &[f64],
+    b: &[f64],
+    lo: &[f64],
+    hi: &[f64],
+) -> Result<Vec<Value>> {
+    let (n, d) = (exe.n_fns, exe.dims);
+    if k.len() > n || a.len() != k.len() || b.len() != k.len() {
+        bail!("harmonic: {} functions > capacity {n}", k.len());
+    }
+    if lo.len() > d || lo.len() != hi.len() {
+        bail!("harmonic: bad bounds dims {}", lo.len());
+    }
+    let mut kf = vec![0f32; n * d];
+    for (i, row) in k.iter().enumerate() {
+        if row.len() > d {
+            bail!("harmonic: k row {i} has {} dims > {d}", row.len());
+        }
+        for (j, &v) in row.iter().enumerate() {
+            kf[i * d + j] = v as f32;
+        }
+    }
+    let pad = |v: &[f64], fill: f32, len: usize| {
+        let mut out = vec![fill; len];
+        for (o, &x) in out.iter_mut().zip(v) {
+            *o = x as f32;
+        }
+        out
+    };
+    // unused function slots keep a=b=0 so they contribute zeros;
+    // padded dims get [0,1) bounds (any non-degenerate range works —
+    // k=0 there makes the phase contribution vanish).
+    Ok(vec![
+        Value::U32(vec![rng.seed[0], rng.seed[1]]),
+        Value::U32(vec![rng.base, stream, rng.trial]),
+        Value::F32(kf),
+        Value::F32(pad(a, 0.0, n)),
+        Value::F32(pad(b, 0.0, n)),
+        Value::F32(pad(lo, 0.0, d)),
+        Value::F32(pad(hi, 1.0, d)),
+    ])
+}
+
+/// Per-function payload for a `vm_multi` launch row.
+#[derive(Debug, Clone)]
+pub struct VmFn {
+    pub program: Program,
+    pub theta: Vec<f64>,
+    pub bounds: Vec<(f64, f64)>,
+    /// Globally unique Philox stream for this integrand.
+    pub stream: u32,
+}
+
+/// Build inputs for a `vm_multi` artifact. Unused function slots get the
+/// constant-0 program over [0,1]^D.
+pub fn vm_multi_inputs(
+    exe: &ExeSpec,
+    rng: RngCtr,
+    fns: &[VmFn],
+) -> Result<Vec<Value>> {
+    let (n, d, p) = (exe.n_fns, exe.dims, MAX_PROG);
+    if fns.len() > n {
+        bail!("vm_multi: {} functions > capacity {n}", fns.len());
+    }
+    let mut streams = vec![0u32; n];
+    let mut plens = vec![0i32; n]; // 0 = null slot: VM loop skips it
+    let mut ops = vec![0i32; n * p]; // HALT == 0 → null program
+    let mut iargs = vec![0i32; n * p];
+    let mut fargs = vec![0f32; n * p];
+    let mut theta = vec![0f32; n * MAX_PARAM];
+    let mut lo = vec![0f32; n * d];
+    let mut hi = vec![1f32; n * d];
+    for (i, f) in fns.iter().enumerate() {
+        if f.bounds.len() > d {
+            bail!("vm_multi: fn {i} has {} dims > {d}", f.bounds.len());
+        }
+        if f.theta.len() > MAX_PARAM {
+            bail!("vm_multi: fn {i} has {} params", f.theta.len());
+        }
+        if f.program.dims > f.bounds.len() {
+            bail!(
+                "vm_multi: fn {i} reads x{} but only {} bounds given",
+                f.program.dims,
+                f.bounds.len()
+            );
+        }
+        streams[i] = f.stream;
+        plens[i] = f.program.len() as i32;
+        let (o, ia, fa) = f.program.device_rows();
+        ops[i * p..(i + 1) * p].copy_from_slice(&o);
+        iargs[i * p..(i + 1) * p].copy_from_slice(&ia);
+        fargs[i * p..(i + 1) * p].copy_from_slice(&fa);
+        for (j, &t) in f.theta.iter().enumerate() {
+            theta[i * MAX_PARAM + j] = t as f32;
+        }
+        for (j, &(l, h)) in f.bounds.iter().enumerate() {
+            lo[i * d + j] = l as f32;
+            hi[i * d + j] = h as f32;
+        }
+    }
+    Ok(vec![
+        Value::U32(vec![rng.seed[0], rng.seed[1]]),
+        Value::U32(vec![rng.base, rng.trial]),
+        Value::U32(streams),
+        Value::I32(plens),
+        Value::I32(ops),
+        Value::I32(iargs),
+        Value::F32(fargs),
+        Value::F32(theta),
+        Value::F32(lo),
+        Value::F32(hi),
+    ])
+}
+
+/// Build inputs for a `stratified` artifact: one shared program over a
+/// batch of cubes. Unused cube slots get a degenerate [0,0] box (their
+/// results are ignored by the caller).
+pub fn stratified_inputs(
+    exe: &ExeSpec,
+    rng: RngCtr,
+    program: &Program,
+    theta: &[f64],
+    cubes: &[(Vec<f64>, Vec<f64>)],
+    streams: &[u32],
+) -> Result<Vec<Value>> {
+    let (c, d) = (exe.n_cubes, exe.dims);
+    if cubes.len() > c {
+        bail!("stratified: {} cubes > capacity {c}", cubes.len());
+    }
+    if streams.len() != cubes.len() {
+        bail!("stratified: streams/cubes length mismatch");
+    }
+    let (ops, iargs, fargs) = program.device_rows();
+    let mut th = vec![0f32; MAX_PARAM];
+    for (j, &t) in theta.iter().enumerate() {
+        th[j] = t as f32;
+    }
+    let mut cl = vec![0f32; c * d];
+    let mut ch = vec![0f32; c * d];
+    let mut st = vec![0u32; c];
+    for (i, (clo, chi)) in cubes.iter().enumerate() {
+        if clo.len() > d || clo.len() != chi.len() {
+            bail!("stratified: cube {i} has bad dims");
+        }
+        st[i] = streams[i];
+        for j in 0..clo.len() {
+            cl[i * d + j] = clo[j] as f32;
+            ch[i * d + j] = chi[j] as f32;
+        }
+        // pad unused dims to the unit interval so the program (which by
+        // validation never reads them) samples harmlessly.
+        for j in clo.len()..d {
+            ch[i * d + j] = 1.0;
+        }
+    }
+    Ok(vec![
+        Value::U32(vec![rng.seed[0], rng.seed[1]]),
+        Value::U32(vec![rng.base, rng.trial]),
+        Value::U32(st),
+        Value::I32(vec![program.len() as i32]),
+        Value::I32(ops),
+        Value::I32(iargs),
+        Value::F32(fargs),
+        Value::F32(th),
+        Value::F32(cl),
+        Value::F32(ch),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::registry::ExeKind;
+
+    fn fake_exe(kind: ExeKind) -> ExeSpec {
+        ExeSpec {
+            name: "t".into(),
+            kind,
+            inputs: vec![],
+            outputs: vec![],
+            samples: 1024,
+            n_fns: 4,
+            n_cubes: 4,
+            dims: 8,
+            tile: 256,
+            hlo_text: String::new(),
+        }
+    }
+
+    #[test]
+    fn harmonic_padding() {
+        let exe = fake_exe(ExeKind::Harmonic);
+        let rng = RngCtr { seed: [1, 2], base: 3, trial: 4 };
+        let vals = harmonic_inputs(
+            &exe,
+            rng,
+            9,
+            &[vec![1.0, 2.0]],
+            &[0.5],
+            &[0.25],
+            &[0.0, 0.0],
+            &[1.0, 2.0],
+        )
+        .unwrap();
+        assert_eq!(vals.len(), 7);
+        match &vals[2] {
+            Value::F32(k) => {
+                assert_eq!(k.len(), 32);
+                assert_eq!(&k[..3], &[1.0, 2.0, 0.0]);
+                assert!(k[8..].iter().all(|&v| v == 0.0));
+            }
+            _ => panic!(),
+        }
+        match &vals[6] {
+            Value::F32(hi) => assert_eq!(&hi[..3], &[1.0, 2.0, 1.0]),
+            _ => panic!(),
+        }
+        match &vals[1] {
+            Value::U32(c) => assert_eq!(c, &vec![3, 9, 4]),
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn harmonic_rejects_overflow() {
+        let exe = fake_exe(ExeKind::Harmonic);
+        let rng = RngCtr { seed: [0, 0], base: 0, trial: 0 };
+        let k: Vec<Vec<f64>> = (0..5).map(|_| vec![1.0]).collect();
+        let a = vec![1.0; 5];
+        assert!(harmonic_inputs(&exe, rng, 0, &k, &a, &a, &[0.0], &[1.0])
+            .is_err());
+    }
+
+    #[test]
+    fn vm_multi_null_padding() {
+        let exe = fake_exe(ExeKind::VmMulti);
+        let rng = RngCtr { seed: [0, 0], base: 0, trial: 0 };
+        let f = VmFn {
+            program: crate::expr::Expr::parse("x1*x2")
+                .unwrap()
+                .compile()
+                .unwrap(),
+            theta: vec![],
+            bounds: vec![(0.0, 1.0), (0.0, 1.0)],
+            stream: 42,
+        };
+        let prog_len = f.program.len() as i32;
+        let vals = vm_multi_inputs(&exe, rng, &[f]).unwrap();
+        match &vals[4] {
+            Value::I32(ops) => {
+                assert_eq!(ops.len(), 4 * MAX_PROG);
+                // rows 1..4 are all HALT
+                assert!(ops[MAX_PROG..].iter().all(|&o| o == 0));
+            }
+            _ => panic!(),
+        }
+        match &vals[2] {
+            Value::U32(s) => assert_eq!(s, &vec![42, 0, 0, 0]),
+            _ => panic!(),
+        }
+        match &vals[3] {
+            // live slot carries its real length; null slots are 0
+            Value::I32(p) => assert_eq!(p, &vec![prog_len, 0, 0, 0]),
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn vm_multi_dim_mismatch_rejected() {
+        let exe = fake_exe(ExeKind::VmMulti);
+        let rng = RngCtr { seed: [0, 0], base: 0, trial: 0 };
+        let f = VmFn {
+            program: crate::expr::Expr::parse("x3").unwrap().compile().unwrap(),
+            theta: vec![],
+            bounds: vec![(0.0, 1.0)], // only 1 dim but program reads x3
+            stream: 0,
+        };
+        assert!(vm_multi_inputs(&exe, rng, &[f]).is_err());
+    }
+
+    #[test]
+    fn stratified_degenerate_padding() {
+        let exe = fake_exe(ExeKind::Stratified);
+        let rng = RngCtr { seed: [0, 0], base: 0, trial: 0 };
+        let prog =
+            crate::expr::Expr::parse("x1").unwrap().compile().unwrap();
+        let cubes = vec![(vec![0.0], vec![0.5])];
+        let vals =
+            stratified_inputs(&exe, rng, &prog, &[], &cubes, &[7]).unwrap();
+        match &vals[3] {
+            Value::I32(p) => assert_eq!(p, &vec![prog.len() as i32]),
+            _ => panic!(),
+        }
+        match &vals[9] {
+            Value::F32(ch) => {
+                assert_eq!(ch[0], 0.5);
+                assert_eq!(ch[1], 1.0); // padded dim
+                assert_eq!(ch[8], 0.0); // unused cube: degenerate
+            }
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn value_check() {
+        let spec = TensorSpec {
+            name: "x".into(),
+            dtype: DType::F32,
+            shape: vec![2, 3],
+        };
+        assert!(Value::F32(vec![0.0; 6]).check(&spec).is_ok());
+        assert!(Value::F32(vec![0.0; 5]).check(&spec).is_err());
+        assert!(Value::I32(vec![0; 6]).check(&spec).is_err());
+    }
+}

@@ -1,0 +1,17 @@
+//! PJRT runtime: load AOT artifacts and execute them from the rust
+//! coordinator (no python anywhere on this path).
+//!
+//! * [`registry`] — parses `artifacts/manifest.json`, holds the HLO text
+//!   of every executable plus its typed input/output signature. Shared
+//!   (`Arc`) and thread-safe: it contains no PJRT objects.
+//! * [`device`] — per-thread device handles. `PjRtClient` is `Rc`-based
+//!   (not `Send`), so every worker thread owns a [`device::DeviceRuntime`]
+//!   that lazily compiles executables from the shared registry; a
+//!   [`device::DevicePool`] describes the simulated multi-GPU topology.
+//! * [`launch`] — typed launch argument builders for the three artifact
+//!   kinds (`harmonic`, `vm_multi`, `stratified`) and the dtype-checked
+//!   literal conversion.
+
+pub mod device;
+pub mod launch;
+pub mod registry;

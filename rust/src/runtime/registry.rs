@@ -1,0 +1,344 @@
+//! Artifact registry: manifest.json + HLO texts, validated at load time.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::abi;
+use crate::util::json::Json;
+
+/// Element dtype of an artifact input/output.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+    U32,
+}
+
+impl DType {
+    fn parse(s: &str) -> Result<DType> {
+        match s {
+            "f32" => Ok(DType::F32),
+            "i32" => Ok(DType::I32),
+            "u32" => Ok(DType::U32),
+            other => bail!("unsupported dtype '{other}' in manifest"),
+        }
+    }
+}
+
+/// One declared input/output tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub dtype: DType,
+    pub shape: Vec<usize>,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// Artifact kind — which launch-argument builder applies.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExeKind {
+    Harmonic,
+    VmMulti,
+    Stratified,
+}
+
+/// Metadata for one executable (one `.hlo.txt`).
+#[derive(Debug, Clone)]
+pub struct ExeSpec {
+    pub name: String,
+    pub kind: ExeKind,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    /// Samples drawn per launch (per function for vm_multi/harmonic,
+    /// per cube for stratified).
+    pub samples: usize,
+    /// Functions per launch (harmonic/vm_multi) — 0 for stratified.
+    pub n_fns: usize,
+    /// Cubes per launch (stratified) — 0 otherwise.
+    pub n_cubes: usize,
+    pub dims: usize,
+    pub tile: usize,
+    /// HLO text (compiled per worker thread on first use).
+    pub hlo_text: String,
+}
+
+/// The loaded artifact set. `Send + Sync`; holds no PJRT state.
+#[derive(Debug)]
+pub struct Registry {
+    pub dir: PathBuf,
+    exes: BTreeMap<String, ExeSpec>,
+}
+
+impl Registry {
+    /// Load and validate `dir/manifest.json` plus every HLO file it names.
+    pub fn load<P: AsRef<Path>>(dir: P) -> Result<Registry> {
+        let dir = dir.as_ref().to_path_buf();
+        let mpath = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&mpath)
+            .with_context(|| format!("reading {}", mpath.display()))?;
+        let manifest = Json::parse(&text)
+            .map_err(|e| anyhow!("parsing {}: {e}", mpath.display()))?;
+
+        let consts = manifest
+            .get("constants")
+            .context("manifest missing 'constants'")?;
+        check_const(consts, "abi_version", abi::ABI_VERSION)?;
+        check_const(consts, "MAX_DIM", abi::MAX_DIM as i64)?;
+        check_const(consts, "MAX_PROG", abi::MAX_PROG as i64)?;
+        check_const(consts, "STACK", abi::STACK as i64)?;
+        check_const(consts, "MAX_PARAM", abi::MAX_PARAM as i64)?;
+
+        let mut exes = BTreeMap::new();
+        let table = manifest
+            .get("executables")
+            .and_then(Json::as_obj)
+            .context("manifest missing 'executables'")?;
+        for (name, entry) in table {
+            let spec = parse_exe(&dir, name, entry)
+                .with_context(|| format!("executable '{name}'"))?;
+            exes.insert(name.clone(), spec);
+        }
+        if exes.is_empty() {
+            bail!("manifest has no executables");
+        }
+        Ok(Registry { dir, exes })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&ExeSpec> {
+        self.exes
+            .get(name)
+            .ok_or_else(|| anyhow!("no executable '{name}' in registry"))
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &str> {
+        self.exes.keys().map(String::as_str)
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &ExeSpec> {
+        self.exes.values()
+    }
+
+    /// Pick the executable of `kind` that fits the workload best:
+    /// dims must cover `want_dims`; prefer the *smallest* covering dims
+    /// (in-kernel RNG cost is one Philox block per 4 dims per sample),
+    /// then the smallest per-launch capacity ≥ `want_samples` (else the
+    /// largest available).
+    pub fn pick(
+        &self,
+        kind: ExeKind,
+        want_samples: usize,
+        want_dims: usize,
+    ) -> Result<&ExeSpec> {
+        let mut best: Option<&ExeSpec> = None;
+        for e in self
+            .exes
+            .values()
+            .filter(|e| e.kind == kind && e.dims >= want_dims)
+        {
+            best = Some(match best {
+                None => e,
+                Some(cur) => {
+                    if e.dims != cur.dims {
+                        if e.dims < cur.dims { e } else { cur }
+                    } else {
+                        let fits = |x: &ExeSpec| x.samples >= want_samples;
+                        match (fits(cur), fits(e)) {
+                            (true, true) => {
+                                if e.samples < cur.samples { e } else { cur }
+                            }
+                            (true, false) => cur,
+                            (false, true) => e,
+                            (false, false) => {
+                                if e.samples > cur.samples { e } else { cur }
+                            }
+                        }
+                    }
+                }
+            });
+        }
+        best.ok_or_else(|| {
+            anyhow!("no executable of kind {kind:?} with dims >= {want_dims}")
+        })
+    }
+}
+
+fn check_const(consts: &Json, key: &str, want: i64) -> Result<()> {
+    let got = consts
+        .get(key)
+        .and_then(Json::as_i64)
+        .with_context(|| format!("manifest constants missing '{key}'"))?;
+    if got != want {
+        bail!(
+            "ABI mismatch: manifest {key}={got}, this build expects {want} \
+             — re-run `make artifacts`"
+        );
+    }
+    Ok(())
+}
+
+fn parse_tensor(j: &Json) -> Result<TensorSpec> {
+    let name = j
+        .get("name")
+        .and_then(Json::as_str)
+        .unwrap_or("out")
+        .to_string();
+    let dtype = DType::parse(
+        j.get("dtype")
+            .and_then(Json::as_str)
+            .context("tensor missing dtype")?,
+    )?;
+    let shape = j
+        .get("shape")
+        .and_then(Json::as_arr)
+        .context("tensor missing shape")?
+        .iter()
+        .map(|d| d.as_usize().context("bad shape dim"))
+        .collect::<Result<Vec<_>>>()?;
+    Ok(TensorSpec { name, dtype, shape })
+}
+
+fn parse_exe(dir: &Path, name: &str, entry: &Json) -> Result<ExeSpec> {
+    let kind = match entry
+        .get("kind")
+        .and_then(Json::as_str)
+        .context("missing kind")?
+    {
+        "harmonic" => ExeKind::Harmonic,
+        "vm_multi" => ExeKind::VmMulti,
+        "stratified" => ExeKind::Stratified,
+        other => bail!("unknown executable kind '{other}'"),
+    };
+    let get_n = |key: &str| -> usize {
+        entry.get(key).and_then(Json::as_usize).unwrap_or(0)
+    };
+    let file = entry
+        .get("file")
+        .and_then(Json::as_str)
+        .context("missing file")?;
+    let hlo_path = dir.join(file);
+    let hlo_text = std::fs::read_to_string(&hlo_path)
+        .with_context(|| format!("reading {}", hlo_path.display()))?;
+    if !hlo_text.contains("HloModule") {
+        bail!("{} does not look like HLO text", hlo_path.display());
+    }
+    let inputs = entry
+        .get("inputs")
+        .and_then(Json::as_arr)
+        .context("missing inputs")?
+        .iter()
+        .map(parse_tensor)
+        .collect::<Result<Vec<_>>>()?;
+    let outputs = entry
+        .get("outputs")
+        .and_then(Json::as_arr)
+        .context("missing outputs")?
+        .iter()
+        .map(parse_tensor)
+        .collect::<Result<Vec<_>>>()?;
+    let spec = ExeSpec {
+        name: name.to_string(),
+        kind,
+        inputs,
+        outputs,
+        samples: get_n("samples"),
+        n_fns: get_n("n_fns"),
+        n_cubes: get_n("n_cubes"),
+        dims: get_n("dims"),
+        tile: get_n("tile"),
+        hlo_text,
+    };
+    if spec.samples == 0 || spec.dims == 0 {
+        bail!("missing samples/dims metadata");
+    }
+    Ok(spec)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> PathBuf {
+        Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn have_artifacts() -> bool {
+        artifacts_dir().join("manifest.json").exists()
+    }
+
+    #[test]
+    fn loads_shipped_manifest() {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let reg = Registry::load(artifacts_dir()).unwrap();
+        assert!(reg.names().count() >= 6);
+        let h = reg.get("harmonic_s65536_n128").unwrap();
+        assert_eq!(h.kind, ExeKind::Harmonic);
+        assert_eq!(h.samples, 65536);
+        assert_eq!(h.n_fns, 128);
+        assert_eq!(h.inputs.len(), 7);
+        assert_eq!(h.outputs[0].shape, vec![2, 128]);
+        assert!(h.hlo_text.contains("HloModule"));
+    }
+
+    #[test]
+    fn pick_prefers_smallest_fitting() {
+        if !have_artifacts() {
+            return;
+        }
+        let reg = Registry::load(artifacts_dir()).unwrap();
+        let small = reg.pick(ExeKind::Harmonic, 1000, 4).unwrap();
+        assert_eq!(small.samples, 8192);
+        let big = reg.pick(ExeKind::Harmonic, 50_000, 4).unwrap();
+        assert_eq!(big.samples, 65536);
+        let over = reg.pick(ExeKind::Harmonic, 10_000_000, 4).unwrap();
+        assert_eq!(over.samples, 65536);
+    }
+
+    #[test]
+    fn pick_is_dims_aware() {
+        if !have_artifacts() {
+            return;
+        }
+        let reg = Registry::load(artifacts_dir()).unwrap();
+        // dims<=4 jobs get the cheaper d4 artifact
+        let d4 = reg.pick(ExeKind::VmMulti, 16384, 3).unwrap();
+        assert_eq!(d4.dims, 4, "{}", d4.name);
+        // dims>4 jobs fall back to the d8 artifact
+        let d8 = reg.pick(ExeKind::VmMulti, 16384, 6).unwrap();
+        assert_eq!(d8.dims, 8, "{}", d8.name);
+        // impossible dims requirement errors
+        assert!(reg.pick(ExeKind::VmMulti, 16384, 9).is_err());
+    }
+
+    #[test]
+    fn missing_dir_errors() {
+        assert!(Registry::load("/nonexistent/path").is_err());
+    }
+
+    #[test]
+    fn abi_mismatch_detected() {
+        let dir = std::env::temp_dir().join(format!(
+            "zmc_reg_test_{}",
+            std::process::id()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"constants":{"abi_version":99,"MAX_DIM":8,"MAX_PROG":48,
+                "STACK":16,"MAX_PARAM":16},"executables":{}}"#,
+        )
+        .unwrap();
+        let err = Registry::load(&dir).unwrap_err().to_string();
+        assert!(err.contains("ABI mismatch"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

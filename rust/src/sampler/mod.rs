@@ -1,0 +1,117 @@
+//! Sample generation: the rust twin of `python/compile/philox.py`.
+//!
+//! The device kernels generate their own samples in-kernel; this module
+//! exists so the *CPU baseline* and the test suite draw bit-identical
+//! sample streams, and so the coordinator can reason about counter
+//! chunking (`[base, base + samples)` ranges) without ever materializing
+//! samples.
+
+pub mod halton;
+pub mod philox;
+
+pub use philox::{philox4x32, u01, Philox};
+
+use crate::abi::MAX_DIM;
+
+/// One logical sample stream: `(seed, stream, trial)` — identical
+/// addressing to the device kernels. `stream` distinguishes functions /
+/// cubes / parameter points, `trial` independent repeats.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StreamKey {
+    pub seed: [u32; 2],
+    pub stream: u32,
+    pub trial: u32,
+}
+
+impl StreamKey {
+    pub fn new(seed: u64, stream: u32, trial: u32) -> Self {
+        StreamKey {
+            seed: [(seed & 0xFFFF_FFFF) as u32, (seed >> 32) as u32],
+            stream,
+            trial,
+        }
+    }
+
+    /// The `dims` uniforms of sample `idx`, in [0, 1).
+    ///
+    /// Layout contract (must match `philox.uniform_tile` in python):
+    /// dimension `d` comes from lane `d % 4` of the Philox block with
+    /// counter `(idx, d / 4, stream, trial)`.
+    pub fn point(&self, idx: u32, dims: usize) -> [f32; MAX_DIM] {
+        debug_assert!(dims <= MAX_DIM);
+        let mut out = [0f32; MAX_DIM];
+        let mut d = 0;
+        let mut j = 0u32;
+        while d < dims {
+            let block = philox4x32(
+                [idx, j, self.stream, self.trial],
+                [self.seed[0], self.seed[1]],
+            );
+            for lane in 0..4 {
+                if d < dims {
+                    out[d] = u01(block[lane]);
+                    d += 1;
+                }
+            }
+            j += 1;
+        }
+        out
+    }
+}
+
+/// Affine map from the unit cube to a box, dimension-wise.
+#[inline]
+pub fn scale_point(u: &[f32], lo: &[f64], hi: &[f64], out: &mut [f64]) {
+    for d in 0..out.len() {
+        out[d] = lo[d] + (hi[d] - lo[d]) * u[d] as f64;
+    }
+}
+
+/// Volume of a box given per-dimension bounds.
+pub fn volume(bounds: &[(f64, f64)]) -> f64 {
+    bounds.iter().map(|(lo, hi)| hi - lo).product()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn point_layout_matches_block_lanes() {
+        let k = StreamKey::new(0x0000_0002_0000_0001, 7, 3);
+        let p = k.point(8, 8);
+        let b0 = philox4x32([8, 0, 7, 3], [1, 2]);
+        let b1 = philox4x32([8, 1, 7, 3], [1, 2]);
+        for lane in 0..4 {
+            assert_eq!(p[lane], u01(b0[lane]));
+            assert_eq!(p[4 + lane], u01(b1[lane]));
+        }
+    }
+
+    #[test]
+    fn point_partial_dims() {
+        let k = StreamKey::new(42, 0, 0);
+        let p3 = k.point(5, 3);
+        let p8 = k.point(5, 8);
+        assert_eq!(&p3[..3], &p8[..3]);
+        assert_eq!(p3[3..], [0f32; 5]); // unset dims stay zero
+    }
+
+    #[test]
+    fn scale_and_volume() {
+        let u = [0.5f32, 0.0, 1.0];
+        let mut out = [0f64; 3];
+        scale_point(&u, &[-1.0, 2.0, 0.0], &[1.0, 4.0, 10.0], &mut out);
+        assert_eq!(out, [0.0, 2.0, 10.0]);
+        assert_eq!(volume(&[(-1.0, 1.0), (2.0, 4.0)]), 4.0);
+    }
+
+    #[test]
+    fn streams_differ_trials_differ() {
+        let a = StreamKey::new(9, 1, 0).point(0, 4);
+        let b = StreamKey::new(9, 2, 0).point(0, 4);
+        let c = StreamKey::new(9, 1, 1).point(0, 4);
+        assert_ne!(a, b);
+        assert_ne!(a, c);
+    }
+}

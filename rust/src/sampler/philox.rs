@@ -1,0 +1,178 @@
+//! Philox-4x32-10 counter RNG — bit-exact twin of the device kernels.
+//!
+//! Verified against the Random123 known-answer vectors in
+//! `spec/philox_kat.txt` (the same file the python tests parse) and,
+//! transitively, against the Pallas kernels through the python suite.
+
+const M0: u32 = 0xD251_1F53;
+const M1: u32 = 0xCD9E_8D57;
+const W0: u32 = 0x9E37_79B9;
+const W1: u32 = 0xBB67_AE85;
+const ROUNDS: u32 = 10;
+
+#[inline(always)]
+fn mulhilo(a: u32, b: u32) -> (u32, u32) {
+    let p = a as u64 * b as u64;
+    ((p >> 32) as u32, p as u32)
+}
+
+/// One Philox-4x32-10 block: 128-bit counter + 64-bit key -> 128 bits.
+#[inline]
+pub fn philox4x32(ctr: [u32; 4], key: [u32; 2]) -> [u32; 4] {
+    let [mut c0, mut c1, mut c2, mut c3] = ctr;
+    let [mut k0, mut k1] = key;
+    for r in 0..ROUNDS {
+        if r > 0 {
+            k0 = k0.wrapping_add(W0);
+            k1 = k1.wrapping_add(W1);
+        }
+        let (hi0, lo0) = mulhilo(M0, c0);
+        let (hi1, lo1) = mulhilo(M1, c2);
+        (c0, c1, c2, c3) = (hi1 ^ c1 ^ k0, lo1, hi0 ^ c3 ^ k1, lo0);
+    }
+    [c0, c1, c2, c3]
+}
+
+/// Map a u32 to f32 uniform in [0,1) using the top 24 bits (same mapping
+/// as the kernels: exactly representable, never returns 1.0).
+#[inline(always)]
+pub fn u01(x: u32) -> f32 {
+    (x >> 8) as f32 * (1.0 / 16_777_216.0)
+}
+
+/// Buffered iterator over one stream's uniforms — convenience for CPU
+/// baselines that consume dimension-major samples.
+pub struct Philox {
+    key: [u32; 2],
+    stream: u32,
+    trial: u32,
+    idx: u32,
+    block_j: u32,
+    buf: [u32; 4],
+    lane: usize,
+}
+
+impl Philox {
+    pub fn new(seed: u64, stream: u32, trial: u32) -> Self {
+        Philox {
+            key: [(seed & 0xFFFF_FFFF) as u32, (seed >> 32) as u32],
+            stream,
+            trial,
+            idx: 0,
+            block_j: 0,
+            buf: [0; 4],
+            lane: 4, // force refill on first draw
+        }
+    }
+
+    /// Position at sample `idx` (used by chunked consumers).
+    pub fn seek(&mut self, idx: u32) {
+        self.idx = idx;
+        self.block_j = 0;
+        self.lane = 4;
+    }
+
+    /// Next uniform of the *current sample*; call `advance()` to move to
+    /// the next sample (resetting the dimension cursor).
+    pub fn next_dim(&mut self) -> f32 {
+        if self.lane == 4 {
+            self.buf = philox4x32(
+                [self.idx, self.block_j, self.stream, self.trial],
+                self.key,
+            );
+            self.block_j += 1;
+            self.lane = 0;
+        }
+        let v = u01(self.buf[self.lane]);
+        self.lane += 1;
+        v
+    }
+
+    pub fn advance(&mut self) {
+        self.idx = self.idx.wrapping_add(1);
+        self.block_j = 0;
+        self.lane = 4;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::Path;
+
+    fn load_kat() -> Vec<([u32; 4], [u32; 2], [u32; 4])> {
+        let spec = Path::new(env!("CARGO_MANIFEST_DIR"))
+            .join("spec/philox_kat.txt");
+        let text = std::fs::read_to_string(spec).expect("spec/philox_kat.txt");
+        let mut rows = Vec::new();
+        for line in text.lines() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let (ins, outs) = line.split_once("->").unwrap();
+            let w: Vec<u32> = ins
+                .split_whitespace()
+                .map(|s| u32::from_str_radix(s, 16).unwrap())
+                .collect();
+            let o: Vec<u32> = outs
+                .split_whitespace()
+                .map(|s| u32::from_str_radix(s, 16).unwrap())
+                .collect();
+            rows.push((
+                [w[0], w[1], w[2], w[3]],
+                [w[4], w[5]],
+                [o[0], o[1], o[2], o[3]],
+            ));
+        }
+        assert!(!rows.is_empty());
+        rows
+    }
+
+    #[test]
+    fn known_answer_vectors() {
+        for (ctr, key, want) in load_kat() {
+            assert_eq!(philox4x32(ctr, key), want);
+        }
+    }
+
+    #[test]
+    fn u01_range_and_edges() {
+        assert_eq!(u01(0), 0.0);
+        assert!(u01(u32::MAX) < 1.0);
+        assert!((u01(1 << 31) - 0.5).abs() < 1e-7);
+    }
+
+    #[test]
+    fn iterator_matches_raw_blocks() {
+        let mut p = Philox::new(0x0000_0002_0000_0001, 5, 1);
+        p.seek(100);
+        let b0 = philox4x32([100, 0, 5, 1], [1, 2]);
+        let b1 = philox4x32([100, 1, 5, 1], [1, 2]);
+        for lane in 0..4 {
+            assert_eq!(p.next_dim(), u01(b0[lane]));
+        }
+        assert_eq!(p.next_dim(), u01(b1[0]));
+        p.advance();
+        let b = philox4x32([101, 0, 5, 1], [1, 2]);
+        assert_eq!(p.next_dim(), u01(b[0]));
+    }
+
+    #[test]
+    fn moments_sane() {
+        let mut p = Philox::new(77, 0, 0);
+        let n = 1 << 16;
+        let mut sum = 0f64;
+        let mut sq = 0f64;
+        for _ in 0..n {
+            let v = p.next_dim() as f64;
+            sum += v;
+            sq += v * v;
+            p.advance();
+        }
+        let mean = sum / n as f64;
+        let var = sq / n as f64 - mean * mean;
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+        assert!((var - 1.0 / 12.0).abs() < 0.005, "var={var}");
+    }
+}

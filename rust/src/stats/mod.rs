@@ -1,0 +1,224 @@
+//! Accumulators and statistics for Monte-Carlo estimates.
+//!
+//! Device launches return raw `(Σf, Σf²)` pairs; the coordinator folds
+//! them into [`MomentSum`]s (exact mergeable moments), converts to
+//! integral estimates with volume scaling, and combines independent
+//! repeats with [`Welford`] (numerically stable running mean/variance).
+//! Merge operations are associative and commutative — the scheduler
+//! property tests rely on this to prove worker-count invariance.
+
+/// Mergeable first/second moment accumulator for one integrand:
+/// `n` samples, `Σf`, `Σf²` (f64 to absorb many f32 partials safely).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct MomentSum {
+    pub n: u64,
+    pub sum: f64,
+    pub sumsq: f64,
+}
+
+impl MomentSum {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn from_device(n: u64, sum: f32, sumsq: f32) -> Self {
+        MomentSum { n, sum: sum as f64, sumsq: sumsq as f64 }
+    }
+
+    pub fn push(&mut self, v: f64) {
+        self.n += 1;
+        self.sum += v;
+        self.sumsq += v * v;
+    }
+
+    pub fn merge(&mut self, other: &MomentSum) {
+        self.n += other.n;
+        self.sum += other.sum;
+        self.sumsq += other.sumsq;
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.sum / self.n as f64
+    }
+
+    /// Population variance of f (clamped at 0 against f32 cancellation).
+    pub fn variance(&self) -> f64 {
+        let m = self.mean();
+        (self.sumsq / self.n as f64 - m * m).max(0.0)
+    }
+
+    /// MC integral estimate over a domain of volume `vol`:
+    /// `I ≈ V·mean(f)`, `σ_I = V·sqrt(var(f)/n)`.
+    pub fn estimate(&self, vol: f64) -> (f64, f64) {
+        let value = vol * self.mean();
+        let std_err = vol * (self.variance() / self.n as f64).sqrt();
+        (value, std_err)
+    }
+}
+
+/// Welford running mean/variance over a stream of values (used for the
+/// paper's "10 independent evaluations" repeat statistics).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Welford {
+    pub n: u64,
+    mean: f64,
+    m2: f64,
+}
+
+impl Welford {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, v: f64) {
+        self.n += 1;
+        let d = v - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (v - self.mean);
+    }
+
+    /// Chan et al. parallel merge — associative up to fp rounding.
+    pub fn merge(&mut self, o: &Welford) {
+        if o.n == 0 {
+            return;
+        }
+        if self.n == 0 {
+            *self = *o;
+            return;
+        }
+        let n = (self.n + o.n) as f64;
+        let d = o.mean - self.mean;
+        self.mean += d * o.n as f64 / n;
+        self.m2 += o.m2 + d * d * (self.n as f64 * o.n as f64) / n;
+        self.n += o.n;
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    /// Sample (n-1) variance.
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            (self.m2 / (self.n - 1) as f64).max(0.0)
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.variance().sqrt()
+    }
+
+    /// Standard error of the mean.
+    pub fn sem(&self) -> f64 {
+        if self.n == 0 {
+            f64::INFINITY
+        } else {
+            (self.variance() / self.n as f64).sqrt()
+        }
+    }
+}
+
+/// Two-sided z test helper: does `value` lie within `z`·σ of `truth`?
+pub fn within_sigma(value: f64, truth: f64, sigma: f64, z: f64) -> bool {
+    // an exactly-zero sigma (constant integrand) requires exact match
+    if sigma == 0.0 {
+        return (value - truth).abs() < 1e-12;
+    }
+    (value - truth).abs() <= z * sigma
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn moments_basic() {
+        let mut m = MomentSum::new();
+        for v in [1.0, 2.0, 3.0, 4.0] {
+            m.push(v);
+        }
+        assert_eq!(m.n, 4);
+        assert_eq!(m.mean(), 2.5);
+        assert!((m.variance() - 1.25).abs() < 1e-12);
+        let (val, err) = m.estimate(2.0);
+        assert_eq!(val, 5.0);
+        assert!((err - 2.0 * (1.25f64 / 4.0).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn moment_merge_equals_concat() {
+        let vals: Vec<f64> = (0..100).map(|i| (i as f64 * 0.37).sin()).collect();
+        let mut whole = MomentSum::new();
+        vals.iter().for_each(|&v| whole.push(v));
+        let mut a = MomentSum::new();
+        let mut b = MomentSum::new();
+        vals[..33].iter().for_each(|&v| a.push(v));
+        vals[33..].iter().for_each(|&v| b.push(v));
+        a.merge(&b);
+        assert_eq!(a.n, whole.n);
+        assert!((a.sum - whole.sum).abs() < 1e-9);
+        assert!((a.sumsq - whole.sumsq).abs() < 1e-9);
+    }
+
+    #[test]
+    fn welford_matches_two_pass() {
+        let vals: Vec<f64> =
+            (0..1000).map(|i| ((i * 2654435761u64) % 1000) as f64).collect();
+        let mut w = Welford::new();
+        vals.iter().for_each(|&v| w.push(v));
+        let mean = vals.iter().sum::<f64>() / vals.len() as f64;
+        let var = vals.iter().map(|v| (v - mean).powi(2)).sum::<f64>()
+            / (vals.len() - 1) as f64;
+        assert!((w.mean() - mean).abs() < 1e-9);
+        assert!((w.variance() - var).abs() / var < 1e-12);
+    }
+
+    #[test]
+    fn welford_merge_associative() {
+        let vals: Vec<f64> = (0..300).map(|i| (i as f64).sqrt()).collect();
+        let mut whole = Welford::new();
+        vals.iter().for_each(|&v| whole.push(v));
+        // ((a+b)+c) vs (a+(b+c))
+        let parts: Vec<Welford> = vals
+            .chunks(100)
+            .map(|c| {
+                let mut w = Welford::new();
+                c.iter().for_each(|&v| w.push(v));
+                w
+            })
+            .collect();
+        let mut left = parts[0];
+        left.merge(&parts[1]);
+        left.merge(&parts[2]);
+        let mut bc = parts[1];
+        bc.merge(&parts[2]);
+        let mut right = parts[0];
+        right.merge(&bc);
+        assert!((left.mean() - right.mean()).abs() < 1e-10);
+        assert!((left.variance() - right.variance()).abs() < 1e-9);
+        assert!((left.mean() - whole.mean()).abs() < 1e-10);
+    }
+
+    #[test]
+    fn welford_edge_cases() {
+        let w = Welford::new();
+        assert_eq!(w.variance(), 0.0);
+        assert!(w.sem().is_infinite());
+        let mut one = Welford::new();
+        one.push(5.0);
+        assert_eq!(one.mean(), 5.0);
+        assert_eq!(one.variance(), 0.0);
+        let mut empty_merge = Welford::new();
+        empty_merge.merge(&one);
+        assert_eq!(empty_merge.mean(), 5.0);
+    }
+
+    #[test]
+    fn sigma_test() {
+        assert!(within_sigma(1.05, 1.0, 0.01, 6.0));
+        assert!(!within_sigma(1.2, 1.0, 0.01, 6.0));
+        assert!(within_sigma(1.0, 1.0, 0.0, 6.0));
+    }
+}

@@ -1,0 +1,135 @@
+//! Hand-rolled benchmark harness (offline stand-in for `criterion`).
+//!
+//! Each `cargo bench` target is a plain binary (`harness = false`) that
+//! uses [`Bench`] to time closures with warmup + repeated measurement and
+//! print a stable, parseable report: one `row:`-prefixed line per
+//! configuration, matching the tables/figures in EXPERIMENTS.md.
+
+use std::time::Instant;
+
+/// Timing summary over `reps` measured runs.
+#[derive(Debug, Clone, Copy)]
+pub struct Timing {
+    pub mean_s: f64,
+    pub std_s: f64,
+    pub min_s: f64,
+    pub reps: usize,
+}
+
+impl Timing {
+    pub fn per(&self, n: usize) -> f64 {
+        self.mean_s / n as f64
+    }
+}
+
+/// Time `f` (warmup runs then measured reps). Returns per-run stats.
+pub fn time<F: FnMut()>(warmup: usize, reps: usize, mut f: F) -> Timing {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    let mean = samples.iter().sum::<f64>() / reps as f64;
+    let var = samples.iter().map(|s| (s - mean).powi(2)).sum::<f64>()
+        / reps.max(2) as f64;
+    let min = samples.iter().cloned().fold(f64::INFINITY, f64::min);
+    Timing { mean_s: mean, std_s: var.sqrt(), min_s: min, reps }
+}
+
+/// Report sink: prints aligned `row:` lines and remembers them so a bench
+/// can emit a machine-readable JSON block at the end.
+pub struct Bench {
+    pub name: &'static str,
+    rows: Vec<(String, Vec<(String, String)>)>,
+}
+
+impl Bench {
+    pub fn new(name: &'static str) -> Self {
+        println!("=== bench: {name} ===");
+        Bench { name, rows: Vec::new() }
+    }
+
+    /// Add one result row: label plus (column, value) pairs.
+    pub fn row(&mut self, label: &str, cols: &[(&str, String)]) {
+        let cols: Vec<(String, String)> =
+            cols.iter().map(|(k, v)| (k.to_string(), v.clone())).collect();
+        let line = cols
+            .iter()
+            .map(|(k, v)| format!("{k}={v}"))
+            .collect::<Vec<_>>()
+            .join("  ");
+        println!("row: {label:<28} {line}");
+        self.rows.push((label.to_string(), cols));
+    }
+
+    /// Emit the whole report as one JSON line (for EXPERIMENTS.md tooling).
+    pub fn finish(self) {
+        use crate::util::json::Json;
+        use std::collections::BTreeMap;
+
+        let rows: Vec<Json> = self
+            .rows
+            .iter()
+            .map(|(label, cols)| {
+                let mut m = BTreeMap::new();
+                m.insert("label".to_string(), Json::Str(label.clone()));
+                for (k, v) in cols {
+                    let j = v
+                        .parse::<f64>()
+                        .map(Json::Num)
+                        .unwrap_or_else(|_| Json::Str(v.clone()));
+                    m.insert(k.clone(), j);
+                }
+                Json::Obj(m)
+            })
+            .collect();
+        let mut top = BTreeMap::new();
+        top.insert("bench".to_string(), Json::Str(self.name.to_string()));
+        top.insert("rows".to_string(), Json::Arr(rows));
+        println!("json: {}", Json::Obj(top));
+    }
+}
+
+/// Format seconds human-readably (µs/ms/s).
+pub fn fmt_s(s: f64) -> String {
+    if s < 1e-3 {
+        format!("{:.1}us", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{s:.3}s")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timing_counts_reps() {
+        let mut n = 0;
+        let t = time(2, 5, || n += 1);
+        assert_eq!(n, 7);
+        assert_eq!(t.reps, 5);
+        assert!(t.min_s <= t.mean_s + 1e-12);
+    }
+
+    #[test]
+    fn fmt_units() {
+        assert!(fmt_s(2e-6).ends_with("us"));
+        assert!(fmt_s(2e-3).ends_with("ms"));
+        assert!(fmt_s(2.0).ends_with('s'));
+    }
+
+    #[test]
+    fn bench_rows_to_json() {
+        let mut b = Bench::new("unit");
+        b.row("r1", &[("x", "1.5".into()), ("y", "abc".into())]);
+        assert_eq!(b.rows.len(), 1);
+        b.finish();
+    }
+}

@@ -1,0 +1,10 @@
+//! Small in-tree utilities that would normally be external crates.
+//!
+//! The build environment is fully offline with only the PJRT bridge's
+//! dependency set vendored, so JSON parsing ([`json`]), property-based
+//! testing ([`proptest`]) and the bench harness ([`bench`]) are
+//! implemented here rather than pulled from crates.io.
+
+pub mod bench;
+pub mod json;
+pub mod proptest;

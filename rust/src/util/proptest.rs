@@ -1,0 +1,125 @@
+//! Tiny property-based testing harness (offline stand-in for `proptest`).
+//!
+//! Deterministic: case `i` of a run derives all randomness from
+//! `SplitMix64(seed + i)`, so failures reproduce by re-running the test.
+//! On failure the harness reports the failing case index and seed; there
+//! is no shrinking — generators are kept small-biased instead.
+
+/// SplitMix64 — tiny, well-distributed PRNG for test-case generation.
+/// (The *product* RNG is Philox in `sampler`; this one is test-only.)
+#[derive(Clone, Debug)]
+pub struct Gen {
+    state: u64,
+}
+
+impl Gen {
+    pub fn new(seed: u64) -> Self {
+        Gen { state: seed }
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E3779B97F4A7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^ (z >> 31)
+    }
+
+    pub fn next_u32(&mut self) -> u32 {
+        (self.next_u64() >> 32) as u32
+    }
+
+    /// Uniform in [0, n) — n must be > 0.
+    pub fn below(&mut self, n: usize) -> usize {
+        (self.next_u64() % n as u64) as usize
+    }
+
+    /// Inclusive integer range.
+    pub fn range_i64(&mut self, lo: i64, hi: i64) -> i64 {
+        debug_assert!(lo <= hi);
+        lo + (self.next_u64() % ((hi - lo) as u64 + 1)) as i64
+    }
+
+    /// Uniform f64 in [0, 1).
+    pub fn unit_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform f64 in [lo, hi).
+    pub fn range_f64(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.unit_f64()
+    }
+
+    /// Uniform f32 in [lo, hi), rounded through f32.
+    pub fn range_f32(&mut self, lo: f32, hi: f32) -> f32 {
+        self.range_f64(lo as f64, hi as f64) as f32
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.next_u64() & 1 == 1
+    }
+
+    /// Pick one element of a slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.below(xs.len())]
+    }
+}
+
+/// Run `f` for `cases` deterministic cases; panics with the case index on
+/// the first failure (assert inside `f`).
+pub fn check<F: FnMut(&mut Gen)>(seed: u64, cases: usize, mut f: F) {
+    for i in 0..cases {
+        let mut g = Gen::new(seed.wrapping_add(i as u64));
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            f(&mut g)
+        }));
+        if let Err(e) = r {
+            eprintln!(
+                "property failed at case {i} (seed {seed}); rerun is \
+                 deterministic"
+            );
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gen_is_deterministic() {
+        let mut a = Gen::new(7);
+        let mut b = Gen::new(7);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn ranges_hold() {
+        let mut g = Gen::new(1);
+        for _ in 0..1000 {
+            let x = g.range_i64(-3, 9);
+            assert!((-3..=9).contains(&x));
+            let u = g.unit_f64();
+            assert!((0.0..1.0).contains(&u));
+            let f = g.range_f64(2.0, 5.0);
+            assert!((2.0..5.0).contains(&f));
+            assert!(g.below(17) < 17);
+        }
+    }
+
+    #[test]
+    fn check_runs_all_cases() {
+        let mut n = 0;
+        check(0, 25, |_| n += 1);
+        assert_eq!(n, 25);
+    }
+
+    #[test]
+    #[should_panic]
+    fn check_propagates_failure() {
+        check(0, 10, |g| assert!(g.below(10) < 5));
+    }
+}

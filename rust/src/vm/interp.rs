@@ -1,0 +1,290 @@
+//! In-process bytecode interpreter — CPU baseline + correctness oracle.
+//!
+//! Two evaluation modes:
+//! * [`eval_scalar`] — one point at a time, f64 stack. Used by the expr
+//!   test oracle and the tree-walk cross-check.
+//! * [`BatchInterp`] — columnar (structure-of-arrays) evaluation over a
+//!   chunk of samples with an f32 stack, mirroring the device kernel's
+//!   tile layout. This is the "one CPU core" baseline the backend
+//!   comparison bench (A3) runs against the PJRT path.
+
+use crate::abi::STACK;
+use crate::vm::opcodes::Op;
+use crate::vm::program::Program;
+
+/// Evaluate at a single point (f64 precision — oracle use).
+pub fn eval_scalar(prog: &Program, x: &[f64], theta: &[f64]) -> f64 {
+    let mut stack = [0f64; STACK];
+    let mut sp = 0usize;
+    for ins in prog.instrs() {
+        match ins.op {
+            Op::HALT => {}
+            Op::CONST => {
+                stack[sp] = ins.farg as f64;
+                sp += 1;
+            }
+            Op::VAR => {
+                stack[sp] = x[ins.iarg as usize];
+                sp += 1;
+            }
+            Op::PARAM => {
+                stack[sp] = theta[ins.iarg as usize];
+                sp += 1;
+            }
+            op => {
+                if op.arity() == 1 {
+                    let a = stack[sp - 1];
+                    stack[sp - 1] = unary_f64(op, a);
+                } else {
+                    let b = stack[sp - 1];
+                    let a = stack[sp - 2];
+                    stack[sp - 2] = binary_f64(op, a, b);
+                    sp -= 1;
+                }
+            }
+        }
+    }
+    stack[0]
+}
+
+fn unary_f64(op: Op, a: f64) -> f64 {
+    match op {
+        Op::NEG => -a,
+        Op::ABS => a.abs(),
+        Op::SIN => a.sin(),
+        Op::COS => a.cos(),
+        Op::TAN => a.tan(),
+        Op::EXP => a.exp(),
+        Op::LOG => a.ln(),
+        Op::SQRT => a.sqrt(),
+        Op::TANH => a.tanh(),
+        Op::ATAN => a.atan(),
+        Op::FLOOR => a.floor(),
+        Op::SQUARE => a * a,
+        Op::RECIP => 1.0 / a,
+        _ => unreachable!("not unary: {op:?}"),
+    }
+}
+
+fn binary_f64(op: Op, a: f64, b: f64) -> f64 {
+    match op {
+        Op::ADD => a + b,
+        Op::SUB => a - b,
+        Op::MUL => a * b,
+        Op::DIV => a / b,
+        Op::POW => a.powf(b),
+        Op::MIN => a.min(b),
+        Op::MAX => a.max(b),
+        _ => unreachable!("not binary: {op:?}"),
+    }
+}
+
+/// Columnar f32 interpreter over sample chunks (device-kernel mirror).
+///
+/// The stack is `STACK` rows of `chunk` f32 lanes; every instruction
+/// processes a whole row, which vectorizes well and keeps the per-
+/// instruction dispatch cost amortized over the chunk — the same
+/// trade-off the Pallas kernel makes with its (STACK, TILE) layout.
+pub struct BatchInterp {
+    chunk: usize,
+    stack: Vec<f32>, // STACK * chunk, row-major
+}
+
+impl BatchInterp {
+    pub fn new(chunk: usize) -> Self {
+        BatchInterp { chunk, stack: vec![0f32; STACK * chunk] }
+    }
+
+    pub fn chunk(&self) -> usize {
+        self.chunk
+    }
+
+    /// Evaluate `prog` over `n <= chunk` samples stored dimension-major
+    /// (`xt[d]` is the d-th dimension row). Results land in `out[..n]`.
+    pub fn eval(
+        &mut self,
+        prog: &Program,
+        xt: &[Vec<f32>],
+        theta: &[f32],
+        n: usize,
+        out: &mut [f32],
+    ) {
+        assert!(n <= self.chunk);
+        let c = self.chunk;
+        let mut sp = 0usize;
+        for ins in prog.instrs() {
+            match ins.op {
+                Op::HALT => {}
+                Op::CONST => {
+                    self.stack[sp * c..sp * c + n].fill(ins.farg);
+                    sp += 1;
+                }
+                Op::VAR => {
+                    self.stack[sp * c..sp * c + n]
+                        .copy_from_slice(&xt[ins.iarg as usize][..n]);
+                    sp += 1;
+                }
+                Op::PARAM => {
+                    self.stack[sp * c..sp * c + n]
+                        .fill(theta[ins.iarg as usize]);
+                    sp += 1;
+                }
+                op if op.arity() == 1 => {
+                    let row = &mut self.stack[(sp - 1) * c..(sp - 1) * c + n];
+                    unary_row(op, row);
+                }
+                op => {
+                    let (lo, hi) = self.stack.split_at_mut((sp - 1) * c);
+                    let a = &mut lo[(sp - 2) * c..(sp - 2) * c + n];
+                    let b = &hi[..n];
+                    binary_row(op, a, b);
+                    sp -= 1;
+                }
+            }
+        }
+        out[..n].copy_from_slice(&self.stack[..n]);
+    }
+}
+
+fn unary_row(op: Op, row: &mut [f32]) {
+    match op {
+        Op::NEG => row.iter_mut().for_each(|v| *v = -*v),
+        Op::ABS => row.iter_mut().for_each(|v| *v = v.abs()),
+        Op::SIN => row.iter_mut().for_each(|v| *v = v.sin()),
+        Op::COS => row.iter_mut().for_each(|v| *v = v.cos()),
+        Op::TAN => row.iter_mut().for_each(|v| *v = v.tan()),
+        Op::EXP => row.iter_mut().for_each(|v| *v = v.exp()),
+        Op::LOG => row.iter_mut().for_each(|v| *v = v.ln()),
+        Op::SQRT => row.iter_mut().for_each(|v| *v = v.sqrt()),
+        Op::TANH => row.iter_mut().for_each(|v| *v = v.tanh()),
+        Op::ATAN => row.iter_mut().for_each(|v| *v = v.atan()),
+        Op::FLOOR => row.iter_mut().for_each(|v| *v = v.floor()),
+        Op::SQUARE => row.iter_mut().for_each(|v| *v = *v * *v),
+        Op::RECIP => row.iter_mut().for_each(|v| *v = 1.0 / *v),
+        _ => unreachable!(),
+    }
+}
+
+fn binary_row(op: Op, a: &mut [f32], b: &[f32]) {
+    match op {
+        Op::ADD => a.iter_mut().zip(b).for_each(|(x, y)| *x += y),
+        Op::SUB => a.iter_mut().zip(b).for_each(|(x, y)| *x -= y),
+        Op::MUL => a.iter_mut().zip(b).for_each(|(x, y)| *x *= y),
+        Op::DIV => a.iter_mut().zip(b).for_each(|(x, y)| *x /= y),
+        Op::POW => a.iter_mut().zip(b).for_each(|(x, y)| *x = x.powf(*y)),
+        Op::MIN => a.iter_mut().zip(b).for_each(|(x, y)| *x = x.min(*y)),
+        Op::MAX => a.iter_mut().zip(b).for_each(|(x, y)| *x = x.max(*y)),
+        _ => unreachable!(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::vm::program::Instr;
+
+    fn prog(instrs: Vec<Instr>) -> Program {
+        Program::new(instrs).unwrap()
+    }
+
+    #[test]
+    fn scalar_arithmetic() {
+        // (x1 + 2) * p0
+        let p = prog(vec![
+            Instr::var(0),
+            Instr::konst(2.0),
+            Instr::new(Op::ADD),
+            Instr::param(0),
+            Instr::new(Op::MUL),
+        ]);
+        assert_eq!(eval_scalar(&p, &[3.0], &[10.0]), 50.0);
+    }
+
+    #[test]
+    fn scalar_all_unaries() {
+        for (op, x, want) in [
+            (Op::NEG, 2.0, -2.0),
+            (Op::ABS, -2.0, 2.0),
+            (Op::SQRT, 9.0, 3.0),
+            (Op::SQUARE, 3.0, 9.0),
+            (Op::RECIP, 4.0, 0.25),
+            (Op::FLOOR, 2.7, 2.0),
+            (Op::EXP, 0.0, 1.0),
+            (Op::LOG, 1.0, 0.0),
+        ] {
+            let p = prog(vec![Instr::var(0), Instr::new(op)]);
+            assert_eq!(eval_scalar(&p, &[x], &[]), want, "{op:?}");
+        }
+        let p = prog(vec![Instr::var(0), Instr::new(Op::SIN)]);
+        assert!((eval_scalar(&p, &[std::f64::consts::PI], &[])).abs() < 1e-12);
+    }
+
+    #[test]
+    fn scalar_all_binaries() {
+        for (op, a, b, want) in [
+            (Op::ADD, 2.0, 3.0, 5.0),
+            (Op::SUB, 2.0, 3.0, -1.0),
+            (Op::MUL, 2.0, 3.0, 6.0),
+            (Op::DIV, 3.0, 2.0, 1.5),
+            (Op::POW, 2.0, 10.0, 1024.0),
+            (Op::MIN, 2.0, 3.0, 2.0),
+            (Op::MAX, 2.0, 3.0, 3.0),
+        ] {
+            let p = prog(vec![
+                Instr::konst(a as f32),
+                Instr::konst(b as f32),
+                Instr::new(op),
+            ]);
+            assert_eq!(eval_scalar(&p, &[], &[]), want, "{op:?}");
+        }
+    }
+
+    #[test]
+    fn batch_matches_scalar() {
+        // |x1 - x2| * p1 + sin(x1)
+        let p = prog(vec![
+            Instr::var(0),
+            Instr::var(1),
+            Instr::new(Op::SUB),
+            Instr::new(Op::ABS),
+            Instr::param(1),
+            Instr::new(Op::MUL),
+            Instr::var(0),
+            Instr::new(Op::SIN),
+            Instr::new(Op::ADD),
+        ]);
+        let n = 257;
+        let x0: Vec<f32> = (0..n).map(|i| i as f32 * 0.01 - 1.0).collect();
+        let x1: Vec<f32> = (0..n).map(|i| (i as f32 * 0.03).cos()).collect();
+        let xt = vec![x0.clone(), x1.clone()];
+        let theta = [0.0f32, 2.5];
+        let mut bi = BatchInterp::new(512);
+        let mut out = vec![0f32; 512];
+        bi.eval(&p, &xt, &theta, n, &mut out);
+        for i in 0..n {
+            let want = eval_scalar(
+                &p,
+                &[x0[i] as f64, x1[i] as f64],
+                &[0.0, 2.5],
+            ) as f32;
+            assert!(
+                (out[i] - want).abs() <= 1e-5 * want.abs().max(1.0),
+                "i={i}: {} vs {want}",
+                out[i]
+            );
+        }
+    }
+
+    #[test]
+    fn batch_reuse_across_programs() {
+        let mut bi = BatchInterp::new(64);
+        let mut out = vec![0f32; 64];
+        let xt = vec![vec![0.5f32; 64]];
+        let p1 = prog(vec![Instr::var(0), Instr::new(Op::SQUARE)]);
+        bi.eval(&p1, &xt, &[], 64, &mut out);
+        assert!(out.iter().all(|&v| v == 0.25));
+        let p2 = prog(vec![Instr::konst(7.0)]);
+        bi.eval(&p2, &xt, &[], 10, &mut out);
+        assert!(out[..10].iter().all(|&v| v == 7.0));
+    }
+}

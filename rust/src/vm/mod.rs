@@ -1,0 +1,15 @@
+//! The bytecode VM — rust half of the integrand ABI.
+//!
+//! User expression strings are compiled (see [`crate::expr`]) into
+//! fixed-width bytecode [`program::Program`]s that both the AOT device
+//! kernels (`python/compile/vm_core.py`) and the in-process interpreter
+//! ([`interp`]) evaluate identically. The interpreter serves as (a) the
+//! CPU baseline comparator for the backend benches and (b) the
+//! correctness oracle for property tests.
+
+pub mod interp;
+pub mod opcodes;
+pub mod program;
+
+pub use opcodes::Op;
+pub use program::Program;

@@ -1,0 +1,130 @@
+//! Opcode table — must match `spec/opcodes.txt` and
+//! `python/compile/opcodes.py` (enforced by `tests/opcode_abi.rs`).
+
+/// Stack-effect class of an opcode.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Kind {
+    /// No stack effect (HALT — padding no-op).
+    Nullary,
+    /// Pushes one value (operand in `iargs` or `fargs`).
+    Push,
+    /// Pops one, pushes one.
+    Unary,
+    /// Pops two, pushes one.
+    Binary,
+}
+
+macro_rules! ops {
+    ($(($code:literal, $name:ident, $kind:ident)),+ $(,)?) => {
+        /// VM opcodes, numbered per the golden ABI spec.
+        #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+        #[repr(i32)]
+        pub enum Op {
+            $($name = $code),+
+        }
+
+        /// All opcodes in ABI order.
+        pub const ALL: &[Op] = &[$(Op::$name),+];
+
+        impl Op {
+            pub fn code(self) -> i32 {
+                self as i32
+            }
+
+            pub fn from_code(code: i32) -> Option<Op> {
+                match code {
+                    $($code => Some(Op::$name),)+
+                    _ => None,
+                }
+            }
+
+            pub fn name(self) -> &'static str {
+                match self {
+                    $(Op::$name => stringify!($name)),+
+                }
+            }
+
+            pub fn kind(self) -> Kind {
+                match self {
+                    $(Op::$name => Kind::$kind),+
+                }
+            }
+        }
+    };
+}
+
+ops![
+    (0, HALT, Nullary),
+    (1, CONST, Push),
+    (2, VAR, Push),
+    (3, PARAM, Push),
+    (4, ADD, Binary),
+    (5, SUB, Binary),
+    (6, MUL, Binary),
+    (7, DIV, Binary),
+    (8, POW, Binary),
+    (9, MIN, Binary),
+    (10, MAX, Binary),
+    (11, NEG, Unary),
+    (12, ABS, Unary),
+    (13, SIN, Unary),
+    (14, COS, Unary),
+    (15, TAN, Unary),
+    (16, EXP, Unary),
+    (17, LOG, Unary),
+    (18, SQRT, Unary),
+    (19, TANH, Unary),
+    (20, ATAN, Unary),
+    (21, FLOOR, Unary),
+    (22, SQUARE, Unary),
+    (23, RECIP, Unary),
+];
+
+/// Number of opcodes in the ABI (dispatch-table width on device).
+pub const N_OPS: usize = ALL.len();
+
+impl Op {
+    /// Net stack-depth change.
+    pub fn stack_delta(self) -> i32 {
+        match self.kind() {
+            Kind::Nullary => 0,
+            Kind::Push => 1,
+            Kind::Unary => 0,
+            Kind::Binary => -1,
+        }
+    }
+
+    /// Values consumed from the stack.
+    pub fn arity(self) -> usize {
+        match self.kind() {
+            Kind::Nullary | Kind::Push => 0,
+            Kind::Unary => 1,
+            Kind::Binary => 2,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn codes_dense_and_roundtrip() {
+        assert_eq!(N_OPS, 24);
+        for (i, op) in ALL.iter().enumerate() {
+            assert_eq!(op.code(), i as i32);
+            assert_eq!(Op::from_code(i as i32), Some(*op));
+        }
+        assert_eq!(Op::from_code(24), None);
+        assert_eq!(Op::from_code(-1), None);
+    }
+
+    #[test]
+    fn deltas() {
+        assert_eq!(Op::CONST.stack_delta(), 1);
+        assert_eq!(Op::SIN.stack_delta(), 0);
+        assert_eq!(Op::ADD.stack_delta(), -1);
+        assert_eq!(Op::HALT.stack_delta(), 0);
+        assert_eq!(Op::POW.arity(), 2);
+    }
+}

@@ -1,0 +1,298 @@
+//! Validated bytecode container — the unit shipped to device kernels.
+
+use std::fmt;
+
+use crate::abi::{MAX_DIM, MAX_PARAM, MAX_PROG, STACK};
+use crate::vm::opcodes::{Kind, Op};
+
+/// One instruction: opcode plus its (possibly unused) operands.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Instr {
+    pub op: Op,
+    /// VAR/PARAM index operand.
+    pub iarg: i32,
+    /// CONST immediate operand.
+    pub farg: f32,
+}
+
+impl Instr {
+    pub fn new(op: Op) -> Self {
+        Instr { op, iarg: 0, farg: 0.0 }
+    }
+
+    pub fn konst(v: f32) -> Self {
+        Instr { op: Op::CONST, iarg: 0, farg: v }
+    }
+
+    pub fn var(i: usize) -> Self {
+        Instr { op: Op::VAR, iarg: i as i32, farg: 0.0 }
+    }
+
+    pub fn param(i: usize) -> Self {
+        Instr { op: Op::PARAM, iarg: i as i32, farg: 0.0 }
+    }
+}
+
+/// Validation failure for a candidate program.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ProgramError {
+    TooLong { len: usize },
+    StackOverflow { at: usize },
+    StackUnderflow { at: usize },
+    BadVarIndex { at: usize, idx: i32 },
+    BadParamIndex { at: usize, idx: i32 },
+    HaltInBody { at: usize },
+    /// Terminal stack depth != 1.
+    BadTerminalDepth { depth: i32 },
+    Empty,
+}
+
+impl fmt::Display for ProgramError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ProgramError::TooLong { len } => {
+                write!(f, "program too long: {len} > {MAX_PROG}")
+            }
+            ProgramError::StackOverflow { at } => {
+                write!(f, "stack overflow (> {STACK}) at instruction {at}")
+            }
+            ProgramError::StackUnderflow { at } => {
+                write!(f, "stack underflow at instruction {at}")
+            }
+            ProgramError::BadVarIndex { at, idx } => {
+                write!(f, "variable index {idx} out of range at {at}")
+            }
+            ProgramError::BadParamIndex { at, idx } => {
+                write!(f, "parameter index {idx} out of range at {at}")
+            }
+            ProgramError::HaltInBody { at } => {
+                write!(f, "HALT inside program body at {at}")
+            }
+            ProgramError::BadTerminalDepth { depth } => {
+                write!(f, "program leaves {depth} values on the stack")
+            }
+            ProgramError::Empty => write!(f, "empty program"),
+        }
+    }
+}
+
+impl std::error::Error for ProgramError {}
+
+/// A validated program: guaranteed to fit device limits and to leave
+/// exactly one value in stack slot 0 — the same invariant the hypothesis
+/// strategy in `python/tests/test_vm.py` generates.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Program {
+    instrs: Vec<Instr>,
+    /// Number of sample dimensions the program reads (max VAR index + 1).
+    pub dims: usize,
+    /// Number of parameter slots the program reads (max PARAM index + 1).
+    pub n_params: usize,
+    /// Maximum stack depth reached.
+    pub max_depth: usize,
+}
+
+impl Program {
+    /// Validate and freeze an instruction sequence.
+    pub fn new(instrs: Vec<Instr>) -> Result<Program, ProgramError> {
+        if instrs.is_empty() {
+            return Err(ProgramError::Empty);
+        }
+        if instrs.len() > MAX_PROG {
+            return Err(ProgramError::TooLong { len: instrs.len() });
+        }
+        let mut depth: i32 = 0;
+        let mut max_depth: i32 = 0;
+        let mut dims = 0usize;
+        let mut n_params = 0usize;
+        for (at, ins) in instrs.iter().enumerate() {
+            match ins.op {
+                Op::HALT => return Err(ProgramError::HaltInBody { at }),
+                Op::VAR => {
+                    if ins.iarg < 0 || ins.iarg as usize >= MAX_DIM {
+                        return Err(ProgramError::BadVarIndex {
+                            at,
+                            idx: ins.iarg,
+                        });
+                    }
+                    dims = dims.max(ins.iarg as usize + 1);
+                }
+                Op::PARAM => {
+                    if ins.iarg < 0 || ins.iarg as usize >= MAX_PARAM {
+                        return Err(ProgramError::BadParamIndex {
+                            at,
+                            idx: ins.iarg,
+                        });
+                    }
+                    n_params = n_params.max(ins.iarg as usize + 1);
+                }
+                _ => {}
+            }
+            if (ins.op.arity() as i32) > depth {
+                return Err(ProgramError::StackUnderflow { at });
+            }
+            depth += ins.op.stack_delta();
+            if depth > STACK as i32 {
+                return Err(ProgramError::StackOverflow { at });
+            }
+            max_depth = max_depth.max(depth);
+        }
+        if depth != 1 {
+            return Err(ProgramError::BadTerminalDepth { depth });
+        }
+        Ok(Program {
+            instrs,
+            dims,
+            n_params,
+            max_depth: max_depth as usize,
+        })
+    }
+
+    pub fn instrs(&self) -> &[Instr] {
+        &self.instrs
+    }
+
+    pub fn len(&self) -> usize {
+        self.instrs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.instrs.is_empty()
+    }
+
+    /// HALT-padded device rows `(ops, iargs, fargs)`, each MAX_PROG wide —
+    /// the exact layout of one row of the `vm_multi` artifact inputs.
+    pub fn device_rows(&self) -> (Vec<i32>, Vec<i32>, Vec<f32>) {
+        let mut ops = vec![Op::HALT.code(); MAX_PROG];
+        let mut iargs = vec![0i32; MAX_PROG];
+        let mut fargs = vec![0f32; MAX_PROG];
+        for (p, ins) in self.instrs.iter().enumerate() {
+            ops[p] = ins.op.code();
+            iargs[p] = ins.iarg;
+            fargs[p] = ins.farg;
+        }
+        (ops, iargs, fargs)
+    }
+
+    /// Disassemble for logs / error messages.
+    pub fn disasm(&self) -> String {
+        self.instrs
+            .iter()
+            .enumerate()
+            .map(|(i, ins)| match ins.op.kind() {
+                Kind::Push => match ins.op {
+                    Op::CONST => format!("{i:3}: CONST {}", ins.farg),
+                    Op::VAR => format!("{i:3}: VAR x{}", ins.iarg + 1),
+                    _ => format!("{i:3}: PARAM p{}", ins.iarg),
+                },
+                _ => format!("{i:3}: {}", ins.op.name()),
+            })
+            .collect::<Vec<_>>()
+            .join("\n")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn p(instrs: Vec<Instr>) -> Result<Program, ProgramError> {
+        Program::new(instrs)
+    }
+
+    #[test]
+    fn valid_program_metadata() {
+        let prog = p(vec![
+            Instr::var(2),
+            Instr::param(5),
+            Instr::new(Op::MUL),
+        ])
+        .unwrap();
+        assert_eq!(prog.dims, 3);
+        assert_eq!(prog.n_params, 6);
+        assert_eq!(prog.max_depth, 2);
+        assert_eq!(prog.len(), 3);
+    }
+
+    #[test]
+    fn underflow_rejected() {
+        assert_eq!(
+            p(vec![Instr::new(Op::ADD)]),
+            Err(ProgramError::StackUnderflow { at: 0 })
+        );
+        assert_eq!(
+            p(vec![Instr::konst(1.0), Instr::new(Op::ADD)]),
+            Err(ProgramError::StackUnderflow { at: 1 })
+        );
+    }
+
+    #[test]
+    fn overflow_rejected() {
+        let instrs: Vec<Instr> =
+            (0..STACK + 1).map(|i| Instr::konst(i as f32)).collect();
+        assert_eq!(
+            p(instrs),
+            Err(ProgramError::StackOverflow { at: STACK })
+        );
+    }
+
+    #[test]
+    fn terminal_depth_enforced() {
+        assert_eq!(
+            p(vec![Instr::konst(1.0), Instr::konst(2.0)]),
+            Err(ProgramError::BadTerminalDepth { depth: 2 })
+        );
+        assert_eq!(p(vec![]), Err(ProgramError::Empty));
+    }
+
+    #[test]
+    fn bad_indices_rejected() {
+        assert!(matches!(
+            p(vec![Instr::var(MAX_DIM)]),
+            Err(ProgramError::BadVarIndex { .. })
+        ));
+        assert!(matches!(
+            p(vec![Instr::param(MAX_PARAM)]),
+            Err(ProgramError::BadParamIndex { .. })
+        ));
+    }
+
+    #[test]
+    fn halt_in_body_rejected() {
+        assert_eq!(
+            p(vec![Instr::new(Op::HALT), Instr::konst(0.0)]),
+            Err(ProgramError::HaltInBody { at: 0 })
+        );
+    }
+
+    #[test]
+    fn too_long_rejected() {
+        let mut instrs = vec![Instr::konst(0.0)];
+        for _ in 0..MAX_PROG {
+            instrs.push(Instr::new(Op::SIN));
+        }
+        assert_eq!(
+            p(instrs),
+            Err(ProgramError::TooLong { len: MAX_PROG + 1 })
+        );
+    }
+
+    #[test]
+    fn device_rows_padded() {
+        let prog = p(vec![Instr::konst(2.5)]).unwrap();
+        let (ops, iargs, fargs) = prog.device_rows();
+        assert_eq!(ops.len(), MAX_PROG);
+        assert_eq!(ops[0], Op::CONST.code());
+        assert_eq!(fargs[0], 2.5);
+        assert!(ops[1..].iter().all(|&o| o == Op::HALT.code()));
+        assert!(iargs.iter().all(|&i| i == 0));
+    }
+
+    #[test]
+    fn disasm_mentions_ops() {
+        let prog = p(vec![Instr::var(0), Instr::new(Op::SIN)]).unwrap();
+        let d = prog.disasm();
+        assert!(d.contains("VAR x1"));
+        assert!(d.contains("SIN"));
+    }
+}

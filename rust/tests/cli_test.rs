@@ -1,0 +1,222 @@
+//! End-to-end CLI tests: run the real `zmc` binary as a user would.
+//! Device-touching subcommands skip gracefully without artifacts.
+
+use std::path::Path;
+use std::process::Command;
+
+fn zmc() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_zmc"))
+}
+
+fn have_artifacts() -> bool {
+    Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("artifacts/manifest.json")
+        .exists()
+}
+
+fn artifacts_flag() -> String {
+    Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("artifacts")
+        .display()
+        .to_string()
+}
+
+#[test]
+fn help_lists_commands() {
+    let out = zmc().arg("help").output().unwrap();
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    for cmd in ["integrate", "fig1", "normal", "scan", "run"] {
+        assert!(text.contains(cmd), "help missing '{cmd}'");
+    }
+}
+
+#[test]
+fn no_args_prints_help_and_succeeds() {
+    let out = zmc().output().unwrap();
+    assert!(out.status.success());
+}
+
+#[test]
+fn unknown_command_fails_with_message() {
+    let out = zmc().arg("frobnicate").output().unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("unknown command"));
+}
+
+#[test]
+fn integrate_rejects_missing_flags() {
+    let out = zmc().arg("integrate").output().unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("--expr"));
+}
+
+#[test]
+fn integrate_rejects_bad_expression() {
+    if !have_artifacts() {
+        return;
+    }
+    let out = zmc()
+        .args([
+            "integrate",
+            "--expr",
+            "frob(x1)",
+            "--bounds",
+            "0,1",
+            "--artifacts",
+            &artifacts_flag(),
+        ])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("unknown function"));
+}
+
+#[test]
+fn info_lists_executables() {
+    if !have_artifacts() {
+        return;
+    }
+    let out = zmc()
+        .args(["info", "--artifacts", &artifacts_flag()])
+        .output()
+        .unwrap();
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("harmonic_s65536_n128"));
+    assert!(text.contains("vm_multi_f32_s16384"));
+    assert!(text.contains("MAX_PROG=48"));
+}
+
+#[test]
+fn integrate_monomial_end_to_end() {
+    if !have_artifacts() {
+        return;
+    }
+    let out = zmc()
+        .args([
+            "integrate",
+            "--expr",
+            "x1^2",
+            "--bounds",
+            "0,1",
+            "--samples",
+            "16384",
+            "--artifacts",
+            &artifacts_flag(),
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    let val: f64 = text
+        .lines()
+        .find(|l| l.trim_start().starts_with("I ="))
+        .and_then(|l| l.split_whitespace().nth(2))
+        .unwrap()
+        .parse()
+        .unwrap();
+    assert!((val - 1.0 / 3.0).abs() < 0.02, "I = {val}");
+}
+
+#[test]
+fn init_config_then_run() {
+    if !have_artifacts() {
+        return;
+    }
+    let dir = std::env::temp_dir().join(format!(
+        "zmc_cli_{}",
+        std::process::id()
+    ));
+    std::fs::create_dir_all(&dir).unwrap();
+    let cfg = dir.join("job.json");
+    let out = zmc()
+        .args(["init-config", cfg.to_str().unwrap()])
+        .output()
+        .unwrap();
+    assert!(out.status.success());
+    // shrink the sample count for test speed
+    let text = std::fs::read_to_string(&cfg)
+        .unwrap()
+        .replace("262144", "8192")
+        .replace("\"trials\": 10", "\"trials\": 2");
+    std::fs::write(&cfg, text).unwrap();
+    let out = zmc()
+        .args([
+            "run",
+            "--config",
+            cfg.to_str().unwrap(),
+            "--artifacts",
+            &artifacts_flag(),
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("2 functions x 2 trials"));
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn scan_sweeps_p0() {
+    if !have_artifacts() {
+        return;
+    }
+    let out = zmc()
+        .args([
+            "scan",
+            "--expr",
+            "p0*x1",
+            "--bounds",
+            "0,1",
+            "--grid",
+            "0:2:3",
+            "--samples",
+            "8192",
+            "--artifacts",
+            &artifacts_flag(),
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    // I(p0) = p0/2 at p0 = 0, 1, 2
+    assert_eq!(text.lines().filter(|l| l.contains("0.")).count() >= 3, true);
+}
+
+#[test]
+fn normal_tree_search_cli() {
+    if !have_artifacts() {
+        return;
+    }
+    let out = zmc()
+        .args([
+            "normal",
+            "--expr",
+            "x1*x1 + x2",
+            "--bounds",
+            "0,1;0,1",
+            "--divisions",
+            "4",
+            "--depth",
+            "1",
+            "--trials",
+            "3",
+            "--artifacts",
+            &artifacts_flag(),
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("cubes/level"));
+    // truth = 1/3 + 1/2 = 0.8333
+    let val: f64 = text
+        .lines()
+        .find(|l| l.trim_start().starts_with("I ="))
+        .and_then(|l| l.split_whitespace().nth(2))
+        .unwrap()
+        .parse()
+        .unwrap();
+    assert!((val - 5.0 / 6.0).abs() < 0.05, "I = {val}");
+}

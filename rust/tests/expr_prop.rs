@@ -1,0 +1,153 @@
+//! Property tests for the expression pipeline:
+//! random ASTs → (print→reparse), (fold ≡ eval), (compile ≡ eval).
+
+use zmc::expr::{BinOp, Expr, UnOp};
+use zmc::util::proptest::{check, Gen};
+use zmc::vm::interp::eval_scalar;
+
+/// Random AST generator. `depth` bounds recursion; leans on safe ops but
+/// includes div/pow/log so NaN paths are exercised too.
+fn gen_expr(g: &mut Gen, depth: usize) -> Expr {
+    if depth == 0 || g.below(10) < 3 {
+        return match g.below(3) {
+            0 => Expr::Const(g.range_f64(-4.0, 4.0)),
+            1 => Expr::Var(g.below(4)),
+            _ => Expr::Param(g.below(4)),
+        };
+    }
+    if g.bool() {
+        let op = *g.choose(&[
+            UnOp::Neg,
+            UnOp::Abs,
+            UnOp::Sin,
+            UnOp::Cos,
+            UnOp::Tanh,
+            UnOp::Atan,
+            UnOp::Floor,
+            UnOp::Exp,
+            UnOp::Sqrt,
+            UnOp::Log,
+        ]);
+        Expr::Unary(op, gen_expr(g, depth - 1).into())
+    } else {
+        let op = *g.choose(&[
+            BinOp::Add,
+            BinOp::Sub,
+            BinOp::Mul,
+            BinOp::Div,
+            BinOp::Min,
+            BinOp::Max,
+            BinOp::Pow,
+        ]);
+        Expr::Binary(
+            op,
+            gen_expr(g, depth - 1).into(),
+            gen_expr(g, depth - 1).into(),
+        )
+    }
+}
+
+/// Structural AST equality with NaN == NaN (bitwise-agnostic).
+fn ast_eq(a: &Expr, b: &Expr) -> bool {
+    match (a, b) {
+        (Expr::Const(x), Expr::Const(y)) => {
+            x == y || (x.is_nan() && y.is_nan())
+        }
+        (Expr::Var(x), Expr::Var(y)) => x == y,
+        (Expr::Param(x), Expr::Param(y)) => x == y,
+        (Expr::Unary(o1, a1), Expr::Unary(o2, a2)) => {
+            o1 == o2 && ast_eq(a1, a2)
+        }
+        (Expr::Binary(o1, a1, b1), Expr::Binary(o2, a2, b2)) => {
+            o1 == o2 && ast_eq(a1, a2) && ast_eq(b1, b2)
+        }
+        _ => false,
+    }
+}
+
+fn close(a: f64, b: f64) -> bool {
+    if a.is_nan() && b.is_nan() {
+        return true;
+    }
+    if a.is_infinite() || b.is_infinite() {
+        return a == b || (a.is_infinite() && b.is_infinite());
+    }
+    (a - b).abs() <= 1e-4 * a.abs().max(b.abs()).max(1.0)
+}
+
+#[test]
+fn print_reparse_roundtrip() {
+    check(101, 300, |g| {
+        let e = gen_expr(g, 4);
+        let printed = e.to_string();
+        let reparsed = Expr::parse_raw(&printed)
+            .unwrap_or_else(|err| panic!("reparse '{printed}': {err}"));
+        // The parser folds `-<literal>` into the constant, so compare
+        // the constant-folded normal forms (identical ASTs otherwise;
+        // gen_expr never emits Square/Recip, whose printing re-sugars).
+        // NaN constants (e.g. folded sqrt(-c)) compare equal by intent.
+        let a = zmc::expr::fold::fold(e.clone());
+        let b = zmc::expr::fold::fold(reparsed);
+        assert!(ast_eq(&a, &b), "printed: {printed}\n{a:?}\nvs {b:?}");
+    });
+}
+
+#[test]
+fn fold_preserves_semantics() {
+    check(202, 300, |g| {
+        let e = gen_expr(g, 4);
+        let folded = zmc::expr::fold::fold(e.clone());
+        let x: Vec<f64> = (0..4).map(|_| g.range_f64(-2.0, 2.0)).collect();
+        let t: Vec<f64> = (0..4).map(|_| g.range_f64(-2.0, 2.0)).collect();
+        let a = e.eval(&x, &t);
+        let b = folded.eval(&x, &t);
+        assert!(close(a, b), "{e} -> {folded}: {a} vs {b}");
+    });
+}
+
+#[test]
+fn compiled_vm_matches_tree_walk() {
+    let mut tested = 0u32;
+    check(303, 400, |g| {
+        let e = gen_expr(g, 4);
+        // deep trees can legitimately exceed the device stack — skip
+        let Ok(prog) = e.compile() else { return };
+        tested += 1;
+        let x: Vec<f64> = (0..4).map(|_| g.range_f64(-2.0, 2.0)).collect();
+        let t: Vec<f64> = (0..4).map(|_| g.range_f64(-2.0, 2.0)).collect();
+        let want = e.eval(&x, &t);
+        // VM runs in f32 — compare at f32 precision
+        let got = eval_scalar(&prog, &x, &t);
+        let (wf, gf) = (want as f32, got as f32);
+        let ok = (wf.is_nan() && gf.is_nan())
+            || (wf.is_infinite() && gf.is_infinite())
+            || (gf - wf).abs() <= 1e-2 * wf.abs().max(1.0);
+        assert!(ok, "{e}: vm={got} tree={want}");
+    });
+    assert!(tested > 200, "only {tested} programs compiled");
+}
+
+#[test]
+fn compile_depth_never_exceeds_stack() {
+    check(404, 300, |g| {
+        let e = gen_expr(g, 5);
+        if let Ok(p) = e.compile() {
+            assert!(p.max_depth <= zmc::abi::STACK);
+            assert!(p.len() <= zmc::abi::MAX_PROG);
+        }
+    });
+}
+
+#[test]
+fn parse_rejects_random_mutations() {
+    // valid source with one random character clobbered either still
+    // parses or errors — never panics.
+    check(505, 200, |g| {
+        let mut src = String::from("sin(x1)*p0 + max(x2, 0.5)^2");
+        let pos = g.below(src.len());
+        let ch = *g.choose(&[b'$', b'(', b')', b'#', b'x', b'9', b'.']);
+        // safety: all candidate bytes are ASCII
+        unsafe { src.as_bytes_mut()[pos] = ch };
+        let _ = Expr::parse(&src); // must not panic
+    });
+}

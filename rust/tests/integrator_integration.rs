@@ -1,0 +1,388 @@
+//! End-to-end integrator tests against analytic ground truth, including
+//! fault-injected runs and device-vs-CPU agreement.
+//! Requires `make artifacts`; skips gracefully if missing.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use zmc::analytic;
+use zmc::config::JobConfig;
+use zmc::coordinator::fault::FaultPlan;
+use zmc::coordinator::progress::Metrics;
+use zmc::integrator::harmonic::{self, HarmonicBatch};
+use zmc::integrator::multifunctions::{self, MultiConfig};
+use zmc::integrator::normal::{self, NormalConfig};
+use zmc::integrator::{direct, functional, spec::IntegralJob};
+use zmc::runtime::device::DevicePool;
+use zmc::runtime::registry::Registry;
+
+fn pool(workers: usize) -> Option<DevicePool> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return None;
+    }
+    let reg = Arc::new(Registry::load(dir).unwrap());
+    Some(DevicePool::new(&reg, workers).unwrap())
+}
+
+fn small_cfg(samples: usize) -> MultiConfig {
+    MultiConfig {
+        samples_per_fn: samples,
+        seed: 20210711,
+        exe: Some("vm_multi_f8_s4096".into()),
+        ..Default::default()
+    }
+}
+
+#[test]
+fn multifunctions_heterogeneous_vs_analytic() {
+    let Some(pool) = pool(1) else { return };
+    // the Eq. (2) mixed-dimension workload + extras
+    let jobs = vec![
+        IntegralJob::with_params(
+            "p0*abs(x1+x2)",
+            &[(0.0, 1.0), (0.0, 1.0)],
+            &[1.5],
+        )
+        .unwrap(),
+        IntegralJob::with_params(
+            "p0*abs(x1+x2-x3)",
+            &[(0.0, 1.0); 3],
+            &[2.0],
+        )
+        .unwrap(),
+        IntegralJob::parse("x1^2", &[(0.0, 1.0)]).unwrap(),
+        IntegralJob::parse("1", &[(0.0, 2.0), (0.0, 3.0)]).unwrap(),
+    ];
+    let truths = [
+        analytic::eq2_abs2(1.5),
+        analytic::eq2_abs3(2.0),
+        analytic::monomial(2.0),
+        6.0,
+    ];
+    let ests =
+        multifunctions::integrate(&pool, &jobs, &small_cfg(1 << 15)).unwrap();
+    for (e, t) in ests.iter().zip(truths) {
+        assert!(
+            e.consistent_with(t, 6.0),
+            "estimate {e:?} vs truth {t}"
+        );
+    }
+    // constant integrand: exactly zero variance
+    assert!(ests[3].std_err < 1e-9);
+    assert!((ests[3].value - 6.0).abs() < 1e-4);
+}
+
+#[test]
+fn device_matches_cpu_baseline_statistically() {
+    let Some(pool) = pool(1) else { return };
+    let job =
+        IntegralJob::parse("sin(3*x1)*x2", &[(0.0, 1.0), (0.0, 2.0)])
+            .unwrap();
+    let dev = multifunctions::integrate(
+        &pool,
+        std::slice::from_ref(&job),
+        &small_cfg(1 << 14),
+    )
+    .unwrap()[0];
+    let cpu = direct::integrate_one(&job, 1 << 14, 20210711, 0, 0);
+    // same streams, same bytecode → same estimate up to f32 ordering
+    assert!(
+        (dev.value - cpu.value).abs() < 1e-4,
+        "dev={dev:?} cpu={cpu:?}"
+    );
+    assert!((dev.std_err - cpu.std_err).abs() < 1e-5);
+}
+
+#[test]
+fn multifunction_batch_of_twenty_mixed_dims() {
+    let Some(pool) = pool(1) else { return };
+    // n<10: a_n|x1+x2| ; n>=10: b_n|x1+x2-x3| (Eq. 2 at scale)
+    let mut jobs = Vec::new();
+    let mut truths = Vec::new();
+    for n in 0..20 {
+        if n < 10 {
+            let a = 0.5 + n as f64 * 0.1;
+            jobs.push(
+                IntegralJob::with_params(
+                    "p0*abs(x1+x2)",
+                    &[(0.0, 1.0), (0.0, 1.0)],
+                    &[a],
+                )
+                .unwrap(),
+            );
+            truths.push(analytic::eq2_abs2(a));
+        } else {
+            let b = 1.0 + (n - 10) as f64 * 0.2;
+            jobs.push(
+                IntegralJob::with_params(
+                    "p0*abs(x1+x2-x3)",
+                    &[(0.0, 1.0); 3],
+                    &[b],
+                )
+                .unwrap(),
+            );
+            truths.push(analytic::eq2_abs3(b));
+        }
+    }
+    let ests =
+        multifunctions::integrate(&pool, &jobs, &small_cfg(1 << 14)).unwrap();
+    for (i, (e, t)) in ests.iter().zip(&truths).enumerate() {
+        assert!(e.consistent_with(*t, 6.0), "fn {i}: {e:?} vs {t}");
+    }
+}
+
+#[test]
+fn results_identical_across_worker_counts_and_faults() {
+    let Some(p1) = pool(1) else { return };
+    let jobs = vec![
+        IntegralJob::parse("x1*x2", &[(0.0, 1.0), (0.0, 1.0)]).unwrap(),
+        IntegralJob::parse("cos(5*x1)", &[(0.0, 1.0)]).unwrap(),
+    ];
+    let cfg = small_cfg(1 << 14);
+    let base = multifunctions::integrate(&p1, &jobs, &cfg).unwrap();
+
+    let p2 = pool(2).unwrap();
+    let two = multifunctions::integrate(&p2, &jobs, &cfg).unwrap();
+    for (a, b) in base.iter().zip(&two) {
+        assert_eq!(a.value, b.value, "worker-count changed the result");
+    }
+
+    let m = Metrics::new();
+    let faulty = multifunctions::integrate_with_fault(
+        &p2,
+        &jobs,
+        &cfg,
+        &FaultPlan::transient(3),
+        &m,
+    )
+    .unwrap();
+    for (a, b) in base.iter().zip(&faulty) {
+        assert_eq!(a.value, b.value, "fault injection changed the result");
+    }
+    assert!(m.retried() > 0);
+}
+
+#[test]
+fn harmonic_fig1_slice_vs_analytic() {
+    let Some(pool) = pool(1) else { return };
+    let batch = HarmonicBatch::fig1(10);
+    let cfg = MultiConfig {
+        samples_per_fn: 1 << 16,
+        seed: 99,
+        exe: Some("harmonic_s8192_n128".into()),
+        ..Default::default()
+    };
+    let trials = harmonic::integrate_trials(&pool, &batch, &cfg, 6).unwrap();
+    for i in 0..batch.len() {
+        let mut w = zmc::stats::Welford::new();
+        for t in &trials {
+            w.push(t[i].value);
+        }
+        let truth = batch.truth(i);
+        // mean over 6 trials; gate at 6 standard errors of the mean
+        assert!(
+            (w.mean() - truth).abs() < 6.0 * w.sem().max(1e-6),
+            "n={}: mean={} truth={truth} sem={}",
+            i + 1,
+            w.mean(),
+            w.sem()
+        );
+    }
+}
+
+#[test]
+fn functional_scan_tracks_parameter() {
+    let Some(pool) = pool(1) else { return };
+    // ∫ p0·x1² over [0,1] = p0/3, swept over p0
+    let job = IntegralJob::with_params("p0*x1^2", &[(0.0, 1.0)], &[0.0])
+        .unwrap();
+    let thetas: Vec<Vec<f64>> = functional::linspace(0.0, 4.0, 9)
+        .into_iter()
+        .map(|v| vec![v])
+        .collect();
+    let ests =
+        functional::scan(&pool, &job, &thetas, &small_cfg(1 << 14)).unwrap();
+    for (t, e) in thetas.iter().zip(&ests) {
+        assert!(
+            e.consistent_with(t[0] / 3.0, 6.0),
+            "p0={}: {e:?}",
+            t[0]
+        );
+    }
+}
+
+#[test]
+fn normal_tree_search_converges() {
+    let Some(pool) = pool(1) else { return };
+    // peaked integrand: tree search should refine around the peak
+    let job = IntegralJob::parse(
+        "exp(-50*((x1-0.5)^2 + (x2-0.5)^2))",
+        &[(0.0, 1.0), (0.0, 1.0)],
+    )
+    .unwrap();
+    let truth = {
+        // separable gaussian: (∫ exp(-50 (u-.5)^2))^2
+        let c = 50.0f64.sqrt();
+        let one_d = (std::f64::consts::PI.sqrt() / (2.0 * c))
+            * 2.0
+            * analytic::erf(c * 0.5);
+        one_d * one_d
+    };
+    let cfg = NormalConfig {
+        initial_divisions: 4,
+        n_trials: 4,
+        max_depth: 2,
+        seed: 7,
+        exe: Some("stratified_c16_s256".into()),
+        ..Default::default()
+    };
+    let r = normal::integrate(&pool, &job, &cfg).unwrap();
+    assert!(
+        r.estimate.consistent_with(truth, 8.0),
+        "{:?} vs {truth}",
+        r.estimate
+    );
+    assert_eq!(r.cubes_per_level[0], 16);
+    assert!(r.launches > 0);
+}
+
+#[test]
+fn normal_flags_fluctuating_regions() {
+    let Some(pool) = pool(1) else { return };
+    // highly oscillatory in x1<0.25 only: flagged cubes should cluster
+    let job = IntegralJob::parse(
+        "max(0, 0.25-x1) * sin(60*x1) * 40",
+        &[(0.0, 1.0)],
+    )
+    .unwrap();
+    let cfg = NormalConfig {
+        initial_divisions: 8,
+        n_trials: 4,
+        sigma_mult: 0.5,
+        max_depth: 1,
+        seed: 3,
+        exe: Some("stratified_c16_s256".into()),
+        ..Default::default()
+    };
+    let r = normal::integrate(&pool, &job, &cfg).unwrap();
+    assert!(
+        r.flagged_per_level[0] >= 1 && r.flagged_per_level[0] <= 4,
+        "flagged: {:?}",
+        r.flagged_per_level
+    );
+}
+
+#[test]
+fn config_file_end_to_end() {
+    let Some(pool) = pool(1) else { return };
+    let cfg = JobConfig::from_json_text(
+        r#"{
+        "samples_per_fn": 16384, "trials": 2, "seed": 5,
+        "functions": [
+            {"expr": "x1+x2", "bounds": [[0,1],[0,1]]},
+            {"expr": "p0*x1", "bounds": [[0,2]], "theta": [3.0]}
+        ]}"#,
+    )
+    .unwrap();
+    let mcfg = MultiConfig {
+        samples_per_fn: cfg.samples_per_fn,
+        seed: cfg.seed,
+        exe: Some("vm_multi_f8_s4096".into()),
+        ..Default::default()
+    };
+    let per_trial = multifunctions::integrate_trials(
+        &pool, &cfg.jobs, &mcfg, cfg.trials,
+    )
+    .unwrap();
+    assert_eq!(per_trial.len(), 2);
+    // trial streams differ
+    assert_ne!(per_trial[0][0].value, per_trial[1][0].value);
+    for t in &per_trial {
+        assert!(t[0].consistent_with(1.0, 6.0));
+        assert!(t[1].consistent_with(6.0, 6.0));
+    }
+}
+
+#[test]
+fn normal_handles_higher_dimensions() {
+    // the paper recommends ZMCintegral_normal for high-dim integrands;
+    // exercise D=6 (2^6 = 64 initial cubes, splits capped at 4 dims)
+    let Some(pool) = pool(1) else { return };
+    let job = IntegralJob::parse(
+        "x1*x2 + x3*x4 + x5*x6",
+        &[(0.0, 1.0); 6],
+    )
+    .unwrap();
+    let cfg = NormalConfig {
+        initial_divisions: 2,
+        n_trials: 3,
+        max_depth: 1,
+        seed: 21,
+        exe: Some("stratified_c64_s1024".into()),
+        ..Default::default()
+    };
+    let r = normal::integrate(&pool, &job, &cfg).unwrap();
+    assert_eq!(r.cubes_per_level[0], 64);
+    // truth: 3 * (1/2 * 1/2) = 0.75
+    assert!(
+        r.estimate.consistent_with(0.75, 8.0),
+        "{:?}",
+        r.estimate
+    );
+}
+
+#[test]
+fn multifunctions_at_two_hundred_functions() {
+    // a mid-scale slice of the C1 workload with exact gates:
+    // I_n = ∫ x1^2 + c_n over [0,1]^2 = 1/3 + c_n
+    let Some(pool) = pool(1) else { return };
+    let jobs: Vec<IntegralJob> = (0..200)
+        .map(|i| {
+            IntegralJob::with_params(
+                "x1^2 + p0",
+                &[(0.0, 1.0), (0.0, 1.0)],
+                &[i as f64 * 0.01],
+            )
+            .unwrap()
+        })
+        .collect();
+    let cfg = MultiConfig {
+        samples_per_fn: 1 << 13,
+        seed: 33,
+        ..Default::default()
+    };
+    let ests = multifunctions::integrate(&pool, &jobs, &cfg).unwrap();
+    for (i, e) in ests.iter().enumerate() {
+        let truth = 1.0 / 3.0 + i as f64 * 0.01;
+        assert!(e.consistent_with(truth, 6.0), "fn {i}: {e:?} vs {truth}");
+    }
+}
+
+#[test]
+fn stream_base_gives_independent_replicas() {
+    // two runs differing only in stream_base must draw disjoint streams
+    let Some(pool) = pool(1) else { return };
+    let job = IntegralJob::parse("sin(9*x1)", &[(0.0, 1.0)]).unwrap();
+    let mk = |stream_base| MultiConfig {
+        samples_per_fn: 1 << 13,
+        seed: 44,
+        stream_base,
+        exe: Some("vm_multi_f8_s4096".into()),
+        ..Default::default()
+    };
+    let a = multifunctions::integrate(&pool, std::slice::from_ref(&job), &mk(0))
+        .unwrap()[0];
+    let b = multifunctions::integrate(
+        &pool,
+        std::slice::from_ref(&job),
+        &mk(1000),
+    )
+    .unwrap()[0];
+    assert_ne!(a.value, b.value);
+    // both still within 6 sigma of truth (1 - cos 9)/9
+    let truth = (1.0 - 9.0f64.cos()) / 9.0;
+    assert!(a.consistent_with(truth, 6.0));
+    assert!(b.consistent_with(truth, 6.0));
+}

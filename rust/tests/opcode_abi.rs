@@ -1,0 +1,77 @@
+//! The rust opcode table must match the golden spec/opcodes.txt — the
+//! same file `python/tests/test_opcode_abi.py` checks, which pins the
+//! cross-language bytecode ABI.
+
+use std::path::Path;
+
+use zmc::vm::opcodes::{Kind, Op, ALL, N_OPS};
+
+fn load_spec() -> Vec<(i32, String, String)> {
+    let path =
+        Path::new(env!("CARGO_MANIFEST_DIR")).join("spec/opcodes.txt");
+    let text = std::fs::read_to_string(path).expect("spec/opcodes.txt");
+    let mut rows = Vec::new();
+    for line in text.lines() {
+        let line = line.split('#').next().unwrap().trim();
+        if line.is_empty() {
+            continue;
+        }
+        let mut it = line.split_whitespace();
+        rows.push((
+            it.next().unwrap().parse().unwrap(),
+            it.next().unwrap().to_string(),
+            it.next().unwrap().to_string(),
+        ));
+    }
+    rows
+}
+
+#[test]
+fn table_matches_spec() {
+    let spec = load_spec();
+    assert_eq!(spec.len(), N_OPS, "spec row count");
+    for (code, name, kind) in &spec {
+        let op = Op::from_code(*code)
+            .unwrap_or_else(|| panic!("code {code} missing in rust"));
+        assert_eq!(op.name(), name, "name of code {code}");
+        let want = match kind.as_str() {
+            "nullary" => Kind::Nullary,
+            "push" => Kind::Push,
+            "unary" => Kind::Unary,
+            "binary" => Kind::Binary,
+            k => panic!("bad kind {k}"),
+        };
+        assert_eq!(op.kind(), want, "kind of {name}");
+    }
+}
+
+#[test]
+fn spec_codes_dense_and_complete() {
+    let spec = load_spec();
+    for (i, (code, ..)) in spec.iter().enumerate() {
+        assert_eq!(*code, i as i32, "codes must be dense");
+    }
+    // every rust op appears in the spec
+    for op in ALL {
+        assert!(
+            spec.iter().any(|(c, ..)| *c == op.code()),
+            "{op:?} not in spec"
+        );
+    }
+}
+
+#[test]
+fn manifest_nops_matches() {
+    // if artifacts are built, their constant block must agree too
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let text = std::fs::read_to_string(dir.join("manifest.json")).unwrap();
+    let j = zmc::util::json::Json::parse(&text).unwrap();
+    assert_eq!(
+        j.path(&["constants", "N_OPS"]).unwrap().as_i64(),
+        Some(N_OPS as i64)
+    );
+}

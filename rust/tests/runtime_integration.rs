@@ -1,0 +1,230 @@
+//! Runtime integration: execute every shipped artifact from rust and
+//! cross-check outputs against the in-process CPU implementations —
+//! the rust-side half of the kernel-vs-oracle contract (the python half
+//! is python/tests/test_kernel.py).
+//!
+//! Requires `make artifacts`; every test skips gracefully if missing.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use zmc::expr::Expr;
+use zmc::runtime::device::DeviceRuntime;
+use zmc::runtime::launch::{
+    harmonic_inputs, stratified_inputs, vm_multi_inputs, RngCtr, VmFn,
+};
+use zmc::runtime::registry::Registry;
+use zmc::sampler::StreamKey;
+use zmc::vm::interp::eval_scalar;
+
+fn registry() -> Option<Arc<Registry>> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return None;
+    }
+    Some(Arc::new(Registry::load(dir).unwrap()))
+}
+
+/// CPU mirror of one vm_multi launch row: same Philox stream, same
+/// bytecode, f64 accumulation.
+fn cpu_vm_sums(
+    f: &VmFn,
+    samples: usize,
+    seed: [u32; 2],
+    base: u32,
+    trial: u32,
+) -> (f64, f64) {
+    let key = StreamKey {
+        seed,
+        stream: f.stream,
+        trial,
+    };
+    let dims = f.bounds.len();
+    let (mut s, mut q) = (0f64, 0f64);
+    for i in 0..samples {
+        let u = key.point(base.wrapping_add(i as u32), dims);
+        let x: Vec<f64> = (0..dims)
+            .map(|d| {
+                let (lo, hi) = f.bounds[d];
+                // device does the affine map in f32 — mirror it
+                (lo as f32 + (hi - lo) as f32 * u[d]) as f64
+            })
+            .collect();
+        let v = eval_scalar(&f.program, &x, &f.theta) as f32 as f64;
+        s += v;
+        q += v * v;
+    }
+    (s, q)
+}
+
+#[test]
+fn vm_multi_artifact_matches_cpu_bit_path() {
+    let Some(reg) = registry() else { return };
+    let exe = reg.get("vm_multi_f8_s4096").unwrap();
+    let dev = DeviceRuntime::new(Arc::clone(&reg)).unwrap();
+
+    let mk = |src: &str, bounds: Vec<(f64, f64)>, theta: Vec<f64>, stream| {
+        VmFn {
+            program: Expr::parse(src).unwrap().compile().unwrap(),
+            theta,
+            bounds,
+            stream,
+        }
+    };
+    let fns = vec![
+        mk("x1*x2", vec![(0.0, 1.0), (0.0, 1.0)], vec![], 11),
+        mk(
+            "p0*abs(x1+x2-x3)",
+            vec![(0.0, 1.0); 3],
+            vec![2.0],
+            12,
+        ),
+        mk("sin(x1)+cos(x2)", vec![(-1.0, 1.0), (0.0, 2.0)], vec![], 13),
+        mk("exp(-x1*x1)", vec![(-2.0, 2.0)], vec![], 14),
+    ];
+    let rng = RngCtr { seed: [7, 8], base: 0, trial: 3 };
+    let inputs = vm_multi_inputs(exe, rng, &fns).unwrap();
+    let out = dev.execute(&exe.name, &inputs).unwrap();
+    assert_eq!(out.data.len(), exe.n_fns * 2);
+
+    for (i, f) in fns.iter().enumerate() {
+        let (s, q) = cpu_vm_sums(f, exe.samples, rng.seed, 0, 3);
+        let (ds, dq) = (out.data[i * 2] as f64, out.data[i * 2 + 1] as f64);
+        let tol = 1e-3 * q.abs().max(1.0);
+        assert!(
+            (ds - s).abs() < tol,
+            "fn {i} sum: device={ds} cpu={s}"
+        );
+        assert!((dq - q).abs() < tol, "fn {i} sumsq: device={dq} cpu={q}");
+    }
+    // unused slots are the null program: sums exactly 0
+    for i in fns.len()..exe.n_fns {
+        assert_eq!(out.data[i * 2], 0.0);
+        assert_eq!(out.data[i * 2 + 1], 0.0);
+    }
+}
+
+#[test]
+fn harmonic_artifact_matches_cpu() {
+    let Some(reg) = registry() else { return };
+    let exe = reg.get("harmonic_s8192_n128").unwrap();
+    let dev = DeviceRuntime::new(Arc::clone(&reg)).unwrap();
+
+    let n = 5;
+    let k: Vec<Vec<f64>> = (1..=n)
+        .map(|i| vec![i as f64 * 1.7, -(i as f64), 0.5 * i as f64])
+        .collect();
+    let a: Vec<f64> = (0..n).map(|i| 1.0 + i as f64 * 0.25).collect();
+    let b: Vec<f64> = (0..n).map(|i| -(i as f64) * 0.5).collect();
+    let lo = vec![0.0, -1.0, 0.0];
+    let hi = vec![1.0, 1.0, 2.0];
+    let rng = RngCtr { seed: [100, 200], base: 4096, trial: 1 };
+    let stream = 77;
+    let inputs =
+        harmonic_inputs(exe, rng, stream, &k, &a, &b, &lo, &hi).unwrap();
+    let out = dev.execute(&exe.name, &inputs).unwrap();
+
+    // CPU mirror (f32 phases like the device MXU path)
+    let key = StreamKey { seed: rng.seed, stream, trial: rng.trial };
+    let mut sums = vec![0f64; n];
+    let mut sqs = vec![0f64; n];
+    for i in 0..exe.samples {
+        let u = key.point(rng.base.wrapping_add(i as u32), exe.dims);
+        let x: Vec<f32> = (0..3)
+            .map(|d| lo[d] as f32 + (hi[d] - lo[d]) as f32 * u[d])
+            .collect();
+        for (j, kj) in k.iter().enumerate() {
+            let phase: f32 = (0..3)
+                .map(|d| kj[d] as f32 * x[d])
+                .sum();
+            let v =
+                (a[j] as f32 * phase.cos() + b[j] as f32 * phase.sin()) as f64;
+            sums[j] += v;
+            sqs[j] += v * v;
+        }
+    }
+    for j in 0..n {
+        let ds = out.data[j] as f64;
+        let dq = out.data[exe.n_fns + j] as f64;
+        assert!(
+            (ds - sums[j]).abs() < 1e-2 * sums[j].abs().max(10.0),
+            "fn {j} sum: {ds} vs {}",
+            sums[j]
+        );
+        assert!(
+            (dq - sqs[j]).abs() < 1e-2 * sqs[j].abs().max(10.0),
+            "fn {j} sumsq: {dq} vs {}",
+            sqs[j]
+        );
+    }
+}
+
+#[test]
+fn stratified_artifact_partitions_consistently() {
+    let Some(reg) = registry() else { return };
+    let exe = reg.get("stratified_c16_s256").unwrap();
+    let dev = DeviceRuntime::new(Arc::clone(&reg)).unwrap();
+
+    // integrand 1 over a 16-cube partition of [0,1]: each cube returns
+    // exactly `samples` for sum and sumsq.
+    let prog = Expr::parse("1").unwrap().compile().unwrap();
+    let cubes: Vec<(Vec<f64>, Vec<f64>)> = (0..16)
+        .map(|i| {
+            (vec![i as f64 / 16.0], vec![(i + 1) as f64 / 16.0])
+        })
+        .collect();
+    let streams: Vec<u32> = (0..16).collect();
+    let rng = RngCtr { seed: [5, 6], base: 0, trial: 0 };
+    let inputs =
+        stratified_inputs(exe, rng, &prog, &[], &cubes, &streams).unwrap();
+    let out = dev.execute(&exe.name, &inputs).unwrap();
+    for c in 0..16 {
+        assert_eq!(out.data[c * 2], exe.samples as f32, "cube {c}");
+        assert_eq!(out.data[c * 2 + 1], exe.samples as f32);
+    }
+}
+
+#[test]
+fn chunked_counters_tile_seamlessly() {
+    // two launches with base 0 and base=samples must equal one logical
+    // stream (no sample reuse): their means differ, and the merged mean
+    // approaches truth. Verified against the CPU mirror exactly.
+    let Some(reg) = registry() else { return };
+    let exe = reg.get("vm_multi_f8_s4096").unwrap();
+    let dev = DeviceRuntime::new(Arc::clone(&reg)).unwrap();
+    let f = VmFn {
+        program: Expr::parse("x1").unwrap().compile().unwrap(),
+        theta: vec![],
+        bounds: vec![(0.0, 1.0)],
+        stream: 0,
+    };
+    let mut totals = (0f64, 0f64);
+    for chunk in 0..2u32 {
+        let rng = RngCtr {
+            seed: [9, 9],
+            base: chunk * exe.samples as u32,
+            trial: 0,
+        };
+        let inputs = vm_multi_inputs(exe, rng, std::slice::from_ref(&f))
+            .unwrap();
+        let out = dev.execute(&exe.name, &inputs).unwrap();
+        totals.0 += out.data[0] as f64;
+        totals.1 += out.data[1] as f64;
+    }
+    let (s, q) =
+        cpu_vm_sums(&f, 2 * exe.samples, [9, 9], 0, 0);
+    assert!((totals.0 - s).abs() < 1e-3 * s.abs());
+    assert!((totals.1 - q).abs() < 1e-3 * q.abs());
+}
+
+#[test]
+fn execute_rejects_malformed_inputs() {
+    let Some(reg) = registry() else { return };
+    let exe = reg.get("vm_multi_f8_s4096").unwrap();
+    let dev = DeviceRuntime::new(Arc::clone(&reg)).unwrap();
+    // wrong input count
+    assert!(dev.execute(&exe.name, &[]).is_err());
+    // unknown executable
+    assert!(dev.execute("nope", &[]).is_err());
+}
