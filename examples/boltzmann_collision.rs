@@ -23,6 +23,7 @@
 
 use std::sync::Arc;
 
+use zmc::engine::Engine;
 use zmc::integrator::functional::{self, linspace};
 use zmc::integrator::multifunctions::MultiConfig;
 use zmc::integrator::spec::IntegralJob;
@@ -81,8 +82,11 @@ fn main() -> anyhow::Result<()> {
         .and_then(|v| v.parse().ok())
         .unwrap_or(1 << 17);
 
-    let registry = Arc::new(Registry::load("artifacts")?);
+    let registry = Arc::new(
+        Registry::load("artifacts").unwrap_or_else(|_| Registry::emulated()),
+    );
     let pool = DevicePool::new(&registry, 1)?;
+    let engine = Engine::for_pool(&pool)?;
 
     // beam energies E ∈ [0.5, 8] (units of kT), screening ε(E) = 0.02+0.01·E
     let energies = linspace(0.5, 8.0, n_beams);
@@ -102,7 +106,7 @@ fn main() -> anyhow::Result<()> {
         ..Default::default()
     };
     let t0 = std::time::Instant::now();
-    let rates = functional::scan(&pool, &job, &thetas, &cfg)?;
+    let rates = functional::scan(&engine, &job, &thetas, &cfg)?;
     let wall = t0.elapsed().as_secs_f64();
 
     println!("# beam  E  rate  sigma  reference  |z|");

@@ -13,6 +13,7 @@
 use std::sync::Arc;
 
 use zmc::analytic;
+use zmc::engine::Engine;
 use zmc::integrator::multifunctions::{self, MultiConfig};
 use zmc::integrator::spec::IntegralJob;
 use zmc::runtime::device::DevicePool;
@@ -29,8 +30,11 @@ fn main() -> anyhow::Result<()> {
         .ok()
         .and_then(|v| v.parse().ok())
         .unwrap_or(1 << 18);
-    let registry = Arc::new(Registry::load("artifacts")?);
+    let registry = Arc::new(
+        Registry::load("artifacts").unwrap_or_else(|_| Registry::emulated()),
+    );
     let pool = DevicePool::new(&registry, 1)?;
+    let engine = Engine::for_pool(&pool)?;
     let unit2 = [(0.0, 1.0), (0.0, 1.0)];
     let unit3 = [(0.0, 1.0), (0.0, 1.0), (0.0, 1.0)];
 
@@ -94,7 +98,7 @@ fn main() -> anyhow::Result<()> {
         ..Default::default()
     };
     let t0 = std::time::Instant::now();
-    let ests = multifunctions::integrate(&pool, &jobs, &cfg)?;
+    let ests = multifunctions::integrate(&engine, &jobs, &cfg)?;
     let wall = t0.elapsed().as_secs_f64();
 
     println!("# case  estimate  sigma  truth  |z|");

@@ -14,6 +14,7 @@
 use std::sync::Arc;
 
 use zmc::analytic;
+use zmc::engine::Engine;
 use zmc::integrator::multifunctions::{self, MultiConfig};
 use zmc::integrator::spec::IntegralJob;
 use zmc::runtime::device::DevicePool;
@@ -24,8 +25,11 @@ fn main() -> anyhow::Result<()> {
         .ok()
         .and_then(|v| v.parse().ok())
         .unwrap_or(1 << 17);
-    let registry = Arc::new(Registry::load("artifacts")?);
+    let registry = Arc::new(
+        Registry::load("artifacts").unwrap_or_else(|_| Registry::emulated()),
+    );
     let pool = DevicePool::new(&registry, 1)?;
+    let engine = Engine::for_pool(&pool)?;
 
     // a_n, b_n: arbitrary but reproducible coefficient ramps
     let mut jobs = Vec::new();
@@ -56,7 +60,7 @@ fn main() -> anyhow::Result<()> {
         ..Default::default()
     };
     let t0 = std::time::Instant::now();
-    let ests = multifunctions::integrate(&pool, &jobs, &cfg)?;
+    let ests = multifunctions::integrate(&engine, &jobs, &cfg)?;
     let wall = t0.elapsed().as_secs_f64();
 
     println!("# n  dims  estimate  sigma  analytic  |z|");

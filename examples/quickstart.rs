@@ -7,15 +7,21 @@
 
 use std::sync::Arc;
 
+use zmc::engine::Engine;
 use zmc::integrator::multifunctions::{self, MultiConfig};
 use zmc::integrator::spec::IntegralJob;
 use zmc::runtime::device::DevicePool;
 use zmc::runtime::registry::Registry;
 
 fn main() -> anyhow::Result<()> {
-    // 1. load the AOT artifacts (built once by `make artifacts`)
-    let registry = Arc::new(Registry::load("artifacts")?);
+    // 1. load the AOT artifacts (built once by `make artifacts`), or the
+    //    emulated registry when running without PJRT, and spawn the
+    //    persistent engine: workers + executable caches live from here on
+    let registry = Arc::new(
+        Registry::load("artifacts").unwrap_or_else(|_| Registry::emulated()),
+    );
     let pool = DevicePool::new(&registry, 1)?;
+    let engine = Engine::for_pool(&pool)?;
 
     // 2. describe the integral: ∫∫ sin(x1)·x2 over [0,π]×[0,1]
     let job = IntegralJob::parse(
@@ -24,13 +30,13 @@ fn main() -> anyhow::Result<()> {
     )?;
 
     // 3. run it — the expression was compiled to device bytecode; the
-    //    launch runs on the PJRT CPU plugin standing in for a GPU.
+    //    launch runs on the simulated device pool standing in for a GPU.
     let cfg = MultiConfig {
         samples_per_fn: 1 << 20,
         seed: 42,
         ..Default::default()
     };
-    let est = multifunctions::integrate(&pool, &[job], &cfg)?[0];
+    let est = multifunctions::integrate(&engine, &[job], &cfg)?[0];
 
     // truth: ∫ sin = 2, ∫ x2 = 1/2 → 1.0
     println!("I        = {:.6} ± {:.2e}", est.value, est.std_err);

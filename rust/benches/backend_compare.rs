@@ -9,10 +9,11 @@
 
 use std::sync::Arc;
 
+use zmc::engine::Engine;
+use zmc::integrator::direct;
 use zmc::integrator::harmonic::{self, HarmonicBatch};
 use zmc::integrator::multifunctions::{self, MultiConfig};
 use zmc::integrator::spec::IntegralJob;
-use zmc::integrator::direct;
 use zmc::runtime::device::DevicePool;
 use zmc::runtime::registry::Registry;
 use zmc::util::bench::{fmt_s, time, Bench};
@@ -23,8 +24,11 @@ fn env(key: &str, default: usize) -> usize {
 
 fn main() -> anyhow::Result<()> {
     let samples = env("ZMC_A3_SAMPLES", 1 << 16);
-    let registry = Arc::new(Registry::load("artifacts")?);
+    let registry = Arc::new(
+        Registry::load("artifacts").unwrap_or_else(|_| Registry::emulated()),
+    );
     let pool = DevicePool::new(&registry, 1)?;
+    let engine = Engine::for_pool(&pool)?;
     let mut b = Bench::new("backend_compare");
 
     let cases = [
@@ -42,7 +46,7 @@ fn main() -> anyhow::Result<()> {
         };
         let td = time(1, 3, || {
             multifunctions::integrate(
-                &pool,
+                &engine,
                 std::slice::from_ref(&job),
                 &cfg,
             )
@@ -82,7 +86,7 @@ fn main() -> anyhow::Result<()> {
         ..Default::default()
     };
     let th = time(1, 3, || {
-        harmonic::integrate(&pool, &batch, &hcfg).unwrap();
+        harmonic::integrate(&engine, &batch, &hcfg).unwrap();
     });
     let vm_jobs: Vec<IntegralJob> = (1..=n)
         .map(|i| {
@@ -102,7 +106,7 @@ fn main() -> anyhow::Result<()> {
         ..Default::default()
     };
     let tv = time(1, 2, || {
-        multifunctions::integrate(&pool, &vm_jobs, &vcfg).unwrap();
+        multifunctions::integrate(&engine, &vm_jobs, &vcfg).unwrap();
     });
     // function-samples per second (n functions × S samples per run)
     let fsamp = (n as usize * samples) as f64;

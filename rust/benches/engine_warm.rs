@@ -1,0 +1,191 @@
+//! Bench: persistent engine vs per-call lifecycle (the tentpole win).
+//!
+//! Before the engine existed, every `integrate()` call spawned fresh
+//! worker threads, constructed a new device client per worker, and
+//! recompiled every HLO executable it touched. This bench measures that
+//! cold lifecycle against warm steady-state `submit()` throughput on a
+//! 100-function batch, two ways:
+//!
+//! 1. **sim** — a simulated-PJRT backend with calibrated costs (client
+//!    construction ~25 ms, HLO compile ~150 ms, launch ~2 ms — the
+//!    order of magnitude the TFRT CPU client shows on the shipped
+//!    artifacts; see DESIGN.md "Substitutions" for why we model rather
+//!    than require PJRT here). This isolates exactly what persistence
+//!    amortizes, independent of integrand cost.
+//! 2. **device** — the real `DeviceBackend` on the loaded registry
+//!    (PJRT artifacts when present, else the CPU emulator), with the
+//!    registry's compile ledger shown so the no-recompile claim is
+//!    visible, not inferred.
+//!
+//! Env knobs: ZMC_WARM_FUNCS, ZMC_WARM_ROUNDS.
+
+use std::cell::RefCell;
+use std::collections::HashSet;
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::Result;
+use zmc::engine::{Backend, Engine, EngineConfig};
+use zmc::integrator::multifunctions::{self, MultiConfig};
+use zmc::integrator::spec::IntegralJob;
+use zmc::runtime::device::DevicePool;
+use zmc::runtime::registry::Registry;
+use zmc::util::bench::{fmt_s, time, Bench};
+
+fn env(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+// ------------------------------------------------------- simulated PJRT
+
+struct SimBackend {
+    client_ms: u64,
+    compile_ms: u64,
+    exec_ms: u64,
+}
+
+struct SimCtx {
+    compiled: RefCell<HashSet<String>>,
+    compile_ms: u64,
+    exec_ms: u64,
+}
+
+impl Backend for SimBackend {
+    type Ctx = SimCtx;
+    type Task = String; // executable name
+    type Out = ();
+
+    fn make_ctx(&self, _worker: usize) -> Result<SimCtx> {
+        std::thread::sleep(Duration::from_millis(self.client_ms));
+        Ok(SimCtx {
+            compiled: RefCell::new(HashSet::new()),
+            compile_ms: self.compile_ms,
+            exec_ms: self.exec_ms,
+        })
+    }
+
+    fn run(&self, ctx: &SimCtx, exe: &String) -> Result<()> {
+        if !ctx.compiled.borrow().contains(exe) {
+            std::thread::sleep(Duration::from_millis(ctx.compile_ms));
+            ctx.compiled.borrow_mut().insert(exe.clone());
+        }
+        std::thread::sleep(Duration::from_millis(ctx.exec_ms));
+        Ok(())
+    }
+}
+
+fn sim_backend() -> SimBackend {
+    SimBackend { client_ms: 25, compile_ms: 150, exec_ms: 2 }
+}
+
+// --------------------------------------------------------------- main
+
+fn main() -> anyhow::Result<()> {
+    let n_funcs = env("ZMC_WARM_FUNCS", 100);
+    let rounds = env("ZMC_WARM_ROUNDS", 5);
+    let mut b = Bench::new("engine_warm");
+
+    // --- 1. simulated PJRT costs --------------------------------------
+    // a 100-function batch on a 32-wide vm_multi exe = 4 launches
+    let launches: Vec<String> =
+        (0..n_funcs.div_ceil(32)).map(|_| "vm_multi".to_string()).collect();
+
+    // cold: the pre-engine lifecycle — new engine (thread + client +
+    // compile) per call, torn down after
+    let tc = time(0, 3, || {
+        let e = Engine::new(sim_backend(), EngineConfig::new(1)).unwrap();
+        e.run(launches.clone()).unwrap();
+        drop(e);
+    });
+
+    // warm: one persistent engine, repeated submits
+    let engine = Engine::new(sim_backend(), EngineConfig::new(1))?;
+    engine.run(launches.clone())?; // first call pays compile once
+    let tw = time(1, rounds, || {
+        engine.run(launches.clone()).unwrap();
+    });
+    let sim_speedup = tc.mean_s / tw.mean_s;
+    b.row(
+        "sim_cold_per_call",
+        &[
+            ("launches", launches.len().to_string()),
+            ("wall", fmt_s(tc.mean_s)),
+        ],
+    );
+    b.row(
+        "sim_warm_per_submit",
+        &[
+            ("launches", launches.len().to_string()),
+            ("wall", fmt_s(tw.mean_s)),
+            ("speedup_vs_cold", format!("{sim_speedup:.1}x")),
+        ],
+    );
+    drop(engine);
+
+    // --- 2. real device backend ---------------------------------------
+    let jobs: Vec<IntegralJob> = (0..n_funcs)
+        .map(|i| {
+            IntegralJob::with_params(
+                "x1^2 + p0*sin(x2)",
+                &[(0.0, 1.0), (0.0, 1.0)],
+                &[i as f64 * 0.01],
+            )
+            .unwrap()
+        })
+        .collect();
+    let cfg = MultiConfig {
+        samples_per_fn: 1 << 14,
+        seed: 7,
+        exe: Some("vm_multi_f32_s16384".into()),
+        ..Default::default()
+    };
+
+    // cold: fresh registry + engine per call (per-call compile ledger)
+    let load = || {
+        Arc::new(
+            Registry::load("artifacts")
+                .unwrap_or_else(|_| Registry::emulated()),
+        )
+    };
+    let td = time(0, 3, || {
+        let reg = load();
+        let pool = DevicePool::new(&reg, 1).unwrap();
+        let e = Engine::for_pool(&pool).unwrap();
+        multifunctions::integrate(&e, &jobs, &cfg).unwrap();
+    });
+
+    // warm: persistent engine; the compile ledger must not move after
+    // the first call
+    let reg = load();
+    let pool = DevicePool::new(&reg, 1)?;
+    let engine = Engine::for_pool(&pool)?;
+    multifunctions::integrate(&engine, &jobs, &cfg)?;
+    let compiles_after_first = reg.compile_count();
+    let twd = time(1, rounds, || {
+        multifunctions::integrate(&engine, &jobs, &cfg).unwrap();
+    });
+    let compiles_after_all = reg.compile_count();
+    b.row(
+        "device_cold_per_call",
+        &[
+            ("funcs", n_funcs.to_string()),
+            ("wall", fmt_s(td.mean_s)),
+        ],
+    );
+    b.row(
+        "device_warm_per_submit",
+        &[
+            ("funcs", n_funcs.to_string()),
+            ("wall", fmt_s(twd.mean_s)),
+            ("speedup_vs_cold", format!("{:.1}x", td.mean_s / twd.mean_s)),
+            ("compiles_first_call", compiles_after_first.to_string()),
+            ("compiles_after_warm_loop", compiles_after_all.to_string()),
+        ],
+    );
+    assert_eq!(
+        compiles_after_first, compiles_after_all,
+        "warm engine recompiled an executable"
+    );
+    b.finish();
+    Ok(())
+}

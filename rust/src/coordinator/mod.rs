@@ -1,10 +1,15 @@
 //! The coordination layer — what Ray provided in the paper, rebuilt as a
-//! deterministic work-queue scheduler over the simulated device pool.
+//! deterministic work-queue over the simulated device pool.
 //!
-//! Responsibilities:
-//! * [`scheduler`] — generic chunk scheduler: a shared FIFO of tasks,
-//!   N worker threads (one [`DeviceRuntime`](crate::runtime::device)
-//!   each), at-least-once execution with bounded retries.
+//! Production traffic runs on the persistent [`crate::engine`] (workers
+//! and their executable caches live for the process lifetime; jobs are
+//! submitted concurrently and awaited per-handle). This module holds
+//! the policy pieces the engine enforces, plus the legacy one-shot
+//! entry point:
+//!
+//! * [`scheduler`] — one-shot synchronous scheduler: runs a single task
+//!   list on N ephemeral workers via the engine's worker loop; kept for
+//!   the property tests and borrowed-closure callers.
 //! * [`fault`] — deterministic failure injection (every k-th launch
 //!   fails / a worker dies after m tasks), used to prove the retry path
 //!   preserves results exactly (Philox counters make task execution

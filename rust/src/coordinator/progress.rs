@@ -4,7 +4,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::Duration;
 
-/// Metrics collected across one scheduler run.
+/// Metrics collected across one scheduler run or engine lifetime.
 #[derive(Debug, Default)]
 pub struct Metrics {
     pub tasks_done: AtomicU64,
@@ -12,6 +12,10 @@ pub struct Metrics {
     pub failures: AtomicU64,
     /// (busy, total) wall time per worker, filled at worker exit.
     worker_times: Mutex<Vec<(Duration, Duration)>>,
+    /// Context-construction failures (worker never joined the pool).
+    /// Recorded even when peers keep the job alive, and appended to the
+    /// final error of any job that later fails.
+    worker_errors: Mutex<Vec<String>>,
 }
 
 impl Metrics {
@@ -33,6 +37,17 @@ impl Metrics {
 
     pub fn record_worker(&self, busy: Duration, total: Duration) {
         self.worker_times.lock().unwrap().push((busy, total));
+    }
+
+    /// Record a worker that died before serving any task (context
+    /// construction failed).
+    pub fn record_worker_error(&self, msg: String) {
+        self.worker_errors.lock().unwrap().push(msg);
+    }
+
+    /// All recorded context-construction failures, in arrival order.
+    pub fn worker_errors(&self) -> Vec<String> {
+        self.worker_errors.lock().unwrap().clone()
     }
 
     pub fn done(&self) -> u64 {
@@ -90,6 +105,17 @@ mod tests {
         assert_eq!(m.done(), 2);
         assert_eq!(m.retried(), 1);
         assert_eq!(m.failed(), 0);
+    }
+
+    #[test]
+    fn worker_errors_accumulate() {
+        let m = Metrics::new();
+        assert!(m.worker_errors().is_empty());
+        m.record_worker_error("worker 3: context: no device".into());
+        m.record_worker_error("worker 5: context: oom".into());
+        let errs = m.worker_errors();
+        assert_eq!(errs.len(), 2);
+        assert!(errs[0].contains("worker 3"));
     }
 
     #[test]

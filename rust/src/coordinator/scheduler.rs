@@ -1,19 +1,31 @@
-//! Work-queue scheduler: N device workers pulling chunk tasks from a
-//! shared FIFO, with bounded retries and deterministic fault injection.
+//! One-shot work-queue scheduler — the legacy synchronous API, now a
+//! thin scoped-thread wrapper over the persistent engine's worker loop
+//! ([`crate::engine::core`]).
 //!
-//! Generic over the task and worker-context types so the same machinery
-//! runs (a) real PJRT launches in production, (b) pure-CPU mock tasks in
-//! the property tests, and (c) virtual-time tasks in the cluster
-//! scaling simulation.
+//! `Scheduler::run` executes one task list to completion on N ephemeral
+//! workers and returns. Production integrators no longer use it (they
+//! submit to a long-lived [`crate::engine::Engine`] whose device
+//! contexts and executable caches persist across calls); it remains the
+//! entry point for the property tests, the cluster-scaling measurements,
+//! and any caller that genuinely wants borrowed, non-`'static` closures.
+//!
+//! Because both paths share one worker loop, the retry/fault semantics
+//! are identical by construction: bounded retries per task, transient
+//! faults requeue, a dead worker's task is handed to its peers, and a
+//! worker whose context construction fails is recorded in [`Metrics`]
+//! and surfaced in the final error if the job later fails (previously
+//! such errors were silently dropped unless the worker was the last one
+//! alive). The old empty-queue `yield_now` spin-wait is gone: workers
+//! block on the engine's condvar.
 
-use std::collections::VecDeque;
-use std::sync::{Arc, Condvar, Mutex};
-use std::time::Instant;
+use std::marker::PhantomData;
+use std::sync::Arc;
 
 use anyhow::{anyhow, Result};
 
-use crate::coordinator::fault::{FaultPlan, Verdict};
+use crate::coordinator::fault::FaultPlan;
 use crate::coordinator::progress::Metrics;
+use crate::engine::core::{worker_loop, Backend, JobState, Shared};
 
 /// Scheduler configuration.
 #[derive(Debug, Clone)]
@@ -26,6 +38,31 @@ pub struct Scheduler {
 impl Default for Scheduler {
     fn default() -> Self {
         Scheduler { n_workers: 1, max_retries: 3 }
+    }
+}
+
+/// Adapts a pair of borrowed closures to the engine's [`Backend`].
+struct ClosureBackend<F, G, C, T, R> {
+    make_ctx: F,
+    run: G,
+    _marker: PhantomData<fn() -> (C, T, R)>,
+}
+
+impl<F, G, C, T, R> Backend for ClosureBackend<F, G, C, T, R>
+where
+    F: Fn(usize) -> Result<C>,
+    G: Fn(&C, &T) -> Result<R>,
+{
+    type Ctx = C;
+    type Task = T;
+    type Out = R;
+
+    fn make_ctx(&self, worker: usize) -> Result<C> {
+        (self.make_ctx)(worker)
+    }
+
+    fn run(&self, ctx: &C, task: &T) -> Result<R> {
+        (self.run)(ctx, task)
     }
 }
 
@@ -59,166 +96,30 @@ impl Scheduler {
         if self.n_workers == 0 {
             return Err(anyhow!("scheduler needs >= 1 worker"));
         }
-        let n_tasks = tasks.len();
-        let queue: Mutex<VecDeque<usize>> =
-            Mutex::new((0..n_tasks).collect());
-        let attempts: Mutex<Vec<u32>> = Mutex::new(vec![0; n_tasks]);
-        let results: Mutex<Vec<Option<R>>> =
-            Mutex::new((0..n_tasks).map(|_| None).collect());
-        let remaining = Mutex::new(n_tasks);
-        let done_cv = Condvar::new();
-        let fatal: Mutex<Option<String>> = Mutex::new(None);
-        let live_workers = Mutex::new(self.n_workers);
-        let tasks = Arc::new(tasks);
+        let backend = ClosureBackend {
+            make_ctx,
+            run,
+            _marker: PhantomData,
+        };
+        let shared = Shared::new(self.n_workers);
+        let job = Arc::new(JobState::new(tasks, self.max_retries));
+        shared.enqueue(&job).expect("fresh queue accepts work");
 
         std::thread::scope(|scope| {
             for w in 0..self.n_workers {
-                let queue = &queue;
-                let attempts = &attempts;
-                let results = &results;
-                let remaining = &remaining;
-                let done_cv = &done_cv;
-                let fatal = &fatal;
-                let live_workers = &live_workers;
-                let tasks = Arc::clone(&tasks);
-                let make_ctx = &make_ctx;
-                let run = &run;
+                let shared = &shared;
+                let backend = &backend;
                 scope.spawn(move || {
-                    let t_start = Instant::now();
-                    let mut busy = std::time::Duration::ZERO;
-                    let mut my_attempts: u64 = 0;
-                    let ctx = match make_ctx(w) {
-                        Ok(c) => c,
-                        Err(e) => {
-                            worker_exit(live_workers, fatal, done_cv, Some(
-                                format!("worker {w}: context: {e}"),
-                            ));
-                            return;
-                        }
-                    };
-                    loop {
-                        // stop if the job is finished or failed
-                        if fatal.lock().unwrap().is_some()
-                            || *remaining.lock().unwrap() == 0
-                        {
-                            break;
-                        }
-                        let idx = { queue.lock().unwrap().pop_front() };
-                        let Some(idx) = idx else {
-                            // queue drained but tasks may still be
-                            // in-flight on other workers (and might be
-                            // requeued); spin-wait briefly.
-                            std::thread::yield_now();
-                            continue;
-                        };
-                        match fault.judge(w, my_attempts) {
-                            Verdict::WorkerDead => {
-                                // put the task back and die
-                                queue.lock().unwrap().push_front(idx);
-                                break;
-                            }
-                            Verdict::FailAttempt => {
-                                my_attempts += 1;
-                                metrics.failure();
-                                requeue_or_abort(
-                                    idx,
-                                    "injected fault",
-                                    self.max_retries,
-                                    queue,
-                                    attempts,
-                                    fatal,
-                                    metrics,
-                                );
-                                continue;
-                            }
-                            Verdict::Proceed => {}
-                        }
-                        my_attempts += 1;
-                        let t0 = Instant::now();
-                        match run(&ctx, &tasks[idx]) {
-                            Ok(r) => {
-                                busy += t0.elapsed();
-                                results.lock().unwrap()[idx] = Some(r);
-                                metrics.task_done();
-                                let mut rem = remaining.lock().unwrap();
-                                *rem -= 1;
-                                if *rem == 0 {
-                                    done_cv.notify_all();
-                                }
-                            }
-                            Err(e) => {
-                                busy += t0.elapsed();
-                                metrics.failure();
-                                requeue_or_abort(
-                                    idx,
-                                    &e.to_string(),
-                                    self.max_retries,
-                                    queue,
-                                    attempts,
-                                    fatal,
-                                    metrics,
-                                );
-                            }
-                        }
-                    }
-                    metrics.record_worker(busy, t_start.elapsed());
-                    worker_exit(live_workers, fatal, done_cv, None);
+                    worker_loop(w, shared, backend, fault, metrics)
                 });
             }
-        });
-
-        if let Some(msg) = fatal.lock().unwrap().take() {
-            return Err(anyhow!(msg));
-        }
-        if *remaining.lock().unwrap() != 0 {
-            return Err(anyhow!(
-                "all workers exited with {} tasks unfinished",
-                remaining.lock().unwrap()
-            ));
-        }
-        let results = results.into_inner().unwrap();
-        Ok(results.into_iter().map(|r| r.unwrap()).collect())
+            // Wait for this one job, then release the workers so the
+            // scope can join them.
+            let out = job.wait();
+            shared.begin_shutdown();
+            out
+        })
     }
-}
-
-fn requeue_or_abort(
-    idx: usize,
-    err: &str,
-    max_retries: u32,
-    queue: &Mutex<VecDeque<usize>>,
-    attempts: &Mutex<Vec<u32>>,
-    fatal: &Mutex<Option<String>>,
-    metrics: &Metrics,
-) {
-    let mut att = attempts.lock().unwrap();
-    att[idx] += 1;
-    if att[idx] > max_retries {
-        *fatal.lock().unwrap() = Some(format!(
-            "task {idx} failed after {} attempts: {err}",
-            att[idx]
-        ));
-    } else {
-        metrics.retry();
-        queue.lock().unwrap().push_back(idx);
-    }
-}
-
-fn worker_exit(
-    live: &Mutex<usize>,
-    fatal: &Mutex<Option<String>>,
-    cv: &Condvar,
-    err: Option<String>,
-) {
-    let mut l = live.lock().unwrap();
-    *l -= 1;
-    if let Some(e) = err {
-        // a worker that failed to even build its context is fatal only
-        // if it was the last one alive
-        if *l == 0 {
-            *fatal.lock().unwrap() = Some(e);
-        }
-    }
-    cv.notify_all();
 }
 
 #[cfg(test)]
@@ -307,6 +208,66 @@ mod tests {
             )
             .unwrap_err();
         assert!(err.to_string().contains("no device"));
+    }
+
+    #[test]
+    fn nonfinal_context_failure_is_recorded_not_fatal() {
+        // Worker 0 can never build a context; worker 1 carries the job.
+        // The error must land in Metrics instead of being dropped.
+        let s = Scheduler::new(2);
+        let m = Metrics::new();
+        let out = s
+            .run(
+                (0..20).collect::<Vec<i32>>(),
+                &FaultPlan::none(),
+                &m,
+                |w| {
+                    if w == 0 {
+                        Err(anyhow!("flaky node"))
+                    } else {
+                        Ok(())
+                    }
+                },
+                |_, &t| Ok(t),
+            )
+            .unwrap();
+        assert_eq!(out.len(), 20);
+        let errs = m.worker_errors();
+        assert_eq!(errs.len(), 1);
+        assert!(errs[0].contains("flaky node"), "{errs:?}");
+    }
+
+    #[test]
+    fn context_failure_surfaces_when_job_fails_later() {
+        // Worker 0's context error is not fatal by itself, but when the
+        // job dies on retries the root cause must mention it.
+        let s = Scheduler { n_workers: 2, max_retries: 1 };
+        let m = Metrics::new();
+        let err = s
+            .run(
+                vec![1i32],
+                &FaultPlan::none(),
+                &m,
+                |w| {
+                    if w == 0 {
+                        Err(anyhow!("bad PJRT plugin"))
+                    } else {
+                        // don't start until worker 0's error is recorded,
+                        // so the failure message deterministically sees it
+                        while m.worker_errors().is_empty() {
+                            std::thread::sleep(
+                                std::time::Duration::from_millis(1),
+                            );
+                        }
+                        Ok(())
+                    }
+                },
+                |_, _| -> Result<i32> { Err(anyhow!("launch failed")) },
+            )
+            .unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("launch failed"), "{msg}");
+        assert!(msg.contains("bad PJRT plugin"), "{msg}");
     }
 
     #[test]

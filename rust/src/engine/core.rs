@@ -1,0 +1,621 @@
+//! Engine core: the shared condvar-backed MPMC task queue, per-job
+//! state, and the worker loop — used in two modes:
+//!
+//! * **persistent** — [`Engine`] spawns its workers once; each worker
+//!   builds its context (a `DeviceRuntime` in production, so its
+//!   executable cache stays warm) and serves `submit()`ed jobs for the
+//!   process lifetime;
+//! * **one-shot** — `coordinator::scheduler::Scheduler::run` drives the
+//!   same loop under `std::thread::scope` with borrowed closures, which
+//!   keeps the legacy synchronous API and the property tests on exactly
+//!   the machinery that runs in production.
+//!
+//! Workers block on a condvar when the queue is empty (no spin-wait);
+//! retries, deterministic fault injection and worker-death survival are
+//! the policy layer inherited from the original scheduler: a failed
+//! task is requeued up to the job's retry budget, a dead worker's
+//! in-hand task is pushed back for its peers, and context-construction
+//! failures are recorded in [`Metrics`] and surfaced in the final error
+//! of any job that later fails.
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Error, Result};
+
+use crate::coordinator::fault::{FaultPlan, Verdict};
+use crate::coordinator::progress::Metrics;
+
+/// How a worker executes tasks: context factory plus task runner.
+///
+/// `Ctx` is created on the worker's own thread and never crosses
+/// threads, so it may be `!Send` (the production `DeviceRuntime` holds
+/// an `Rc`-based PJRT client).
+pub trait Backend {
+    type Ctx;
+    type Task;
+    type Out;
+
+    /// Build the per-worker context; called once per worker thread.
+    fn make_ctx(&self, worker: usize) -> Result<Self::Ctx>;
+
+    /// Execute one task on this worker's context.
+    fn run(&self, ctx: &Self::Ctx, task: &Self::Task) -> Result<Self::Out>;
+}
+
+/// Engine topology + default policy.
+#[derive(Debug, Clone)]
+pub struct EngineConfig {
+    pub n_workers: usize,
+    /// Default per-task retry budget for `submit()` (attempts = 1 + retries).
+    pub max_retries: u32,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig { n_workers: 1, max_retries: 3 }
+    }
+}
+
+impl EngineConfig {
+    pub fn new(n_workers: usize) -> Self {
+        EngineConfig { n_workers, ..Default::default() }
+    }
+}
+
+/// Mutable per-job state behind the job's own mutex.
+struct JobInner<R> {
+    results: Vec<Option<R>>,
+    attempts: Vec<u32>,
+    remaining: usize,
+    fatal: Option<String>,
+}
+
+/// One submitted job: an ordered task list plus completion state.
+pub(crate) struct JobState<T, R> {
+    tasks: Vec<T>,
+    max_retries: u32,
+    inner: Mutex<JobInner<R>>,
+    done_cv: Condvar,
+}
+
+impl<T, R> JobState<T, R> {
+    pub(crate) fn new(tasks: Vec<T>, max_retries: u32) -> Self {
+        let n = tasks.len();
+        JobState {
+            tasks,
+            max_retries,
+            inner: Mutex::new(JobInner {
+                results: (0..n).map(|_| None).collect(),
+                attempts: vec![0; n],
+                remaining: n,
+                fatal: None,
+            }),
+            done_cv: Condvar::new(),
+        }
+    }
+
+    pub(crate) fn n_tasks(&self) -> usize {
+        self.tasks.len()
+    }
+
+    pub(crate) fn is_done(&self) -> bool {
+        let inner = self.inner.lock().unwrap();
+        inner.remaining == 0 || inner.fatal.is_some()
+    }
+
+    /// Block until every task succeeded (results in task order) or the
+    /// job failed fatally.
+    pub(crate) fn wait(&self) -> Result<Vec<R>> {
+        let mut inner = self.inner.lock().unwrap();
+        loop {
+            if let Some(msg) = &inner.fatal {
+                return Err(Error::msg(msg.clone()));
+            }
+            if inner.remaining == 0 {
+                return Ok(inner
+                    .results
+                    .iter_mut()
+                    .map(|r| r.take().expect("completed job has all results"))
+                    .collect());
+            }
+            inner = self.done_cv.wait(inner).unwrap();
+        }
+    }
+
+    /// Mark the job failed (first failure wins) and wake waiters.
+    fn fail(&self, msg: String) {
+        let mut inner = self.inner.lock().unwrap();
+        if inner.fatal.is_none() && inner.remaining > 0 {
+            inner.fatal = Some(msg);
+            drop(inner);
+            self.done_cv.notify_all();
+        }
+    }
+}
+
+/// Queue protected state.
+struct QueueState<T, R> {
+    items: VecDeque<(Arc<JobState<T, R>>, usize)>,
+    shutdown: bool,
+    /// All workers have exited (before shutdown): the engine is dead.
+    dead: bool,
+    live_workers: usize,
+}
+
+/// State shared between the submitting side and the workers.
+pub(crate) struct Shared<T, R> {
+    queue: Mutex<QueueState<T, R>>,
+    task_cv: Condvar,
+}
+
+impl<T, R> Shared<T, R> {
+    pub(crate) fn new(n_workers: usize) -> Self {
+        Shared {
+            queue: Mutex::new(QueueState {
+                items: VecDeque::new(),
+                shutdown: false,
+                dead: false,
+                live_workers: n_workers,
+            }),
+            task_cv: Condvar::new(),
+        }
+    }
+
+    /// Enqueue every task of `job`; fails if the engine is down.
+    pub(crate) fn enqueue(&self, job: &Arc<JobState<T, R>>) -> Result<()> {
+        let mut q = self.queue.lock().unwrap();
+        if q.shutdown {
+            return Err(anyhow!("engine is shut down"));
+        }
+        if q.dead {
+            return Err(anyhow!("engine has no live workers"));
+        }
+        for idx in 0..job.n_tasks() {
+            q.items.push_back((Arc::clone(job), idx));
+        }
+        drop(q);
+        self.task_cv.notify_all();
+        Ok(())
+    }
+
+    /// Ask workers to exit once the queue drains, and wake them all.
+    pub(crate) fn begin_shutdown(&self) {
+        self.queue.lock().unwrap().shutdown = true;
+        self.task_cv.notify_all();
+    }
+
+    /// Pop the next task, blocking on the condvar while the queue is
+    /// empty. `None` means shutdown (queued work is drained first).
+    fn next_item(&self) -> Option<(Arc<JobState<T, R>>, usize)> {
+        let mut q = self.queue.lock().unwrap();
+        loop {
+            if let Some(item) = q.items.pop_front() {
+                return Some(item);
+            }
+            if q.shutdown {
+                return None;
+            }
+            q = self.task_cv.wait(q).unwrap();
+        }
+    }
+
+    fn push_front(&self, item: (Arc<JobState<T, R>>, usize)) {
+        self.queue.lock().unwrap().items.push_front(item);
+        self.task_cv.notify_one();
+    }
+
+    fn push_back(&self, item: (Arc<JobState<T, R>>, usize)) {
+        self.queue.lock().unwrap().items.push_back(item);
+        self.task_cv.notify_one();
+    }
+}
+
+/// Format recorded context-construction failures for error messages.
+fn context_failure_note(metrics: &Metrics) -> String {
+    let errs = metrics.worker_errors();
+    if errs.is_empty() {
+        String::new()
+    } else {
+        format!(" (earlier worker failures: {})", errs.join("; "))
+    }
+}
+
+/// Count one failed attempt on `idx`: requeue within budget, else fail
+/// the whole job.
+fn requeue_or_abort<T, R>(
+    shared: &Shared<T, R>,
+    job: &Arc<JobState<T, R>>,
+    idx: usize,
+    err: &str,
+    metrics: &Metrics,
+) {
+    let attempts = {
+        let mut inner = job.inner.lock().unwrap();
+        inner.attempts[idx] += 1;
+        inner.attempts[idx]
+    };
+    if attempts > job.max_retries {
+        job.fail(format!(
+            "task {idx} failed after {attempts} attempts: {err}{}",
+            context_failure_note(metrics)
+        ));
+    } else {
+        metrics.retry();
+        shared.push_back((Arc::clone(job), idx));
+    }
+}
+
+/// The worker body, shared by the persistent engine and the one-shot
+/// scheduler. Returns when shutdown is signalled (after draining the
+/// queue), when the fault plan kills this worker, or when context
+/// construction fails.
+pub(crate) fn worker_loop<B: Backend>(
+    w: usize,
+    shared: &Shared<B::Task, B::Out>,
+    backend: &B,
+    fault: &FaultPlan,
+    metrics: &Metrics,
+) {
+    let t_start = Instant::now();
+    let ctx = match backend.make_ctx(w) {
+        Ok(c) => c,
+        Err(e) => {
+            // Not fatal while peers are alive: record it so that any job
+            // that *does* fail later can surface the root cause.
+            metrics.record_worker_error(format!("worker {w}: context: {e}"));
+            exit_worker(shared, metrics, None);
+            return;
+        }
+    };
+    let mut busy = Duration::ZERO;
+    let mut my_attempts: u64 = 0;
+    while let Some((job, idx)) = shared.next_item() {
+        // Discard leftovers of jobs that already failed.
+        if job.inner.lock().unwrap().fatal.is_some() {
+            continue;
+        }
+        match fault.judge(w, my_attempts) {
+            Verdict::WorkerDead => {
+                // put the task back for the surviving workers and die
+                shared.push_front((job, idx));
+                break;
+            }
+            Verdict::FailAttempt => {
+                my_attempts += 1;
+                metrics.failure();
+                requeue_or_abort(shared, &job, idx, "injected fault", metrics);
+                continue;
+            }
+            Verdict::Proceed => {}
+        }
+        my_attempts += 1;
+        let t0 = Instant::now();
+        match backend.run(&ctx, &job.tasks[idx]) {
+            Ok(out) => {
+                busy += t0.elapsed();
+                let mut inner = job.inner.lock().unwrap();
+                if inner.results[idx].is_none() {
+                    inner.results[idx] = Some(out);
+                    inner.remaining -= 1;
+                    metrics.task_done();
+                    if inner.remaining == 0 {
+                        drop(inner);
+                        job.done_cv.notify_all();
+                    }
+                }
+            }
+            Err(e) => {
+                busy += t0.elapsed();
+                metrics.failure();
+                requeue_or_abort(shared, &job, idx, &e.to_string(), metrics);
+            }
+        }
+    }
+    exit_worker(shared, metrics, Some((busy, t_start.elapsed())));
+}
+
+/// Bookkeeping for a worker leaving the pool. When the last worker
+/// exits, every incomplete job is failed (its unfinished tasks are all
+/// back in the queue by the loop's invariants, so draining the queue
+/// reaches every such job). This must happen even during shutdown:
+/// under a graceful shutdown the queue is empty by the time the last
+/// worker leaves, so anything still queued belongs to a job that can
+/// never finish (fault-killed workers) and its waiters must be woken.
+fn exit_worker<T, R>(
+    shared: &Shared<T, R>,
+    metrics: &Metrics,
+    timing: Option<(Duration, Duration)>,
+) {
+    if let Some((busy, total)) = timing {
+        metrics.record_worker(busy, total);
+    }
+    let orphans = {
+        let mut q = shared.queue.lock().unwrap();
+        q.live_workers -= 1;
+        if q.live_workers == 0 {
+            q.dead = true;
+            Some(std::mem::take(&mut q.items))
+        } else {
+            None
+        }
+    };
+    if let Some(items) = orphans {
+        for (job, _) in items {
+            let remaining = job.inner.lock().unwrap().remaining;
+            job.fail(format!(
+                "all workers exited with {remaining} tasks unfinished{}",
+                context_failure_note(metrics)
+            ));
+        }
+    }
+}
+
+/// Handle to one submitted job set; results are awaited per-handle, so
+/// any number of independent jobs can be in flight on one engine.
+pub struct JobHandle<T, R> {
+    job: Arc<JobState<T, R>>,
+}
+
+impl<T, R> JobHandle<T, R> {
+    /// Block until the job finishes; returns results in task order.
+    pub fn wait(self) -> Result<Vec<R>> {
+        self.job.wait()
+    }
+
+    /// Non-blocking completion probe (done or failed).
+    pub fn is_done(&self) -> bool {
+        self.job.is_done()
+    }
+
+    pub fn n_tasks(&self) -> usize {
+        self.job.n_tasks()
+    }
+}
+
+/// A persistent pool of device workers fed by a shared task queue.
+///
+/// Workers (and their contexts — in production a `DeviceRuntime` whose
+/// compiled-executable cache stays warm) are spawned once at
+/// construction and live until the engine is dropped. [`Engine::submit`]
+/// is non-blocking and returns a [`JobHandle`]; multiple job sets may be
+/// in flight concurrently from any number of threads.
+pub struct Engine<B: Backend> {
+    shared: Arc<Shared<B::Task, B::Out>>,
+    backend: Arc<B>,
+    fault: Arc<FaultPlan>,
+    metrics: Arc<Metrics>,
+    default_retries: u32,
+    n_workers: usize,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl<B> Engine<B>
+where
+    B: Backend + Send + Sync + 'static,
+    B::Task: Send + Sync + 'static,
+    B::Out: Send + 'static,
+{
+    /// Spawn the worker pool with a fault-free default policy.
+    pub fn new(backend: B, cfg: EngineConfig) -> Result<Engine<B>> {
+        Engine::with_policy(
+            backend,
+            cfg,
+            Arc::new(FaultPlan::none()),
+            Arc::new(Metrics::new()),
+        )
+    }
+
+    /// Spawn the worker pool with an explicit fault-injection plan and
+    /// metrics sink (the scheduler's policy layer, now engine-scoped).
+    pub fn with_policy(
+        backend: B,
+        cfg: EngineConfig,
+        fault: Arc<FaultPlan>,
+        metrics: Arc<Metrics>,
+    ) -> Result<Engine<B>> {
+        if cfg.n_workers == 0 {
+            return Err(anyhow!("engine needs >= 1 worker"));
+        }
+        let shared = Arc::new(Shared::new(cfg.n_workers));
+        let backend = Arc::new(backend);
+        let mut workers = Vec::with_capacity(cfg.n_workers);
+        for w in 0..cfg.n_workers {
+            let shared = Arc::clone(&shared);
+            let backend = Arc::clone(&backend);
+            let fault = Arc::clone(&fault);
+            let metrics = Arc::clone(&metrics);
+            let handle = std::thread::Builder::new()
+                .name(format!("zmc-worker-{w}"))
+                .spawn(move || {
+                    worker_loop(w, &shared, &*backend, &fault, &metrics)
+                })
+                .map_err(|e| anyhow!("spawning worker {w}: {e}"))?;
+            workers.push(handle);
+        }
+        Ok(Engine {
+            shared,
+            backend,
+            fault,
+            metrics,
+            default_retries: cfg.max_retries,
+            n_workers: cfg.n_workers,
+            workers,
+        })
+    }
+
+    /// Enqueue a job set; returns immediately with its handle.
+    pub fn submit(
+        &self,
+        tasks: Vec<B::Task>,
+    ) -> Result<JobHandle<B::Task, B::Out>> {
+        self.submit_with_retries(tasks, self.default_retries)
+    }
+
+    /// `submit` with a per-job retry budget.
+    pub fn submit_with_retries(
+        &self,
+        tasks: Vec<B::Task>,
+        max_retries: u32,
+    ) -> Result<JobHandle<B::Task, B::Out>> {
+        let job = Arc::new(JobState::new(tasks, max_retries));
+        self.shared.enqueue(&job).map_err(|e| {
+            anyhow!("{e}{}", context_failure_note(&self.metrics))
+        })?;
+        Ok(JobHandle { job })
+    }
+
+    /// Synchronous convenience: submit then wait.
+    pub fn run(&self, tasks: Vec<B::Task>) -> Result<Vec<B::Out>> {
+        self.submit(tasks)?.wait()
+    }
+
+    pub fn backend(&self) -> &B {
+        &self.backend
+    }
+
+    pub fn metrics(&self) -> &Metrics {
+        &self.metrics
+    }
+
+    pub fn fault(&self) -> &FaultPlan {
+        &self.fault
+    }
+
+    pub fn n_workers(&self) -> usize {
+        self.n_workers
+    }
+}
+
+impl<B: Backend> Drop for Engine<B> {
+    /// Graceful shutdown: queued work drains, then workers exit and are
+    /// joined, so every outstanding `JobHandle` resolves.
+    fn drop(&mut self) {
+        self.shared.begin_shutdown();
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    struct Mock;
+
+    impl Backend for Mock {
+        type Ctx = ();
+        type Task = u64;
+        type Out = u64;
+
+        fn make_ctx(&self, _w: usize) -> Result<()> {
+            Ok(())
+        }
+
+        fn run(&self, _ctx: &(), t: &u64) -> Result<u64> {
+            Ok(t.wrapping_mul(31).wrapping_add(7))
+        }
+    }
+
+    fn expect(tasks: &[u64]) -> Vec<u64> {
+        tasks.iter().map(|t| t.wrapping_mul(31).wrapping_add(7)).collect()
+    }
+
+    #[test]
+    fn submit_and_wait_ordered() {
+        let e = Engine::new(Mock, EngineConfig::new(4)).unwrap();
+        let tasks: Vec<u64> = (0..200).collect();
+        let out = e.run(tasks.clone()).unwrap();
+        assert_eq!(out, expect(&tasks));
+        assert_eq!(e.metrics().done(), 200);
+    }
+
+    #[test]
+    fn multiple_jobs_in_flight() {
+        let e = Engine::new(Mock, EngineConfig::new(3)).unwrap();
+        let a: Vec<u64> = (0..50).collect();
+        let b: Vec<u64> = (100..140).collect();
+        let c: Vec<u64> = (1000..1003).collect();
+        let ha = e.submit(a.clone()).unwrap();
+        let hb = e.submit(b.clone()).unwrap();
+        let hc = e.submit(c.clone()).unwrap();
+        // await out of submission order
+        assert_eq!(hc.wait().unwrap(), expect(&c));
+        assert_eq!(ha.wait().unwrap(), expect(&a));
+        assert_eq!(hb.wait().unwrap(), expect(&b));
+    }
+
+    #[test]
+    fn empty_job_resolves_immediately() {
+        let e = Engine::new(Mock, EngineConfig::new(2)).unwrap();
+        let h = e.submit(vec![]).unwrap();
+        assert!(h.is_done());
+        assert!(h.wait().unwrap().is_empty());
+    }
+
+    #[test]
+    fn drop_resolves_outstanding_handles() {
+        let e = Engine::new(Mock, EngineConfig::new(2)).unwrap();
+        let tasks: Vec<u64> = (0..500).collect();
+        let h = e.submit(tasks.clone()).unwrap();
+        drop(e); // graceful: drains the queue before exiting
+        assert_eq!(h.wait().unwrap(), expect(&tasks));
+    }
+
+    #[test]
+    fn engine_rejects_zero_workers() {
+        assert!(Engine::new(Mock, EngineConfig::new(0)).is_err());
+    }
+
+    #[test]
+    fn dead_workers_fail_outstanding_handles_even_during_shutdown() {
+        // regression: a worker fault-killed while shutdown is in
+        // progress must still fail (not strand) unfinished jobs
+        let e = Engine::with_policy(
+            Mock,
+            EngineConfig { n_workers: 1, max_retries: 3 },
+            Arc::new(FaultPlan::kill(0, 0)),
+            Arc::new(Metrics::new()),
+        )
+        .unwrap();
+        let h = match e.submit(vec![1, 2, 3]) {
+            Ok(h) => h,
+            Err(_) => return, // worker died before the submit: also fine
+        };
+        drop(e); // may race the worker's death; wait() must not hang
+        assert!(h.wait().is_err());
+    }
+
+    struct FailCtx;
+
+    impl Backend for FailCtx {
+        type Ctx = ();
+        type Task = u64;
+        type Out = u64;
+
+        fn make_ctx(&self, _w: usize) -> Result<()> {
+            Err(anyhow!("no device"))
+        }
+
+        fn run(&self, _ctx: &(), t: &u64) -> Result<u64> {
+            Ok(*t)
+        }
+    }
+
+    #[test]
+    fn all_context_failures_surface_in_job_error() {
+        let e = Engine::new(FailCtx, EngineConfig::new(2)).unwrap();
+        // whether the submit lands before or after the workers die, the
+        // recorded context errors must appear in the failure message
+        let err = match e.submit(vec![1, 2, 3]) {
+            Ok(h) => h.wait().unwrap_err(),
+            Err(err) => err,
+        };
+        let msg = err.to_string();
+        assert!(msg.contains("no device"), "{msg}");
+        assert_eq!(e.metrics().worker_errors().len(), 2);
+    }
+}

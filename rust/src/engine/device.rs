@@ -1,0 +1,112 @@
+//! The production backend: engine workers owning [`DeviceRuntime`]s.
+//!
+//! Every worker thread builds one `DeviceRuntime` when the engine is
+//! constructed and keeps it for the engine's lifetime, so HLO
+//! executables are compiled **once per worker per executable** no
+//! matter how many jobs are submitted — the warm-cache property the
+//! paper's long-lived Ray actors provided (asserted by
+//! `tests/engine_test.rs`, measured by `benches/engine_warm.rs`).
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::Result;
+
+use crate::coordinator::fault::FaultPlan;
+use crate::coordinator::progress::Metrics;
+use crate::engine::core::{Backend, Engine, EngineConfig, JobHandle};
+use crate::runtime::device::{DevicePool, DeviceRuntime};
+use crate::runtime::launch::Value;
+use crate::runtime::registry::Registry;
+
+/// One device launch: which executable, its input payloads, and an
+/// opaque tag the submitter uses to merge results (block/group index).
+#[derive(Debug, Clone)]
+pub struct LaunchTask {
+    pub exe: String,
+    pub tag: u64,
+    pub inputs: Vec<Value>,
+}
+
+/// Output of one launch, tagged for merging.
+#[derive(Debug, Clone)]
+pub struct TaggedOutput {
+    pub tag: u64,
+    pub data: Vec<f32>,
+    pub device_time: Duration,
+}
+
+/// Backend whose worker contexts are per-thread [`DeviceRuntime`]s.
+pub struct DeviceBackend {
+    registry: Arc<Registry>,
+}
+
+impl DeviceBackend {
+    pub fn new(registry: Arc<Registry>) -> Self {
+        DeviceBackend { registry }
+    }
+
+    pub fn registry(&self) -> &Registry {
+        &self.registry
+    }
+
+    pub fn registry_arc(&self) -> Arc<Registry> {
+        Arc::clone(&self.registry)
+    }
+}
+
+impl Backend for DeviceBackend {
+    type Ctx = DeviceRuntime;
+    type Task = LaunchTask;
+    type Out = TaggedOutput;
+
+    fn make_ctx(&self, _worker: usize) -> Result<DeviceRuntime> {
+        DeviceRuntime::new(Arc::clone(&self.registry))
+    }
+
+    fn run(&self, ctx: &DeviceRuntime, task: &LaunchTask) -> Result<TaggedOutput> {
+        ctx.execute(&task.exe, &task.inputs).map(|o| TaggedOutput {
+            tag: task.tag,
+            data: o.data,
+            device_time: o.device_time,
+        })
+    }
+}
+
+/// The engine type every integrator runs on.
+pub type DeviceEngine = Engine<DeviceBackend>;
+
+/// Handle to a submitted set of device launches.
+pub type DeviceHandle = JobHandle<LaunchTask, TaggedOutput>;
+
+impl Engine<DeviceBackend> {
+    /// Spawn a persistent engine over the pool's topology (one worker
+    /// thread — one simulated device — per `pool.n_devices`).
+    pub fn for_pool(pool: &DevicePool) -> Result<DeviceEngine> {
+        Engine::new(
+            DeviceBackend::new(Arc::clone(&pool.registry)),
+            EngineConfig::new(pool.n_devices),
+        )
+    }
+
+    /// `for_pool` with an explicit fault plan / metrics sink — the
+    /// scheduler's fault-injection semantics as an engine policy.
+    pub fn for_pool_with(
+        pool: &DevicePool,
+        max_retries: u32,
+        fault: Arc<FaultPlan>,
+        metrics: Arc<Metrics>,
+    ) -> Result<DeviceEngine> {
+        Engine::with_policy(
+            DeviceBackend::new(Arc::clone(&pool.registry)),
+            EngineConfig { n_workers: pool.n_devices, max_retries },
+            fault,
+            metrics,
+        )
+    }
+
+    /// The artifact registry this engine executes from.
+    pub fn registry(&self) -> &Registry {
+        self.backend().registry()
+    }
+}

@@ -1,0 +1,37 @@
+//! Persistent execution engine — long-lived device workers, warm
+//! executable caches, and concurrent job submission.
+//!
+//! The original coordinator rebuilt everything per call: each
+//! `integrate()` spawned throwaway worker threads, constructed fresh
+//! PJRT clients, and recompiled every HLO executable. That serves a
+//! single batch fine but makes sustained throughput impossible — the
+//! paper's 10³-integrations-in-minutes number depends on keeping
+//! accelerators warm across launches (Ray's long-lived actors in
+//! ZMCintegral, amortized kernel setup in m-Cubes).
+//!
+//! This module is the replacement:
+//!
+//! * [`core::Engine`] — spawns its workers **once**; each owns a
+//!   context (a `DeviceRuntime` in production) for the engine lifetime,
+//!   so per-worker executable caches stay warm across jobs;
+//! * a condvar-backed MPMC task queue — workers sleep when idle instead
+//!   of the scheduler's old `yield_now` spin;
+//! * [`core::Engine::submit`]` -> `[`core::JobHandle`] — asynchronous
+//!   submission; any number of independent job sets can be in flight and
+//!   each is awaited on its own handle;
+//! * the policy layer ([`crate::coordinator::fault::FaultPlan`],
+//!   [`crate::coordinator::progress::Metrics`], bounded retries,
+//!   worker-death survival) is engine-scoped, preserving the original
+//!   scheduler semantics — which are themselves now implemented as a
+//!   one-shot scoped run of this engine's worker loop.
+//!
+//! See DESIGN.md for the architecture diagram and the fidelity argument
+//! for the simulated device pool.
+
+pub mod core;
+pub mod device;
+
+pub use self::core::{Backend, Engine, EngineConfig, JobHandle};
+pub use self::device::{
+    DeviceBackend, DeviceEngine, DeviceHandle, LaunchTask, TaggedOutput,
+};

@@ -8,9 +8,9 @@
 
 use anyhow::Result;
 
-use crate::integrator::multifunctions::{self, MultiConfig};
+use crate::engine::DeviceEngine;
+use crate::integrator::multifunctions::{self, MultiConfig, MultiHandle};
 use crate::integrator::spec::{Estimate, IntegralJob};
-use crate::runtime::device::DevicePool;
 
 /// Cartesian grid over parameter axes: `axes[j]` lists the values taken
 /// by `p<j>`. Iteration order: last axis fastest (row-major).
@@ -40,19 +40,31 @@ pub fn linspace(lo: f64, hi: f64, n: usize) -> Vec<f64> {
         .collect()
 }
 
-/// Integrate `job`'s expression at every parameter point. Returns one
-/// estimate per point, in `thetas` order.
-pub fn scan(
-    pool: &DevicePool,
+/// Submit the scan (every parameter point as its own packed integrand)
+/// without waiting — points ride the warm engine concurrently with any
+/// other in-flight work.
+pub fn submit_scan(
+    engine: &DeviceEngine,
     job: &IntegralJob,
     thetas: &[Vec<f64>],
     cfg: &MultiConfig,
-) -> Result<Vec<Estimate>> {
+) -> Result<MultiHandle> {
     let jobs: Vec<IntegralJob> = thetas
         .iter()
         .map(|t| job.bind(t))
         .collect::<Result<_>>()?;
-    multifunctions::integrate(pool, &jobs, cfg)
+    multifunctions::submit(engine, &jobs, cfg)
+}
+
+/// Integrate `job`'s expression at every parameter point. Returns one
+/// estimate per point, in `thetas` order.
+pub fn scan(
+    engine: &DeviceEngine,
+    job: &IntegralJob,
+    thetas: &[Vec<f64>],
+    cfg: &MultiConfig,
+) -> Result<Vec<Estimate>> {
+    submit_scan(engine, job, thetas, cfg)?.wait()
 }
 
 #[cfg(test)]

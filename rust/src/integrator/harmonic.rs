@@ -4,17 +4,16 @@
 //! Uses the MXU-shaped `harmonic` artifact: one launch evaluates up to
 //! 128 harmonics over a shared sample tile, with the phase computation
 //! done as one (S,D)×(D,N) matmul — an order of magnitude fewer
-//! launches than routing each harmonic through the generic VM.
+//! launches than routing each harmonic through the generic VM. Batches
+//! are submitted to the persistent [`DeviceEngine`]; [`submit`] gives
+//! the asynchronous handle form, [`integrate`] the synchronous one.
 
 use anyhow::{bail, Result};
 
-use crate::coordinator::fault::FaultPlan;
-use crate::coordinator::progress::Metrics;
-use crate::coordinator::scheduler::Scheduler;
+use crate::engine::{DeviceEngine, DeviceHandle, LaunchTask};
 use crate::integrator::multifunctions::{split_seed, MultiConfig};
 use crate::integrator::spec::Estimate;
-use crate::runtime::device::{DevicePool, DeviceRuntime};
-use crate::runtime::launch::{harmonic_inputs, RngCtr, Value};
+use crate::runtime::launch::{harmonic_inputs, RngCtr};
 use crate::runtime::registry::ExeKind;
 use crate::sampler::volume;
 use crate::stats::MomentSum;
@@ -62,36 +61,72 @@ impl HarmonicBatch {
     }
 }
 
-struct ChunkTask {
-    exe: String,
-    block: usize,
-    inputs: Vec<Value>,
+/// In-flight harmonic batch; wait to get one estimate per harmonic.
+pub struct HarmonicHandle {
+    inner: Option<DeviceHandle>,
+    n: usize,
+    n_fns: usize,
+    samples: usize,
+    volume: f64,
 }
 
-/// Integrate the batch; one estimate per harmonic, in order.
-pub fn integrate(
-    pool: &DevicePool,
-    batch: &HarmonicBatch,
-    cfg: &MultiConfig,
-) -> Result<Vec<Estimate>> {
-    integrate_with_fault(pool, batch, cfg, &FaultPlan::none(), &Metrics::new())
+impl HarmonicHandle {
+    pub fn wait(self) -> Result<Vec<Estimate>> {
+        // Output layout per launch: f32[2, n_fns] — row 0 Σf, row 1 Σf².
+        let mut moments = vec![MomentSum::new(); self.n];
+        if let Some(handle) = self.inner {
+            for out in handle.wait()? {
+                let block = out.tag as usize;
+                for f in 0..self.n_fns {
+                    let j = block * self.n_fns + f;
+                    if j >= self.n {
+                        break;
+                    }
+                    moments[j].merge(&MomentSum::from_device(
+                        self.samples as u64,
+                        out.data[f],
+                        out.data[self.n_fns + f],
+                    ));
+                }
+            }
+        }
+        Ok(moments
+            .iter()
+            .map(|m| {
+                let (value, std_err) = m.estimate(self.volume);
+                Estimate { value, std_err, n_samples: m.n }
+            })
+            .collect())
+    }
+
+    pub fn is_done(&self) -> bool {
+        match &self.inner {
+            Some(h) => h.is_done(),
+            None => true,
+        }
+    }
 }
 
-pub fn integrate_with_fault(
-    pool: &DevicePool,
+/// Submit the batch; returns immediately with its handle.
+pub fn submit(
+    engine: &DeviceEngine,
     batch: &HarmonicBatch,
     cfg: &MultiConfig,
-    fault: &FaultPlan,
-    metrics: &Metrics,
-) -> Result<Vec<Estimate>> {
+) -> Result<HarmonicHandle> {
     let n = batch.len();
     if n == 0 {
-        return Ok(vec![]);
+        return Ok(HarmonicHandle {
+            inner: None,
+            n: 0,
+            n_fns: 1,
+            samples: 0,
+            volume: 0.0,
+        });
     }
     if batch.a.len() != n || batch.b.len() != n {
         bail!("harmonic batch: a/b length mismatch");
     }
-    let reg = &pool.registry;
+    let reg = engine.registry();
     let exe = match &cfg.exe {
         Some(name) => reg.get(name)?,
         None => reg.pick(
@@ -114,9 +149,9 @@ pub fn integrate_with_fault(
                 base: (c * exe.samples) as u32,
                 trial: cfg.trial,
             };
-            tasks.push(ChunkTask {
+            tasks.push(LaunchTask {
                 exe: exe.name.clone(),
-                block: b,
+                tag: b as u64,
                 inputs: harmonic_inputs(
                     exe,
                     rng,
@@ -131,59 +166,40 @@ pub fn integrate_with_fault(
         }
     }
 
-    let sched = Scheduler {
-        n_workers: pool.n_devices,
-        max_retries: cfg.max_retries,
-    };
-    let registry = std::sync::Arc::clone(reg);
-    let outs = sched.run(
-        tasks,
-        fault,
-        metrics,
-        move |_w| DeviceRuntime::new(std::sync::Arc::clone(&registry)),
-        |dev: &DeviceRuntime, t: &ChunkTask| {
-            dev.execute(&t.exe, &t.inputs).map(|o| (t.block, o.data))
-        },
-    )?;
-
-    // Output layout per launch: f32[2, n_fns] — row 0 Σf, row 1 Σf².
-    let mut moments = vec![MomentSum::new(); n];
-    for (block, data) in outs {
-        for f in 0..exe.n_fns {
-            let j = block * exe.n_fns + f;
-            if j >= n {
-                break;
-            }
-            moments[j].merge(&MomentSum::from_device(
-                exe.samples as u64,
-                data[f],
-                data[exe.n_fns + f],
-            ));
-        }
-    }
-    let vol = volume(&batch.bounds);
-    Ok(moments
-        .iter()
-        .map(|m| {
-            let (value, std_err) = m.estimate(vol);
-            Estimate { value, std_err, n_samples: m.n }
-        })
-        .collect())
+    let inner = engine.submit_with_retries(tasks, cfg.max_retries)?;
+    Ok(HarmonicHandle {
+        inner: Some(inner),
+        n,
+        n_fns: exe.n_fns,
+        samples: exe.samples,
+        volume: volume(&batch.bounds),
+    })
 }
 
-/// Independent repeats, one estimate vector per trial.
+/// Integrate the batch; one estimate per harmonic, in order.
+pub fn integrate(
+    engine: &DeviceEngine,
+    batch: &HarmonicBatch,
+    cfg: &MultiConfig,
+) -> Result<Vec<Estimate>> {
+    submit(engine, batch, cfg)?.wait()
+}
+
+/// Independent repeats, one estimate vector per trial — all submitted
+/// up front so trials interleave across the engine's workers.
 pub fn integrate_trials(
-    pool: &DevicePool,
+    engine: &DeviceEngine,
     batch: &HarmonicBatch,
     cfg: &MultiConfig,
     trials: u32,
 ) -> Result<Vec<Vec<Estimate>>> {
-    (0..trials)
+    let handles: Vec<HarmonicHandle> = (0..trials)
         .map(|t| {
             let c = MultiConfig { trial: cfg.trial + t, ..cfg.clone() };
-            integrate(pool, batch, &c)
+            submit(engine, batch, &c)
         })
-        .collect()
+        .collect::<Result<_>>()?;
+    handles.into_iter().map(HarmonicHandle::wait).collect()
 }
 
 #[cfg(test)]

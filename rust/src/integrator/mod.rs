@@ -8,9 +8,11 @@
 //!
 //! All three decompose work into *chunk tasks* (one AOT-artifact launch
 //! each, addressed by Philox `(seed, stream, trial, counter_base)`) and
-//! push them through [`crate::coordinator::scheduler`]. [`direct`] is the
-//! single-core CPU comparator running identical bytecode on the same
-//! sample streams.
+//! submit them to the persistent [`crate::engine::DeviceEngine`]: the
+//! synchronous `integrate*` entry points are submit-then-wait sugar over
+//! the `submit*` handle forms, so independent batches share one warm
+//! engine. [`direct`] is the single-core CPU comparator running
+//! identical bytecode on the same sample streams.
 
 pub mod direct;
 pub mod functional;

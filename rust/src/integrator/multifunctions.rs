@@ -4,19 +4,22 @@
 //! dimensions, domains, parameters) by packing them into `vm_multi`
 //! artifact launches: F functions per launch, S samples per function per
 //! launch, chunked over the sample budget with advancing Philox counter
-//! bases, scheduled over the device pool with retries. One launch
+//! bases, submitted to the persistent [`DeviceEngine`]. One launch
 //! evaluates F·S integrand samples — the batching that gives the paper's
 //! "10³ integrations in under 10 minutes" throughput, reproduced as
 //! experiment C1.
+//!
+//! Two entry styles:
+//! * [`integrate`] — synchronous: submit + wait;
+//! * [`submit`] — asynchronous: returns a [`MultiHandle`] immediately,
+//!   so independent batches (different users, different trials) ride the
+//!   same warm engine concurrently and are awaited per-handle.
 
 use anyhow::Result;
 
-use crate::coordinator::fault::FaultPlan;
-use crate::coordinator::progress::Metrics;
-use crate::coordinator::scheduler::Scheduler;
+use crate::engine::{DeviceEngine, DeviceHandle, LaunchTask};
 use crate::integrator::spec::{Estimate, IntegralJob};
-use crate::runtime::device::{DevicePool, DeviceRuntime};
-use crate::runtime::launch::{vm_multi_inputs, RngCtr, Value, VmFn};
+use crate::runtime::launch::{vm_multi_inputs, RngCtr, VmFn};
 use crate::runtime::registry::ExeKind;
 use crate::stats::MomentSum;
 
@@ -30,8 +33,9 @@ pub struct MultiConfig {
     pub trial: u32,
     /// First Philox stream id; function i uses `stream_base + i`.
     pub stream_base: u32,
+    /// Per-job retry budget on the engine.
     pub max_retries: u32,
-    /// Force a specific executable (default: best fit by samples).
+    /// Force a specific executable (default: best fit by dims+samples).
     pub exe: Option<String>,
 }
 
@@ -48,42 +52,84 @@ impl Default for MultiConfig {
     }
 }
 
-/// One scheduled launch: functions `block` covering chunk `chunk`.
-struct ChunkTask {
-    exe: String,
-    block: usize,
-    inputs: Vec<Value>,
+/// In-flight multifunction batch: wait to get one [`Estimate`] per job,
+/// in submission order.
+pub struct MultiHandle {
+    inner: Option<DeviceHandle>,
+    n_fns: usize,
+    samples: usize,
+    volumes: Vec<f64>,
 }
 
-/// Integrate a heterogeneous job set; returns one estimate per job, in
-/// order. See [`MultiConfig`] for sampling/addressing options.
-pub fn integrate(
-    pool: &DevicePool,
-    jobs: &[IntegralJob],
-    cfg: &MultiConfig,
-) -> Result<Vec<Estimate>> {
-    integrate_with_fault(pool, jobs, cfg, &FaultPlan::none(), &Metrics::new())
-}
-
-/// Full-control variant used by tests and benches.
-pub fn integrate_with_fault(
-    pool: &DevicePool,
-    jobs: &[IntegralJob],
-    cfg: &MultiConfig,
-    fault: &FaultPlan,
-    metrics: &Metrics,
-) -> Result<Vec<Estimate>> {
-    if jobs.is_empty() {
-        return Ok(vec![]);
+impl MultiHandle {
+    /// Block until every launch landed; merge `(Σf, Σf²)` per function
+    /// across chunks into estimates.
+    pub fn wait(self) -> Result<Vec<Estimate>> {
+        let mut moments = vec![MomentSum::new(); self.volumes.len()];
+        if let Some(handle) = self.inner {
+            for out in handle.wait()? {
+                let block = out.tag as usize;
+                for f in 0..self.n_fns {
+                    let j = block * self.n_fns + f;
+                    if j >= moments.len() {
+                        break;
+                    }
+                    moments[j].merge(&MomentSum::from_device(
+                        self.samples as u64,
+                        out.data[f * 2],
+                        out.data[f * 2 + 1],
+                    ));
+                }
+            }
+        }
+        Ok(moments
+            .iter()
+            .zip(&self.volumes)
+            .map(|(m, &vol)| {
+                let (value, std_err) = m.estimate(vol);
+                Estimate { value, std_err, n_samples: m.n }
+            })
+            .collect())
     }
-    let reg = &pool.registry;
+
+    /// Non-blocking completion probe.
+    pub fn is_done(&self) -> bool {
+        match &self.inner {
+            Some(h) => h.is_done(),
+            None => true,
+        }
+    }
+
+    /// Launches this batch was packed into.
+    pub fn n_launches(&self) -> usize {
+        match &self.inner {
+            Some(h) => h.n_tasks(),
+            None => 0,
+        }
+    }
+}
+
+/// Submit a heterogeneous job set to the engine; returns immediately.
+pub fn submit(
+    engine: &DeviceEngine,
+    jobs: &[IntegralJob],
+    cfg: &MultiConfig,
+) -> Result<MultiHandle> {
+    if jobs.is_empty() {
+        return Ok(MultiHandle {
+            inner: None,
+            n_fns: 1,
+            samples: 0,
+            volumes: vec![],
+        });
+    }
+    let reg = engine.registry();
     let exe = match &cfg.exe {
         Some(name) => reg.get(name)?,
         None => {
             // dims-aware: a batch of dims<=4 jobs rides the d4 artifact,
             // halving the in-kernel RNG cost (§Perf L1).
-            let want_dims =
-                jobs.iter().map(|j| j.dims()).max().unwrap_or(1);
+            let want_dims = jobs.iter().map(|j| j.dims()).max().unwrap_or(1);
             reg.pick(ExeKind::VmMulti, cfg.samples_per_fn, want_dims)?
         }
     };
@@ -109,57 +155,36 @@ pub fn integrate_with_fault(
                 base: (c * exe.samples) as u32,
                 trial: cfg.trial,
             };
-            tasks.push(ChunkTask {
+            tasks.push(LaunchTask {
                 exe: exe.name.clone(),
-                block: b,
+                tag: b as u64,
                 inputs: vm_multi_inputs(exe, rng, block)?,
             });
         }
     }
 
-    let sched = Scheduler {
-        n_workers: pool.n_devices,
-        max_retries: cfg.max_retries,
-    };
-    let registry = std::sync::Arc::clone(reg);
-    let outs = sched.run(
-        tasks,
-        fault,
-        metrics,
-        move |_w| DeviceRuntime::new(std::sync::Arc::clone(&registry)),
-        |dev: &DeviceRuntime, t: &ChunkTask| {
-            dev.execute(&t.exe, &t.inputs).map(|o| (t.block, o.data))
-        },
-    )?;
+    let inner = engine.submit_with_retries(tasks, cfg.max_retries)?;
+    Ok(MultiHandle {
+        inner: Some(inner),
+        n_fns: exe.n_fns,
+        samples: exe.samples,
+        volumes: jobs.iter().map(|j| j.volume()).collect(),
+    })
+}
 
-    // Merge (Σf, Σf²) per function across chunks.
-    let mut moments = vec![MomentSum::new(); jobs.len()];
-    for (block, data) in outs {
-        for f in 0..exe.n_fns {
-            let j = block * exe.n_fns + f;
-            if j >= jobs.len() {
-                break;
-            }
-            moments[j].merge(&MomentSum::from_device(
-                exe.samples as u64,
-                data[f * 2],
-                data[f * 2 + 1],
-            ));
-        }
-    }
-    Ok(moments
-        .iter()
-        .zip(jobs)
-        .map(|(m, j)| {
-            let (value, std_err) = m.estimate(j.volume());
-            Estimate { value, std_err, n_samples: m.n }
-        })
-        .collect())
+/// Integrate a heterogeneous job set; returns one estimate per job, in
+/// order. See [`MultiConfig`] for sampling/addressing options.
+pub fn integrate(
+    engine: &DeviceEngine,
+    jobs: &[IntegralJob],
+    cfg: &MultiConfig,
+) -> Result<Vec<Estimate>> {
+    submit(engine, jobs, cfg)?.wait()
 }
 
 /// Convenience: single integrand.
 pub fn integrate_one(
-    pool: &DevicePool,
+    engine: &DeviceEngine,
     job: &IntegralJob,
     samples: usize,
     seed: u64,
@@ -169,23 +194,28 @@ pub fn integrate_one(
         seed,
         ..Default::default()
     };
-    Ok(integrate(pool, std::slice::from_ref(job), &cfg)?[0])
+    Ok(integrate(engine, std::slice::from_ref(job), &cfg)?[0])
 }
 
 /// Independent repeats (the paper's "10 independent evaluations"):
 /// returns `trials` estimate vectors, each from a disjoint trial stream.
+///
+/// All trials are submitted up front and then awaited in order, so they
+/// interleave across the engine's workers instead of running strictly
+/// one after another.
 pub fn integrate_trials(
-    pool: &DevicePool,
+    engine: &DeviceEngine,
     jobs: &[IntegralJob],
     cfg: &MultiConfig,
     trials: u32,
 ) -> Result<Vec<Vec<Estimate>>> {
-    (0..trials)
+    let handles: Vec<MultiHandle> = (0..trials)
         .map(|t| {
             let c = MultiConfig { trial: cfg.trial + t, ..cfg.clone() };
-            integrate(pool, jobs, &c)
+            submit(engine, jobs, &c)
         })
-        .collect()
+        .collect::<Result<_>>()?;
+    handles.into_iter().map(MultiHandle::wait).collect()
 }
 
 pub(crate) fn split_seed(seed: u64) -> [u32; 2] {
@@ -205,11 +235,15 @@ mod tests {
     }
 
     #[test]
-    fn empty_jobs_short_circuit() {
-        // must not touch the registry at all
-        let cfg = MultiConfig::default();
-        assert_eq!(cfg.samples_per_fn, 1 << 20);
-        // (constructing a DevicePool needs artifacts; covered in
-        // integration tests)
+    fn empty_handle_resolves_to_nothing() {
+        let h = MultiHandle {
+            inner: None,
+            n_fns: 1,
+            samples: 0,
+            volumes: vec![],
+        };
+        assert!(h.is_done());
+        assert_eq!(h.n_launches(), 0);
+        assert!(h.wait().unwrap().is_empty());
     }
 }

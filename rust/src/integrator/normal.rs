@@ -15,13 +15,10 @@
 
 use anyhow::{bail, Result};
 
-use crate::coordinator::fault::FaultPlan;
-use crate::coordinator::progress::Metrics;
-use crate::coordinator::scheduler::Scheduler;
+use crate::engine::{DeviceEngine, LaunchTask};
 use crate::integrator::multifunctions::split_seed;
 use crate::integrator::spec::{Estimate, IntegralJob};
-use crate::runtime::device::{DevicePool, DeviceRuntime};
-use crate::runtime::launch::{stratified_inputs, RngCtr, Value};
+use crate::runtime::launch::{stratified_inputs, RngCtr};
 use crate::runtime::registry::ExeKind;
 use crate::stats::Welford;
 
@@ -114,25 +111,21 @@ impl Cube {
 }
 
 /// Integrate with stratified sampling + tree search.
+///
+/// Each refinement level is one engine job: the level's cube batch is
+/// submitted as a set of launches and awaited before flagging. Under
+/// the persistent engine the stratified executable compiles once per
+/// worker on the first level and every later level (and every later
+/// `integrate` call) reuses it.
 pub fn integrate(
-    pool: &DevicePool,
+    engine: &DeviceEngine,
     job: &IntegralJob,
     cfg: &NormalConfig,
-) -> Result<NormalResult> {
-    integrate_with_fault(pool, job, cfg, &FaultPlan::none(), &Metrics::new())
-}
-
-pub fn integrate_with_fault(
-    pool: &DevicePool,
-    job: &IntegralJob,
-    cfg: &NormalConfig,
-    fault: &FaultPlan,
-    metrics: &Metrics,
 ) -> Result<NormalResult> {
     if cfg.n_trials < 2 {
         bail!("n_trials must be >= 2 for the variance heuristic");
     }
-    let reg = &pool.registry;
+    let reg = engine.registry();
     let exe = match &cfg.exe {
         Some(name) => reg.get(name)?,
         None => reg.pick(ExeKind::Stratified, 0, job.dims())?,
@@ -180,8 +173,7 @@ pub fn integrate_with_fault(
         cubes_per_level.push(cubes.len());
         // per-cube per-trial integral estimates
         let stats = eval_level(
-            pool, exe, job, &cubes, cfg, fault, metrics, &mut next_stream,
-            &mut launches,
+            engine, exe, job, &cubes, cfg, &mut next_stream, &mut launches,
         )?;
 
         // Welford over trials per cube → (mean, std)
@@ -242,25 +234,15 @@ pub fn integrate_with_fault(
 
 /// Evaluate all cubes × all trials at one level; returns per-cube
 /// Welford stats of the per-trial integral estimates.
-#[allow(clippy::too_many_arguments)]
 fn eval_level(
-    pool: &DevicePool,
+    engine: &DeviceEngine,
     exe: &crate::runtime::registry::ExeSpec,
     job: &IntegralJob,
     cubes: &[Cube],
     cfg: &NormalConfig,
-    fault: &FaultPlan,
-    metrics: &Metrics,
     next_stream: &mut u32,
     launches: &mut usize,
 ) -> Result<Vec<Welford>> {
-    struct Task {
-        exe: String,
-        group: usize,
-        trial: u32,
-        inputs: Vec<Value>,
-    }
-
     // assign one stream per cube (refined cubes get fresh streams)
     let streams: Vec<u32> =
         (0..cubes.len()).map(|i| *next_stream + i as u32).collect();
@@ -280,10 +262,9 @@ fn eval_level(
                 base: 0,
                 trial: t,
             };
-            tasks.push(Task {
+            tasks.push(LaunchTask {
                 exe: exe.name.clone(),
-                group: g,
-                trial: t,
+                tag: g as u64,
                 inputs: stratified_inputs(
                     exe,
                     rng,
@@ -297,30 +278,19 @@ fn eval_level(
     }
     *launches += tasks.len();
 
-    let sched = Scheduler {
-        n_workers: pool.n_devices,
-        max_retries: cfg.max_retries,
-    };
-    let registry = std::sync::Arc::clone(&pool.registry);
-    let outs = sched.run(
-        tasks,
-        fault,
-        metrics,
-        move |_w| DeviceRuntime::new(std::sync::Arc::clone(&registry)),
-        |dev: &DeviceRuntime, t: &Task| {
-            dev.execute(&t.exe, &t.inputs)
-                .map(|o| (t.group, t.trial, o.data))
-        },
-    )?;
+    let outs = engine
+        .submit_with_retries(tasks, cfg.max_retries)?
+        .wait()?;
 
     let mut stats = vec![Welford::new(); cubes.len()];
-    for (g, _trial, data) in outs {
+    for out in outs {
+        let g = out.tag as usize;
         for ci in 0..exe.n_cubes {
             let idx = g * exe.n_cubes + ci;
             if idx >= cubes.len() {
                 break;
             }
-            let mean = data[ci * 2] as f64 / exe.samples as f64;
+            let mean = out.data[ci * 2] as f64 / exe.samples as f64;
             let est = cubes[idx].volume() * mean;
             stats[idx].push(est);
         }

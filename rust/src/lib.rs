@@ -11,11 +11,15 @@
 //! * **L1/L2 (build time)** — Pallas kernels + jax compute graphs in
 //!   `python/compile/`, AOT-lowered once by `make artifacts` into
 //!   `artifacts/*.hlo.txt` plus a manifest.
-//! * **L3 (run time, this crate)** — the coordinator: loads artifacts via
-//!   the PJRT C API ([`runtime`]), compiles user expression strings to
-//!   bytecode ([`expr`], [`vm`]), schedules chunked launches over a
-//!   device pool with retry-on-failure ([`coordinator`]), and implements
-//!   the paper's three integration classes ([`integrator`]).
+//! * **L3 (run time, this crate)** — the coordinator: loads artifacts
+//!   ([`runtime`]; PJRT with `--features pjrt`, else the bit-compatible
+//!   CPU emulator), compiles user expression strings to bytecode
+//!   ([`expr`], [`vm`]), and submits chunked launches to the persistent
+//!   execution [`engine`] — long-lived device workers with warm
+//!   executable caches, a condvar-backed task queue, retry-on-failure
+//!   policy ([`coordinator`]), and concurrent `submit() -> JobHandle`
+//!   semantics — on which the paper's three integration classes
+//!   ([`integrator`]) are built.
 //!
 //! ## The paper's three classes
 //!
@@ -31,19 +35,31 @@
 //! use std::sync::Arc;
 //! use zmc::prelude::*;
 //!
+//! // one engine per process: workers + executable caches stay warm
 //! let reg = Arc::new(Registry::load("artifacts").unwrap());
 //! let pool = DevicePool::new(&reg, 1).unwrap();
+//! let engine = Engine::for_pool(&pool).unwrap();
+//!
 //! let job = IntegralJob::parse("sin(x1)*x2", &[(0.0, 1.0), (0.0, 2.0)])
 //!     .unwrap();
 //! let est = zmc::integrator::multifunctions::integrate_one(
-//!     &pool, &job, 1 << 20, 42).unwrap();
+//!     &engine, &job, 1 << 20, 42).unwrap();
 //! println!("I = {} ± {}", est.value, est.std_err);
+//!
+//! // async form: independent job sets in flight concurrently
+//! let cfg = zmc::integrator::multifunctions::MultiConfig::default();
+//! let h1 = zmc::integrator::multifunctions::submit(
+//!     &engine, std::slice::from_ref(&job), &cfg).unwrap();
+//! let h2 = zmc::integrator::multifunctions::submit(
+//!     &engine, std::slice::from_ref(&job), &cfg).unwrap();
+//! let (_a, _b) = (h1.wait().unwrap(), h2.wait().unwrap());
 //! ```
 
 pub mod analytic;
 pub mod cluster;
 pub mod config;
 pub mod coordinator;
+pub mod engine;
 pub mod expr;
 pub mod integrator;
 pub mod runtime;
@@ -55,6 +71,9 @@ pub mod vm;
 /// Convenience re-exports for the common workflow.
 pub mod prelude {
     pub use crate::coordinator::scheduler::Scheduler;
+    pub use crate::engine::{
+        DeviceBackend, DeviceEngine, Engine, EngineConfig, JobHandle,
+    };
     pub use crate::expr::Expr;
     pub use crate::integrator::spec::{Estimate, IntegralJob};
     pub use crate::runtime::device::DevicePool;

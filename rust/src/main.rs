@@ -23,6 +23,7 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use zmc::analytic;
 use zmc::config::JobConfig;
+use zmc::engine::{DeviceEngine, Engine};
 use zmc::integrator::harmonic::{self, HarmonicBatch};
 use zmc::integrator::multifunctions::{self, MultiConfig};
 use zmc::integrator::normal::{self, NormalConfig};
@@ -181,17 +182,44 @@ fn parse_theta(flags: &Flags) -> Result<Vec<f64>> {
     }
 }
 
-fn make_pool(flags: &Flags) -> Result<DevicePool> {
+/// Load the artifact registry; when the default directory is absent and
+/// the CPU emulator backend is compiled in, fall back to the emulated
+/// registry so the CLI works out of the box. A *present but invalid*
+/// artifact set (corrupt manifest, ABI mismatch) is always a hard error
+/// — falling back would silently compute against the wrong executables.
+fn load_registry(flags: &Flags) -> Result<Arc<Registry>> {
     let dir = flags.str("artifacts").unwrap_or("artifacts");
-    let reg = Arc::new(Registry::load(dir)?);
-    DevicePool::new(&reg, flags.usize("workers", 1)?)
+    let manifest_missing =
+        !std::path::Path::new(dir).join("manifest.json").exists();
+    if manifest_missing
+        && !cfg!(feature = "pjrt")
+        && flags.str("artifacts").is_none()
+    {
+        eprintln!(
+            "note: no {dir}/manifest.json; using the in-process CPU \
+             emulator registry"
+        );
+        return Ok(Arc::new(Registry::emulated()));
+    }
+    Ok(Arc::new(Registry::load(dir)?))
+}
+
+/// One persistent engine per CLI invocation: every subcommand's batches
+/// share the same warm workers and executable caches.
+fn make_engine(flags: &Flags) -> Result<DeviceEngine> {
+    make_engine_n(flags, flags.usize("workers", 1)?)
+}
+
+fn make_engine_n(flags: &Flags, workers: usize) -> Result<DeviceEngine> {
+    let reg = load_registry(flags)?;
+    let pool = DevicePool::new(&reg, workers)?;
+    Engine::for_pool(&pool)
 }
 
 // ------------------------------------------------------------- commands
 
 fn cmd_info(flags: &Flags) -> Result<()> {
-    let dir = flags.str("artifacts").unwrap_or("artifacts");
-    let reg = Registry::load(dir)?;
+    let reg = load_registry(flags)?;
     println!("artifacts: {}", reg.dir.display());
     println!(
         "ABI: MAX_DIM={} MAX_PROG={} STACK={} MAX_PARAM={}",
@@ -215,7 +243,7 @@ fn cmd_integrate(flags: &Flags) -> Result<()> {
         parse_bounds(flags.str("bounds").context("--bounds required")?)?;
     let theta = parse_theta(flags)?;
     let job = IntegralJob::with_params(expr, &bounds, &theta)?;
-    let pool = make_pool(flags)?;
+    let engine = make_engine(flags)?;
     let samples = flags.usize("samples", 1 << 20)?;
     let trials = flags.usize("trials", 1)? as u32;
     let cfg = MultiConfig {
@@ -224,8 +252,9 @@ fn cmd_integrate(flags: &Flags) -> Result<()> {
         ..Default::default()
     };
     let t0 = std::time::Instant::now();
-    let per_trial =
-        multifunctions::integrate_trials(&pool, &[job.clone()], &cfg, trials)?;
+    let per_trial = multifunctions::integrate_trials(
+        &engine, &[job.clone()], &cfg, trials,
+    )?;
     let dt = t0.elapsed();
     let mut w = Welford::new();
     for t in &per_trial {
@@ -257,10 +286,8 @@ fn cmd_integrate(flags: &Flags) -> Result<()> {
 fn cmd_run(flags: &Flags) -> Result<()> {
     let path = flags.str("config").context("--config required")?;
     let cfg = JobConfig::from_file(path)?;
-    let dir = flags.str("artifacts").unwrap_or("artifacts");
-    let reg = Arc::new(Registry::load(dir)?);
     let workers = flags.usize("workers", cfg.workers)?;
-    let pool = DevicePool::new(&reg, workers)?;
+    let engine = make_engine_n(flags, workers)?;
     let mcfg = MultiConfig {
         samples_per_fn: cfg.samples_per_fn,
         seed: cfg.seed,
@@ -268,7 +295,7 @@ fn cmd_run(flags: &Flags) -> Result<()> {
     };
     let t0 = std::time::Instant::now();
     let per_trial = multifunctions::integrate_trials(
-        &pool, &cfg.jobs, &mcfg, cfg.trials,
+        &engine, &cfg.jobs, &mcfg, cfg.trials,
     )?;
     let dt = t0.elapsed();
     println!(
@@ -314,14 +341,14 @@ fn cmd_scan(flags: &Flags) -> Result<()> {
         .map(|v| vec![v])
         .collect();
     let job = IntegralJob::with_params(expr, &bounds, &thetas[0])?;
-    let pool = make_pool(flags)?;
+    let engine = make_engine(flags)?;
     let cfg = MultiConfig {
         samples_per_fn: flags.usize("samples", 1 << 18)?,
         seed: flags.u64("seed", 2021)?,
         ..Default::default()
     };
     let t0 = std::time::Instant::now();
-    let ests = functional::scan(&pool, &job, &thetas, &cfg)?;
+    let ests = functional::scan(&engine, &job, &thetas, &cfg)?;
     println!(
         "scan of {expr} over p0 in [{lo}, {hi}] ({n} points): {:.3}s",
         t0.elapsed().as_secs_f64()
@@ -339,7 +366,7 @@ fn cmd_normal(flags: &Flags) -> Result<()> {
         parse_bounds(flags.str("bounds").context("--bounds required")?)?;
     let theta = parse_theta(flags)?;
     let job = IntegralJob::with_params(expr, &bounds, &theta)?;
-    let pool = make_pool(flags)?;
+    let engine = make_engine(flags)?;
     let cfg = NormalConfig {
         initial_divisions: flags.usize("divisions", 4)?,
         n_trials: flags.usize("trials", 5)? as u32,
@@ -349,7 +376,7 @@ fn cmd_normal(flags: &Flags) -> Result<()> {
         ..Default::default()
     };
     let t0 = std::time::Instant::now();
-    let r = normal::integrate(&pool, &job, &cfg)?;
+    let r = normal::integrate(&engine, &job, &cfg)?;
     println!("tree-search integral of: {expr}");
     println!(
         "  I = {:.8} ± {:.3e}  ({} samples, {:.3}s)",
@@ -369,7 +396,7 @@ fn cmd_fig1(flags: &Flags) -> Result<()> {
     let n = flags.usize("n", 100)? as u32;
     let samples = flags.usize("samples", 1 << 20)?;
     let trials = flags.usize("trials", 10)? as u32;
-    let pool = make_pool(flags)?;
+    let engine = make_engine(flags)?;
     let batch = HarmonicBatch::fig1(n);
     let cfg = MultiConfig {
         samples_per_fn: samples,
@@ -377,12 +404,13 @@ fn cmd_fig1(flags: &Flags) -> Result<()> {
         ..Default::default()
     };
     let t0 = std::time::Instant::now();
-    let per_trial = harmonic::integrate_trials(&pool, &batch, &cfg, trials)?;
+    let per_trial =
+        harmonic::integrate_trials(&engine, &batch, &cfg, trials)?;
     let dt = t0.elapsed();
     println!(
         "Fig. 1: {n} harmonics, {samples} samples, {trials} trials, \
          {} workers — {:.2}s total ({:.2}s/trial)",
-        pool.n_devices,
+        engine.n_workers(),
         dt.as_secs_f64(),
         dt.as_secs_f64() / trials as f64
     );

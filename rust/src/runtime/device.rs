@@ -1,12 +1,21 @@
 //! Per-thread device handles and the simulated multi-GPU pool.
 //!
-//! The paper runs on N Tesla V100s coordinated by Ray; our testbed is the
-//! CPU PJRT plugin. A "device" here is a worker thread owning its own
-//! `PjRtClient` (the crate's client is `Rc`-based and must not cross
-//! threads) with a lazily-populated executable cache compiled from the
-//! shared [`Registry`] HLO texts. The scheduling/batching logic above is
-//! identical to what a real multi-accelerator deployment would use; see
-//! DESIGN.md "Substitutions" for the fidelity argument.
+//! The paper runs on N Tesla V100s coordinated by Ray; our testbed has
+//! no GPU. A "device" here is an engine worker thread owning its own
+//! [`DeviceRuntime`] with a lazily-populated executable cache compiled
+//! from the shared [`Registry`] HLO texts. Two backends sit behind the
+//! same `DeviceRuntime` API:
+//!
+//! * `--features pjrt` — the real PJRT CPU plugin via the `xla`
+//!   bindings (the crate's client is `Rc`-based and must not cross
+//!   threads, hence one client per worker);
+//! * default — the in-process CPU emulator
+//!   ([`crate::runtime::emulator`]), bit-compatible with the kernels'
+//!   Philox streams and VM semantics.
+//!
+//! Either way the scheduling/batching/caching logic above is identical
+//! to what a real multi-accelerator deployment would use; see DESIGN.md
+//! "Substitutions" for the fidelity argument.
 
 use std::cell::RefCell;
 use std::collections::HashMap;
@@ -15,8 +24,12 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Context, Result};
 
+#[cfg(not(feature = "pjrt"))]
+use crate::runtime::emulator::EmuExe;
 use crate::runtime::launch::Value;
-use crate::runtime::registry::{ExeSpec, Registry, TensorSpec};
+#[cfg(feature = "pjrt")]
+use crate::runtime::registry::TensorSpec;
+use crate::runtime::registry::{ExeSpec, Registry};
 
 /// Output of one device launch: flat f32 payload + wall time on device.
 #[derive(Debug, Clone)]
@@ -25,27 +38,63 @@ pub struct LaunchOutput {
     pub device_time: Duration,
 }
 
-/// One simulated accelerator: thread-local PJRT client + exe cache.
+#[cfg(feature = "pjrt")]
+type CompiledExe = xla::PjRtLoadedExecutable;
+#[cfg(not(feature = "pjrt"))]
+type CompiledExe = EmuExe;
+
+/// One-time process init for the PJRT plugin's logging default.
+///
+/// `std::env::set_var` is unsound when racing other threads reading the
+/// environment, and engine workers are spawned concurrently — so the
+/// default is installed exactly once behind a `Once` instead of from
+/// every worker's constructor.
+#[cfg(feature = "pjrt")]
+fn init_tf_logging_once() {
+    use std::sync::Once;
+    static TF_LOG: Once = Once::new();
+    TF_LOG.call_once(|| {
+        // silence TfrtCpuClient created/destroyed info chatter unless
+        // the user already configured TF logging
+        if std::env::var_os("TF_CPP_MIN_LOG_LEVEL").is_none() {
+            std::env::set_var("TF_CPP_MIN_LOG_LEVEL", "1");
+        }
+    });
+}
+
+/// One simulated accelerator: per-worker backend client + exe cache.
+///
+/// The cache is the engine's warm state: under the persistent engine a
+/// `DeviceRuntime` lives as long as its worker thread, so each
+/// executable is compiled at most once per worker for the process
+/// lifetime (counted in [`Registry::compile_count`]).
 pub struct DeviceRuntime {
     registry: Arc<Registry>,
+    #[cfg(feature = "pjrt")]
     client: xla::PjRtClient,
-    cache: RefCell<HashMap<String, xla::PjRtLoadedExecutable>>,
+    cache: RefCell<HashMap<String, CompiledExe>>,
     /// Cumulative time spent executing (for utilization metrics).
     busy: RefCell<Duration>,
 }
 
 impl DeviceRuntime {
+    #[cfg(feature = "pjrt")]
     pub fn new(registry: Arc<Registry>) -> Result<Self> {
-        // silence TfrtCpuClient created/destroyed info chatter unless the
-        // user already configured TF logging
-        if std::env::var_os("TF_CPP_MIN_LOG_LEVEL").is_none() {
-            std::env::set_var("TF_CPP_MIN_LOG_LEVEL", "1");
-        }
+        init_tf_logging_once();
         let client = xla::PjRtClient::cpu()
             .map_err(|e| anyhow!("PjRtClient::cpu: {e:?}"))?;
         Ok(DeviceRuntime {
             registry,
             client,
+            cache: RefCell::new(HashMap::new()),
+            busy: RefCell::new(Duration::ZERO),
+        })
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    pub fn new(registry: Arc<Registry>) -> Result<Self> {
+        Ok(DeviceRuntime {
+            registry,
             cache: RefCell::new(HashMap::new()),
             busy: RefCell::new(Duration::ZERO),
         })
@@ -59,36 +108,21 @@ impl DeviceRuntime {
         *self.busy.borrow()
     }
 
+    /// Executables compiled by *this* runtime so far.
+    pub fn cached_executables(&self) -> usize {
+        self.cache.borrow().len()
+    }
+
     /// Compile (or fetch cached) and execute `exe_name` with `inputs`.
     pub fn execute(&self, exe_name: &str, inputs: &[Value]) -> Result<LaunchOutput> {
         let spec = self.registry.get(exe_name)?;
         self.check_inputs(spec, inputs)?;
         self.ensure_compiled(spec)?;
-        let cache = self.cache.borrow();
-        let exe = cache.get(exe_name).expect("just compiled");
-
-        let literals: Vec<xla::Literal> = inputs
-            .iter()
-            .zip(&spec.inputs)
-            .map(|(v, ts)| literal_for_spec(ts, v))
-            .collect::<Result<_>>()?;
         let t0 = Instant::now();
-        let result = exe
-            .execute::<xla::Literal>(&literals)
-            .map_err(|e| anyhow!("execute {exe_name}: {e:?}"))?;
-        let lit = result[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("fetch output: {e:?}"))?;
+        let data = self.run_compiled(spec, inputs)?;
         let dt = t0.elapsed();
         *self.busy.borrow_mut() += dt;
 
-        // Artifacts are lowered with return_tuple=True → unwrap 1-tuple.
-        let out = lit
-            .to_tuple1()
-            .map_err(|e| anyhow!("output not a 1-tuple: {e:?}"))?;
-        let data = out
-            .to_vec::<f32>()
-            .map_err(|e| anyhow!("output to_vec: {e:?}"))?;
         let want: usize = spec.outputs[0].elements();
         if data.len() != want {
             return Err(anyhow!(
@@ -97,6 +131,36 @@ impl DeviceRuntime {
             ));
         }
         Ok(LaunchOutput { data, device_time: dt })
+    }
+
+    #[cfg(feature = "pjrt")]
+    fn run_compiled(&self, spec: &ExeSpec, inputs: &[Value]) -> Result<Vec<f32>> {
+        let cache = self.cache.borrow();
+        let exe = cache.get(&spec.name).expect("just compiled");
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .zip(&spec.inputs)
+            .map(|(v, ts)| literal_for_spec(ts, v))
+            .collect::<Result<_>>()?;
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("execute {}: {e:?}", spec.name))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch output: {e:?}"))?;
+        // Artifacts are lowered with return_tuple=True -> unwrap 1-tuple.
+        let out = lit
+            .to_tuple1()
+            .map_err(|e| anyhow!("output not a 1-tuple: {e:?}"))?;
+        out.to_vec::<f32>()
+            .map_err(|e| anyhow!("output to_vec: {e:?}"))
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    fn run_compiled(&self, spec: &ExeSpec, inputs: &[Value]) -> Result<Vec<f32>> {
+        let cache = self.cache.borrow();
+        let exe = cache.get(&spec.name).expect("just compiled");
+        exe.execute(spec, inputs)
     }
 
     fn check_inputs(&self, spec: &ExeSpec, inputs: &[Value]) -> Result<()> {
@@ -118,17 +182,27 @@ impl DeviceRuntime {
         if self.cache.borrow().contains_key(&spec.name) {
             return Ok(());
         }
+        let exe = self.compile(spec)?;
+        self.registry.note_compile();
+        self.cache.borrow_mut().insert(spec.name.clone(), exe);
+        Ok(())
+    }
+
+    #[cfg(feature = "pjrt")]
+    fn compile(&self, spec: &ExeSpec) -> Result<CompiledExe> {
         let proto = xla::HloModuleProto::parse_and_return_unverified_module(
             spec.hlo_text.as_bytes(),
         )
         .map_err(|e| anyhow!("parse HLO {}: {e:?}", spec.name))?;
         let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
+        self.client
             .compile(&comp)
-            .map_err(|e| anyhow!("compile {}: {e:?}", spec.name))?;
-        self.cache.borrow_mut().insert(spec.name.clone(), exe);
-        Ok(())
+            .map_err(|e| anyhow!("compile {}: {e:?}", spec.name))
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    fn compile(&self, spec: &ExeSpec) -> Result<CompiledExe> {
+        EmuExe::compile(spec)
     }
 
     /// Pre-compile a set of executables (worker warmup).
@@ -140,6 +214,7 @@ impl DeviceRuntime {
     }
 }
 
+#[cfg(feature = "pjrt")]
 fn value_to_literal(v: &Value) -> Result<xla::Literal> {
     Ok(match v {
         Value::F32(x) => xla::Literal::vec1(x),
@@ -150,6 +225,7 @@ fn value_to_literal(v: &Value) -> Result<xla::Literal> {
 
 /// Build a literal with the exact ranked shape the manifest declares
 /// (the lowered HLO has ranked parameters, e.g. `f32[128,8]`).
+#[cfg(feature = "pjrt")]
 fn literal_for_spec(ts: &TensorSpec, v: &Value) -> Result<xla::Literal> {
     let flat = value_to_literal(v)?;
     if ts.shape.len() <= 1 {
@@ -161,8 +237,9 @@ fn literal_for_spec(ts: &TensorSpec, v: &Value) -> Result<xla::Literal> {
 }
 
 /// Topology descriptor for the simulated cluster: how many device
-/// workers the coordinator should spawn. (Each worker builds its own
-/// [`DeviceRuntime`] on its own thread.)
+/// workers the engine should spawn. (Each worker builds its own
+/// [`DeviceRuntime`] on its own thread and keeps it for the engine's
+/// lifetime.)
 #[derive(Debug, Clone)]
 pub struct DevicePool {
     pub registry: Arc<Registry>,
@@ -186,42 +263,49 @@ mod tests {
 
     #[test]
     fn pool_rejects_zero_devices() {
-        // Registry::load needs artifacts; build a tiny fake instead.
-        // DevicePool construction only checks n_devices.
-        let dir = std::env::temp_dir()
-            .join(format!("zmc_pool_{}", std::process::id()));
-        std::fs::create_dir_all(&dir).unwrap();
-        std::fs::write(
-            dir.join("manifest.json"),
-            format!(
-                r#"{{"constants":{{"abi_version":1,"MAX_DIM":8,"MAX_PROG":48,
-                   "STACK":16,"MAX_PARAM":16,"N_OPS":24}},
-                   "executables":{{"t":{{"file":"t.hlo.txt","kind":"harmonic",
-                   "samples":8,"n_fns":1,"dims":1,"tile":8,
-                   "inputs":[],"outputs":[{{"dtype":"f32","shape":[2,1]}}]}}}}}}"#
-            ),
-        )
-        .unwrap();
-        std::fs::write(dir.join("t.hlo.txt"), "HloModule t\n").unwrap();
-        let reg = Arc::new(Registry::load(&dir).unwrap());
+        let reg = Arc::new(Registry::emulated());
         assert!(DevicePool::new(&reg, 0).is_err());
         assert_eq!(DevicePool::new(&reg, 4).unwrap().n_devices, 4);
-        std::fs::remove_dir_all(&dir).ok();
-    }
-
-    #[test]
-    fn value_literal_roundtrip() {
-        let v = Value::F32(vec![1.0, 2.0, 3.0]);
-        let lit = value_to_literal(&v).unwrap();
-        assert_eq!(lit.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0]);
-        let u = Value::U32(vec![7, 8]);
-        let lit = value_to_literal(&u).unwrap();
-        assert_eq!(lit.to_vec::<u32>().unwrap(), vec![7, 8]);
     }
 
     #[test]
     fn tensor_spec_elements() {
         let ts = TensorSpec { name: "k".into(), dtype: D::F32, shape: vec![4, 8] };
         assert_eq!(ts.elements(), 32);
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn emulated_runtime_compiles_once_per_exe() {
+        use crate::expr::Expr;
+        use crate::runtime::launch::{vm_multi_inputs, RngCtr, VmFn};
+
+        let reg = Arc::new(Registry::emulated());
+        let dev = DeviceRuntime::new(Arc::clone(&reg)).unwrap();
+        let exe = reg.get("vm_multi_f8_s4096").unwrap();
+        let f = VmFn {
+            program: Expr::parse("x1").unwrap().compile().unwrap(),
+            theta: vec![],
+            bounds: vec![(0.0, 1.0)],
+            stream: 0,
+        };
+        let rng = RngCtr { seed: [1, 1], base: 0, trial: 0 };
+        let inputs =
+            vm_multi_inputs(exe, rng, std::slice::from_ref(&f)).unwrap();
+        let a = dev.execute(&exe.name, &inputs).unwrap();
+        let b = dev.execute(&exe.name, &inputs).unwrap();
+        assert_eq!(a.data, b.data); // idempotent launches
+        assert_eq!(reg.compile_count(), 1); // second call hit the cache
+        assert_eq!(dev.cached_executables(), 1);
+        assert!(dev.busy_time() > Duration::ZERO);
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn execute_rejects_malformed_inputs() {
+        let reg = Arc::new(Registry::emulated());
+        let dev = DeviceRuntime::new(Arc::clone(&reg)).unwrap();
+        assert!(dev.execute("vm_multi_f8_s4096", &[]).is_err());
+        assert!(dev.execute("nope", &[]).is_err());
     }
 }

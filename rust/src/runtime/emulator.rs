@@ -1,0 +1,436 @@
+//! In-process CPU device emulator — the default execution backend when
+//! the `pjrt` feature is off.
+//!
+//! The build environment has no PJRT plugin and no network, so instead
+//! of stubbing execution out, this module interprets the three artifact
+//! kinds with the **same sampling and evaluation semantics as the
+//! Pallas kernels**: Philox-4x32-10 counter addressing via
+//! [`StreamKey::point`] (bit-identical streams), f32 affine domain
+//! mapping, f32 bytecode evaluation through [`BatchInterp`], and
+//! per-function `(sum f, sum f^2)` moment outputs in the exact layouts the
+//! manifest declares. It is the same mirror the runtime integration
+//! tests check real artifacts against — see DESIGN.md "Substitutions".
+//!
+//! Compilation still goes through the per-worker cache in
+//! [`crate::runtime::device::DeviceRuntime`] and is counted in the
+//! [`Registry`](crate::runtime::registry::Registry) ledger, so the
+//! engine's warm-cache behaviour is observable with or without PJRT.
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::abi::{MAX_PARAM, MAX_PROG};
+use crate::runtime::launch::Value;
+use crate::runtime::registry::{ExeKind, ExeSpec};
+use crate::sampler::StreamKey;
+use crate::vm::interp::BatchInterp;
+use crate::vm::opcodes::Op;
+use crate::vm::program::{Instr, Program};
+
+/// Samples per interpreter batch (mirrors the device tile trade-off).
+const CHUNK: usize = 2048;
+
+/// A "compiled" executable for the emulator: validation happened, the
+/// kind is frozen. (Programs arrive per launch in the input tensors,
+/// exactly as on the device, so there is nothing else to lower.)
+#[derive(Debug, Clone)]
+pub struct EmuExe {
+    kind: ExeKind,
+}
+
+impl EmuExe {
+    pub fn compile(spec: &ExeSpec) -> Result<EmuExe> {
+        if !spec.hlo_text.contains("HloModule") {
+            bail!("{}: not an HLO module", spec.name);
+        }
+        Ok(EmuExe { kind: spec.kind })
+    }
+
+    /// Execute one launch; `inputs` were already validated against the
+    /// spec's tensor signatures by the caller.
+    pub fn execute(&self, spec: &ExeSpec, inputs: &[Value]) -> Result<Vec<f32>> {
+        match self.kind {
+            ExeKind::VmMulti => run_vm_multi(spec, inputs),
+            ExeKind::Harmonic => run_harmonic(spec, inputs),
+            ExeKind::Stratified => run_stratified(spec, inputs),
+        }
+    }
+}
+
+fn u32s<'a>(v: &'a Value, what: &str) -> Result<&'a [u32]> {
+    match v {
+        Value::U32(x) => Ok(x),
+        _ => Err(anyhow!("emulator: input '{what}' is not u32")),
+    }
+}
+
+fn i32s<'a>(v: &'a Value, what: &str) -> Result<&'a [i32]> {
+    match v {
+        Value::I32(x) => Ok(x),
+        _ => Err(anyhow!("emulator: input '{what}' is not i32")),
+    }
+}
+
+fn f32s<'a>(v: &'a Value, what: &str) -> Result<&'a [f32]> {
+    match v {
+        Value::F32(x) => Ok(x),
+        _ => Err(anyhow!("emulator: input '{what}' is not f32")),
+    }
+}
+
+/// Reassemble a validated [`Program`] from one row of device arrays.
+fn decode_program(
+    ops: &[i32],
+    iargs: &[i32],
+    fargs: &[f32],
+    plen: usize,
+) -> Result<Program> {
+    if plen > ops.len() {
+        bail!("emulator: program length {plen} exceeds row width");
+    }
+    let mut instrs = Vec::with_capacity(plen);
+    for p in 0..plen {
+        let op = Op::from_code(ops[p])
+            .ok_or_else(|| anyhow!("emulator: bad opcode {}", ops[p]))?;
+        instrs.push(Instr { op, iarg: iargs[p], farg: fargs[p] });
+    }
+    Program::new(instrs).map_err(|e| anyhow!("emulator: invalid program: {e}"))
+}
+
+/// Chunked `(sum f, sum f^2)` of `prog` over `samples` draws of `key`
+/// starting at counter `base`, with the device's f32 affine map
+/// `x = lo + (hi - lo) * u` per dimension. Accumulates in f64 like the
+/// CPU baseline (absorbs f32 partial error over large S).
+#[allow(clippy::too_many_arguments)]
+fn moment_sums(
+    prog: &Program,
+    key: &StreamKey,
+    base: u32,
+    samples: usize,
+    lo: &[f32],
+    hi: &[f32],
+    theta: &[f32],
+    interp: &mut BatchInterp,
+    buf: &mut [f32],
+) -> (f64, f64) {
+    let dims = prog.dims;
+    let mut xt: Vec<Vec<f32>> = vec![vec![0f32; CHUNK]; dims];
+    let (mut sum, mut sumsq) = (0f64, 0f64);
+    let mut done = 0usize;
+    while done < samples {
+        let n = (samples - done).min(CHUNK);
+        for i in 0..n {
+            let u = key.point(base.wrapping_add((done + i) as u32), dims);
+            for (d, row) in xt.iter_mut().enumerate() {
+                row[i] = lo[d] + (hi[d] - lo[d]) * u[d];
+            }
+        }
+        interp.eval(prog, &xt, theta, n, buf);
+        for &v in &buf[..n] {
+            sum += v as f64;
+            sumsq += (v as f64) * (v as f64);
+        }
+        done += n;
+    }
+    (sum, sumsq)
+}
+
+/// `vm_multi`: N independent bytecode integrands per launch.
+/// Output layout `f32[N, 2]`: `[f*2] = sum f`, `[f*2+1] = sum f^2`; null
+/// slots (plen 0) stay exactly zero.
+fn run_vm_multi(spec: &ExeSpec, inputs: &[Value]) -> Result<Vec<f32>> {
+    let seed = u32s(&inputs[0], "seed")?;
+    let ctr = u32s(&inputs[1], "ctr")?;
+    let streams = u32s(&inputs[2], "streams")?;
+    let plens = i32s(&inputs[3], "plens")?;
+    let ops = i32s(&inputs[4], "ops")?;
+    let iargs = i32s(&inputs[5], "iargs")?;
+    let fargs = f32s(&inputs[6], "fargs")?;
+    let theta = f32s(&inputs[7], "theta")?;
+    let lo = f32s(&inputs[8], "lo")?;
+    let hi = f32s(&inputs[9], "hi")?;
+    let (n, d, p) = (spec.n_fns, spec.dims, MAX_PROG);
+
+    let mut out = vec![0f32; n * 2];
+    let mut interp = BatchInterp::new(CHUNK);
+    let mut buf = vec![0f32; CHUNK];
+    for f in 0..n {
+        let plen = plens[f].max(0) as usize;
+        if plen == 0 {
+            continue; // null slot
+        }
+        let prog = decode_program(
+            &ops[f * p..(f + 1) * p],
+            &iargs[f * p..(f + 1) * p],
+            &fargs[f * p..(f + 1) * p],
+            plen,
+        )?;
+        if prog.dims > d {
+            bail!("emulator: fn {f} reads x{} but exe has {d} dims", prog.dims);
+        }
+        let key = StreamKey {
+            seed: [seed[0], seed[1]],
+            stream: streams[f],
+            trial: ctr[1],
+        };
+        let (s, q) = moment_sums(
+            &prog,
+            &key,
+            ctr[0],
+            spec.samples,
+            &lo[f * d..(f + 1) * d],
+            &hi[f * d..(f + 1) * d],
+            &theta[f * MAX_PARAM..(f + 1) * MAX_PARAM],
+            &mut interp,
+            &mut buf,
+        );
+        out[f * 2] = s as f32;
+        out[f * 2 + 1] = q as f32;
+    }
+    Ok(out)
+}
+
+/// `harmonic`: up to N functions `a cos(k.x) + b sin(k.x)` over one
+/// shared sample tile. Output layout `f32[2, N]`: row 0 sums, row 1
+/// sums of squares; unused slots (a = b = 0) stay exactly zero.
+fn run_harmonic(spec: &ExeSpec, inputs: &[Value]) -> Result<Vec<f32>> {
+    let seed = u32s(&inputs[0], "seed")?;
+    let ctr = u32s(&inputs[1], "ctr")?; // [base, stream, trial]
+    let k = f32s(&inputs[2], "k")?;
+    let a = f32s(&inputs[3], "a")?;
+    let b = f32s(&inputs[4], "b")?;
+    let lo = f32s(&inputs[5], "lo")?;
+    let hi = f32s(&inputs[6], "hi")?;
+    let (n, d) = (spec.n_fns, spec.dims);
+
+    let live: Vec<usize> =
+        (0..n).filter(|&f| a[f] != 0.0 || b[f] != 0.0).collect();
+    let key = StreamKey {
+        seed: [seed[0], seed[1]],
+        stream: ctr[1],
+        trial: ctr[2],
+    };
+    let mut sums = vec![0f64; n];
+    let mut sqs = vec![0f64; n];
+    let mut x = vec![0f32; d];
+    for i in 0..spec.samples {
+        let u = key.point(ctr[0].wrapping_add(i as u32), d);
+        for dd in 0..d {
+            x[dd] = lo[dd] + (hi[dd] - lo[dd]) * u[dd];
+        }
+        for &f in &live {
+            let mut phase = 0f32;
+            for dd in 0..d {
+                phase += k[f * d + dd] * x[dd];
+            }
+            let v = (a[f] * phase.cos() + b[f] * phase.sin()) as f64;
+            sums[f] += v;
+            sqs[f] += v * v;
+        }
+    }
+    let mut out = vec![0f32; 2 * n];
+    for f in 0..n {
+        out[f] = sums[f] as f32;
+        out[n + f] = sqs[f] as f32;
+    }
+    Ok(out)
+}
+
+/// `stratified`: one shared program over a batch of cubes, one Philox
+/// stream per cube. Output layout `f32[C, 2]`.
+fn run_stratified(spec: &ExeSpec, inputs: &[Value]) -> Result<Vec<f32>> {
+    let seed = u32s(&inputs[0], "seed")?;
+    let ctr = u32s(&inputs[1], "ctr")?; // [base, trial]
+    let streams = u32s(&inputs[2], "streams")?;
+    let plen = i32s(&inputs[3], "plen")?[0].max(0) as usize;
+    let ops = i32s(&inputs[4], "ops")?;
+    let iargs = i32s(&inputs[5], "iargs")?;
+    let fargs = f32s(&inputs[6], "fargs")?;
+    let theta = f32s(&inputs[7], "theta")?;
+    let cl = f32s(&inputs[8], "cl")?;
+    let ch = f32s(&inputs[9], "ch")?;
+    let (c, d) = (spec.n_cubes, spec.dims);
+
+    if plen == 0 {
+        bail!("emulator: stratified launch with empty program");
+    }
+    let prog = decode_program(ops, iargs, fargs, plen)?;
+    if prog.dims > d {
+        bail!("emulator: program reads x{} but exe has {d} dims", prog.dims);
+    }
+    let mut out = vec![0f32; c * 2];
+    let mut interp = BatchInterp::new(CHUNK);
+    let mut buf = vec![0f32; CHUNK];
+    for ci in 0..c {
+        let key = StreamKey {
+            seed: [seed[0], seed[1]],
+            stream: streams[ci],
+            trial: ctr[1],
+        };
+        let (s, q) = moment_sums(
+            &prog,
+            &key,
+            ctr[0],
+            spec.samples,
+            &cl[ci * d..(ci + 1) * d],
+            &ch[ci * d..(ci + 1) * d],
+            theta,
+            &mut interp,
+            &mut buf,
+        );
+        out[ci * 2] = s as f32;
+        out[ci * 2 + 1] = q as f32;
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::expr::Expr;
+    use crate::runtime::launch::{
+        harmonic_inputs, stratified_inputs, vm_multi_inputs, RngCtr, VmFn,
+    };
+    use crate::runtime::registry::Registry;
+
+    fn exec(reg: &Registry, name: &str, inputs: &[Value]) -> Vec<f32> {
+        let spec = reg.get(name).unwrap();
+        EmuExe::compile(spec).unwrap().execute(spec, inputs).unwrap()
+    }
+
+    #[test]
+    fn constant_integrand_sums_exactly() {
+        let reg = Registry::emulated();
+        let exe = reg.get("vm_multi_f8_s4096").unwrap();
+        let f = VmFn {
+            program: Expr::parse("1").unwrap().compile().unwrap(),
+            theta: vec![],
+            bounds: vec![(0.0, 1.0)],
+            stream: 0,
+        };
+        let rng = RngCtr { seed: [1, 2], base: 0, trial: 0 };
+        let inputs =
+            vm_multi_inputs(exe, rng, std::slice::from_ref(&f)).unwrap();
+        let out = exec(&reg, &exe.name, &inputs);
+        assert_eq!(out[0], exe.samples as f32);
+        assert_eq!(out[1], exe.samples as f32);
+        // null slots exactly zero
+        assert!(out[2..].iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn vm_matches_streamkey_mirror() {
+        let reg = Registry::emulated();
+        let exe = reg.get("vm_multi_f8_s4096").unwrap();
+        let f = VmFn {
+            program: Expr::parse("x1*x2").unwrap().compile().unwrap(),
+            theta: vec![],
+            bounds: vec![(0.0, 1.0), (0.0, 2.0)],
+            stream: 9,
+        };
+        let rng = RngCtr { seed: [7, 8], base: 4096, trial: 3 };
+        let inputs =
+            vm_multi_inputs(exe, rng, std::slice::from_ref(&f)).unwrap();
+        let out = exec(&reg, &exe.name, &inputs);
+
+        // independent scalar mirror over the same stream
+        let key = StreamKey { seed: [7, 8], stream: 9, trial: 3 };
+        let (mut s, mut q) = (0f64, 0f64);
+        for i in 0..exe.samples {
+            let u = key.point(4096u32.wrapping_add(i as u32), 2);
+            let x0 = u[0]; // lo=0, hi=1
+            let x1 = 2.0f32 * u[1];
+            let v = (x0 * x1) as f64;
+            s += v;
+            q += v * v;
+        }
+        assert!((out[0] as f64 - s).abs() < 1e-3 * s.max(1.0), "{}", out[0]);
+        assert!((out[1] as f64 - q).abs() < 1e-3 * q.max(1.0));
+    }
+
+    #[test]
+    fn harmonic_zero_wavevector_is_constant() {
+        let reg = Registry::emulated();
+        let exe = reg.get("harmonic_s8192_n128").unwrap();
+        // k = 0 -> f = a*cos(0) + b*sin(0) = a
+        let rng = RngCtr { seed: [3, 4], base: 0, trial: 0 };
+        let inputs = harmonic_inputs(
+            exe,
+            rng,
+            5,
+            &[vec![0.0, 0.0]],
+            &[2.5],
+            &[1.0],
+            &[0.0, 0.0],
+            &[1.0, 1.0],
+        )
+        .unwrap();
+        let out = exec(&reg, &exe.name, &inputs);
+        let s = exe.samples as f32;
+        assert!((out[0] - 2.5 * s).abs() < 1e-2 * s);
+        assert!((out[exe.n_fns] - 6.25 * s).abs() < 1e-1 * s);
+        // padded function slots exactly zero
+        assert_eq!(out[1], 0.0);
+    }
+
+    #[test]
+    fn stratified_unit_program_counts_samples() {
+        let reg = Registry::emulated();
+        let exe = reg.get("stratified_c16_s256").unwrap();
+        let prog = Expr::parse("1").unwrap().compile().unwrap();
+        let cubes: Vec<(Vec<f64>, Vec<f64>)> = (0..16)
+            .map(|i| (vec![i as f64 / 16.0], vec![(i + 1) as f64 / 16.0]))
+            .collect();
+        let streams: Vec<u32> = (0..16).collect();
+        let rng = RngCtr { seed: [5, 6], base: 0, trial: 0 };
+        let inputs =
+            stratified_inputs(exe, rng, &prog, &[], &cubes, &streams)
+                .unwrap();
+        let out = exec(&reg, &exe.name, &inputs);
+        for c in 0..16 {
+            assert_eq!(out[c * 2], exe.samples as f32, "cube {c}");
+            assert_eq!(out[c * 2 + 1], exe.samples as f32);
+        }
+    }
+
+    #[test]
+    fn chunked_counters_tile_seamlessly() {
+        // launches at base 0 and base=samples must form one logical
+        // stream: merged sums equal a single double-length mirror pass
+        let reg = Registry::emulated();
+        let exe = reg.get("vm_multi_f8_s4096").unwrap();
+        let f = VmFn {
+            program: Expr::parse("x1").unwrap().compile().unwrap(),
+            theta: vec![],
+            bounds: vec![(0.0, 1.0)],
+            stream: 0,
+        };
+        let mut total = 0f64;
+        for chunk in 0..2u32 {
+            let rng = RngCtr {
+                seed: [9, 9],
+                base: chunk * exe.samples as u32,
+                trial: 0,
+            };
+            let inputs =
+                vm_multi_inputs(exe, rng, std::slice::from_ref(&f)).unwrap();
+            let out = exec(&reg, &exe.name, &inputs);
+            total += out[0] as f64;
+        }
+        let key = StreamKey { seed: [9, 9], stream: 0, trial: 0 };
+        let mut s = 0f64;
+        for i in 0..2 * exe.samples {
+            s += key.point(i as u32, 1)[0] as f64;
+        }
+        assert!((total - s).abs() < 1e-3 * s, "{total} vs {s}");
+    }
+
+    #[test]
+    fn compile_rejects_non_hlo() {
+        let mut spec = Registry::emulated()
+            .get("vm_multi_f8_s4096")
+            .unwrap()
+            .clone();
+        spec.hlo_text = "garbage".into();
+        assert!(EmuExe::compile(&spec).is_err());
+    }
+}

@@ -1,17 +1,24 @@
-//! PJRT runtime: load AOT artifacts and execute them from the rust
+//! Device runtime: load AOT artifacts and execute them from the rust
 //! coordinator (no python anywhere on this path).
 //!
 //! * [`registry`] — parses `artifacts/manifest.json`, holds the HLO text
 //!   of every executable plus its typed input/output signature. Shared
-//!   (`Arc`) and thread-safe: it contains no PJRT objects.
-//! * [`device`] — per-thread device handles. `PjRtClient` is `Rc`-based
-//!   (not `Send`), so every worker thread owns a [`device::DeviceRuntime`]
-//!   that lazily compiles executables from the shared registry; a
+//!   (`Arc`) and thread-safe: it contains no backend objects, and keeps
+//!   the crate-wide compile ledger the warm-cache tests assert on.
+//! * [`device`] — per-thread device handles. Backend clients are not
+//!   `Send` (PJRT's is `Rc`-based), so every engine worker owns a
+//!   [`device::DeviceRuntime`] that lazily compiles executables from the
+//!   shared registry and keeps them cached for the worker's lifetime; a
 //!   [`device::DevicePool`] describes the simulated multi-GPU topology.
 //! * [`launch`] — typed launch argument builders for the three artifact
 //!   kinds (`harmonic`, `vm_multi`, `stratified`) and the dtype-checked
-//!   literal conversion.
+//!   payload conversion.
+//! * [`emulator`] — the default (no-`pjrt`) execution backend: a CPU
+//!   interpreter bit-compatible with the kernels' Philox addressing and
+//!   VM bytecode semantics, so the whole stack runs offline.
 
 pub mod device;
+#[cfg(not(feature = "pjrt"))]
+pub mod emulator;
 pub mod launch;
 pub mod registry;

@@ -2,6 +2,7 @@
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
 
 use anyhow::{anyhow, bail, Context, Result};
 
@@ -70,10 +71,16 @@ pub struct ExeSpec {
 }
 
 /// The loaded artifact set. `Send + Sync`; holds no PJRT state.
+///
+/// Also the crate-wide compile ledger: every [`DeviceRuntime`]
+/// (`crate::runtime::device`) reports each executable compilation here,
+/// so tests can assert the engine's warm-cache invariant — at most one
+/// compile per worker per executable across arbitrarily many submits.
 #[derive(Debug)]
 pub struct Registry {
     pub dir: PathBuf,
     exes: BTreeMap<String, ExeSpec>,
+    compiles: AtomicU64,
 }
 
 impl Registry {
@@ -108,7 +115,57 @@ impl Registry {
         if exes.is_empty() {
             bail!("manifest has no executables");
         }
-        Ok(Registry { dir, exes })
+        Ok(Registry { dir, exes, compiles: AtomicU64::new(0) })
+    }
+
+    /// Build a registry directly from specs (no manifest on disk) —
+    /// used by the emulator registry and by tests.
+    pub fn from_specs(
+        dir: impl Into<PathBuf>,
+        specs: Vec<ExeSpec>,
+    ) -> Result<Registry> {
+        if specs.is_empty() {
+            bail!("registry needs at least one executable");
+        }
+        let mut exes = BTreeMap::new();
+        for s in specs {
+            exes.insert(s.name.clone(), s);
+        }
+        Ok(Registry {
+            dir: dir.into(),
+            exes,
+            compiles: AtomicU64::new(0),
+        })
+    }
+
+    /// The standard artifact set with synthetic HLO bodies, executable
+    /// only by the in-process CPU emulator (the default, non-`pjrt`
+    /// backend). Mirrors the names/shapes `make artifacts` produces so
+    /// examples, the CLI and the test-suite run without python or PJRT.
+    pub fn emulated() -> Registry {
+        let specs = vec![
+            vm_multi_spec("vm_multi_f8_s4096", 8, 4096, 8, 512),
+            vm_multi_spec("vm_multi_f16_d4_s8192", 16, 8192, 4, 512),
+            vm_multi_spec("vm_multi_f32_s16384", 32, 16384, 8, 1024),
+            harmonic_spec("harmonic_s8192_n128", 128, 8192, 8, 512),
+            harmonic_spec("harmonic_s65536_n128", 128, 65536, 8, 2048),
+            stratified_spec("stratified_c16_s256", 16, 256, 8, 256),
+            stratified_spec("stratified_c64_s1024", 64, 1024, 8, 512),
+        ];
+        Registry::from_specs("<emulated>", specs)
+            .expect("emulated registry is non-empty")
+    }
+
+    /// Count one executable compilation (called by device runtimes).
+    pub fn note_compile(&self) {
+        self.compiles.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Total compilations across every worker since this registry was
+    /// loaded. With a warm engine this saturates at
+    /// `n_workers x distinct executables used`.
+    pub fn compile_count(&self) -> u64 {
+        self.compiles.load(Ordering::Relaxed)
     }
 
     pub fn get(&self, name: &str) -> Result<&ExeSpec> {
@@ -166,6 +223,111 @@ impl Registry {
         best.ok_or_else(|| {
             anyhow!("no executable of kind {kind:?} with dims >= {want_dims}")
         })
+    }
+}
+
+// ---------------------------------------------------------------------
+// Synthetic spec builders for the emulated registry. The input/output
+// signatures must stay in lockstep with the builders in
+// `crate::runtime::launch` (they are what `check_inputs` validates
+// launches against).
+
+fn tensor(name: &str, dtype: DType, shape: &[usize]) -> TensorSpec {
+    TensorSpec { name: name.into(), dtype, shape: shape.to_vec() }
+}
+
+fn vm_multi_spec(
+    name: &str,
+    n_fns: usize,
+    samples: usize,
+    dims: usize,
+    tile: usize,
+) -> ExeSpec {
+    let p = abi::MAX_PROG;
+    ExeSpec {
+        name: name.to_string(),
+        kind: ExeKind::VmMulti,
+        inputs: vec![
+            tensor("seed", DType::U32, &[2]),
+            tensor("ctr", DType::U32, &[2]),
+            tensor("streams", DType::U32, &[n_fns]),
+            tensor("plens", DType::I32, &[n_fns]),
+            tensor("ops", DType::I32, &[n_fns, p]),
+            tensor("iargs", DType::I32, &[n_fns, p]),
+            tensor("fargs", DType::F32, &[n_fns, p]),
+            tensor("theta", DType::F32, &[n_fns, abi::MAX_PARAM]),
+            tensor("lo", DType::F32, &[n_fns, dims]),
+            tensor("hi", DType::F32, &[n_fns, dims]),
+        ],
+        outputs: vec![tensor("moments", DType::F32, &[n_fns, 2])],
+        samples,
+        n_fns,
+        n_cubes: 0,
+        dims,
+        tile,
+        hlo_text: format!("HloModule emulated_{name}\n"),
+    }
+}
+
+fn harmonic_spec(
+    name: &str,
+    n_fns: usize,
+    samples: usize,
+    dims: usize,
+    tile: usize,
+) -> ExeSpec {
+    ExeSpec {
+        name: name.to_string(),
+        kind: ExeKind::Harmonic,
+        inputs: vec![
+            tensor("seed", DType::U32, &[2]),
+            tensor("ctr", DType::U32, &[3]),
+            tensor("k", DType::F32, &[n_fns, dims]),
+            tensor("a", DType::F32, &[n_fns]),
+            tensor("b", DType::F32, &[n_fns]),
+            tensor("lo", DType::F32, &[dims]),
+            tensor("hi", DType::F32, &[dims]),
+        ],
+        outputs: vec![tensor("moments", DType::F32, &[2, n_fns])],
+        samples,
+        n_fns,
+        n_cubes: 0,
+        dims,
+        tile,
+        hlo_text: format!("HloModule emulated_{name}\n"),
+    }
+}
+
+fn stratified_spec(
+    name: &str,
+    n_cubes: usize,
+    samples: usize,
+    dims: usize,
+    tile: usize,
+) -> ExeSpec {
+    let p = abi::MAX_PROG;
+    ExeSpec {
+        name: name.to_string(),
+        kind: ExeKind::Stratified,
+        inputs: vec![
+            tensor("seed", DType::U32, &[2]),
+            tensor("ctr", DType::U32, &[2]),
+            tensor("streams", DType::U32, &[n_cubes]),
+            tensor("plen", DType::I32, &[1]),
+            tensor("ops", DType::I32, &[p]),
+            tensor("iargs", DType::I32, &[p]),
+            tensor("fargs", DType::F32, &[p]),
+            tensor("theta", DType::F32, &[abi::MAX_PARAM]),
+            tensor("cl", DType::F32, &[n_cubes, dims]),
+            tensor("ch", DType::F32, &[n_cubes, dims]),
+        ],
+        outputs: vec![tensor("moments", DType::F32, &[n_cubes, 2])],
+        samples,
+        n_fns: 0,
+        n_cubes,
+        dims,
+        tile,
+        hlo_text: format!("HloModule emulated_{name}\n"),
     }
 }
 
@@ -322,6 +484,35 @@ mod tests {
     #[test]
     fn missing_dir_errors() {
         assert!(Registry::load("/nonexistent/path").is_err());
+    }
+
+    #[test]
+    fn emulated_registry_matches_launch_builders() {
+        let reg = Registry::emulated();
+        assert!(reg.names().count() >= 6);
+        let vm = reg.get("vm_multi_f8_s4096").unwrap();
+        assert_eq!(vm.kind, ExeKind::VmMulti);
+        assert_eq!(vm.inputs.len(), 10);
+        assert_eq!(vm.outputs[0].shape, vec![8, 2]);
+        let h = reg.get("harmonic_s8192_n128").unwrap();
+        assert_eq!(h.inputs.len(), 7);
+        assert_eq!(h.outputs[0].shape, vec![2, 128]);
+        let s = reg.get("stratified_c16_s256").unwrap();
+        assert_eq!(s.n_cubes, 16);
+        // dims-aware pick prefers the d4 artifact for low-dim batches
+        let d4 = reg.pick(ExeKind::VmMulti, 8192, 3).unwrap();
+        assert_eq!(d4.dims, 4);
+        let d8 = reg.pick(ExeKind::VmMulti, 8192, 6).unwrap();
+        assert_eq!(d8.dims, 8);
+    }
+
+    #[test]
+    fn compile_counter_accumulates() {
+        let reg = Registry::emulated();
+        assert_eq!(reg.compile_count(), 0);
+        reg.note_compile();
+        reg.note_compile();
+        assert_eq!(reg.compile_count(), 2);
     }
 
     #[test]

@@ -1,5 +1,8 @@
 //! End-to-end CLI tests: run the real `zmc` binary as a user would.
-//! Device-touching subcommands skip gracefully without artifacts.
+//!
+//! Device-touching subcommands run against real artifacts when present,
+//! else the CLI's built-in CPU emulator registry (default build). Under
+//! `--features pjrt` without artifacts they skip gracefully.
 
 use std::path::Path;
 use std::process::Command;
@@ -14,11 +17,25 @@ fn have_artifacts() -> bool {
         .exists()
 }
 
-fn artifacts_flag() -> String {
-    Path::new(env!("CARGO_MANIFEST_DIR"))
-        .join("artifacts")
-        .display()
-        .to_string()
+/// Can device subcommands run in this build?
+fn device_ok() -> bool {
+    have_artifacts() || !cfg!(feature = "pjrt")
+}
+
+/// Base args plus `--artifacts DIR` when a real artifact dir exists
+/// (without it the CLI falls back to the emulated registry itself).
+fn with_artifacts(args: &[&str]) -> Vec<String> {
+    let mut v: Vec<String> = args.iter().map(|s| s.to_string()).collect();
+    if have_artifacts() {
+        v.push("--artifacts".into());
+        v.push(
+            Path::new(env!("CARGO_MANIFEST_DIR"))
+                .join("artifacts")
+                .display()
+                .to_string(),
+        );
+    }
+    v
 }
 
 #[test]
@@ -53,19 +70,14 @@ fn integrate_rejects_missing_flags() {
 
 #[test]
 fn integrate_rejects_bad_expression() {
-    if !have_artifacts() {
-        return;
-    }
     let out = zmc()
-        .args([
+        .args(with_artifacts(&[
             "integrate",
             "--expr",
             "frob(x1)",
             "--bounds",
             "0,1",
-            "--artifacts",
-            &artifacts_flag(),
-        ])
+        ]))
         .output()
         .unwrap();
     assert!(!out.status.success());
@@ -74,13 +86,10 @@ fn integrate_rejects_bad_expression() {
 
 #[test]
 fn info_lists_executables() {
-    if !have_artifacts() {
+    if !device_ok() {
         return;
     }
-    let out = zmc()
-        .args(["info", "--artifacts", &artifacts_flag()])
-        .output()
-        .unwrap();
+    let out = zmc().args(with_artifacts(&["info"])).output().unwrap();
     assert!(out.status.success());
     let text = String::from_utf8_lossy(&out.stdout);
     assert!(text.contains("harmonic_s65536_n128"));
@@ -90,11 +99,11 @@ fn info_lists_executables() {
 
 #[test]
 fn integrate_monomial_end_to_end() {
-    if !have_artifacts() {
+    if !device_ok() {
         return;
     }
     let out = zmc()
-        .args([
+        .args(with_artifacts(&[
             "integrate",
             "--expr",
             "x1^2",
@@ -102,9 +111,7 @@ fn integrate_monomial_end_to_end() {
             "0,1",
             "--samples",
             "16384",
-            "--artifacts",
-            &artifacts_flag(),
-        ])
+        ]))
         .output()
         .unwrap();
     assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
@@ -121,7 +128,7 @@ fn integrate_monomial_end_to_end() {
 
 #[test]
 fn init_config_then_run() {
-    if !have_artifacts() {
+    if !device_ok() {
         return;
     }
     let dir = std::env::temp_dir().join(format!(
@@ -142,13 +149,7 @@ fn init_config_then_run() {
         .replace("\"trials\": 10", "\"trials\": 2");
     std::fs::write(&cfg, text).unwrap();
     let out = zmc()
-        .args([
-            "run",
-            "--config",
-            cfg.to_str().unwrap(),
-            "--artifacts",
-            &artifacts_flag(),
-        ])
+        .args(with_artifacts(&["run", "--config", cfg.to_str().unwrap()]))
         .output()
         .unwrap();
     assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
@@ -159,11 +160,11 @@ fn init_config_then_run() {
 
 #[test]
 fn scan_sweeps_p0() {
-    if !have_artifacts() {
+    if !device_ok() {
         return;
     }
     let out = zmc()
-        .args([
+        .args(with_artifacts(&[
             "scan",
             "--expr",
             "p0*x1",
@@ -173,24 +174,22 @@ fn scan_sweeps_p0() {
             "0:2:3",
             "--samples",
             "8192",
-            "--artifacts",
-            &artifacts_flag(),
-        ])
+        ]))
         .output()
         .unwrap();
     assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
     let text = String::from_utf8_lossy(&out.stdout);
     // I(p0) = p0/2 at p0 = 0, 1, 2
-    assert_eq!(text.lines().filter(|l| l.contains("0.")).count() >= 3, true);
+    assert!(text.lines().filter(|l| l.contains("0.")).count() >= 3);
 }
 
 #[test]
 fn normal_tree_search_cli() {
-    if !have_artifacts() {
+    if !device_ok() {
         return;
     }
     let out = zmc()
-        .args([
+        .args(with_artifacts(&[
             "normal",
             "--expr",
             "x1*x1 + x2",
@@ -202,9 +201,7 @@ fn normal_tree_search_cli() {
             "1",
             "--trials",
             "3",
-            "--artifacts",
-            &artifacts_flag(),
-        ])
+        ]))
         .output()
         .unwrap();
     assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));

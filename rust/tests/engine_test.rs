@@ -1,0 +1,339 @@
+//! Engine invariants: warm executable caches (compile-once-per-worker),
+//! concurrent submission correctness, and the policy layer (retries,
+//! fault injection, worker death) on the persistent path.
+//!
+//! Mock-backend tests run everywhere; device-backed tests use the CPU
+//! emulator registry and are skipped under `--features pjrt` (where the
+//! synthetic HLO bodies cannot be compiled).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+use zmc::coordinator::fault::FaultPlan;
+use zmc::coordinator::progress::Metrics;
+use zmc::engine::{Backend, Engine, EngineConfig};
+
+struct Mock;
+
+fn mock_out(t: u64) -> u64 {
+    t.wrapping_mul(0x9E37_79B9).rotate_left(13)
+}
+
+impl Backend for Mock {
+    type Ctx = ();
+    type Task = u64;
+    type Out = u64;
+
+    fn make_ctx(&self, _w: usize) -> Result<()> {
+        Ok(())
+    }
+
+    fn run(&self, _ctx: &(), t: &u64) -> Result<u64> {
+        Ok(mock_out(*t))
+    }
+}
+
+#[test]
+fn concurrent_submissions_match_serial() {
+    // >= 4 submitter threads interleaving job sets on one engine; every
+    // handle must resolve to exactly its own job's serial results.
+    let engine = Engine::new(Mock, EngineConfig::new(4)).unwrap();
+    let engine = &engine;
+    std::thread::scope(|scope| {
+        for submitter in 0..4u64 {
+            scope.spawn(move || {
+                for round in 0..8u64 {
+                    let base = submitter * 1_000_000 + round * 1_000;
+                    let tasks: Vec<u64> = (base..base + 50).collect();
+                    let want: Vec<u64> =
+                        tasks.iter().map(|&t| mock_out(t)).collect();
+                    let h = engine.submit(tasks).unwrap();
+                    assert_eq!(h.wait().unwrap(), want);
+                }
+            });
+        }
+    });
+    assert_eq!(engine.metrics().done(), 4 * 8 * 50);
+}
+
+#[test]
+fn engine_fault_policy_retries_transiently() {
+    let metrics = Arc::new(Metrics::new());
+    let engine = Engine::with_policy(
+        Mock,
+        EngineConfig { n_workers: 3, max_retries: 10 },
+        Arc::new(FaultPlan::transient(4)),
+        Arc::clone(&metrics),
+    )
+    .unwrap();
+    let tasks: Vec<u64> = (0..120).collect();
+    let want: Vec<u64> = tasks.iter().map(|&t| mock_out(t)).collect();
+    let out = engine.run(tasks).unwrap();
+    assert_eq!(out, want);
+    assert!(metrics.retried() > 0);
+    assert_eq!(metrics.failed(), metrics.retried());
+}
+
+#[test]
+fn engine_survives_worker_death() {
+    let engine = Engine::with_policy(
+        Mock,
+        EngineConfig { n_workers: 3, max_retries: 3 },
+        Arc::new(FaultPlan::kill(1, 3)),
+        Arc::new(Metrics::new()),
+    )
+    .unwrap();
+    let tasks: Vec<u64> = (0..60).collect();
+    let want: Vec<u64> = tasks.iter().map(|&t| mock_out(t)).collect();
+    assert_eq!(engine.run(tasks).unwrap(), want);
+}
+
+#[test]
+fn all_workers_dead_fails_pending_jobs() {
+    let engine = Engine::with_policy(
+        Mock,
+        EngineConfig { n_workers: 1, max_retries: 3 },
+        Arc::new(FaultPlan::kill(0, 0)),
+        Arc::new(Metrics::new()),
+    )
+    .unwrap();
+    let err = match engine.submit(vec![1, 2, 3]) {
+        Ok(h) => h.wait().unwrap_err(),
+        Err(e) => e, // workers died before the submit landed
+    };
+    let msg = err.to_string();
+    assert!(
+        msg.contains("unfinished") || msg.contains("no live workers"),
+        "{msg}"
+    );
+}
+
+struct HalfDeadCtx;
+
+impl Backend for HalfDeadCtx {
+    type Ctx = usize;
+    type Task = u64;
+    type Out = u64;
+
+    fn make_ctx(&self, w: usize) -> Result<usize> {
+        if w == 0 {
+            Err(anyhow!("simulated driver crash"))
+        } else {
+            Ok(w)
+        }
+    }
+
+    fn run(&self, _ctx: &usize, t: &u64) -> Result<u64> {
+        Ok(*t + 1)
+    }
+}
+
+#[test]
+fn context_failure_is_recorded_and_job_survives() {
+    let metrics = Arc::new(Metrics::new());
+    let engine = Engine::with_policy(
+        HalfDeadCtx,
+        EngineConfig { n_workers: 2, max_retries: 3 },
+        Arc::new(FaultPlan::none()),
+        Arc::clone(&metrics),
+    )
+    .unwrap();
+    let out = engine.run((0..30).collect()).unwrap();
+    assert_eq!(out.len(), 30);
+    assert_eq!(out[0], 1);
+    // the dead worker's error must be in the ledger even though the job
+    // succeeded (it is recorded before the worker leaves the pool, but
+    // give the thread a moment to get there)
+    for _ in 0..200 {
+        if !metrics.worker_errors().is_empty() {
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(5));
+    }
+    let errs = metrics.worker_errors();
+    assert_eq!(errs.len(), 1, "{errs:?}");
+    assert!(errs[0].contains("simulated driver crash"));
+}
+
+struct CountingCtx {
+    ctx_builds: AtomicU64,
+}
+
+impl Backend for CountingCtx {
+    type Ctx = u64;
+    type Task = u64;
+    type Out = u64;
+
+    fn make_ctx(&self, w: usize) -> Result<u64> {
+        self.ctx_builds.fetch_add(1, Ordering::SeqCst);
+        Ok(w as u64)
+    }
+
+    fn run(&self, ctx: &u64, t: &u64) -> Result<u64> {
+        Ok(ctx * 1_000_000 + t)
+    }
+}
+
+#[test]
+fn contexts_are_built_once_per_worker_not_per_job() {
+    // the heart of the persistence claim, backend-agnostic: 20 jobs on
+    // 3 workers must build exactly 3 contexts
+    let engine = Engine::new(
+        CountingCtx { ctx_builds: AtomicU64::new(0) },
+        EngineConfig::new(3),
+    )
+    .unwrap();
+    for round in 0..20u64 {
+        let out = engine.run(vec![round]).unwrap();
+        assert_eq!(out.len(), 1);
+    }
+    // a worker that never won a task still builds its context at thread
+    // start; allow it a moment in case it was scheduled late
+    for _ in 0..200 {
+        if engine.backend().ctx_builds.load(Ordering::SeqCst) == 3 {
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(5));
+    }
+    assert_eq!(
+        engine.backend().ctx_builds.load(Ordering::SeqCst),
+        3,
+        "contexts must persist across submits"
+    );
+}
+
+// ------------------------------------------------------------------
+// Device-backed tests (CPU emulator registry).
+#[cfg(not(feature = "pjrt"))]
+mod device_backed {
+    use super::*;
+    use zmc::engine::DeviceEngine;
+    use zmc::integrator::multifunctions::{self, MultiConfig};
+    use zmc::integrator::spec::IntegralJob;
+    use zmc::runtime::device::DevicePool;
+    use zmc::runtime::registry::Registry;
+
+    fn engine(workers: usize) -> (Arc<Registry>, DeviceEngine) {
+        let reg = Arc::new(Registry::emulated());
+        let pool = DevicePool::new(&reg, workers).unwrap();
+        (reg, Engine::for_pool(&pool).unwrap())
+    }
+
+    fn jobs(n: usize) -> Vec<IntegralJob> {
+        (0..n)
+            .map(|i| {
+                IntegralJob::with_params(
+                    "x1^2 + p0",
+                    &[(0.0, 1.0)],
+                    &[i as f64 * 0.5],
+                )
+                .unwrap()
+            })
+            .collect()
+    }
+
+    fn cfg() -> MultiConfig {
+        MultiConfig {
+            samples_per_fn: 1 << 12,
+            seed: 99,
+            exe: Some("vm_multi_f8_s4096".into()),
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn single_worker_compiles_each_exe_exactly_once() {
+        let (reg, engine) = engine(1);
+        let js = jobs(12);
+        let first =
+            multifunctions::integrate(&engine, &js, &cfg()).unwrap();
+        assert_eq!(reg.compile_count(), 1);
+        // ten more submits of the same executable: ledger must not move
+        for _ in 0..10 {
+            let again =
+                multifunctions::integrate(&engine, &js, &cfg()).unwrap();
+            // idempotent Philox addressing: bit-identical estimates
+            assert_eq!(again[0].value, first[0].value);
+        }
+        assert_eq!(
+            reg.compile_count(),
+            1,
+            "repeated integrate() must not recompile"
+        );
+    }
+
+    #[test]
+    fn multi_worker_compiles_at_most_once_per_worker() {
+        let (reg, engine) = engine(2);
+        let js = jobs(40); // 5 blocks x 1 chunk: both workers get launches
+        for _ in 0..8 {
+            multifunctions::integrate(&engine, &js, &cfg()).unwrap();
+        }
+        let compiles = reg.compile_count();
+        assert!(
+            (1..=2).contains(&compiles),
+            "compiles={compiles}: must be <= n_workers and never grow \
+             with submit count"
+        );
+    }
+
+    #[test]
+    fn concurrent_device_submissions_are_deterministic() {
+        // serial reference on a fresh engine
+        let (_r1, e1) = engine(1);
+        let js = jobs(10);
+        let want = multifunctions::integrate(&e1, &js, &cfg()).unwrap();
+
+        // four submitters sharing one 2-worker engine
+        let (_r2, e2) = engine(2);
+        let e2 = &e2;
+        std::thread::scope(|scope| {
+            for _ in 0..4 {
+                let js = js.clone();
+                let want = want.clone();
+                scope.spawn(move || {
+                    for _ in 0..3 {
+                        let h = multifunctions::submit(e2, &js, &cfg())
+                            .unwrap();
+                        let got = h.wait().unwrap();
+                        for (g, w) in got.iter().zip(&want) {
+                            assert_eq!(g.value, w.value);
+                            assert_eq!(g.std_err, w.std_err);
+                        }
+                    }
+                });
+            }
+        });
+    }
+
+    #[test]
+    fn interleaved_heterogeneous_handles_resolve_independently() {
+        let (reg, engine) = engine(2);
+        // two different executables in flight at once
+        let vm_handle =
+            multifunctions::submit(&engine, &jobs(6), &cfg()).unwrap();
+        let strat_cfg = zmc::integrator::normal::NormalConfig {
+            initial_divisions: 4,
+            n_trials: 2,
+            max_depth: 0,
+            seed: 5,
+            exe: Some("stratified_c16_s256".into()),
+            ..Default::default()
+        };
+        let job =
+            IntegralJob::parse("x1*x2", &[(0.0, 1.0), (0.0, 1.0)]).unwrap();
+        let strat =
+            zmc::integrator::normal::integrate(&engine, &job, &strat_cfg)
+                .unwrap();
+        let vm = vm_handle.wait().unwrap();
+        assert_eq!(vm.len(), 6);
+        assert!(
+            (strat.estimate.value - 0.25).abs() < 0.05,
+            "{:?}",
+            strat.estimate
+        );
+        // two executables, at most one compile of each per worker
+        assert!(reg.compile_count() <= 4);
+    }
+}

@@ -1,6 +1,11 @@
 //! End-to-end integrator tests against analytic ground truth, including
-//! fault-injected runs and device-vs-CPU agreement.
-//! Requires `make artifacts`; skips gracefully if missing.
+//! fault-injected runs and device-vs-CPU agreement, on the persistent
+//! engine.
+//!
+//! Backend selection: with real artifacts present they are used; without
+//! them the CPU emulator registry stands in (default build), so this
+//! suite runs fully offline. Under `--features pjrt` without artifacts
+//! every test skips gracefully, as before.
 
 use std::path::Path;
 use std::sync::Arc;
@@ -9,6 +14,7 @@ use zmc::analytic;
 use zmc::config::JobConfig;
 use zmc::coordinator::fault::FaultPlan;
 use zmc::coordinator::progress::Metrics;
+use zmc::engine::{DeviceEngine, Engine};
 use zmc::integrator::harmonic::{self, HarmonicBatch};
 use zmc::integrator::multifunctions::{self, MultiConfig};
 use zmc::integrator::normal::{self, NormalConfig};
@@ -16,14 +22,33 @@ use zmc::integrator::{direct, functional, spec::IntegralJob};
 use zmc::runtime::device::DevicePool;
 use zmc::runtime::registry::Registry;
 
-fn pool(workers: usize) -> Option<DevicePool> {
+fn registry() -> Option<Arc<Registry>> {
     let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    if !dir.join("manifest.json").exists() {
-        eprintln!("skipping: run `make artifacts` first");
-        return None;
+    if dir.join("manifest.json").exists() {
+        return Some(Arc::new(Registry::load(dir).unwrap()));
     }
-    let reg = Arc::new(Registry::load(dir).unwrap());
-    Some(DevicePool::new(&reg, workers).unwrap())
+    if cfg!(feature = "pjrt") {
+        eprintln!("skipping: run `make artifacts` first");
+        None
+    } else {
+        Some(Arc::new(Registry::emulated()))
+    }
+}
+
+fn engine(workers: usize) -> Option<DeviceEngine> {
+    let reg = registry()?;
+    let pool = DevicePool::new(&reg, workers).unwrap();
+    Some(Engine::for_pool(&pool).unwrap())
+}
+
+fn engine_with_fault(
+    workers: usize,
+    fault: Arc<FaultPlan>,
+    metrics: Arc<Metrics>,
+) -> Option<DeviceEngine> {
+    let reg = registry()?;
+    let pool = DevicePool::new(&reg, workers).unwrap();
+    Some(Engine::for_pool_with(&pool, 3, fault, metrics).unwrap())
 }
 
 fn small_cfg(samples: usize) -> MultiConfig {
@@ -37,7 +62,7 @@ fn small_cfg(samples: usize) -> MultiConfig {
 
 #[test]
 fn multifunctions_heterogeneous_vs_analytic() {
-    let Some(pool) = pool(1) else { return };
+    let Some(engine) = engine(1) else { return };
     // the Eq. (2) mixed-dimension workload + extras
     let jobs = vec![
         IntegralJob::with_params(
@@ -62,7 +87,8 @@ fn multifunctions_heterogeneous_vs_analytic() {
         6.0,
     ];
     let ests =
-        multifunctions::integrate(&pool, &jobs, &small_cfg(1 << 15)).unwrap();
+        multifunctions::integrate(&engine, &jobs, &small_cfg(1 << 15))
+            .unwrap();
     for (e, t) in ests.iter().zip(truths) {
         assert!(
             e.consistent_with(t, 6.0),
@@ -76,12 +102,12 @@ fn multifunctions_heterogeneous_vs_analytic() {
 
 #[test]
 fn device_matches_cpu_baseline_statistically() {
-    let Some(pool) = pool(1) else { return };
+    let Some(engine) = engine(1) else { return };
     let job =
         IntegralJob::parse("sin(3*x1)*x2", &[(0.0, 1.0), (0.0, 2.0)])
             .unwrap();
     let dev = multifunctions::integrate(
-        &pool,
+        &engine,
         std::slice::from_ref(&job),
         &small_cfg(1 << 14),
     )
@@ -97,7 +123,7 @@ fn device_matches_cpu_baseline_statistically() {
 
 #[test]
 fn multifunction_batch_of_twenty_mixed_dims() {
-    let Some(pool) = pool(1) else { return };
+    let Some(engine) = engine(1) else { return };
     // n<10: a_n|x1+x2| ; n>=10: b_n|x1+x2-x3| (Eq. 2 at scale)
     let mut jobs = Vec::new();
     let mut truths = Vec::new();
@@ -127,7 +153,8 @@ fn multifunction_batch_of_twenty_mixed_dims() {
         }
     }
     let ests =
-        multifunctions::integrate(&pool, &jobs, &small_cfg(1 << 14)).unwrap();
+        multifunctions::integrate(&engine, &jobs, &small_cfg(1 << 14))
+            .unwrap();
     for (i, (e, t)) in ests.iter().zip(&truths).enumerate() {
         assert!(e.consistent_with(*t, 6.0), "fn {i}: {e:?} vs {t}");
     }
@@ -135,29 +162,28 @@ fn multifunction_batch_of_twenty_mixed_dims() {
 
 #[test]
 fn results_identical_across_worker_counts_and_faults() {
-    let Some(p1) = pool(1) else { return };
+    let Some(e1) = engine(1) else { return };
     let jobs = vec![
         IntegralJob::parse("x1*x2", &[(0.0, 1.0), (0.0, 1.0)]).unwrap(),
         IntegralJob::parse("cos(5*x1)", &[(0.0, 1.0)]).unwrap(),
     ];
     let cfg = small_cfg(1 << 14);
-    let base = multifunctions::integrate(&p1, &jobs, &cfg).unwrap();
+    let base = multifunctions::integrate(&e1, &jobs, &cfg).unwrap();
 
-    let p2 = pool(2).unwrap();
-    let two = multifunctions::integrate(&p2, &jobs, &cfg).unwrap();
+    let e2 = engine(2).unwrap();
+    let two = multifunctions::integrate(&e2, &jobs, &cfg).unwrap();
     for (a, b) in base.iter().zip(&two) {
         assert_eq!(a.value, b.value, "worker-count changed the result");
     }
 
-    let m = Metrics::new();
-    let faulty = multifunctions::integrate_with_fault(
-        &p2,
-        &jobs,
-        &cfg,
-        &FaultPlan::transient(3),
-        &m,
+    let m = Arc::new(Metrics::new());
+    let ef = engine_with_fault(
+        2,
+        Arc::new(FaultPlan::transient(3)),
+        Arc::clone(&m),
     )
     .unwrap();
+    let faulty = multifunctions::integrate(&ef, &jobs, &cfg).unwrap();
     for (a, b) in base.iter().zip(&faulty) {
         assert_eq!(a.value, b.value, "fault injection changed the result");
     }
@@ -165,8 +191,32 @@ fn results_identical_across_worker_counts_and_faults() {
 }
 
 #[test]
+fn repeated_integrate_reuses_compiled_executables() {
+    // the warm-cache acceptance gate, end to end on the integrator API
+    let Some(reg) = registry() else { return };
+    let pool = DevicePool::new(&reg, 1).unwrap();
+    let engine = Engine::for_pool(&pool).unwrap();
+    let job = IntegralJob::parse("x1^2", &[(0.0, 1.0)]).unwrap();
+    let before = reg.compile_count();
+    for _ in 0..6 {
+        multifunctions::integrate(
+            &engine,
+            std::slice::from_ref(&job),
+            &small_cfg(1 << 12),
+        )
+        .unwrap();
+    }
+    let compiled = reg.compile_count() - before;
+    assert_eq!(
+        compiled, 1,
+        "one worker, one executable, six integrate() calls: \
+         must compile exactly once"
+    );
+}
+
+#[test]
 fn harmonic_fig1_slice_vs_analytic() {
-    let Some(pool) = pool(1) else { return };
+    let Some(engine) = engine(1) else { return };
     let batch = HarmonicBatch::fig1(10);
     let cfg = MultiConfig {
         samples_per_fn: 1 << 16,
@@ -174,7 +224,8 @@ fn harmonic_fig1_slice_vs_analytic() {
         exe: Some("harmonic_s8192_n128".into()),
         ..Default::default()
     };
-    let trials = harmonic::integrate_trials(&pool, &batch, &cfg, 6).unwrap();
+    let trials =
+        harmonic::integrate_trials(&engine, &batch, &cfg, 6).unwrap();
     for i in 0..batch.len() {
         let mut w = zmc::stats::Welford::new();
         for t in &trials {
@@ -194,7 +245,7 @@ fn harmonic_fig1_slice_vs_analytic() {
 
 #[test]
 fn functional_scan_tracks_parameter() {
-    let Some(pool) = pool(1) else { return };
+    let Some(engine) = engine(1) else { return };
     // ∫ p0·x1² over [0,1] = p0/3, swept over p0
     let job = IntegralJob::with_params("p0*x1^2", &[(0.0, 1.0)], &[0.0])
         .unwrap();
@@ -203,7 +254,8 @@ fn functional_scan_tracks_parameter() {
         .map(|v| vec![v])
         .collect();
     let ests =
-        functional::scan(&pool, &job, &thetas, &small_cfg(1 << 14)).unwrap();
+        functional::scan(&engine, &job, &thetas, &small_cfg(1 << 14))
+            .unwrap();
     for (t, e) in thetas.iter().zip(&ests) {
         assert!(
             e.consistent_with(t[0] / 3.0, 6.0),
@@ -215,7 +267,7 @@ fn functional_scan_tracks_parameter() {
 
 #[test]
 fn normal_tree_search_converges() {
-    let Some(pool) = pool(1) else { return };
+    let Some(engine) = engine(1) else { return };
     // peaked integrand: tree search should refine around the peak
     let job = IntegralJob::parse(
         "exp(-50*((x1-0.5)^2 + (x2-0.5)^2))",
@@ -238,7 +290,7 @@ fn normal_tree_search_converges() {
         exe: Some("stratified_c16_s256".into()),
         ..Default::default()
     };
-    let r = normal::integrate(&pool, &job, &cfg).unwrap();
+    let r = normal::integrate(&engine, &job, &cfg).unwrap();
     assert!(
         r.estimate.consistent_with(truth, 8.0),
         "{:?} vs {truth}",
@@ -250,7 +302,7 @@ fn normal_tree_search_converges() {
 
 #[test]
 fn normal_flags_fluctuating_regions() {
-    let Some(pool) = pool(1) else { return };
+    let Some(engine) = engine(1) else { return };
     // highly oscillatory in x1<0.25 only: flagged cubes should cluster
     let job = IntegralJob::parse(
         "max(0, 0.25-x1) * sin(60*x1) * 40",
@@ -266,7 +318,7 @@ fn normal_flags_fluctuating_regions() {
         exe: Some("stratified_c16_s256".into()),
         ..Default::default()
     };
-    let r = normal::integrate(&pool, &job, &cfg).unwrap();
+    let r = normal::integrate(&engine, &job, &cfg).unwrap();
     assert!(
         r.flagged_per_level[0] >= 1 && r.flagged_per_level[0] <= 4,
         "flagged: {:?}",
@@ -276,7 +328,7 @@ fn normal_flags_fluctuating_regions() {
 
 #[test]
 fn config_file_end_to_end() {
-    let Some(pool) = pool(1) else { return };
+    let Some(engine) = engine(1) else { return };
     let cfg = JobConfig::from_json_text(
         r#"{
         "samples_per_fn": 16384, "trials": 2, "seed": 5,
@@ -293,7 +345,7 @@ fn config_file_end_to_end() {
         ..Default::default()
     };
     let per_trial = multifunctions::integrate_trials(
-        &pool, &cfg.jobs, &mcfg, cfg.trials,
+        &engine, &cfg.jobs, &mcfg, cfg.trials,
     )
     .unwrap();
     assert_eq!(per_trial.len(), 2);
@@ -309,7 +361,7 @@ fn config_file_end_to_end() {
 fn normal_handles_higher_dimensions() {
     // the paper recommends ZMCintegral_normal for high-dim integrands;
     // exercise D=6 (2^6 = 64 initial cubes, splits capped at 4 dims)
-    let Some(pool) = pool(1) else { return };
+    let Some(engine) = engine(1) else { return };
     let job = IntegralJob::parse(
         "x1*x2 + x3*x4 + x5*x6",
         &[(0.0, 1.0); 6],
@@ -323,7 +375,7 @@ fn normal_handles_higher_dimensions() {
         exe: Some("stratified_c64_s1024".into()),
         ..Default::default()
     };
-    let r = normal::integrate(&pool, &job, &cfg).unwrap();
+    let r = normal::integrate(&engine, &job, &cfg).unwrap();
     assert_eq!(r.cubes_per_level[0], 64);
     // truth: 3 * (1/2 * 1/2) = 0.75
     assert!(
@@ -337,7 +389,7 @@ fn normal_handles_higher_dimensions() {
 fn multifunctions_at_two_hundred_functions() {
     // a mid-scale slice of the C1 workload with exact gates:
     // I_n = ∫ x1^2 + c_n over [0,1]^2 = 1/3 + c_n
-    let Some(pool) = pool(1) else { return };
+    let Some(engine) = engine(1) else { return };
     let jobs: Vec<IntegralJob> = (0..200)
         .map(|i| {
             IntegralJob::with_params(
@@ -353,7 +405,7 @@ fn multifunctions_at_two_hundred_functions() {
         seed: 33,
         ..Default::default()
     };
-    let ests = multifunctions::integrate(&pool, &jobs, &cfg).unwrap();
+    let ests = multifunctions::integrate(&engine, &jobs, &cfg).unwrap();
     for (i, e) in ests.iter().enumerate() {
         let truth = 1.0 / 3.0 + i as f64 * 0.01;
         assert!(e.consistent_with(truth, 6.0), "fn {i}: {e:?} vs {truth}");
@@ -363,7 +415,7 @@ fn multifunctions_at_two_hundred_functions() {
 #[test]
 fn stream_base_gives_independent_replicas() {
     // two runs differing only in stream_base must draw disjoint streams
-    let Some(pool) = pool(1) else { return };
+    let Some(engine) = engine(1) else { return };
     let job = IntegralJob::parse("sin(9*x1)", &[(0.0, 1.0)]).unwrap();
     let mk = |stream_base| MultiConfig {
         samples_per_fn: 1 << 13,
@@ -372,10 +424,14 @@ fn stream_base_gives_independent_replicas() {
         exe: Some("vm_multi_f8_s4096".into()),
         ..Default::default()
     };
-    let a = multifunctions::integrate(&pool, std::slice::from_ref(&job), &mk(0))
-        .unwrap()[0];
+    let a = multifunctions::integrate(
+        &engine,
+        std::slice::from_ref(&job),
+        &mk(0),
+    )
+    .unwrap()[0];
     let b = multifunctions::integrate(
-        &pool,
+        &engine,
         std::slice::from_ref(&job),
         &mk(1000),
     )

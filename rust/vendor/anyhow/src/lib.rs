@@ -1,0 +1,213 @@
+//! Minimal offline stand-in for the `anyhow` crate.
+//!
+//! The build environment for this repository is fully offline (no
+//! crates.io index), so the subset of `anyhow` the codebase actually
+//! uses is vendored here as a path dependency: [`Error`], [`Result`],
+//! the [`Context`] extension trait, and the `anyhow!` / `bail!` /
+//! `ensure!` macros. Semantics follow the real crate closely enough
+//! that swapping in upstream `anyhow = "1"` is a one-line Cargo.toml
+//! change:
+//!
+//! * `Error` is a message plus an optional boxed cause chain;
+//! * `Display` prints the outermost message, `{:#}` prints the whole
+//!   chain separated by `": "` (like upstream), and `Debug` prints the
+//!   message followed by a `Caused by:` list;
+//! * `Error` deliberately does **not** implement `std::error::Error`,
+//!   exactly like upstream, so the blanket `From<E: std::error::Error>`
+//!   conversion used by `?` does not conflict with `From<T> for T`.
+
+use std::fmt;
+
+/// `Result` with a defaulted error type, as in the real crate.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// A dynamic error: message plus optional cause chain.
+pub struct Error {
+    msg: String,
+    cause: Option<Box<Error>>,
+}
+
+impl Error {
+    /// Build an error from a printable message.
+    pub fn msg<M: fmt::Display>(msg: M) -> Error {
+        Error { msg: msg.to_string(), cause: None }
+    }
+
+    /// Wrap `self` as the cause of a new outer message.
+    pub fn context<C: fmt::Display>(self, context: C) -> Error {
+        Error { msg: context.to_string(), cause: Some(Box::new(self)) }
+    }
+
+    /// Innermost error message in the chain.
+    pub fn root_cause(&self) -> &str {
+        match &self.cause {
+            Some(c) => c.root_cause(),
+            None => &self.msg,
+        }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        if f.alternate() {
+            let mut cur = &self.cause;
+            while let Some(c) = cur {
+                write!(f, ": {}", c.msg)?;
+                cur = &c.cause;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        if let Some(first) = &self.cause {
+            write!(f, "\n\nCaused by:")?;
+            let mut cur = Some(first);
+            while let Some(c) = cur {
+                write!(f, "\n    {}", c.msg)?;
+                cur = c.cause.as_ref();
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Error {
+        let mut chain: Vec<String> = Vec::new();
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        let mut err = Error { msg: e.to_string(), cause: None };
+        let mut tail = &mut err.cause;
+        for msg in chain {
+            *tail = Some(Box::new(Error { msg, cause: None }));
+            tail = &mut tail.as_mut().unwrap().cause;
+        }
+        err
+    }
+}
+
+/// Extension trait adding `.context()` / `.with_context()` to `Result`
+/// and `Option`.
+pub trait Context<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(
+        self,
+        f: F,
+    ) -> Result<T, Error>;
+}
+
+impl<T, E: Into<Error>> Context<T, E> for Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| e.into().context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(
+        self,
+        f: F,
+    ) -> Result<T, Error> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+/// Marker for the `Option` impl's unused error slot.
+pub struct NoneError;
+
+impl<T> Context<T, NoneError> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(
+        self,
+        f: F,
+    ) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !$cond {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Result<i32> {
+        let v: i32 = s.parse().context("parsing an int")?;
+        Ok(v)
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        assert_eq!(parse("42").unwrap(), 42);
+        let err = parse("nope").unwrap_err();
+        assert_eq!(err.to_string(), "parsing an int");
+        let full = format!("{err:#}");
+        assert!(full.starts_with("parsing an int: "), "{full}");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<i32> = None;
+        let err = v.context("missing").unwrap_err();
+        assert_eq!(err.to_string(), "missing");
+    }
+
+    #[test]
+    fn macros() {
+        fn f(x: i32) -> Result<i32> {
+            ensure!(x > 0, "x must be positive, got {x}");
+            if x > 100 {
+                bail!("too big");
+            }
+            Ok(x)
+        }
+        assert!(f(5).is_ok());
+        assert!(f(-1).unwrap_err().to_string().contains("positive"));
+        assert_eq!(f(101).unwrap_err().to_string(), "too big");
+        let e = anyhow!("code {}", 7);
+        assert_eq!(e.to_string(), "code 7");
+    }
+
+    #[test]
+    fn debug_prints_cause_chain() {
+        let e = Error::msg("inner").context("outer");
+        let dbg = format!("{e:?}");
+        assert!(dbg.contains("outer") && dbg.contains("Caused by"));
+        assert_eq!(e.root_cause(), "inner");
+    }
+}
