@@ -117,6 +117,47 @@ fn main() -> anyhow::Result<()> {
         cases.len()
     );
     assert!(worst < 6.0, "Genz suite inconsistent with closed forms");
+
+    // The same suite driven to a per-function relative-error target:
+    // the classic adaptive showcase — smooth families converge on the
+    // pilot, the oscillatory/peaked ones soak up the budget.
+    let target = std::env::var("ZMC_TARGET_REL")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(5e-3);
+    let acfg = MultiConfig {
+        samples_per_fn: samples.max(1 << 16),
+        seed: 31415,
+        target_rel_err: Some(target),
+        ..Default::default()
+    };
+    let t0 = std::time::Instant::now();
+    let (aests, report) =
+        zmc::adaptive::integrate_with_report(&engine, &jobs, &acfg)?;
+    let awall = t0.elapsed().as_secs_f64();
+
+    println!("# adaptive to {target:.0e} rel err:");
+    println!("# case  estimate  sigma  rounds  samples  |z|");
+    let mut aworst: f64 = 0.0;
+    for (c, e) in cases.iter().zip(&aests) {
+        let z = (e.value - c.truth).abs() / e.std_err.max(1e-12);
+        aworst = aworst.max(z);
+        println!(
+            "{:<18}  {:>10.6}  {:>9.3e}  {:>6}  {:>8}  {:>6.2}",
+            c.name, e.value, e.std_err, e.rounds, e.n_samples, z
+        );
+    }
+    let uniform_budget = samples as u64 * cases.len() as u64;
+    println!(
+        "# adaptive: {} samples over {} rounds ({} splits, {}/{} \
+         converged) in {awall:.2}s vs {uniform_budget} uniform-budget",
+        report.total_samples,
+        report.rounds,
+        report.splits,
+        report.converged,
+        cases.len()
+    );
+    assert!(aworst < 6.0, "adaptive Genz suite inconsistent");
     println!("OK");
     Ok(())
 }

@@ -1,0 +1,193 @@
+//! Bench: adaptive variance-driven allocation vs uniform sampling —
+//! samples-to-target on a mixed easy/hard multifunction workload.
+//!
+//! The workload is 3/4 smooth low-variance integrands (which converge
+//! on the pilot pass) and 1/4 sharply peaked ones (which dominate the
+//! error). Three protocols reach the same per-function relative-error
+//! target:
+//!
+//! * `adaptive_neyman`  — pilot-then-refine, shares ∝ V_s·σ_s;
+//! * `adaptive_uniform` — pilot-then-refine, equal shares per
+//!   unconverged function (isolates the value of variance shaping);
+//! * `oneshot_uniform`  — classic fixed budget per function, doubled
+//!   until every function meets the target (what the one-shot API
+//!   costs when the batch must pay for its hardest member).
+//!
+//! Env knobs: ZMC_ADA_FUNCS, ZMC_ADA_TARGET, ZMC_ADA_CAP.
+
+use std::sync::Arc;
+
+use zmc::adaptive::{self, Allocation};
+use zmc::engine::Engine;
+use zmc::integrator::multifunctions::{self, MultiConfig};
+use zmc::integrator::spec::{Estimate, IntegralJob};
+use zmc::runtime::device::DevicePool;
+use zmc::runtime::registry::Registry;
+use zmc::util::bench::{fmt_s, Bench};
+
+fn env(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn env_f64(key: &str, default: f64) -> f64 {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+/// Mixed workload: indices ≡ 3 (mod 4) are sharp 2-D peaks, the rest
+/// smooth low-variance forms. All have clearly nonzero values so a
+/// relative target is meaningful.
+fn workload(n: usize) -> Vec<IntegralJob> {
+    let unit2 = [(0.0, 1.0), (0.0, 1.0)];
+    (0..n)
+        .map(|i| {
+            if i % 4 == 3 {
+                // peak sharpness alternates: p0 ∈ {0.02, 0.03}
+                let c = if i % 8 == 3 { 0.02 } else { 0.03 };
+                IntegralJob::with_params(
+                    "1/(p0 + (x1-0.5)^2 + (x2-0.5)^2)",
+                    &unit2,
+                    &[c],
+                )
+                .unwrap()
+            } else {
+                let forms = [
+                    "1 + p0*x1*x2",
+                    "exp(-p0*x1) + 1",
+                    "x1^2 + p0*x2 + 1",
+                ];
+                IntegralJob::with_params(
+                    forms[i % 3],
+                    &unit2,
+                    &[0.5 + (i % 5) as f64 * 0.1],
+                )
+                .unwrap()
+            }
+        })
+        .collect()
+}
+
+/// Does every estimate meet the relative-error target?
+fn all_converged(ests: &[Estimate], target: f64) -> bool {
+    ests.iter().all(|e| e.std_err <= target * e.value.abs())
+}
+
+fn main() -> anyhow::Result<()> {
+    let n_funcs = env("ZMC_ADA_FUNCS", 32);
+    let target = env_f64("ZMC_ADA_TARGET", 0.005);
+    let cap = env("ZMC_ADA_CAP", 1 << 18);
+
+    let registry = Arc::new(
+        Registry::load("artifacts").unwrap_or_else(|_| Registry::emulated()),
+    );
+    let pool = DevicePool::new(&registry, 1)?;
+    let engine = Engine::for_pool(&pool)?;
+    let jobs = workload(n_funcs);
+    let mut b = Bench::new("adaptive_alloc");
+
+    let mut adaptive_totals = Vec::new();
+    for (label, allocation) in [
+        ("adaptive_neyman", Allocation::Neyman),
+        ("adaptive_uniform", Allocation::Uniform),
+    ] {
+        let cfg = MultiConfig {
+            samples_per_fn: cap,
+            seed: 99,
+            target_rel_err: Some(target),
+            allocation,
+            ..Default::default()
+        };
+        let t0 = std::time::Instant::now();
+        let (ests, report) =
+            adaptive::integrate_with_report(&engine, &jobs, &cfg)?;
+        let wall = t0.elapsed().as_secs_f64();
+        let min_n = ests.iter().map(|e| e.n_samples).min().unwrap_or(0);
+        let max_n = ests.iter().map(|e| e.n_samples).max().unwrap_or(0);
+        let max_rounds = ests.iter().map(|e| e.rounds).max().unwrap_or(0);
+        b.row(
+            label,
+            &[
+                ("funcs", n_funcs.to_string()),
+                ("target_rel", target.to_string()),
+                ("total_samples", report.total_samples.to_string()),
+                ("rounds", report.rounds.to_string()),
+                ("splits", report.splits.to_string()),
+                ("launches", report.launches.to_string()),
+                ("converged", report.converged.to_string()),
+                ("fn_samples_min", min_n.to_string()),
+                ("fn_samples_max", max_n.to_string()),
+                ("fn_rounds_max", max_rounds.to_string()),
+                ("wall", fmt_s(wall)),
+            ],
+        );
+        assert!(
+            all_converged(&ests, target),
+            "{label}: target not reached — raise ZMC_ADA_CAP"
+        );
+        // easy functions must not have been dragged to the hard
+        // functions' budget: the breakdown is the whole point
+        assert!(min_n < max_n, "{label}: allocation was flat");
+        adaptive_totals.push(report.total_samples);
+    }
+
+    // one-shot uniform comparator: double the per-function budget until
+    // every function (i.e. the hardest) meets the same target
+    let mut samples_per_fn = 1 << 13;
+    let mut oneshot = None;
+    let t0 = std::time::Instant::now();
+    while samples_per_fn <= cap {
+        let cfg = MultiConfig {
+            samples_per_fn,
+            seed: 99,
+            ..Default::default()
+        };
+        let ests = multifunctions::integrate(&engine, &jobs, &cfg)?;
+        if all_converged(&ests, target) {
+            oneshot = Some(samples_per_fn as u64 * n_funcs as u64);
+            break;
+        }
+        samples_per_fn *= 2;
+    }
+    let oneshot_wall = t0.elapsed().as_secs_f64();
+    let oneshot_total =
+        oneshot.unwrap_or(cap as u64 * n_funcs as u64);
+    b.row(
+        "oneshot_uniform",
+        &[
+            ("funcs", n_funcs.to_string()),
+            ("samples_per_fn", samples_per_fn.min(cap).to_string()),
+            ("total_samples", oneshot_total.to_string()),
+            ("reached_target", oneshot.is_some().to_string()),
+            ("wall", fmt_s(oneshot_wall)),
+        ],
+    );
+
+    let neyman_total = adaptive_totals[0];
+    b.row(
+        "summary",
+        &[
+            (
+                "neyman_saving",
+                format!(
+                    "{:.2}x",
+                    oneshot_total as f64 / neyman_total as f64
+                ),
+            ),
+            (
+                "uniform_alloc_saving",
+                format!(
+                    "{:.2}x",
+                    oneshot_total as f64 / adaptive_totals[1] as f64
+                ),
+            ),
+        ],
+    );
+    if oneshot.is_some() {
+        assert!(
+            neyman_total < oneshot_total,
+            "adaptive used {neyman_total} samples but uniform one-shot \
+             only {oneshot_total}"
+        );
+    }
+    b.finish();
+    Ok(())
+}

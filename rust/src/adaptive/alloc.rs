@@ -1,0 +1,125 @@
+//! Sample-budget apportionment across functions and strata.
+//!
+//! Each refinement round has a whole number of launch slots to hand out
+//! (one slot = one `vm_multi` function row = `exe.samples` draws); the
+//! allocation policy turns per-stratum statistics into slot counts.
+
+/// How a refinement round's slot budget is distributed across the
+/// strata of the unconverged functions.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Allocation {
+    /// Equal shares per unconverged function (split evenly across that
+    /// function's strata). Converged functions still drop out, so this
+    /// is the ablation baseline that isolates the value of
+    /// variance-driven shaping.
+    Uniform,
+    /// Neyman-style allocation: shares proportional to each stratum's
+    /// `V_s·σ_s` — the weight that minimizes the combined variance of a
+    /// stratified estimator for a fixed total sample count.
+    #[default]
+    Neyman,
+}
+
+/// Apportion `slots` whole slots proportionally to `weights` using the
+/// largest-remainder method. Deterministic (remainder ties break toward
+/// the lower index), conserves the total exactly, and never hands a
+/// remainder slot to a zero-weight entry unless every weight is zero —
+/// in which case the slots are spread round-robin (no information means
+/// uniform).
+pub fn apportion(slots: usize, weights: &[f64]) -> Vec<usize> {
+    let n = weights.len();
+    if n == 0 || slots == 0 {
+        return vec![0; n];
+    }
+    let clean: Vec<f64> = weights
+        .iter()
+        .map(|&w| if w.is_finite() && w > 0.0 { w } else { 0.0 })
+        .collect();
+    let total: f64 = clean.iter().sum();
+    if total <= 0.0 {
+        let mut out = vec![slots / n; n];
+        for slot in out.iter_mut().take(slots % n) {
+            *slot += 1;
+        }
+        return out;
+    }
+    let mut out = vec![0usize; n];
+    let mut assigned = 0usize;
+    // (fractional part, index), for distributing the remainder
+    let mut fracs: Vec<(f64, usize)> = Vec::with_capacity(n);
+    for (i, &w) in clean.iter().enumerate() {
+        let share = slots as f64 * w / total;
+        let base = share.floor() as usize;
+        out[i] = base;
+        assigned += base;
+        if w > 0.0 {
+            fracs.push((share - base as f64, i));
+        }
+    }
+    fracs.sort_by(|a, b| b.0.total_cmp(&a.0).then(a.1.cmp(&b.1)));
+    let mut left = slots.saturating_sub(assigned);
+    for &(_, i) in &fracs {
+        if left == 0 {
+            break;
+        }
+        out[i] += 1;
+        left -= 1;
+    }
+    // fp pathologies only: dump any residue on the heaviest entry
+    if left > 0 {
+        let heaviest = clean
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.total_cmp(b.1))
+            .map(|(i, _)| i)
+            .unwrap_or(0);
+        out[heaviest] += left;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conserves_total() {
+        for slots in [0usize, 1, 7, 100] {
+            let got = apportion(slots, &[3.0, 1.0, 0.0, 2.5]);
+            assert_eq!(got.iter().sum::<usize>(), slots, "{got:?}");
+        }
+    }
+
+    #[test]
+    fn proportional_in_the_large() {
+        let got = apportion(1000, &[1.0, 3.0]);
+        assert_eq!(got, vec![250, 750]);
+    }
+
+    #[test]
+    fn zero_weights_fall_back_to_round_robin() {
+        assert_eq!(apportion(5, &[0.0, 0.0, 0.0]), vec![2, 2, 1]);
+        assert_eq!(apportion(2, &[f64::NAN, 0.0]), vec![1, 1]);
+    }
+
+    #[test]
+    fn zero_weight_entries_get_nothing_when_others_exist() {
+        let got = apportion(3, &[0.0, 1.0, 0.0, 1.0]);
+        assert_eq!(got[0], 0);
+        assert_eq!(got[2], 0);
+        assert_eq!(got.iter().sum::<usize>(), 3);
+    }
+
+    #[test]
+    fn deterministic_remainder_ties() {
+        let a = apportion(3, &[1.0, 1.0]);
+        let b = apportion(3, &[1.0, 1.0]);
+        assert_eq!(a, b);
+        assert_eq!(a, vec![2, 1]); // tie broken toward lower index
+    }
+
+    #[test]
+    fn empty_weights() {
+        assert!(apportion(10, &[]).is_empty());
+    }
+}

@@ -1,0 +1,557 @@
+//! The pilot-then-refine loop: variance-driven sample allocation for
+//! multifunction batches.
+//!
+//! 1. **Pilot** — every function gets a cheap equal pass
+//!    (`pilot_samples`), producing a first per-function variance
+//!    estimate.
+//! 2. **Refine** — up to `max_rounds` rounds allocate a growing slice
+//!    of the remaining budget across the strata of the functions that
+//!    have not met their error target, proportionally to each
+//!    stratum's `V_s·σ_s` (Neyman) or equally per function (Uniform).
+//!    Each round is one engine job riding the async
+//!    `submit() -> JobHandle` path, so refinement rounds of
+//!    independent batches interleave on the same warm workers.
+//! 3. **Stratify** — a function whose error stops shrinking at the
+//!    expected `1/√n` rate gets its worst stratum probed along every
+//!    axis and halved along the axis whose halves separate the most
+//!    variance; the winning probes seed the children, and all stratum
+//!    launches are plain `vm_multi` rows with remapped bounds — no new
+//!    executables, so per-worker caches stay warm.
+//!
+//! Stopping is per-function: a function converges when its combined
+//! standard error drops to `target_rel_err·|I|` or `target_abs_err`.
+//! With no target configured the loop spends the whole budget
+//! (`samples_per_fn × n_functions`) adaptively.
+
+use anyhow::Result;
+
+use crate::adaptive::alloc::{apportion, Allocation};
+use crate::adaptive::strata::{partition_estimate, Stratum};
+use crate::engine::{DeviceEngine, LaunchTask};
+use crate::integrator::multifunctions::{split_seed, MultiConfig};
+use crate::integrator::spec::{Estimate, IntegralJob};
+use crate::runtime::launch::{vm_multi_inputs, RngCtr, VmFn};
+use crate::runtime::registry::{ExeKind, ExeSpec};
+use crate::stats::MomentSum;
+
+/// Hard cap on strata per function.
+const MAX_STRATA: usize = 16;
+/// A round's error must land within this factor of the ideal `1/√n`
+/// projection, or the function is flagged for subdivision.
+const STALL_TOLERANCE: f64 = 1.3;
+
+/// Batch-level diagnostics of one adaptive run.
+#[derive(Debug, Clone, Default)]
+pub struct AdaptiveReport {
+    /// Rounds executed, including the pilot.
+    pub rounds: usize,
+    /// Total samples drawn: pilot + refinement + split probes
+    /// (probe draws along losing axes are counted here but discarded,
+    /// so this can exceed the sum of per-function `n_samples`).
+    pub total_samples: u64,
+    /// Device launches issued.
+    pub launches: usize,
+    /// Stratified subdivisions performed.
+    pub splits: usize,
+    /// Functions that met their error target.
+    pub converged: usize,
+    /// Samples drawn in each round, pilot first.
+    pub samples_per_round: Vec<u64>,
+}
+
+/// Per-function refinement state.
+struct FnState {
+    strata: Vec<Stratum>,
+    rounds: u32,
+    converged: bool,
+    needs_split: bool,
+    /// Set when a split just happened: the children's seed moments come
+    /// from the probes that *won* the minimum-variance axis selection,
+    /// so their variance estimate is biased low. Convergence (and stall
+    /// detection) is suppressed for one round until fresh, unbiased
+    /// samples dominate.
+    fresh_split: bool,
+    /// `(std_err, n_samples)` after the last round this function
+    /// participated in — the baseline for stall detection.
+    prev: Option<(f64, u64)>,
+}
+
+/// Adaptive integration; returns one estimate per job, in order.
+/// See the module docs for the loop; [`integrate_with_report`] exposes
+/// the run diagnostics.
+pub fn integrate(
+    engine: &DeviceEngine,
+    jobs: &[IntegralJob],
+    cfg: &MultiConfig,
+) -> Result<Vec<Estimate>> {
+    Ok(integrate_with_report(engine, jobs, cfg)?.0)
+}
+
+/// [`integrate`] plus the batch-level [`AdaptiveReport`].
+pub fn integrate_with_report(
+    engine: &DeviceEngine,
+    jobs: &[IntegralJob],
+    cfg: &MultiConfig,
+) -> Result<(Vec<Estimate>, AdaptiveReport)> {
+    let mut report = AdaptiveReport::default();
+    if jobs.is_empty() {
+        return Ok((vec![], report));
+    }
+    let reg = engine.registry();
+    let exe = match &cfg.exe {
+        Some(name) => reg.get(name)?,
+        None => {
+            let want_dims = jobs.iter().map(|j| j.dims()).max().unwrap_or(1);
+            // pick by the pilot size: refinement wants fine-grained
+            // slots, not one huge launch per function
+            reg.pick(ExeKind::VmMulti, cfg.pilot_samples.max(1), want_dims)?
+        }
+    };
+    let slot = exe.samples as u64;
+    let budget = cfg.samples_per_fn as u64 * jobs.len() as u64;
+    let mut spent: u64 = 0;
+    let mut next_stream: u32 = cfg.stream_base;
+    let mut launches = 0usize;
+
+    let mut state: Vec<FnState> = jobs
+        .iter()
+        .map(|j| FnState {
+            strata: vec![Stratum::root(&j.bounds)],
+            rounds: 0,
+            converged: false,
+            needs_split: false,
+            fresh_split: false,
+            prev: None,
+        })
+        .collect();
+
+    // ---- pilot: equal cheap pass over every function ----------------
+    // clamped to the per-function budget cap; one launch slot is the
+    // hard floor (sampling granularity is exe.samples)
+    let pilot_target =
+        cfg.pilot_samples.clamp(1, cfg.samples_per_fn.max(1));
+    let pilot_slots = pilot_target.div_ceil(exe.samples).max(1);
+    let mut slots: Vec<(usize, Vec<(f64, f64)>)> = Vec::new();
+    for (fi, j) in jobs.iter().enumerate() {
+        for _ in 0..pilot_slots {
+            slots.push((fi, j.bounds.clone()));
+        }
+    }
+    let moments = run_remapped(
+        engine, exe, jobs, cfg, &slots, &mut next_stream, &mut launches,
+    )?;
+    for ((fi, _), m) in slots.iter().zip(&moments) {
+        state[*fi].strata[0].moments.merge(m);
+    }
+    spent += slots.len() as u64 * slot;
+    report.samples_per_round.push(spent);
+    report.rounds = 1;
+    for st in state.iter_mut() {
+        st.rounds = 1;
+        let (value, err, n) = partition_estimate(&st.strata);
+        if let Some(tol) = tolerance(cfg, value) {
+            if err <= tol {
+                st.converged = true;
+            }
+        }
+        st.prev = Some((err, n));
+    }
+
+    // ---- refinement rounds ------------------------------------------
+    for _ in 0..cfg.max_rounds {
+        let active: Vec<usize> =
+            (0..jobs.len()).filter(|&fi| !state[fi].converged).collect();
+        if active.is_empty() || budget.saturating_sub(spent) < slot {
+            break;
+        }
+        let spent_before = spent;
+        let mut touched = vec![false; jobs.len()];
+
+        // stratified subdivision of stalled functions
+        for &fi in &active {
+            if !state[fi].needs_split
+                || state[fi].strata.len() >= MAX_STRATA
+            {
+                continue;
+            }
+            let dims = jobs[fi].dims();
+            let probe_cost = 2 * dims as u64 * slot;
+            // keep at least one slot of budget for the round itself;
+            // an unaffordable probe leaves the flag set so the split
+            // happens as soon as budget allows
+            if budget.saturating_sub(spent) < probe_cost + slot {
+                continue;
+            }
+            state[fi].needs_split = false;
+            let wi = worst_stratum(&state[fi].strata);
+            let worst = state[fi].strata[wi].clone();
+            let mut probes: Vec<(usize, Vec<(f64, f64)>)> =
+                Vec::with_capacity(2 * dims);
+            for axis in 0..dims {
+                let (a, b) = worst.split(axis);
+                probes.push((fi, a.bounds));
+                probes.push((fi, b.bounds));
+            }
+            let pm = run_remapped(
+                engine,
+                exe,
+                jobs,
+                cfg,
+                &probes,
+                &mut next_stream,
+                &mut launches,
+            )?;
+            spent += probes.len() as u64 * slot;
+            // split along the axis whose halves separate the most
+            // variance, i.e. the lowest within-half variance sum
+            let mut best_axis = 0usize;
+            let mut best_score = f64::INFINITY;
+            for axis in 0..dims {
+                let score =
+                    pm[2 * axis].variance() + pm[2 * axis + 1].variance();
+                if score < best_score {
+                    best_score = score;
+                    best_axis = axis;
+                }
+            }
+            let (mut a, mut b) = worst.split(best_axis);
+            a.moments = pm[2 * best_axis];
+            b.moments = pm[2 * best_axis + 1];
+            state[fi].strata[wi] = a;
+            state[fi].strata.push(b);
+            state[fi].fresh_split = true;
+            report.splits += 1;
+            touched[fi] = true;
+        }
+
+        // allocate this round's slot budget across active strata
+        let remaining_slots = (budget.saturating_sub(spent) / slot) as usize;
+        if remaining_slots == 0 {
+            finish_round(
+                cfg,
+                &mut state,
+                &touched,
+                &mut report,
+                spent - spent_before,
+            );
+            break;
+        }
+        let spent_slots = (spent / slot).max(1) as usize;
+        // geometric ramp: a round spends about as much as everything
+        // before it, so convergence checks stay cheap early and the
+        // budget is not burned before the variance map is trustworthy
+        let round_slots = remaining_slots.min(spent_slots.max(active.len()));
+
+        let mut keys: Vec<(usize, usize)> = Vec::new();
+        let mut weights: Vec<f64> = Vec::new();
+        for &fi in &active {
+            let n_str = state[fi].strata.len();
+            for (si, s) in state[fi].strata.iter().enumerate() {
+                keys.push((fi, si));
+                weights.push(match cfg.allocation {
+                    Allocation::Neyman => s.neyman_weight(),
+                    Allocation::Uniform => 1.0 / n_str as f64,
+                });
+            }
+        }
+        let shares = apportion(round_slots, &weights);
+        let mut slots: Vec<(usize, Vec<(f64, f64)>)> = Vec::new();
+        let mut owners: Vec<(usize, usize)> = Vec::new();
+        for (k, &(fi, si)) in keys.iter().enumerate() {
+            for _ in 0..shares[k] {
+                slots.push((fi, state[fi].strata[si].bounds.clone()));
+                owners.push((fi, si));
+            }
+        }
+        let moments = run_remapped(
+            engine, exe, jobs, cfg, &slots, &mut next_stream, &mut launches,
+        )?;
+        for (&(fi, si), m) in owners.iter().zip(&moments) {
+            state[fi].strata[si].moments.merge(m);
+            touched[fi] = true;
+        }
+        spent += slots.len() as u64 * slot;
+        finish_round(
+            cfg,
+            &mut state,
+            &touched,
+            &mut report,
+            spent - spent_before,
+        );
+    }
+
+    report.total_samples = spent;
+    report.launches = launches;
+    report.converged = state.iter().filter(|s| s.converged).count();
+    let ests = state
+        .iter()
+        .map(|st| {
+            let (value, std_err, n_samples) = partition_estimate(&st.strata);
+            Estimate { value, std_err, n_samples, rounds: st.rounds }
+        })
+        .collect();
+    Ok((ests, report))
+}
+
+/// Post-round bookkeeping: per-function convergence, stall detection,
+/// round counters.
+fn finish_round(
+    cfg: &MultiConfig,
+    state: &mut [FnState],
+    touched: &[bool],
+    report: &mut AdaptiveReport,
+    round_samples: u64,
+) {
+    report.rounds += 1;
+    report.samples_per_round.push(round_samples);
+    for (st, t) in state.iter_mut().zip(touched.iter()) {
+        if !*t {
+            continue;
+        }
+        st.rounds += 1;
+        let (value, err, n) = partition_estimate(&st.strata);
+        // a just-split function's error estimate is built on the probe
+        // samples that won the minimum-variance axis selection and is
+        // biased low: suppress convergence and stall judgement for one
+        // round, until fresh samples dominate the children
+        if st.fresh_split {
+            st.fresh_split = false;
+            st.prev = Some((err, n));
+            continue;
+        }
+        if let Some(tol) = tolerance(cfg, value) {
+            if err <= tol {
+                st.converged = true;
+            }
+        }
+        if let Some((prev_err, prev_n)) = st.prev {
+            if !st.converged
+                && n > prev_n
+                && prev_err.is_finite()
+                && prev_err > 0.0
+            {
+                // ideal MC scaling projects err ~ prev_err·√(prev_n/n);
+                // falling short means the variance estimate is unstable
+                // (peaked/oscillatory integrand) — stratify it
+                let expected =
+                    prev_err * ((prev_n as f64) / (n as f64)).sqrt();
+                if err > expected * STALL_TOLERANCE {
+                    st.needs_split = true;
+                }
+            }
+        }
+        st.prev = Some((err, n));
+    }
+}
+
+/// Convergence threshold for a function currently estimated at
+/// `value`: met when the error is below `target_rel_err·|value|` *or*
+/// `target_abs_err`. `None` when no target is configured.
+fn tolerance(cfg: &MultiConfig, value: f64) -> Option<f64> {
+    let mut tol: Option<f64> = None;
+    if let Some(rel) = cfg.target_rel_err {
+        tol = Some(rel * value.abs());
+    }
+    if let Some(abs) = cfg.target_abs_err {
+        tol = Some(match tol {
+            Some(t) => t.max(abs),
+            None => abs,
+        });
+    }
+    tol
+}
+
+/// Index of the stratum with the largest error contribution.
+fn worst_stratum(strata: &[Stratum]) -> usize {
+    let mut wi = 0usize;
+    let mut worst = f64::NEG_INFINITY;
+    for (i, s) in strata.iter().enumerate() {
+        let e = s.error_contribution();
+        if e > worst {
+            worst = e;
+            wi = i;
+        }
+    }
+    wi
+}
+
+/// Launch a list of domain-remapped slots — `(function index, bounds)`
+/// pairs, one `vm_multi` row each — and return the per-slot moment
+/// sums in input order.
+///
+/// This is the adaptive subsystem's whole device interface: a stratum
+/// launch is an ordinary `vm_multi` row whose bounds are the stratum
+/// box instead of the function's full domain, with a fresh Philox
+/// stream per slot (`base = 0`, so every slot covers the counter range
+/// `[0, exe.samples)` of its own stream). Reusing the cached `vm_multi`
+/// executables means refinement never compiles anything new.
+fn run_remapped(
+    engine: &DeviceEngine,
+    exe: &ExeSpec,
+    jobs: &[IntegralJob],
+    cfg: &MultiConfig,
+    slots: &[(usize, Vec<(f64, f64)>)],
+    next_stream: &mut u32,
+    launches: &mut usize,
+) -> Result<Vec<MomentSum>> {
+    if slots.is_empty() {
+        return Ok(vec![]);
+    }
+    let mut tasks = Vec::new();
+    for (t, chunk) in slots.chunks(exe.n_fns).enumerate() {
+        let mut fns = Vec::with_capacity(chunk.len());
+        for (fi, bounds) in chunk {
+            fns.push(VmFn {
+                program: jobs[*fi].program.clone(),
+                theta: jobs[*fi].theta.clone(),
+                bounds: bounds.clone(),
+                stream: *next_stream,
+            });
+            *next_stream = next_stream.wrapping_add(1);
+        }
+        let rng = RngCtr {
+            seed: split_seed(cfg.seed),
+            base: 0,
+            trial: cfg.trial,
+        };
+        tasks.push(LaunchTask {
+            exe: exe.name.clone(),
+            tag: t as u64,
+            inputs: vm_multi_inputs(exe, rng, &fns)?,
+        });
+    }
+    *launches += tasks.len();
+    let outs = engine.submit_with_retries(tasks, cfg.max_retries)?.wait()?;
+    let mut moments = vec![MomentSum::new(); slots.len()];
+    for out in outs {
+        let start = out.tag as usize * exe.n_fns;
+        for k in 0..exe.n_fns {
+            let i = start + k;
+            if i >= moments.len() {
+                break;
+            }
+            moments[i] = MomentSum::from_device(
+                exe.samples as u64,
+                out.data[k * 2],
+                out.data[k * 2 + 1],
+            );
+        }
+    }
+    Ok(moments)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tolerance_combines_rel_and_abs() {
+        let none = MultiConfig::default();
+        assert_eq!(tolerance(&none, 2.0), None);
+        let rel = MultiConfig {
+            target_rel_err: Some(0.01),
+            ..Default::default()
+        };
+        assert_eq!(tolerance(&rel, 2.0), Some(0.02));
+        assert_eq!(tolerance(&rel, -2.0), Some(0.02));
+        let both = MultiConfig {
+            target_rel_err: Some(0.01),
+            target_abs_err: Some(0.5),
+            ..Default::default()
+        };
+        assert_eq!(tolerance(&both, 2.0), Some(0.5)); // abs dominates
+        let tight = MultiConfig {
+            target_rel_err: Some(0.01),
+            target_abs_err: Some(0.001),
+            ..Default::default()
+        };
+        assert_eq!(tolerance(&tight, 2.0), Some(0.02)); // rel dominates
+        let abs = MultiConfig {
+            target_abs_err: Some(0.001),
+            ..Default::default()
+        };
+        assert_eq!(tolerance(&abs, 2.0), Some(0.001));
+    }
+
+    /// Build a one-stratum state over [0,1] with `n` samples of
+    /// mean 0 / variance 1 (so err = 1/√n exactly).
+    fn unit_var_state(n: u64) -> FnState {
+        let mut s = Stratum::root(&[(0.0, 1.0)]);
+        s.moments = MomentSum { n, sum: 0.0, sumsq: n as f64 };
+        FnState {
+            strata: vec![s],
+            rounds: 1,
+            converged: false,
+            needs_split: false,
+            fresh_split: false,
+            prev: None,
+        }
+    }
+
+    #[test]
+    fn stall_detection_flags_non_scaling_errors() {
+        let cfg = MultiConfig {
+            target_abs_err: Some(1e-12), // unreachably tight
+            ..Default::default()
+        };
+        let mut report = AdaptiveReport::default();
+
+        // healthy: n 1000 -> 4000 with unit variance halves the error
+        // exactly as 1/√n projects — no split
+        let mut healthy = unit_var_state(4000);
+        healthy.prev = Some((1.0 / 1000f64.sqrt(), 1000));
+        finish_round(&cfg, std::slice::from_mut(&mut healthy), &[true], &mut report, 0);
+        assert!(!healthy.needs_split);
+        assert_eq!(healthy.rounds, 2);
+
+        // stalled: 4x the samples but the error did not move (variance
+        // estimate quadrupled underneath) — flagged for subdivision
+        let mut stalled = unit_var_state(4000);
+        stalled.prev = Some((1.0 / 4000f64.sqrt() / 1.5, 1000));
+        finish_round(&cfg, std::slice::from_mut(&mut stalled), &[true], &mut report, 0);
+        assert!(stalled.needs_split);
+
+        // converged functions are never flagged, however badly scaled
+        let mut done = unit_var_state(4000);
+        done.prev = Some((1e-9, 1000));
+        let loose = MultiConfig {
+            target_abs_err: Some(1.0),
+            ..Default::default()
+        };
+        finish_round(&loose, std::slice::from_mut(&mut done), &[true], &mut report, 0);
+        assert!(done.converged);
+        assert!(!done.needs_split);
+
+        // untouched functions keep their round count and baseline
+        let mut idle = unit_var_state(4000);
+        idle.prev = Some((0.5, 77));
+        finish_round(&cfg, std::slice::from_mut(&mut idle), &[false], &mut report, 0);
+        assert_eq!(idle.rounds, 1);
+        assert_eq!(idle.prev, Some((0.5, 77)));
+
+        // a just-split function is never judged on its biased probe
+        // seed: neither converged (despite a loose target) nor stalled
+        let mut split = unit_var_state(4000);
+        split.fresh_split = true;
+        split.prev = Some((1.0, 10));
+        finish_round(&loose, std::slice::from_mut(&mut split), &[true], &mut report, 0);
+        assert!(!split.converged);
+        assert!(!split.needs_split);
+        assert!(!split.fresh_split); // judged normally from next round
+    }
+
+    #[test]
+    fn worst_stratum_prefers_unsampled_then_contribution() {
+        let mut a = Stratum::root(&[(0.0, 1.0)]);
+        for v in [0.0, 1.0] {
+            a.moments.push(v);
+        }
+        let b = Stratum::root(&[(0.0, 1.0)]); // unsampled: infinite
+        assert_eq!(worst_stratum(&[a.clone(), b]), 1);
+        let mut c = Stratum::root(&[(0.0, 4.0)]); // same var, 4x volume
+        for v in [0.0, 1.0] {
+            c.moments.push(v);
+        }
+        assert_eq!(worst_stratum(&[a, c]), 1);
+    }
+}

@@ -1,0 +1,27 @@
+//! Adaptive variance-driven sample allocation for multifunction
+//! batches — the precision-targeted mode of
+//! [`crate::integrator::multifunctions`].
+//!
+//! The one-shot path gives every integrand of a heterogeneous batch
+//! the same budget, so the whole batch pays for its hardest member.
+//! This subsystem replaces that with a **pilot-then-refine loop**
+//! ([`driver`]): a cheap equal pilot estimates per-function variance,
+//! then successive rounds pour the remaining budget into the functions
+//! (and, after stratified subdivision, the sub-domains) that still
+//! dominate the error — Neyman allocation across strata
+//! ([`alloc::Allocation::Neyman`]), per-function stopping at a
+//! user-supplied absolute/relative error target, and domain-remapped
+//! `vm_multi` launches ([`strata`]) so the persistent engine's warm
+//! executable caches serve every round without a single new compile.
+//!
+//! Entry points: set `target_rel_err` / `target_abs_err` on a
+//! [`crate::integrator::multifunctions::MultiConfig`] and call
+//! `multifunctions::integrate` as usual, or call [`integrate_with_report`]
+//! directly for the per-round diagnostics.
+
+pub mod alloc;
+mod driver;
+pub mod strata;
+
+pub use alloc::{apportion, Allocation};
+pub use driver::{integrate, integrate_with_report, AdaptiveReport};

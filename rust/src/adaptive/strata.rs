@@ -1,0 +1,118 @@
+//! Per-function domain partitions: rectangular strata with streaming
+//! moment accumulators.
+//!
+//! A function starts as one root stratum covering its whole box. When
+//! refinement stalls, the driver halves the worst stratum along the
+//! axis whose halves separate the most variance; every stratum is
+//! sampled by domain-remapped `vm_multi` launches (the stratum bounds
+//! simply replace the function's bounds in the launch row), so no new
+//! artifacts are compiled and warm executable caches stay warm.
+
+use crate::sampler::volume;
+use crate::stats::{stratified_estimate, MomentSum};
+
+/// One rectangular stratum of an integrand's domain, with the moment
+/// sums accumulated over every launch that sampled it.
+#[derive(Debug, Clone)]
+pub struct Stratum {
+    /// Per-dimension (lo, hi); same length as the owning job's bounds.
+    pub bounds: Vec<(f64, f64)>,
+    pub moments: MomentSum,
+}
+
+impl Stratum {
+    /// A fresh stratum covering `bounds`, with no samples yet.
+    pub fn root(bounds: &[(f64, f64)]) -> Self {
+        Stratum { bounds: bounds.to_vec(), moments: MomentSum::new() }
+    }
+
+    pub fn volume(&self) -> f64 {
+        volume(&self.bounds)
+    }
+
+    /// Halve along `axis` at the midpoint. Children start with empty
+    /// moments — the caller seeds them (e.g. from the axis probes).
+    pub fn split(&self, axis: usize) -> (Stratum, Stratum) {
+        let (lo, hi) = self.bounds[axis];
+        let mid = 0.5 * (lo + hi);
+        let mut a = Stratum::root(&self.bounds);
+        let mut b = Stratum::root(&self.bounds);
+        a.bounds[axis].1 = mid;
+        b.bounds[axis].0 = mid;
+        (a, b)
+    }
+
+    /// This stratum's standard-error contribution `V_s·√(var_s/n_s)`
+    /// to the combined estimate (infinite when unsampled).
+    pub fn error_contribution(&self) -> f64 {
+        if self.moments.n == 0 {
+            return f64::INFINITY;
+        }
+        self.volume()
+            * (self.moments.variance() / self.moments.n as f64).sqrt()
+    }
+
+    /// Neyman allocation weight `V_s·σ_s` (falls back to the bare
+    /// volume when the stratum has no samples to estimate σ from).
+    pub fn neyman_weight(&self) -> f64 {
+        if self.moments.n == 0 {
+            return self.volume();
+        }
+        self.volume() * self.moments.variance().sqrt()
+    }
+}
+
+/// Combined `(value, std_err, n_samples)` over a function's partition.
+pub fn partition_estimate(strata: &[Stratum]) -> (f64, f64, u64) {
+    let parts: Vec<(f64, MomentSum)> =
+        strata.iter().map(|s| (s.volume(), s.moments)).collect();
+    let (value, std_err) = stratified_estimate(&parts);
+    (value, std_err, strata.iter().map(|s| s.moments.n).sum())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn split_partitions_volume() {
+        let s = Stratum::root(&[(0.0, 2.0), (-1.0, 1.0)]);
+        assert_eq!(s.volume(), 4.0);
+        let (a, b) = s.split(0);
+        assert_eq!(a.bounds[0], (0.0, 1.0));
+        assert_eq!(b.bounds[0], (1.0, 2.0));
+        assert_eq!(a.bounds[1], (-1.0, 1.0));
+        assert_eq!(a.volume() + b.volume(), s.volume());
+        assert_eq!(a.moments.n, 0);
+    }
+
+    #[test]
+    fn weights_and_contributions() {
+        let mut s = Stratum::root(&[(0.0, 2.0)]);
+        assert!(s.error_contribution().is_infinite());
+        assert_eq!(s.neyman_weight(), 2.0); // volume fallback
+        for v in [1.0, 2.0, 3.0, 4.0] {
+            s.moments.push(v);
+        }
+        // var = 1.25, n = 4, V = 2
+        let want_err = 2.0 * (1.25f64 / 4.0).sqrt();
+        assert!((s.error_contribution() - want_err).abs() < 1e-12);
+        assert!((s.neyman_weight() - 2.0 * 1.25f64.sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn partition_estimate_sums_strata() {
+        let mut a = Stratum::root(&[(0.0, 1.0)]);
+        let mut b = Stratum::root(&[(1.0, 2.0)]);
+        for v in [0.5, 0.5] {
+            a.moments.push(v);
+        }
+        for v in [1.5, 1.5] {
+            b.moments.push(v);
+        }
+        let (value, err, n) = partition_estimate(&[a, b]);
+        assert!((value - 2.0).abs() < 1e-12);
+        assert_eq!(err, 0.0); // zero variance in both strata
+        assert_eq!(n, 4);
+    }
+}

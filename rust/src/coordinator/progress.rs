@@ -10,6 +10,9 @@ pub struct Metrics {
     pub tasks_done: AtomicU64,
     pub retries: AtomicU64,
     pub failures: AtomicU64,
+    /// Tasks purged from the queue because their job's handle was
+    /// dropped (or cancelled) before being awaited.
+    pub cancellations: AtomicU64,
     /// (busy, total) wall time per worker, filled at worker exit.
     worker_times: Mutex<Vec<(Duration, Duration)>>,
     /// Context-construction failures (worker never joined the pool).
@@ -33,6 +36,11 @@ impl Metrics {
 
     pub fn failure(&self) {
         self.failures.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count `n` queued tasks purged by a job cancellation.
+    pub fn record_cancelled(&self, n: u64) {
+        self.cancellations.fetch_add(n, Ordering::Relaxed);
     }
 
     pub fn record_worker(&self, busy: Duration, total: Duration) {
@@ -62,6 +70,11 @@ impl Metrics {
         self.failures.load(Ordering::Relaxed)
     }
 
+    /// Tasks purged by job cancellations.
+    pub fn cancelled(&self) -> u64 {
+        self.cancellations.load(Ordering::Relaxed)
+    }
+
     /// Mean fraction of wall time workers spent executing launches.
     pub fn utilization(&self) -> f64 {
         let w = self.worker_times.lock().unwrap();
@@ -83,10 +96,12 @@ impl Metrics {
 
     pub fn summary(&self) -> String {
         format!(
-            "tasks={} retries={} failures={} utilization={:.0}%",
+            "tasks={} retries={} failures={} cancelled={} \
+             utilization={:.0}%",
             self.done(),
             self.retried(),
             self.failed(),
+            self.cancelled(),
             self.utilization() * 100.0
         )
     }
@@ -105,6 +120,10 @@ mod tests {
         assert_eq!(m.done(), 2);
         assert_eq!(m.retried(), 1);
         assert_eq!(m.failed(), 0);
+        assert_eq!(m.cancelled(), 0);
+        m.record_cancelled(42);
+        assert_eq!(m.cancelled(), 42);
+        assert!(m.summary().contains("cancelled=42"));
     }
 
     #[test]

@@ -53,7 +53,7 @@ pub fn integrate_one(
         left -= n;
     }
     let (value, std_err) = m.estimate(job.volume());
-    Estimate { value, std_err, n_samples: m.n }
+    Estimate { value, std_err, n_samples: m.n, rounds: 1 }
 }
 
 /// Integrate many jobs serially (stream = job index + `stream_base`).

@@ -94,7 +94,7 @@ impl HarmonicHandle {
             .iter()
             .map(|m| {
                 let (value, std_err) = m.estimate(self.volume);
-                Estimate { value, std_err, n_samples: m.n }
+                Estimate { value, std_err, n_samples: m.n, rounds: 1 }
             })
             .collect())
     }

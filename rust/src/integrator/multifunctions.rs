@@ -17,6 +17,7 @@
 
 use anyhow::Result;
 
+use crate::adaptive::Allocation;
 use crate::engine::{DeviceEngine, DeviceHandle, LaunchTask};
 use crate::integrator::spec::{Estimate, IntegralJob};
 use crate::runtime::launch::{vm_multi_inputs, RngCtr, VmFn};
@@ -27,16 +28,34 @@ use crate::stats::MomentSum;
 #[derive(Debug, Clone)]
 pub struct MultiConfig {
     /// Target samples per function (rounded up to whole launches).
+    /// In adaptive mode (an error target is set) this is the per-
+    /// function *budget cap*: the pool of `samples_per_fn × n_jobs`
+    /// samples flows to whichever functions still need it.
     pub samples_per_fn: usize,
     pub seed: u64,
     /// Independent-repeat id (Fig 1 uses trials 0..10).
     pub trial: u32,
-    /// First Philox stream id; function i uses `stream_base + i`.
+    /// First Philox stream id; function i uses `stream_base + i`
+    /// (adaptive runs draw consecutive streams from here, one per
+    /// launch slot).
     pub stream_base: u32,
     /// Per-job retry budget on the engine.
     pub max_retries: u32,
     /// Force a specific executable (default: best fit by dims+samples).
     pub exe: Option<String>,
+    /// Stop refining a function once `std_err <= target_rel_err·|I|`.
+    /// Setting this (or `target_abs_err`) switches [`integrate`] to
+    /// the adaptive pilot-then-refine loop ([`crate::adaptive`]).
+    pub target_rel_err: Option<f64>,
+    /// Stop refining a function once `std_err <= target_abs_err`.
+    pub target_abs_err: Option<f64>,
+    /// Maximum refinement rounds after the pilot (adaptive mode).
+    pub max_rounds: usize,
+    /// Samples per function in the adaptive pilot pass (clamped to
+    /// `samples_per_fn`, rounded up to at least one launch).
+    pub pilot_samples: usize,
+    /// How refinement rounds distribute the budget (adaptive mode).
+    pub allocation: Allocation,
 }
 
 impl Default for MultiConfig {
@@ -48,7 +67,21 @@ impl Default for MultiConfig {
             stream_base: 0,
             max_retries: 3,
             exe: None,
+            target_rel_err: None,
+            target_abs_err: None,
+            max_rounds: 12,
+            pilot_samples: 1 << 12,
+            allocation: Allocation::Neyman,
         }
+    }
+}
+
+impl MultiConfig {
+    /// True when an error target is configured, i.e. [`integrate`]
+    /// runs the adaptive pilot-then-refine loop instead of one-shot
+    /// uniform sampling.
+    pub fn is_adaptive(&self) -> bool {
+        self.target_rel_err.is_some() || self.target_abs_err.is_some()
     }
 }
 
@@ -87,9 +120,18 @@ impl MultiHandle {
             .zip(&self.volumes)
             .map(|(m, &vol)| {
                 let (value, std_err) = m.estimate(vol);
-                Estimate { value, std_err, n_samples: m.n }
+                Estimate { value, std_err, n_samples: m.n, rounds: 1 }
             })
             .collect())
+    }
+
+    /// Cancel outstanding launches and discard any results. Dropping
+    /// an un-awaited handle does the same implicitly: queued launches
+    /// are purged from the engine so they never occupy a worker slot.
+    pub fn cancel(self) {
+        if let Some(h) = self.inner {
+            h.cancel();
+        }
     }
 
     /// Non-blocking completion probe.
@@ -174,11 +216,20 @@ pub fn submit(
 
 /// Integrate a heterogeneous job set; returns one estimate per job, in
 /// order. See [`MultiConfig`] for sampling/addressing options.
+///
+/// With an error target set (`target_rel_err` / `target_abs_err`) this
+/// runs the adaptive pilot-then-refine loop of [`crate::adaptive`]
+/// instead of one-shot uniform sampling: the batch budget flows to the
+/// functions that still dominate the error, and each function stops as
+/// soon as its target is met.
 pub fn integrate(
     engine: &DeviceEngine,
     jobs: &[IntegralJob],
     cfg: &MultiConfig,
 ) -> Result<Vec<Estimate>> {
+    if cfg.is_adaptive() {
+        return crate::adaptive::integrate(engine, jobs, cfg);
+    }
     submit(engine, jobs, cfg)?.wait()
 }
 
@@ -209,6 +260,17 @@ pub fn integrate_trials(
     cfg: &MultiConfig,
     trials: u32,
 ) -> Result<Vec<Vec<Estimate>>> {
+    if cfg.is_adaptive() {
+        // adaptive rounds need per-round feedback, so trials run
+        // sequentially; each trial's rounds still interleave with any
+        // other engine traffic
+        return (0..trials)
+            .map(|t| {
+                let c = MultiConfig { trial: cfg.trial + t, ..cfg.clone() };
+                integrate(engine, jobs, &c)
+            })
+            .collect();
+    }
     let handles: Vec<MultiHandle> = (0..trials)
         .map(|t| {
             let c = MultiConfig { trial: cfg.trial + t, ..cfg.clone() };

@@ -225,6 +225,7 @@ pub fn integrate(
             value,
             std_err: variance.sqrt(),
             n_samples,
+            rounds: cubes_per_level.len() as u32,
         },
         cubes_per_level,
         flagged_per_level,

@@ -91,12 +91,16 @@ pub struct Estimate {
     pub value: f64,
     /// One standard error of `value`.
     pub std_err: f64,
+    /// Samples actually spent on this estimate.
     pub n_samples: u64,
+    /// Sampling rounds that contributed: 1 for one-shot estimates,
+    /// pilot + refinements for adaptive runs (`crate::adaptive`).
+    pub rounds: u32,
 }
 
 impl Estimate {
     pub fn zero() -> Self {
-        Estimate { value: 0.0, std_err: 0.0, n_samples: 0 }
+        Estimate { value: 0.0, std_err: 0.0, n_samples: 0, rounds: 0 }
     }
 
     /// Is `truth` within z standard errors?
@@ -146,7 +150,12 @@ mod tests {
 
     #[test]
     fn estimate_consistency() {
-        let e = Estimate { value: 1.02, std_err: 0.01, n_samples: 100 };
+        let e = Estimate {
+            value: 1.02,
+            std_err: 0.01,
+            n_samples: 100,
+            rounds: 1,
+        };
         assert!(e.consistent_with(1.0, 3.0));
         assert!(!e.consistent_with(1.1, 3.0));
     }

@@ -29,6 +29,12 @@
 //! | `ZMCintegral_functional`     | [`integrator::functional`] — one integrand over a parameter grid |
 //! | `ZMCintegral_multifunctions` | [`integrator::multifunctions`] — heterogeneous integrand batches |
 //!
+//! Beyond the paper: setting an error target on a
+//! [`integrator::multifunctions::MultiConfig`] switches multifunction
+//! batches to the [`adaptive`] pilot-then-refine loop — variance-driven
+//! (Neyman) budget allocation with per-function stopping and stratified
+//! subdivision of stalling integrands.
+//!
 //! ## Quickstart
 //!
 //! ```no_run
@@ -55,6 +61,7 @@
 //! let (_a, _b) = (h1.wait().unwrap(), h2.wait().unwrap());
 //! ```
 
+pub mod adaptive;
 pub mod analytic;
 pub mod cluster;
 pub mod config;
@@ -70,6 +77,7 @@ pub mod vm;
 
 /// Convenience re-exports for the common workflow.
 pub mod prelude {
+    pub use crate::adaptive::Allocation;
     pub use crate::coordinator::scheduler::Scheduler;
     pub use crate::engine::{
         DeviceBackend, DeviceEngine, Engine, EngineConfig, JobHandle,

@@ -87,6 +87,13 @@ COMMON FLAGS
   --bounds \"l,h;l,h\"  per-dimension bounds
   --theta \"a,b,..\"  parameter bindings (p0, p1, ...)
 
+ADAPTIVE (integrate/run): setting an error target switches to the
+pilot-then-refine loop — the sample budget flows to the functions that
+still dominate the error, stopping each one at its target.
+  --target-rel-err E   stop at std_err <= E*|I| per function
+  --target-abs-err E   stop at std_err <= E per function
+  --max-rounds N       refinement rounds after the pilot [12]
+
 normal-specific: --divisions K --depth D --sigma-mult S
 fig1-specific:   --n N (series length)
 ",
@@ -136,6 +143,16 @@ impl Flags {
             Some(v) => {
                 v.parse().map_err(|_| anyhow!("bad --{key} '{v}'"))
             }
+        }
+    }
+
+    fn opt_f64(&self, key: &str) -> Result<Option<f64>> {
+        match self.0.get(key) {
+            None => Ok(None),
+            Some(v) => v
+                .parse()
+                .map(Some)
+                .map_err(|_| anyhow!("bad --{key} '{v}'")),
         }
     }
 
@@ -249,6 +266,9 @@ fn cmd_integrate(flags: &Flags) -> Result<()> {
     let cfg = MultiConfig {
         samples_per_fn: samples,
         seed: flags.u64("seed", 2021)?,
+        target_rel_err: flags.opt_f64("target-rel-err")?,
+        target_abs_err: flags.opt_f64("target-abs-err")?,
+        max_rounds: flags.usize("max-rounds", 12)?,
         ..Default::default()
     };
     let t0 = std::time::Instant::now();
@@ -275,11 +295,20 @@ fn cmd_integrate(flags: &Flags) -> Result<()> {
     } else {
         println!("  I = {:.8} ± {:.3e}", e.value, e.std_err);
     }
-    println!(
-        "  samples/fn: {}   wall: {:.3}s",
-        e.n_samples,
-        dt.as_secs_f64()
-    );
+    if cfg.is_adaptive() {
+        println!(
+            "  samples/fn: {} (adaptive, {} rounds)   wall: {:.3}s",
+            e.n_samples,
+            e.rounds,
+            dt.as_secs_f64()
+        );
+    } else {
+        println!(
+            "  samples/fn: {}   wall: {:.3}s",
+            e.n_samples,
+            dt.as_secs_f64()
+        );
+    }
     Ok(())
 }
 
@@ -291,6 +320,9 @@ fn cmd_run(flags: &Flags) -> Result<()> {
     let mcfg = MultiConfig {
         samples_per_fn: cfg.samples_per_fn,
         seed: cfg.seed,
+        target_rel_err: flags.opt_f64("target-rel-err")?,
+        target_abs_err: flags.opt_f64("target-abs-err")?,
+        max_rounds: flags.usize("max-rounds", 12)?,
         ..Default::default()
     };
     let t0 = std::time::Instant::now();
@@ -306,7 +338,14 @@ fn cmd_run(flags: &Flags) -> Result<()> {
         workers,
         dt.as_secs_f64()
     );
-    println!("{:>4}  {:>14}  {:>12}  expr", "fn", "mean", "std");
+    if mcfg.is_adaptive() {
+        println!(
+            "{:>4}  {:>14}  {:>12}  {:>6}  {:>12}  expr",
+            "fn", "mean", "std", "rounds", "samples"
+        );
+    } else {
+        println!("{:>4}  {:>14}  {:>12}  expr", "fn", "mean", "std");
+    }
     for (i, job) in cfg.jobs.iter().enumerate() {
         let mut w = Welford::new();
         for t in &per_trial {
@@ -314,12 +353,28 @@ fn cmd_run(flags: &Flags) -> Result<()> {
         }
         let spread =
             if cfg.trials > 1 { w.std() } else { per_trial[0][i].std_err };
-        println!(
-            "{i:>4}  {:>14.8}  {:>12.3e}  {}",
-            w.mean(),
-            spread,
-            job.source
-        );
+        if mcfg.is_adaptive() {
+            // trials may converge in different rounds: report the worst
+            // round count and the mean samples actually spent
+            let rounds = per_trial.iter().map(|t| t[i].rounds).max().unwrap_or(0);
+            let samples = per_trial.iter().map(|t| t[i].n_samples).sum::<u64>()
+                / per_trial.len().max(1) as u64;
+            println!(
+                "{i:>4}  {:>14.8}  {:>12.3e}  {:>6}  {:>12}  {}",
+                w.mean(),
+                spread,
+                rounds,
+                samples,
+                job.source
+            );
+        } else {
+            println!(
+                "{i:>4}  {:>14.8}  {:>12.3e}  {}",
+                w.mean(),
+                spread,
+                job.source
+            );
+        }
     }
     Ok(())
 }

@@ -56,6 +56,30 @@ impl MomentSum {
     }
 }
 
+/// Combine per-stratum `(volume, moments)` accumulators over a domain
+/// partition into one integral estimate:
+/// `I = Σ V_s·mean_s`, `σ_I = √(Σ V_s²·var_s/n_s)` — the stratified
+/// variance combination the adaptive allocator refines round by round.
+/// An unsampled stratum (n = 0) contributes nothing to the value but
+/// forces an infinite error, so callers can never mistake a partially
+/// sampled partition for a converged one.
+pub fn stratified_estimate(parts: &[(f64, MomentSum)]) -> (f64, f64) {
+    let mut value = 0.0f64;
+    let mut var = 0.0f64;
+    let mut unsampled = false;
+    for (vol, m) in parts {
+        if m.n == 0 {
+            unsampled = true;
+            continue;
+        }
+        let (v, e) = m.estimate(*vol);
+        value += v;
+        var += e * e;
+    }
+    let std_err = if unsampled { f64::INFINITY } else { var.sqrt() };
+    (value, std_err)
+}
+
 /// Welford running mean/variance over a stream of values (used for the
 /// paper's "10 independent evaluations" repeat statistics).
 #[derive(Debug, Clone, Copy, Default)]
@@ -213,6 +237,40 @@ mod tests {
         let mut empty_merge = Welford::new();
         empty_merge.merge(&one);
         assert_eq!(empty_merge.mean(), 5.0);
+    }
+
+    #[test]
+    fn stratified_combination_matches_whole_domain() {
+        // f(x) = x over [0,2]: exact I = 2. Two strata [0,1], [1,2]
+        // sampled separately must combine to the same estimate family.
+        let mk = |vals: &[f64]| {
+            let mut m = MomentSum::new();
+            vals.iter().for_each(|&v| m.push(v));
+            m
+        };
+        let lo = mk(&[0.25, 0.5, 0.75]); // samples of f on [0,1]
+        let hi = mk(&[1.25, 1.5, 1.75]); // samples of f on [1,2]
+        let (value, err) = stratified_estimate(&[(1.0, lo), (1.0, hi)]);
+        assert!((value - 2.0).abs() < 1e-12, "{value}");
+        // per-stratum errors combine in quadrature
+        let (_, e_lo) = lo.estimate(1.0);
+        let (_, e_hi) = hi.estimate(1.0);
+        let want = (e_lo * e_lo + e_hi * e_hi).sqrt();
+        assert!((err - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn stratified_unsampled_stratum_is_infinite_error() {
+        let mut m = MomentSum::new();
+        m.push(1.0);
+        m.push(2.0);
+        let (value, err) =
+            stratified_estimate(&[(1.0, m), (1.0, MomentSum::new())]);
+        assert!((value - 1.5).abs() < 1e-12);
+        assert!(err.is_infinite());
+        let (v0, e0) = stratified_estimate(&[]);
+        assert_eq!(v0, 0.0);
+        assert_eq!(e0, 0.0);
     }
 
     #[test]

@@ -66,7 +66,11 @@ impl Bench {
         self.rows.push((label.to_string(), cols));
     }
 
-    /// Emit the whole report as one JSON line (for EXPERIMENTS.md tooling).
+    /// Emit the whole report as one JSON line (for EXPERIMENTS.md
+    /// tooling). With `ZMC_BENCH_JSON_DIR` set, the same document is
+    /// also written to `<dir>/BENCH_<name>.json` — CI's bench-smoke job
+    /// uploads these as workflow artifacts so the perf trajectory
+    /// accumulates per push.
     pub fn finish(self) {
         use crate::util::json::Json;
         use std::collections::BTreeMap;
@@ -90,7 +94,24 @@ impl Bench {
         let mut top = BTreeMap::new();
         top.insert("bench".to_string(), Json::Str(self.name.to_string()));
         top.insert("rows".to_string(), Json::Arr(rows));
-        println!("json: {}", Json::Obj(top));
+        let doc = Json::Obj(top).to_string();
+        println!("json: {doc}");
+        if let Ok(dir) = std::env::var("ZMC_BENCH_JSON_DIR") {
+            if !dir.is_empty() {
+                write_json_report(std::path::Path::new(&dir), self.name, &doc);
+            }
+        }
+    }
+}
+
+/// Write one bench report to `<dir>/BENCH_<name>.json` (best effort:
+/// a failure warns on stderr rather than aborting the bench).
+fn write_json_report(dir: &std::path::Path, name: &str, doc: &str) {
+    let path = dir.join(format!("BENCH_{name}.json"));
+    let write = std::fs::create_dir_all(dir)
+        .and_then(|()| std::fs::write(&path, format!("{doc}\n")));
+    if let Err(e) = write {
+        eprintln!("warn: writing {}: {e}", path.display());
     }
 }
 
@@ -131,5 +152,23 @@ mod tests {
         b.row("r1", &[("x", "1.5".into()), ("y", "abc".into())]);
         assert_eq!(b.rows.len(), 1);
         b.finish();
+    }
+
+    #[test]
+    fn bench_json_report_file_written() {
+        // the env-var plumbing is a one-line read in finish(); the file
+        // write is tested directly to avoid mutating process-global env
+        // from a multithreaded test binary
+        let dir = std::env::temp_dir()
+            .join(format!("zmc_bench_json_{}", std::process::id()));
+        write_json_report(&dir, "unit_file", "{\"bench\":\"unit_file\"}");
+        let path = dir.join("BENCH_unit_file.json");
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.contains("\"bench\""), "{text}");
+        assert!(text.contains("unit_file"));
+        // missing parent is handled; unwritable paths only warn
+        write_json_report(&dir.join("nested/deeper"), "x", "{}");
+        assert!(dir.join("nested/deeper/BENCH_x.json").exists());
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -1,0 +1,288 @@
+//! Adaptive-allocation integration tests on the CPU emulator backend:
+//!
+//! * the domain-remapping invariant — a stratified (sub-box) launch is
+//!   bit-exact with a first-class unstratified launch of the same
+//!   integrand over the same Philox counter ranges, so stratification
+//!   adds no sampling perturbation and reuses the cached `vm_multi`
+//!   executables unchanged;
+//! * the pilot-then-refine loop — per-function stopping at an error
+//!   target, budget flowing to the hard integrands, rounds/samples
+//!   breakdown in every `Estimate`, determinism, and warm caches
+//!   across rounds.
+//!
+//! Emulator-only (`--features pjrt` skips: synthetic HLO bodies).
+#![cfg(not(feature = "pjrt"))]
+
+use std::sync::Arc;
+
+use zmc::adaptive::{self, strata::Stratum, Allocation};
+use zmc::engine::{DeviceEngine, Engine};
+use zmc::integrator::multifunctions::{self, MultiConfig};
+use zmc::integrator::spec::IntegralJob;
+use zmc::runtime::device::{DevicePool, DeviceRuntime};
+use zmc::runtime::launch::{vm_multi_inputs, RngCtr, VmFn};
+use zmc::runtime::registry::Registry;
+use zmc::stats::{stratified_estimate, MomentSum};
+
+fn engine(workers: usize) -> (Arc<Registry>, DeviceEngine) {
+    let reg = Arc::new(Registry::emulated());
+    let pool = DevicePool::new(&reg, workers).unwrap();
+    let eng = Engine::for_pool(&pool).unwrap();
+    (reg, eng)
+}
+
+/// 3 smooth integrands + 1 sharp 2-D peak (the error-dominating one).
+fn mixed_jobs() -> Vec<IntegralJob> {
+    let unit2 = [(0.0, 1.0), (0.0, 1.0)];
+    vec![
+        IntegralJob::parse("1 + x1*x2", &unit2).unwrap(),
+        IntegralJob::parse("exp(-x1) + 1", &unit2).unwrap(),
+        IntegralJob::parse("x1^2 + x2 + 1", &unit2).unwrap(),
+        IntegralJob::with_params(
+            "1/(p0 + (x1-0.5)^2 + (x2-0.5)^2)",
+            &unit2,
+            &[0.02],
+        )
+        .unwrap(),
+    ]
+}
+
+/// A domain-remapped slot — the adaptive subsystem's stratified launch:
+/// the stratum box simply replaces the integrand's bounds in an
+/// ordinary `vm_multi` row — must be **bit-exact** with integrating the
+/// sub-box as a first-class job over the same counter range
+/// `[0, samples)` of the same stream. Emulated directly against the
+/// engine path.
+#[test]
+fn remapped_launch_is_bit_exact_with_unstratified() {
+    let reg = Arc::new(Registry::emulated());
+    let exe = reg.get("vm_multi_f8_s4096").unwrap();
+    let dev = DeviceRuntime::new(Arc::clone(&reg)).unwrap();
+
+    // remapped slot: full-domain job "x1*x1 + p0", stratum [0.25, 0.5]
+    let full = IntegralJob::with_params(
+        "x1*x1 + p0",
+        &[(0.0, 1.0)],
+        &[0.5],
+    )
+    .unwrap();
+    let stratum = Stratum::root(&[(0.25, 0.5)]);
+    let slot = VmFn {
+        program: full.program.clone(),
+        theta: full.theta.clone(),
+        bounds: stratum.bounds.clone(),
+        stream: 9,
+    };
+    let rng = RngCtr { seed: [777, 0], base: 0, trial: 0 };
+    let inputs =
+        vm_multi_inputs(exe, rng, std::slice::from_ref(&slot)).unwrap();
+    let out = dev.execute(&exe.name, &inputs).unwrap();
+    let m = MomentSum::from_device(
+        exe.samples as u64,
+        out.data[0],
+        out.data[1],
+    );
+    let (value, std_err) = m.estimate(stratum.volume());
+
+    // unstratified: the same box as a first-class job via the engine
+    let (_, eng) = engine(1);
+    let job = IntegralJob::with_params(
+        "x1*x1 + p0",
+        &[(0.25, 0.5)],
+        &[0.5],
+    )
+    .unwrap();
+    let cfg = MultiConfig {
+        samples_per_fn: exe.samples,
+        seed: 777,
+        stream_base: 9,
+        exe: Some(exe.name.clone()),
+        ..Default::default()
+    };
+    let est = multifunctions::integrate(&eng, &[job], &cfg).unwrap()[0];
+
+    assert_eq!(est.value, value, "remapped launch must be bit-exact");
+    assert_eq!(est.std_err, std_err);
+    assert_eq!(est.n_samples, exe.samples as u64);
+}
+
+/// Two strata partitioning a domain, each sampled by its own remapped
+/// launch, must combine to an estimate consistent with the analytic
+/// integral — and with the single full-domain launch.
+#[test]
+fn strata_partition_combines_consistently() {
+    let reg = Arc::new(Registry::emulated());
+    let exe = reg.get("vm_multi_f8_s4096").unwrap();
+    let dev = DeviceRuntime::new(Arc::clone(&reg)).unwrap();
+    let job = IntegralJob::parse("x1", &[(0.0, 2.0)]).unwrap();
+    let root = Stratum::root(&job.bounds);
+    let (lo, hi) = root.split(0);
+    assert_eq!(lo.bounds, vec![(0.0, 1.0)]);
+    assert_eq!(hi.bounds, vec![(1.0, 2.0)]);
+
+    let mut parts = Vec::new();
+    for (i, s) in [&lo, &hi].into_iter().enumerate() {
+        let slot = VmFn {
+            program: job.program.clone(),
+            theta: vec![],
+            bounds: s.bounds.clone(),
+            stream: 100 + i as u32,
+        };
+        let rng = RngCtr { seed: [5, 0], base: 0, trial: 0 };
+        let inputs =
+            vm_multi_inputs(exe, rng, std::slice::from_ref(&slot)).unwrap();
+        let out = dev.execute(&exe.name, &inputs).unwrap();
+        parts.push((
+            s.volume(),
+            MomentSum::from_device(
+                exe.samples as u64,
+                out.data[0],
+                out.data[1],
+            ),
+        ));
+    }
+    let (value, std_err) = stratified_estimate(&parts);
+    // ∫₀² x dx = 2; stratification must stay consistent with truth
+    assert!(
+        (value - 2.0).abs() <= 6.0 * std_err,
+        "stratified {value} ± {std_err}"
+    );
+    assert!(std_err > 0.0 && std_err < 0.05);
+}
+
+#[test]
+fn adaptive_meets_target_and_reports_breakdown() {
+    let (reg, eng) = engine(2);
+    let jobs = mixed_jobs();
+    let cfg = MultiConfig {
+        samples_per_fn: 1 << 17,
+        seed: 424242,
+        target_rel_err: Some(5e-3),
+        ..Default::default()
+    };
+    let (ests, report) =
+        adaptive::integrate_with_report(&eng, &jobs, &cfg).unwrap();
+    assert_eq!(ests.len(), jobs.len());
+    for (i, e) in ests.iter().enumerate() {
+        assert!(
+            e.std_err <= 5e-3 * e.value.abs(),
+            "fn {i} missed target: {e:?}"
+        );
+        assert!(e.n_samples > 0);
+        assert!(e.rounds >= 1);
+    }
+    assert_eq!(report.converged, jobs.len());
+    // the peak must have soaked up more budget and more rounds than
+    // the smooth integrands, which converge on the pilot
+    let easy = &ests[0];
+    let hard = &ests[3];
+    assert!(
+        hard.n_samples > easy.n_samples,
+        "budget did not flow to the hard integrand: {easy:?} {hard:?}"
+    );
+    assert!(hard.rounds > easy.rounds);
+    // ... while spending well under the uniform-equivalent budget
+    let budget = (1u64 << 17) * jobs.len() as u64;
+    assert!(
+        report.total_samples < budget / 2,
+        "adaptive spent {} of {budget}",
+        report.total_samples
+    );
+    assert_eq!(
+        report.samples_per_round.iter().sum::<u64>(),
+        report.total_samples
+    );
+    assert!(report.launches > 0);
+    // one executable, two workers: at most one compile per worker no
+    // matter how many refinement rounds ran — stratified launches ride
+    // the warm caches
+    assert!(reg.compile_count() <= 2, "{}", reg.compile_count());
+}
+
+#[test]
+fn adaptive_estimates_are_consistent_with_truth() {
+    let (_, eng) = engine(1);
+    let jobs = vec![
+        IntegralJob::parse("x1^2", &[(0.0, 1.0)]).unwrap(), // 1/3
+        IntegralJob::parse("x1*x2", &[(0.0, 1.0), (0.0, 2.0)]).unwrap(), // 1
+        IntegralJob::parse("2", &[(0.0, 1.0)]).unwrap(), // 2 exactly
+    ];
+    let cfg = MultiConfig {
+        samples_per_fn: 1 << 15,
+        seed: 7,
+        target_rel_err: Some(1e-2),
+        target_abs_err: Some(1e-4),
+        ..Default::default()
+    };
+    let ests = multifunctions::integrate(&eng, &jobs, &cfg).unwrap();
+    assert!(ests[0].consistent_with(1.0 / 3.0, 6.0), "{:?}", ests[0]);
+    assert!(ests[1].consistent_with(1.0, 6.0), "{:?}", ests[1]);
+    // constant integrand: zero variance, converged on the pilot
+    assert!(ests[2].consistent_with(2.0, 6.0), "{:?}", ests[2]);
+    assert_eq!(ests[2].std_err, 0.0);
+    assert_eq!(ests[2].rounds, 1);
+}
+
+#[test]
+fn adaptive_is_deterministic() {
+    let jobs = mixed_jobs();
+    let cfg = MultiConfig {
+        samples_per_fn: 1 << 15,
+        seed: 99,
+        target_rel_err: Some(1e-2),
+        allocation: Allocation::Neyman,
+        ..Default::default()
+    };
+    let (_, e1) = engine(1);
+    let a = multifunctions::integrate(&e1, &jobs, &cfg).unwrap();
+    // fresh engine, more workers: same Philox addressing, same results
+    let (_, e2) = engine(3);
+    let b = multifunctions::integrate(&e2, &jobs, &cfg).unwrap();
+    for (x, y) in a.iter().zip(&b) {
+        assert_eq!(x.value, y.value);
+        assert_eq!(x.std_err, y.std_err);
+        assert_eq!(x.n_samples, y.n_samples);
+        assert_eq!(x.rounds, y.rounds);
+    }
+}
+
+#[test]
+fn no_target_spends_the_full_budget_adaptively() {
+    let (_, eng) = engine(1);
+    let jobs = vec![
+        IntegralJob::parse("x1 + 1", &[(0.0, 1.0)]).unwrap(),
+        IntegralJob::parse("x2*x2 + x1", &[(0.0, 1.0), (0.0, 1.0)])
+            .unwrap(),
+    ];
+    // no error target: pure budget shaping — the whole pool is spent
+    let cfg = MultiConfig {
+        samples_per_fn: 1 << 16,
+        seed: 11,
+        ..Default::default()
+    };
+    let (ests, report) =
+        adaptive::integrate_with_report(&eng, &jobs, &cfg).unwrap();
+    let budget = (1u64 << 16) * jobs.len() as u64;
+    assert_eq!(report.total_samples, budget);
+    assert_eq!(report.converged, 0);
+    for e in &ests {
+        assert!(e.n_samples > 0);
+        assert!(e.rounds >= 2);
+    }
+}
+
+#[test]
+fn adaptive_handles_empty_and_single_batches() {
+    let (_, eng) = engine(1);
+    let cfg = MultiConfig {
+        target_rel_err: Some(1e-2),
+        samples_per_fn: 1 << 14,
+        ..Default::default()
+    };
+    let empty = multifunctions::integrate(&eng, &[], &cfg).unwrap();
+    assert!(empty.is_empty());
+    let one = IntegralJob::parse("x1", &[(0.0, 1.0)]).unwrap();
+    let ests = multifunctions::integrate(&eng, &[one], &cfg).unwrap();
+    assert_eq!(ests.len(), 1);
+    assert!(ests[0].consistent_with(0.5, 6.0), "{:?}", ests[0]);
+}

@@ -127,6 +127,39 @@ fn integrate_monomial_end_to_end() {
 }
 
 #[test]
+fn integrate_adaptive_to_target() {
+    if !device_ok() {
+        return;
+    }
+    let out = zmc()
+        .args(with_artifacts(&[
+            "integrate",
+            "--expr",
+            "x1^2",
+            "--bounds",
+            "0,1",
+            "--samples",
+            "65536",
+            "--target-rel-err",
+            "0.01",
+        ]))
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("adaptive"), "{text}");
+    assert!(text.contains("rounds"), "{text}");
+    let val: f64 = text
+        .lines()
+        .find(|l| l.trim_start().starts_with("I ="))
+        .and_then(|l| l.split_whitespace().nth(2))
+        .unwrap()
+        .parse()
+        .unwrap();
+    assert!((val - 1.0 / 3.0).abs() < 0.02, "I = {val}");
+}
+
+#[test]
 fn init_config_then_run() {
     if !device_ok() {
         return;

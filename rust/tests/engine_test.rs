@@ -156,6 +156,80 @@ fn context_failure_is_recorded_and_job_survives() {
     assert!(errs[0].contains("simulated driver crash"));
 }
 
+/// Backend whose task 0 blocks until released (signalling `entered`
+/// first), making drop-cancellation tests deterministic.
+struct GatedBackend {
+    entered: Arc<(std::sync::Mutex<bool>, std::sync::Condvar)>,
+    release: Arc<(std::sync::Mutex<bool>, std::sync::Condvar)>,
+}
+
+impl Backend for GatedBackend {
+    type Ctx = ();
+    type Task = u64;
+    type Out = u64;
+
+    fn make_ctx(&self, _w: usize) -> Result<()> {
+        Ok(())
+    }
+
+    fn run(&self, _ctx: &(), t: &u64) -> Result<u64> {
+        if *t == 0 {
+            let (m, cv) = &*self.entered;
+            *m.lock().unwrap() = true;
+            cv.notify_all();
+            let (m, cv) = &*self.release;
+            let mut open = m.lock().unwrap();
+            while !*open {
+                open = cv.wait(open).unwrap();
+            }
+        }
+        Ok(*t)
+    }
+}
+
+#[test]
+fn dropped_handle_cancels_queued_tasks() {
+    let entered = Arc::new((
+        std::sync::Mutex::new(false),
+        std::sync::Condvar::new(),
+    ));
+    let release = Arc::new((
+        std::sync::Mutex::new(false),
+        std::sync::Condvar::new(),
+    ));
+    let engine = Engine::new(
+        GatedBackend {
+            entered: Arc::clone(&entered),
+            release: Arc::clone(&release),
+        },
+        EngineConfig::new(1),
+    )
+    .unwrap();
+    // task 0 blocks the only worker; tasks 1..=50 sit in the queue
+    let h = engine.submit((0..51).collect()).unwrap();
+    {
+        let (m, cv) = &*entered;
+        let mut e = m.lock().unwrap();
+        while !*e {
+            e = cv.wait(e).unwrap();
+        }
+    }
+    // dropping the un-awaited handle must purge all queued tasks so
+    // they never occupy the worker
+    drop(h);
+    assert_eq!(engine.metrics().cancelled(), 50);
+    {
+        let (m, cv) = &*release;
+        *m.lock().unwrap() = true;
+        cv.notify_all();
+    }
+    // the engine still serves later jobs normally
+    let out = engine.run((100..110).collect()).unwrap();
+    assert_eq!(out, (100..110).collect::<Vec<u64>>());
+    // only the in-hand task 0 and job B's 10 tasks ever executed
+    assert!(engine.metrics().done() <= 11, "{}", engine.metrics().done());
+}
+
 struct CountingCtx {
     ctx_builds: AtomicU64,
 }
