@@ -27,7 +27,8 @@ use anyhow::Result;
 
 use crate::adaptive::alloc::{apportion, Allocation};
 use crate::adaptive::strata::{partition_estimate, Stratum};
-use crate::engine::{DeviceEngine, LaunchTask};
+use crate::cluster::{reduce_tagged, LaunchExec};
+use crate::engine::LaunchTask;
 use crate::integrator::multifunctions::{split_seed, MultiConfig};
 use crate::integrator::spec::{Estimate, IntegralJob};
 use crate::runtime::launch::{vm_multi_inputs, RngCtr, VmFn};
@@ -79,17 +80,23 @@ struct FnState {
 /// Adaptive integration; returns one estimate per job, in order.
 /// See the module docs for the loop; [`integrate_with_report`] exposes
 /// the run diagnostics.
-pub fn integrate(
-    engine: &DeviceEngine,
+pub fn integrate<X: LaunchExec + ?Sized>(
+    exec: &X,
     jobs: &[IntegralJob],
     cfg: &MultiConfig,
 ) -> Result<Vec<Estimate>> {
-    Ok(integrate_with_report(engine, jobs, cfg)?.0)
+    Ok(integrate_with_report(exec, jobs, cfg)?.0)
 }
 
 /// [`integrate`] plus the batch-level [`AdaptiveReport`].
-pub fn integrate_with_report(
-    engine: &DeviceEngine,
+///
+/// Generic over [`LaunchExec`]: on a multi-engine cluster each round's
+/// slot list fans out as contiguous shards while the allocation step
+/// below stays centralized — the Neyman apportionment only ever sees
+/// the merged per-stratum moments, so the round structure (and every
+/// estimate) is bit-identical to the single-engine run.
+pub fn integrate_with_report<X: LaunchExec + ?Sized>(
+    exec: &X,
     jobs: &[IntegralJob],
     cfg: &MultiConfig,
 ) -> Result<(Vec<Estimate>, AdaptiveReport)> {
@@ -97,7 +104,7 @@ pub fn integrate_with_report(
     if jobs.is_empty() {
         return Ok((vec![], report));
     }
-    let reg = engine.registry();
+    let reg = exec.registry();
     let exe = match &cfg.exe {
         Some(name) => reg.get(name)?,
         None => {
@@ -138,7 +145,7 @@ pub fn integrate_with_report(
         }
     }
     let moments = run_remapped(
-        engine, exe, jobs, cfg, &slots, &mut next_stream, &mut launches,
+        exec, exe, jobs, cfg, &slots, &mut next_stream, &mut launches,
     )?;
     for ((fi, _), m) in slots.iter().zip(&moments) {
         state[*fi].strata[0].moments.merge(m);
@@ -193,7 +200,7 @@ pub fn integrate_with_report(
                 probes.push((fi, b.bounds));
             }
             let pm = run_remapped(
-                engine,
+                exec,
                 exe,
                 jobs,
                 cfg,
@@ -264,7 +271,7 @@ pub fn integrate_with_report(
             }
         }
         let moments = run_remapped(
-            engine, exe, jobs, cfg, &slots, &mut next_stream, &mut launches,
+            exec, exe, jobs, cfg, &slots, &mut next_stream, &mut launches,
         )?;
         for (&(fi, si), m) in owners.iter().zip(&moments) {
             state[fi].strata[si].moments.merge(m);
@@ -384,9 +391,11 @@ fn worst_stratum(strata: &[Stratum]) -> usize {
 /// box instead of the function's full domain, with a fresh Philox
 /// stream per slot (`base = 0`, so every slot covers the counter range
 /// `[0, exe.samples)` of its own stream). Reusing the cached `vm_multi`
-/// executables means refinement never compiles anything new.
-fn run_remapped(
-    engine: &DeviceEngine,
+/// executables means refinement never compiles anything new, and the
+/// per-slot streams make the task list shardable across a cluster's
+/// engines without any counter-range coordination.
+fn run_remapped<X: LaunchExec + ?Sized>(
+    exec: &X,
     exe: &ExeSpec,
     jobs: &[IntegralJob],
     cfg: &MultiConfig,
@@ -421,23 +430,10 @@ fn run_remapped(
         });
     }
     *launches += tasks.len();
-    let outs = engine.submit_with_retries(tasks, cfg.max_retries)?.wait()?;
-    let mut moments = vec![MomentSum::new(); slots.len()];
-    for out in outs {
-        let start = out.tag as usize * exe.n_fns;
-        for k in 0..exe.n_fns {
-            let i = start + k;
-            if i >= moments.len() {
-                break;
-            }
-            moments[i] = MomentSum::from_device(
-                exe.samples as u64,
-                out.data[k * 2],
-                out.data[k * 2 + 1],
-            );
-        }
-    }
-    Ok(moments)
+    let outs = exec.submit_launches(tasks, cfg.max_retries)?.wait()?;
+    // centralized reduce: merged per-slot moments feed the (also
+    // centralized) allocation step of the next round
+    Ok(reduce_tagged(outs, exe.n_fns, exe.samples as u64, slots.len()))
 }
 
 #[cfg(test)]

@@ -1,0 +1,509 @@
+//! The cluster: N persistent engines behind one `submit()` surface.
+//!
+//! Each engine models one device/host — its workers and their warm
+//! executable caches are private to it, exactly as in the single-engine
+//! path. [`Cluster::submit`] shards the ordered task list contiguously
+//! across the live engines ([`crate::cluster::plan::ShardPlan`]), fans
+//! the shards out as independent engine jobs, and the returned
+//! [`ClusterHandle`] stitches per-shard results back at their original
+//! positions, so `wait()` yields results in task order no matter how
+//! many engines ran them.
+//!
+//! Fault policy (the Ray node-loss model): a shard job that fails
+//! because its engine **died** (every worker exited —
+//! [`Engine::is_dead`]) marks that engine dead and requeues the whole
+//! shard onto the next surviving engine; idempotent Philox task
+//! addressing makes the rerun bit-exact. A job that fails on a *live*
+//! engine (a task drained its retry budget — a deterministic error
+//! would fail anywhere) surfaces its error directly, like the
+//! single-engine path. Every requeue is counted on the cluster's
+//! [`Metrics`] (`failure` + `retry`). With every engine dead the error
+//! of the last shard surfaces to the caller.
+
+use std::ops::Range;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Weak};
+
+use anyhow::{anyhow, Result};
+
+use crate::cluster::plan::ShardPlan;
+use crate::coordinator::progress::Metrics;
+use crate::engine::{Backend, DeviceBackend, Engine, JobHandle};
+use crate::runtime::device::DevicePool;
+use crate::runtime::registry::Registry;
+
+/// One engine plus its liveness flag (cleared on shard failure).
+struct EngineSlot<B: Backend> {
+    engine: Engine<B>,
+    alive: AtomicBool,
+}
+
+/// State shared between the cluster and its in-flight handles.
+pub(crate) struct ClusterShared<B: Backend> {
+    slots: Vec<EngineSlot<B>>,
+    metrics: Arc<Metrics>,
+}
+
+impl<B> ClusterShared<B>
+where
+    B: Backend + Send + Sync + 'static,
+    B::Task: Clone + Send + Sync + 'static,
+    B::Out: Send + 'static,
+{
+    fn alive_indices(&self) -> Vec<usize> {
+        (0..self.slots.len())
+            .filter(|&i| self.slots[i].alive.load(Ordering::Relaxed))
+            .collect()
+    }
+
+    fn mark_dead(&self, i: usize) {
+        self.slots[i].alive.store(false, Ordering::Relaxed);
+    }
+
+    /// Submit `tasks` to the first live engine at or after `preferred`
+    /// (wrapping); an engine whose submit fails synchronously is marked
+    /// dead and skipped, counted on the cluster metrics exactly like a
+    /// mid-round death (`failure` for the engine, `retry` for moving
+    /// the shard on). Errors when no live engine accepts the shard.
+    fn submit_to_alive(
+        &self,
+        tasks: &[B::Task],
+        preferred: usize,
+        max_retries: u32,
+    ) -> Result<(usize, JobHandle<B::Task, B::Out>)> {
+        let n = self.slots.len();
+        let mut last_err: Option<anyhow::Error> = None;
+        for off in 0..n {
+            let i = (preferred + off) % n;
+            let slot = &self.slots[i];
+            if !slot.alive.load(Ordering::Relaxed) {
+                continue;
+            }
+            match slot.engine.submit_with_retries(tasks.to_vec(), max_retries)
+            {
+                Ok(h) => return Ok((i, h)),
+                Err(e) => {
+                    slot.alive.store(false, Ordering::Relaxed);
+                    self.metrics.failure();
+                    self.metrics.retry();
+                    last_err = Some(e);
+                }
+            }
+        }
+        Err(match last_err {
+            Some(e) => e.context("no live engines left in the cluster"),
+            None => anyhow!("no live engines left in the cluster"),
+        })
+    }
+}
+
+/// A pool of N persistent engines with centralized shard planning and
+/// result reduction. A 1-engine cluster is the plain engine path: one
+/// shard covering the whole task list, no extra merge step.
+pub struct Cluster<B: Backend> {
+    shared: Arc<ClusterShared<B>>,
+    default_retries: u32,
+}
+
+impl<B> Cluster<B>
+where
+    B: Backend + Send + Sync + 'static,
+    B::Task: Clone + Send + Sync + 'static,
+    B::Out: Send + 'static,
+{
+    /// Assemble a cluster from already-spawned engines (each brings its
+    /// own fault plan and per-engine metrics).
+    pub fn from_engines(engines: Vec<Engine<B>>) -> Result<Cluster<B>> {
+        Cluster::with_metrics(engines, Arc::new(Metrics::new()))
+    }
+
+    /// [`Cluster::from_engines`] with an explicit cluster-level metrics
+    /// sink; shard requeues are recorded here (the engines keep their
+    /// own in-engine retry counts).
+    pub fn with_metrics(
+        engines: Vec<Engine<B>>,
+        metrics: Arc<Metrics>,
+    ) -> Result<Cluster<B>> {
+        if engines.is_empty() {
+            return Err(anyhow!("cluster needs >= 1 engine"));
+        }
+        let slots = engines
+            .into_iter()
+            .map(|engine| EngineSlot { engine, alive: AtomicBool::new(true) })
+            .collect();
+        Ok(Cluster {
+            shared: Arc::new(ClusterShared { slots, metrics }),
+            default_retries: 3,
+        })
+    }
+
+    pub fn n_engines(&self) -> usize {
+        self.shared.slots.len()
+    }
+
+    /// Engines not yet marked dead by a shard failure.
+    pub fn n_alive(&self) -> usize {
+        self.shared.alive_indices().len()
+    }
+
+    /// Cluster-level metrics: shard requeue failures/retries.
+    pub fn metrics(&self) -> &Metrics {
+        &self.shared.metrics
+    }
+
+    pub fn engine(&self, i: usize) -> &Engine<B> {
+        &self.shared.slots[i].engine
+    }
+
+    /// Shard `tasks` across the live engines and fan them out; returns
+    /// immediately with the stitching handle.
+    pub fn submit(&self, tasks: Vec<B::Task>) -> Result<ClusterHandle<B>> {
+        self.submit_with_retries(tasks, self.default_retries)
+    }
+
+    /// `submit` with an explicit per-shard-job retry budget (passed
+    /// through to each engine).
+    pub fn submit_with_retries(
+        &self,
+        tasks: Vec<B::Task>,
+        max_retries: u32,
+    ) -> Result<ClusterHandle<B>> {
+        let alive = self.shared.alive_indices();
+        if alive.is_empty() {
+            return Err(anyhow!("no live engines left in the cluster"));
+        }
+        let plan = ShardPlan::contiguous(tasks.len(), alive.len());
+        let mut shards = Vec::new();
+        for (k, range) in plan.iter().enumerate() {
+            if range.is_empty() {
+                continue;
+            }
+            let (engine, handle) = self.shared.submit_to_alive(
+                &tasks[range.clone()],
+                alive[k],
+                max_retries,
+            )?;
+            shards.push(ShardState { range, engine, handle: Some(handle) });
+        }
+        Ok(ClusterHandle {
+            tasks,
+            shards,
+            shared: Arc::downgrade(&self.shared),
+            max_retries,
+        })
+    }
+
+    /// Synchronous convenience: submit then wait.
+    pub fn run(&self, tasks: Vec<B::Task>) -> Result<Vec<B::Out>> {
+        self.submit(tasks)?.wait()
+    }
+}
+
+/// One in-flight shard: its task range, the engine currently running
+/// it, and the engine job handle.
+struct ShardState<B: Backend> {
+    range: Range<usize>,
+    engine: usize,
+    handle: Option<JobHandle<B::Task, B::Out>>,
+}
+
+/// Handle to one sharded submission. `wait()` awaits the shards in
+/// order, requeues any shard whose engine died onto a survivor, and
+/// returns results at their original task positions — the same
+/// contract as the single engine's [`JobHandle`]. Dropping the handle
+/// un-awaited cancels every outstanding shard job (each engine purges
+/// its queue), exactly like dropping a `JobHandle`.
+pub struct ClusterHandle<B: Backend> {
+    /// The full ordered task list, retained so a failed shard can be
+    /// requeued verbatim (tasks are idempotent: Philox addressing is
+    /// baked into each one). This is the price of requeueability: task
+    /// payloads exist twice while a job is in flight (here and in the
+    /// engines' job state). Sharing them instead would need the engine
+    /// job state to hold ranges of an `Arc<[Task]>` — worth doing if
+    /// launch payloads ever grow beyond their current few KB.
+    tasks: Vec<B::Task>,
+    shards: Vec<ShardState<B>>,
+    shared: Weak<ClusterShared<B>>,
+    max_retries: u32,
+}
+
+impl<B> ClusterHandle<B>
+where
+    B: Backend + Send + Sync + 'static,
+    B::Task: Clone + Send + Sync + 'static,
+    B::Out: Send + 'static,
+{
+    /// Block until every shard landed; results in task order. A shard
+    /// whose **engine died** is requeued onto the next surviving engine
+    /// (whole-shard rerun — exact, because tasks are idempotent); a
+    /// shard job that failed on a *healthy* engine (a task drained its
+    /// retry budget) surfaces its error directly, exactly like the
+    /// single-engine path — rerunning a deterministic failure elsewhere
+    /// would only cascade-kill the cluster. The requeue error surfaces
+    /// only when no engine is left to take the shard.
+    pub fn wait(mut self) -> Result<Vec<B::Out>> {
+        let n = self.tasks.len();
+        let mut results: Vec<Option<B::Out>> =
+            (0..n).map(|_| None).collect();
+        for s in self.shards.iter_mut() {
+            let mut handle =
+                s.handle.take().expect("unawaited shard has a handle");
+            let outs = loop {
+                match handle.wait() {
+                    Ok(outs) => break outs,
+                    Err(err) => {
+                        let shared = self.shared.upgrade().ok_or_else(
+                            || {
+                                anyhow!(
+                                    "cluster dropped with shards in flight"
+                                )
+                            },
+                        )?;
+                        // engine alive ⇒ the job itself failed (task
+                        // error past its retry budget): not a placement
+                        // problem, so don't burn the other engines on it
+                        if !shared.slots[s.engine].engine.is_dead() {
+                            return Err(err.context(format!(
+                                "shard {:?} failed on live engine {}",
+                                s.range, s.engine
+                            )));
+                        }
+                        shared.mark_dead(s.engine);
+                        shared.metrics.failure();
+                        let (engine, h) = shared
+                            .submit_to_alive(
+                                &self.tasks[s.range.clone()],
+                                s.engine + 1,
+                                self.max_retries,
+                            )
+                            .map_err(|e| {
+                                e.context(format!(
+                                    "no live engines left to requeue \
+                                     shard {:?} (engine {} failed: \
+                                     {err})",
+                                    s.range, s.engine
+                                ))
+                            })?;
+                        shared.metrics.retry();
+                        s.engine = engine;
+                        handle = h;
+                    }
+                }
+            };
+            for (slot, out) in
+                results[s.range.clone()].iter_mut().zip(outs)
+            {
+                *slot = Some(out);
+            }
+        }
+        Ok(results
+            .into_iter()
+            .map(|r| r.expect("every shard covers its range"))
+            .collect())
+    }
+
+    /// Non-blocking completion probe across all shards.
+    pub fn is_done(&self) -> bool {
+        self.shards
+            .iter()
+            .all(|s| s.handle.as_ref().map_or(true, |h| h.is_done()))
+    }
+
+    pub fn n_tasks(&self) -> usize {
+        self.tasks.len()
+    }
+
+    /// Shards this submission was planned into (empty ranges skipped).
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Cancel outstanding shard jobs (identical to dropping the handle
+    /// un-awaited: each engine purges its queued tasks).
+    pub fn cancel(self) {
+        drop(self);
+    }
+}
+
+/// The cluster every integrator runs on in production.
+pub type DeviceCluster = Cluster<DeviceBackend>;
+
+impl Cluster<DeviceBackend> {
+    /// N engines over the same artifact registry, each with the pool's
+    /// worker topology (`pool.n_devices` workers per engine) — one
+    /// engine per device/host of the paper's cluster.
+    pub fn for_pool(pool: &DevicePool, n_engines: usize) -> Result<Self> {
+        let engines = (0..n_engines.max(1))
+            .map(|_| Engine::for_pool(pool))
+            .collect::<Result<Vec<_>>>()?;
+        Cluster::from_engines(engines)
+    }
+
+    /// The artifact registry the cluster's engines execute from.
+    pub fn registry(&self) -> &Registry {
+        self.shared.slots[0].engine.registry()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::fault::FaultPlan;
+    use crate::engine::EngineConfig;
+
+    struct Mock;
+
+    impl Backend for Mock {
+        type Ctx = ();
+        type Task = u64;
+        type Out = u64;
+
+        fn make_ctx(&self, _w: usize) -> Result<()> {
+            Ok(())
+        }
+
+        fn run(&self, _ctx: &(), t: &u64) -> Result<u64> {
+            Ok(t.wrapping_mul(31).wrapping_add(7))
+        }
+    }
+
+    fn expect(tasks: &[u64]) -> Vec<u64> {
+        tasks.iter().map(|t| t.wrapping_mul(31).wrapping_add(7)).collect()
+    }
+
+    fn mock_cluster(n_engines: usize) -> Cluster<Mock> {
+        let engines = (0..n_engines)
+            .map(|_| Engine::new(Mock, EngineConfig::new(1)).unwrap())
+            .collect();
+        Cluster::from_engines(engines).unwrap()
+    }
+
+    #[test]
+    fn results_in_task_order_for_any_engine_count() {
+        let tasks: Vec<u64> = (0..97).collect();
+        for n in [1, 2, 3, 5, 8] {
+            let c = mock_cluster(n);
+            let out = c.run(tasks.clone()).unwrap();
+            assert_eq!(out, expect(&tasks), "n_engines={n}");
+        }
+    }
+
+    #[test]
+    fn empty_and_tiny_submissions() {
+        let c = mock_cluster(4);
+        assert!(c.run(vec![]).unwrap().is_empty());
+        // fewer tasks than engines: empty shards are skipped
+        let h = c.submit(vec![1, 2]).unwrap();
+        assert_eq!(h.n_shards(), 2);
+        assert_eq!(h.wait().unwrap(), expect(&[1, 2]));
+    }
+
+    #[test]
+    fn rejects_zero_engines() {
+        assert!(Cluster::<Mock>::from_engines(vec![]).is_err());
+    }
+
+    #[test]
+    fn dead_engine_shard_requeued_onto_survivor() {
+        // engine 1 dies on its first pull; its shard must migrate
+        let metrics = Arc::new(Metrics::new());
+        let engines = vec![
+            Engine::new(Mock, EngineConfig::new(1)).unwrap(),
+            Engine::with_policy(
+                Mock,
+                EngineConfig::new(1),
+                Arc::new(FaultPlan::kill(0, 0)),
+                Arc::new(Metrics::new()),
+            )
+            .unwrap(),
+        ];
+        let c = Cluster::with_metrics(engines, Arc::clone(&metrics)).unwrap();
+        let tasks: Vec<u64> = (0..40).collect();
+        let out = c.run(tasks.clone()).unwrap();
+        assert_eq!(out, expect(&tasks));
+        assert_eq!(c.n_alive(), 1);
+        assert!(metrics.retried() >= 1, "{}", metrics.summary());
+        assert_eq!(metrics.retried(), metrics.failed());
+    }
+
+    #[test]
+    fn all_engines_dead_surfaces_the_error() {
+        let engines = (0..2)
+            .map(|_| {
+                Engine::with_policy(
+                    Mock,
+                    EngineConfig::new(1),
+                    Arc::new(FaultPlan::kill(0, 0)),
+                    Arc::new(Metrics::new()),
+                )
+                .unwrap()
+            })
+            .collect();
+        let c = Cluster::from_engines(engines).unwrap();
+        let err = match c.submit((0..10).collect()) {
+            Ok(h) => h.wait().unwrap_err(),
+            // both engines may already be dead at submit time
+            Err(e) => e,
+        };
+        assert!(
+            err.to_string().contains("no live engines"),
+            "unexpected error: {err}"
+        );
+        assert_eq!(c.n_alive(), 0);
+    }
+
+    /// A task that fails deterministically (backend error, not worker
+    /// death) must surface once, not cascade-kill every engine.
+    struct BadThirteen;
+
+    impl Backend for BadThirteen {
+        type Ctx = ();
+        type Task = u64;
+        type Out = u64;
+
+        fn make_ctx(&self, _w: usize) -> Result<()> {
+            Ok(())
+        }
+
+        fn run(&self, _ctx: &(), t: &u64) -> Result<u64> {
+            if *t == 13 {
+                Err(anyhow!("bad artifact"))
+            } else {
+                Ok(*t)
+            }
+        }
+    }
+
+    #[test]
+    fn task_failure_on_live_engine_does_not_cascade() {
+        let engines = (0..3)
+            .map(|_| {
+                Engine::new(
+                    BadThirteen,
+                    EngineConfig { n_workers: 1, max_retries: 1 },
+                )
+                .unwrap()
+            })
+            .collect();
+        let c = Cluster::from_engines(engines).unwrap();
+        // task 13 lands in shard [10..20] on engine 1 and fails there
+        // past its retry budget while the engine's worker stays alive
+        let err = c.run((0..30).collect()).unwrap_err();
+        assert!(err.to_string().contains("live engine"), "{err}");
+        // no engine was blamed; the cluster still serves good batches
+        assert_eq!(c.n_alive(), 3);
+        assert_eq!(c.metrics().retried(), 0);
+        let ok: Vec<u64> = (20..40).collect();
+        assert_eq!(c.run(ok.clone()).unwrap(), ok);
+    }
+
+    #[test]
+    fn drop_unawaited_cancels_all_shards() {
+        let c = mock_cluster(3);
+        let h = c.submit((0..50).collect()).unwrap();
+        assert_eq!(h.n_tasks(), 50);
+        drop(h); // each shard's JobHandle cancels its engine job
+        let h2 = c.submit((0..6).collect()).unwrap();
+        assert_eq!(h2.wait().unwrap().len(), 6);
+    }
+}

@@ -1,0 +1,99 @@
+//! One submission surface for both topologies.
+//!
+//! The integrators ([`crate::integrator::multifunctions`], the
+//! [`crate::adaptive`] driver) build `vm_multi` launch tasks and do not
+//! care whether one engine or a cluster of engines runs them — only
+//! that results come back in task order. [`LaunchExec`] is that
+//! contract: implemented by [`DeviceEngine`] (the existing path,
+//! unchanged semantics) and by [`DeviceCluster`] (shard + fan-out +
+//! centralized reduce). A 1-engine cluster plans a single shard over
+//! the whole task list, so its behavior is the engine path by
+//! construction.
+//!
+//! The trait is object safe: the CLI holds a `Box<dyn LaunchExec>`
+//! picked by `--num-engines`.
+
+use anyhow::Result;
+
+use crate::cluster::core::{ClusterHandle, DeviceCluster};
+use crate::engine::{DeviceBackend, DeviceEngine, DeviceHandle, LaunchTask, TaggedOutput};
+use crate::runtime::registry::Registry;
+
+/// An in-flight launch set on either topology; same waiting contract
+/// as the engine's [`DeviceHandle`] (results in task order).
+pub enum ExecHandle {
+    Engine(DeviceHandle),
+    Cluster(ClusterHandle<DeviceBackend>),
+}
+
+impl ExecHandle {
+    /// Block until every launch landed; outputs in task order.
+    pub fn wait(self) -> Result<Vec<TaggedOutput>> {
+        match self {
+            ExecHandle::Engine(h) => h.wait(),
+            ExecHandle::Cluster(h) => h.wait(),
+        }
+    }
+
+    /// Non-blocking completion probe.
+    pub fn is_done(&self) -> bool {
+        match self {
+            ExecHandle::Engine(h) => h.is_done(),
+            ExecHandle::Cluster(h) => h.is_done(),
+        }
+    }
+
+    pub fn n_tasks(&self) -> usize {
+        match self {
+            ExecHandle::Engine(h) => h.n_tasks(),
+            ExecHandle::Cluster(h) => h.n_tasks(),
+        }
+    }
+
+    /// Cancel outstanding launches (same as dropping un-awaited).
+    pub fn cancel(self) {
+        drop(self);
+    }
+}
+
+/// Anything that can execute a batch of device launches: a single
+/// persistent engine or a multi-engine cluster.
+pub trait LaunchExec {
+    /// The artifact registry launches are resolved against.
+    fn registry(&self) -> &Registry;
+
+    /// Enqueue `tasks`; returns immediately with a waitable handle.
+    fn submit_launches(
+        &self,
+        tasks: Vec<LaunchTask>,
+        max_retries: u32,
+    ) -> Result<ExecHandle>;
+}
+
+impl LaunchExec for DeviceEngine {
+    fn registry(&self) -> &Registry {
+        self.backend().registry()
+    }
+
+    fn submit_launches(
+        &self,
+        tasks: Vec<LaunchTask>,
+        max_retries: u32,
+    ) -> Result<ExecHandle> {
+        Ok(ExecHandle::Engine(self.submit_with_retries(tasks, max_retries)?))
+    }
+}
+
+impl LaunchExec for DeviceCluster {
+    fn registry(&self) -> &Registry {
+        self.engine(0).backend().registry()
+    }
+
+    fn submit_launches(
+        &self,
+        tasks: Vec<LaunchTask>,
+        max_retries: u32,
+    ) -> Result<ExecHandle> {
+        Ok(ExecHandle::Cluster(self.submit_with_retries(tasks, max_retries)?))
+    }
+}

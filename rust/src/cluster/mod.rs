@@ -1,140 +1,42 @@
-//! Multi-device scaling model (paper claim C2: "performance scales
-//! linearly with the increasing of the GPUs").
+//! Multi-engine cluster layer — the paper's "performance scales
+//! linearly with the increasing of the GPUs" claim as a first-class
+//! subsystem instead of a simulation-only figure.
 //!
-//! The physical testbed has one CPU core, so adding real worker threads
-//! cannot demonstrate device scaling. Instead we keep the *scheduling
-//! logic* real and make *time* virtual: measure true per-chunk device
-//! durations once, then replay the coordinator's greedy FIFO assignment
-//! over N virtual devices with a discrete-event simulation, including the
-//! measured per-launch dispatch overhead. This reproduces exactly the
-//! quantity the paper plots — completion time of a fixed workload vs
-//! device count — with the real chunk structure and real measured costs.
+//! A [`Cluster`] owns N persistent [`crate::engine::Engine`]s, each
+//! modeling one device/host with its own workers and warm executable
+//! caches, behind the same `submit() -> handle` surface the single
+//! engine exposes. Submission splits the task list into contiguous
+//! per-engine shards ([`plan::ShardPlan`]); because every launch task
+//! carries its own Philox `(stream, counter base, trial)` addressing,
+//! shards sample **disjoint counter ranges by construction** and a
+//! task's output is independent of which engine runs it. The
+//! centralized reducer ([`reduce::reduce_tagged`]) folds the returned
+//! per-function/per-stratum [`crate::stats::MomentSum`]s back together
+//! in task order, so a K-engine run is **bit-identical** to the
+//! 1-engine run (floating-point merge order is preserved, not just the
+//! sample set — asserted by `tests/cluster_test.rs` for shard counts
+//! 1..8).
+//!
+//! Fault model: an engine whose shard job fails (all its workers died,
+//! or its retry budget drained) is marked dead and the whole shard is
+//! requeued onto a surviving engine — idempotent Philox addressing
+//! makes the rerun exact. Allocation stays centralized: the adaptive
+//! driver's Neyman step ([`crate::adaptive`]) sees merged moments only
+//! and never knows how many engines sampled them.
+//!
+//! [`sim`] keeps the original discrete-event scaling model (virtual
+//! devices, measured per-chunk durations) used by the C2 figure;
+//! `benches/cluster_scaling.rs` drives the *real* cluster and prices
+//! its shard plan with the same measured-time approach.
 
-/// One virtual device's clock.
-#[derive(Debug, Clone, Copy, Default)]
-struct Device {
-    free_at: f64,
-    busy: f64,
-}
+pub mod core;
+pub mod exec;
+pub mod plan;
+pub mod reduce;
+pub mod sim;
 
-/// Result of simulating a workload on N devices.
-#[derive(Debug, Clone)]
-pub struct SimResult {
-    pub n_devices: usize,
-    /// Wall-clock completion time (s).
-    pub makespan: f64,
-    /// Mean device utilization in [0,1].
-    pub utilization: f64,
-    /// Speedup vs the same workload on one device.
-    pub speedup: f64,
-}
-
-/// Greedy list-scheduling simulation (the coordinator's FIFO policy):
-/// each task goes to the earliest-free device; `dispatch_s` models the
-/// coordinator-side per-launch cost (literal building + PJRT dispatch),
-/// which serializes on the leader exactly as in the real scheduler.
-pub fn simulate(task_durations_s: &[f64], n_devices: usize, dispatch_s: f64) -> SimResult {
-    assert!(n_devices > 0);
-    let mut devices = vec![Device::default(); n_devices];
-    let mut leader_free = 0.0f64; // dispatch serializes on the leader
-    for &d in task_durations_s {
-        // pick earliest-free device
-        let dev = devices
-            .iter_mut()
-            .min_by(|a, b| a.free_at.total_cmp(&b.free_at))
-            .unwrap();
-        // dispatch happens on the leader, then the device runs
-        let dispatch_start = leader_free.max(0.0);
-        leader_free = dispatch_start + dispatch_s;
-        let start = leader_free.max(dev.free_at);
-        dev.free_at = start + d;
-        dev.busy += d;
-    }
-    let makespan = devices
-        .iter()
-        .map(|d| d.free_at)
-        .fold(0.0, f64::max)
-        .max(leader_free);
-    let total: f64 = task_durations_s.iter().sum();
-    let serial = total + dispatch_s * task_durations_s.len() as f64;
-    let utilization = if makespan > 0.0 {
-        devices.iter().map(|d| d.busy).sum::<f64>()
-            / (n_devices as f64 * makespan)
-    } else {
-        0.0
-    };
-    SimResult {
-        n_devices,
-        makespan,
-        utilization,
-        speedup: if makespan > 0.0 { serial / makespan } else { 1.0 },
-    }
-}
-
-/// Sweep device counts for the C2 figure.
-pub fn scaling_sweep(
-    task_durations_s: &[f64],
-    device_counts: &[usize],
-    dispatch_s: f64,
-) -> Vec<SimResult> {
-    device_counts
-        .iter()
-        .map(|&n| simulate(task_durations_s, n, dispatch_s))
-        .collect()
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    #[test]
-    fn one_device_is_serial() {
-        let r = simulate(&[1.0, 1.0, 1.0], 1, 0.0);
-        assert!((r.makespan - 3.0).abs() < 1e-12);
-        assert!((r.utilization - 1.0).abs() < 1e-12);
-    }
-
-    #[test]
-    fn equal_tasks_scale_linearly() {
-        let tasks = vec![1.0; 64];
-        let r1 = simulate(&tasks, 1, 0.0);
-        let r4 = simulate(&tasks, 4, 0.0);
-        let r8 = simulate(&tasks, 8, 0.0);
-        assert!((r1.makespan / r4.makespan - 4.0).abs() < 1e-9);
-        assert!((r1.makespan / r8.makespan - 8.0).abs() < 1e-9);
-    }
-
-    #[test]
-    fn dispatch_overhead_caps_scaling() {
-        // 64 tasks of 10ms with 5ms dispatch: leader saturates at
-        // 1/0.005 = 200 launches/s → max ~2 devices' worth of 10ms work.
-        let tasks = vec![0.010; 64];
-        let r16 = simulate(&tasks, 16, 0.005);
-        // makespan bounded below by leader serialization
-        assert!(r16.makespan >= 64.0 * 0.005);
-        let r2 = simulate(&tasks, 2, 0.005);
-        // going 2 → 16 devices cannot give 8x when the leader is the wall
-        assert!(r2.makespan / r16.makespan < 3.0);
-    }
-
-    #[test]
-    fn stragglers_break_perfect_scaling() {
-        // one long task dominates
-        let mut tasks = vec![0.01; 31];
-        tasks.push(1.0);
-        let r4 = simulate(&tasks, 4, 0.0);
-        assert!(r4.makespan >= 1.0);
-        assert!(r4.utilization < 0.9);
-    }
-
-    #[test]
-    fn sweep_shapes() {
-        let tasks = vec![0.5; 32];
-        let rs = scaling_sweep(&tasks, &[1, 2, 4, 8], 0.0);
-        assert_eq!(rs.len(), 4);
-        // monotone non-increasing makespan
-        for w in rs.windows(2) {
-            assert!(w[1].makespan <= w[0].makespan + 1e-12);
-        }
-    }
-}
+pub use self::core::{Cluster, ClusterHandle, DeviceCluster};
+pub use self::exec::{ExecHandle, LaunchExec};
+pub use self::plan::ShardPlan;
+pub use self::reduce::reduce_tagged;
+pub use self::sim::{scaling_sweep, simulate, SimResult};

@@ -1,0 +1,115 @@
+//! Shard planning: split an ordered task list into contiguous
+//! per-engine ranges.
+//!
+//! The plan is **positional**: shard k covers `ranges[k]` of the task
+//! list, and results are stitched back at the same positions, so the
+//! merge order of the reduced moments never depends on the shard count
+//! or on which engine finished first. Philox counter-range disjointness
+//! is inherited from the tasks themselves — every `LaunchTask` bakes
+//! its `(stream, counter base, trial)` addressing into its inputs at
+//! build time, so *any* partition of the list samples disjoint counter
+//! ranges; the plan only has to keep the list order intact.
+
+use std::ops::Range;
+
+/// Contiguous split of `n_items` tasks into at most `n_shards` ranges.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ShardPlan {
+    ranges: Vec<Range<usize>>,
+}
+
+impl ShardPlan {
+    /// Balanced contiguous plan: every shard gets `n_items / n_shards`
+    /// tasks and the first `n_items % n_shards` shards get one extra,
+    /// so shard sizes differ by at most one. Shards may be empty when
+    /// there are fewer items than shards.
+    pub fn contiguous(n_items: usize, n_shards: usize) -> ShardPlan {
+        assert!(n_shards > 0, "shard plan needs >= 1 shard");
+        let base = n_items / n_shards;
+        let extra = n_items % n_shards;
+        let mut ranges = Vec::with_capacity(n_shards);
+        let mut start = 0;
+        for k in 0..n_shards {
+            let len = base + usize::from(k < extra);
+            ranges.push(start..start + len);
+            start += len;
+        }
+        ShardPlan { ranges }
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.ranges.len()
+    }
+
+    pub fn n_items(&self) -> usize {
+        self.ranges.last().map_or(0, |r| r.end)
+    }
+
+    pub fn range(&self, shard: usize) -> Range<usize> {
+        self.ranges[shard].clone()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = Range<usize>> + '_ {
+        self.ranges.iter().cloned()
+    }
+
+    /// Largest shard size — the balance bound the scaling bench prices.
+    pub fn max_shard_len(&self) -> usize {
+        self.ranges.iter().map(|r| r.len()).max().unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Every item covered exactly once, in order, by adjacent ranges.
+    fn assert_partition(plan: &ShardPlan, n_items: usize) {
+        let mut next = 0;
+        for r in plan.iter() {
+            assert_eq!(r.start, next, "{plan:?}");
+            next = r.end;
+        }
+        assert_eq!(next, n_items);
+        assert_eq!(plan.n_items(), n_items);
+    }
+
+    #[test]
+    fn balanced_partition_for_all_small_shapes() {
+        for n_items in 0..40 {
+            for n_shards in 1..=8 {
+                let plan = ShardPlan::contiguous(n_items, n_shards);
+                assert_eq!(plan.n_shards(), n_shards);
+                assert_partition(&plan, n_items);
+                let lens: Vec<usize> =
+                    plan.iter().map(|r| r.len()).collect();
+                let (lo, hi) = (
+                    lens.iter().min().unwrap(),
+                    lens.iter().max().unwrap(),
+                );
+                assert!(hi - lo <= 1, "unbalanced {plan:?}");
+                assert_eq!(plan.max_shard_len(), *hi);
+            }
+        }
+    }
+
+    #[test]
+    fn one_shard_is_the_whole_list() {
+        let plan = ShardPlan::contiguous(17, 1);
+        assert_eq!(plan.range(0), 0..17);
+    }
+
+    #[test]
+    fn more_shards_than_items_leaves_empties() {
+        let plan = ShardPlan::contiguous(3, 8);
+        let lens: Vec<usize> = plan.iter().map(|r| r.len()).collect();
+        assert_eq!(lens[..3], [1, 1, 1]);
+        assert!(lens[3..].iter().all(|&l| l == 0));
+    }
+
+    #[test]
+    #[should_panic(expected = ">= 1 shard")]
+    fn zero_shards_panics() {
+        ShardPlan::contiguous(4, 0);
+    }
+}

@@ -1,0 +1,119 @@
+//! Centralized result reduction: fold tagged device outputs back into
+//! per-slot [`MomentSum`]s.
+//!
+//! Every `vm_multi` launch returns `(Σf, Σf²)` pairs for the function
+//! rows it carried, tagged with the block index its submitter assigned.
+//! Reduction is the same for every caller — the one-shot multifunction
+//! path (several counter-advancing chunks merge into one block), the
+//! adaptive driver (one launch row per stratum slot, merged before the
+//! next Neyman allocation step), and the cluster (shard outputs arrive
+//! already ordered, so reduction is oblivious to the engine count).
+//!
+//! Determinism: outputs are consumed **in task order** (engine jobs and
+//! cluster handles both guarantee it) and each row folds in via the
+//! pure [`MomentSum::merge`], so the merged sums are bit-identical for
+//! any worker count and any shard count — the property
+//! `tests/cluster_test.rs` checks for shard counts 1..8.
+
+use crate::engine::TaggedOutput;
+use crate::stats::MomentSum;
+
+/// Merge tagged launch outputs into `n_slots` moment accumulators.
+///
+/// Launch `out` with tag `t` carries `n_fns` rows; row `k` belongs to
+/// slot `t * n_fns + k` and contributes `samples_per_row` samples.
+/// Rows addressing slots past `n_slots` are padding (the last block of
+/// a batch is rarely full) and are skipped.
+pub fn reduce_tagged(
+    outs: impl IntoIterator<Item = TaggedOutput>,
+    n_fns: usize,
+    samples_per_row: u64,
+    n_slots: usize,
+) -> Vec<MomentSum> {
+    let mut moments = vec![MomentSum::new(); n_slots];
+    for out in outs {
+        let start = out.tag as usize * n_fns;
+        for k in 0..n_fns {
+            let slot = start + k;
+            if slot >= n_slots {
+                break;
+            }
+            moments[slot].merge(&MomentSum::from_device(
+                samples_per_row,
+                out.data[k * 2],
+                out.data[k * 2 + 1],
+            ));
+        }
+    }
+    moments
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    fn out(tag: u64, rows: &[(f32, f32)]) -> TaggedOutput {
+        let mut data = Vec::new();
+        for &(s, sq) in rows {
+            data.push(s);
+            data.push(sq);
+        }
+        TaggedOutput { tag, data, device_time: Duration::ZERO }
+    }
+
+    #[test]
+    fn chunks_of_one_block_accumulate() {
+        // two chunks of the same block: moments add up
+        let outs = vec![
+            out(0, &[(1.0, 1.0), (2.0, 4.0)]),
+            out(0, &[(3.0, 9.0), (4.0, 16.0)]),
+        ];
+        let m = reduce_tagged(outs, 2, 10, 2);
+        assert_eq!(m[0].n, 20);
+        assert_eq!(m[0].sum, 4.0);
+        assert_eq!(m[0].sumsq, 10.0);
+        assert_eq!(m[1].sum, 6.0);
+        assert_eq!(m[1].sumsq, 20.0);
+    }
+
+    #[test]
+    fn blocks_address_disjoint_slots_and_padding_is_skipped() {
+        let outs = vec![
+            out(0, &[(1.0, 1.0), (2.0, 4.0)]),
+            out(1, &[(5.0, 25.0), (99.0, 99.0)]), // second row = padding
+        ];
+        let m = reduce_tagged(outs, 2, 7, 3);
+        assert_eq!(m[0].sum, 1.0);
+        assert_eq!(m[1].sum, 2.0);
+        assert_eq!(m[2].sum, 5.0);
+        assert_eq!(m[2].n, 7);
+    }
+
+    #[test]
+    fn split_outputs_merge_like_the_whole() {
+        // the cluster property in miniature: reducing a shard-split
+        // output list in order is bit-identical to reducing it whole
+        let all: Vec<TaggedOutput> = (0..8)
+            .map(|t| {
+                out(t, &[((t as f32).sin(), (t as f32).cos().abs())])
+            })
+            .collect();
+        let whole = reduce_tagged(all.clone(), 1, 5, 8);
+        for cut in 1..8 {
+            let (a, b) = (all[..cut].to_vec(), all[cut..].to_vec());
+            let merged =
+                reduce_tagged(a.into_iter().chain(b), 1, 5, 8);
+            for (x, y) in whole.iter().zip(&merged) {
+                assert_eq!(x, y);
+            }
+        }
+    }
+
+    #[test]
+    fn empty_outputs_leave_zero_moments() {
+        let m = reduce_tagged(Vec::new(), 4, 100, 3);
+        assert_eq!(m.len(), 3);
+        assert!(m.iter().all(|x| x.n == 0));
+    }
+}

@@ -555,6 +555,17 @@ where
     pub fn n_workers(&self) -> usize {
         self.n_workers
     }
+
+    /// True once every worker has exited before shutdown: the engine
+    /// can run nothing further and submissions fail. Set *before* the
+    /// orphaned jobs are failed, so a job error observed by a caller
+    /// already reflects the engine's final state — the cluster layer
+    /// uses this to tell a dead engine (requeue the shard elsewhere)
+    /// from a healthy engine whose job legitimately failed (surface
+    /// the error).
+    pub fn is_dead(&self) -> bool {
+        self.shared.queue.lock().unwrap().dead
+    }
 }
 
 impl<B: Backend> Drop for Engine<B> {

@@ -8,7 +8,7 @@
 
 use anyhow::Result;
 
-use crate::engine::DeviceEngine;
+use crate::cluster::LaunchExec;
 use crate::integrator::multifunctions::{self, MultiConfig, MultiHandle};
 use crate::integrator::spec::{Estimate, IntegralJob};
 
@@ -41,10 +41,10 @@ pub fn linspace(lo: f64, hi: f64, n: usize) -> Vec<f64> {
 }
 
 /// Submit the scan (every parameter point as its own packed integrand)
-/// without waiting — points ride the warm engine concurrently with any
-/// other in-flight work.
-pub fn submit_scan(
-    engine: &DeviceEngine,
+/// without waiting — points ride the warm engine (or cluster)
+/// concurrently with any other in-flight work.
+pub fn submit_scan<X: LaunchExec + ?Sized>(
+    exec: &X,
     job: &IntegralJob,
     thetas: &[Vec<f64>],
     cfg: &MultiConfig,
@@ -53,18 +53,18 @@ pub fn submit_scan(
         .iter()
         .map(|t| job.bind(t))
         .collect::<Result<_>>()?;
-    multifunctions::submit(engine, &jobs, cfg)
+    multifunctions::submit(exec, &jobs, cfg)
 }
 
 /// Integrate `job`'s expression at every parameter point. Returns one
 /// estimate per point, in `thetas` order.
-pub fn scan(
-    engine: &DeviceEngine,
+pub fn scan<X: LaunchExec + ?Sized>(
+    exec: &X,
     job: &IntegralJob,
     thetas: &[Vec<f64>],
     cfg: &MultiConfig,
 ) -> Result<Vec<Estimate>> {
-    submit_scan(engine, job, thetas, cfg)?.wait()
+    submit_scan(exec, job, thetas, cfg)?.wait()
 }
 
 #[cfg(test)]

@@ -4,7 +4,8 @@
 //! dimensions, domains, parameters) by packing them into `vm_multi`
 //! artifact launches: F functions per launch, S samples per function per
 //! launch, chunked over the sample budget with advancing Philox counter
-//! bases, submitted to the persistent [`DeviceEngine`]. One launch
+//! bases, submitted to a persistent [`crate::engine::DeviceEngine`] or
+//! sharded over a [`crate::cluster::DeviceCluster`]. One launch
 //! evaluates F·S integrand samples — the batching that gives the paper's
 //! "10³ integrations in under 10 minutes" throughput, reproduced as
 //! experiment C1.
@@ -14,14 +15,21 @@
 //! * [`submit`] — asynchronous: returns a [`MultiHandle`] immediately,
 //!   so independent batches (different users, different trials) ride the
 //!   same warm engine concurrently and are awaited per-handle.
+//!
+//! Both are generic over [`LaunchExec`]: pass a
+//! [`crate::engine::DeviceEngine`] for the single-device path or a
+//! [`crate::cluster::DeviceCluster`] to shard the packed launches
+//! across engines — results are bit-identical either way (tasks carry
+//! disjoint Philox counter ranges and the reduce preserves task order).
 
 use anyhow::Result;
 
 use crate::adaptive::Allocation;
-use crate::engine::{DeviceEngine, DeviceHandle, LaunchTask};
+use crate::cluster::{reduce_tagged, ExecHandle, LaunchExec};
+use crate::engine::LaunchTask;
 use crate::integrator::spec::{Estimate, IntegralJob};
 use crate::runtime::launch::{vm_multi_inputs, RngCtr, VmFn};
-use crate::runtime::registry::ExeKind;
+use crate::runtime::registry::{ExeKind, ExeSpec, Registry};
 use crate::stats::MomentSum;
 
 /// Options for a multifunction run.
@@ -56,6 +64,15 @@ pub struct MultiConfig {
     pub pilot_samples: usize,
     /// How refinement rounds distribute the budget (adaptive mode).
     pub allocation: Allocation,
+    /// Requested execution topology: how many engines the caller should
+    /// put behind the batch (1 = single engine). **Advisory**: the
+    /// integrators never build engines — the topology of a call is
+    /// whatever `exec` you pass in, and this field does not override
+    /// it. Owners of the execution surface (the CLI's `--num-engines`,
+    /// job files, benches) read it to size the
+    /// [`crate::cluster::DeviceCluster`] they submit through. Results
+    /// are bit-identical for any value.
+    pub num_engines: usize,
 }
 
 impl Default for MultiConfig {
@@ -72,6 +89,7 @@ impl Default for MultiConfig {
             max_rounds: 12,
             pilot_samples: 1 << 12,
             allocation: Allocation::Neyman,
+            num_engines: 1,
         }
     }
 }
@@ -88,33 +106,26 @@ impl MultiConfig {
 /// In-flight multifunction batch: wait to get one [`Estimate`] per job,
 /// in submission order.
 pub struct MultiHandle {
-    inner: Option<DeviceHandle>,
+    inner: Option<ExecHandle>,
     n_fns: usize,
     samples: usize,
     volumes: Vec<f64>,
 }
 
 impl MultiHandle {
-    /// Block until every launch landed; merge `(Σf, Σf²)` per function
-    /// across chunks into estimates.
+    /// Block until every launch landed; the centralized reducer
+    /// ([`reduce_tagged`]) merges `(Σf, Σf²)` per function across
+    /// chunks — and across cluster shards — into estimates.
     pub fn wait(self) -> Result<Vec<Estimate>> {
-        let mut moments = vec![MomentSum::new(); self.volumes.len()];
-        if let Some(handle) = self.inner {
-            for out in handle.wait()? {
-                let block = out.tag as usize;
-                for f in 0..self.n_fns {
-                    let j = block * self.n_fns + f;
-                    if j >= moments.len() {
-                        break;
-                    }
-                    moments[j].merge(&MomentSum::from_device(
-                        self.samples as u64,
-                        out.data[f * 2],
-                        out.data[f * 2 + 1],
-                    ));
-                }
-            }
-        }
+        let moments = match self.inner {
+            Some(handle) => reduce_tagged(
+                handle.wait()?,
+                self.n_fns,
+                self.samples as u64,
+                self.volumes.len(),
+            ),
+            None => vec![MomentSum::new(); self.volumes.len()],
+        };
         Ok(moments
             .iter()
             .zip(&self.volumes)
@@ -151,21 +162,18 @@ impl MultiHandle {
     }
 }
 
-/// Submit a heterogeneous job set to the engine; returns immediately.
-pub fn submit(
-    engine: &DeviceEngine,
+/// Pack a job set into `vm_multi` launch tasks: F functions per launch
+/// row block, the sample budget chunked with advancing Philox counter
+/// bases. Every task's `(stream, base, trial)` addressing is baked into
+/// its inputs here, which is what makes task placement free — any
+/// engine (or cluster shard) may run any task and the sampled counter
+/// ranges stay disjoint. Exposed so benches/tests can drive the launch
+/// layer directly; returns the tasks plus the executable they target.
+pub fn build_tasks<'r>(
+    reg: &'r Registry,
     jobs: &[IntegralJob],
     cfg: &MultiConfig,
-) -> Result<MultiHandle> {
-    if jobs.is_empty() {
-        return Ok(MultiHandle {
-            inner: None,
-            n_fns: 1,
-            samples: 0,
-            volumes: vec![],
-        });
-    }
-    let reg = engine.registry();
+) -> Result<(Vec<LaunchTask>, &'r ExeSpec)> {
     let exe = match &cfg.exe {
         Some(name) => reg.get(name)?,
         None => {
@@ -204,12 +212,31 @@ pub fn submit(
             });
         }
     }
+    Ok((tasks, exe))
+}
 
-    let inner = engine.submit_with_retries(tasks, cfg.max_retries)?;
+/// Submit a heterogeneous job set to an engine or cluster; returns
+/// immediately.
+pub fn submit<X: LaunchExec + ?Sized>(
+    exec: &X,
+    jobs: &[IntegralJob],
+    cfg: &MultiConfig,
+) -> Result<MultiHandle> {
+    if jobs.is_empty() {
+        return Ok(MultiHandle {
+            inner: None,
+            n_fns: 1,
+            samples: 0,
+            volumes: vec![],
+        });
+    }
+    let (tasks, exe) = build_tasks(exec.registry(), jobs, cfg)?;
+    let (n_fns, samples) = (exe.n_fns, exe.samples);
+    let inner = exec.submit_launches(tasks, cfg.max_retries)?;
     Ok(MultiHandle {
         inner: Some(inner),
-        n_fns: exe.n_fns,
-        samples: exe.samples,
+        n_fns,
+        samples,
         volumes: jobs.iter().map(|j| j.volume()).collect(),
     })
 }
@@ -222,20 +249,20 @@ pub fn submit(
 /// instead of one-shot uniform sampling: the batch budget flows to the
 /// functions that still dominate the error, and each function stops as
 /// soon as its target is met.
-pub fn integrate(
-    engine: &DeviceEngine,
+pub fn integrate<X: LaunchExec + ?Sized>(
+    exec: &X,
     jobs: &[IntegralJob],
     cfg: &MultiConfig,
 ) -> Result<Vec<Estimate>> {
     if cfg.is_adaptive() {
-        return crate::adaptive::integrate(engine, jobs, cfg);
+        return crate::adaptive::integrate(exec, jobs, cfg);
     }
-    submit(engine, jobs, cfg)?.wait()
+    submit(exec, jobs, cfg)?.wait()
 }
 
 /// Convenience: single integrand.
-pub fn integrate_one(
-    engine: &DeviceEngine,
+pub fn integrate_one<X: LaunchExec + ?Sized>(
+    exec: &X,
     job: &IntegralJob,
     samples: usize,
     seed: u64,
@@ -245,7 +272,7 @@ pub fn integrate_one(
         seed,
         ..Default::default()
     };
-    Ok(integrate(engine, std::slice::from_ref(job), &cfg)?[0])
+    Ok(integrate(exec, std::slice::from_ref(job), &cfg)?[0])
 }
 
 /// Independent repeats (the paper's "10 independent evaluations"):
@@ -254,8 +281,8 @@ pub fn integrate_one(
 /// All trials are submitted up front and then awaited in order, so they
 /// interleave across the engine's workers instead of running strictly
 /// one after another.
-pub fn integrate_trials(
-    engine: &DeviceEngine,
+pub fn integrate_trials<X: LaunchExec + ?Sized>(
+    exec: &X,
     jobs: &[IntegralJob],
     cfg: &MultiConfig,
     trials: u32,
@@ -267,14 +294,14 @@ pub fn integrate_trials(
         return (0..trials)
             .map(|t| {
                 let c = MultiConfig { trial: cfg.trial + t, ..cfg.clone() };
-                integrate(engine, jobs, &c)
+                integrate(exec, jobs, &c)
             })
             .collect();
     }
     let handles: Vec<MultiHandle> = (0..trials)
         .map(|t| {
             let c = MultiConfig { trial: cfg.trial + t, ..cfg.clone() };
-            submit(engine, jobs, &c)
+            submit(exec, jobs, &c)
         })
         .collect::<Result<_>>()?;
     handles.into_iter().map(MultiHandle::wait).collect()

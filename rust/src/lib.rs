@@ -19,7 +19,10 @@
 //!   executable caches, a condvar-backed task queue, retry-on-failure
 //!   policy ([`coordinator`]), and concurrent `submit() -> JobHandle`
 //!   semantics — on which the paper's three integration classes
-//!   ([`integrator`]) are built.
+//!   ([`integrator`]) are built. Multi-device runs put a [`cluster`]
+//!   of engines behind the same submit surface: contiguous shards,
+//!   disjoint Philox counter ranges, centralized moment reduction —
+//!   bit-identical to the single engine at any engine count.
 //!
 //! ## The paper's three classes
 //!
@@ -59,6 +62,14 @@
 //! let h2 = zmc::integrator::multifunctions::submit(
 //!     &engine, std::slice::from_ref(&job), &cfg).unwrap();
 //! let (_a, _b) = (h1.wait().unwrap(), h2.wait().unwrap());
+//!
+//! // multi-device: the same calls accept a cluster of engines (the
+//! // CLI's `--num-engines N`); batches shard across engines with
+//! // disjoint Philox counter ranges and merge to bit-identical results
+//! let cluster = DeviceCluster::for_pool(&pool, 4).unwrap();
+//! let est4 = zmc::integrator::multifunctions::integrate_one(
+//!     &cluster, &job, 1 << 20, 42).unwrap();
+//! assert_eq!(est.value, est4.value);
 //! ```
 
 pub mod adaptive;
@@ -78,6 +89,10 @@ pub mod vm;
 /// Convenience re-exports for the common workflow.
 pub mod prelude {
     pub use crate::adaptive::Allocation;
+    pub use crate::cluster::{
+        Cluster, ClusterHandle, DeviceCluster, ExecHandle, LaunchExec,
+        ShardPlan,
+    };
     pub use crate::coordinator::scheduler::Scheduler;
     pub use crate::engine::{
         DeviceBackend, DeviceEngine, Engine, EngineConfig, JobHandle,

@@ -22,6 +22,7 @@ use std::sync::Arc;
 use anyhow::{anyhow, bail, Context, Result};
 
 use zmc::analytic;
+use zmc::cluster::{DeviceCluster, LaunchExec};
 use zmc::config::JobConfig;
 use zmc::engine::{DeviceEngine, Engine};
 use zmc::integrator::harmonic::{self, HarmonicBatch};
@@ -80,12 +81,17 @@ COMMANDS
 
 COMMON FLAGS
   --artifacts DIR   artifact directory     [artifacts]
-  --workers N       simulated devices      [1]
+  --workers N       simulated devices per engine [1]
+  --num-engines N   engines in the cluster (integrate/run) [1]
   --samples N       samples per function   [1048576]
   --trials N        independent repeats    [1]
   --seed N          RNG seed               [2021]
   --bounds \"l,h;l,h\"  per-dimension bounds
   --theta \"a,b,..\"  parameter bindings (p0, p1, ...)
+
+MULTI-ENGINE (integrate/run): --num-engines N shards every batch
+contiguously across N persistent engines (disjoint Philox counter
+ranges, centralized merge) — results are bit-identical to N=1.
 
 ADAPTIVE (integrate/run): setting an error target switches to the
 pilot-then-refine loop — the sample budget flows to the functions that
@@ -233,6 +239,23 @@ fn make_engine_n(flags: &Flags, workers: usize) -> Result<DeviceEngine> {
     Engine::for_pool(&pool)
 }
 
+/// The execution surface `--num-engines` selects: a single persistent
+/// engine (N = 1, the default) or a cluster of N engines, each with
+/// `--workers` workers. Both sides of the same [`LaunchExec`] trait,
+/// so every integrator call is topology-blind.
+fn make_exec(
+    flags: &Flags,
+    workers: usize,
+    num_engines: usize,
+) -> Result<Box<dyn LaunchExec>> {
+    if num_engines <= 1 {
+        return Ok(Box::new(make_engine_n(flags, workers)?));
+    }
+    let reg = load_registry(flags)?;
+    let pool = DevicePool::new(&reg, workers)?;
+    Ok(Box::new(DeviceCluster::for_pool(&pool, num_engines)?))
+}
+
 // ------------------------------------------------------------- commands
 
 fn cmd_info(flags: &Flags) -> Result<()> {
@@ -260,7 +283,6 @@ fn cmd_integrate(flags: &Flags) -> Result<()> {
         parse_bounds(flags.str("bounds").context("--bounds required")?)?;
     let theta = parse_theta(flags)?;
     let job = IntegralJob::with_params(expr, &bounds, &theta)?;
-    let engine = make_engine(flags)?;
     let samples = flags.usize("samples", 1 << 20)?;
     let trials = flags.usize("trials", 1)? as u32;
     let cfg = MultiConfig {
@@ -269,11 +291,18 @@ fn cmd_integrate(flags: &Flags) -> Result<()> {
         target_rel_err: flags.opt_f64("target-rel-err")?,
         target_abs_err: flags.opt_f64("target-abs-err")?,
         max_rounds: flags.usize("max-rounds", 12)?,
+        num_engines: flags.usize("num-engines", 1)?.max(1),
         ..Default::default()
     };
+    // the config's topology request decides the execution surface
+    let exec =
+        make_exec(flags, flags.usize("workers", 1)?, cfg.num_engines)?;
     let t0 = std::time::Instant::now();
     let per_trial = multifunctions::integrate_trials(
-        &engine, &[job.clone()], &cfg, trials,
+        exec.as_ref(),
+        &[job.clone()],
+        &cfg,
+        trials,
     )?;
     let dt = t0.elapsed();
     let mut w = Welford::new();
@@ -316,25 +345,32 @@ fn cmd_run(flags: &Flags) -> Result<()> {
     let path = flags.str("config").context("--config required")?;
     let cfg = JobConfig::from_file(path)?;
     let workers = flags.usize("workers", cfg.workers)?;
-    let engine = make_engine_n(flags, workers)?;
     let mcfg = MultiConfig {
         samples_per_fn: cfg.samples_per_fn,
         seed: cfg.seed,
         target_rel_err: flags.opt_f64("target-rel-err")?,
         target_abs_err: flags.opt_f64("target-abs-err")?,
         max_rounds: flags.usize("max-rounds", 12)?,
+        num_engines: flags.usize("num-engines", cfg.num_engines)?.max(1),
         ..Default::default()
     };
+    // the config's topology request decides the execution surface
+    let exec = make_exec(flags, workers, mcfg.num_engines)?;
     let t0 = std::time::Instant::now();
     let per_trial = multifunctions::integrate_trials(
-        &engine, &cfg.jobs, &mcfg, cfg.trials,
+        exec.as_ref(),
+        &cfg.jobs,
+        &mcfg,
+        cfg.trials,
     )?;
     let dt = t0.elapsed();
     println!(
-        "{} functions x {} trials x {} samples on {} workers: {:.3}s",
+        "{} functions x {} trials x {} samples on {} engine(s) x {} \
+         worker(s): {:.3}s",
         cfg.jobs.len(),
         cfg.trials,
         cfg.samples_per_fn,
+        mcfg.num_engines,
         workers,
         dt.as_secs_f64()
     );

@@ -31,6 +31,14 @@ impl MomentSum {
         self.sumsq += v * v;
     }
 
+    /// The one merge primitive of the whole pipeline: chunk outputs
+    /// fold into function moments, stratum launches fold into strata
+    /// ([`crate::adaptive`]), and the cluster reducer
+    /// ([`crate::cluster::reduce_tagged`]) folds shard outputs — all
+    /// through this pure accumulation. It is commutative bit-exactly
+    /// (f64 `+` is); associativity holds only up to rounding, which is
+    /// why every caller merges in task order rather than completion
+    /// order.
     pub fn merge(&mut self, other: &MomentSum) {
         self.n += other.n;
         self.sum += other.sum;
@@ -184,6 +192,21 @@ mod tests {
         assert_eq!(a.n, whole.n);
         assert!((a.sum - whole.sum).abs() < 1e-9);
         assert!((a.sumsq - whole.sumsq).abs() < 1e-9);
+    }
+
+    #[test]
+    fn moment_merge_commutes_bitwise() {
+        // the cluster reducer's correctness leans on this: a ⊕ b and
+        // b ⊕ a are the same f64s exactly, so shard placement cannot
+        // perturb a merged moment (order of the *sequence* still
+        // matters — associativity is only up to rounding — which is
+        // why reduction walks outputs in task order)
+        let a = MomentSum { n: 3, sum: 0.1 + 0.2, sumsq: 0.30000301 };
+        let b = MomentSum { n: 7, sum: -1.7, sumsq: 2.89 };
+        let (mut ab, mut ba) = (a, b);
+        ab.merge(&b);
+        ba.merge(&a);
+        assert_eq!(ab, ba);
     }
 
     #[test]

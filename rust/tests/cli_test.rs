@@ -160,6 +160,43 @@ fn integrate_adaptive_to_target() {
 }
 
 #[test]
+fn integrate_num_engines_matches_single_engine() {
+    if !device_ok() {
+        return;
+    }
+    let run = |engines: &str| -> String {
+        let out = zmc()
+            .args(with_artifacts(&[
+                "integrate",
+                "--expr",
+                "sin(x1)*x2",
+                "--bounds",
+                "0,3.1416;0,1",
+                "--samples",
+                "32768",
+                "--num-engines",
+                engines,
+            ]))
+            .output()
+            .unwrap();
+        assert!(
+            out.status.success(),
+            "{}",
+            String::from_utf8_lossy(&out.stderr)
+        );
+        String::from_utf8_lossy(&out.stdout)
+            .lines()
+            .find(|l| l.trim_start().starts_with("I ="))
+            .unwrap()
+            .to_string()
+    };
+    // sharding across engines must not perturb the reported estimate
+    let single = run("1");
+    let quad = run("4");
+    assert_eq!(single, quad, "cluster CLI output diverged");
+}
+
+#[test]
 fn init_config_then_run() {
     if !device_ok() {
         return;

@@ -1,0 +1,358 @@
+//! Cluster-layer merge verification on the CPU emulator backend:
+//!
+//! * **bit-exactness** — for any multifunction batch and any shard
+//!   count 1..8, the cluster's merged `MomentSum`s and the final
+//!   `Estimate`s are bit-identical to the 1-engine run over the same
+//!   Philox counter ranges (shard planning preserves task order, so
+//!   the floating-point merge sequence is identical, not just the
+//!   sample set);
+//! * **fault tolerance** — an engine whose workers die mid-round has
+//!   its shard requeued onto the surviving engines, the job completes
+//!   with the exact fault-free results, and the cluster `Metrics`
+//!   records the retries;
+//! * **adaptive parity** — Genz oscillatory/corner-peak batches hit
+//!   the same `target_rel_err` with the same total sample spend
+//!   (±1 round) on 1 vs 4 engines, because the Neyman allocation step
+//!   stays centralized over merged moments.
+//!
+//! Emulator-only (`--features pjrt` skips: synthetic HLO bodies).
+#![cfg(not(feature = "pjrt"))]
+
+use std::sync::Arc;
+
+use zmc::adaptive;
+use zmc::cluster::{reduce_tagged, Cluster, DeviceCluster, LaunchExec};
+use zmc::coordinator::fault::FaultPlan;
+use zmc::coordinator::progress::Metrics;
+use zmc::engine::{DeviceEngine, Engine};
+use zmc::integrator::multifunctions::{self, MultiConfig};
+use zmc::integrator::spec::{Estimate, IntegralJob};
+use zmc::runtime::device::DevicePool;
+use zmc::runtime::registry::Registry;
+use zmc::util::proptest::{check, Gen};
+
+fn engine() -> DeviceEngine {
+    let reg = Arc::new(Registry::emulated());
+    let pool = DevicePool::new(&reg, 1).unwrap();
+    Engine::for_pool(&pool).unwrap()
+}
+
+fn cluster(n_engines: usize) -> DeviceCluster {
+    let reg = Arc::new(Registry::emulated());
+    let pool = DevicePool::new(&reg, 1).unwrap();
+    DeviceCluster::for_pool(&pool, n_engines).unwrap()
+}
+
+/// Heterogeneous integrand pool (dims 1–3, smooth and peaked).
+fn job_pool() -> Vec<IntegralJob> {
+    let u1 = [(0.0, 1.0)];
+    let u2 = [(0.0, 1.0), (0.0, 1.0)];
+    let u3 = [(0.0, 1.0), (0.0, 1.0), (0.0, 1.0)];
+    vec![
+        IntegralJob::parse("x1^2 + 1", &u1).unwrap(),
+        IntegralJob::parse("sin(x1)*x2", &u2).unwrap(),
+        IntegralJob::with_params("exp(-p0*(x1+x2))", &u2, &[1.5]).unwrap(),
+        IntegralJob::with_params(
+            "1/(p0 + (x1-0.5)^2 + (x2-0.5)^2)",
+            &u2,
+            &[0.05],
+        )
+        .unwrap(),
+        IntegralJob::parse("x1*x2*x3 + cos(x2)", &u3).unwrap(),
+        IntegralJob::with_params("p0*abs(x1+x2-1)", &u2, &[2.0]).unwrap(),
+    ]
+}
+
+fn assert_estimates_bit_identical(a: &[Estimate], b: &[Estimate], ctx: &str) {
+    assert_eq!(a.len(), b.len(), "{ctx}");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(
+            x.value.to_bits(),
+            y.value.to_bits(),
+            "{ctx}: fn {i} value {} vs {}",
+            x.value,
+            y.value
+        );
+        assert_eq!(
+            x.std_err.to_bits(),
+            y.std_err.to_bits(),
+            "{ctx}: fn {i} std_err"
+        );
+        assert_eq!(x.n_samples, y.n_samples, "{ctx}: fn {i} n_samples");
+        assert_eq!(x.rounds, y.rounds, "{ctx}: fn {i} rounds");
+    }
+}
+
+/// The tentpole property: for a random batch and random sampling
+/// config, every shard count 1..8 reproduces the single-engine
+/// estimates bit-for-bit.
+#[test]
+fn cluster_estimates_bit_identical_for_shard_counts_1_to_8() {
+    let pool = job_pool();
+    let reference = engine();
+    check(0xC1057E4, 5, |g: &mut Gen| {
+        let n_jobs = 1 + g.below(pool.len());
+        let first = g.below(pool.len());
+        let jobs: Vec<IntegralJob> = (0..n_jobs)
+            .map(|i| pool[(first + i) % pool.len()].clone())
+            .collect();
+        let cfg = MultiConfig {
+            // 1–3 chunks per function block at 4096 samples/launch
+            samples_per_fn: (1 + g.below(3)) << 12,
+            seed: g.next_u64(),
+            trial: g.below(4) as u32,
+            stream_base: g.below(64) as u32,
+            ..Default::default()
+        };
+        let base = multifunctions::integrate(&reference, &jobs, &cfg)
+            .unwrap();
+        for k in 1..=8usize {
+            let c = cluster(k);
+            let got = multifunctions::integrate(&c, &jobs, &cfg).unwrap();
+            assert_estimates_bit_identical(
+                &base,
+                &got,
+                &format!("{k} engines"),
+            );
+        }
+    });
+}
+
+/// Same property one layer down: the merged `MomentSum`s coming out of
+/// the centralized reducer are bit-identical for every shard count.
+#[test]
+fn merged_moment_sums_bit_identical_across_shard_counts() {
+    let reg = Arc::new(Registry::emulated());
+    let jobs = job_pool();
+    let cfg = MultiConfig {
+        samples_per_fn: 3 << 12,
+        seed: 99,
+        exe: Some("vm_multi_f8_s4096".into()),
+        ..Default::default()
+    };
+    let (tasks, exe) =
+        multifunctions::build_tasks(&reg, &jobs, &cfg).unwrap();
+    assert!(tasks.len() >= 3, "want a multi-launch batch");
+    let (n_fns, samples) = (exe.n_fns, exe.samples as u64);
+
+    let outs = LaunchExec::submit_launches(&engine(), tasks.clone(), 3)
+        .unwrap()
+        .wait()
+        .unwrap();
+    let base = reduce_tagged(outs, n_fns, samples, jobs.len());
+    assert!(base.iter().all(|m| m.n > 0));
+
+    for k in 1..=8usize {
+        let c = cluster(k);
+        let outs = LaunchExec::submit_launches(&c, tasks.clone(), 3)
+            .unwrap()
+            .wait()
+            .unwrap();
+        let merged = reduce_tagged(outs, n_fns, samples, jobs.len());
+        assert_eq!(base, merged, "{k} engines");
+    }
+}
+
+/// A 1-engine cluster *is* the engine path (the plan is one shard over
+/// the whole task list) — the CLI's `--num-engines 1` default changes
+/// nothing.
+#[test]
+fn one_engine_cluster_is_the_engine_path() {
+    let jobs = job_pool();
+    let cfg = MultiConfig {
+        samples_per_fn: 1 << 13,
+        seed: 4242,
+        ..Default::default()
+    };
+    let a = multifunctions::integrate(&engine(), &jobs, &cfg).unwrap();
+    let b = multifunctions::integrate(&cluster(1), &jobs, &cfg).unwrap();
+    assert_estimates_bit_identical(&a, &b, "1-engine cluster");
+}
+
+/// Kill one engine's workers mid-round: its shard must be requeued
+/// onto the surviving engines, the batch must complete with the exact
+/// fault-free results, and the cluster metrics must record the retry.
+#[test]
+fn engine_death_mid_round_requeues_shard_onto_survivors() {
+    let jobs = job_pool()[..2].to_vec(); // 1 block of vm_multi rows
+    let cfg = MultiConfig {
+        // 9 chunks of 4096 → 9 launches → shards of 3 per engine
+        samples_per_fn: 9 << 12,
+        seed: 2021,
+        exe: Some("vm_multi_f8_s4096".into()),
+        ..Default::default()
+    };
+    let clean = multifunctions::integrate(&cluster(3), &jobs, &cfg)
+        .unwrap();
+
+    let reg = Arc::new(Registry::emulated());
+    let pool = DevicePool::new(&reg, 1).unwrap();
+    let mk = |fault: FaultPlan| {
+        Engine::for_pool_with(
+            &pool,
+            3,
+            Arc::new(fault),
+            Arc::new(Metrics::new()),
+        )
+        .unwrap()
+    };
+    // engine 1's only worker dies after 2 attempts — mid-shard
+    let engines = vec![
+        mk(FaultPlan::none()),
+        mk(FaultPlan::kill(0, 2)),
+        mk(FaultPlan::none()),
+    ];
+    let metrics = Arc::new(Metrics::new());
+    let c = Cluster::with_metrics(engines, Arc::clone(&metrics)).unwrap();
+
+    let got = multifunctions::integrate(&c, &jobs, &cfg).unwrap();
+    assert_estimates_bit_identical(&clean, &got, "after engine death");
+    assert_eq!(c.n_alive(), 2, "dead engine must be retired");
+    assert!(
+        metrics.retried() >= 1,
+        "cluster metrics must record the shard requeue: {}",
+        metrics.summary()
+    );
+    assert_eq!(metrics.retried(), metrics.failed());
+}
+
+/// With every engine dead the failure surfaces instead of hanging.
+#[test]
+fn cluster_with_all_engines_dead_errors_out() {
+    let reg = Arc::new(Registry::emulated());
+    let pool = DevicePool::new(&reg, 1).unwrap();
+    let engines = (0..2)
+        .map(|_| {
+            Engine::for_pool_with(
+                &pool,
+                3,
+                Arc::new(FaultPlan::kill(0, 0)),
+                Arc::new(Metrics::new()),
+            )
+            .unwrap()
+        })
+        .collect();
+    let c = Cluster::from_engines(engines).unwrap();
+    let jobs = job_pool()[..1].to_vec();
+    let cfg = MultiConfig {
+        samples_per_fn: 4 << 12,
+        exe: Some("vm_multi_f8_s4096".into()),
+        ..Default::default()
+    };
+    let err = match multifunctions::submit(&c, &jobs, &cfg) {
+        Ok(h) => match h.wait() {
+            Ok(_) => panic!("dead cluster must not produce results"),
+            Err(e) => e,
+        },
+        Err(e) => e,
+    };
+    assert!(
+        err.to_string().contains("no live engines"),
+        "unexpected error: {err}"
+    );
+}
+
+/// Genz oscillatory + corner-peak batches: the adaptive driver on a
+/// 4-engine cluster must hit the same `target_rel_err` with the same
+/// total sample spend (±1 round) as on 1 engine — allocation is
+/// centralized, only the sampling fans out.
+#[test]
+fn adaptive_on_cluster_converges_with_equal_spend() {
+    let u2 = [(0.0, 1.0), (0.0, 1.0)];
+    let mut jobs = Vec::new();
+    // oscillatory: cos(2πu + c1·x1 + c2·x2) at rising frequency
+    // (scales kept moderate so |I| stays O(1) and the relative target
+    // is reachable inside the budget)
+    for scale in [1.0, 2.0] {
+        jobs.push(
+            IntegralJob::with_params(
+                "cos(2*pi*p0 + p1*x1 + p2*x2)",
+                &u2,
+                &[0.25, scale * 1.3, scale * 0.7],
+            )
+            .unwrap(),
+        );
+    }
+    // corner peak: (1 + c1·x1 + c2·x2)^-(d+1)
+    for scale in [1.0, 3.0] {
+        jobs.push(
+            IntegralJob::with_params(
+                "1/(1 + p0*x1 + p1*x2)^3",
+                &u2,
+                &[scale, scale * 0.6],
+            )
+            .unwrap(),
+        );
+    }
+    let cfg = MultiConfig {
+        samples_per_fn: 1 << 17,
+        seed: 777,
+        target_rel_err: Some(1e-2),
+        ..Default::default()
+    };
+    let (e1, r1) =
+        adaptive::integrate_with_report(&cluster(1), &jobs, &cfg).unwrap();
+    let (e4, r4) =
+        adaptive::integrate_with_report(&cluster(4), &jobs, &cfg).unwrap();
+
+    for (i, e) in e1.iter().chain(e4.iter()).enumerate() {
+        assert!(
+            e.std_err <= 1e-2 * e.value.abs(),
+            "fn {i} missed target: {e:?}"
+        );
+    }
+    assert_eq!(r1.converged, jobs.len());
+    assert_eq!(r4.converged, jobs.len());
+    // same centralized allocation → same spend, same round structure
+    assert_eq!(
+        r1.total_samples, r4.total_samples,
+        "sample spend must not depend on the engine count"
+    );
+    assert!(
+        (r1.rounds as i64 - r4.rounds as i64).abs() <= 1,
+        "rounds diverged: {} vs {}",
+        r1.rounds,
+        r4.rounds
+    );
+    assert_estimates_bit_identical(&e1, &e4, "adaptive 1 vs 4 engines");
+}
+
+/// Concurrent batches from multiple threads shard onto the same
+/// cluster and each resolves to its own exact result (the engine-level
+/// concurrency contract survives the cluster layer).
+#[test]
+fn concurrent_batches_on_one_cluster() {
+    let c = Arc::new(cluster(3));
+    let jobs = Arc::new(job_pool());
+    let expected: Vec<Vec<Estimate>> = (0..4u64)
+        .map(|t| {
+            let cfg = MultiConfig {
+                samples_per_fn: 1 << 12,
+                seed: 1000 + t,
+                ..Default::default()
+            };
+            multifunctions::integrate(&engine(), &jobs, &cfg).unwrap()
+        })
+        .collect();
+    let handles: Vec<_> = (0..4u64)
+        .map(|t| {
+            let (c, jobs) = (Arc::clone(&c), Arc::clone(&jobs));
+            std::thread::spawn(move || {
+                let cfg = MultiConfig {
+                    samples_per_fn: 1 << 12,
+                    seed: 1000 + t,
+                    ..Default::default()
+                };
+                multifunctions::integrate(&*c, &jobs, &cfg).unwrap()
+            })
+        })
+        .collect();
+    for (t, h) in handles.into_iter().enumerate() {
+        let got = h.join().unwrap();
+        assert_estimates_bit_identical(
+            &expected[t],
+            &got,
+            &format!("thread {t}"),
+        );
+    }
+}
