@@ -65,12 +65,16 @@ fn main() -> anyhow::Result<()> {
         multifunctions::integrate(&engine, &jobs, &cfg).unwrap();
     });
     let fns_per_min = n_funcs as f64 / t.mean_s * 60.0;
+    // per-sample attribution: future hot-path regressions show up here
+    // before they move the batch wall time
+    let ns_per_sample = t.mean_s / (n_funcs * samples) as f64 * 1e9;
     b.row(
         "packed_v5.1",
         &[
             ("funcs", n_funcs.to_string()),
             ("samples", samples.to_string()),
             ("wall", fmt_s(t.mean_s)),
+            ("ns_per_sample", format!("{ns_per_sample:.1}")),
             ("fns_per_min", format!("{fns_per_min:.0}")),
             (
                 "extrap_1000fns",
@@ -105,6 +109,10 @@ fn main() -> anyhow::Result<()> {
             ("funcs", sub.len().to_string()),
             ("wall", fmt_s(t1.mean_s)),
             ("per_fn", fmt_s(per_fn_1)),
+            (
+                "ns_per_sample",
+                format!("{:.1}", per_fn_1 / samples as f64 * 1e9),
+            ),
             (
                 "packing_speedup",
                 format!("{:.1}x", per_fn_1 / per_fn_packed),

@@ -1,0 +1,236 @@
+//! Bench: the optimizing VM pipeline (PR 4) — single-core samples/sec
+//! on a Genz multifunction batch, plan path vs the pre-plan stack
+//! interpreter, with per-family ns/sample attribution.
+//!
+//! The naive leg reproduces the pre-plan emulator launch exactly:
+//! per-launch program decode from device rows, a fresh `BatchInterp`
+//! and sample-column allocation per launch, per-sample `point()`
+//! uniforms, full stack-row traffic per opcode. The plan leg is what
+//! `runtime/emulator.rs` runs now: decode+lower once, block-major
+//! Philox column fill, fused register-based execution over reusable
+//! scratch. Both legs produce bit-identical moment sums (asserted).
+//!
+//! Gate: overall plan/naive speedup must be ≥ `ZMC_VMP_GATE`
+//! (default 2.5; CI's regression leg runs with 1.0 — the plan path may
+//! never be slower than the naive interpreter).
+//!
+//! Env knobs: ZMC_VMP_SAMPLES (per function), ZMC_VMP_LAUNCH (samples
+//! per launch), ZMC_VMP_GATE.
+
+use zmc::abi::MAX_DIM;
+use zmc::runtime::emulator::{moment_sums_naive, moment_sums_plan};
+use zmc::sampler::StreamKey;
+use zmc::util::bench::{time, Bench};
+use zmc::vm::interp::BatchInterp;
+use zmc::vm::plan::{ExecPlan, PlanScratch};
+use zmc::vm::program::{Instr, Program};
+use zmc::vm::Op;
+
+const CHUNK: usize = 2048;
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn env_f64(key: &str, default: f64) -> f64 {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+struct Fam {
+    name: &'static str,
+    prog: Program,
+    theta: Vec<f32>,
+    lo: Vec<f32>,
+    hi: Vec<f32>,
+    stream: u32,
+}
+
+/// The standard Genz battery (oscillatory, product peak, Gaussian,
+/// corner peak, continuous) at the paper's sub-5-dimensional regime.
+fn genz_batch() -> Vec<Fam> {
+    let mk = |name, src: &str, dims: usize, theta: Vec<f32>, stream| {
+        let prog = zmc::expr::Expr::parse(src)
+            .unwrap_or_else(|e| panic!("{name}: {e}"))
+            .compile()
+            .unwrap_or_else(|e| panic!("{name}: {e}"));
+        assert!(prog.dims == dims, "{name}: dims {} != {dims}", prog.dims);
+        Fam {
+            name,
+            prog,
+            theta: {
+                let mut t = theta;
+                t.resize(16, 0.0);
+                t
+            },
+            lo: vec![0.0; dims],
+            hi: vec![1.0; dims],
+            stream,
+        }
+    };
+    vec![
+        mk(
+            "oscillatory_d5",
+            "cos(2*pi*p0 + p1*x1 + p2*x2 + p3*x3 + p4*x4 + p5*x5)",
+            5,
+            vec![0.25, 1.3, 0.9, 0.7, 1.1, 0.5],
+            11,
+        ),
+        mk(
+            "product_peak_d4",
+            "1/((p0^-2 + (x1-p4)^2) * (p1^-2 + (x2-p5)^2) \
+             * (p2^-2 + (x3-p6)^2) * (p3^-2 + (x4-p7)^2))",
+            4,
+            vec![2.0, 3.0, 1.5, 2.5, 0.35, 0.65, 0.5, 0.4],
+            12,
+        ),
+        mk(
+            "gaussian_d3",
+            "exp(-(p0*p0*(x1-p3)^2 + p1*p1*(x2-p4)^2 + p2*p2*(x3-p5)^2))",
+            3,
+            vec![1.5, 2.5, 1.0, 0.5, 0.5, 0.5],
+            13,
+        ),
+        mk(
+            "corner_peak_d4",
+            "(1 + p0*x1 + p1*x2 + p2*x3 + p3*x4)^-5",
+            4,
+            vec![0.4, 0.6, 0.3, 0.5],
+            14,
+        ),
+        mk(
+            "continuous_d4",
+            "exp(-(p0*abs(x1-p4) + p1*abs(x2-p5) + p2*abs(x3-p6) \
+             + p3*abs(x4-p7)))",
+            4,
+            vec![2.0, 1.0, 1.5, 0.8, 0.5, 0.5, 0.5, 0.5],
+            15,
+        ),
+    ]
+}
+
+/// One pre-plan launch: decode the program from its device rows (as the
+/// old emulator did per launch), allocate the interpreter stack and
+/// sample columns, then interpret.
+fn naive_launch(
+    fam: &Fam,
+    key: &StreamKey,
+    base: u32,
+    samples: usize,
+) -> (f64, f64) {
+    let (ops, iargs, fargs) = fam.prog.device_rows();
+    let mut instrs = Vec::with_capacity(fam.prog.len());
+    for p in 0..fam.prog.len() {
+        instrs.push(Instr {
+            op: Op::from_code(ops[p]).expect("round-trip"),
+            iarg: iargs[p],
+            farg: fargs[p],
+        });
+    }
+    let prog = Program::new(instrs).expect("round-trip");
+    let mut interp = BatchInterp::new(CHUNK);
+    let mut xt = vec![vec![0f32; CHUNK]; MAX_DIM];
+    let mut buf = vec![0f32; CHUNK];
+    moment_sums_naive(
+        &prog, key, base, samples, &fam.lo, &fam.hi, &fam.theta,
+        &mut interp, &mut xt, &mut buf,
+    )
+}
+
+fn main() {
+    let samples = env_usize("ZMC_VMP_SAMPLES", 1 << 16);
+    let launch = env_usize("ZMC_VMP_LAUNCH", 1 << 14).max(1);
+    let gate = env_f64("ZMC_VMP_GATE", 2.5);
+    let seed = [42u32, 7u32];
+
+    let fams = genz_batch();
+    let plans: Vec<ExecPlan> =
+        fams.iter().map(|f| ExecPlan::lower(&f.prog)).collect();
+    let mut b = Bench::new("vm_pipeline");
+
+    // warm plan-path scratch (per-worker state in production)
+    let mut ucols = vec![vec![0f32; CHUNK]; MAX_DIM];
+    let mut scratch = PlanScratch::new(CHUNK);
+    let mut buf = vec![0f32; CHUNK];
+
+    let launches = samples.div_ceil(launch);
+    let mut total_naive = 0f64;
+    let mut total_plan = 0f64;
+    let mut sink = 0f64;
+    for (fam, plan) in fams.iter().zip(&plans) {
+        let key = StreamKey { seed, stream: fam.stream, trial: 0 };
+        // bit-exactness sanity before timing
+        let a = naive_launch(fam, &key, 0, launch.min(samples));
+        let p = moment_sums_plan(
+            plan, &key, 0, launch.min(samples), &fam.lo, &fam.hi,
+            &fam.theta, &mut ucols, &mut scratch, &mut buf,
+        );
+        assert_eq!(
+            (a.0.to_bits(), a.1.to_bits()),
+            (p.0.to_bits(), p.1.to_bits()),
+            "{}: plan/naive moments diverged",
+            fam.name
+        );
+
+        let tn = time(1, 2, || {
+            let mut acc = 0f64;
+            for l in 0..launches {
+                let base = (l * launch) as u32;
+                let n = launch.min(samples - l * launch);
+                acc += naive_launch(fam, &key, base, n).0;
+            }
+            sink += acc;
+        });
+        let tp = time(1, 2, || {
+            let mut acc = 0f64;
+            for l in 0..launches {
+                let base = (l * launch) as u32;
+                let n = launch.min(samples - l * launch);
+                acc += moment_sums_plan(
+                    plan, &key, base, n, &fam.lo, &fam.hi, &fam.theta,
+                    &mut ucols, &mut scratch, &mut buf,
+                )
+                .0;
+            }
+            sink += acc;
+        });
+        total_naive += tn.mean_s;
+        total_plan += tp.mean_s;
+        let s = plan.stats();
+        b.row(
+            fam.name,
+            &[
+                ("naive_ns_per_sample", format!("{:.1}", tn.mean_s / samples as f64 * 1e9)),
+                ("plan_ns_per_sample", format!("{:.1}", tp.mean_s / samples as f64 * 1e9)),
+                ("speedup", format!("{:.2}", tn.mean_s / tp.mean_s)),
+                ("row_ops", format!("{}/{}", s.row_ops, s.instrs)),
+                ("fused", s.fused.to_string()),
+                ("regs", s.regs.to_string()),
+            ],
+        );
+    }
+
+    let n_samples_total = (samples * fams.len()) as f64;
+    let speedup = total_naive / total_plan;
+    b.row(
+        "total",
+        &[
+            ("funcs", fams.len().to_string()),
+            ("samples_per_fn", samples.to_string()),
+            ("naive_sps", format!("{:.3e}", n_samples_total / total_naive)),
+            ("plan_sps", format!("{:.3e}", n_samples_total / total_plan)),
+            ("speedup", format!("{speedup:.2}")),
+            ("gate", format!("{gate:.2}")),
+        ],
+    );
+    b.finish();
+    // keep the accumulators observable so the timed loops can't be
+    // optimized away
+    eprintln!("# checksum {sink:.6e}");
+
+    if gate > 0.0 && speedup < gate {
+        eprintln!(
+            "FAIL: vm_pipeline speedup {speedup:.2}x below gate {gate:.2}x"
+        );
+        std::process::exit(1);
+    }
+}

@@ -13,6 +13,11 @@ pub struct Metrics {
     /// Tasks purged from the queue because their job's handle was
     /// dropped (or cancelled) before being awaited.
     pub cancellations: AtomicU64,
+    /// Program-plan cache hits across this engine's workers (one per
+    /// program row served from a worker's `ExecPlan` LRU).
+    pub plan_hits: AtomicU64,
+    /// Program-plan cache misses (row decoded + lowered on a worker).
+    pub plan_misses: AtomicU64,
     /// (busy, total) wall time per worker, filled at worker exit.
     worker_times: Mutex<Vec<(Duration, Duration)>>,
     /// Context-construction failures (worker never joined the pool).
@@ -41,6 +46,27 @@ impl Metrics {
     /// Count `n` queued tasks purged by a job cancellation.
     pub fn record_cancelled(&self, n: u64) {
         self.cancellations.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Fold one task's plan-cache events in (reported by the device
+    /// backend after each launch).
+    pub fn record_plan_events(&self, hits: u64, misses: u64) {
+        if hits > 0 {
+            self.plan_hits.fetch_add(hits, Ordering::Relaxed);
+        }
+        if misses > 0 {
+            self.plan_misses.fetch_add(misses, Ordering::Relaxed);
+        }
+    }
+
+    /// Plan-cache hits across this engine's workers.
+    pub fn plan_hits(&self) -> u64 {
+        self.plan_hits.load(Ordering::Relaxed)
+    }
+
+    /// Plan-cache misses (decode + lower) across this engine's workers.
+    pub fn plan_misses(&self) -> u64 {
+        self.plan_misses.load(Ordering::Relaxed)
     }
 
     pub fn record_worker(&self, busy: Duration, total: Duration) {
@@ -97,11 +123,13 @@ impl Metrics {
     pub fn summary(&self) -> String {
         format!(
             "tasks={} retries={} failures={} cancelled={} \
-             utilization={:.0}%",
+             plan_hits={} plan_misses={} utilization={:.0}%",
             self.done(),
             self.retried(),
             self.failed(),
             self.cancelled(),
+            self.plan_hits(),
+            self.plan_misses(),
             self.utilization() * 100.0
         )
     }
@@ -124,6 +152,11 @@ mod tests {
         m.record_cancelled(42);
         assert_eq!(m.cancelled(), 42);
         assert!(m.summary().contains("cancelled=42"));
+        m.record_plan_events(5, 2);
+        m.record_plan_events(1, 0);
+        assert_eq!(m.plan_hits(), 6);
+        assert_eq!(m.plan_misses(), 2);
+        assert!(m.summary().contains("plan_hits=6"));
     }
 
     #[test]

@@ -39,11 +39,21 @@ pub struct TaggedOutput {
 /// Backend whose worker contexts are per-thread [`DeviceRuntime`]s.
 pub struct DeviceBackend {
     registry: Arc<Registry>,
+    /// Sink for plan-cache hit/miss events (set when the backend is
+    /// built for an engine, so `Metrics::plan_hits/plan_misses` sit
+    /// next to the task counters).
+    metrics: Option<Arc<Metrics>>,
 }
 
 impl DeviceBackend {
     pub fn new(registry: Arc<Registry>) -> Self {
-        DeviceBackend { registry }
+        DeviceBackend { registry, metrics: None }
+    }
+
+    /// Report per-launch plan-cache events into `metrics`.
+    pub fn with_metrics(mut self, metrics: &Arc<Metrics>) -> Self {
+        self.metrics = Some(Arc::clone(metrics));
+        self
     }
 
     pub fn registry(&self) -> &Registry {
@@ -65,7 +75,12 @@ impl Backend for DeviceBackend {
     }
 
     fn run(&self, ctx: &DeviceRuntime, task: &LaunchTask) -> Result<TaggedOutput> {
-        ctx.execute(&task.exe, &task.inputs).map(|o| TaggedOutput {
+        let out = ctx.execute(&task.exe, &task.inputs);
+        if let Some(m) = &self.metrics {
+            let (hits, misses) = ctx.take_plan_events();
+            m.record_plan_events(hits, misses);
+        }
+        out.map(|o| TaggedOutput {
             tag: task.tag,
             data: o.data,
             device_time: o.device_time,
@@ -83,9 +98,13 @@ impl Engine<DeviceBackend> {
     /// Spawn a persistent engine over the pool's topology (one worker
     /// thread — one simulated device — per `pool.n_devices`).
     pub fn for_pool(pool: &DevicePool) -> Result<DeviceEngine> {
-        Engine::new(
-            DeviceBackend::new(Arc::clone(&pool.registry)),
+        let metrics = Arc::new(Metrics::new());
+        Engine::with_policy(
+            DeviceBackend::new(Arc::clone(&pool.registry))
+                .with_metrics(&metrics),
             EngineConfig::new(pool.n_devices),
+            Arc::new(FaultPlan::none()),
+            metrics,
         )
     }
 
@@ -98,7 +117,8 @@ impl Engine<DeviceBackend> {
         metrics: Arc<Metrics>,
     ) -> Result<DeviceEngine> {
         Engine::with_policy(
-            DeviceBackend::new(Arc::clone(&pool.registry)),
+            DeviceBackend::new(Arc::clone(&pool.registry))
+                .with_metrics(&metrics),
             EngineConfig { n_workers: pool.n_devices, max_retries },
             fault,
             metrics,

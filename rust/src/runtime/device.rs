@@ -25,7 +25,7 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, Context, Result};
 
 #[cfg(not(feature = "pjrt"))]
-use crate::runtime::emulator::EmuExe;
+use crate::runtime::emulator::{EmuExe, EmuState};
 use crate::runtime::launch::Value;
 #[cfg(feature = "pjrt")]
 use crate::runtime::registry::TensorSpec;
@@ -73,6 +73,11 @@ pub struct DeviceRuntime {
     #[cfg(feature = "pjrt")]
     client: xla::PjRtClient,
     cache: RefCell<HashMap<String, CompiledExe>>,
+    /// Per-worker emulator state: scratch arenas + the `ExecPlan` LRU
+    /// cache, both living as long as this runtime (the engine's warm
+    /// state for *programs*, next to the executable cache above).
+    #[cfg(not(feature = "pjrt"))]
+    emu: RefCell<EmuState>,
     /// Cumulative time spent executing (for utilization metrics).
     busy: RefCell<Duration>,
 }
@@ -96,6 +101,7 @@ impl DeviceRuntime {
         Ok(DeviceRuntime {
             registry,
             cache: RefCell::new(HashMap::new()),
+            emu: RefCell::new(EmuState::new()),
             busy: RefCell::new(Duration::ZERO),
         })
     }
@@ -111,6 +117,32 @@ impl DeviceRuntime {
     /// Executables compiled by *this* runtime so far.
     pub fn cached_executables(&self) -> usize {
         self.cache.borrow().len()
+    }
+
+    /// `ExecPlan`s currently cached by this runtime's plan LRU (always
+    /// 0 on the PJRT backend, where programs are lowered on device).
+    pub fn cached_plans(&self) -> usize {
+        #[cfg(not(feature = "pjrt"))]
+        {
+            self.emu.borrow().cached_plans()
+        }
+        #[cfg(feature = "pjrt")]
+        {
+            0
+        }
+    }
+
+    /// Drain plan-cache (hits, misses) since the last call — the engine
+    /// backend folds these into its run metrics after each task.
+    pub fn take_plan_events(&self) -> (u64, u64) {
+        #[cfg(not(feature = "pjrt"))]
+        {
+            self.emu.borrow_mut().take_plan_events()
+        }
+        #[cfg(feature = "pjrt")]
+        {
+            (0, 0)
+        }
     }
 
     /// Compile (or fetch cached) and execute `exe_name` with `inputs`.
@@ -160,7 +192,7 @@ impl DeviceRuntime {
     fn run_compiled(&self, spec: &ExeSpec, inputs: &[Value]) -> Result<Vec<f32>> {
         let cache = self.cache.borrow();
         let exe = cache.get(&spec.name).expect("just compiled");
-        exe.execute(spec, inputs)
+        exe.execute(spec, inputs, &mut self.emu.borrow_mut(), &self.registry)
     }
 
     fn check_inputs(&self, spec: &ExeSpec, inputs: &[Value]) -> Result<()> {

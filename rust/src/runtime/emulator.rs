@@ -6,32 +6,56 @@
 //! kinds with the **same sampling and evaluation semantics as the
 //! Pallas kernels**: Philox-4x32-10 counter addressing via
 //! [`StreamKey::point`] (bit-identical streams), f32 affine domain
-//! mapping, f32 bytecode evaluation through [`BatchInterp`], and
-//! per-function `(sum f, sum f^2)` moment outputs in the exact layouts the
-//! manifest declares. It is the same mirror the runtime integration
-//! tests check real artifacts against — see DESIGN.md "Substitutions".
+//! mapping, f32 bytecode evaluation, and per-function
+//! `(sum f, sum f^2)` moment outputs in the exact layouts the manifest
+//! declares. It is the same mirror the runtime integration tests check
+//! real artifacts against — see DESIGN.md "Substitutions".
+//!
+//! ## The optimizing pipeline
+//!
+//! Program launches run through the [`ExecPlan`] pipeline
+//! ([`crate::vm::plan`]): each distinct program row is decoded and
+//! lowered **once per worker** into a register-based columnar plan,
+//! cached in the per-worker [`EmuState`] LRU (hits/misses ledgered in
+//! the [`Registry`] next to the compile counter and surfaced in engine
+//! [`Metrics`](crate::coordinator::progress::Metrics)), and executed
+//! over per-worker scratch arenas — steady-state launches perform no
+//! heap allocation beyond the output payload. The pre-plan
+//! [`BatchInterp`] path is retained as the bit-exact oracle
+//! ([`moment_sums_naive`]) and can be forced process-wide with
+//! `ZMC_EMU_NAIVE=1`; either pipeline produces bit-identical moments.
 //!
 //! Compilation still goes through the per-worker cache in
 //! [`crate::runtime::device::DeviceRuntime`] and is counted in the
-//! [`Registry`](crate::runtime::registry::Registry) ledger, so the
-//! engine's warm-cache behaviour is observable with or without PJRT.
+//! [`Registry`] ledger, so the engine's warm-cache behaviour is
+//! observable with or without PJRT.
+
+use std::collections::HashMap;
+use std::rc::Rc;
 
 use anyhow::{anyhow, bail, Result};
 
-use crate::abi::{MAX_PARAM, MAX_PROG};
+use crate::abi::{MAX_DIM, MAX_PARAM, MAX_PROG};
 use crate::runtime::launch::Value;
-use crate::runtime::registry::{ExeKind, ExeSpec};
+use crate::runtime::registry::{ExeKind, ExeSpec, Registry};
 use crate::sampler::StreamKey;
 use crate::vm::interp::BatchInterp;
 use crate::vm::opcodes::Op;
+use crate::vm::plan::{ExecPlan, PlanScratch};
 use crate::vm::program::{Instr, Program};
 
 /// Samples per interpreter batch (mirrors the device tile trade-off).
 const CHUNK: usize = 2048;
 
+/// Plans kept per worker before LRU eviction (each is a few hundred
+/// bytes; 256 comfortably covers the multifunction batches the engine
+/// shards onto one worker).
+const PLAN_CACHE_CAP: usize = 256;
+
 /// A "compiled" executable for the emulator: validation happened, the
 /// kind is frozen. (Programs arrive per launch in the input tensors,
-/// exactly as on the device, so there is nothing else to lower.)
+/// exactly as on the device; lowering them to [`ExecPlan`]s is the
+/// per-worker plan cache's job.)
 #[derive(Debug, Clone)]
 pub struct EmuExe {
     kind: ExeKind,
@@ -46,14 +70,199 @@ impl EmuExe {
     }
 
     /// Execute one launch; `inputs` were already validated against the
-    /// spec's tensor signatures by the caller.
-    pub fn execute(&self, spec: &ExeSpec, inputs: &[Value]) -> Result<Vec<f32>> {
+    /// spec's tensor signatures by the caller. `state` is the calling
+    /// worker's reusable scratch + plan cache; `registry` receives the
+    /// plan-ledger events.
+    pub fn execute(
+        &self,
+        spec: &ExeSpec,
+        inputs: &[Value],
+        state: &mut EmuState,
+        registry: &Registry,
+    ) -> Result<Vec<f32>> {
         match self.kind {
-            ExeKind::VmMulti => run_vm_multi(spec, inputs),
-            ExeKind::Harmonic => run_harmonic(spec, inputs),
-            ExeKind::Stratified => run_stratified(spec, inputs),
+            ExeKind::VmMulti => run_vm_multi(spec, inputs, state, registry),
+            ExeKind::Harmonic => run_harmonic(spec, inputs, state),
+            ExeKind::Stratified => {
+                run_stratified(spec, inputs, state, registry)
+            }
         }
     }
+}
+
+// ---------------------------------------------------------------------
+// Per-worker state: scratch arenas + plan cache
+
+/// One cached plan: the exact program row it was lowered from (collision
+/// guard) plus an LRU stamp.
+struct PlanEntry {
+    ops: Vec<i32>,
+    iargs: Vec<i32>,
+    fbits: Vec<u32>,
+    plan: Rc<ExecPlan>,
+    stamp: u64,
+}
+
+/// Reusable per-worker execution state. Owned by the worker's
+/// [`DeviceRuntime`](crate::runtime::device::DeviceRuntime) for the
+/// engine's lifetime, so steady-state launches are allocation-free:
+/// sample columns, the plan register arena, the interpreter stack and
+/// the harmonic accumulators are all hoisted here.
+pub struct EmuState {
+    /// Unit-cube uniform columns (plan path input).
+    ucols: Vec<Vec<f32>>,
+    /// Mapped sample columns (naive-path input), built lazily.
+    xt: Vec<Vec<f32>>,
+    /// Per-chunk evaluation output row.
+    buf: Vec<f32>,
+    scratch: PlanScratch,
+    /// Stack interpreter for the naive oracle path, built lazily.
+    interp: Option<BatchInterp>,
+    plans: HashMap<u64, PlanEntry>,
+    clock: u64,
+    /// Force the pre-plan interpreter path (`ZMC_EMU_NAIVE=1`).
+    naive: bool,
+    // harmonic scratch
+    hsums: Vec<f64>,
+    hsqs: Vec<f64>,
+    hx: Vec<f32>,
+    hlive: Vec<usize>,
+    // plan-cache events since the last `take_plan_events`
+    hits: u64,
+    misses: u64,
+}
+
+impl Default for EmuState {
+    fn default() -> Self {
+        EmuState::new()
+    }
+}
+
+impl EmuState {
+    pub fn new() -> Self {
+        let naive = std::env::var("ZMC_EMU_NAIVE")
+            .map(|v| v == "1" || v.eq_ignore_ascii_case("true"))
+            .unwrap_or(false);
+        EmuState {
+            ucols: vec![vec![0f32; CHUNK]; MAX_DIM],
+            xt: Vec::new(),
+            buf: vec![0f32; CHUNK],
+            scratch: PlanScratch::new(CHUNK),
+            interp: None,
+            plans: HashMap::new(),
+            clock: 0,
+            naive,
+            hsums: Vec::new(),
+            hsqs: Vec::new(),
+            hx: Vec::new(),
+            hlive: Vec::new(),
+            hits: 0,
+            misses: 0,
+        }
+    }
+
+    /// Plans currently cached by this worker.
+    pub fn cached_plans(&self) -> usize {
+        self.plans.len()
+    }
+
+    /// Drain the (hits, misses) accumulated since the last call — the
+    /// engine backend folds these into its [`Metrics`] after each task.
+    pub fn take_plan_events(&mut self) -> (u64, u64) {
+        (std::mem::take(&mut self.hits), std::mem::take(&mut self.misses))
+    }
+
+    /// Lend out the naive-path buffers (interpreter stack + mapped
+    /// sample columns), building them on first use. Both launch paths
+    /// that fall back to the pre-plan interpreter share this so the
+    /// lazy-init/restore choreography exists exactly once; give the
+    /// buffers back with [`EmuState::restore_naive_buffers`].
+    fn take_naive_buffers(&mut self) -> (BatchInterp, Vec<Vec<f32>>) {
+        let interp =
+            self.interp.take().unwrap_or_else(|| BatchInterp::new(CHUNK));
+        let mut xt = std::mem::take(&mut self.xt);
+        if xt.is_empty() {
+            xt = vec![vec![0f32; CHUNK]; MAX_DIM];
+        }
+        (interp, xt)
+    }
+
+    fn restore_naive_buffers(&mut self, interp: BatchInterp, xt: Vec<Vec<f32>>) {
+        self.interp = Some(interp);
+        self.xt = xt;
+    }
+
+    /// Fetch (or decode + lower) the plan for one program row. Cache
+    /// hits allocate nothing and skip decoding entirely; every miss is
+    /// ledgered via [`Registry::note_plan_lower`].
+    fn plan_for(
+        &mut self,
+        ops: &[i32],
+        iargs: &[i32],
+        fargs: &[f32],
+        plen: usize,
+        registry: &Registry,
+    ) -> Result<Rc<ExecPlan>> {
+        let key = row_hash(ops, iargs, fargs, plen);
+        self.clock += 1;
+        if let Some(e) = self.plans.get_mut(&key) {
+            if e.ops.len() == plen
+                && e.ops[..] == ops[..plen]
+                && e.iargs[..] == iargs[..plen]
+                && e.fbits.iter().zip(&fargs[..plen]).all(|(&b, f)| b == f.to_bits())
+            {
+                e.stamp = self.clock;
+                self.hits += 1;
+                registry.note_plan_hit();
+                return Ok(Rc::clone(&e.plan));
+            }
+            // 64-bit hash collision: evict the stale entry and relower
+            self.plans.remove(&key);
+        }
+        self.misses += 1;
+        registry.note_plan_lower();
+        let prog = decode_program(ops, iargs, fargs, plen)?;
+        let plan = Rc::new(ExecPlan::lower(&prog));
+        if self.plans.len() >= PLAN_CACHE_CAP {
+            let evict = self
+                .plans
+                .iter()
+                .min_by_key(|(_, e)| e.stamp)
+                .map(|(&k, _)| k);
+            if let Some(k) = evict {
+                self.plans.remove(&k);
+            }
+        }
+        self.plans.insert(
+            key,
+            PlanEntry {
+                ops: ops[..plen].to_vec(),
+                iargs: iargs[..plen].to_vec(),
+                fbits: fargs[..plen].iter().map(|f| f.to_bits()).collect(),
+                plan: Rc::clone(&plan),
+                stamp: self.clock,
+            },
+        );
+        Ok(plan)
+    }
+}
+
+/// FNV-1a over one padded program row's live prefix.
+fn row_hash(ops: &[i32], iargs: &[i32], fargs: &[f32], plen: usize) -> u64 {
+    let mut h: u64 = 0xCBF2_9CE4_8422_2325;
+    let mut mix = |w: u32| {
+        for b in w.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100_0000_01B3);
+        }
+    };
+    mix(plen as u32);
+    for p in 0..plen.min(ops.len()) {
+        mix(ops[p] as u32);
+        mix(iargs[p] as u32);
+        mix(fargs[p].to_bits());
+    }
+    h
 }
 
 fn u32s<'a>(v: &'a Value, what: &str) -> Result<&'a [u32]> {
@@ -98,10 +307,13 @@ fn decode_program(
 
 /// Chunked `(sum f, sum f^2)` of `prog` over `samples` draws of `key`
 /// starting at counter `base`, with the device's f32 affine map
-/// `x = lo + (hi - lo) * u` per dimension. Accumulates in f64 like the
-/// CPU baseline (absorbs f32 partial error over large S).
+/// `x = lo + (hi - lo) * u` per dimension, through the **pre-plan stack
+/// interpreter**. Accumulates in f64 like the CPU baseline (absorbs f32
+/// partial error over large S). Retained as the bit-exact oracle for
+/// [`moment_sums_plan`] and as the baseline the `vm_pipeline` bench
+/// gates against.
 #[allow(clippy::too_many_arguments)]
-fn moment_sums(
+pub fn moment_sums_naive(
     prog: &Program,
     key: &StreamKey,
     base: u32,
@@ -110,21 +322,58 @@ fn moment_sums(
     hi: &[f32],
     theta: &[f32],
     interp: &mut BatchInterp,
+    xt: &mut [Vec<f32>],
     buf: &mut [f32],
 ) -> (f64, f64) {
     let dims = prog.dims;
-    let mut xt: Vec<Vec<f32>> = vec![vec![0f32; CHUNK]; dims];
+    let chunk = interp.chunk().min(buf.len());
     let (mut sum, mut sumsq) = (0f64, 0f64);
     let mut done = 0usize;
     while done < samples {
-        let n = (samples - done).min(CHUNK);
+        let n = (samples - done).min(chunk);
         for i in 0..n {
             let u = key.point(base.wrapping_add((done + i) as u32), dims);
-            for (d, row) in xt.iter_mut().enumerate() {
+            for (d, row) in xt.iter_mut().take(dims).enumerate() {
                 row[i] = lo[d] + (hi[d] - lo[d]) * u[d];
             }
         }
-        interp.eval(prog, &xt, theta, n, buf);
+        interp.eval(prog, xt, theta, n, buf);
+        for &v in &buf[..n] {
+            sum += v as f64;
+            sumsq += (v as f64) * (v as f64);
+        }
+        done += n;
+    }
+    (sum, sumsq)
+}
+
+/// [`moment_sums_naive`] through the optimized [`ExecPlan`] pipeline:
+/// uniforms are generated block-major into reusable columns, the affine
+/// domain map is folded into the plan's sample loads, and the program
+/// executes over the register arena. Bit-identical results — same
+/// Philox blocks, same per-lane f32 operation sequence, same f64
+/// accumulation order.
+#[allow(clippy::too_many_arguments)]
+pub fn moment_sums_plan(
+    plan: &ExecPlan,
+    key: &StreamKey,
+    base: u32,
+    samples: usize,
+    lo: &[f32],
+    hi: &[f32],
+    theta: &[f32],
+    ucols: &mut [Vec<f32>],
+    scratch: &mut PlanScratch,
+    buf: &mut [f32],
+) -> (f64, f64) {
+    let dims = plan.dims;
+    let chunk = scratch.chunk().min(buf.len());
+    let (mut sum, mut sumsq) = (0f64, 0f64);
+    let mut done = 0usize;
+    while done < samples {
+        let n = (samples - done).min(chunk);
+        key.fill_columns(base.wrapping_add(done as u32), n, dims, ucols);
+        plan.run(ucols, lo, hi, theta, n, scratch, buf);
         for &v in &buf[..n] {
             sum += v as f64;
             sumsq += (v as f64) * (v as f64);
@@ -137,7 +386,12 @@ fn moment_sums(
 /// `vm_multi`: N independent bytecode integrands per launch.
 /// Output layout `f32[N, 2]`: `[f*2] = sum f`, `[f*2+1] = sum f^2`; null
 /// slots (plen 0) stay exactly zero.
-fn run_vm_multi(spec: &ExeSpec, inputs: &[Value]) -> Result<Vec<f32>> {
+fn run_vm_multi(
+    spec: &ExeSpec,
+    inputs: &[Value],
+    state: &mut EmuState,
+    registry: &Registry,
+) -> Result<Vec<f32>> {
     let seed = u32s(&inputs[0], "seed")?;
     let ctr = u32s(&inputs[1], "ctr")?;
     let streams = u32s(&inputs[2], "streams")?;
@@ -151,48 +405,99 @@ fn run_vm_multi(spec: &ExeSpec, inputs: &[Value]) -> Result<Vec<f32>> {
     let (n, d, p) = (spec.n_fns, spec.dims, MAX_PROG);
 
     let mut out = vec![0f32; n * 2];
-    let mut interp = BatchInterp::new(CHUNK);
-    let mut buf = vec![0f32; CHUNK];
     for f in 0..n {
         let plen = plens[f].max(0) as usize;
         if plen == 0 {
             continue; // null slot
-        }
-        let prog = decode_program(
-            &ops[f * p..(f + 1) * p],
-            &iargs[f * p..(f + 1) * p],
-            &fargs[f * p..(f + 1) * p],
-            plen,
-        )?;
-        if prog.dims > d {
-            bail!("emulator: fn {f} reads x{} but exe has {d} dims", prog.dims);
         }
         let key = StreamKey {
             seed: [seed[0], seed[1]],
             stream: streams[f],
             trial: ctr[1],
         };
-        let (s, q) = moment_sums(
-            &prog,
-            &key,
-            ctr[0],
-            spec.samples,
-            &lo[f * d..(f + 1) * d],
-            &hi[f * d..(f + 1) * d],
-            &theta[f * MAX_PARAM..(f + 1) * MAX_PARAM],
-            &mut interp,
-            &mut buf,
-        );
+        let row = f * p..(f + 1) * p;
+        let (flo, fhi) = (&lo[f * d..(f + 1) * d], &hi[f * d..(f + 1) * d]);
+        let fth = &theta[f * MAX_PARAM..(f + 1) * MAX_PARAM];
+        let (s, q) = if state.naive {
+            let prog = decode_program(
+                &ops[row.clone()],
+                &iargs[row.clone()],
+                &fargs[row],
+                plen,
+            )?;
+            check_dims(prog.dims, d, Some(f))?;
+            let (mut interp, mut xt) = state.take_naive_buffers();
+            let r = moment_sums_naive(
+                &prog,
+                &key,
+                ctr[0],
+                spec.samples,
+                flo,
+                fhi,
+                fth,
+                &mut interp,
+                &mut xt,
+                &mut state.buf,
+            );
+            state.restore_naive_buffers(interp, xt);
+            r
+        } else {
+            let plan = state.plan_for(
+                &ops[row.clone()],
+                &iargs[row.clone()],
+                &fargs[row],
+                plen,
+                registry,
+            )?;
+            check_dims(plan.dims, d, Some(f))?;
+            moment_sums_plan(
+                &plan,
+                &key,
+                ctr[0],
+                spec.samples,
+                flo,
+                fhi,
+                fth,
+                &mut state.ucols,
+                &mut state.scratch,
+                &mut state.buf,
+            )
+        };
         out[f * 2] = s as f32;
         out[f * 2 + 1] = q as f32;
     }
     Ok(out)
 }
 
+/// Reject programs reading more sample dims than the exe provides.
+/// `fn_idx` names the offending `vm_multi` row; `None` means the
+/// launch's single shared program (stratified).
+fn check_dims(
+    prog_dims: usize,
+    exe_dims: usize,
+    fn_idx: Option<usize>,
+) -> Result<()> {
+    if prog_dims > exe_dims {
+        match fn_idx {
+            Some(f) => bail!(
+                "emulator: fn {f} reads x{prog_dims} but exe has {exe_dims} dims"
+            ),
+            None => bail!(
+                "emulator: program reads x{prog_dims} but exe has {exe_dims} dims"
+            ),
+        }
+    }
+    Ok(())
+}
+
 /// `harmonic`: up to N functions `a cos(k.x) + b sin(k.x)` over one
 /// shared sample tile. Output layout `f32[2, N]`: row 0 sums, row 1
 /// sums of squares; unused slots (a = b = 0) stay exactly zero.
-fn run_harmonic(spec: &ExeSpec, inputs: &[Value]) -> Result<Vec<f32>> {
+fn run_harmonic(
+    spec: &ExeSpec,
+    inputs: &[Value],
+    state: &mut EmuState,
+) -> Result<Vec<f32>> {
     let seed = u32s(&inputs[0], "seed")?;
     let ctr = u32s(&inputs[1], "ctr")?; // [base, stream, trial]
     let k = f32s(&inputs[2], "k")?;
@@ -202,42 +507,54 @@ fn run_harmonic(spec: &ExeSpec, inputs: &[Value]) -> Result<Vec<f32>> {
     let hi = f32s(&inputs[6], "hi")?;
     let (n, d) = (spec.n_fns, spec.dims);
 
-    let live: Vec<usize> =
-        (0..n).filter(|&f| a[f] != 0.0 || b[f] != 0.0).collect();
+    // per-worker scratch: resized once, zeroed per launch
+    state.hlive.clear();
+    state.hlive.extend((0..n).filter(|&f| a[f] != 0.0 || b[f] != 0.0));
+    state.hsums.clear();
+    state.hsums.resize(n, 0f64);
+    state.hsqs.clear();
+    state.hsqs.resize(n, 0f64);
+    state.hx.clear();
+    state.hx.resize(d, 0f32);
+
     let key = StreamKey {
         seed: [seed[0], seed[1]],
         stream: ctr[1],
         trial: ctr[2],
     };
-    let mut sums = vec![0f64; n];
-    let mut sqs = vec![0f64; n];
-    let mut x = vec![0f32; d];
     for i in 0..spec.samples {
         let u = key.point(ctr[0].wrapping_add(i as u32), d);
         for dd in 0..d {
-            x[dd] = lo[dd] + (hi[dd] - lo[dd]) * u[dd];
+            state.hx[dd] = lo[dd] + (hi[dd] - lo[dd]) * u[dd];
         }
-        for &f in &live {
+        for &f in &state.hlive {
             let mut phase = 0f32;
             for dd in 0..d {
-                phase += k[f * d + dd] * x[dd];
+                phase += k[f * d + dd] * state.hx[dd];
             }
             let v = (a[f] * phase.cos() + b[f] * phase.sin()) as f64;
-            sums[f] += v;
-            sqs[f] += v * v;
+            state.hsums[f] += v;
+            state.hsqs[f] += v * v;
         }
     }
     let mut out = vec![0f32; 2 * n];
     for f in 0..n {
-        out[f] = sums[f] as f32;
-        out[n + f] = sqs[f] as f32;
+        out[f] = state.hsums[f] as f32;
+        out[n + f] = state.hsqs[f] as f32;
     }
     Ok(out)
 }
 
 /// `stratified`: one shared program over a batch of cubes, one Philox
-/// stream per cube. Output layout `f32[C, 2]`.
-fn run_stratified(spec: &ExeSpec, inputs: &[Value]) -> Result<Vec<f32>> {
+/// stream per cube. Output layout `f32[C, 2]`. The shared program is
+/// decoded + lowered once (plan-cache hit for every cube after the
+/// first, and across launches).
+fn run_stratified(
+    spec: &ExeSpec,
+    inputs: &[Value],
+    state: &mut EmuState,
+    registry: &Registry,
+) -> Result<Vec<f32>> {
     let seed = u32s(&inputs[0], "seed")?;
     let ctr = u32s(&inputs[1], "ctr")?; // [base, trial]
     let streams = u32s(&inputs[2], "streams")?;
@@ -253,32 +570,57 @@ fn run_stratified(spec: &ExeSpec, inputs: &[Value]) -> Result<Vec<f32>> {
     if plen == 0 {
         bail!("emulator: stratified launch with empty program");
     }
-    let prog = decode_program(ops, iargs, fargs, plen)?;
-    if prog.dims > d {
-        bail!("emulator: program reads x{} but exe has {d} dims", prog.dims);
-    }
     let mut out = vec![0f32; c * 2];
-    let mut interp = BatchInterp::new(CHUNK);
-    let mut buf = vec![0f32; CHUNK];
-    for ci in 0..c {
-        let key = StreamKey {
-            seed: [seed[0], seed[1]],
-            stream: streams[ci],
-            trial: ctr[1],
-        };
-        let (s, q) = moment_sums(
-            &prog,
-            &key,
-            ctr[0],
-            spec.samples,
-            &cl[ci * d..(ci + 1) * d],
-            &ch[ci * d..(ci + 1) * d],
-            theta,
-            &mut interp,
-            &mut buf,
-        );
-        out[ci * 2] = s as f32;
-        out[ci * 2 + 1] = q as f32;
+    if state.naive {
+        let prog = decode_program(ops, iargs, fargs, plen)?;
+        check_dims(prog.dims, d, None)?;
+        let (mut interp, mut xt) = state.take_naive_buffers();
+        for ci in 0..c {
+            let key = StreamKey {
+                seed: [seed[0], seed[1]],
+                stream: streams[ci],
+                trial: ctr[1],
+            };
+            let (s, q) = moment_sums_naive(
+                &prog,
+                &key,
+                ctr[0],
+                spec.samples,
+                &cl[ci * d..(ci + 1) * d],
+                &ch[ci * d..(ci + 1) * d],
+                theta,
+                &mut interp,
+                &mut xt,
+                &mut state.buf,
+            );
+            out[ci * 2] = s as f32;
+            out[ci * 2 + 1] = q as f32;
+        }
+        state.restore_naive_buffers(interp, xt);
+    } else {
+        let plan = state.plan_for(ops, iargs, fargs, plen, registry)?;
+        check_dims(plan.dims, d, None)?;
+        for ci in 0..c {
+            let key = StreamKey {
+                seed: [seed[0], seed[1]],
+                stream: streams[ci],
+                trial: ctr[1],
+            };
+            let (s, q) = moment_sums_plan(
+                &plan,
+                &key,
+                ctr[0],
+                spec.samples,
+                &cl[ci * d..(ci + 1) * d],
+                &ch[ci * d..(ci + 1) * d],
+                theta,
+                &mut state.ucols,
+                &mut state.scratch,
+                &mut state.buf,
+            );
+            out[ci * 2] = s as f32;
+            out[ci * 2 + 1] = q as f32;
+        }
     }
     Ok(out)
 }
@@ -294,7 +636,11 @@ mod tests {
 
     fn exec(reg: &Registry, name: &str, inputs: &[Value]) -> Vec<f32> {
         let spec = reg.get(name).unwrap();
-        EmuExe::compile(spec).unwrap().execute(spec, inputs).unwrap()
+        let mut state = EmuState::new();
+        EmuExe::compile(spec)
+            .unwrap()
+            .execute(spec, inputs, &mut state, reg)
+            .unwrap()
     }
 
     #[test]
@@ -345,6 +691,114 @@ mod tests {
         }
         assert!((out[0] as f64 - s).abs() < 1e-3 * s.max(1.0), "{}", out[0]);
         assert!((out[1] as f64 - q).abs() < 1e-3 * q.max(1.0));
+    }
+
+    #[test]
+    fn plan_path_bit_identical_to_naive_launches() {
+        // the whole launch surface — vm_multi with params/bounds and
+        // stratified cubes — must produce the exact same payload bits
+        // through the plan pipeline as through the pre-plan interpreter
+        let reg = Registry::emulated();
+        let exe = reg.get("vm_multi_f8_s4096").unwrap();
+        let fns: Vec<VmFn> = (0..5)
+            .map(|i| VmFn {
+                program: Expr::parse("cos(2*pi*p0 + p1*x1) + x2*x2*p2")
+                    .unwrap()
+                    .compile()
+                    .unwrap(),
+                theta: vec![0.1 * i as f64, 1.0 + i as f64, 0.5],
+                bounds: vec![(-1.0, 1.0), (0.0, 2.0)],
+                stream: 100 + i as u32,
+            })
+            .collect();
+        let rng = RngCtr { seed: [3, 9], base: 8192, trial: 2 };
+        let inputs = vm_multi_inputs(exe, rng, &fns).unwrap();
+        let spec = reg.get(&exe.name).unwrap();
+        let emu = EmuExe::compile(spec).unwrap();
+        let mut plan_state = EmuState::new();
+        plan_state.naive = false;
+        let mut naive_state = EmuState::new();
+        naive_state.naive = true;
+        let a = emu.execute(spec, &inputs, &mut plan_state, &reg).unwrap();
+        let b = emu.execute(spec, &inputs, &mut naive_state, &reg).unwrap();
+        assert_eq!(
+            a.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            b.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+        );
+
+        let sexe = reg.get("stratified_c16_s256").unwrap();
+        let prog = Expr::parse("exp(0-p0*x1)*x2").unwrap().compile().unwrap();
+        let cubes: Vec<(Vec<f64>, Vec<f64>)> = (0..16)
+            .map(|i| {
+                (vec![i as f64 / 16.0, 0.0], vec![(i + 1) as f64 / 16.0, 2.0])
+            })
+            .collect();
+        let streams: Vec<u32> = (0..16).collect();
+        let srng = RngCtr { seed: [5, 6], base: 64, trial: 1 };
+        let sinputs =
+            stratified_inputs(sexe, srng, &prog, &[1.5], &cubes, &streams)
+                .unwrap();
+        let semu = EmuExe::compile(sexe).unwrap();
+        let a = semu.execute(sexe, &sinputs, &mut plan_state, &reg).unwrap();
+        let b = semu.execute(sexe, &sinputs, &mut naive_state, &reg).unwrap();
+        assert_eq!(
+            a.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            b.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+        );
+    }
+
+    #[test]
+    fn plan_cache_hits_after_first_launch() {
+        let reg = Registry::emulated();
+        let exe = reg.get("vm_multi_f8_s4096").unwrap();
+        let f = VmFn {
+            program: Expr::parse("x1*x1 + p0").unwrap().compile().unwrap(),
+            theta: vec![2.0],
+            bounds: vec![(0.0, 1.0)],
+            stream: 4,
+        };
+        let rng = RngCtr { seed: [1, 1], base: 0, trial: 0 };
+        let inputs =
+            vm_multi_inputs(exe, rng, std::slice::from_ref(&f)).unwrap();
+        let spec = reg.get(&exe.name).unwrap();
+        let emu = EmuExe::compile(spec).unwrap();
+        let mut state = EmuState::new();
+        state.naive = false;
+        emu.execute(spec, &inputs, &mut state, &reg).unwrap();
+        assert_eq!(state.cached_plans(), 1);
+        assert_eq!(state.take_plan_events(), (0, 1));
+        for _ in 0..3 {
+            emu.execute(spec, &inputs, &mut state, &reg).unwrap();
+        }
+        assert_eq!(state.cached_plans(), 1);
+        assert_eq!(state.take_plan_events(), (3, 0));
+    }
+
+    #[test]
+    fn plan_cache_evicts_least_recently_used() {
+        let reg = Registry::emulated();
+        let mut state = EmuState::new();
+        // distinct single-constant programs: CONST i
+        let mk = |i: usize| {
+            let ops = vec![Op::CONST.code()];
+            let iargs = vec![0i32];
+            let fargs = vec![i as f32];
+            (ops, iargs, fargs)
+        };
+        for i in 0..PLAN_CACHE_CAP + 10 {
+            let (o, ia, fa) = mk(i);
+            state.plan_for(&o, &ia, &fa, 1, &reg).unwrap();
+        }
+        assert_eq!(state.cached_plans(), PLAN_CACHE_CAP);
+        // the most recent entry is still cached
+        let (o, ia, fa) = mk(PLAN_CACHE_CAP + 9);
+        state.take_plan_events();
+        state.plan_for(&o, &ia, &fa, 1, &reg).unwrap();
+        assert_eq!(state.take_plan_events(), (1, 0));
+        // the oldest was evicted: re-lowering it is a miss
+        let (o, ia, fa) = mk(0);
+        state.plan_for(&o, &ia, &fa, 1, &reg).unwrap();
+        assert_eq!(state.take_plan_events(), (0, 1));
     }
 
     #[test]
@@ -432,5 +886,16 @@ mod tests {
             .clone();
         spec.hlo_text = "garbage".into();
         assert!(EmuExe::compile(&spec).is_err());
+    }
+
+    #[test]
+    fn bad_opcode_still_rejected_via_plan_path() {
+        let reg = Registry::emulated();
+        let mut state = EmuState::new();
+        let err = state
+            .plan_for(&[999], &[0], &[0.0], 1, &reg)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("bad opcode"), "{err}");
     }
 }

@@ -81,6 +81,10 @@ pub struct Registry {
     pub dir: PathBuf,
     exes: BTreeMap<String, ExeSpec>,
     compiles: AtomicU64,
+    /// Plan ledger (next to the compile ledger): program rows decoded +
+    /// lowered to `ExecPlan`s across all workers, and plan-cache hits.
+    plan_lowers: AtomicU64,
+    plan_hits: AtomicU64,
 }
 
 impl Registry {
@@ -115,7 +119,13 @@ impl Registry {
         if exes.is_empty() {
             bail!("manifest has no executables");
         }
-        Ok(Registry { dir, exes, compiles: AtomicU64::new(0) })
+        Ok(Registry {
+            dir,
+            exes,
+            compiles: AtomicU64::new(0),
+            plan_lowers: AtomicU64::new(0),
+            plan_hits: AtomicU64::new(0),
+        })
     }
 
     /// Build a registry directly from specs (no manifest on disk) —
@@ -135,6 +145,8 @@ impl Registry {
             dir: dir.into(),
             exes,
             compiles: AtomicU64::new(0),
+            plan_lowers: AtomicU64::new(0),
+            plan_hits: AtomicU64::new(0),
         })
     }
 
@@ -166,6 +178,31 @@ impl Registry {
     /// `n_workers x distinct executables used`.
     pub fn compile_count(&self) -> u64 {
         self.compiles.load(Ordering::Relaxed)
+    }
+
+    /// Count one program row decoded + lowered to an `ExecPlan` (a
+    /// plan-cache miss on some worker).
+    pub fn note_plan_lower(&self) {
+        self.plan_lowers.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count one plan-cache hit.
+    pub fn note_plan_hit(&self) {
+        self.plan_hits.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Program rows decoded + lowered across every worker. With warm
+    /// plan caches this saturates at
+    /// `n_workers x distinct program rows` — the same shape as
+    /// [`Registry::compile_count`] for executables (asserted by
+    /// `tests/engine_test.rs`).
+    pub fn plan_lower_count(&self) -> u64 {
+        self.plan_lowers.load(Ordering::Relaxed)
+    }
+
+    /// Plan-cache hits across every worker.
+    pub fn plan_hit_count(&self) -> u64 {
+        self.plan_hits.load(Ordering::Relaxed)
     }
 
     pub fn get(&self, name: &str) -> Result<&ExeSpec> {
@@ -513,6 +550,18 @@ mod tests {
         reg.note_compile();
         reg.note_compile();
         assert_eq!(reg.compile_count(), 2);
+    }
+
+    #[test]
+    fn plan_ledger_accumulates() {
+        let reg = Registry::emulated();
+        assert_eq!(reg.plan_lower_count(), 0);
+        assert_eq!(reg.plan_hit_count(), 0);
+        reg.note_plan_lower();
+        reg.note_plan_hit();
+        reg.note_plan_hit();
+        assert_eq!(reg.plan_lower_count(), 1);
+        assert_eq!(reg.plan_hit_count(), 2);
     }
 
     #[test]

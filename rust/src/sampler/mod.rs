@@ -57,6 +57,59 @@ impl StreamKey {
         }
         out
     }
+
+    /// Fill dimension-major uniform columns for samples
+    /// `[base, base + n)`: `cols[d][i] = point(base + i, dims)[d]`,
+    /// bit-identical to per-sample [`StreamKey::point`] but generated
+    /// block-major — one tight loop per Philox block index with the key
+    /// and lane routing hoisted out, which is what the emulator's plan
+    /// path runs instead of a `point()` call per sample.
+    pub fn fill_columns(
+        &self,
+        base: u32,
+        n: usize,
+        dims: usize,
+        cols: &mut [Vec<f32>],
+    ) {
+        debug_assert!(dims <= MAX_DIM && cols.len() >= dims);
+        let key = [self.seed[0], self.seed[1]];
+        let mut d0 = 0usize;
+        let mut j = 0u32;
+        while d0 < dims {
+            let lanes = (dims - d0).min(4);
+            if lanes == 4 {
+                // all four lanes live: write through four split columns
+                let (c0, rest) = cols[d0..].split_first_mut().unwrap();
+                let (c1, rest) = rest.split_first_mut().unwrap();
+                let (c2, rest) = rest.split_first_mut().unwrap();
+                let c3 = &mut rest[0];
+                for i in 0..n {
+                    let b = philox4x32(
+                        [base.wrapping_add(i as u32), j, self.stream, self.trial],
+                        key,
+                    );
+                    c0[i] = u01(b[0]);
+                    c1[i] = u01(b[1]);
+                    c2[i] = u01(b[2]);
+                    c3[i] = u01(b[3]);
+                }
+            } else {
+                for i in 0..n {
+                    let b = philox4x32(
+                        [base.wrapping_add(i as u32), j, self.stream, self.trial],
+                        key,
+                    );
+                    for (lane, col) in
+                        cols[d0..d0 + lanes].iter_mut().enumerate()
+                    {
+                        col[i] = u01(b[lane]);
+                    }
+                }
+            }
+            d0 += lanes;
+            j += 1;
+        }
+    }
 }
 
 /// Affine map from the unit cube to a box, dimension-wise.
@@ -95,6 +148,27 @@ mod tests {
         let p8 = k.point(5, 8);
         assert_eq!(&p3[..3], &p8[..3]);
         assert_eq!(p3[3..], [0f32; 5]); // unset dims stay zero
+    }
+
+    #[test]
+    fn fill_columns_matches_point_bitwise() {
+        let k = StreamKey::new(0xDEAD_BEEF_0000_0007, 11, 2);
+        for dims in [1usize, 3, 4, 5, 8] {
+            let n = 37;
+            let base = 4090; // crosses a u32-ish boundary region
+            let mut cols = vec![vec![0f32; n]; dims];
+            k.fill_columns(base, n, dims, &mut cols);
+            for i in 0..n {
+                let p = k.point(base + i as u32, dims);
+                for d in 0..dims {
+                    assert_eq!(
+                        cols[d][i].to_bits(),
+                        p[d].to_bits(),
+                        "dims={dims} i={i} d={d}"
+                    );
+                }
+            }
+        }
     }
 
     #[test]

@@ -47,6 +47,82 @@ pub fn eval_scalar(prog: &Program, x: &[f64], theta: &[f64]) -> f64 {
     stack[0]
 }
 
+/// Evaluate at a single point in f32 — the per-lane scalar twin of the
+/// columnar interpreter below (same opcode → f32 operation mapping), so
+/// one lane of [`BatchInterp::eval`] equals `eval_scalar_f32` on that
+/// lane's inputs bit-for-bit. The plan differential suite uses this as
+/// the third corner of its bit-exactness triangle (plan / batch /
+/// scalar-f32).
+pub fn eval_scalar_f32(prog: &Program, x: &[f32], theta: &[f32]) -> f32 {
+    let mut stack = [0f32; STACK];
+    let mut sp = 0usize;
+    for ins in prog.instrs() {
+        match ins.op {
+            Op::HALT => {}
+            Op::CONST => {
+                stack[sp] = ins.farg;
+                sp += 1;
+            }
+            Op::VAR => {
+                stack[sp] = x[ins.iarg as usize];
+                sp += 1;
+            }
+            Op::PARAM => {
+                stack[sp] = theta[ins.iarg as usize];
+                sp += 1;
+            }
+            op => {
+                if op.arity() == 1 {
+                    stack[sp - 1] = unary_f32(op, stack[sp - 1]);
+                } else {
+                    stack[sp - 2] = binary_f32(op, stack[sp - 2], stack[sp - 1]);
+                    sp -= 1;
+                }
+            }
+        }
+    }
+    stack[0]
+}
+
+/// Scalar f32 semantics of a unary opcode — the single source the row
+/// loops below and the plan lowering's constant folder both follow, so
+/// folding a constant at plan-build time produces exactly the bits the
+/// interpreter would produce per lane at run time.
+#[inline(always)]
+pub fn unary_f32(op: Op, a: f32) -> f32 {
+    match op {
+        Op::NEG => -a,
+        Op::ABS => a.abs(),
+        Op::SIN => a.sin(),
+        Op::COS => a.cos(),
+        Op::TAN => a.tan(),
+        Op::EXP => a.exp(),
+        Op::LOG => a.ln(),
+        Op::SQRT => a.sqrt(),
+        Op::TANH => a.tanh(),
+        Op::ATAN => a.atan(),
+        Op::FLOOR => a.floor(),
+        Op::SQUARE => a * a,
+        Op::RECIP => 1.0 / a,
+        _ => unreachable!("not unary: {op:?}"),
+    }
+}
+
+/// Scalar f32 semantics of a binary opcode (see [`unary_f32`]).
+#[inline(always)]
+pub fn binary_f32(op: Op, a: f32, b: f32) -> f32 {
+    match op {
+        Op::ADD => a + b,
+        Op::SUB => a - b,
+        Op::MUL => a * b,
+        Op::DIV => a / b,
+        Op::POW => a.powf(b),
+        Op::MIN => a.min(b),
+        Op::MAX => a.max(b),
+        _ => unreachable!("not binary: {op:?}"),
+    }
+}
+
 fn unary_f64(op: Op, a: f64) -> f64 {
     match op {
         Op::NEG => -a,
@@ -272,6 +348,29 @@ mod tests {
                 "i={i}: {} vs {want}",
                 out[i]
             );
+        }
+    }
+
+    #[test]
+    fn scalar_f32_matches_batch_lanes_bitwise() {
+        let p = prog(vec![
+            Instr::var(0),
+            Instr::var(1),
+            Instr::new(Op::SUB),
+            Instr::new(Op::SIN),
+            Instr::param(0),
+            Instr::new(Op::POW),
+        ]);
+        let n = 97;
+        let x0: Vec<f32> = (0..n).map(|i| 0.3 + i as f32 * 0.011).collect();
+        let x1: Vec<f32> = (0..n).map(|i| (i as f32 * 0.07).cos()).collect();
+        let xt = vec![x0.clone(), x1.clone()];
+        let mut bi = BatchInterp::new(128);
+        let mut out = vec![0f32; 128];
+        bi.eval(&p, &xt, &[1.7], n, &mut out);
+        for i in 0..n {
+            let want = eval_scalar_f32(&p, &[x0[i], x1[i]], &[1.7]);
+            assert_eq!(out[i].to_bits(), want.to_bits(), "lane {i}");
         }
     }
 

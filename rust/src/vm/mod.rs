@@ -9,7 +9,9 @@
 
 pub mod interp;
 pub mod opcodes;
+pub mod plan;
 pub mod program;
 
 pub use opcodes::Op;
+pub use plan::{ExecPlan, PlanScratch};
 pub use program::Program;

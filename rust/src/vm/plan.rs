@@ -1,0 +1,1114 @@
+//! Optimizing VM pipeline: lower a validated stack [`Program`] into an
+//! [`ExecPlan`] — a register-based columnar form the emulator executes
+//! with far less dispatch and memory traffic than [`BatchInterp`].
+//!
+//! Lowering passes (all **bit-exactness preserving** — see below):
+//!
+//! * **Hash-consed CSE** — the stack program is rebuilt as an expression
+//!   DAG; structurally identical subexpressions collapse to one node, so
+//!   each is computed once per chunk instead of once per occurrence.
+//! * **Constant folding** — operations whose operands are all constants
+//!   are evaluated at plan-build time with the *same scalar f32
+//!   functions* the interpreter applies per lane
+//!   ([`interp::unary_f32`]/[`interp::binary_f32`]), so the folded
+//!   immediate is bit-identical to what every lane would have computed.
+//! * **Uniform (lane-invariant) hoisting** — subexpressions built only
+//!   from CONST/PARAM are evaluated once per launch as a tiny scalar
+//!   prologue instead of once per lane per chunk (generalizes constant
+//!   folding to values only known at launch time, e.g. `2*pi*p0`).
+//! * **Stack → register allocation** — DAG nodes get reusable register
+//!   rows; CONST/PARAM pushes become inline scalar operands of the
+//!   consuming operation, eliminating the `STACK×CHUNK` row fills and
+//!   copies the stack interpreter pays for every push.
+//! * **Peephole fusion** — single-use `MUL` feeding `ADD`/`SUB` fuses
+//!   into one [`PlanOp::MulAcc`] superinstruction (one pass over the
+//!   rows instead of two), and `VAR` loads fuse the affine domain map
+//!   `x = lo + (hi-lo)·u` into the sample load
+//!   ([`PlanOp::VarAffine`]), so the unit-cube uniforms never have to
+//!   be materialized as mapped coordinates first.
+//! * **Dead-code elimination** — nodes not reachable from the root are
+//!   never emitted. (Validated stack programs are fully live by
+//!   construction, so in practice this only triggers for the
+//!   instructions consumed by folding/CSE, counted in [`PlanStats`].)
+//!
+//! ## Bit-exactness contract
+//!
+//! Every fusion changes *dispatch and memory traffic only*, never
+//! rounding: each output lane is produced by the identical sequence of
+//! f32 operations the naive interpreter would apply, in the same
+//! per-lane order (`MulAcc` computes `a*b` then the add/sub as two f32
+//! ops — never an FMA — and preserves operand order, so even NaN
+//! payload propagation matches). [`BatchInterp`] remains in-tree as the
+//! oracle; `tests/vm_plan_test.rs` proves `to_bits()` agreement on
+//! random programs, and the emulator's launch paths therefore produce
+//! bit-identical moment sums through either pipeline.
+
+use std::collections::HashMap;
+
+use crate::vm::interp::{binary_f32, unary_f32};
+use crate::vm::opcodes::Op;
+use crate::vm::program::Program;
+
+/// Operand of a columnar plan operation.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Src {
+    /// A register row in the scratch arena.
+    Reg(u16),
+    /// Immediate known at plan-build time (constant folding output).
+    Imm(f32),
+    /// Launch-time scalar: slot in the uniform prologue's value table
+    /// (parameter-dependent but lane-invariant).
+    Scalar(u16),
+}
+
+/// One scalar-prologue operation, evaluated once per launch.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ScalarOp {
+    /// Load `theta[idx]` into the slot.
+    Theta(u16),
+    Un(Op, SSrc),
+    Bin(Op, SSrc, SSrc),
+}
+
+/// Operand of a scalar-prologue operation.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum SSrc {
+    Imm(f32),
+    Slot(u16),
+}
+
+/// One columnar operation over register rows.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum PlanOp {
+    /// `dst[i] = lo[dim] + (hi[dim] - lo[dim]) * u[dim][i]` — the VAR
+    /// load with the affine domain map folded in.
+    VarAffine { dst: u16, dim: u16 },
+    /// `dst[i] = op(dst[i])` (operand register reused in place).
+    UnInPlace { op: Op, dst: u16 },
+    /// `dst[i] = op(a[i])`, `a != dst`.
+    Un { op: Op, dst: u16, a: u16 },
+    /// `dst[i] = dst[i] op b` (left operand register reused in place).
+    BinAccA { op: Op, dst: u16, b: Src },
+    /// `dst[i] = a op dst[i]` (right operand register reused in place).
+    BinAccB { op: Op, dst: u16, a: Src },
+    /// `dst[i] = a op b`, `dst` distinct from any register operand.
+    Bin { op: Op, dst: u16, a: Src, b: Src },
+    /// Fused multiply-accumulate: `t = a*b` then
+    /// `dst = t op c` (`mul_first`) or `dst = c op t` (`!mul_first`),
+    /// as two f32 operations per lane (never FMA). `dst` is distinct
+    /// from any register operand.
+    MulAcc { op: Op, mul_first: bool, dst: u16, a: Src, b: Src, c: Src },
+}
+
+/// Lowering statistics — exposed so tests can assert each pass fired.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PlanStats {
+    /// Instructions in the source program.
+    pub instrs: usize,
+    /// Columnar ops emitted (row passes per chunk).
+    pub row_ops: usize,
+    /// Scalar-prologue ops (per launch, not per lane).
+    pub scalar_ops: usize,
+    /// DAG nodes deduplicated by hash-consing.
+    pub cse_merged: usize,
+    /// Operations folded to immediates at build time.
+    pub folded: usize,
+    /// MUL+ADD / MUL+SUB pairs fused into `MulAcc`.
+    pub fused: usize,
+    /// Peak register rows required.
+    pub regs: usize,
+}
+
+/// A lowered, ready-to-execute plan for one program.
+#[derive(Debug, Clone)]
+pub struct ExecPlan {
+    ops: Vec<PlanOp>,
+    scalars: Vec<ScalarOp>,
+    root: Src,
+    /// Sample dimensions read (equals the source program's `dims`).
+    pub dims: usize,
+    /// Parameter slots read (equals the source program's `n_params`).
+    pub n_params: usize,
+    stats: PlanStats,
+}
+
+/// Reusable execution scratch: the register arena plus the scalar
+/// table. One per worker — steady-state `run` calls allocate nothing.
+#[derive(Debug)]
+pub struct PlanScratch {
+    chunk: usize,
+    regs: Vec<f32>,
+    scalars: Vec<f32>,
+}
+
+impl PlanScratch {
+    pub fn new(chunk: usize) -> Self {
+        PlanScratch { chunk, regs: Vec::new(), scalars: Vec::new() }
+    }
+
+    pub fn chunk(&self) -> usize {
+        self.chunk
+    }
+
+    fn ensure(&mut self, plan: &ExecPlan) {
+        let want = plan.stats.regs * self.chunk;
+        if self.regs.len() < want {
+            self.regs.resize(want, 0.0);
+        }
+        if self.scalars.len() < plan.scalars.len() {
+            self.scalars.resize(plan.scalars.len(), 0.0);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// DAG construction (hash-consing + folding)
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+enum NodeKey {
+    Const(u32), // f32 bits
+    Var(u16),
+    Param(u16),
+    Un(Op, u32),
+    Bin(Op, u32, u32),
+}
+
+#[derive(Debug, Clone, Copy)]
+struct Node {
+    key: NodeKey,
+    uniform: bool,
+    uses: u32,
+}
+
+struct Builder {
+    nodes: Vec<Node>,
+    table: HashMap<NodeKey, u32>,
+    cse_merged: usize,
+    folded: usize,
+}
+
+impl Builder {
+    fn intern(&mut self, key: NodeKey, uniform: bool) -> u32 {
+        if let Some(&id) = self.table.get(&key) {
+            self.cse_merged += 1;
+            return id;
+        }
+        let id = self.nodes.len() as u32;
+        self.nodes.push(Node { key, uniform, uses: 0 });
+        self.table.insert(key, id);
+        id
+    }
+
+    fn const_of(&self, id: u32) -> Option<f32> {
+        match self.nodes[id as usize].key {
+            NodeKey::Const(bits) => Some(f32::from_bits(bits)),
+            _ => None,
+        }
+    }
+
+    /// Rebuild the stack program as a DAG, folding const-only ops with
+    /// the interpreter's own scalar f32 semantics.
+    fn build(prog: &Program) -> (Builder, u32) {
+        let mut b = Builder {
+            nodes: Vec::with_capacity(prog.len()),
+            table: HashMap::with_capacity(prog.len()),
+            cse_merged: 0,
+            folded: 0,
+        };
+        let mut stack: Vec<u32> = Vec::with_capacity(prog.len());
+        for ins in prog.instrs() {
+            match ins.op {
+                Op::HALT => {}
+                Op::CONST => {
+                    let id =
+                        b.intern(NodeKey::Const(ins.farg.to_bits()), true);
+                    stack.push(id);
+                }
+                Op::VAR => {
+                    let id = b.intern(NodeKey::Var(ins.iarg as u16), false);
+                    stack.push(id);
+                }
+                Op::PARAM => {
+                    let id = b.intern(NodeKey::Param(ins.iarg as u16), true);
+                    stack.push(id);
+                }
+                op if op.arity() == 1 => {
+                    let a = stack.pop().expect("validated program");
+                    let id = if let Some(av) = b.const_of(a) {
+                        b.folded += 1;
+                        b.intern(
+                            NodeKey::Const(unary_f32(op, av).to_bits()),
+                            true,
+                        )
+                    } else {
+                        let uni = b.nodes[a as usize].uniform;
+                        b.intern(NodeKey::Un(op, a), uni)
+                    };
+                    stack.push(id);
+                }
+                op => {
+                    let rb = stack.pop().expect("validated program");
+                    let ra = stack.pop().expect("validated program");
+                    let id = match (b.const_of(ra), b.const_of(rb)) {
+                        (Some(av), Some(bv)) => {
+                            b.folded += 1;
+                            b.intern(
+                                NodeKey::Const(
+                                    binary_f32(op, av, bv).to_bits(),
+                                ),
+                                true,
+                            )
+                        }
+                        _ => {
+                            let uni = b.nodes[ra as usize].uniform
+                                && b.nodes[rb as usize].uniform;
+                            b.intern(NodeKey::Bin(op, ra, rb), uni)
+                        }
+                    };
+                    stack.push(id);
+                }
+            }
+        }
+        let root = stack.pop().expect("validated program leaves one value");
+        debug_assert!(stack.is_empty());
+        // Use counts over DAG edges (root gets one extra so its register
+        // is never recycled before the copy-out).
+        for i in 0..b.nodes.len() {
+            match b.nodes[i].key {
+                NodeKey::Un(_, a) => b.nodes[a as usize].uses += 1,
+                NodeKey::Bin(_, a, bb) => {
+                    b.nodes[a as usize].uses += 1;
+                    b.nodes[bb as usize].uses += 1;
+                }
+                _ => {}
+            }
+        }
+        b.nodes[root as usize].uses += 1;
+        (b, root)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Lowering (register allocation + peephole fusion)
+
+struct Lowerer {
+    nodes: Vec<Node>,
+    ops: Vec<PlanOp>,
+    scalars: Vec<ScalarOp>,
+    lowered: Vec<Option<Src>>,
+    slot_of: Vec<Option<u16>>,
+    free: Vec<u16>,
+    n_regs: u16,
+    fused: usize,
+}
+
+impl Lowerer {
+    fn alloc(&mut self) -> u16 {
+        if let Some(r) = self.free.pop() {
+            r
+        } else {
+            let r = self.n_regs;
+            self.n_regs += 1;
+            r
+        }
+    }
+
+    /// Count one consumption of `id`; recycle its register after the
+    /// last use (emission order == execution order, so this is safe).
+    fn consume(&mut self, id: u32) {
+        let n = &mut self.nodes[id as usize];
+        n.uses -= 1;
+        if n.uses == 0 {
+            if let Some(Src::Reg(r)) = self.lowered[id as usize] {
+                self.free.push(r);
+            }
+        }
+    }
+
+    /// Lower a uniform node into the scalar prologue; returns its slot
+    /// (or immediate for constants).
+    fn lower_scalar(&mut self, id: u32) -> SSrc {
+        if let Some(slot) = self.slot_of[id as usize] {
+            return SSrc::Slot(slot);
+        }
+        let key = self.nodes[id as usize].key;
+        match key {
+            NodeKey::Const(bits) => SSrc::Imm(f32::from_bits(bits)),
+            NodeKey::Param(i) => {
+                let slot = self.push_scalar(ScalarOp::Theta(i));
+                self.slot_of[id as usize] = Some(slot);
+                SSrc::Slot(slot)
+            }
+            NodeKey::Un(op, a) => {
+                let sa = self.lower_scalar(a);
+                let slot = self.push_scalar(ScalarOp::Un(op, sa));
+                self.slot_of[id as usize] = Some(slot);
+                SSrc::Slot(slot)
+            }
+            NodeKey::Bin(op, a, b) => {
+                let sa = self.lower_scalar(a);
+                let sb = self.lower_scalar(b);
+                let slot = self.push_scalar(ScalarOp::Bin(op, sa, sb));
+                self.slot_of[id as usize] = Some(slot);
+                SSrc::Slot(slot)
+            }
+            NodeKey::Var(_) => unreachable!("uniform node cannot read VAR"),
+        }
+    }
+
+    fn push_scalar(&mut self, op: ScalarOp) -> u16 {
+        self.scalars.push(op);
+        (self.scalars.len() - 1) as u16
+    }
+
+    /// True if `id` is a non-uniform single-use MUL — fusable into the
+    /// consuming ADD/SUB without changing any lane's op sequence.
+    fn fusable_mul(&self, id: u32) -> bool {
+        let n = &self.nodes[id as usize];
+        !n.uniform
+            && n.uses == 1
+            && self.lowered[id as usize].is_none()
+            && matches!(n.key, NodeKey::Bin(Op::MUL, _, _))
+    }
+
+    /// Lower `id` to an operand, emitting ops for it if needed.
+    fn lower(&mut self, id: u32) -> Src {
+        if let Some(src) = self.lowered[id as usize] {
+            return src;
+        }
+        let node = self.nodes[id as usize];
+        let src = if node.uniform {
+            match self.lower_scalar(id) {
+                SSrc::Imm(v) => Src::Imm(v),
+                SSrc::Slot(s) => Src::Scalar(s),
+            }
+        } else {
+            match node.key {
+                NodeKey::Var(d) => {
+                    let dst = self.alloc();
+                    self.ops.push(PlanOp::VarAffine { dst, dim: d });
+                    Src::Reg(dst)
+                }
+                NodeKey::Un(op, a) => {
+                    let sa = self.lower(a);
+                    let Src::Reg(ra) = sa else {
+                        unreachable!("non-uniform unary has a reg operand")
+                    };
+                    // consume-then-alloc: a dying operand's row comes
+                    // straight back off the free list as the
+                    // destination, making the op in-place.
+                    self.consume(a);
+                    let dst = self.alloc();
+                    if dst == ra {
+                        self.ops.push(PlanOp::UnInPlace { op, dst });
+                    } else {
+                        self.ops.push(PlanOp::Un { op, dst, a: ra });
+                    }
+                    Src::Reg(dst)
+                }
+                NodeKey::Bin(op, a, b) => self.lower_bin(op, a, b),
+                NodeKey::Const(_) | NodeKey::Param(_) => {
+                    unreachable!("leaf constants/params are uniform")
+                }
+            }
+        };
+        self.lowered[id as usize] = Some(src);
+        src
+    }
+
+    fn lower_bin(&mut self, op: Op, a: u32, b: u32) -> Src {
+        // Peephole: a single-use MUL feeding ADD/SUB fuses into MulAcc.
+        // Operand order is preserved exactly (mul_first records which
+        // side of the add/sub the product sits on).
+        if matches!(op, Op::ADD | Op::SUB) {
+            if self.fusable_mul(a) {
+                let NodeKey::Bin(_, ma, mb) = self.nodes[a as usize].key
+                else {
+                    unreachable!()
+                };
+                return self.emit_mulacc(op, true, ma, mb, b, a);
+            }
+            if self.fusable_mul(b) {
+                let NodeKey::Bin(_, ma, mb) = self.nodes[b as usize].key
+                else {
+                    unreachable!()
+                };
+                return self.emit_mulacc(op, false, ma, mb, a, b);
+            }
+        }
+        let sa = self.lower(a);
+        let sb = self.lower(b);
+        // consume-then-alloc (see the unary case): if either operand's
+        // row died, `alloc` hands it back and the op runs in place.
+        self.consume(a);
+        self.consume(b);
+        let dst = self.alloc();
+        if sa == Src::Reg(dst) {
+            // covers `a == b` too: BinAccA with b aliased to dst is the
+            // `dst = f(dst, dst)` loop at execution time
+            self.ops.push(PlanOp::BinAccA { op, dst, b: sb });
+        } else if sb == Src::Reg(dst) {
+            self.ops.push(PlanOp::BinAccB { op, dst, a: sa });
+        } else {
+            self.ops.push(PlanOp::Bin { op, dst, a: sa, b: sb });
+        }
+        Src::Reg(dst)
+    }
+
+    /// Emit a fused multiply-accumulate for `ADD/SUB(MUL(ma, mb), c)`
+    /// (`mul_first`) or `ADD/SUB(c, MUL(ma, mb))`. `mul_node` is the
+    /// consumed MUL (never materialized). The destination register is
+    /// allocated *before* the operands are recycled, so it can never
+    /// alias a live operand row.
+    fn emit_mulacc(
+        &mut self,
+        op: Op,
+        mul_first: bool,
+        ma: u32,
+        mb: u32,
+        c: u32,
+        mul_node: u32,
+    ) -> Src {
+        let sa = self.lower(ma);
+        let sb = self.lower(mb);
+        let sc = self.lower(c);
+        let dst = self.alloc();
+        self.consume(ma);
+        self.consume(mb);
+        self.consume(c);
+        // account the fused MUL's single consumption (by this op)
+        self.nodes[mul_node as usize].uses -= 1;
+        debug_assert!(
+            sa != Src::Reg(dst) && sb != Src::Reg(dst) && sc != Src::Reg(dst)
+        );
+        self.fused += 1;
+        self.ops.push(PlanOp::MulAcc { op, mul_first, dst, a: sa, b: sb, c: sc });
+        Src::Reg(dst)
+    }
+}
+
+impl ExecPlan {
+    /// Lower a validated program. Infallible: every `Program` invariant
+    /// the stack interpreter relies on holds here too.
+    pub fn lower(prog: &Program) -> ExecPlan {
+        let (builder, root) = Builder::build(prog);
+        let n = builder.nodes.len();
+        let mut lw = Lowerer {
+            nodes: builder.nodes,
+            ops: Vec::with_capacity(n),
+            scalars: Vec::new(),
+            lowered: vec![None; n],
+            slot_of: vec![None; n],
+            free: Vec::new(),
+            n_regs: 0,
+            fused: 0,
+        };
+        let root_src = lw.lower(root);
+        let stats = PlanStats {
+            instrs: prog.len(),
+            row_ops: lw.ops.len(),
+            scalar_ops: lw.scalars.len(),
+            cse_merged: builder.cse_merged,
+            folded: builder.folded,
+            fused: lw.fused,
+            regs: lw.n_regs as usize,
+        };
+        ExecPlan {
+            ops: lw.ops,
+            scalars: lw.scalars,
+            root: root_src,
+            dims: prog.dims,
+            n_params: prog.n_params,
+            stats,
+        }
+    }
+
+    pub fn stats(&self) -> PlanStats {
+        self.stats
+    }
+
+    pub fn ops(&self) -> &[PlanOp] {
+        &self.ops
+    }
+
+    /// Evaluate over `n <= scratch.chunk()` samples given *unit-cube*
+    /// uniform columns `u` (dimension-major, `u[d][i]`), per-dimension
+    /// bounds `lo`/`hi`, and parameters `theta`. Results land in
+    /// `out[..n]`, bit-identical to mapping `x = lo + (hi-lo)*u`
+    /// per dimension and running [`BatchInterp::eval`] on the result.
+    #[allow(clippy::too_many_arguments)]
+    pub fn run(
+        &self,
+        u: &[Vec<f32>],
+        lo: &[f32],
+        hi: &[f32],
+        theta: &[f32],
+        n: usize,
+        scratch: &mut PlanScratch,
+        out: &mut [f32],
+    ) {
+        assert!(n <= scratch.chunk);
+        assert!(u.len() >= self.dims && lo.len() >= self.dims);
+        assert!(theta.len() >= self.n_params);
+        scratch.ensure(self);
+        // scalar prologue: once per launch chunk, not per lane
+        for (i, sop) in self.scalars.iter().enumerate() {
+            let v = match *sop {
+                ScalarOp::Theta(t) => theta[t as usize],
+                ScalarOp::Un(op, a) => {
+                    unary_f32(op, sval(a, &scratch.scalars))
+                }
+                ScalarOp::Bin(op, a, b) => binary_f32(
+                    op,
+                    sval(a, &scratch.scalars),
+                    sval(b, &scratch.scalars),
+                ),
+            };
+            scratch.scalars[i] = v;
+        }
+        let chunk = scratch.chunk;
+        for op in &self.ops {
+            exec_op(op, &mut scratch.regs, &scratch.scalars, chunk, n, u, lo, hi);
+        }
+        match self.root {
+            Src::Reg(r) => out[..n].copy_from_slice(
+                &scratch.regs[r as usize * chunk..r as usize * chunk + n],
+            ),
+            Src::Imm(v) => out[..n].fill(v),
+            Src::Scalar(s) => out[..n].fill(scratch.scalars[s as usize]),
+        }
+    }
+}
+
+#[inline(always)]
+fn sval(s: SSrc, scalars: &[f32]) -> f32 {
+    match s {
+        SSrc::Imm(v) => v,
+        SSrc::Slot(i) => scalars[i as usize],
+    }
+}
+
+/// Either a register row (sliced to the live lanes) or a broadcast
+/// scalar — resolved from a [`Src`] before entering the lane loops.
+enum Rowed<'a> {
+    Row(&'a [f32]),
+    Val(f32),
+}
+
+/// Carve one mutable row plus up to three shared rows out of the
+/// register arena. All indices must be distinct from `dst` (duplicate
+/// *read* indices are fine — they share a slice). Pure safe code: the
+/// arena is progressively `split_at_mut` at sorted row boundaries.
+fn carve<'a>(
+    regs: &'a mut [f32],
+    chunk: usize,
+    n: usize,
+    dst: u16,
+    reads: [Option<u16>; 3],
+) -> (&'a mut [f32], [Option<&'a [f32]>; 3]) {
+    // unique sorted row indices involved
+    let mut uniq = [0u16; 4];
+    let mut m = 0usize;
+    for idx in std::iter::once(dst).chain(reads.iter().copied().flatten()) {
+        if !uniq[..m].contains(&idx) {
+            uniq[m] = idx;
+            m += 1;
+        }
+    }
+    uniq[..m].sort_unstable();
+    // progressively split the arena so each involved row is its own piece
+    let mut pieces: [Option<&'a mut [f32]>; 4] = [None, None, None, None];
+    let mut rest: &'a mut [f32] = regs;
+    let mut consumed = 0usize;
+    for (k, &idx) in uniq[..m].iter().enumerate() {
+        let start = idx as usize * chunk - consumed;
+        let tail = std::mem::take(&mut rest);
+        let (_, at_row) = tail.split_at_mut(start);
+        let (row, after) = at_row.split_at_mut(chunk);
+        pieces[k] = Some(row);
+        rest = after;
+        consumed = (idx as usize + 1) * chunk;
+    }
+    // hand the dst piece back mutable, demote the rest to shared
+    let mut dst_row: Option<&'a mut [f32]> = None;
+    let mut shared: [Option<&'a [f32]>; 4] = [None; 4];
+    for (k, &idx) in uniq[..m].iter().enumerate() {
+        let piece = pieces[k].take().expect("carved above");
+        if idx == dst {
+            dst_row = Some(piece);
+        } else {
+            shared[k] = Some(&piece[..n]);
+        }
+    }
+    let find = |want: u16| -> Option<&'a [f32]> {
+        debug_assert_ne!(want, dst, "read row may not alias dst");
+        uniq[..m]
+            .iter()
+            .position(|&i| i == want)
+            .and_then(|k| shared[k])
+    };
+    let out_reads = [
+        reads[0].and_then(find),
+        reads[1].and_then(find),
+        reads[2].and_then(find),
+    ];
+    let d: &'a mut [f32] = dst_row.expect("dst is always carved");
+    (&mut d[..n], out_reads)
+}
+
+#[inline(always)]
+fn reg_of(s: Src) -> Option<u16> {
+    match s {
+        Src::Reg(r) => Some(r),
+        _ => None,
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn exec_op(
+    op: &PlanOp,
+    regs: &mut [f32],
+    scalars: &[f32],
+    chunk: usize,
+    n: usize,
+    u: &[Vec<f32>],
+    lo: &[f32],
+    hi: &[f32],
+) {
+    match *op {
+        PlanOp::VarAffine { dst, dim } => {
+            let d = dim as usize;
+            let l = lo[d];
+            let w = hi[d] - lo[d];
+            let row =
+                &mut regs[dst as usize * chunk..dst as usize * chunk + n];
+            for (x, &ui) in row.iter_mut().zip(&u[d][..n]) {
+                *x = l + w * ui;
+            }
+        }
+        PlanOp::UnInPlace { op, dst } => {
+            let row =
+                &mut regs[dst as usize * chunk..dst as usize * chunk + n];
+            unary_each(op, |f| row.iter_mut().for_each(|x| *x = f(*x)));
+        }
+        PlanOp::Un { op, dst, a } => {
+            let (drow, [ar, _, _]) =
+                carve(regs, chunk, n, dst, [Some(a), None, None]);
+            let ar = ar.expect("unary operand row");
+            unary_each(op, |f| {
+                drow.iter_mut().zip(ar).for_each(|(x, &v)| *x = f(v))
+            });
+        }
+        PlanOp::BinAccA { op, dst, b } => match reg_of(b) {
+            // both operands were the same dying row (e.g. t*t)
+            Some(rb) if rb == dst => {
+                let row =
+                    &mut regs[dst as usize * chunk..dst as usize * chunk + n];
+                binary_each(op, |f| {
+                    row.iter_mut().for_each(|x| *x = f(*x, *x))
+                });
+            }
+            Some(rb) => {
+                let (drow, [br, _, _]) =
+                    carve(regs, chunk, n, dst, [Some(rb), None, None]);
+                let br = br.expect("acc operand row");
+                binary_each(op, |f| {
+                    drow.iter_mut().zip(br).for_each(|(x, &y)| *x = f(*x, y))
+                });
+            }
+            None => {
+                let v = src_val(b, scalars);
+                let row =
+                    &mut regs[dst as usize * chunk..dst as usize * chunk + n];
+                binary_each(op, |f| row.iter_mut().for_each(|x| *x = f(*x, v)));
+            }
+        },
+        PlanOp::BinAccB { op, dst, a } => match reg_of(a) {
+            Some(ra) => {
+                let (drow, [ar, _, _]) =
+                    carve(regs, chunk, n, dst, [Some(ra), None, None]);
+                let ar = ar.expect("acc operand row");
+                binary_each(op, |f| {
+                    drow.iter_mut().zip(ar).for_each(|(x, &y)| *x = f(y, *x))
+                });
+            }
+            None => {
+                let v = src_val(a, scalars);
+                let row =
+                    &mut regs[dst as usize * chunk..dst as usize * chunk + n];
+                binary_each(op, |f| row.iter_mut().for_each(|x| *x = f(v, *x)));
+            }
+        },
+        PlanOp::Bin { op, dst, a, b } => {
+            let (drow, [ar, br, _]) =
+                carve(regs, chunk, n, dst, [reg_of(a), reg_of(b), None]);
+            match (ar, br) {
+                (Some(ar), Some(br)) => binary_each(op, |f| {
+                    drow.iter_mut()
+                        .zip(ar)
+                        .zip(br)
+                        .for_each(|((x, &y), &z)| *x = f(y, z))
+                }),
+                (Some(ar), None) => {
+                    let v = src_val(b, scalars);
+                    binary_each(op, |f| {
+                        drow.iter_mut().zip(ar).for_each(|(x, &y)| *x = f(y, v))
+                    });
+                }
+                (None, Some(br)) => {
+                    let v = src_val(a, scalars);
+                    binary_each(op, |f| {
+                        drow.iter_mut().zip(br).for_each(|(x, &y)| *x = f(v, y))
+                    });
+                }
+                (None, None) => unreachable!("uniform op reached row loop"),
+            }
+        }
+        PlanOp::MulAcc { op, mul_first, dst, a, b, c } => {
+            let (drow, rows) = carve(
+                regs,
+                chunk,
+                n,
+                dst,
+                [reg_of(a), reg_of(b), reg_of(c)],
+            );
+            let ga = rowed(a, rows[0], scalars);
+            let gb = rowed(b, rows[1], scalars);
+            let gc = rowed(c, rows[2], scalars);
+            binary_each(op, |f| {
+                mulacc_loop(drow, &ga, &gb, &gc, mul_first, f)
+            });
+        }
+    }
+}
+
+#[inline(always)]
+fn src_val(s: Src, scalars: &[f32]) -> f32 {
+    match s {
+        Src::Imm(v) => v,
+        Src::Scalar(i) => scalars[i as usize],
+        Src::Reg(_) => unreachable!("register operand resolved elsewhere"),
+    }
+}
+
+fn rowed<'a>(s: Src, row: Option<&'a [f32]>, scalars: &[f32]) -> Rowed<'a> {
+    match s {
+        Src::Reg(_) => Rowed::Row(row.expect("carved row for reg operand")),
+        other => Rowed::Val(src_val(other, scalars)),
+    }
+}
+
+/// `dst[i] = f(a*b, c)` / `f(c, a*b)` — the product is one explicit f32
+/// multiply followed by the f32 accumulate, exactly the two operations
+/// the unfused pair performs (FP contraction is off in Rust, so this
+/// never becomes an FMA).
+#[inline(always)]
+fn mulacc_loop<F: Fn(f32, f32) -> f32>(
+    dst: &mut [f32],
+    a: &Rowed<'_>,
+    b: &Rowed<'_>,
+    c: &Rowed<'_>,
+    mul_first: bool,
+    f: F,
+) {
+    let get = |r: &Rowed<'_>, i: usize| match *r {
+        Rowed::Row(s) => s[i],
+        Rowed::Val(v) => v,
+    };
+    for i in 0..dst.len() {
+        let t = get(a, i) * get(b, i);
+        dst[i] = if mul_first { f(t, get(c, i)) } else { f(get(c, i), t) };
+    }
+}
+
+/// Monomorphize a lane loop per unary opcode: the `match` runs once per
+/// row, the closure body inlines the concrete operation. Expressions
+/// are textually identical to [`unary_f32`].
+#[inline(always)]
+fn unary_each<G: FnOnce(fn(f32) -> f32)>(op: Op, go: G) {
+    match op {
+        Op::NEG => go(|a| -a),
+        Op::ABS => go(|a| a.abs()),
+        Op::SIN => go(|a| a.sin()),
+        Op::COS => go(|a| a.cos()),
+        Op::TAN => go(|a| a.tan()),
+        Op::EXP => go(|a| a.exp()),
+        Op::LOG => go(|a| a.ln()),
+        Op::SQRT => go(|a| a.sqrt()),
+        Op::TANH => go(|a| a.tanh()),
+        Op::ATAN => go(|a| a.atan()),
+        Op::FLOOR => go(|a| a.floor()),
+        Op::SQUARE => go(|a| a * a),
+        Op::RECIP => go(|a| 1.0 / a),
+        _ => unreachable!("not unary: {op:?}"),
+    }
+}
+
+/// Binary twin of [`unary_each`] (expressions match [`binary_f32`]).
+#[inline(always)]
+fn binary_each<G: FnOnce(fn(f32, f32) -> f32)>(op: Op, go: G) {
+    match op {
+        Op::ADD => go(|a, b| a + b),
+        Op::SUB => go(|a, b| a - b),
+        Op::MUL => go(|a, b| a * b),
+        Op::DIV => go(|a, b| a / b),
+        Op::POW => go(|a, b| a.powf(b)),
+        Op::MIN => go(|a, b| a.min(b)),
+        Op::MAX => go(|a, b| a.max(b)),
+        _ => unreachable!("not binary: {op:?}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::expr::Expr;
+    use crate::vm::interp::BatchInterp;
+    use crate::vm::program::Instr;
+
+    fn plan_of(src: &str) -> ExecPlan {
+        ExecPlan::lower(&Expr::parse(src).unwrap().compile().unwrap())
+    }
+
+    /// Bit-exact cross-check of one plan against the stack interpreter
+    /// over deterministic pseudo-random lanes.
+    fn check(src: &str, dims: usize, theta: &[f32]) {
+        let prog = Expr::parse(src).unwrap().compile().unwrap();
+        let plan = ExecPlan::lower(&prog);
+        assert_eq!(plan.dims, prog.dims);
+        let n = 197;
+        let chunk = 256;
+        let lo: Vec<f32> = (0..dims).map(|d| -0.5 + d as f32 * 0.25).collect();
+        let hi: Vec<f32> = (0..dims).map(|d| 1.5 + d as f32 * 0.5).collect();
+        let u: Vec<Vec<f32>> = (0..dims)
+            .map(|d| {
+                (0..chunk)
+                    .map(|i| ((i * 37 + d * 101) % 1000) as f32 / 1000.0)
+                    .collect()
+            })
+            .collect();
+        // oracle: affine-map then stack-interpret
+        let xt: Vec<Vec<f32>> = (0..dims)
+            .map(|d| {
+                u[d].iter().map(|&ui| lo[d] + (hi[d] - lo[d]) * ui).collect()
+            })
+            .collect();
+        let mut interp = BatchInterp::new(chunk);
+        let mut want = vec![0f32; chunk];
+        interp.eval(&prog, &xt, theta, n, &mut want);
+        let mut scratch = PlanScratch::new(chunk);
+        let mut got = vec![0f32; chunk];
+        plan.run(&u, &lo, &hi, theta, n, &mut scratch, &mut got);
+        for i in 0..n {
+            assert_eq!(
+                got[i].to_bits(),
+                want[i].to_bits(),
+                "{src}: lane {i}: {} vs {}",
+                got[i],
+                want[i]
+            );
+        }
+    }
+
+    #[test]
+    fn constant_folding_to_immediate() {
+        // raw instructions (the expr layer would pre-fold this): the
+        // plan-level folder must collapse 2*3+1 to one immediate with
+        // zero row ops
+        let p = Program::new(vec![
+            Instr::konst(2.0),
+            Instr::konst(3.0),
+            Instr::new(Op::MUL),
+            Instr::konst(1.0),
+            Instr::new(Op::ADD),
+        ])
+        .unwrap();
+        let plan = ExecPlan::lower(&p);
+        assert_eq!(plan.stats().row_ops, 0);
+        assert_eq!(plan.root, Src::Imm(7.0));
+        assert_eq!(plan.stats().folded, 2);
+    }
+
+    #[test]
+    fn uniform_subtree_hoisted_to_scalar_prologue() {
+        // 2*pi*p0 is lane-invariant: zero row ops for it, evaluated per
+        // launch in the scalar prologue instead.
+        let plan = plan_of("cos(2*pi*p0 + p1*x1)");
+        let s = plan.stats();
+        assert!(s.scalar_ops >= 2, "{s:?}"); // theta loads + the product
+        // row side: affine var load, fused mul-add, cos
+        assert!(s.row_ops <= 3, "{s:?}");
+        assert_eq!(s.fused, 1);
+        check("cos(2*pi*p0 + p1*x1)", 1, &[0.3, 1.7]);
+    }
+
+    #[test]
+    fn cse_merges_repeated_subtrees() {
+        let plan = plan_of("sin(x1*x2) + sin(x1*x2)");
+        let s = plan.stats();
+        assert!(s.cse_merged >= 1, "{s:?}");
+        // two var loads, one product, one sin, one add — the stack
+        // interpreter would pay nine row passes for this program
+        assert!(s.row_ops <= 5, "{s:?}");
+        check("sin(x1*x2) + sin(x1*x2)", 2, &[]);
+    }
+
+    #[test]
+    fn mul_add_fuses_without_changing_bits() {
+        let plan = plan_of("x1*x2 + x3");
+        assert_eq!(plan.stats().fused, 1);
+        assert!(plan
+            .ops()
+            .iter()
+            .any(|o| matches!(o, PlanOp::MulAcc { op: Op::ADD, .. })));
+        check("x1*x2 + x3", 3, &[]);
+        check("x3 - x1*x2", 3, &[]);
+        check("x1*x2 - x3", 3, &[]);
+    }
+
+    #[test]
+    fn shared_mul_is_not_fused() {
+        // the product is used twice — fusing would either duplicate the
+        // multiply or break CSE, so it must materialize
+        let plan = plan_of("(x1*x2 + x3) + (x1*x2)");
+        let s = plan.stats();
+        assert_eq!(s.fused, 0, "{s:?}");
+        check("(x1*x2 + x3) + (x1*x2)", 3, &[]);
+    }
+
+    #[test]
+    fn register_rows_are_recycled() {
+        // a long sum chain needs O(1) registers, not O(len)
+        let plan = plan_of("x1*p1 + x2*p2 + x3*p3 + x4*p4 + x5*p5");
+        assert!(plan.stats().regs <= 4, "{:?}", plan.stats());
+        check("x1*p1 + x2*p2 + x3*p3 + x4*p4 + x5*p5", 5, &[
+            0.0, 1.1, 2.2, 3.3, 4.4, 5.5,
+        ]);
+    }
+
+    #[test]
+    fn affine_domain_map_is_folded_into_var_loads() {
+        let plan = plan_of("x1 + x2");
+        assert!(plan
+            .ops()
+            .iter()
+            .any(|o| matches!(o, PlanOp::VarAffine { .. })));
+        check("x1 + x2", 2, &[]);
+    }
+
+    #[test]
+    fn genz_style_programs_bit_exact() {
+        check("cos(2*pi*p0 + p1*x1 + p2*x2 + p3*x3)", 3, &[
+            0.25, 1.3, 0.7, 2.1,
+        ]);
+        check(
+            "1/((p0^(0-2) + (x1-p2)^2) * (p1^(0-2) + (x2-p3)^2))",
+            2,
+            &[2.0, 3.0, 0.35, 0.65],
+        );
+        check("exp(0 - (p0*p0*(x1-p2)^2 + p1*p1*(x2-p3)^2))", 2, &[
+            1.5, 2.5, 0.5, 0.5,
+        ]);
+        check("(1 + p0*x1 + p1*x2)^(0-3)", 2, &[0.4, 0.6]);
+        check("exp(0 - p0*abs(x1 - p1))", 1, &[2.0, 0.5]);
+    }
+
+    #[test]
+    fn special_values_fold_bit_exactly() {
+        // folding 1/0 and sqrt(-1) must produce the exact inf/NaN bits
+        // the runtime op would
+        let p = Program::new(vec![
+            Instr::konst(1.0),
+            Instr::konst(0.0),
+            Instr::new(Op::DIV),
+            Instr::var(0),
+            Instr::new(Op::ADD),
+        ])
+        .unwrap();
+        let plan = ExecPlan::lower(&p);
+        let mut interp = BatchInterp::new(8);
+        let u = vec![vec![0.25f32; 8]];
+        let xt = vec![vec![0.25f32; 8]];
+        let (lo, hi) = (vec![0.0f32], vec![1.0f32]);
+        let mut want = vec![0f32; 8];
+        interp.eval(&p, &xt, &[], 8, &mut want);
+        let mut scratch = PlanScratch::new(8);
+        let mut got = vec![0f32; 8];
+        plan.run(&u, &lo, &hi, &[], 8, &mut scratch, &mut got);
+        for i in 0..8 {
+            assert_eq!(got[i].to_bits(), want[i].to_bits());
+        }
+    }
+
+    #[test]
+    fn single_leaf_programs() {
+        // pure-constant program: root is an immediate
+        let p = Program::new(vec![Instr::konst(2.5)]).unwrap();
+        let plan = ExecPlan::lower(&p);
+        let mut scratch = PlanScratch::new(4);
+        let mut out = vec![0f32; 4];
+        plan.run(&[], &[], &[], &[], 4, &mut scratch, &mut out);
+        assert_eq!(out, vec![2.5; 4]);
+        // pure-param program: root is a launch-time scalar
+        let p = Program::new(vec![Instr::param(1)]).unwrap();
+        let plan = ExecPlan::lower(&p);
+        plan.run(&[], &[], &[], &[0.0, 9.0], 4, &mut scratch, &mut out);
+        assert_eq!(out, vec![9.0; 4]);
+        // pure-var program: affine load only
+        let p = Program::new(vec![Instr::var(0)]).unwrap();
+        let plan = ExecPlan::lower(&p);
+        let u = vec![vec![0.5f32; 4]];
+        plan.run(&u, &[2.0], &[4.0], &[], 4, &mut scratch, &mut out);
+        assert_eq!(out, vec![3.0; 4]);
+    }
+
+    #[test]
+    fn lane_dispatch_tables_cover_every_opcode_bitwise() {
+        // unary_each/binary_each textually duplicate the scalar op
+        // tables; this guards against drift — a new opcode missing from
+        // either copy panics here (unreachable!), and a divergent
+        // expression fails the bit-compare.
+        for &op in crate::vm::opcodes::ALL {
+            match op.kind() {
+                crate::vm::opcodes::Kind::Unary => {
+                    for x in [0.7f32, -1.3, 4.0, 0.0] {
+                        let mut got = f32::NAN;
+                        unary_each(op, |f| got = f(x));
+                        let want = unary_f32(op, x);
+                        assert!(
+                            got.to_bits() == want.to_bits()
+                                || (got.is_nan() && want.is_nan()),
+                            "{op:?}({x}): {got} vs {want}"
+                        );
+                    }
+                }
+                crate::vm::opcodes::Kind::Binary => {
+                    for (x, y) in [(0.7f32, -1.3f32), (2.0, 3.0), (0.0, 0.5)]
+                    {
+                        let mut got = f32::NAN;
+                        binary_each(op, |f| got = f(x, y));
+                        let want = binary_f32(op, x, y);
+                        assert!(
+                            got.to_bits() == want.to_bits()
+                                || (got.is_nan() && want.is_nan()),
+                            "{op:?}({x},{y}): {got} vs {want}"
+                        );
+                    }
+                }
+                _ => {}
+            }
+        }
+    }
+
+    #[test]
+    fn carve_handles_duplicate_reads() {
+        let mut regs = vec![0f32; 4 * 8];
+        regs[8..16].copy_from_slice(&[1.0; 8]);
+        let (d, reads) =
+            carve(&mut regs, 8, 8, 3, [Some(1), Some(1), Some(0)]);
+        assert_eq!(d.len(), 8);
+        assert_eq!(reads[0].unwrap(), &[1.0; 8]);
+        assert_eq!(reads[1].unwrap(), &[1.0; 8]);
+        assert_eq!(reads[2].unwrap(), &[0.0; 8]);
+    }
+}

@@ -338,6 +338,69 @@ mod device_backed {
     }
 
     #[test]
+    fn single_worker_lowers_each_program_row_exactly_once() {
+        // the plan-ledger twin of the compile-ledger test above: every
+        // distinct program row is decoded + lowered at most once per
+        // worker, no matter how many times the batch is resubmitted
+        let (reg, engine) = engine(1);
+        // distinct *program rows* (the constant differs per function —
+        // theta alone would share one row and one plan)
+        let js: Vec<IntegralJob> = (0..6)
+            .map(|i| {
+                IntegralJob::parse(
+                    &format!("x1^2 + {}.5", i),
+                    &[(0.0, 1.0)],
+                )
+                .unwrap()
+            })
+            .collect();
+        let first = multifunctions::integrate(&engine, &js, &cfg()).unwrap();
+        assert_eq!(reg.plan_lower_count(), 6);
+        let hits_after_first = reg.plan_hit_count();
+        for _ in 0..10 {
+            let again =
+                multifunctions::integrate(&engine, &js, &cfg()).unwrap();
+            // bit-identical results through the warm plan cache
+            assert_eq!(again[0].value, first[0].value);
+        }
+        assert_eq!(
+            reg.plan_lower_count(),
+            6,
+            "repeated integrate() must not re-lower program rows"
+        );
+        assert!(
+            reg.plan_hit_count() > hits_after_first,
+            "warm launches must hit the plan cache"
+        );
+        // the engine metrics see the same events the registry ledgered
+        assert_eq!(engine.metrics().plan_misses(), 6);
+        assert!(engine.metrics().plan_hits() > 0);
+    }
+
+    #[test]
+    fn multi_worker_lowers_each_row_at_most_once_per_worker() {
+        let (reg, engine) = engine(2);
+        let js: Vec<IntegralJob> = (0..8)
+            .map(|i| {
+                IntegralJob::parse(
+                    &format!("x1*{}.25 + x1", i),
+                    &[(0.0, 1.0)],
+                )
+                .unwrap()
+            })
+            .collect();
+        for _ in 0..6 {
+            multifunctions::integrate(&engine, &js, &cfg()).unwrap();
+        }
+        let lowers = reg.plan_lower_count();
+        assert!(
+            (8..=16).contains(&lowers),
+            "lowers={lowers}: must be <= n_workers x distinct rows and \
+             never grow with submit count"
+        );
+    }
+
+    #[test]
     fn multi_worker_compiles_at_most_once_per_worker() {
         let (reg, engine) = engine(2);
         let js = jobs(40); // 5 blocks x 1 chunk: both workers get launches

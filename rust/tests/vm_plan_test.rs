@@ -1,0 +1,242 @@
+//! Differential property suite for the optimizing VM pipeline: random
+//! valid stack programs and inputs must evaluate **bit-exactly** the
+//! same through (a) [`ExecPlan`] execution over raw uniforms with the
+//! folded affine domain map, (b) the columnar stack oracle
+//! [`BatchInterp`] over pre-mapped coordinates, and (c) the per-lane
+//! scalar f32 interpreter [`eval_scalar_f32`] — exercising every
+//! lowering pass (CSE duplicates, foldable constant clusters, uniform
+//! parameter subtrees, MUL→ADD/SUB fusion sites) by construction, and
+//! sanity-bounding against the f64 oracle [`eval_scalar`].
+
+use zmc::abi::{MAX_DIM, MAX_PARAM, STACK};
+use zmc::util::proptest::{check, Gen};
+use zmc::vm::interp::{eval_scalar, eval_scalar_f32, BatchInterp};
+use zmc::vm::plan::{ExecPlan, PlanScratch};
+use zmc::vm::program::{Instr, Program};
+use zmc::vm::Op;
+
+const UNARIES: &[Op] = &[
+    Op::NEG,
+    Op::ABS,
+    Op::SIN,
+    Op::COS,
+    Op::TAN,
+    Op::EXP,
+    Op::LOG,
+    Op::SQRT,
+    Op::TANH,
+    Op::ATAN,
+    Op::FLOOR,
+    Op::SQUARE,
+    Op::RECIP,
+];
+const BINARIES: &[Op] =
+    &[Op::ADD, Op::SUB, Op::MUL, Op::DIV, Op::POW, Op::MIN, Op::MAX];
+
+/// Generate a random valid stack program: pushes and operations chosen
+/// so the stack discipline holds, then the stack is reduced to depth 1
+/// with binaries. Biases toward MUL-feeding-ADD shapes (fusion sites)
+/// and repeated small leaf pools (CSE/fold sites).
+fn gen_program(g: &mut Gen, dims: usize, params: usize) -> Program {
+    let body = 3 + g.below(24);
+    let mut instrs: Vec<Instr> = Vec::with_capacity(body + STACK);
+    let mut depth = 0i32;
+    // small leaf pools so identical subexpressions actually recur
+    let consts: Vec<f32> =
+        (0..3).map(|_| g.range_f32(-3.0, 3.0)).collect();
+    for _ in 0..body {
+        let can_bin = depth >= 2;
+        let can_un = depth >= 1;
+        let must_push = depth < (STACK as i32) && !can_un;
+        let roll = g.below(10);
+        if must_push || (depth < STACK as i32 && roll < 4) {
+            instrs.push(match g.below(4) {
+                0 => Instr::konst(*g.choose(&consts)),
+                1 => Instr::var(g.below(dims)),
+                2 if params > 0 => Instr::param(g.below(params)),
+                _ => Instr::var(g.below(dims)),
+            });
+            depth += 1;
+        } else if can_bin && (roll < 8 || !can_un) {
+            // bias toward the fusion pair: MUL often directly under ADD
+            let op = if g.below(3) == 0 {
+                Op::MUL
+            } else {
+                *g.choose(BINARIES)
+            };
+            instrs.push(Instr::new(op));
+            depth -= 1;
+        } else if can_un {
+            instrs.push(Instr::new(*g.choose(UNARIES)));
+        }
+    }
+    while depth > 1 {
+        instrs.push(Instr::new(if g.bool() {
+            Op::ADD
+        } else {
+            *g.choose(BINARIES)
+        }));
+        depth -= 1;
+    }
+    if depth == 0 {
+        instrs.push(Instr::konst(1.0));
+    }
+    Program::new(instrs).expect("generator keeps stack discipline")
+}
+
+#[test]
+fn plan_batch_and_scalar_f32_agree_bitwise() {
+    check(0x9C0F_FEE5, 300, |g| {
+        let dims = 1 + g.below(MAX_DIM);
+        let params = g.below(MAX_PARAM.min(6));
+        let prog = gen_program(g, dims, params.max(1));
+        let plan = ExecPlan::lower(&prog);
+        assert_eq!(plan.dims, prog.dims);
+        assert_eq!(plan.n_params, prog.n_params);
+
+        let chunk = 64;
+        let n = 1 + g.below(chunk);
+        let theta: Vec<f32> =
+            (0..MAX_PARAM).map(|_| g.range_f32(-2.0, 2.0)).collect();
+        let lo: Vec<f32> =
+            (0..dims).map(|_| g.range_f32(-2.0, 1.0)).collect();
+        let hi: Vec<f32> = lo
+            .iter()
+            .map(|&l| l + g.range_f32(0.1, 3.0))
+            .collect();
+        let u: Vec<Vec<f32>> = (0..dims)
+            .map(|_| (0..chunk).map(|_| g.range_f32(0.0, 1.0)).collect())
+            .collect();
+        // the affine domain map, applied exactly as the device does
+        let xt: Vec<Vec<f32>> = (0..dims)
+            .map(|d| {
+                u[d].iter()
+                    .map(|&ui| lo[d] + (hi[d] - lo[d]) * ui)
+                    .collect()
+            })
+            .collect();
+
+        let mut interp = BatchInterp::new(chunk);
+        let mut want = vec![0f32; chunk];
+        interp.eval(&prog, &xt, &theta, n, &mut want);
+
+        let mut scratch = PlanScratch::new(chunk);
+        let mut got = vec![0f32; chunk];
+        plan.run(&u, &lo, &hi, &theta, n, &mut scratch, &mut got);
+
+        let mut x = vec![0f32; dims];
+        for i in 0..n {
+            for d in 0..dims {
+                x[d] = xt[d][i];
+            }
+            let scalar = eval_scalar_f32(&prog, &x, &theta);
+            assert_eq!(
+                got[i].to_bits(),
+                want[i].to_bits(),
+                "plan vs batch, lane {i}\n{}",
+                prog.disasm()
+            );
+            assert_eq!(
+                got[i].to_bits(),
+                scalar.to_bits(),
+                "plan vs scalar-f32, lane {i}\n{}",
+                prog.disasm()
+            );
+        }
+    });
+}
+
+#[test]
+fn plan_tracks_f64_oracle_on_tame_programs() {
+    // the f64 oracle can't be bit-exact (different rounding), but on
+    // numerically tame programs the plan result must stay within a
+    // loose f32 relative envelope of the f64 value
+    check(0x0F64_0A11, 150, |g| {
+        let dims = 1 + g.below(3);
+        // tame ops only: no EXP/POW blowups, no LOG/SQRT domain edges
+        let prog = {
+            let mut instrs = vec![Instr::var(0)];
+            let mut depth = 1i32;
+            for _ in 0..8 {
+                if depth >= 2 && g.bool() {
+                    instrs.push(Instr::new(
+                        *g.choose(&[Op::ADD, Op::SUB, Op::MUL]),
+                    ));
+                    depth -= 1;
+                } else if g.bool() {
+                    instrs.push(Instr::new(
+                        *g.choose(&[Op::NEG, Op::SIN, Op::COS, Op::TANH]),
+                    ));
+                } else {
+                    instrs.push(match g.below(3) {
+                        0 => Instr::konst(g.range_f32(-2.0, 2.0)),
+                        1 => Instr::var(g.below(dims)),
+                        _ => Instr::param(g.below(2)),
+                    });
+                    depth += 1;
+                }
+            }
+            while depth > 1 {
+                instrs.push(Instr::new(Op::ADD));
+                depth -= 1;
+            }
+            Program::new(instrs).unwrap()
+        };
+        let plan = ExecPlan::lower(&prog);
+        let theta32 = [0.75f32, -0.5];
+        let theta64: Vec<f64> = theta32.iter().map(|&t| t as f64).collect();
+        let lo = vec![0.0f32; dims];
+        let hi = vec![1.0f32; dims];
+        let chunk = 16;
+        let u: Vec<Vec<f32>> = (0..dims)
+            .map(|_| (0..chunk).map(|_| g.range_f32(0.0, 1.0)).collect())
+            .collect();
+        let mut scratch = PlanScratch::new(chunk);
+        let mut got = vec![0f32; chunk];
+        plan.run(&u, &lo, &hi, &theta32, chunk, &mut scratch, &mut got);
+        for i in 0..chunk {
+            let x64: Vec<f64> =
+                (0..dims).map(|d| u[d][i] as f64).collect();
+            let want = eval_scalar(&prog, &x64, &theta64);
+            // loose envelope: f32 rounding compounds through mul/sub
+            // chains; the bit-exact contract is the test above, this
+            // one only guards against gross semantic drift
+            let tol = 5e-3 * want.abs().max(1.0);
+            assert!(
+                (got[i] as f64 - want).abs() <= tol,
+                "lane {i}: {} vs f64 {want}\n{}",
+                got[i],
+                prog.disasm()
+            );
+        }
+    });
+}
+
+#[test]
+fn plan_reuse_across_programs_and_chunk_sizes() {
+    // one scratch serves plans of different register pressure and
+    // different programs back to back (the per-worker usage pattern)
+    let mut g = Gen::new(77);
+    let mut scratch = PlanScratch::new(96);
+    let mut out = vec![0f32; 96];
+    let mut interp = BatchInterp::new(96);
+    let mut want = vec![0f32; 96];
+    for _ in 0..50 {
+        let dims = 1 + g.below(4);
+        let prog = gen_program(&mut g, dims, 2);
+        let plan = ExecPlan::lower(&prog);
+        let n = 1 + g.below(96);
+        let u: Vec<Vec<f32>> = (0..dims)
+            .map(|_| (0..96).map(|_| g.range_f32(0.0, 1.0)).collect())
+            .collect();
+        let lo = vec![0.0f32; dims];
+        let hi = vec![1.0f32; dims];
+        let theta = [0.5f32, -1.5];
+        plan.run(&u, &lo, &hi, &theta, n, &mut scratch, &mut out);
+        // lo=0, hi=1 makes the affine map the identity (0 + 1*u)
+        interp.eval(&prog, &u, &theta, n, &mut want);
+        for i in 0..n {
+            assert_eq!(out[i].to_bits(), want[i].to_bits(), "lane {i}");
+        }
+    }
+}
