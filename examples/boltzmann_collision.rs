@@ -21,14 +21,9 @@
 //! cargo run --release --example boltzmann_collision
 //! ```
 
-use std::sync::Arc;
-
-use zmc::engine::Engine;
-use zmc::integrator::functional::{self, linspace};
-use zmc::integrator::multifunctions::MultiConfig;
+use zmc::integrator::functional::linspace;
 use zmc::integrator::spec::IntegralJob;
-use zmc::runtime::device::DevicePool;
-use zmc::runtime::registry::Registry;
+use zmc::session::Session;
 
 /// The collision integrand at (u, th, ph) for parameters
 /// p0 = E (beam energy), p1 = ε(E) (screening).
@@ -82,11 +77,10 @@ fn main() -> anyhow::Result<()> {
         .and_then(|v| v.parse().ok())
         .unwrap_or(1 << 17);
 
-    let registry = Arc::new(
-        Registry::load("artifacts").unwrap_or_else(|_| Registry::emulated()),
-    );
-    let pool = DevicePool::new(&registry, 1)?;
-    let engine = Engine::for_pool(&pool)?;
+    let session = Session::builder()
+        .artifacts_or_emulator("artifacts")
+        .workers(1)
+        .build()?;
 
     // beam energies E ∈ [0.5, 8] (units of kT), screening ε(E) = 0.02+0.01·E
     let energies = linspace(0.5, 8.0, n_beams);
@@ -100,13 +94,12 @@ fn main() -> anyhow::Result<()> {
         &[(0.0, 1.0), (0.0, 1.0), (0.0, 1.0)],
         &thetas[0],
     )?;
-    let cfg = MultiConfig {
-        samples_per_fn: samples,
-        seed: 1986,
-        ..Default::default()
-    };
     let t0 = std::time::Instant::now();
-    let rates = functional::scan(&engine, &job, &thetas, &cfg)?;
+    let rates = session
+        .functional(&job, &thetas)
+        .samples(samples)
+        .seed(1986)
+        .run()?;
     let wall = t0.elapsed().as_secs_f64();
 
     println!("# beam  E  rate  sigma  reference  |z|");

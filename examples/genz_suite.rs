@@ -10,14 +10,9 @@
 //! cargo run --release --example genz_suite
 //! ```
 
-use std::sync::Arc;
-
 use zmc::analytic;
-use zmc::engine::Engine;
-use zmc::integrator::multifunctions::{self, MultiConfig};
 use zmc::integrator::spec::IntegralJob;
-use zmc::runtime::device::DevicePool;
-use zmc::runtime::registry::Registry;
+use zmc::session::Session;
 
 struct Case {
     name: String,
@@ -30,11 +25,10 @@ fn main() -> anyhow::Result<()> {
         .ok()
         .and_then(|v| v.parse().ok())
         .unwrap_or(1 << 18);
-    let registry = Arc::new(
-        Registry::load("artifacts").unwrap_or_else(|_| Registry::emulated()),
-    );
-    let pool = DevicePool::new(&registry, 1)?;
-    let engine = Engine::for_pool(&pool)?;
+    let session = Session::builder()
+        .artifacts_or_emulator("artifacts")
+        .workers(1)
+        .build()?;
     let unit2 = [(0.0, 1.0), (0.0, 1.0)];
     let unit3 = [(0.0, 1.0), (0.0, 1.0), (0.0, 1.0)];
 
@@ -92,13 +86,12 @@ fn main() -> anyhow::Result<()> {
 
     let jobs: Vec<IntegralJob> =
         cases.iter().map(|c| c.job.clone()).collect();
-    let cfg = MultiConfig {
-        samples_per_fn: samples,
-        seed: 31415,
-        ..Default::default()
-    };
     let t0 = std::time::Instant::now();
-    let ests = multifunctions::integrate(&engine, &jobs, &cfg)?;
+    let ests = session
+        .multifunctions(&jobs)
+        .samples(samples)
+        .seed(31415)
+        .run()?;
     let wall = t0.elapsed().as_secs_f64();
 
     println!("# case  estimate  sigma  truth  |z|");
@@ -125,15 +118,18 @@ fn main() -> anyhow::Result<()> {
         .ok()
         .and_then(|v| v.parse().ok())
         .unwrap_or(5e-3);
-    let acfg = MultiConfig {
+    let acfg = zmc::integrator::multifunctions::MultiConfig {
         samples_per_fn: samples.max(1 << 16),
         seed: 31415,
         target_rel_err: Some(target),
         ..Default::default()
     };
     let t0 = std::time::Instant::now();
+    // the report-returning adaptive entry point takes the session's
+    // LaunchExec directly (the builder's .target_rel_err() path wraps
+    // the same loop without the diagnostics)
     let (aests, report) =
-        zmc::adaptive::integrate_with_report(&engine, &jobs, &acfg)?;
+        zmc::adaptive::integrate_with_report(session.exec(), &jobs, &acfg)?;
     let awall = t0.elapsed().as_secs_f64();
 
     println!("# adaptive to {target:.0e} rel err:");

@@ -10,13 +10,8 @@
 //! ZMC_N=20 ZMC_SAMPLES=65536 cargo run --release --example harmonic_series
 //! ```
 
-use std::sync::Arc;
-
-use zmc::engine::Engine;
-use zmc::integrator::harmonic::{self, HarmonicBatch};
-use zmc::integrator::multifunctions::MultiConfig;
-use zmc::runtime::device::DevicePool;
-use zmc::runtime::registry::Registry;
+use zmc::integrator::harmonic::HarmonicBatch;
+use zmc::session::Session;
 use zmc::stats::Welford;
 
 fn env_usize(key: &str, default: usize) -> usize {
@@ -32,25 +27,22 @@ fn main() -> anyhow::Result<()> {
     let trials = env_usize("ZMC_TRIALS", 10) as u32;
     let workers = env_usize("ZMC_WORKERS", 1);
 
-    let registry = Arc::new(
-        Registry::load("artifacts").unwrap_or_else(|_| Registry::emulated()),
-    );
-    let pool = DevicePool::new(&registry, workers)?;
-    let engine = Engine::for_pool(&pool)?;
+    let session = Session::builder()
+        .artifacts_or_emulator("artifacts")
+        .workers(workers)
+        .build()?;
     let batch = HarmonicBatch::fig1(n);
-    let cfg = MultiConfig {
-        samples_per_fn: samples,
-        seed: 2021,
-        ..Default::default()
-    };
 
     println!(
         "# Fig.1: {n} harmonics, {samples} samples/fn, {trials} trials, \
          {workers} worker(s)"
     );
     let t0 = std::time::Instant::now();
-    let per_trial =
-        harmonic::integrate_trials(&engine, &batch, &cfg, trials)?;
+    let per_trial = session
+        .harmonic(&batch)
+        .samples(samples)
+        .seed(2021)
+        .run_trials(trials)?;
     let wall = t0.elapsed().as_secs_f64();
 
     println!("# n  mean  dF  analytic  inside_band");

@@ -11,25 +11,19 @@
 //! cargo run --release --example mixed_dims
 //! ```
 
-use std::sync::Arc;
-
 use zmc::analytic;
-use zmc::engine::Engine;
-use zmc::integrator::multifunctions::{self, MultiConfig};
 use zmc::integrator::spec::IntegralJob;
-use zmc::runtime::device::DevicePool;
-use zmc::runtime::registry::Registry;
+use zmc::session::Session;
 
 fn main() -> anyhow::Result<()> {
     let samples = std::env::var("ZMC_SAMPLES")
         .ok()
         .and_then(|v| v.parse().ok())
         .unwrap_or(1 << 17);
-    let registry = Arc::new(
-        Registry::load("artifacts").unwrap_or_else(|_| Registry::emulated()),
-    );
-    let pool = DevicePool::new(&registry, 1)?;
-    let engine = Engine::for_pool(&pool)?;
+    let session = Session::builder()
+        .artifacts_or_emulator("artifacts")
+        .workers(1)
+        .build()?;
 
     // a_n, b_n: arbitrary but reproducible coefficient ramps
     let mut jobs = Vec::new();
@@ -54,13 +48,9 @@ fn main() -> anyhow::Result<()> {
         }
     }
 
-    let cfg = MultiConfig {
-        samples_per_fn: samples,
-        seed: 77,
-        ..Default::default()
-    };
     let t0 = std::time::Instant::now();
-    let ests = multifunctions::integrate(&engine, &jobs, &cfg)?;
+    let ests =
+        session.multifunctions(&jobs).samples(samples).seed(77).run()?;
     let wall = t0.elapsed().as_secs_f64();
 
     println!("# n  dims  estimate  sigma  analytic  |z|");

@@ -5,23 +5,18 @@
 //! cargo run --release --example quickstart
 //! ```
 
-use std::sync::Arc;
-
-use zmc::engine::Engine;
-use zmc::integrator::multifunctions::{self, MultiConfig};
 use zmc::integrator::spec::IntegralJob;
-use zmc::runtime::device::DevicePool;
-use zmc::runtime::registry::Registry;
+use zmc::session::Session;
 
 fn main() -> anyhow::Result<()> {
-    // 1. load the AOT artifacts (built once by `make artifacts`), or the
-    //    emulated registry when running without PJRT, and spawn the
-    //    persistent engine: workers + executable caches live from here on
-    let registry = Arc::new(
-        Registry::load("artifacts").unwrap_or_else(|_| Registry::emulated()),
-    );
-    let pool = DevicePool::new(&registry, 1)?;
-    let engine = Engine::for_pool(&pool)?;
+    // 1. one Session owns the whole stack: the AOT artifacts (built
+    //    once by `make artifacts`, with emulator fallback when running
+    //    without PJRT), the device pool, and the persistent engine —
+    //    workers + executable caches live from here on
+    let session = Session::builder()
+        .artifacts_or_emulator("artifacts")
+        .workers(1)
+        .build()?;
 
     // 2. describe the integral: ∫∫ sin(x1)·x2 over [0,π]×[0,1]
     let job = IntegralJob::parse(
@@ -31,15 +26,14 @@ fn main() -> anyhow::Result<()> {
 
     // 3. run it — the expression was compiled to device bytecode; the
     //    launch runs on the simulated device pool standing in for a GPU.
-    let cfg = MultiConfig {
-        samples_per_fn: 1 << 20,
-        seed: 42,
-        ..Default::default()
-    };
-    let est = multifunctions::integrate(&engine, &[job], &cfg)?[0];
+    let est = session
+        .multifunctions(std::slice::from_ref(&job))
+        .samples(1 << 20)
+        .seed(42)
+        .run()?[0];
 
     // truth: ∫ sin = 2, ∫ x2 = 1/2 → 1.0
-    println!("I        = {:.6} ± {:.2e}", est.value, est.std_err);
+    println!("{est}");
     println!("analytic = 1.000000");
     println!(
         "|z|      = {:.2}",

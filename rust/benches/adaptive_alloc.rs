@@ -15,14 +15,10 @@
 //!
 //! Env knobs: ZMC_ADA_FUNCS, ZMC_ADA_TARGET, ZMC_ADA_CAP.
 
-use std::sync::Arc;
-
 use zmc::adaptive::{self, Allocation};
-use zmc::engine::Engine;
 use zmc::integrator::multifunctions::{self, MultiConfig};
 use zmc::integrator::spec::{Estimate, IntegralJob};
-use zmc::runtime::device::DevicePool;
-use zmc::runtime::registry::Registry;
+use zmc::session::Session;
 use zmc::util::bench::{fmt_s, Bench};
 
 fn env(key: &str, default: usize) -> usize {
@@ -76,11 +72,11 @@ fn main() -> anyhow::Result<()> {
     let target = env_f64("ZMC_ADA_TARGET", 0.005);
     let cap = env("ZMC_ADA_CAP", 1 << 18);
 
-    let registry = Arc::new(
-        Registry::load("artifacts").unwrap_or_else(|_| Registry::emulated()),
-    );
-    let pool = DevicePool::new(&registry, 1)?;
-    let engine = Engine::for_pool(&pool)?;
+    let session = Session::builder()
+        .artifacts_or_emulator("artifacts")
+        .workers(1)
+        .build()?;
+    let engine = session.engine();
     let jobs = workload(n_funcs);
     let mut b = Bench::new("adaptive_alloc");
 
@@ -98,7 +94,7 @@ fn main() -> anyhow::Result<()> {
         };
         let t0 = std::time::Instant::now();
         let (ests, report) =
-            adaptive::integrate_with_report(&engine, &jobs, &cfg)?;
+            adaptive::integrate_with_report(engine, &jobs, &cfg)?;
         let wall = t0.elapsed().as_secs_f64();
         let min_n = ests.iter().map(|e| e.n_samples).min().unwrap_or(0);
         let max_n = ests.iter().map(|e| e.n_samples).max().unwrap_or(0);
@@ -140,7 +136,7 @@ fn main() -> anyhow::Result<()> {
             seed: 99,
             ..Default::default()
         };
-        let ests = multifunctions::integrate(&engine, &jobs, &cfg)?;
+        let ests = multifunctions::integrate(engine, &jobs, &cfg)?;
         if all_converged(&ests, target) {
             oneshot = Some(samples_per_fn as u64 * n_funcs as u64);
             break;

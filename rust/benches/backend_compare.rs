@@ -7,15 +7,11 @@
 //!
 //! Env knobs: ZMC_A3_SAMPLES.
 
-use std::sync::Arc;
-
-use zmc::engine::Engine;
 use zmc::integrator::direct;
 use zmc::integrator::harmonic::{self, HarmonicBatch};
 use zmc::integrator::multifunctions::{self, MultiConfig};
 use zmc::integrator::spec::IntegralJob;
-use zmc::runtime::device::DevicePool;
-use zmc::runtime::registry::Registry;
+use zmc::session::Session;
 use zmc::util::bench::{fmt_s, time, Bench};
 
 fn env(key: &str, default: usize) -> usize {
@@ -24,11 +20,11 @@ fn env(key: &str, default: usize) -> usize {
 
 fn main() -> anyhow::Result<()> {
     let samples = env("ZMC_A3_SAMPLES", 1 << 16);
-    let registry = Arc::new(
-        Registry::load("artifacts").unwrap_or_else(|_| Registry::emulated()),
-    );
-    let pool = DevicePool::new(&registry, 1)?;
-    let engine = Engine::for_pool(&pool)?;
+    let session = Session::builder()
+        .artifacts_or_emulator("artifacts")
+        .workers(1)
+        .build()?;
+    let engine = session.engine();
     let mut b = Bench::new("backend_compare");
 
     let cases = [
@@ -46,7 +42,7 @@ fn main() -> anyhow::Result<()> {
         };
         let td = time(1, 3, || {
             multifunctions::integrate(
-                &engine,
+                engine,
                 std::slice::from_ref(&job),
                 &cfg,
             )
@@ -86,7 +82,7 @@ fn main() -> anyhow::Result<()> {
         ..Default::default()
     };
     let th = time(1, 3, || {
-        harmonic::integrate(&engine, &batch, &hcfg).unwrap();
+        harmonic::integrate(engine, &batch, &hcfg).unwrap();
     });
     let vm_jobs: Vec<IntegralJob> = (1..=n)
         .map(|i| {
@@ -106,7 +102,7 @@ fn main() -> anyhow::Result<()> {
         ..Default::default()
     };
     let tv = time(1, 2, || {
-        multifunctions::integrate(&engine, &vm_jobs, &vcfg).unwrap();
+        multifunctions::integrate(engine, &vm_jobs, &vcfg).unwrap();
     });
     // function-samples per second (n functions × S samples per run)
     let fsamp = (n as usize * samples) as f64;

@@ -19,11 +19,11 @@
 use std::sync::Arc;
 use std::time::Instant;
 
-use zmc::cluster::{DeviceCluster, LaunchExec, ShardPlan};
+use zmc::cluster::{LaunchExec, ShardPlan};
 use zmc::integrator::multifunctions::{self, MultiConfig};
 use zmc::integrator::spec::IntegralJob;
-use zmc::runtime::device::DevicePool;
 use zmc::runtime::registry::Registry;
+use zmc::session::Session;
 use zmc::util::bench::{fmt_s, Bench};
 
 fn env(key: &str, default: usize) -> usize {
@@ -70,7 +70,14 @@ fn main() -> anyhow::Result<()> {
     let registry = Arc::new(
         Registry::load("artifacts").unwrap_or_else(|_| Registry::emulated()),
     );
-    let pool = DevicePool::new(&registry, 1)?;
+    // one session per engine count below, all sharing this registry
+    let session_with_engines = |n: usize| {
+        Session::builder()
+            .registry(Arc::clone(&registry))
+            .workers(1)
+            .engines(n)
+            .build()
+    };
     let jobs = workload(n_funcs);
     let cfg = MultiConfig {
         samples_per_fn: samples,
@@ -87,11 +94,11 @@ fn main() -> anyhow::Result<()> {
     // cost, not per-launch cost; task cost itself is engine-independent:
     // tasks carry their own Philox addressing and are placement-free)
     let (durations, dispatch_total) = {
-        let c1 = DeviceCluster::for_pool(&pool, 1)?;
-        LaunchExec::submit_launches(&c1, tasks.clone(), 3)?.wait()?;
+        let s1 = session_with_engines(1)?;
+        let c1 = s1.exec();
+        c1.submit_launches(tasks.clone(), 3)?.wait()?;
         let t0 = Instant::now();
-        let outs =
-            LaunchExec::submit_launches(&c1, tasks.clone(), 3)?.wait()?;
+        let outs = c1.submit_launches(tasks.clone(), 3)?.wait()?;
         let wall = t0.elapsed().as_secs_f64();
         let d: Vec<f64> =
             outs.iter().map(|o| o.device_time.as_secs_f64()).collect();
@@ -106,9 +113,9 @@ fn main() -> anyhow::Result<()> {
     let mut speedups: Vec<(usize, f64)> = Vec::new();
 
     for &n in &counts {
-        let cluster = DeviceCluster::for_pool(&pool, n)?;
+        let sn = session_with_engines(n)?;
         let t0 = Instant::now();
-        LaunchExec::submit_launches(&cluster, tasks.clone(), 3)?.wait()?;
+        sn.exec().submit_launches(tasks.clone(), 3)?.wait()?;
         let wall = t0.elapsed().as_secs_f64();
         // the real plan this cluster used, priced in measured time:
         // dispatch serializes on the submitter, shards run in parallel

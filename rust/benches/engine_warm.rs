@@ -21,15 +21,13 @@
 
 use std::cell::RefCell;
 use std::collections::HashSet;
-use std::sync::Arc;
 use std::time::Duration;
 
 use anyhow::Result;
 use zmc::engine::{Backend, Engine, EngineConfig};
 use zmc::integrator::multifunctions::{self, MultiConfig};
 use zmc::integrator::spec::IntegralJob;
-use zmc::runtime::device::DevicePool;
-use zmc::runtime::registry::Registry;
+use zmc::session::Session;
 use zmc::util::bench::{fmt_s, time, Bench};
 
 fn env(key: &str, default: usize) -> usize {
@@ -140,31 +138,30 @@ fn main() -> anyhow::Result<()> {
         ..Default::default()
     };
 
-    // cold: fresh registry + engine per call (per-call compile ledger)
-    let load = || {
-        Arc::new(
-            Registry::load("artifacts")
-                .unwrap_or_else(|_| Registry::emulated()),
-        )
-    };
+    // cold: a fresh session (registry + pool + engine) per call — the
+    // full pre-engine lifecycle, per-call compile ledger included
     let td = time(0, 3, || {
-        let reg = load();
-        let pool = DevicePool::new(&reg, 1).unwrap();
-        let e = Engine::for_pool(&pool).unwrap();
-        multifunctions::integrate(&e, &jobs, &cfg).unwrap();
+        let s = Session::builder()
+            .artifacts_or_emulator("artifacts")
+            .workers(1)
+            .build()
+            .unwrap();
+        multifunctions::integrate(s.engine(), &jobs, &cfg).unwrap();
     });
 
-    // warm: persistent engine; the compile ledger must not move after
-    // the first call
-    let reg = load();
-    let pool = DevicePool::new(&reg, 1)?;
-    let engine = Engine::for_pool(&pool)?;
-    multifunctions::integrate(&engine, &jobs, &cfg)?;
-    let compiles_after_first = reg.compile_count();
+    // warm: one persistent session; the compile ledger must not move
+    // after the first call
+    let session = Session::builder()
+        .artifacts_or_emulator("artifacts")
+        .workers(1)
+        .build()?;
+    let engine = session.engine();
+    multifunctions::integrate(engine, &jobs, &cfg)?;
+    let compiles_after_first = session.registry().compile_count();
     let twd = time(1, rounds, || {
-        multifunctions::integrate(&engine, &jobs, &cfg).unwrap();
+        multifunctions::integrate(engine, &jobs, &cfg).unwrap();
     });
-    let compiles_after_all = reg.compile_count();
+    let compiles_after_all = session.registry().compile_count();
     b.row(
         "device_cold_per_call",
         &[

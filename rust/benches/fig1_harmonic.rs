@@ -6,13 +6,9 @@
 //!
 //! Env knobs: ZMC_FIG1_N, ZMC_FIG1_SAMPLES, ZMC_FIG1_TRIALS.
 
-use std::sync::Arc;
-
-use zmc::engine::Engine;
 use zmc::integrator::harmonic::{self, HarmonicBatch};
 use zmc::integrator::multifunctions::MultiConfig;
-use zmc::runtime::device::DevicePool;
-use zmc::runtime::registry::Registry;
+use zmc::session::Session;
 use zmc::stats::Welford;
 use zmc::util::bench::{fmt_s, time, Bench};
 
@@ -25,11 +21,11 @@ fn main() -> anyhow::Result<()> {
     let samples = env("ZMC_FIG1_SAMPLES", 1 << 18);
     let trials = env("ZMC_FIG1_TRIALS", 10) as u32;
 
-    let registry = Arc::new(
-        Registry::load("artifacts").unwrap_or_else(|_| Registry::emulated()),
-    );
-    let pool = DevicePool::new(&registry, 1)?;
-    let engine = Engine::for_pool(&pool)?;
+    let session = Session::builder()
+        .artifacts_or_emulator("artifacts")
+        .workers(1)
+        .build()?;
+    let engine = session.engine();
     let batch = HarmonicBatch::fig1(n);
     let cfg = MultiConfig {
         samples_per_fn: samples,
@@ -41,7 +37,7 @@ fn main() -> anyhow::Result<()> {
 
     // one warm evaluation for compile, then timed per-evaluation cost
     let t = time(1, 3, || {
-        harmonic::integrate(&engine, &batch, &cfg).unwrap();
+        harmonic::integrate(engine, &batch, &cfg).unwrap();
     });
     b.row(
         "per_evaluation",
@@ -56,7 +52,7 @@ fn main() -> anyhow::Result<()> {
 
     // the statistical figure itself
     let per_trial =
-        harmonic::integrate_trials(&engine, &batch, &cfg, trials)?;
+        harmonic::integrate_trials(engine, &batch, &cfg, trials)?;
     let mut covered = 0usize;
     let mut mean_df = 0.0f64;
     for i in 0..n as usize {
@@ -83,7 +79,7 @@ fn main() -> anyhow::Result<()> {
     // error-vs-samples shape: MC must contract ~1/sqrt(S)
     for s in [samples / 4, samples, samples * 4] {
         let c = MultiConfig { samples_per_fn: s, ..cfg.clone() };
-        let ests = harmonic::integrate(&engine, &batch, &c)?;
+        let ests = harmonic::integrate(engine, &batch, &c)?;
         let rms: f64 = ((0..n as usize)
             .map(|i| (ests[i].value - batch.truth(i)).powi(2))
             .sum::<f64>()

@@ -8,15 +8,11 @@
 //!
 //! Env knobs: ZMC_A2_POINTS, ZMC_A2_SAMPLES.
 
-use std::sync::Arc;
-
 use zmc::analytic;
-use zmc::engine::Engine;
 use zmc::integrator::functional::{self, linspace};
 use zmc::integrator::multifunctions::MultiConfig;
 use zmc::integrator::spec::IntegralJob;
-use zmc::runtime::device::DevicePool;
-use zmc::runtime::registry::Registry;
+use zmc::session::Session;
 use zmc::util::bench::{fmt_s, time, Bench};
 
 fn env(key: &str, default: usize) -> usize {
@@ -27,11 +23,11 @@ fn main() -> anyhow::Result<()> {
     let n_points = env("ZMC_A2_POINTS", 256);
     let samples = env("ZMC_A2_SAMPLES", 1 << 14);
 
-    let registry = Arc::new(
-        Registry::load("artifacts").unwrap_or_else(|_| Registry::emulated()),
-    );
-    let pool = DevicePool::new(&registry, 1)?;
-    let engine = Engine::for_pool(&pool)?;
+    let session = Session::builder()
+        .artifacts_or_emulator("artifacts")
+        .workers(1)
+        .build()?;
+    let engine = session.engine();
     let job = IntegralJob::with_params(
         "cos(p0*(x1+x2+x3))",
         &[(0.0, 1.0); 3],
@@ -50,7 +46,7 @@ fn main() -> anyhow::Result<()> {
 
     let mut b = Bench::new("functional_scan");
     let t = time(1, 3, || {
-        functional::scan(&engine, &job, &thetas, &cfg).unwrap();
+        functional::scan(engine, &job, &thetas, &cfg).unwrap();
     });
     b.row(
         "packed_scan",
@@ -66,7 +62,7 @@ fn main() -> anyhow::Result<()> {
     );
 
     // correctness: every point within 6σ of the closed form
-    let ests = functional::scan(&engine, &job, &thetas, &cfg)?;
+    let ests = functional::scan(engine, &job, &thetas, &cfg)?;
     let mut worst: f64 = 0.0;
     for (th, e) in thetas.iter().zip(&ests) {
         let k = th[0];
@@ -90,7 +86,7 @@ fn main() -> anyhow::Result<()> {
                 exe: Some("vm_multi_f8_s4096".into()),
                 ..cfg.clone()
             };
-            functional::scan(&engine, &j, &[th.clone()], &c).unwrap();
+            functional::scan(engine, &j, &[th.clone()], &c).unwrap();
         }
     });
     let per_pt_naive = t1.mean_s / sub.len() as f64;

@@ -9,13 +9,9 @@
 //!
 //! Env knobs: ZMC_C1_FUNCS, ZMC_C1_SAMPLES.
 
-use std::sync::Arc;
-
-use zmc::engine::Engine;
 use zmc::integrator::multifunctions::{self, MultiConfig};
 use zmc::integrator::spec::IntegralJob;
-use zmc::runtime::device::DevicePool;
-use zmc::runtime::registry::Registry;
+use zmc::session::Session;
 use zmc::util::bench::{fmt_s, time, Bench};
 
 fn env(key: &str, default: usize) -> usize {
@@ -46,11 +42,11 @@ fn main() -> anyhow::Result<()> {
     let n_funcs = env("ZMC_C1_FUNCS", 128);
     let samples = env("ZMC_C1_SAMPLES", 1 << 14);
 
-    let registry = Arc::new(
-        Registry::load("artifacts").unwrap_or_else(|_| Registry::emulated()),
-    );
-    let pool = DevicePool::new(&registry, 1)?;
-    let engine = Engine::for_pool(&pool)?;
+    let session = Session::builder()
+        .artifacts_or_emulator("artifacts")
+        .workers(1)
+        .build()?;
+    let engine = session.engine();
     let jobs = workload(n_funcs);
     let mut b = Bench::new("multifunc_throughput");
 
@@ -62,7 +58,7 @@ fn main() -> anyhow::Result<()> {
         ..Default::default()
     };
     let t = time(1, 3, || {
-        multifunctions::integrate(&engine, &jobs, &cfg).unwrap();
+        multifunctions::integrate(engine, &jobs, &cfg).unwrap();
     });
     let fns_per_min = n_funcs as f64 / t.mean_s * 60.0;
     // per-sample attribution: future hot-path regressions show up here
@@ -94,7 +90,7 @@ fn main() -> anyhow::Result<()> {
     let t1 = time(1, 2, || {
         for j in sub {
             multifunctions::integrate(
-                &engine,
+                engine,
                 std::slice::from_ref(j),
                 &cfg1,
             )

@@ -16,12 +16,12 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use zmc::cluster;
-use zmc::engine::Engine;
 use zmc::integrator::multifunctions::{self, MultiConfig};
 use zmc::integrator::spec::IntegralJob;
-use zmc::runtime::device::{DevicePool, DeviceRuntime};
+use zmc::runtime::device::DeviceRuntime;
 use zmc::runtime::launch::{vm_multi_inputs, RngCtr, VmFn};
 use zmc::runtime::registry::Registry;
+use zmc::session::Session;
 use zmc::util::bench::{fmt_s, Bench};
 
 fn env(key: &str, default: usize) -> usize {
@@ -52,8 +52,12 @@ fn main() -> anyhow::Result<()> {
     // --- 1. real threads -------------------------------------------------
     let mut wall1 = 0.0;
     for workers in [1usize, 2, 4] {
-        let pool = DevicePool::new(&registry, workers)?;
-        let engine = Engine::for_pool(&pool)?;
+        // one session per worker count, sharing the loaded registry
+        let session = Session::builder()
+            .registry(Arc::clone(&registry))
+            .workers(workers)
+            .build()?;
+        let engine = session.engine();
         let cfg = MultiConfig {
             samples_per_fn: samples,
             seed: 5,
@@ -61,9 +65,9 @@ fn main() -> anyhow::Result<()> {
             ..Default::default()
         };
         // warm (compiles once per worker), then measure on the hot engine
-        multifunctions::integrate(&engine, &jobs, &cfg)?;
+        multifunctions::integrate(engine, &jobs, &cfg)?;
         let t0 = Instant::now();
-        multifunctions::integrate(&engine, &jobs, &cfg)?;
+        multifunctions::integrate(engine, &jobs, &cfg)?;
         let dt = t0.elapsed().as_secs_f64();
         if workers == 1 {
             wall1 = dt;

@@ -7,23 +7,19 @@
 //! stratified, (c) stratified + tree refinement, at matched total
 //! sample counts.
 
-use std::sync::Arc;
-
 use zmc::analytic;
-use zmc::engine::Engine;
 use zmc::integrator::multifunctions::{self, MultiConfig};
 use zmc::integrator::normal::{self, NormalConfig};
 use zmc::integrator::spec::IntegralJob;
-use zmc::runtime::device::DevicePool;
-use zmc::runtime::registry::Registry;
+use zmc::session::Session;
 use zmc::util::bench::{fmt_s, Bench};
 
 fn main() -> anyhow::Result<()> {
-    let registry = Arc::new(
-        Registry::load("artifacts").unwrap_or_else(|_| Registry::emulated()),
-    );
-    let pool = DevicePool::new(&registry, 1)?;
-    let engine = Engine::for_pool(&pool)?;
+    let session = Session::builder()
+        .artifacts_or_emulator("artifacts")
+        .workers(1)
+        .build()?;
+    let engine = session.engine();
 
     // truth: separable gaussian (erf form)
     let a = 120.0f64;
@@ -52,7 +48,7 @@ fn main() -> anyhow::Result<()> {
         ..Default::default()
     };
     let t0 = std::time::Instant::now();
-    let tree = normal::integrate(&engine, &job, &cfg_tree)?;
+    let tree = normal::integrate(engine, &job, &cfg_tree)?;
     let tree_wall = t0.elapsed().as_secs_f64();
     let budget = tree.estimate.n_samples as usize;
 
@@ -69,7 +65,7 @@ fn main() -> anyhow::Result<()> {
             ..Default::default()
         };
         let e = multifunctions::integrate(
-            &engine,
+            engine,
             std::slice::from_ref(&job),
             &cfg,
         )?[0];
@@ -85,7 +81,7 @@ fn main() -> anyhow::Result<()> {
         max_depth: 0,
         ..cfg_tree.clone()
     };
-    let flat = normal::integrate(&engine, &job, &cfg_flat)?;
+    let flat = normal::integrate(engine, &job, &cfg_flat)?;
 
     b.row(
         "direct_mc",

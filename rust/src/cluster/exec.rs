@@ -10,8 +10,9 @@
 //! the whole task list, so its behavior is the engine path by
 //! construction.
 //!
-//! The trait is object safe: the CLI holds a `Box<dyn LaunchExec>`
-//! picked by `--num-engines`.
+//! The trait is object safe: a [`crate::session::Session`] (the
+//! topology the CLI's `--num-engines` builds) hands integrators a
+//! `&dyn LaunchExec`.
 
 use anyhow::Result;
 

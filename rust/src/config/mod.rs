@@ -1,29 +1,89 @@
 //! Job configuration files (JSON) → typed specs.
 //!
-//! Example (`examples/jobs/mixed.json` is generated by the CLI's
-//! `init-config` subcommand):
+//! A job file describes one run of any of the paper's three classes —
+//! the `"class"` tag selects which (defaulting to the v5.1
+//! multifunction batch) — plus the execution topology
+//! (`workers`/`num_engines`) that [`crate::session::Session::from_job_config`]
+//! turns into a live session. Example (`zmc init-config` writes one):
 //!
 //! ```json
 //! {
+//!   "class": "multifunctions",
 //!   "workers": 2,
 //!   "samples_per_fn": 262144,
 //!   "trials": 10,
 //!   "seed": 2021,
+//!   "target_rel_err": 0.005,
 //!   "functions": [
 //!     {"expr": "p0*abs(x1+x2)", "bounds": [[0,1],[0,1]], "theta": [1.5]},
 //!     {"expr": "sin(x1)*x2",    "bounds": [[0,3.14],[0,1]]}
 //!   ]
 //! }
 //! ```
+//!
+//! * `"class": "functional"` adds an `"axes"` array (one array of
+//!   values per parameter axis; the scan runs over their cartesian
+//!   product) and takes exactly one function;
+//! * `"class": "normal"` adds an optional `"normal"` object with the
+//!   tree-search knobs (`divisions`, `trials`, `sigma_mult`, `depth`,
+//!   `max_split_dims`) and takes exactly one function.
 
 use anyhow::{anyhow, Context, Result};
 
+use crate::integrator::normal::NormalConfig;
 use crate::integrator::spec::IntegralJob;
 use crate::util::json::Json;
+
+/// Which paper class a job file drives (the `"class"` tag).
+#[derive(Debug, Clone, PartialEq)]
+pub enum JobClass {
+    /// Heterogeneous batch over the `functions` array — the v5.1
+    /// headline (and the default when no tag is present).
+    Multifunctions,
+    /// One integrand scanned over the cartesian product of `axes`.
+    Functional {
+        /// `axes[j]` lists the values parameter `p<j>` takes.
+        axes: Vec<Vec<f64>>,
+    },
+    /// Stratified sampling + tree search on one integrand.
+    Normal(NormalParams),
+}
+
+/// Tree-search knobs of a `"class": "normal"` job file (the JSON
+/// `"normal"` object; all fields optional, defaulting to
+/// [`NormalConfig`]'s values).
+#[derive(Debug, Clone, PartialEq)]
+pub struct NormalParams {
+    /// Initial divisions per dimension.
+    pub divisions: usize,
+    /// Independent evaluations per cube per level.
+    pub n_trials: u32,
+    /// Flag threshold multiplier.
+    pub sigma_mult: f64,
+    /// Maximum refinement depth.
+    pub depth: usize,
+    /// Dimensions split per subdivision.
+    pub max_split_dims: usize,
+}
+
+impl Default for NormalParams {
+    fn default() -> Self {
+        let c = NormalConfig::default();
+        NormalParams {
+            divisions: c.initial_divisions,
+            n_trials: c.n_trials,
+            sigma_mult: c.sigma_mult,
+            depth: c.max_depth,
+            max_split_dims: c.max_split_dims,
+        }
+    }
+}
 
 /// A fully-parsed job file.
 #[derive(Debug, Clone)]
 pub struct JobConfig {
+    /// Which integration class to run.
+    pub class: JobClass,
     pub workers: usize,
     /// Engines in the cluster (1 = single-engine path); each engine
     /// gets `workers` workers. Results are bit-identical at any value.
@@ -31,17 +91,27 @@ pub struct JobConfig {
     pub samples_per_fn: usize,
     pub trials: u32,
     pub seed: u64,
+    /// Adaptive stopping: per-function relative error target.
+    pub target_rel_err: Option<f64>,
+    /// Adaptive stopping: per-function absolute error target.
+    pub target_abs_err: Option<f64>,
+    /// Adaptive refinement rounds after the pilot (None = default).
+    pub max_rounds: Option<usize>,
     pub jobs: Vec<IntegralJob>,
 }
 
 impl Default for JobConfig {
     fn default() -> Self {
         JobConfig {
+            class: JobClass::Multifunctions,
             workers: 1,
             num_engines: 1,
             samples_per_fn: 1 << 18,
             trials: 1,
             seed: 2021,
+            target_rel_err: None,
+            target_abs_err: None,
+            max_rounds: None,
             jobs: vec![],
         }
     }
@@ -72,6 +142,15 @@ impl JobConfig {
         if let Some(s) = j.get("seed").and_then(Json::as_i64) {
             cfg.seed = s as u64;
         }
+        if let Some(e) = j.get("target_rel_err").and_then(Json::as_f64) {
+            cfg.target_rel_err = Some(e);
+        }
+        if let Some(e) = j.get("target_abs_err").and_then(Json::as_f64) {
+            cfg.target_abs_err = Some(e);
+        }
+        if let Some(r) = j.get("max_rounds").and_then(Json::as_usize) {
+            cfg.max_rounds = Some(r);
+        }
         let fns = j
             .get("functions")
             .and_then(Json::as_arr)
@@ -85,12 +164,54 @@ impl JobConfig {
         if cfg.jobs.is_empty() {
             return Err(anyhow!("config has no functions"));
         }
+        cfg.class = parse_class(&j)?;
+        match &cfg.class {
+            JobClass::Multifunctions => {}
+            JobClass::Functional { axes } => {
+                if cfg.jobs.len() != 1 {
+                    return Err(anyhow!(
+                        "class 'functional' takes exactly one function \
+                         (got {})",
+                        cfg.jobs.len()
+                    ));
+                }
+                let expected = cfg.jobs[0].expr.n_params();
+                if axes.len() < expected {
+                    return Err(anyhow!(
+                        "'axes' has {} axis(es) but the expression reads \
+                         {} parameter(s)",
+                        axes.len(),
+                        expected
+                    ));
+                }
+            }
+            JobClass::Normal(_) => {
+                if cfg.jobs.len() != 1 {
+                    return Err(anyhow!(
+                        "class 'normal' takes exactly one function (got {})",
+                        cfg.jobs.len()
+                    ));
+                }
+            }
+        }
         Ok(cfg)
     }
 
-    /// Serialize back to JSON (for `init-config` and reports).
+    /// The example job file of the requested class (`init-config`'s
+    /// `--class` flag); `None` for an unknown class name.
+    pub fn example_json_for(class: &str) -> Option<String> {
+        match class {
+            "multifunctions" => Some(Self::example_json()),
+            "functional" => Some(Self::example_json_functional()),
+            "normal" => Some(Self::example_json_normal()),
+            _ => None,
+        }
+    }
+
+    /// Example multifunction job file (for `init-config` and reports).
     pub fn example_json() -> String {
         r#"{
+  "class": "multifunctions",
   "workers": 1,
   "num_engines": 1,
   "samples_per_fn": 262144,
@@ -104,6 +225,98 @@ impl JobConfig {
 }
 "#
         .to_string()
+    }
+
+    /// Example parameter-scan job file (`"class": "functional"`).
+    pub fn example_json_functional() -> String {
+        r#"{
+  "class": "functional",
+  "workers": 1,
+  "num_engines": 1,
+  "samples_per_fn": 65536,
+  "seed": 2021,
+  "axes": [[0.5, 1.0, 2.0, 4.0], [0.25, 0.75]],
+  "functions": [
+    {"expr": "cos(p0*(x1+x2+x3)) + p1*x1",
+     "bounds": [[0,1],[0,1],[0,1]], "theta": [1.0, 0.5]}
+  ]
+}
+"#
+        .to_string()
+    }
+
+    /// Example tree-search job file (`"class": "normal"`).
+    pub fn example_json_normal() -> String {
+        r#"{
+  "class": "normal",
+  "workers": 1,
+  "seed": 2021,
+  "normal": {"divisions": 4, "trials": 5, "sigma_mult": 1.0, "depth": 2},
+  "functions": [
+    {"expr": "sin(x1)*x2", "bounds": [[0, 3.141592653589793], [0, 1]]}
+  ]
+}
+"#
+        .to_string()
+    }
+}
+
+fn parse_class(j: &Json) -> Result<JobClass> {
+    match j.get("class").and_then(Json::as_str) {
+        None | Some("multifunctions") => Ok(JobClass::Multifunctions),
+        Some("functional") => {
+            let axes_json = j
+                .get("axes")
+                .and_then(Json::as_arr)
+                .context("class 'functional' needs an 'axes' array")?;
+            let mut axes = Vec::new();
+            for (i, a) in axes_json.iter().enumerate() {
+                let vals = a
+                    .as_arr()
+                    .with_context(|| format!("axes[{i}] must be an array"))?;
+                let axis: Vec<f64> = vals
+                    .iter()
+                    .map(|v| v.as_f64().context("axis value not a number"))
+                    .collect::<Result<_>>()?;
+                if axis.is_empty() {
+                    return Err(anyhow!("axes[{i}] is empty"));
+                }
+                axes.push(axis);
+            }
+            if axes.is_empty() {
+                return Err(anyhow!("'axes' must list at least one axis"));
+            }
+            Ok(JobClass::Functional { axes })
+        }
+        Some("normal") => {
+            let mut p = NormalParams::default();
+            if let Some(n) = j.get("normal") {
+                if let Some(v) = n.get("divisions").and_then(Json::as_usize)
+                {
+                    p.divisions = v;
+                }
+                if let Some(v) = n.get("trials").and_then(Json::as_usize) {
+                    p.n_trials = v as u32;
+                }
+                if let Some(v) = n.get("sigma_mult").and_then(Json::as_f64)
+                {
+                    p.sigma_mult = v;
+                }
+                if let Some(v) = n.get("depth").and_then(Json::as_usize) {
+                    p.depth = v;
+                }
+                if let Some(v) =
+                    n.get("max_split_dims").and_then(Json::as_usize)
+                {
+                    p.max_split_dims = v;
+                }
+            }
+            Ok(JobClass::Normal(p))
+        }
+        Some(other) => Err(anyhow!(
+            "unknown class '{other}' \
+             (expected multifunctions | functional | normal)"
+        )),
     }
 }
 
@@ -145,10 +358,76 @@ mod tests {
     fn parses_example() {
         let cfg = JobConfig::from_json_text(&JobConfig::example_json())
             .unwrap();
+        assert_eq!(cfg.class, JobClass::Multifunctions);
         assert_eq!(cfg.trials, 10);
         assert_eq!(cfg.jobs.len(), 2);
         assert_eq!(cfg.jobs[0].theta, vec![1.5]);
         assert_eq!(cfg.jobs[1].dims(), 4);
+    }
+
+    #[test]
+    fn parses_functional_example() {
+        let cfg = JobConfig::from_json_text(
+            &JobConfig::example_json_functional(),
+        )
+        .unwrap();
+        let JobClass::Functional { axes } = &cfg.class else {
+            panic!("expected functional class, got {:?}", cfg.class);
+        };
+        assert_eq!(axes.len(), 2);
+        assert_eq!(axes[0], vec![0.5, 1.0, 2.0, 4.0]);
+        assert_eq!(cfg.jobs.len(), 1);
+        // the grid binds every parameter the expression reads
+        assert!(axes.len() >= cfg.jobs[0].expr.n_params());
+    }
+
+    #[test]
+    fn parses_normal_example() {
+        let cfg =
+            JobConfig::from_json_text(&JobConfig::example_json_normal())
+                .unwrap();
+        let JobClass::Normal(p) = &cfg.class else {
+            panic!("expected normal class, got {:?}", cfg.class);
+        };
+        assert_eq!(p.divisions, 4);
+        assert_eq!(p.n_trials, 5);
+        assert_eq!(p.depth, 2);
+        // unspecified knobs keep the NormalConfig defaults
+        assert_eq!(
+            p.max_split_dims,
+            NormalConfig::default().max_split_dims
+        );
+    }
+
+    #[test]
+    fn example_json_for_dispatches() {
+        for class in ["multifunctions", "functional", "normal"] {
+            let text = JobConfig::example_json_for(class).unwrap();
+            let cfg = JobConfig::from_json_text(&text).unwrap();
+            match class {
+                "multifunctions" => {
+                    assert_eq!(cfg.class, JobClass::Multifunctions)
+                }
+                "functional" => assert!(matches!(
+                    cfg.class,
+                    JobClass::Functional { .. }
+                )),
+                _ => assert!(matches!(cfg.class, JobClass::Normal(_))),
+            }
+        }
+        assert!(JobConfig::example_json_for("frobnicate").is_none());
+    }
+
+    #[test]
+    fn adaptive_fields_parsed() {
+        let cfg = JobConfig::from_json_text(
+            r#"{"target_rel_err": 0.01, "max_rounds": 5,
+                 "functions": [{"expr": "x1", "bounds": [[0, 1]]}]}"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.target_rel_err, Some(0.01));
+        assert_eq!(cfg.target_abs_err, None);
+        assert_eq!(cfg.max_rounds, Some(5));
     }
 
     #[test]
@@ -157,6 +436,7 @@ mod tests {
             r#"{"functions": [{"expr": "x1", "bounds": [[0, 1]]}]}"#,
         )
         .unwrap();
+        assert_eq!(cfg.class, JobClass::Multifunctions);
         assert_eq!(cfg.workers, 1);
         assert_eq!(cfg.num_engines, 1);
         assert_eq!(cfg.seed, 2021);
@@ -195,6 +475,49 @@ mod tests {
         .is_err());
         assert!(JobConfig::from_json_text(
             r#"{"functions": [{"expr": "p0", "bounds": [[0,1]]}]}"#
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn rejects_bad_classes() {
+        // unknown tag
+        assert!(JobConfig::from_json_text(
+            r#"{"class": "frobnicate",
+                 "functions": [{"expr": "x1", "bounds": [[0, 1]]}]}"#
+        )
+        .is_err());
+        // functional without axes
+        assert!(JobConfig::from_json_text(
+            r#"{"class": "functional",
+                 "functions": [{"expr": "x1", "bounds": [[0, 1]]}]}"#
+        )
+        .is_err());
+        // functional with two functions
+        assert!(JobConfig::from_json_text(
+            r#"{"class": "functional", "axes": [[1.0]],
+                 "functions": [{"expr": "x1", "bounds": [[0, 1]]},
+                               {"expr": "x1", "bounds": [[0, 1]]}]}"#
+        )
+        .is_err());
+        // functional whose axes under-bind the expression
+        assert!(JobConfig::from_json_text(
+            r#"{"class": "functional", "axes": [[1.0]],
+                 "functions": [{"expr": "p0*p1*x1", "bounds": [[0, 1]],
+                                "theta": [1.0, 2.0]}]}"#
+        )
+        .is_err());
+        // normal with two functions
+        assert!(JobConfig::from_json_text(
+            r#"{"class": "normal",
+                 "functions": [{"expr": "x1", "bounds": [[0, 1]]},
+                               {"expr": "x1", "bounds": [[0, 1]]}]}"#
+        )
+        .is_err());
+        // empty axis
+        assert!(JobConfig::from_json_text(
+            r#"{"class": "functional", "axes": [[]],
+                 "functions": [{"expr": "x1", "bounds": [[0, 1]]}]}"#
         )
         .is_err());
     }

@@ -13,6 +13,10 @@
 //! the `submit*` handle forms, so independent batches share one warm
 //! engine. [`direct`] is the single-core CPU comparator running
 //! identical bytecode on the same sample streams.
+//!
+//! The [`crate::session::Session`] builders are the preferred front
+//! door; the free functions here remain as the compatibility layer
+//! they delegate to (bit-identical, per `tests/session_test.rs`).
 
 pub mod direct;
 pub mod functional;

@@ -15,7 +15,8 @@
 
 use anyhow::{bail, Result};
 
-use crate::engine::{DeviceEngine, LaunchTask};
+use crate::cluster::LaunchExec;
+use crate::engine::LaunchTask;
 use crate::integrator::multifunctions::split_seed;
 use crate::integrator::spec::{Estimate, IntegralJob};
 use crate::runtime::launch::{stratified_inputs, RngCtr};
@@ -117,15 +118,23 @@ impl Cube {
 /// the persistent engine the stratified executable compiles once per
 /// worker on the first level and every later level (and every later
 /// `integrate` call) reuses it.
-pub fn integrate(
-    engine: &DeviceEngine,
+///
+/// Generic over [`LaunchExec`]: pass a
+/// [`crate::engine::DeviceEngine`] for the single-device path or a
+/// [`crate::cluster::DeviceCluster`] to shard each level's cube batch
+/// across engines. Every launch carries its own Philox
+/// `(stream, trial)` addressing and results come back in task order,
+/// so the tree (and the estimate) is bit-identical at any engine
+/// count.
+pub fn integrate<X: LaunchExec + ?Sized>(
+    exec: &X,
     job: &IntegralJob,
     cfg: &NormalConfig,
 ) -> Result<NormalResult> {
     if cfg.n_trials < 2 {
         bail!("n_trials must be >= 2 for the variance heuristic");
     }
-    let reg = engine.registry();
+    let reg = exec.registry();
     let exe = match &cfg.exe {
         Some(name) => reg.get(name)?,
         None => reg.pick(ExeKind::Stratified, 0, job.dims())?,
@@ -173,7 +182,7 @@ pub fn integrate(
         cubes_per_level.push(cubes.len());
         // per-cube per-trial integral estimates
         let stats = eval_level(
-            engine, exe, job, &cubes, cfg, &mut next_stream, &mut launches,
+            exec, exe, job, &cubes, cfg, &mut next_stream, &mut launches,
         )?;
 
         // Welford over trials per cube → (mean, std)
@@ -235,8 +244,8 @@ pub fn integrate(
 
 /// Evaluate all cubes × all trials at one level; returns per-cube
 /// Welford stats of the per-trial integral estimates.
-fn eval_level(
-    engine: &DeviceEngine,
+fn eval_level<X: LaunchExec + ?Sized>(
+    exec: &X,
     exe: &crate::runtime::registry::ExeSpec,
     job: &IntegralJob,
     cubes: &[Cube],
@@ -279,9 +288,7 @@ fn eval_level(
     }
     *launches += tasks.len();
 
-    let outs = engine
-        .submit_with_retries(tasks, cfg.max_retries)?
-        .wait()?;
+    let outs = exec.submit_launches(tasks, cfg.max_retries)?.wait()?;
 
     let mut stats = vec![Welford::new(); cubes.len()];
     for out in outs {

@@ -107,6 +107,26 @@ impl Estimate {
     pub fn consistent_with(&self, truth: f64, z: f64) -> bool {
         crate::stats::within_sigma(self.value, truth, self.std_err, z)
     }
+
+    /// Relative error `std_err / |value|` — the quantity the adaptive
+    /// loop's `target_rel_err` stops on. Infinite for a zero estimate
+    /// with nonzero error; NaN only for the degenerate `0 ± 0`.
+    pub fn rel_err(&self) -> f64 {
+        self.std_err / self.value.abs()
+    }
+}
+
+/// `I = {value} ± {std_err} ({n} samples, {r} rounds)` — the one
+/// report shape the CLI and examples print instead of hand-rolled
+/// formats.
+impl std::fmt::Display for Estimate {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "I = {:.8} ± {:.3e} ({} samples, {} rounds)",
+            self.value, self.std_err, self.n_samples, self.rounds
+        )
+    }
 }
 
 #[cfg(test)]
@@ -158,5 +178,26 @@ mod tests {
         };
         assert!(e.consistent_with(1.0, 3.0));
         assert!(!e.consistent_with(1.1, 3.0));
+    }
+
+    #[test]
+    fn estimate_rel_err_and_display() {
+        let e = Estimate {
+            value: -2.0,
+            std_err: 0.01,
+            n_samples: 4096,
+            rounds: 3,
+        };
+        assert!((e.rel_err() - 0.005).abs() < 1e-15);
+        let text = e.to_string();
+        assert_eq!(text, "I = -2.00000000 ± 1.000e-2 (4096 samples, 3 rounds)");
+
+        let zero = Estimate {
+            value: 0.0,
+            std_err: 0.1,
+            n_samples: 1,
+            rounds: 1,
+        };
+        assert!(zero.rel_err().is_infinite());
     }
 }

@@ -24,51 +24,78 @@
 //!   disjoint Philox counter ranges, centralized moment reduction —
 //!   bit-identical to the single engine at any engine count.
 //!
-//! ## The paper's three classes
+//! ## The paper's three classes — one [`session::Session`]
 //!
-//! | paper API | here |
-//! |---|---|
-//! | `ZMCintegral_normal`         | [`integrator::normal`] — stratified sampling + heuristic tree search |
-//! | `ZMCintegral_functional`     | [`integrator::functional`] — one integrand over a parameter grid |
-//! | `ZMCintegral_multifunctions` | [`integrator::multifunctions`] — heterogeneous integrand batches |
+//! | paper API | session builder | legacy free functions |
+//! |---|---|---|
+//! | `ZMCintegral_multifunctions(fns).evaluate()` | `session.multifunctions(&jobs).samples(n).run()` | [`integrator::multifunctions`] |
+//! | `ZMCintegral_functional(f, grid).evaluate()` | `session.functional(&job, &grid).samples(n).run()` | [`integrator::functional`] |
+//! | `ZMCintegral_normal(f).evaluate()` | `session.normal(&job).depth(d).run()` | [`integrator::normal`] |
 //!
-//! Beyond the paper: setting an error target on a
-//! [`integrator::multifunctions::MultiConfig`] switches multifunction
-//! batches to the [`adaptive`] pilot-then-refine loop — variance-driven
-//! (Neyman) budget allocation with per-function stopping and stratified
-//! subdivision of stalling integrands.
+//! The [`session`] module is the front door: a `Session` owns
+//! `Registry → DevicePool → Engine/DeviceCluster` construction and
+//! hands out fluent per-class builders, so sync and async (`.run()` vs
+//! `.submit()`), one engine and N engines (`.engines(n)`), one-shot
+//! and adaptive (`.target_rel_err(..)`) are all the same call shape.
+//! The module-level free functions remain as the thin compatibility
+//! layer the builders delegate to — results are bit-identical
+//! (`tests/session_test.rs`).
+//!
+//! Beyond the paper: setting an error target (builder
+//! `.target_rel_err(..)` or [`integrator::multifunctions::MultiConfig`])
+//! switches multifunction batches to the [`adaptive`] pilot-then-refine
+//! loop — variance-driven (Neyman) budget allocation with per-function
+//! stopping and stratified subdivision of stalling integrands.
 //!
 //! ## Quickstart
 //!
 //! ```no_run
-//! use std::sync::Arc;
 //! use zmc::prelude::*;
 //!
-//! // one engine per process: workers + executable caches stay warm
-//! let reg = Arc::new(Registry::load("artifacts").unwrap());
-//! let pool = DevicePool::new(&reg, 1).unwrap();
-//! let engine = Engine::for_pool(&pool).unwrap();
+//! // one session per process: it owns the registry, the device pool
+//! // and the persistent engine(s); workers + executable caches stay
+//! // warm for everything run through it
+//! let session = Session::builder()
+//!     .artifacts_or_emulator("artifacts")
+//!     .workers(1)
+//!     .build()
+//!     .unwrap();
 //!
 //! let job = IntegralJob::parse("sin(x1)*x2", &[(0.0, 1.0), (0.0, 2.0)])
 //!     .unwrap();
-//! let est = zmc::integrator::multifunctions::integrate_one(
-//!     &engine, &job, 1 << 20, 42).unwrap();
-//! println!("I = {} ± {}", est.value, est.std_err);
+//! let est = session
+//!     .multifunctions(std::slice::from_ref(&job))
+//!     .samples(1 << 20)
+//!     .seed(42)
+//!     .run()
+//!     .unwrap()[0];
+//! println!("{est}"); // I = .. ± .. (n samples, r rounds)
 //!
 //! // async form: independent job sets in flight concurrently
-//! let cfg = zmc::integrator::multifunctions::MultiConfig::default();
-//! let h1 = zmc::integrator::multifunctions::submit(
-//!     &engine, std::slice::from_ref(&job), &cfg).unwrap();
-//! let h2 = zmc::integrator::multifunctions::submit(
-//!     &engine, std::slice::from_ref(&job), &cfg).unwrap();
+//! let h1 = session
+//!     .multifunctions(std::slice::from_ref(&job))
+//!     .submit()
+//!     .unwrap();
+//! let h2 = session
+//!     .multifunctions(std::slice::from_ref(&job))
+//!     .submit()
+//!     .unwrap();
 //! let (_a, _b) = (h1.wait().unwrap(), h2.wait().unwrap());
 //!
-//! // multi-device: the same calls accept a cluster of engines (the
+//! // multi-device: same call shape behind a 4-engine session (the
 //! // CLI's `--num-engines N`); batches shard across engines with
 //! // disjoint Philox counter ranges and merge to bit-identical results
-//! let cluster = DeviceCluster::for_pool(&pool, 4).unwrap();
-//! let est4 = zmc::integrator::multifunctions::integrate_one(
-//!     &cluster, &job, 1 << 20, 42).unwrap();
+//! let four = Session::builder()
+//!     .artifacts_or_emulator("artifacts")
+//!     .engines(4)
+//!     .build()
+//!     .unwrap();
+//! let est4 = four
+//!     .multifunctions(std::slice::from_ref(&job))
+//!     .samples(1 << 20)
+//!     .seed(42)
+//!     .run()
+//!     .unwrap()[0];
 //! assert_eq!(est.value, est4.value);
 //! ```
 
@@ -82,6 +109,7 @@ pub mod expr;
 pub mod integrator;
 pub mod runtime;
 pub mod sampler;
+pub mod session;
 pub mod stats;
 pub mod util;
 pub mod vm;
@@ -101,6 +129,7 @@ pub mod prelude {
     pub use crate::integrator::spec::{Estimate, IntegralJob};
     pub use crate::runtime::device::DevicePool;
     pub use crate::runtime::registry::Registry;
+    pub use crate::session::{Session, SessionBuilder};
     pub use crate::vm::program::Program;
 }
 

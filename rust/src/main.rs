@@ -3,11 +3,16 @@
 //! Subcommands:
 //! * `info` — list loaded artifacts and ABI constants
 //! * `integrate` — one integral from an expression string
-//! * `run` — a multifunction batch from a JSON job file
+//! * `run` — a JSON job file of any class (multifunction batch,
+//!   functional parameter grid, or normal tree search)
 //! * `scan` — parameter-grid sweep of one integrand
 //! * `normal` — stratified + tree-search integration
 //! * `fig1` — reproduce the paper's Fig. 1 table
-//! * `init-config` — write an example job file
+//! * `init-config` — write an example job file (`--class` picks which)
+//!
+//! Every device subcommand builds one [`Session`] — the library's
+//! single front door — and drives its class through the session's
+//! fluent builders.
 //!
 //! Examples:
 //! ```text
@@ -17,20 +22,14 @@
 //! ```
 
 use std::collections::HashMap;
-use std::sync::Arc;
 
 use anyhow::{anyhow, bail, Context, Result};
 
 use zmc::analytic;
-use zmc::cluster::{DeviceCluster, LaunchExec};
-use zmc::config::JobConfig;
-use zmc::engine::{DeviceEngine, Engine};
-use zmc::integrator::harmonic::{self, HarmonicBatch};
-use zmc::integrator::multifunctions::{self, MultiConfig};
-use zmc::integrator::normal::{self, NormalConfig};
+use zmc::config::{JobClass, JobConfig};
+use zmc::integrator::harmonic::HarmonicBatch;
 use zmc::integrator::{functional, spec::IntegralJob};
-use zmc::runtime::device::DevicePool;
-use zmc::runtime::registry::Registry;
+use zmc::session::Session;
 use zmc::stats::Welford;
 
 fn main() {
@@ -73,25 +72,32 @@ USAGE: zmc <command> [--flag value]...
 COMMANDS
   info                          list artifacts + ABI
   integrate --expr E --bounds B one integral
-  run --config FILE             multifunction batch from JSON job file
+  run --config FILE             job file (any class: multifunctions,
+                                functional grid, or normal tree search)
   scan --expr E --bounds B --grid G   parameter sweep (p0 axis)
   normal --expr E --bounds B    stratified + tree search
   fig1                          reproduce paper Fig. 1
-  init-config PATH              write an example job file
+  init-config PATH [--class C]  write an example job file
+                                (C: multifunctions|functional|normal)
+
+Every device subcommand builds one Session (artifacts -> device pool
+-> persistent engines) and runs its class through the session's
+fluent builders; the same API is available as a library
+(zmc::session::Session).
 
 COMMON FLAGS
   --artifacts DIR   artifact directory     [artifacts]
   --workers N       simulated devices per engine [1]
-  --num-engines N   engines in the cluster (integrate/run) [1]
+  --num-engines N   engines in the cluster (integrate/run/normal) [1]
   --samples N       samples per function   [1048576]
   --trials N        independent repeats    [1]
   --seed N          RNG seed               [2021]
   --bounds \"l,h;l,h\"  per-dimension bounds
   --theta \"a,b,..\"  parameter bindings (p0, p1, ...)
 
-MULTI-ENGINE (integrate/run): --num-engines N shards every batch
-contiguously across N persistent engines (disjoint Philox counter
-ranges, centralized merge) — results are bit-identical to N=1.
+MULTI-ENGINE (integrate/run/normal): --num-engines N shards every
+batch contiguously across N persistent engines (disjoint Philox
+counter ranges, centralized merge) — results are bit-identical to N=1.
 
 ADAPTIVE (integrate/run): setting an error target switches to the
 pilot-then-refine loop — the sample budget flows to the functions that
@@ -205,61 +211,46 @@ fn parse_theta(flags: &Flags) -> Result<Vec<f64>> {
     }
 }
 
-/// Load the artifact registry; when the default directory is absent and
-/// the CPU emulator backend is compiled in, fall back to the emulated
-/// registry so the CLI works out of the box. A *present but invalid*
-/// artifact set (corrupt manifest, ABI mismatch) is always a hard error
-/// — falling back would silently compute against the wrong executables.
-fn load_registry(flags: &Flags) -> Result<Arc<Registry>> {
-    let dir = flags.str("artifacts").unwrap_or("artifacts");
-    let manifest_missing =
-        !std::path::Path::new(dir).join("manifest.json").exists();
-    if manifest_missing
-        && !cfg!(feature = "pjrt")
-        && flags.str("artifacts").is_none()
-    {
-        eprintln!(
-            "note: no {dir}/manifest.json; using the in-process CPU \
-             emulator registry"
-        );
-        return Ok(Arc::new(Registry::emulated()));
+/// Start a [`Session`] builder with the CLI's registry-resolution
+/// semantics: an explicit `--artifacts DIR` must load (no silent
+/// fallback); the default directory falls back to the in-process CPU
+/// emulator registry when its manifest is absent, so the CLI works out
+/// of the box. A *present but invalid* artifact set (corrupt manifest,
+/// ABI mismatch) is always a hard error — falling back would silently
+/// compute against the wrong executables.
+fn session_builder(flags: &Flags) -> zmc::session::SessionBuilder {
+    match flags.str("artifacts") {
+        Some(dir) => Session::builder().artifacts(dir),
+        None => {
+            let b = Session::builder().artifacts_or_emulator("artifacts");
+            if b.will_use_emulator() {
+                eprintln!(
+                    "note: no artifacts/manifest.json; using the \
+                     in-process CPU emulator registry"
+                );
+            }
+            b
+        }
     }
-    Ok(Arc::new(Registry::load(dir)?))
 }
 
-/// One persistent engine per CLI invocation: every subcommand's batches
-/// share the same warm workers and executable caches.
-fn make_engine(flags: &Flags) -> Result<DeviceEngine> {
-    make_engine_n(flags, flags.usize("workers", 1)?)
-}
-
-fn make_engine_n(flags: &Flags, workers: usize) -> Result<DeviceEngine> {
-    let reg = load_registry(flags)?;
-    let pool = DevicePool::new(&reg, workers)?;
-    Engine::for_pool(&pool)
-}
-
-/// The execution surface `--num-engines` selects: a single persistent
-/// engine (N = 1, the default) or a cluster of N engines, each with
-/// `--workers` workers. Both sides of the same [`LaunchExec`] trait,
-/// so every integrator call is topology-blind.
-fn make_exec(
+/// One session per CLI invocation: every subcommand's batches share
+/// the same warm workers and executable caches. `--num-engines N > 1`
+/// puts a cluster of N engines (each with `workers` workers) behind
+/// the same builders — results are bit-identical at any value.
+fn make_session(
     flags: &Flags,
     workers: usize,
     num_engines: usize,
-) -> Result<Box<dyn LaunchExec>> {
-    if num_engines <= 1 {
-        return Ok(Box::new(make_engine_n(flags, workers)?));
-    }
-    let reg = load_registry(flags)?;
-    let pool = DevicePool::new(&reg, workers)?;
-    Ok(Box::new(DeviceCluster::for_pool(&pool, num_engines)?))
+) -> Result<Session> {
+    session_builder(flags).workers(workers).engines(num_engines).build()
 }
 
 // ------------------------------------------------------------- commands
 
 fn cmd_info(flags: &Flags) -> Result<()> {
-    let reg = load_registry(flags)?;
+    // inspection only: resolve the registry without spawning workers
+    let reg = session_builder(flags).load_registry()?;
     println!("artifacts: {}", reg.dir.display());
     println!(
         "ABI: MAX_DIM={} MAX_PROG={} STACK={} MAX_PARAM={}",
@@ -285,25 +276,29 @@ fn cmd_integrate(flags: &Flags) -> Result<()> {
     let job = IntegralJob::with_params(expr, &bounds, &theta)?;
     let samples = flags.usize("samples", 1 << 20)?;
     let trials = flags.usize("trials", 1)? as u32;
-    let cfg = MultiConfig {
+    let target_rel = flags.opt_f64("target-rel-err")?;
+    let target_abs = flags.opt_f64("target-abs-err")?;
+    let adaptive = target_rel.is_some() || target_abs.is_some();
+    let num_engines = flags.usize("num-engines", 1)?.max(1);
+    let session =
+        make_session(flags, flags.usize("workers", 1)?, num_engines)?;
+    // resolved into one MultiConfig via the builder's escape hatch:
+    // passing both targets keeps the free functions' semantics (stop
+    // at whichever is met), exactly as previous CLI versions did
+    let mcfg = zmc::integrator::multifunctions::MultiConfig {
         samples_per_fn: samples,
         seed: flags.u64("seed", 2021)?,
-        target_rel_err: flags.opt_f64("target-rel-err")?,
-        target_abs_err: flags.opt_f64("target-abs-err")?,
+        target_rel_err: target_rel,
+        target_abs_err: target_abs,
         max_rounds: flags.usize("max-rounds", 12)?,
-        num_engines: flags.usize("num-engines", 1)?.max(1),
+        num_engines,
         ..Default::default()
     };
-    // the config's topology request decides the execution surface
-    let exec =
-        make_exec(flags, flags.usize("workers", 1)?, cfg.num_engines)?;
     let t0 = std::time::Instant::now();
-    let per_trial = multifunctions::integrate_trials(
-        exec.as_ref(),
-        &[job.clone()],
-        &cfg,
-        trials,
-    )?;
+    let per_trial = session
+        .multifunctions(std::slice::from_ref(&job))
+        .config(mcfg)
+        .run_trials(trials)?;
     let dt = t0.elapsed();
     let mut w = Welford::new();
     for t in &per_trial {
@@ -322,9 +317,9 @@ fn cmd_integrate(flags: &Flags) -> Result<()> {
             e.std_err
         );
     } else {
-        println!("  I = {:.8} ± {:.3e}", e.value, e.std_err);
+        println!("  {e}");
     }
-    if cfg.is_adaptive() {
+    if adaptive {
         println!(
             "  samples/fn: {} (adaptive, {} rounds)   wall: {:.3}s",
             e.n_samples,
@@ -345,24 +340,77 @@ fn cmd_run(flags: &Flags) -> Result<()> {
     let path = flags.str("config").context("--config required")?;
     let cfg = JobConfig::from_file(path)?;
     let workers = flags.usize("workers", cfg.workers)?;
-    let mcfg = MultiConfig {
+    let num_engines =
+        flags.usize("num-engines", cfg.num_engines)?.max(1);
+    // CLI flags override the job file's adaptive targets
+    let target_rel =
+        flags.opt_f64("target-rel-err")?.or(cfg.target_rel_err);
+    let target_abs =
+        flags.opt_f64("target-abs-err")?.or(cfg.target_abs_err);
+    // surface inapplicable knobs instead of silently dropping them:
+    // the adaptive loop only exists for multifunction batches, and the
+    // tree search has its own per-cube trial count
+    if !matches!(cfg.class, JobClass::Multifunctions)
+        && (target_rel.is_some() || target_abs.is_some())
+    {
+        bail!(
+            "error targets (--target-rel-err/--target-abs-err/\
+             target_*_err fields) apply to the multifunctions class \
+             only"
+        );
+    }
+    if matches!(cfg.class, JobClass::Normal(_)) && cfg.trials > 1 {
+        bail!(
+            "'trials' does not apply to the normal class — set \
+             per-cube trials via the \"normal\" object instead"
+        );
+    }
+    // one session serves whichever class the job file describes
+    let session = make_session(flags, workers, num_engines)?;
+    match &cfg.class {
+        JobClass::Multifunctions => run_multifunctions(
+            flags,
+            &session,
+            &cfg,
+            (target_rel, target_abs),
+            workers,
+            num_engines,
+        ),
+        JobClass::Functional { axes } => {
+            run_functional(&session, &cfg, axes)
+        }
+        JobClass::Normal(p) => run_normal_class(&session, &cfg, p),
+    }
+}
+
+fn run_multifunctions(
+    flags: &Flags,
+    session: &Session,
+    cfg: &JobConfig,
+    (target_rel, target_abs): (Option<f64>, Option<f64>),
+    workers: usize,
+    num_engines: usize,
+) -> Result<()> {
+    let adaptive = target_rel.is_some() || target_abs.is_some();
+    let max_rounds =
+        flags.usize("max-rounds", cfg.max_rounds.unwrap_or(12))?;
+    // a job file may legitimately combine rel+abs targets (stop at
+    // whichever is met) — the free-function semantics — so the
+    // resolved config goes through the builder's escape hatch
+    let mcfg = zmc::integrator::multifunctions::MultiConfig {
         samples_per_fn: cfg.samples_per_fn,
         seed: cfg.seed,
-        target_rel_err: flags.opt_f64("target-rel-err")?,
-        target_abs_err: flags.opt_f64("target-abs-err")?,
-        max_rounds: flags.usize("max-rounds", 12)?,
-        num_engines: flags.usize("num-engines", cfg.num_engines)?.max(1),
+        target_rel_err: target_rel,
+        target_abs_err: target_abs,
+        max_rounds,
+        num_engines,
         ..Default::default()
     };
-    // the config's topology request decides the execution surface
-    let exec = make_exec(flags, workers, mcfg.num_engines)?;
     let t0 = std::time::Instant::now();
-    let per_trial = multifunctions::integrate_trials(
-        exec.as_ref(),
-        &cfg.jobs,
-        &mcfg,
-        cfg.trials,
-    )?;
+    let per_trial = session
+        .multifunctions(&cfg.jobs)
+        .config(mcfg)
+        .run_trials(cfg.trials)?;
     let dt = t0.elapsed();
     println!(
         "{} functions x {} trials x {} samples on {} engine(s) x {} \
@@ -370,11 +418,11 @@ fn cmd_run(flags: &Flags) -> Result<()> {
         cfg.jobs.len(),
         cfg.trials,
         cfg.samples_per_fn,
-        mcfg.num_engines,
+        num_engines,
         workers,
         dt.as_secs_f64()
     );
-    if mcfg.is_adaptive() {
+    if adaptive {
         println!(
             "{:>4}  {:>14}  {:>12}  {:>6}  {:>12}  expr",
             "fn", "mean", "std", "rounds", "samples"
@@ -389,7 +437,7 @@ fn cmd_run(flags: &Flags) -> Result<()> {
         }
         let spread =
             if cfg.trials > 1 { w.std() } else { per_trial[0][i].std_err };
-        if mcfg.is_adaptive() {
+        if adaptive {
             // trials may converge in different rounds: report the worst
             // round count and the mean samples actually spent
             let rounds = per_trial.iter().map(|t| t[i].rounds).max().unwrap_or(0);
@@ -415,6 +463,89 @@ fn cmd_run(flags: &Flags) -> Result<()> {
     Ok(())
 }
 
+fn run_functional(
+    session: &Session,
+    cfg: &JobConfig,
+    axes: &[Vec<f64>],
+) -> Result<()> {
+    let thetas = functional::grid(axes);
+    let job = &cfg.jobs[0];
+    let t0 = std::time::Instant::now();
+    // the job file's `trials` means independent repeats here too: all
+    // submitted up front so they interleave across the warm workers
+    let handles: Vec<_> = (0..cfg.trials)
+        .map(|t| {
+            session
+                .functional(job, &thetas)
+                .samples(cfg.samples_per_fn)
+                .seed(cfg.seed)
+                .trial(t)
+                .submit()
+        })
+        .collect::<Result<_>>()?;
+    let per_trial: Vec<Vec<zmc::integrator::spec::Estimate>> = handles
+        .into_iter()
+        .map(|h| h.wait())
+        .collect::<Result<_>>()?;
+    println!(
+        "scan of {} over {} grid point(s) x {} trial(s): {:.3}s",
+        job.source,
+        thetas.len(),
+        cfg.trials,
+        t0.elapsed().as_secs_f64()
+    );
+    println!("{:>24}  {:>14}  {:>12}", "theta", "I", "σ");
+    for (i, t) in thetas.iter().enumerate() {
+        let mut w = Welford::new();
+        for tr in &per_trial {
+            w.push(tr[i].value);
+        }
+        let spread = if cfg.trials > 1 {
+            w.std()
+        } else {
+            per_trial[0][i].std_err
+        };
+        println!(
+            "{:>24}  {:>14.8}  {:>12.3e}",
+            fmt_theta(t),
+            w.mean(),
+            spread
+        );
+    }
+    Ok(())
+}
+
+fn fmt_theta(theta: &[f64]) -> String {
+    let vals: Vec<String> =
+        theta.iter().map(|v| format!("{v:.4}")).collect();
+    format!("[{}]", vals.join(", "))
+}
+
+fn run_normal_class(
+    session: &Session,
+    cfg: &JobConfig,
+    p: &zmc::config::NormalParams,
+) -> Result<()> {
+    let job = &cfg.jobs[0];
+    let t0 = std::time::Instant::now();
+    let r = session
+        .normal(job)
+        .divisions(p.divisions)
+        .trials(p.n_trials)
+        .sigma_mult(p.sigma_mult)
+        .depth(p.depth)
+        .max_split_dims(p.max_split_dims)
+        .seed(cfg.seed)
+        .run()?;
+    println!("tree-search integral of: {}", job.source);
+    println!("  {}  ({:.3}s)", r.estimate, t0.elapsed().as_secs_f64());
+    println!(
+        "  cubes/level: {:?}  flagged/level: {:?}  launches: {}",
+        r.cubes_per_level, r.flagged_per_level, r.launches
+    );
+    Ok(())
+}
+
 fn cmd_scan(flags: &Flags) -> Result<()> {
     let expr = flags.str("expr").context("--expr required")?;
     let bounds =
@@ -432,14 +563,14 @@ fn cmd_scan(flags: &Flags) -> Result<()> {
         .map(|v| vec![v])
         .collect();
     let job = IntegralJob::with_params(expr, &bounds, &thetas[0])?;
-    let engine = make_engine(flags)?;
-    let cfg = MultiConfig {
-        samples_per_fn: flags.usize("samples", 1 << 18)?,
-        seed: flags.u64("seed", 2021)?,
-        ..Default::default()
-    };
+    let session =
+        make_session(flags, flags.usize("workers", 1)?, 1)?;
     let t0 = std::time::Instant::now();
-    let ests = functional::scan(&engine, &job, &thetas, &cfg)?;
+    let ests = session
+        .functional(&job, &thetas)
+        .samples(flags.usize("samples", 1 << 18)?)
+        .seed(flags.u64("seed", 2021)?)
+        .run()?;
     println!(
         "scan of {expr} over p0 in [{lo}, {hi}] ({n} points): {:.3}s",
         t0.elapsed().as_secs_f64()
@@ -457,25 +588,22 @@ fn cmd_normal(flags: &Flags) -> Result<()> {
         parse_bounds(flags.str("bounds").context("--bounds required")?)?;
     let theta = parse_theta(flags)?;
     let job = IntegralJob::with_params(expr, &bounds, &theta)?;
-    let engine = make_engine(flags)?;
-    let cfg = NormalConfig {
-        initial_divisions: flags.usize("divisions", 4)?,
-        n_trials: flags.usize("trials", 5)? as u32,
-        sigma_mult: flags.f64("sigma-mult", 1.0)?,
-        max_depth: flags.usize("depth", 2)?,
-        seed: flags.u64("seed", 2021)?,
-        ..Default::default()
-    };
+    let session = make_session(
+        flags,
+        flags.usize("workers", 1)?,
+        flags.usize("num-engines", 1)?.max(1),
+    )?;
     let t0 = std::time::Instant::now();
-    let r = normal::integrate(&engine, &job, &cfg)?;
+    let r = session
+        .normal(&job)
+        .divisions(flags.usize("divisions", 4)?)
+        .trials(flags.usize("trials", 5)? as u32)
+        .sigma_mult(flags.f64("sigma-mult", 1.0)?)
+        .depth(flags.usize("depth", 2)?)
+        .seed(flags.u64("seed", 2021)?)
+        .run()?;
     println!("tree-search integral of: {expr}");
-    println!(
-        "  I = {:.8} ± {:.3e}  ({} samples, {:.3}s)",
-        r.estimate.value,
-        r.estimate.std_err,
-        r.estimate.n_samples,
-        t0.elapsed().as_secs_f64()
-    );
+    println!("  {}  ({:.3}s)", r.estimate, t0.elapsed().as_secs_f64());
     println!(
         "  cubes/level: {:?}  flagged/level: {:?}  launches: {}",
         r.cubes_per_level, r.flagged_per_level, r.launches
@@ -487,21 +615,20 @@ fn cmd_fig1(flags: &Flags) -> Result<()> {
     let n = flags.usize("n", 100)? as u32;
     let samples = flags.usize("samples", 1 << 20)?;
     let trials = flags.usize("trials", 10)? as u32;
-    let engine = make_engine(flags)?;
+    let session =
+        make_session(flags, flags.usize("workers", 1)?, 1)?;
     let batch = HarmonicBatch::fig1(n);
-    let cfg = MultiConfig {
-        samples_per_fn: samples,
-        seed: flags.u64("seed", 2021)?,
-        ..Default::default()
-    };
     let t0 = std::time::Instant::now();
-    let per_trial =
-        harmonic::integrate_trials(&engine, &batch, &cfg, trials)?;
+    let per_trial = session
+        .harmonic(&batch)
+        .samples(samples)
+        .seed(flags.u64("seed", 2021)?)
+        .run_trials(trials)?;
     let dt = t0.elapsed();
     println!(
         "Fig. 1: {n} harmonics, {samples} samples, {trials} trials, \
          {} workers — {:.2}s total ({:.2}s/trial)",
-        engine.n_workers(),
+        session.workers(),
         dt.as_secs_f64(),
         dt.as_secs_f64() / trials as f64
     );
@@ -546,7 +673,14 @@ fn cmd_fig1(flags: &Flags) -> Result<()> {
 
 fn cmd_init_config(flags: &Flags) -> Result<()> {
     let path = flags.str("_pos").unwrap_or("job.json");
-    std::fs::write(path, JobConfig::example_json())?;
-    println!("wrote example job file to {path}");
+    let class = flags.str("class").unwrap_or("multifunctions");
+    let text = JobConfig::example_json_for(class).ok_or_else(|| {
+        anyhow!(
+            "unknown --class '{class}' \
+             (expected multifunctions | functional | normal)"
+        )
+    })?;
+    std::fs::write(path, text)?;
+    println!("wrote example {class} job file to {path}");
     Ok(())
 }

@@ -1,0 +1,118 @@
+//! Fluent builder for `ZMCintegral_functional` parameter scans.
+
+use anyhow::Result;
+
+use crate::abi::MAX_PARAM;
+use crate::integrator::functional;
+use crate::integrator::multifunctions::{MultiConfig, MultiHandle};
+use crate::integrator::spec::{Estimate, IntegralJob};
+
+use super::multi::validate_multi_config;
+use super::{Error, Session};
+
+/// Chainable configuration for one integrand swept over a parameter
+/// grid (each grid point is its own packed integrand with its own
+/// Philox stream — compilation happens once, not per point).
+/// Terminate with [`run`](Self::run) or [`submit`](Self::submit).
+#[must_use = "builders do nothing until .run()/.submit()"]
+pub struct FunctionalBuilder<'s> {
+    session: &'s Session,
+    job: &'s IntegralJob,
+    thetas: &'s [Vec<f64>],
+    cfg: MultiConfig,
+}
+
+impl<'s> FunctionalBuilder<'s> {
+    pub(crate) fn new(
+        session: &'s Session,
+        job: &'s IntegralJob,
+        grid: &'s [Vec<f64>],
+    ) -> Self {
+        FunctionalBuilder {
+            session,
+            job,
+            thetas: grid,
+            cfg: MultiConfig::default(),
+        }
+    }
+
+    /// Samples per grid point.
+    pub fn samples(mut self, n: usize) -> Self {
+        self.cfg.samples_per_fn = n;
+        self
+    }
+
+    /// RNG seed shared by the scan.
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.cfg.seed = seed;
+        self
+    }
+
+    /// Independent-repeat id of this scan.
+    pub fn trial(mut self, trial: u32) -> Self {
+        self.cfg.trial = trial;
+        self
+    }
+
+    /// First Philox stream id; grid point `i` uses `stream_base + i`.
+    pub fn stream_base(mut self, stream: u32) -> Self {
+        self.cfg.stream_base = stream;
+        self
+    }
+
+    /// Per-job retry budget on the engine.
+    pub fn max_retries(mut self, n: u32) -> Self {
+        self.cfg.max_retries = n;
+        self
+    }
+
+    /// Force a specific executable (default: best fit by
+    /// dims + samples).
+    pub fn exe(mut self, name: impl Into<String>) -> Self {
+        self.cfg.exe = Some(name.into());
+        self
+    }
+
+    /// Replace the whole [`MultiConfig`] — the escape hatch for
+    /// callers migrating from [`functional::scan`].
+    pub fn config(mut self, cfg: MultiConfig) -> Self {
+        self.cfg = cfg;
+        self
+    }
+
+    fn validated(self) -> Result<Self> {
+        validate_multi_config(&self.cfg)?;
+        let expected = self.job.expr.n_params();
+        for theta in self.thetas {
+            if theta.len() > MAX_PARAM {
+                return Err(Error::TooManyParams {
+                    max: MAX_PARAM,
+                    got: theta.len(),
+                }
+                .into());
+            }
+            if theta.len() < expected {
+                return Err(Error::DimMismatch {
+                    expected,
+                    got: theta.len(),
+                }
+                .into());
+            }
+        }
+        Ok(self)
+    }
+
+    /// Integrate at every grid point; one [`Estimate`] per point, in
+    /// grid order.
+    pub fn run(self) -> Result<Vec<Estimate>> {
+        let b = self.validated()?;
+        functional::scan(b.session.exec(), b.job, b.thetas, &b.cfg)
+    }
+
+    /// Submit the scan without waiting; points ride the warm engine(s)
+    /// concurrently with any other in-flight work.
+    pub fn submit(self) -> Result<MultiHandle> {
+        let b = self.validated()?;
+        functional::submit_scan(b.session.exec(), b.job, b.thetas, &b.cfg)
+    }
+}

@@ -1,0 +1,105 @@
+//! Fluent builder for the harmonic-family fast path (Fig. 1).
+
+use anyhow::Result;
+
+use crate::integrator::harmonic::{self, HarmonicBatch, HarmonicHandle};
+use crate::integrator::multifunctions::MultiConfig;
+use crate::integrator::spec::Estimate;
+
+use super::multi::validate_multi_config;
+use super::Session;
+
+/// Chainable configuration for a batch of harmonic integrands over one
+/// shared box, routed through the MXU-shaped `harmonic` artifact on
+/// the session's [primary engine](Session::engine). Terminate with
+/// [`run`](Self::run), [`run_trials`](Self::run_trials) or
+/// [`submit`](Self::submit).
+#[must_use = "builders do nothing until .run()/.submit()"]
+pub struct HarmonicBuilder<'s> {
+    session: &'s Session,
+    batch: &'s HarmonicBatch,
+    cfg: MultiConfig,
+}
+
+impl<'s> HarmonicBuilder<'s> {
+    pub(crate) fn new(
+        session: &'s Session,
+        batch: &'s HarmonicBatch,
+    ) -> Self {
+        HarmonicBuilder { session, batch, cfg: MultiConfig::default() }
+    }
+
+    /// Samples per harmonic.
+    pub fn samples(mut self, n: usize) -> Self {
+        self.cfg.samples_per_fn = n;
+        self
+    }
+
+    /// RNG seed shared by the batch.
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.cfg.seed = seed;
+        self
+    }
+
+    /// Independent-repeat id ([`run_trials`](Self::run_trials)
+    /// advances it per repeat).
+    pub fn trial(mut self, trial: u32) -> Self {
+        self.cfg.trial = trial;
+        self
+    }
+
+    /// First Philox stream id; launch block `b` uses
+    /// `stream_base + b`.
+    pub fn stream_base(mut self, stream: u32) -> Self {
+        self.cfg.stream_base = stream;
+        self
+    }
+
+    /// Per-job retry budget on the engine.
+    pub fn max_retries(mut self, n: u32) -> Self {
+        self.cfg.max_retries = n;
+        self
+    }
+
+    /// Force a specific harmonic executable.
+    pub fn exe(mut self, name: impl Into<String>) -> Self {
+        self.cfg.exe = Some(name.into());
+        self
+    }
+
+    /// Replace the whole [`MultiConfig`] — the escape hatch for
+    /// callers migrating from [`harmonic::integrate`].
+    pub fn config(mut self, cfg: MultiConfig) -> Self {
+        self.cfg = cfg;
+        self
+    }
+
+    fn validated(self) -> Result<Self> {
+        validate_multi_config(&self.cfg)?;
+        Ok(self)
+    }
+
+    /// Integrate the batch; one [`Estimate`] per harmonic, in order.
+    pub fn run(self) -> Result<Vec<Estimate>> {
+        let b = self.validated()?;
+        harmonic::integrate(b.session.engine(), b.batch, &b.cfg)
+    }
+
+    /// Independent repeats, one estimate vector per trial — all
+    /// submitted up front so trials interleave across the workers.
+    pub fn run_trials(self, trials: u32) -> Result<Vec<Vec<Estimate>>> {
+        let b = self.validated()?;
+        harmonic::integrate_trials(
+            b.session.engine(),
+            b.batch,
+            &b.cfg,
+            trials,
+        )
+    }
+
+    /// Submit the batch without waiting.
+    pub fn submit(self) -> Result<HarmonicHandle> {
+        let b = self.validated()?;
+        harmonic::submit(b.session.engine(), b.batch, &b.cfg)
+    }
+}

@@ -1,0 +1,457 @@
+//! One front door for the paper's three classes — the [`Session`]
+//! façade and its fluent builders.
+//!
+//! The paper's promise is a stable surface: one object, one
+//! `evaluate()`, whether you integrate a single function, a
+//! heterogeneous batch of 10³ integrands, a parameter sweep, or a
+//! stratified tree search. Before this module existed callers
+//! hand-wired `Registry → DevicePool → Engine/DeviceCluster` and then
+//! picked among module-level free functions, each with its own config
+//! struct. A `Session` owns that construction once and hands out
+//! chainable builders that terminate in `.run()` / `.submit()`:
+//!
+//! ```no_run
+//! use zmc::prelude::*;
+//!
+//! let session = Session::builder()
+//!     .artifacts("artifacts")
+//!     .workers(2)
+//!     .engines(1)
+//!     .build()
+//!     .unwrap();
+//! let job = IntegralJob::parse("sin(x1)*x2", &[(0.0, 1.0), (0.0, 2.0)])
+//!     .unwrap();
+//! let est = session
+//!     .multifunctions(std::slice::from_ref(&job))
+//!     .samples(1 << 20)
+//!     .seed(42)
+//!     .run()
+//!     .unwrap()[0];
+//! println!("{est}");
+//! ```
+//!
+//! | paper API | session builder |
+//! |---|---|
+//! | `ZMCintegral_multifunctions(fns).evaluate()` | [`Session::multifunctions`]`(&jobs).samples(n).run()` |
+//! | `ZMCintegral_functional(f, grid).evaluate()` | [`Session::functional`]`(&job, &grid).samples(n).run()` |
+//! | `ZMCintegral_normal(f).evaluate()` | [`Session::normal`]`(&job).depth(d).run()` |
+//!
+//! Sync and async (`.run()` vs `.submit() -> handle`), one engine and
+//! N engines (`.engines(n)` at session build), one-shot and adaptive
+//! (`.target_rel_err(..)`) are all the same call shape, and results
+//! are bit-identical to the module-level free functions the builders
+//! delegate to ([`crate::integrator::multifunctions::integrate`] and
+//! friends — those remain supported as the thin compatibility layer,
+//! proven equivalent by `tests/session_test.rs`).
+//!
+//! Builders validate before any device work is submitted; violations
+//! surface as typed [`Error`]s recoverable with
+//! `err.downcast_ref::<zmc::session::Error>()`.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::cluster::{DeviceCluster, LaunchExec};
+use crate::config::JobConfig;
+use crate::engine::{DeviceEngine, Engine};
+use crate::integrator::harmonic::HarmonicBatch;
+use crate::integrator::spec::IntegralJob;
+use crate::runtime::device::DevicePool;
+use crate::runtime::registry::Registry;
+
+mod functional;
+mod harmonic;
+mod multi;
+mod normal;
+
+pub use self::functional::FunctionalBuilder;
+pub use self::harmonic::HarmonicBuilder;
+pub use self::multi::MultiBuilder;
+pub use self::normal::NormalBuilder;
+
+/// Typed validation errors raised by the session builders before any
+/// launch is submitted. They travel inside `anyhow::Error`; recover
+/// the variant with `err.downcast_ref::<zmc::session::Error>()`.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Error {
+    /// `.samples(0)` — the run would evaluate nothing.
+    ZeroSamples,
+    /// Both `.target_rel_err(..)` and `.target_abs_err(..)` were set
+    /// through the fluent knobs; pick one stopping rule per run. (A
+    /// whole `MultiConfig` passed via the `.config()` escape hatch may
+    /// combine both, keeping the free functions' stop-at-whichever-is-
+    /// met semantics.)
+    ConflictingTargets,
+    /// An error target that is not finite and positive.
+    InvalidTarget {
+        /// The offending target value.
+        value: f64,
+    },
+    /// A parameter grid point binds fewer values than the integrand
+    /// reads.
+    DimMismatch {
+        /// Parameters the expression reads (`p0..p{expected-1}`).
+        expected: usize,
+        /// Values the offending grid point supplies.
+        got: usize,
+    },
+    /// A parameter grid point exceeds the ABI's parameter-slot
+    /// capacity ([`crate::abi::MAX_PARAM`]).
+    TooManyParams {
+        /// The ABI's parameter-slot capacity.
+        max: usize,
+        /// Values the offending grid point supplies.
+        got: usize,
+    },
+    /// The tree-search variance heuristic needs >= 2 trials per cube.
+    TooFewTrials {
+        /// The configured trial count.
+        got: u32,
+    },
+}
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Error::ZeroSamples => {
+                write!(f, "samples must be > 0")
+            }
+            Error::ConflictingTargets => write!(
+                f,
+                "conflicting error targets: set only one of \
+                 target_rel_err / target_abs_err"
+            ),
+            Error::InvalidTarget { value } => write!(
+                f,
+                "error target must be finite and > 0 (got {value})"
+            ),
+            Error::DimMismatch { expected, got } => write!(
+                f,
+                "parameter grid point has {got} value(s) but the \
+                 integrand reads {expected} parameter(s)"
+            ),
+            Error::TooManyParams { max, got } => write!(
+                f,
+                "parameter grid point has {got} value(s) but the ABI \
+                 caps parameter slots at {max}"
+            ),
+            Error::TooFewTrials { got } => write!(
+                f,
+                "n_trials must be >= 2 for the variance heuristic \
+                 (got {got})"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// The execution surface a session owns: a single persistent engine
+/// or a cluster of them, both behind [`LaunchExec`].
+enum ExecTopology {
+    Engine(DeviceEngine),
+    Cluster(DeviceCluster),
+}
+
+/// One per process (or one per independent workload): owns the
+/// artifact [`Registry`], the [`DevicePool`] topology, and the
+/// persistent engine(s), and hands out per-class builders. Everything
+/// run through one session shares its warm executable caches.
+pub struct Session {
+    registry: Arc<Registry>,
+    topology: ExecTopology,
+    workers: usize,
+}
+
+impl Session {
+    /// Start configuring a session. Defaults: the `artifacts`
+    /// directory with emulator fallback, 1 worker, 1 engine.
+    pub fn builder() -> SessionBuilder {
+        SessionBuilder::new()
+    }
+
+    /// Build a session sized by a job file: `workers` workers per
+    /// engine, `num_engines` engines, default artifact resolution.
+    pub fn from_job_config(cfg: &JobConfig) -> Result<Session> {
+        Session::builder().job_config(cfg).build()
+    }
+
+    /// The artifact registry launches resolve against.
+    pub fn registry(&self) -> &Registry {
+        &self.registry
+    }
+
+    /// Shared handle to the registry (for spawning sibling sessions).
+    pub fn registry_arc(&self) -> Arc<Registry> {
+        Arc::clone(&self.registry)
+    }
+
+    /// The submission surface: the engine for a 1-engine session, the
+    /// sharding cluster otherwise. Everything generic over
+    /// [`LaunchExec`] accepts this.
+    pub fn exec(&self) -> &dyn LaunchExec {
+        match &self.topology {
+            ExecTopology::Engine(e) => e,
+            ExecTopology::Cluster(c) => c,
+        }
+    }
+
+    /// The primary persistent engine: the only engine of a 1-engine
+    /// session, engine 0 of a cluster. The harmonic fast path (an
+    /// MXU-shaped single-engine artifact) runs here.
+    pub fn engine(&self) -> &DeviceEngine {
+        match &self.topology {
+            ExecTopology::Engine(e) => e,
+            ExecTopology::Cluster(c) => c.engine(0),
+        }
+    }
+
+    /// The cluster behind a multi-engine session, if any.
+    pub fn cluster(&self) -> Option<&DeviceCluster> {
+        match &self.topology {
+            ExecTopology::Engine(_) => None,
+            ExecTopology::Cluster(c) => Some(c),
+        }
+    }
+
+    /// Engines behind this session (1 unless built with `.engines`).
+    pub fn num_engines(&self) -> usize {
+        match &self.topology {
+            ExecTopology::Engine(_) => 1,
+            ExecTopology::Cluster(c) => c.n_engines(),
+        }
+    }
+
+    /// Device workers per engine.
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// `ZMCintegral_multifunctions`: a heterogeneous integrand batch.
+    /// The builder borrows `jobs` — nothing is copied on the way to
+    /// `.run()`.
+    pub fn multifunctions<'a>(
+        &'a self,
+        jobs: &'a [IntegralJob],
+    ) -> MultiBuilder<'a> {
+        MultiBuilder::new(self, jobs)
+    }
+
+    /// `ZMCintegral_functional`: one integrand over a parameter grid
+    /// (one estimate per grid point, in `grid` order).
+    pub fn functional<'a>(
+        &'a self,
+        job: &'a IntegralJob,
+        grid: &'a [Vec<f64>],
+    ) -> FunctionalBuilder<'a> {
+        FunctionalBuilder::new(self, job, grid)
+    }
+
+    /// `ZMCintegral_normal`: stratified sampling + heuristic tree
+    /// search on one integrand.
+    pub fn normal<'a>(&'a self, job: &'a IntegralJob) -> NormalBuilder<'a> {
+        NormalBuilder::new(self, job)
+    }
+
+    /// The harmonic-family fast path (the Fig. 1 workload).
+    pub fn harmonic<'a>(
+        &'a self,
+        batch: &'a HarmonicBatch,
+    ) -> HarmonicBuilder<'a> {
+        HarmonicBuilder::new(self, batch)
+    }
+}
+
+/// Where a session's registry comes from.
+enum RegistrySource {
+    /// Load `dir`; fall back to the CPU emulator registry when the
+    /// manifest is absent (and the `pjrt` feature is off).
+    Auto(String),
+    /// Load `dir`; any failure is a hard error.
+    Strict(String),
+    /// The in-process CPU emulator registry.
+    Emulated,
+    /// A registry the caller already loaded.
+    Provided(Arc<Registry>),
+}
+
+/// Fluent configuration for a [`Session`].
+#[must_use = "call .build() to construct the Session"]
+pub struct SessionBuilder {
+    source: RegistrySource,
+    workers: usize,
+    engines: usize,
+}
+
+impl SessionBuilder {
+    fn new() -> Self {
+        SessionBuilder {
+            source: RegistrySource::Auto("artifacts".into()),
+            workers: 1,
+            engines: 1,
+        }
+    }
+
+    /// Load artifacts from `dir`; a missing or invalid artifact set is
+    /// a hard error (no silent fallback).
+    pub fn artifacts(mut self, dir: impl Into<String>) -> Self {
+        self.source = RegistrySource::Strict(dir.into());
+        self
+    }
+
+    /// Load artifacts from `dir` when its manifest exists; otherwise
+    /// use the bit-compatible CPU emulator registry (the out-of-the-box
+    /// offline path). A *present but invalid* artifact set still
+    /// errors — falling back would silently compute against the wrong
+    /// executables.
+    pub fn artifacts_or_emulator(mut self, dir: impl Into<String>) -> Self {
+        self.source = RegistrySource::Auto(dir.into());
+        self
+    }
+
+    /// Use the in-process CPU emulator registry unconditionally.
+    pub fn emulated(mut self) -> Self {
+        self.source = RegistrySource::Emulated;
+        self
+    }
+
+    /// Use a registry the caller already loaded (shared across
+    /// sessions).
+    pub fn registry(mut self, registry: Arc<Registry>) -> Self {
+        self.source = RegistrySource::Provided(registry);
+        self
+    }
+
+    /// Device workers per engine (clamped to >= 1).
+    pub fn workers(mut self, n: usize) -> Self {
+        self.workers = n.max(1);
+        self
+    }
+
+    /// Engines in the session: 1 = single persistent engine, N > 1 = a
+    /// [`DeviceCluster`] sharding every batch (bit-identical results
+    /// at any count). Clamped to >= 1.
+    pub fn engines(mut self, n: usize) -> Self {
+        self.engines = n.max(1);
+        self
+    }
+
+    /// Apply a job file's topology (`workers`, `num_engines`).
+    pub fn job_config(self, cfg: &JobConfig) -> Self {
+        self.workers(cfg.workers).engines(cfg.num_engines)
+    }
+
+    /// Resolve just the registry — no workers are spawned. For
+    /// inspection paths like the CLI's `info` subcommand.
+    pub fn load_registry(self) -> Result<Arc<Registry>> {
+        Self::resolve(self.source)
+    }
+
+    /// True when `build()`/`load_registry()` will resolve to the CPU
+    /// emulator registry: an explicit [`emulated`](Self::emulated)
+    /// source, or the [`artifacts_or_emulator`](Self::artifacts_or_emulator)
+    /// fallback condition. The one place that decision lives — callers
+    /// wanting to announce the fallback (the CLI's stderr note) ask
+    /// here instead of re-deriving it.
+    pub fn will_use_emulator(&self) -> bool {
+        match &self.source {
+            RegistrySource::Emulated => true,
+            RegistrySource::Auto(dir) => auto_falls_back(dir),
+            RegistrySource::Strict(_) | RegistrySource::Provided(_) => {
+                false
+            }
+        }
+    }
+
+    fn resolve(source: RegistrySource) -> Result<Arc<Registry>> {
+        Ok(match source {
+            RegistrySource::Provided(r) => r,
+            RegistrySource::Emulated => Arc::new(Registry::emulated()),
+            RegistrySource::Strict(dir) => Arc::new(Registry::load(&dir)?),
+            RegistrySource::Auto(dir) => {
+                if auto_falls_back(&dir) {
+                    Arc::new(Registry::emulated())
+                } else {
+                    Arc::new(Registry::load(&dir)?)
+                }
+            }
+        })
+    }
+
+    /// Resolve the registry, build the device pool, and spawn the
+    /// engine(s). Workers and executable caches stay warm for the
+    /// session's lifetime.
+    pub fn build(self) -> Result<Session> {
+        let registry = Self::resolve(self.source)?;
+        let pool = DevicePool::new(&registry, self.workers)?;
+        let topology = if self.engines <= 1 {
+            ExecTopology::Engine(Engine::for_pool(&pool)?)
+        } else {
+            ExecTopology::Cluster(DeviceCluster::for_pool(
+                &pool,
+                self.engines,
+            )?)
+        };
+        Ok(Session { registry, topology, workers: self.workers })
+    }
+}
+
+/// The `Auto` source's fallback rule: no manifest on disk and no PJRT
+/// build (a pjrt build without artifacts must hard-error instead).
+fn auto_falls_back(dir: &str) -> bool {
+    !Path::new(dir).join("manifest.json").exists()
+        && !cfg!(feature = "pjrt")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_defaults_and_clamps() {
+        let b = SessionBuilder::new().workers(0).engines(0);
+        assert_eq!(b.workers, 1);
+        assert_eq!(b.engines, 1);
+        let b = SessionBuilder::new().workers(3).engines(4);
+        assert_eq!(b.workers, 3);
+        assert_eq!(b.engines, 4);
+    }
+
+    #[test]
+    fn will_use_emulator_mirrors_resolution() {
+        assert!(SessionBuilder::new().emulated().will_use_emulator());
+        assert!(!SessionBuilder::new()
+            .artifacts("artifacts")
+            .will_use_emulator());
+        // the Auto fallback fires exactly when no manifest exists and
+        // the build is not pjrt
+        let b = SessionBuilder::new()
+            .artifacts_or_emulator("definitely/not/a/dir");
+        assert_eq!(b.will_use_emulator(), !cfg!(feature = "pjrt"));
+    }
+
+    #[test]
+    fn error_display_is_stable() {
+        assert_eq!(Error::ZeroSamples.to_string(), "samples must be > 0");
+        assert!(Error::DimMismatch { expected: 2, got: 0 }
+            .to_string()
+            .contains("2 parameter(s)"));
+        assert!(Error::TooFewTrials { got: 1 }.to_string().contains(">= 2"));
+    }
+
+    #[test]
+    fn emulated_session_topology_accessors() {
+        let s = Session::builder().emulated().workers(2).build().unwrap();
+        assert_eq!(s.num_engines(), 1);
+        assert_eq!(s.workers(), 2);
+        assert!(s.cluster().is_none());
+        assert_eq!(s.engine().n_workers(), 2);
+
+        let c =
+            Session::builder().emulated().engines(3).build().unwrap();
+        assert_eq!(c.num_engines(), 3);
+        assert!(c.cluster().is_some());
+    }
+}

@@ -1,0 +1,215 @@
+//! Fluent builder for `ZMCintegral_multifunctions` batches.
+
+use anyhow::Result;
+
+use crate::adaptive::Allocation;
+use crate::integrator::multifunctions::{self, MultiConfig, MultiHandle};
+use crate::integrator::spec::{Estimate, IntegralJob};
+
+use super::{Error, Session};
+
+/// Chainable configuration for a heterogeneous integrand batch.
+/// Terminate with [`run`](Self::run), [`run_trials`](Self::run_trials)
+/// or [`submit`](Self::submit); knobs resolve into the same
+/// [`MultiConfig`] the free functions take, so results are
+/// bit-identical to the legacy path.
+#[must_use = "builders do nothing until .run()/.submit()"]
+pub struct MultiBuilder<'s> {
+    session: &'s Session,
+    jobs: &'s [IntegralJob],
+    cfg: MultiConfig,
+    /// False once the whole config came through [`config`](Self::config):
+    /// the escape hatch keeps the free functions' target semantics
+    /// (rel and abs may be combined), while the fluent target knobs
+    /// enforce one stopping rule per run.
+    knob_targets: bool,
+}
+
+impl<'s> MultiBuilder<'s> {
+    pub(crate) fn new(session: &'s Session, jobs: &'s [IntegralJob]) -> Self {
+        MultiBuilder {
+            session,
+            jobs,
+            cfg: MultiConfig::default(),
+            knob_targets: true,
+        }
+    }
+
+    /// Target samples per function (the per-function budget cap in
+    /// adaptive mode).
+    pub fn samples(mut self, n: usize) -> Self {
+        self.cfg.samples_per_fn = n;
+        self
+    }
+
+    /// RNG seed shared by the batch.
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.cfg.seed = seed;
+        self
+    }
+
+    /// Independent-repeat id of this batch ([`run_trials`](Self::run_trials)
+    /// advances it per repeat).
+    pub fn trial(mut self, trial: u32) -> Self {
+        self.cfg.trial = trial;
+        self
+    }
+
+    /// First Philox stream id; function `i` uses `stream_base + i`.
+    pub fn stream_base(mut self, stream: u32) -> Self {
+        self.cfg.stream_base = stream;
+        self
+    }
+
+    /// Per-job retry budget on the engine.
+    pub fn max_retries(mut self, n: u32) -> Self {
+        self.cfg.max_retries = n;
+        self
+    }
+
+    /// Force a specific executable (default: best fit by
+    /// dims + samples).
+    pub fn exe(mut self, name: impl Into<String>) -> Self {
+        self.cfg.exe = Some(name.into());
+        self
+    }
+
+    /// Stop refining a function once `std_err <= target * |I|`.
+    /// Setting an error target switches the run to the adaptive
+    /// pilot-then-refine loop ([`crate::adaptive`]). Pass `None` to
+    /// clear (handy when forwarding an optional CLI flag). Via the
+    /// fluent knobs, set at most one of the rel/abs targets —
+    /// combining both (stop at whichever is met) stays available
+    /// through [`config`](Self::config).
+    pub fn target_rel_err(mut self, target: impl Into<Option<f64>>) -> Self {
+        self.cfg.target_rel_err = target.into();
+        self.knob_targets = true;
+        self
+    }
+
+    /// Stop refining a function once `std_err <= target` (absolute).
+    /// Same one-target-per-run rule as
+    /// [`target_rel_err`](Self::target_rel_err).
+    pub fn target_abs_err(mut self, target: impl Into<Option<f64>>) -> Self {
+        self.cfg.target_abs_err = target.into();
+        self.knob_targets = true;
+        self
+    }
+
+    /// Maximum refinement rounds after the pilot (adaptive mode).
+    pub fn max_rounds(mut self, n: usize) -> Self {
+        self.cfg.max_rounds = n;
+        self
+    }
+
+    /// Samples per function in the adaptive pilot pass.
+    pub fn pilot_samples(mut self, n: usize) -> Self {
+        self.cfg.pilot_samples = n;
+        self
+    }
+
+    /// How refinement rounds distribute the budget (adaptive mode).
+    pub fn allocation(mut self, allocation: Allocation) -> Self {
+        self.cfg.allocation = allocation;
+        self
+    }
+
+    /// Replace the whole [`MultiConfig`] — the escape hatch for
+    /// callers migrating from the free functions (the other knobs
+    /// edit the same struct field-by-field). A config supplied here
+    /// keeps the free functions' semantics exactly, including a
+    /// combined rel+abs error target (stop at whichever is met).
+    pub fn config(mut self, cfg: MultiConfig) -> Self {
+        self.cfg = cfg;
+        self.knob_targets = false;
+        self
+    }
+
+    fn validated(self) -> Result<Self> {
+        validate_multi_config(&self.cfg)?;
+        if self.knob_targets
+            && self.cfg.target_rel_err.is_some()
+            && self.cfg.target_abs_err.is_some()
+        {
+            return Err(Error::ConflictingTargets.into());
+        }
+        Ok(self)
+    }
+
+    /// Integrate synchronously; one [`Estimate`] per job, in order.
+    pub fn run(self) -> Result<Vec<Estimate>> {
+        let b = self.validated()?;
+        multifunctions::integrate(b.session.exec(), b.jobs, &b.cfg)
+    }
+
+    /// Independent repeats (the paper's "10 independent evaluations"):
+    /// `trials` estimate vectors, each from a disjoint trial stream.
+    pub fn run_trials(self, trials: u32) -> Result<Vec<Vec<Estimate>>> {
+        let b = self.validated()?;
+        multifunctions::integrate_trials(
+            b.session.exec(),
+            b.jobs,
+            &b.cfg,
+            trials,
+        )
+    }
+
+    /// Submit asynchronously; independent batches ride the warm
+    /// engine(s) concurrently and are awaited per-handle.
+    pub fn submit(self) -> Result<MultiHandle> {
+        let b = self.validated()?;
+        multifunctions::submit(b.session.exec(), b.jobs, &b.cfg)
+    }
+}
+
+/// Shared [`MultiConfig`] validation for the multifunction, functional
+/// and harmonic builders: a run must draw samples and any error target
+/// must be a usable number. (The one-target-per-run rule is specific
+/// to [`MultiBuilder`]'s fluent knobs — a whole config passed through
+/// an escape hatch keeps the free functions' combined-target
+/// semantics.)
+pub(crate) fn validate_multi_config(cfg: &MultiConfig) -> Result<()> {
+    if cfg.samples_per_fn == 0 {
+        return Err(Error::ZeroSamples.into());
+    }
+    for target in
+        [cfg.target_rel_err, cfg.target_abs_err].into_iter().flatten()
+    {
+        if !target.is_finite() || target <= 0.0 {
+            return Err(Error::InvalidTarget { value: target }.into());
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn config_validation_rules() {
+        let ok = MultiConfig::default();
+        assert!(validate_multi_config(&ok).is_ok());
+
+        let zero = MultiConfig { samples_per_fn: 0, ..ok.clone() };
+        let err = validate_multi_config(&zero).unwrap_err();
+        assert_eq!(err.downcast_ref::<Error>(), Some(&Error::ZeroSamples));
+
+        // a combined rel+abs target is *shared-validation* legal — the
+        // adaptive driver stops at whichever is met; only the fluent
+        // knob path of MultiBuilder rejects the combination
+        let both = MultiConfig {
+            target_rel_err: Some(1e-2),
+            target_abs_err: Some(1e-3),
+            ..ok.clone()
+        };
+        assert!(validate_multi_config(&both).is_ok());
+
+        let bad = MultiConfig { target_rel_err: Some(-0.5), ..ok };
+        let err = validate_multi_config(&bad).unwrap_err();
+        assert!(matches!(
+            err.downcast_ref::<Error>(),
+            Some(Error::InvalidTarget { .. })
+        ));
+    }
+}

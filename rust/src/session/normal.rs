@@ -1,0 +1,94 @@
+//! Fluent builder for `ZMCintegral_normal` tree-search integration.
+
+use anyhow::Result;
+
+use crate::integrator::normal::{self, NormalConfig, NormalResult};
+use crate::integrator::spec::IntegralJob;
+
+use super::{Error, Session};
+
+/// Chainable configuration for stratified sampling + heuristic tree
+/// search on one integrand. Terminate with [`run`](Self::run); knobs
+/// resolve into the same [`NormalConfig`] the free function takes, so
+/// results are bit-identical to the legacy path (and to any engine
+/// count — [`normal::integrate`] is generic over
+/// [`crate::cluster::LaunchExec`]).
+#[must_use = "builders do nothing until .run()"]
+pub struct NormalBuilder<'s> {
+    session: &'s Session,
+    job: &'s IntegralJob,
+    cfg: NormalConfig,
+}
+
+impl<'s> NormalBuilder<'s> {
+    pub(crate) fn new(session: &'s Session, job: &'s IntegralJob) -> Self {
+        NormalBuilder { session, job, cfg: NormalConfig::default() }
+    }
+
+    /// Initial divisions per dimension (`k^D` starting cubes).
+    pub fn divisions(mut self, k: usize) -> Self {
+        self.cfg.initial_divisions = k;
+        self
+    }
+
+    /// Independent evaluations per cube per level (>= 2 — the variance
+    /// heuristic needs a spread).
+    pub fn trials(mut self, n: u32) -> Self {
+        self.cfg.n_trials = n;
+        self
+    }
+
+    /// Flag threshold: `mean(std) + sigma_mult * std(std)`.
+    pub fn sigma_mult(mut self, s: f64) -> Self {
+        self.cfg.sigma_mult = s;
+        self
+    }
+
+    /// Maximum refinement depth (0 = no refinement).
+    pub fn depth(mut self, d: usize) -> Self {
+        self.cfg.max_depth = d;
+        self
+    }
+
+    /// Subdivide at most this many dimensions per split.
+    pub fn max_split_dims(mut self, d: usize) -> Self {
+        self.cfg.max_split_dims = d;
+        self
+    }
+
+    /// RNG seed for the cube trial streams.
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.cfg.seed = seed;
+        self
+    }
+
+    /// Per-level retry budget on the engine.
+    pub fn max_retries(mut self, n: u32) -> Self {
+        self.cfg.max_retries = n;
+        self
+    }
+
+    /// Force a specific stratified executable.
+    pub fn exe(mut self, name: impl Into<String>) -> Self {
+        self.cfg.exe = Some(name.into());
+        self
+    }
+
+    /// Replace the whole [`NormalConfig`] — the escape hatch for
+    /// callers migrating from [`normal::integrate`].
+    pub fn config(mut self, cfg: NormalConfig) -> Self {
+        self.cfg = cfg;
+        self
+    }
+
+    /// Run the tree search; returns the estimate plus per-level tree
+    /// diagnostics.
+    pub fn run(self) -> Result<NormalResult> {
+        if self.cfg.n_trials < 2 {
+            return Err(
+                Error::TooFewTrials { got: self.cfg.n_trials }.into()
+            );
+        }
+        normal::integrate(self.session.exec(), self.job, &self.cfg)
+    }
+}

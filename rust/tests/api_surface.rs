@@ -1,0 +1,143 @@
+//! Golden snapshot of the crate's public API surface.
+//!
+//! A deliberately simple, `syn`-free text scan: every line in
+//! `src/**/*.rs` (excluding the `main.rs` binary) that declares a
+//! `pub` item is extracted — name only, cut before any signature
+//! detail — prefixed with its file path, sorted, and compared against
+//! the checked-in `tests/api_surface_golden.txt`. Accidental surface
+//! breaks (a renamed builder method, a dropped re-export, a module
+//! made private) fail CI with a readable diff.
+//!
+//! Scanning rules (mirrored by the blessing path — keep them boring):
+//! * a trimmed line equal to `#[cfg(test)]` ends the file's scan (the
+//!   repo convention puts the test module last);
+//! * `pub use` entries keep everything before the `;` (or the whole
+//!   line for multi-line imports);
+//! * other items are cut at the first `(`, `{`, `<`, `=` or `;`.
+//!
+//! After an intentional API change, re-bless and review the diff:
+//!
+//! ```text
+//! ZMC_BLESS=1 cargo test --test api_surface
+//! git diff rust/tests/api_surface_golden.txt
+//! ```
+
+use std::collections::BTreeSet;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+const PREFIXES: [&str; 9] = [
+    "pub fn ",
+    "pub struct ",
+    "pub enum ",
+    "pub trait ",
+    "pub mod ",
+    "pub const ",
+    "pub type ",
+    "pub use ",
+    "pub static ",
+];
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) {
+    for entry in fs::read_dir(dir).unwrap() {
+        let p = entry.unwrap().path();
+        if p.is_dir() {
+            collect_rs(&p, out);
+        } else if p.extension().and_then(|e| e.to_str()) == Some("rs") {
+            out.push(p);
+        }
+    }
+}
+
+/// The stable text of one declaration line.
+fn item_of(t: &str) -> String {
+    if t.starts_with("pub use ") {
+        match t.find(';') {
+            Some(i) => t[..i].trim_end().to_string(),
+            None => t.trim_end().to_string(),
+        }
+    } else {
+        let cut = t
+            .char_indices()
+            .find(|(_, c)| matches!(c, '(' | '{' | '<' | '=' | ';'))
+            .map(|(i, _)| i)
+            .unwrap_or(t.len());
+        t[..cut].trim_end().to_string()
+    }
+}
+
+/// Every `pub` declaration in the library source, sorted.
+fn surface() -> Vec<String> {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("src");
+    let mut files = Vec::new();
+    collect_rs(&root, &mut files);
+    let mut rels: Vec<String> = files
+        .iter()
+        .map(|f| {
+            f.strip_prefix(&root)
+                .unwrap()
+                .to_string_lossy()
+                .replace('\\', "/")
+        })
+        .collect();
+    rels.sort();
+    let mut items = Vec::new();
+    for rel in &rels {
+        if rel == "main.rs" {
+            continue; // the binary is not library surface
+        }
+        let text = fs::read_to_string(root.join(rel)).unwrap();
+        for line in text.lines() {
+            let t = line.trim();
+            if t == "#[cfg(test)]" {
+                break; // test module ends the file by convention
+            }
+            if PREFIXES.iter().any(|p| t.starts_with(p)) {
+                items.push(format!("{rel}: {}", item_of(t)));
+            }
+        }
+    }
+    items.sort();
+    items
+}
+
+#[test]
+fn public_api_surface_matches_golden() {
+    let golden_path = Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/api_surface_golden.txt");
+    let actual = surface();
+    assert!(
+        actual.iter().any(|l| l.contains("session/mod.rs: pub fn builder")),
+        "scanner failed to see the session module — rules drifted?"
+    );
+    if std::env::var("ZMC_BLESS").is_ok() {
+        fs::write(&golden_path, actual.join("\n") + "\n").unwrap();
+        return;
+    }
+    let golden_text =
+        fs::read_to_string(&golden_path).unwrap_or_default();
+    let golden: Vec<String> = golden_text
+        .lines()
+        .filter(|l| !l.is_empty())
+        .map(str::to_string)
+        .collect();
+    if golden != actual {
+        let gset: BTreeSet<&String> = golden.iter().collect();
+        let aset: BTreeSet<&String> = actual.iter().collect();
+        let mut msg = String::new();
+        for miss in gset.difference(&aset) {
+            msg.push_str(&format!("- removed: {miss}\n"));
+        }
+        for add in aset.difference(&gset) {
+            msg.push_str(&format!("+ added:   {add}\n"));
+        }
+        panic!(
+            "public API surface changed ({} -> {} items):\n{msg}\
+             If intentional, re-bless with\n  \
+             ZMC_BLESS=1 cargo test --test api_surface\n\
+             and review the diff of tests/api_surface_golden.txt",
+            golden.len(),
+            actual.len()
+        );
+    }
+}

@@ -1,0 +1,468 @@
+//! `Session` façade verification: the fluent builders must be
+//! bit-exact with the legacy free-function paths for all three paper
+//! classes, at 1 and 4 engines, and must surface typed validation
+//! errors before any device work happens.
+//!
+//! Runs entirely on the CPU emulator registry (like cluster_test), so
+//! the suite is offline and deterministic.
+
+use std::sync::Arc;
+
+use zmc::cluster::{DeviceCluster, LaunchExec};
+use zmc::config::{JobClass, JobConfig};
+use zmc::engine::Engine;
+use zmc::integrator::multifunctions::{self, MultiConfig};
+use zmc::integrator::normal::{self, NormalConfig};
+use zmc::integrator::{functional, spec::IntegralJob};
+use zmc::runtime::device::DevicePool;
+use zmc::runtime::registry::Registry;
+use zmc::session::{Error, Session};
+use zmc::util::proptest::{check, Gen};
+
+fn session(engines: usize) -> Session {
+    Session::builder()
+        .emulated()
+        .workers(1)
+        .engines(engines)
+        .build()
+        .unwrap()
+}
+
+/// The legacy hand-wired path the builders must match bit-for-bit.
+fn legacy_exec(engines: usize) -> Box<dyn LaunchExec> {
+    let reg = Arc::new(Registry::emulated());
+    let pool = DevicePool::new(&reg, 1).unwrap();
+    if engines <= 1 {
+        Box::new(Engine::for_pool(&pool).unwrap())
+    } else {
+        Box::new(DeviceCluster::for_pool(&pool, engines).unwrap())
+    }
+}
+
+/// Heterogeneous integrand pool (dims 1–3, smooth and peaked).
+fn job_pool() -> Vec<IntegralJob> {
+    let u1 = [(0.0, 1.0)];
+    let u2 = [(0.0, 1.0), (0.0, 1.0)];
+    let u3 = [(0.0, 1.0), (0.0, 1.0), (0.0, 1.0)];
+    vec![
+        IntegralJob::parse("x1^2 + 1", &u1).unwrap(),
+        IntegralJob::parse("sin(x1)*x2", &u2).unwrap(),
+        IntegralJob::with_params("exp(-p0*(x1+x2))", &u2, &[1.5]).unwrap(),
+        IntegralJob::with_params(
+            "1/(p0 + (x1-0.5)^2 + (x2-0.5)^2)",
+            &u2,
+            &[0.05],
+        )
+        .unwrap(),
+        IntegralJob::parse("abs(x1+x2-x3)", &u3).unwrap(),
+    ]
+}
+
+// ------------------------------------------------- bit-exactness props
+
+#[test]
+fn multifunctions_builder_matches_legacy_prop() {
+    let pool = job_pool();
+    check(0xC0FFEE, 8, |g: &mut Gen| {
+        let engines = *g.choose(&[1usize, 2, 4]);
+        let n_jobs = 1 + g.below(pool.len());
+        let jobs: Vec<IntegralJob> = (0..n_jobs)
+            .map(|_| g.choose(&pool).clone())
+            .collect();
+        let cfg = MultiConfig {
+            samples_per_fn: *g.choose(&[2048usize, 4096, 8192]),
+            seed: g.next_u64(),
+            trial: g.next_u32() % 4,
+            exe: Some("vm_multi_f8_s4096".into()),
+            ..Default::default()
+        };
+        let legacy = multifunctions::integrate(
+            legacy_exec(engines).as_ref(),
+            &jobs,
+            &cfg,
+        )
+        .unwrap();
+        let built = session(engines)
+            .multifunctions(&jobs)
+            .config(cfg)
+            .run()
+            .unwrap();
+        assert_eq!(legacy, built, "builder diverged from free function");
+    });
+}
+
+#[test]
+fn functional_builder_matches_legacy_prop() {
+    let job = IntegralJob::with_params(
+        "cos(p0*(x1+x2)) + p1*x1",
+        &[(0.0, 1.0), (0.0, 1.0)],
+        &[1.0, 0.0],
+    )
+    .unwrap();
+    check(0xFACADE, 6, |g: &mut Gen| {
+        let engines = *g.choose(&[1usize, 4]);
+        let n_points = 1 + g.below(6);
+        let thetas: Vec<Vec<f64>> = (0..n_points)
+            .map(|_| {
+                vec![g.range_f64(0.5, 8.0), g.range_f64(-1.0, 1.0)]
+            })
+            .collect();
+        let cfg = MultiConfig {
+            samples_per_fn: 4096,
+            seed: g.next_u64(),
+            exe: Some("vm_multi_f8_s4096".into()),
+            ..Default::default()
+        };
+        let legacy = functional::scan(
+            legacy_exec(engines).as_ref(),
+            &job,
+            &thetas,
+            &cfg,
+        )
+        .unwrap();
+        let built = session(engines)
+            .functional(&job, &thetas)
+            .config(cfg)
+            .run()
+            .unwrap();
+        assert_eq!(legacy, built, "scan builder diverged");
+    });
+}
+
+#[test]
+fn normal_builder_matches_legacy_prop() {
+    let job = IntegralJob::parse(
+        "exp(-50*((x1-0.5)^2 + (x2-0.5)^2))",
+        &[(0.0, 1.0), (0.0, 1.0)],
+    )
+    .unwrap();
+    check(0x7B33, 4, |g: &mut Gen| {
+        let engines = *g.choose(&[1usize, 4]);
+        let cfg = NormalConfig {
+            initial_divisions: *g.choose(&[2usize, 4]),
+            n_trials: 3,
+            max_depth: g.below(3),
+            seed: g.next_u64(),
+            exe: Some("stratified_c16_s256".into()),
+            ..Default::default()
+        };
+        let legacy = normal::integrate(
+            legacy_exec(engines).as_ref(),
+            &job,
+            &cfg,
+        )
+        .unwrap();
+        let built =
+            session(engines).normal(&job).config(cfg).run().unwrap();
+        assert_eq!(legacy.estimate, built.estimate);
+        assert_eq!(legacy.cubes_per_level, built.cubes_per_level);
+        assert_eq!(legacy.flagged_per_level, built.flagged_per_level);
+        assert_eq!(legacy.launches, built.launches);
+    });
+}
+
+/// The satellite requirement: stratified tree search on a 4-engine
+/// cluster is bit-identical to the 1-engine run.
+#[test]
+fn normal_one_vs_four_engines_bit_identical() {
+    let job = IntegralJob::parse(
+        "max(0, 0.25-x1) * sin(60*x1) * 40",
+        &[(0.0, 1.0)],
+    )
+    .unwrap();
+    let cfg = NormalConfig {
+        initial_divisions: 8,
+        n_trials: 4,
+        sigma_mult: 0.5,
+        max_depth: 2,
+        seed: 3,
+        exe: Some("stratified_c16_s256".into()),
+        ..Default::default()
+    };
+    let one = session(1).normal(&job).config(cfg.clone()).run().unwrap();
+    let four = session(4).normal(&job).config(cfg).run().unwrap();
+    assert_eq!(one.estimate, four.estimate);
+    assert_eq!(one.cubes_per_level, four.cubes_per_level);
+    assert_eq!(one.flagged_per_level, four.flagged_per_level);
+    assert_eq!(one.launches, four.launches);
+    // the tree actually refined something, so shards were non-trivial
+    assert!(one.cubes_per_level.len() > 1, "{:?}", one.cubes_per_level);
+}
+
+// -------------------------------------------- knobs == config struct
+
+#[test]
+fn chained_knobs_equal_config_struct() {
+    let jobs = job_pool();
+    let s = session(1);
+    let cfg = MultiConfig {
+        samples_per_fn: 8192,
+        seed: 99,
+        trial: 2,
+        stream_base: 5,
+        exe: Some("vm_multi_f8_s4096".into()),
+        ..Default::default()
+    };
+    let via_config = s
+        .multifunctions(&jobs)
+        .config(cfg.clone())
+        .run()
+        .unwrap();
+    let via_knobs = s
+        .multifunctions(&jobs)
+        .samples(8192)
+        .seed(99)
+        .trial(2)
+        .stream_base(5)
+        .exe("vm_multi_f8_s4096")
+        .run()
+        .unwrap();
+    assert_eq!(via_config, via_knobs);
+}
+
+#[test]
+fn submit_then_wait_equals_run() {
+    let jobs = job_pool();
+    let s = session(2);
+    let sync = s
+        .multifunctions(&jobs)
+        .samples(4096)
+        .seed(11)
+        .run()
+        .unwrap();
+    let handle = s
+        .multifunctions(&jobs)
+        .samples(4096)
+        .seed(11)
+        .submit()
+        .unwrap();
+    assert_eq!(sync, handle.wait().unwrap());
+}
+
+#[test]
+fn adaptive_builder_matches_legacy() {
+    let jobs = job_pool();
+    let cfg = MultiConfig {
+        samples_per_fn: 1 << 14,
+        seed: 42,
+        target_rel_err: Some(0.02),
+        pilot_samples: 4096,
+        exe: Some("vm_multi_f8_s4096".into()),
+        ..Default::default()
+    };
+    let legacy =
+        multifunctions::integrate(legacy_exec(1).as_ref(), &jobs, &cfg)
+            .unwrap();
+    let built = session(1)
+        .multifunctions(&jobs)
+        .samples(1 << 14)
+        .seed(42)
+        .target_rel_err(0.02)
+        .pilot_samples(4096)
+        .exe("vm_multi_f8_s4096")
+        .run()
+        .unwrap();
+    assert_eq!(legacy, built);
+    assert!(built.iter().all(|e| e.rounds >= 1));
+}
+
+// -------------------------------------------------- typed validation
+
+#[test]
+fn zero_samples_is_typed_error() {
+    let s = session(1);
+    let job = IntegralJob::parse("x1", &[(0.0, 1.0)]).unwrap();
+    let err = s
+        .multifunctions(std::slice::from_ref(&job))
+        .samples(0)
+        .run()
+        .unwrap_err();
+    assert_eq!(err.downcast_ref::<Error>(), Some(&Error::ZeroSamples));
+    let err = s
+        .functional(&job, &[vec![]])
+        .samples(0)
+        .run()
+        .unwrap_err();
+    assert_eq!(err.downcast_ref::<Error>(), Some(&Error::ZeroSamples));
+}
+
+#[test]
+fn conflicting_targets_is_typed_error() {
+    let s = session(1);
+    let job = IntegralJob::parse("x1", &[(0.0, 1.0)]).unwrap();
+    let err = s
+        .multifunctions(std::slice::from_ref(&job))
+        .target_rel_err(0.01)
+        .target_abs_err(0.001)
+        .run()
+        .unwrap_err();
+    assert_eq!(
+        err.downcast_ref::<Error>(),
+        Some(&Error::ConflictingTargets)
+    );
+    // clearing one side with None resolves the conflict
+    let ok = s
+        .multifunctions(std::slice::from_ref(&job))
+        .samples(4096)
+        .target_rel_err(0.05)
+        .target_abs_err(None)
+        .exe("vm_multi_f8_s4096")
+        .run();
+    assert!(ok.is_ok(), "{:?}", ok.err());
+
+    // ...but the .config() escape hatch keeps the free functions'
+    // combined-target semantics (stop at whichever is met) bit-exactly
+    let both = MultiConfig {
+        samples_per_fn: 8192,
+        seed: 5,
+        target_rel_err: Some(0.5),
+        target_abs_err: Some(0.5),
+        exe: Some("vm_multi_f8_s4096".into()),
+        ..Default::default()
+    };
+    let legacy = multifunctions::integrate(
+        legacy_exec(1).as_ref(),
+        std::slice::from_ref(&job),
+        &both,
+    )
+    .unwrap();
+    let built = s
+        .multifunctions(std::slice::from_ref(&job))
+        .config(both)
+        .run()
+        .unwrap();
+    assert_eq!(legacy, built);
+}
+
+#[test]
+fn invalid_target_is_typed_error() {
+    let s = session(1);
+    let job = IntegralJob::parse("x1", &[(0.0, 1.0)]).unwrap();
+    for bad in [-1.0, 0.0, f64::NAN, f64::INFINITY] {
+        let err = s
+            .multifunctions(std::slice::from_ref(&job))
+            .target_rel_err(bad)
+            .run()
+            .unwrap_err();
+        assert!(
+            matches!(
+                err.downcast_ref::<Error>(),
+                Some(Error::InvalidTarget { .. })
+            ),
+            "target {bad} not rejected: {err}"
+        );
+    }
+}
+
+#[test]
+fn grid_dim_mismatch_is_typed_error() {
+    let s = session(1);
+    let job = IntegralJob::with_params(
+        "p0*p1*x1",
+        &[(0.0, 1.0)],
+        &[1.0, 2.0],
+    )
+    .unwrap();
+    // a grid point binding only one of the two parameters
+    let err =
+        s.functional(&job, &[vec![1.0]]).samples(4096).run().unwrap_err();
+    assert_eq!(
+        err.downcast_ref::<Error>(),
+        Some(&Error::DimMismatch { expected: 2, got: 1 })
+    );
+    // a grid point exceeding the ABI's parameter-slot capacity gets
+    // its own error, not a bogus too-few-values message
+    let wide = vec![vec![0.0; 17]];
+    let err = s.functional(&job, &wide).samples(4096).run().unwrap_err();
+    assert_eq!(
+        err.downcast_ref::<Error>(),
+        Some(&Error::TooManyParams { max: 16, got: 17 })
+    );
+}
+
+#[test]
+fn normal_too_few_trials_is_typed_error() {
+    let s = session(1);
+    let job = IntegralJob::parse("x1", &[(0.0, 1.0)]).unwrap();
+    let err = s.normal(&job).trials(1).run().unwrap_err();
+    assert_eq!(
+        err.downcast_ref::<Error>(),
+        Some(&Error::TooFewTrials { got: 1 })
+    );
+}
+
+// ------------------------------------------------ job-config round trip
+
+#[test]
+fn from_job_config_builds_matching_topology() {
+    let cfg = JobConfig::from_json_text(
+        r#"{"workers": 2, "num_engines": 3,
+             "functions": [{"expr": "x1", "bounds": [[0, 1]]}]}"#,
+    )
+    .unwrap();
+    let s = Session::from_job_config(&cfg).unwrap();
+    assert_eq!(s.workers(), 2);
+    assert_eq!(s.num_engines(), 3);
+    assert!(s.cluster().is_some());
+}
+
+#[test]
+fn job_config_round_trips_all_three_classes() {
+    // multifunctions
+    let text = JobConfig::example_json().replace("262144", "4096");
+    let cfg = JobConfig::from_json_text(&text).unwrap();
+    let s = Session::from_job_config(&cfg).unwrap();
+    let ests = s
+        .multifunctions(&cfg.jobs)
+        .samples(cfg.samples_per_fn)
+        .seed(cfg.seed)
+        .run()
+        .unwrap();
+    assert_eq!(ests.len(), cfg.jobs.len());
+
+    // functional: run the scan over the config's cartesian grid
+    let text =
+        JobConfig::example_json_functional().replace("65536", "4096");
+    let cfg = JobConfig::from_json_text(&text).unwrap();
+    let JobClass::Functional { axes } = cfg.class.clone() else {
+        panic!("expected functional class");
+    };
+    let thetas = functional::grid(&axes);
+    let s = Session::from_job_config(&cfg).unwrap();
+    let ests = s
+        .functional(&cfg.jobs[0], &thetas)
+        .samples(cfg.samples_per_fn)
+        .seed(cfg.seed)
+        .run()
+        .unwrap();
+    assert_eq!(ests.len(), thetas.len());
+
+    // normal: the tree-search knobs drive the builder
+    let cfg =
+        JobConfig::from_json_text(&JobConfig::example_json_normal())
+            .unwrap();
+    let JobClass::Normal(p) = cfg.class.clone() else {
+        panic!("expected normal class");
+    };
+    let s = Session::from_job_config(&cfg).unwrap();
+    let r = s
+        .normal(&cfg.jobs[0])
+        .divisions(p.divisions)
+        .trials(p.n_trials)
+        .sigma_mult(p.sigma_mult)
+        .depth(p.depth)
+        .max_split_dims(p.max_split_dims)
+        .seed(cfg.seed)
+        .exe("stratified_c16_s256")
+        .run()
+        .unwrap();
+    // truth: ∫ sin(x1) over [0,π] = 2, ∫ x2 over [0,1] = 1/2 → 1.0;
+    // ~20k stratified samples of a smooth integrand land well inside
+    // an absolute 0.1 band
+    assert!(
+        (r.estimate.value - 1.0).abs() < 0.1,
+        "normal class run off: {}",
+        r.estimate
+    );
+    assert!(r.estimate.n_samples > 0 && r.launches > 0);
+}

@@ -14,8 +14,12 @@
 //!   message followed by a `Caused by:` list;
 //! * `Error` deliberately does **not** implement `std::error::Error`,
 //!   exactly like upstream, so the blanket `From<E: std::error::Error>`
-//!   conversion used by `?` does not conflict with `From<T> for T`.
+//!   conversion used by `?` does not conflict with `From<T> for T`;
+//! * a typed error converted via `?` / `From` stays recoverable with
+//!   [`Error::downcast_ref`], including through later `.context(..)`
+//!   wrapping (like upstream's downcast through context).
 
+use std::any::Any;
 use std::fmt;
 
 /// `Result` with a defaulted error type, as in the real crate.
@@ -25,17 +29,23 @@ pub type Result<T, E = Error> = std::result::Result<T, E>;
 pub struct Error {
     msg: String,
     cause: Option<Box<Error>>,
+    /// The typed error this was converted from, when there was one.
+    payload: Option<Box<dyn Any + Send + Sync>>,
 }
 
 impl Error {
     /// Build an error from a printable message.
     pub fn msg<M: fmt::Display>(msg: M) -> Error {
-        Error { msg: msg.to_string(), cause: None }
+        Error { msg: msg.to_string(), cause: None, payload: None }
     }
 
     /// Wrap `self` as the cause of a new outer message.
     pub fn context<C: fmt::Display>(self, context: C) -> Error {
-        Error { msg: context.to_string(), cause: Some(Box::new(self)) }
+        Error {
+            msg: context.to_string(),
+            cause: Some(Box::new(self)),
+            payload: None,
+        }
     }
 
     /// Innermost error message in the chain.
@@ -44,6 +54,23 @@ impl Error {
             Some(c) => c.root_cause(),
             None => &self.msg,
         }
+    }
+
+    /// The typed error this `Error` was converted from, if this error
+    /// (or any error in its context chain) carries a `T`.
+    pub fn downcast_ref<T: Any>(&self) -> Option<&T> {
+        self.payload
+            .as_ref()
+            .and_then(|p| p.downcast_ref::<T>())
+            .or_else(|| {
+                self.cause.as_ref().and_then(|c| c.downcast_ref::<T>())
+            })
+    }
+
+    /// True when [`Error::downcast_ref::<T>`](Error::downcast_ref)
+    /// would succeed.
+    pub fn is<T: Any>(&self) -> bool {
+        self.downcast_ref::<T>().is_some()
     }
 }
 
@@ -81,18 +108,21 @@ where
     E: std::error::Error + Send + Sync + 'static,
 {
     fn from(e: E) -> Error {
+        let msg = e.to_string();
         let mut chain: Vec<String> = Vec::new();
         let mut src = e.source();
         while let Some(s) = src {
             chain.push(s.to_string());
             src = s.source();
         }
-        let mut err = Error { msg: e.to_string(), cause: None };
+        let mut err = Error { msg, cause: None, payload: None };
         let mut tail = &mut err.cause;
         for msg in chain {
-            *tail = Some(Box::new(Error { msg, cause: None }));
+            *tail =
+                Some(Box::new(Error { msg, cause: None, payload: None }));
             tail = &mut tail.as_mut().unwrap().cause;
         }
+        err.payload = Some(Box::new(e));
         err
     }
 }
@@ -201,6 +231,26 @@ mod tests {
         assert_eq!(f(101).unwrap_err().to_string(), "too big");
         let e = anyhow!("code {}", 7);
         assert_eq!(e.to_string(), "code 7");
+    }
+
+    #[test]
+    fn downcast_recovers_typed_errors_through_context() {
+        #[derive(Debug, PartialEq)]
+        struct Typed(u32);
+        impl fmt::Display for Typed {
+            fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+                write!(f, "typed error {}", self.0)
+            }
+        }
+        impl std::error::Error for Typed {}
+
+        let err: Error = Typed(7).into();
+        assert_eq!(err.downcast_ref::<Typed>(), Some(&Typed(7)));
+        assert!(err.is::<Typed>());
+        let wrapped = err.context("while doing a thing");
+        assert_eq!(wrapped.downcast_ref::<Typed>(), Some(&Typed(7)));
+        assert!(wrapped.downcast_ref::<std::io::Error>().is_none());
+        assert!(Error::msg("plain").downcast_ref::<Typed>().is_none());
     }
 
     #[test]
