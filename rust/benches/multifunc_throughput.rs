@@ -6,11 +6,15 @@
 //! reports functions/minute, and extrapolates to the paper's 10³ — plus
 //! the batching ablation: the same workload issued one-function-per-
 //! launch (what v4 effectively did) vs packed multifunction launches.
+//! The packed path is measured once per execution tier (naive, plan,
+//! fused) on tier-pinned sessions, so the ns/sample attribution shows
+//! where each tier spends the budget.
 //!
 //! Env knobs: ZMC_C1_FUNCS, ZMC_C1_SAMPLES.
 
 use zmc::integrator::multifunctions::{self, MultiConfig};
 use zmc::integrator::spec::IntegralJob;
+use zmc::runtime::ExecTier;
 use zmc::session::Session;
 use zmc::util::bench::{fmt_s, time, Bench};
 
@@ -42,42 +46,57 @@ fn main() -> anyhow::Result<()> {
     let n_funcs = env("ZMC_C1_FUNCS", 128);
     let samples = env("ZMC_C1_SAMPLES", 1 << 14);
 
-    let session = Session::builder()
-        .artifacts_or_emulator("artifacts")
-        .workers(1)
-        .build()?;
-    let engine = session.engine();
     let jobs = workload(n_funcs);
     let mut b = Bench::new("multifunc_throughput");
 
     // packed multifunction path (v5.1); executable auto-picked — the
-    // dims<=4 workload rides the d4 artifact (§Perf L1)
+    // dims<=4 workload rides the d4 artifact (§Perf L1). One
+    // tier-pinned session per execution tier: same workload, same
+    // streams, bit-identical estimates — only the kernel shape differs.
     let cfg = MultiConfig {
         samples_per_fn: samples,
         seed: 7,
         ..Default::default()
     };
-    let t = time(1, 3, || {
-        multifunctions::integrate(engine, &jobs, &cfg).unwrap();
-    });
-    let fns_per_min = n_funcs as f64 / t.mean_s * 60.0;
-    // per-sample attribution: future hot-path regressions show up here
-    // before they move the batch wall time
-    let ns_per_sample = t.mean_s / (n_funcs * samples) as f64 * 1e9;
-    b.row(
-        "packed_v5.1",
-        &[
-            ("funcs", n_funcs.to_string()),
-            ("samples", samples.to_string()),
-            ("wall", fmt_s(t.mean_s)),
-            ("ns_per_sample", format!("{ns_per_sample:.1}")),
-            ("fns_per_min", format!("{fns_per_min:.0}")),
-            (
-                "extrap_1000fns",
-                fmt_s(1000.0 / n_funcs as f64 * t.mean_s),
-            ),
-        ],
-    );
+    let mut session = None;
+    let mut t = None;
+    for tier in [ExecTier::Naive, ExecTier::Plan, ExecTier::Fused] {
+        let s = Session::builder()
+            .artifacts_or_emulator("artifacts")
+            .workers(1)
+            .execution_tier(tier)
+            .build()?;
+        let tt = time(1, 3, || {
+            multifunctions::integrate(s.engine(), &jobs, &cfg).unwrap();
+        });
+        let fns_per_min = n_funcs as f64 / tt.mean_s * 60.0;
+        // per-sample attribution: future hot-path regressions show up
+        // here before they move the batch wall time
+        let ns_per_sample =
+            tt.mean_s / (n_funcs * samples) as f64 * 1e9;
+        b.row(
+            &format!("packed_v5.1_{tier}"),
+            &[
+                ("tier", tier.name().to_string()),
+                ("funcs", n_funcs.to_string()),
+                ("samples", samples.to_string()),
+                ("wall", fmt_s(tt.mean_s)),
+                ("ns_per_sample", format!("{ns_per_sample:.1}")),
+                ("fns_per_min", format!("{fns_per_min:.0}")),
+                (
+                    "extrap_1000fns",
+                    fmt_s(1000.0 / n_funcs as f64 * tt.mean_s),
+                ),
+            ],
+        );
+        // the default tier's session carries into the ablation below
+        if tier == ExecTier::Fused {
+            t = Some(tt);
+            session = Some(s);
+        }
+    }
+    let (session, t) = (session.unwrap(), t.unwrap());
+    let engine = session.engine();
 
     // per-function launches (v4-style ablation) on a subset
     let sub = &jobs[..n_funcs.min(16)];
@@ -102,6 +121,7 @@ fn main() -> anyhow::Result<()> {
     b.row(
         "one_per_launch_v4",
         &[
+            ("tier", session.execution_tier().name().to_string()),
             ("funcs", sub.len().to_string()),
             ("wall", fmt_s(t1.mean_s)),
             ("per_fn", fmt_s(per_fn_1)),

@@ -1,26 +1,32 @@
-//! Bench: the optimizing VM pipeline (PR 4) — single-core samples/sec
-//! on a Genz multifunction batch, plan path vs the pre-plan stack
-//! interpreter, with per-family ns/sample attribution.
+//! Bench: the optimizing VM pipeline — single-core samples/sec on a
+//! Genz multifunction batch across all three execution tiers (naive
+//! stack interpreter, columnar plan, fused lane-batched), with
+//! per-family ns/sample attribution.
 //!
 //! The naive leg reproduces the pre-plan emulator launch exactly:
 //! per-launch program decode from device rows, a fresh `BatchInterp`
 //! and sample-column allocation per launch, per-sample `point()`
-//! uniforms, full stack-row traffic per opcode. The plan leg is what
-//! `runtime/emulator.rs` runs now: decode+lower once, block-major
-//! Philox column fill, fused register-based execution over reusable
-//! scratch. Both legs produce bit-identical moment sums (asserted).
+//! uniforms, full stack-row traffic per opcode. The plan leg is the
+//! columnar tier: decode+lower once, block-major Philox column fill,
+//! register-based execution over reusable scratch. The fused leg is
+//! what `runtime/emulator.rs` runs by default now: SIMD Philox lane
+//! blocks, in-register op chains, in-kernel `(Σf, Σf²)` epilogue with
+//! no sample columns or output buffer. All legs produce bit-identical
+//! moment sums (asserted before timing).
 //!
-//! Gate: overall plan/naive speedup must be ≥ `ZMC_VMP_GATE`
-//! (default 2.5; CI's regression leg runs with 1.0 — the plan path may
-//! never be slower than the naive interpreter).
+//! Gates: plan/naive speedup ≥ `ZMC_VMP_GATE` (default 2.5) and
+//! fused/plan speedup ≥ `ZMC_VMP_FUSED_GATE` (default 1.5). CI's
+//! regression leg runs both at 1.0 — no tier may be slower than the
+//! one below it. Setting a gate to 0 disables it.
 //!
 //! Env knobs: ZMC_VMP_SAMPLES (per function), ZMC_VMP_LAUNCH (samples
-//! per launch), ZMC_VMP_GATE.
+//! per launch), ZMC_VMP_GATE, ZMC_VMP_FUSED_GATE.
 
 use zmc::abi::MAX_DIM;
 use zmc::runtime::emulator::{moment_sums_naive, moment_sums_plan};
 use zmc::sampler::StreamKey;
 use zmc::util::bench::{time, Bench};
+use zmc::vm::fused::{FusedPlan, FusedScratch};
 use zmc::vm::interp::BatchInterp;
 use zmc::vm::plan::{ExecPlan, PlanScratch};
 use zmc::vm::program::{Instr, Program};
@@ -140,25 +146,34 @@ fn main() {
     let samples = env_usize("ZMC_VMP_SAMPLES", 1 << 16);
     let launch = env_usize("ZMC_VMP_LAUNCH", 1 << 14).max(1);
     let gate = env_f64("ZMC_VMP_GATE", 2.5);
+    let fgate = env_f64("ZMC_VMP_FUSED_GATE", 1.5);
     let seed = [42u32, 7u32];
 
     let fams = genz_batch();
     let plans: Vec<ExecPlan> =
         fams.iter().map(|f| ExecPlan::lower(&f.prog)).collect();
+    let fused_plans: Vec<FusedPlan> = fams
+        .iter()
+        .map(|f| FusedPlan::new(ExecPlan::lower(&f.prog)))
+        .collect();
     let mut b = Bench::new("vm_pipeline");
 
-    // warm plan-path scratch (per-worker state in production)
+    // warm per-tier scratch (per-worker state in production)
     let mut ucols = vec![vec![0f32; CHUNK]; MAX_DIM];
     let mut scratch = PlanScratch::new(CHUNK);
     let mut buf = vec![0f32; CHUNK];
+    let mut fscratch = FusedScratch::new();
 
     let launches = samples.div_ceil(launch);
     let mut total_naive = 0f64;
     let mut total_plan = 0f64;
+    let mut total_fused = 0f64;
     let mut sink = 0f64;
-    for (fam, plan) in fams.iter().zip(&plans) {
+    for ((fam, plan), fp) in
+        fams.iter().zip(&plans).zip(&fused_plans)
+    {
         let key = StreamKey { seed, stream: fam.stream, trial: 0 };
-        // bit-exactness sanity before timing
+        // three-way bit-exactness sanity before timing
         let a = naive_launch(fam, &key, 0, launch.min(samples));
         let p = moment_sums_plan(
             plan, &key, 0, launch.min(samples), &fam.lo, &fam.hi,
@@ -168,6 +183,16 @@ fn main() {
             (a.0.to_bits(), a.1.to_bits()),
             (p.0.to_bits(), p.1.to_bits()),
             "{}: plan/naive moments diverged",
+            fam.name
+        );
+        let f = fp.moment_sums(
+            &key, 0, launch.min(samples) as u32, &fam.lo, &fam.hi,
+            &fam.theta, &mut fscratch,
+        );
+        assert_eq!(
+            (p.0.to_bits(), p.1.to_bits()),
+            (f.0.to_bits(), f.1.to_bits()),
+            "{}: fused/plan moments diverged",
             fam.name
         );
 
@@ -193,15 +218,32 @@ fn main() {
             }
             sink += acc;
         });
+        let tf = time(1, 2, || {
+            let mut acc = 0f64;
+            for l in 0..launches {
+                let base = (l * launch) as u32;
+                let n = launch.min(samples - l * launch);
+                acc += fp
+                    .moment_sums(
+                        &key, base, n as u32, &fam.lo, &fam.hi,
+                        &fam.theta, &mut fscratch,
+                    )
+                    .0;
+            }
+            sink += acc;
+        });
         total_naive += tn.mean_s;
         total_plan += tp.mean_s;
+        total_fused += tf.mean_s;
         let s = plan.stats();
         b.row(
             fam.name,
             &[
                 ("naive_ns_per_sample", format!("{:.1}", tn.mean_s / samples as f64 * 1e9)),
                 ("plan_ns_per_sample", format!("{:.1}", tp.mean_s / samples as f64 * 1e9)),
+                ("fused_ns_per_sample", format!("{:.1}", tf.mean_s / samples as f64 * 1e9)),
                 ("speedup", format!("{:.2}", tn.mean_s / tp.mean_s)),
+                ("fused_speedup", format!("{:.2}", tp.mean_s / tf.mean_s)),
                 ("row_ops", format!("{}/{}", s.row_ops, s.instrs)),
                 ("fused", s.fused.to_string()),
                 ("regs", s.regs.to_string()),
@@ -211,6 +253,7 @@ fn main() {
 
     let n_samples_total = (samples * fams.len()) as f64;
     let speedup = total_naive / total_plan;
+    let fused_speedup = total_plan / total_fused;
     b.row(
         "total",
         &[
@@ -218,8 +261,11 @@ fn main() {
             ("samples_per_fn", samples.to_string()),
             ("naive_sps", format!("{:.3e}", n_samples_total / total_naive)),
             ("plan_sps", format!("{:.3e}", n_samples_total / total_plan)),
+            ("fused_sps", format!("{:.3e}", n_samples_total / total_fused)),
             ("speedup", format!("{speedup:.2}")),
+            ("fused_speedup", format!("{fused_speedup:.2}")),
             ("gate", format!("{gate:.2}")),
+            ("fused_gate", format!("{fgate:.2}")),
         ],
     );
     b.finish();
@@ -227,10 +273,22 @@ fn main() {
     // optimized away
     eprintln!("# checksum {sink:.6e}");
 
+    let mut fail = false;
     if gate > 0.0 && speedup < gate {
         eprintln!(
-            "FAIL: vm_pipeline speedup {speedup:.2}x below gate {gate:.2}x"
+            "FAIL: vm_pipeline plan speedup {speedup:.2}x below gate \
+             {gate:.2}x"
         );
+        fail = true;
+    }
+    if fgate > 0.0 && fused_speedup < fgate {
+        eprintln!(
+            "FAIL: vm_pipeline fused speedup {fused_speedup:.2}x below \
+             gate {fgate:.2}x"
+        );
+        fail = true;
+    }
+    if fail {
         std::process::exit(1);
     }
 }

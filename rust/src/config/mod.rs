@@ -32,6 +32,7 @@ use anyhow::{anyhow, Context, Result};
 
 use crate::integrator::normal::NormalConfig;
 use crate::integrator::spec::IntegralJob;
+use crate::runtime::ExecTier;
 use crate::util::json::Json;
 
 /// Which paper class a job file drives (the `"class"` tag).
@@ -97,6 +98,10 @@ pub struct JobConfig {
     pub target_abs_err: Option<f64>,
     /// Adaptive refinement rounds after the pilot (None = default).
     pub max_rounds: Option<usize>,
+    /// Emulator execution tier the session pins its workers to
+    /// (`"tier": "naive" | "plan" | "fused"`); `None` defers to the
+    /// process-wide `ZMC_EMU_TIER` default.
+    pub tier: Option<ExecTier>,
     pub jobs: Vec<IntegralJob>,
 }
 
@@ -112,6 +117,7 @@ impl Default for JobConfig {
             target_rel_err: None,
             target_abs_err: None,
             max_rounds: None,
+            tier: None,
             jobs: vec![],
         }
     }
@@ -150,6 +156,13 @@ impl JobConfig {
         }
         if let Some(r) = j.get("max_rounds").and_then(Json::as_usize) {
             cfg.max_rounds = Some(r);
+        }
+        if let Some(t) = j.get("tier").and_then(Json::as_str) {
+            cfg.tier = Some(ExecTier::parse(t).ok_or_else(|| {
+                anyhow!(
+                    "unknown tier '{t}' (expected naive | plan | fused)"
+                )
+            })?);
         }
         let fns = j
             .get("functions")
@@ -456,6 +469,28 @@ mod tests {
         )
         .unwrap();
         assert_eq!(cfg.num_engines, 1);
+    }
+
+    #[test]
+    fn tier_parsed_and_validated() {
+        let cfg = JobConfig::from_json_text(
+            r#"{"tier": "plan",
+                 "functions": [{"expr": "x1", "bounds": [[0, 1]]}]}"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.tier, Some(ExecTier::Plan));
+        // absent -> defer to the process-wide default
+        let cfg = JobConfig::from_json_text(
+            r#"{"functions": [{"expr": "x1", "bounds": [[0, 1]]}]}"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.tier, None);
+        // unknown names are a hard error, not a silent default
+        assert!(JobConfig::from_json_text(
+            r#"{"tier": "warp",
+                 "functions": [{"expr": "x1", "bounds": [[0, 1]]}]}"#
+        )
+        .is_err());
     }
 
     #[test]

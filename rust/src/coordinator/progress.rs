@@ -18,6 +18,11 @@ pub struct Metrics {
     pub plan_hits: AtomicU64,
     /// Program-plan cache misses (row decoded + lowered on a worker).
     pub plan_misses: AtomicU64,
+    /// Fused-plan cache hits (row served from a worker's `FusedPlan`
+    /// LRU — the fused-tier twin of `plan_hits`).
+    pub fused_hits: AtomicU64,
+    /// Fused-plan cache misses (row decoded + lowered fused).
+    pub fused_misses: AtomicU64,
     /// (busy, total) wall time per worker, filled at worker exit.
     worker_times: Mutex<Vec<(Duration, Duration)>>,
     /// Context-construction failures (worker never joined the pool).
@@ -67,6 +72,27 @@ impl Metrics {
     /// Plan-cache misses (decode + lower) across this engine's workers.
     pub fn plan_misses(&self) -> u64 {
         self.plan_misses.load(Ordering::Relaxed)
+    }
+
+    /// Fold one task's fused-plan cache events in (reported by the
+    /// device backend after each launch, like `record_plan_events`).
+    pub fn record_fused_events(&self, hits: u64, misses: u64) {
+        if hits > 0 {
+            self.fused_hits.fetch_add(hits, Ordering::Relaxed);
+        }
+        if misses > 0 {
+            self.fused_misses.fetch_add(misses, Ordering::Relaxed);
+        }
+    }
+
+    /// Fused-plan cache hits across this engine's workers.
+    pub fn fused_hits(&self) -> u64 {
+        self.fused_hits.load(Ordering::Relaxed)
+    }
+
+    /// Fused-plan cache misses across this engine's workers.
+    pub fn fused_misses(&self) -> u64 {
+        self.fused_misses.load(Ordering::Relaxed)
     }
 
     pub fn record_worker(&self, busy: Duration, total: Duration) {
@@ -123,13 +149,16 @@ impl Metrics {
     pub fn summary(&self) -> String {
         format!(
             "tasks={} retries={} failures={} cancelled={} \
-             plan_hits={} plan_misses={} utilization={:.0}%",
+             plan_hits={} plan_misses={} fused_hits={} fused_misses={} \
+             utilization={:.0}%",
             self.done(),
             self.retried(),
             self.failed(),
             self.cancelled(),
             self.plan_hits(),
             self.plan_misses(),
+            self.fused_hits(),
+            self.fused_misses(),
             self.utilization() * 100.0
         )
     }
@@ -157,6 +186,11 @@ mod tests {
         assert_eq!(m.plan_hits(), 6);
         assert_eq!(m.plan_misses(), 2);
         assert!(m.summary().contains("plan_hits=6"));
+        m.record_fused_events(4, 1);
+        m.record_fused_events(0, 1);
+        assert_eq!(m.fused_hits(), 4);
+        assert_eq!(m.fused_misses(), 2);
+        assert!(m.summary().contains("fused_hits=4 fused_misses=2"));
     }
 
     #[test]

@@ -18,6 +18,7 @@ use crate::engine::core::{Backend, Engine, EngineConfig, JobHandle};
 use crate::runtime::device::{DevicePool, DeviceRuntime};
 use crate::runtime::launch::Value;
 use crate::runtime::registry::Registry;
+use crate::runtime::ExecTier;
 
 /// One device launch: which executable, its input payloads, and an
 /// opaque tag the submitter uses to merge results (block/group index).
@@ -43,16 +44,25 @@ pub struct DeviceBackend {
     /// built for an engine, so `Metrics::plan_hits/plan_misses` sit
     /// next to the task counters).
     metrics: Option<Arc<Metrics>>,
+    /// Emulator execution tier every worker runtime is pinned to;
+    /// `None` defers to the process-wide default (`ZMC_EMU_TIER`).
+    tier: Option<ExecTier>,
 }
 
 impl DeviceBackend {
     pub fn new(registry: Arc<Registry>) -> Self {
-        DeviceBackend { registry, metrics: None }
+        DeviceBackend { registry, metrics: None, tier: None }
     }
 
     /// Report per-launch plan-cache events into `metrics`.
     pub fn with_metrics(mut self, metrics: &Arc<Metrics>) -> Self {
         self.metrics = Some(Arc::clone(metrics));
+        self
+    }
+
+    /// Pin every worker runtime to one emulator execution tier.
+    pub fn with_tier(mut self, tier: Option<ExecTier>) -> Self {
+        self.tier = tier;
         self
     }
 
@@ -71,6 +81,13 @@ impl Backend for DeviceBackend {
     type Out = TaggedOutput;
 
     fn make_ctx(&self, _worker: usize) -> Result<DeviceRuntime> {
+        #[cfg(not(feature = "pjrt"))]
+        if let Some(t) = self.tier {
+            return DeviceRuntime::with_tier(Arc::clone(&self.registry), t);
+        }
+        // Under PJRT programs are lowered on device; the tier is moot.
+        #[cfg(feature = "pjrt")]
+        let _ = self.tier;
         DeviceRuntime::new(Arc::clone(&self.registry))
     }
 
@@ -79,6 +96,8 @@ impl Backend for DeviceBackend {
         if let Some(m) = &self.metrics {
             let (hits, misses) = ctx.take_plan_events();
             m.record_plan_events(hits, misses);
+            let (fhits, fmisses) = ctx.take_fused_events();
+            m.record_fused_events(fhits, fmisses);
         }
         out.map(|o| TaggedOutput {
             tag: task.tag,
@@ -101,7 +120,8 @@ impl Engine<DeviceBackend> {
         let metrics = Arc::new(Metrics::new());
         Engine::with_policy(
             DeviceBackend::new(Arc::clone(&pool.registry))
-                .with_metrics(&metrics),
+                .with_metrics(&metrics)
+                .with_tier(pool.tier),
             EngineConfig::new(pool.n_devices),
             Arc::new(FaultPlan::none()),
             metrics,
@@ -118,7 +138,8 @@ impl Engine<DeviceBackend> {
     ) -> Result<DeviceEngine> {
         Engine::with_policy(
             DeviceBackend::new(Arc::clone(&pool.registry))
-                .with_metrics(&metrics),
+                .with_metrics(&metrics)
+                .with_tier(pool.tier),
             EngineConfig { n_workers: pool.n_devices, max_retries },
             fault,
             metrics,

@@ -29,6 +29,7 @@ use zmc::analytic;
 use zmc::config::{JobClass, JobConfig};
 use zmc::integrator::harmonic::HarmonicBatch;
 use zmc::integrator::{functional, spec::IntegralJob};
+use zmc::runtime::ExecTier;
 use zmc::session::Session;
 use zmc::stats::Welford;
 
@@ -89,6 +90,7 @@ COMMON FLAGS
   --artifacts DIR   artifact directory     [artifacts]
   --workers N       simulated devices per engine [1]
   --num-engines N   engines in the cluster (integrate/run/normal) [1]
+  --tier T          emulator execution tier: naive|plan|fused [fused]
   --samples N       samples per function   [1048576]
   --trials N        independent repeats    [1]
   --seed N          RNG seed               [2021]
@@ -243,7 +245,32 @@ fn make_session(
     workers: usize,
     num_engines: usize,
 ) -> Result<Session> {
-    session_builder(flags).workers(workers).engines(num_engines).build()
+    make_session_tiered(flags, workers, num_engines, None)
+}
+
+/// `make_session` with a job-file execution tier as the fallback when
+/// no `--tier` flag is given (CLI wins, file second, env default last).
+fn make_session_tiered(
+    flags: &Flags,
+    workers: usize,
+    num_engines: usize,
+    file_tier: Option<ExecTier>,
+) -> Result<Session> {
+    let mut b =
+        session_builder(flags).workers(workers).engines(num_engines);
+    if let Some(t) = parse_tier(flags)?.or(file_tier) {
+        b = b.execution_tier(t);
+    }
+    b.build()
+}
+
+fn parse_tier(flags: &Flags) -> Result<Option<ExecTier>> {
+    match flags.str("tier") {
+        None => Ok(None),
+        Some(s) => ExecTier::parse(s).map(Some).ok_or_else(|| {
+            anyhow!("bad --tier '{s}' (expected naive | plan | fused)")
+        }),
+    }
 }
 
 // ------------------------------------------------------------- commands
@@ -258,6 +285,12 @@ fn cmd_info(flags: &Flags) -> Result<()> {
         zmc::abi::MAX_PROG,
         zmc::abi::STACK,
         zmc::abi::MAX_PARAM
+    );
+    let tier = parse_tier(flags)?.unwrap_or_else(ExecTier::from_env);
+    println!(
+        "execution tier: {tier} (select with --tier or ZMC_EMU_TIER; \
+         lane width {})",
+        zmc::vm::LANES
     );
     for e in reg.iter() {
         println!(
@@ -366,7 +399,8 @@ fn cmd_run(flags: &Flags) -> Result<()> {
         );
     }
     // one session serves whichever class the job file describes
-    let session = make_session(flags, workers, num_engines)?;
+    let session =
+        make_session_tiered(flags, workers, num_engines, cfg.tier)?;
     match &cfg.class {
         JobClass::Multifunctions => run_multifunctions(
             flags,
@@ -414,14 +448,16 @@ fn run_multifunctions(
     let dt = t0.elapsed();
     println!(
         "{} functions x {} trials x {} samples on {} engine(s) x {} \
-         worker(s): {:.3}s",
+         worker(s), tier={}: {:.3}s",
         cfg.jobs.len(),
         cfg.trials,
         cfg.samples_per_fn,
         num_engines,
         workers,
+        session.execution_tier(),
         dt.as_secs_f64()
     );
+    println!("engine: {}", session.engine().metrics().summary());
     if adaptive {
         println!(
             "{:>4}  {:>14}  {:>12}  {:>6}  {:>12}  expr",

@@ -30,6 +30,7 @@ use crate::runtime::launch::Value;
 #[cfg(feature = "pjrt")]
 use crate::runtime::registry::TensorSpec;
 use crate::runtime::registry::{ExeSpec, Registry};
+use crate::runtime::ExecTier;
 
 /// Output of one device launch: flat f32 payload + wall time on device.
 #[derive(Debug, Clone)]
@@ -96,14 +97,55 @@ impl DeviceRuntime {
         })
     }
 
+    /// Runtime with the process-wide emulator tier
+    /// ([`ExecTier::from_env`]); under PJRT the tier is moot (programs
+    /// are lowered on device).
     #[cfg(not(feature = "pjrt"))]
     pub fn new(registry: Arc<Registry>) -> Result<Self> {
+        DeviceRuntime::with_tier(registry, ExecTier::from_env())
+    }
+
+    /// Runtime pinned to an emulator execution tier (the device-pool /
+    /// Session plumbing lands here).
+    #[cfg(not(feature = "pjrt"))]
+    pub fn with_tier(registry: Arc<Registry>, tier: ExecTier) -> Result<Self> {
         Ok(DeviceRuntime {
             registry,
             cache: RefCell::new(HashMap::new()),
-            emu: RefCell::new(EmuState::new()),
+            emu: RefCell::new(EmuState::with_tier(tier)),
             busy: RefCell::new(Duration::ZERO),
         })
+    }
+
+    /// Runtime with the pool's tier override, or the process-wide tier
+    /// when the pool doesn't pin one. (PJRT builds ignore the tier.)
+    pub fn for_pool(pool: &DevicePool) -> Result<Self> {
+        #[cfg(not(feature = "pjrt"))]
+        {
+            match pool.tier {
+                Some(t) => {
+                    DeviceRuntime::with_tier(Arc::clone(&pool.registry), t)
+                }
+                None => DeviceRuntime::new(Arc::clone(&pool.registry)),
+            }
+        }
+        #[cfg(feature = "pjrt")]
+        {
+            DeviceRuntime::new(Arc::clone(&pool.registry))
+        }
+    }
+
+    /// The emulator execution tier this runtime's launches run through
+    /// (`None` on the PJRT backend).
+    pub fn tier(&self) -> Option<ExecTier> {
+        #[cfg(not(feature = "pjrt"))]
+        {
+            Some(self.emu.borrow().tier())
+        }
+        #[cfg(feature = "pjrt")]
+        {
+            None
+        }
     }
 
     pub fn registry(&self) -> &Registry {
@@ -138,6 +180,19 @@ impl DeviceRuntime {
         #[cfg(not(feature = "pjrt"))]
         {
             self.emu.borrow_mut().take_plan_events()
+        }
+        #[cfg(feature = "pjrt")]
+        {
+            (0, 0)
+        }
+    }
+
+    /// Drain fused-cache (hits, misses) since the last call — the
+    /// fused-tier twin of [`DeviceRuntime::take_plan_events`].
+    pub fn take_fused_events(&self) -> (u64, u64) {
+        #[cfg(not(feature = "pjrt"))]
+        {
+            self.emu.borrow_mut().take_fused_events()
         }
         #[cfg(feature = "pjrt")]
         {
@@ -276,6 +331,9 @@ fn literal_for_spec(ts: &TensorSpec, v: &Value) -> Result<xla::Literal> {
 pub struct DevicePool {
     pub registry: Arc<Registry>,
     pub n_devices: usize,
+    /// Emulator execution tier every worker in this pool pins its
+    /// [`DeviceRuntime`] to; `None` defers to [`ExecTier::from_env`].
+    pub tier: Option<ExecTier>,
 }
 
 impl DevicePool {
@@ -283,7 +341,17 @@ impl DevicePool {
         if n_devices == 0 {
             return Err(anyhow!("device pool needs >= 1 device"));
         }
-        Ok(DevicePool { registry: Arc::clone(registry), n_devices })
+        Ok(DevicePool {
+            registry: Arc::clone(registry),
+            n_devices,
+            tier: None,
+        })
+    }
+
+    /// Pin every worker of this pool to one emulator execution tier.
+    pub fn with_tier(mut self, tier: ExecTier) -> Self {
+        self.tier = Some(tier);
+        self
     }
 }
 
@@ -298,6 +366,21 @@ mod tests {
         let reg = Arc::new(Registry::emulated());
         assert!(DevicePool::new(&reg, 0).is_err());
         assert_eq!(DevicePool::new(&reg, 4).unwrap().n_devices, 4);
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn pool_tier_pins_runtimes() {
+        let reg = Arc::new(Registry::emulated());
+        let pool =
+            DevicePool::new(&reg, 2).unwrap().with_tier(ExecTier::Plan);
+        assert_eq!(pool.tier, Some(ExecTier::Plan));
+        let dev = DeviceRuntime::for_pool(&pool).unwrap();
+        assert_eq!(dev.tier(), Some(ExecTier::Plan));
+        // unpinned pools defer to the process-wide default
+        let pool = DevicePool::new(&reg, 1).unwrap();
+        let dev = DeviceRuntime::for_pool(&pool).unwrap();
+        assert_eq!(dev.tier(), Some(ExecTier::from_env()));
     }
 
     #[test]

@@ -13,17 +13,29 @@
 //!
 //! ## The optimizing pipeline
 //!
-//! Program launches run through the [`ExecPlan`] pipeline
-//! ([`crate::vm::plan`]): each distinct program row is decoded and
-//! lowered **once per worker** into a register-based columnar plan,
-//! cached in the per-worker [`EmuState`] LRU (hits/misses ledgered in
-//! the [`Registry`] next to the compile counter and surfaced in engine
-//! [`Metrics`](crate::coordinator::progress::Metrics)), and executed
-//! over per-worker scratch arenas — steady-state launches perform no
-//! heap allocation beyond the output payload. The pre-plan
-//! [`BatchInterp`] path is retained as the bit-exact oracle
-//! ([`moment_sums_naive`]) and can be forced process-wide with
-//! `ZMC_EMU_NAIVE=1`; either pipeline produces bit-identical moments.
+//! Program launches run through one of three [`ExecTier`]s (selected
+//! per worker, default [`ExecTier::Fused`], overridable process-wide
+//! with `ZMC_EMU_TIER={naive,plan,fused}`):
+//!
+//! * **fused** — each distinct program row is lowered once per worker
+//!   into a [`FusedPlan`] and executed as a single blocked
+//!   generate/evaluate/reduce pass (SIMD Philox lane blocks, in-kernel
+//!   f64 moment epilogue — see [`crate::vm::fused`]);
+//! * **plan** — the columnar [`ExecPlan`] pipeline
+//!   ([`crate::vm::plan`]) over materialized sample columns, retained
+//!   as the fused tier's structured oracle;
+//! * **naive** — the pre-plan [`BatchInterp`] stack interpreter
+//!   ([`moment_sums_naive`]), the original bit-exact oracle (the
+//!   deprecated `ZMC_EMU_NAIVE=1` still selects it).
+//!
+//! All three produce **bit-identical** moment payloads: same Philox
+//! blocks, same per-lane f32 operation sequence, same sequential f64
+//! accumulation order. Lowered rows live in per-worker [`EmuState`]
+//! LRU caches (hits/misses ledgered in the [`Registry`] next to the
+//! compile counter — plan and fused tiers each have their own ledger
+//! rows — and surfaced in engine
+//! [`Metrics`](crate::coordinator::progress::Metrics)); steady-state
+//! launches perform no heap allocation beyond the output payload.
 //!
 //! Compilation still goes through the per-worker cache in
 //! [`crate::runtime::device::DeviceRuntime`] and is counted in the
@@ -38,7 +50,9 @@ use anyhow::{anyhow, bail, Result};
 use crate::abi::{MAX_DIM, MAX_PARAM, MAX_PROG};
 use crate::runtime::launch::Value;
 use crate::runtime::registry::{ExeKind, ExeSpec, Registry};
+use crate::runtime::ExecTier;
 use crate::sampler::StreamKey;
+use crate::vm::fused::{FusedPlan, FusedScratch};
 use crate::vm::interp::BatchInterp;
 use crate::vm::opcodes::Op;
 use crate::vm::plan::{ExecPlan, PlanScratch};
@@ -91,16 +105,116 @@ impl EmuExe {
 }
 
 // ---------------------------------------------------------------------
-// Per-worker state: scratch arenas + plan cache
+// Per-worker state: scratch arenas + lowered-row caches
 
-/// One cached plan: the exact program row it was lowered from (collision
+/// One cached lowering: the exact program row it came from (collision
 /// guard) plus an LRU stamp.
-struct PlanEntry {
+struct RowEntry<T> {
     ops: Vec<i32>,
     iargs: Vec<i32>,
     fbits: Vec<u32>,
-    plan: Rc<ExecPlan>,
+    val: T,
     stamp: u64,
+}
+
+/// Which [`Registry`] ledger a row cache reports to.
+#[derive(Clone, Copy)]
+enum RowLedger {
+    Plan,
+    Fused,
+}
+
+/// Per-worker LRU keyed by [`row_hash`], shared by the plan and fused
+/// tiers — each tier owns one cache with its own ledger rows and event
+/// counters, but the hashing, exact-row collision guard and
+/// min-stamp eviction logic exist once.
+struct RowCache<T> {
+    entries: HashMap<u64, RowEntry<T>>,
+    clock: u64,
+    ledger: RowLedger,
+    // events since the last `take_events`
+    hits: u64,
+    misses: u64,
+}
+
+impl<T: Clone> RowCache<T> {
+    fn new(ledger: RowLedger) -> Self {
+        RowCache {
+            entries: HashMap::new(),
+            clock: 0,
+            ledger,
+            hits: 0,
+            misses: 0,
+        }
+    }
+
+    fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    fn take_events(&mut self) -> (u64, u64) {
+        (std::mem::take(&mut self.hits), std::mem::take(&mut self.misses))
+    }
+
+    /// Fetch (or lower via `lower`) the value for one program row.
+    /// Cache hits allocate nothing and skip decoding entirely; every
+    /// miss is ledgered in the [`Registry`].
+    fn get_or_lower(
+        &mut self,
+        ops: &[i32],
+        iargs: &[i32],
+        fargs: &[f32],
+        plen: usize,
+        registry: &Registry,
+        lower: impl FnOnce() -> Result<T>,
+    ) -> Result<T> {
+        let key = row_hash(ops, iargs, fargs, plen);
+        self.clock += 1;
+        if let Some(e) = self.entries.get_mut(&key) {
+            if e.ops.len() == plen
+                && e.ops[..] == ops[..plen]
+                && e.iargs[..] == iargs[..plen]
+                && e.fbits.iter().zip(&fargs[..plen]).all(|(&b, f)| b == f.to_bits())
+            {
+                e.stamp = self.clock;
+                self.hits += 1;
+                match self.ledger {
+                    RowLedger::Plan => registry.note_plan_hit(),
+                    RowLedger::Fused => registry.note_fused_hit(),
+                }
+                return Ok(e.val.clone());
+            }
+            // 64-bit hash collision: evict the stale entry and relower
+            self.entries.remove(&key);
+        }
+        self.misses += 1;
+        match self.ledger {
+            RowLedger::Plan => registry.note_plan_lower(),
+            RowLedger::Fused => registry.note_fused_lower(),
+        }
+        let val = lower()?;
+        if self.entries.len() >= PLAN_CACHE_CAP {
+            let evict = self
+                .entries
+                .iter()
+                .min_by_key(|(_, e)| e.stamp)
+                .map(|(&k, _)| k);
+            if let Some(k) = evict {
+                self.entries.remove(&k);
+            }
+        }
+        self.entries.insert(
+            key,
+            RowEntry {
+                ops: ops[..plen].to_vec(),
+                iargs: iargs[..plen].to_vec(),
+                fbits: fargs[..plen].iter().map(|f| f.to_bits()).collect(),
+                val: val.clone(),
+                stamp: self.clock,
+            },
+        );
+        Ok(val)
+    }
 }
 
 /// Reusable per-worker execution state. Owned by the worker's
@@ -116,20 +230,19 @@ pub struct EmuState {
     /// Per-chunk evaluation output row.
     buf: Vec<f32>,
     scratch: PlanScratch,
+    /// Fused-tier scratch (lane blocks + register arena).
+    fscratch: FusedScratch,
     /// Stack interpreter for the naive oracle path, built lazily.
     interp: Option<BatchInterp>,
-    plans: HashMap<u64, PlanEntry>,
-    clock: u64,
-    /// Force the pre-plan interpreter path (`ZMC_EMU_NAIVE=1`).
-    naive: bool,
+    plans: RowCache<Rc<ExecPlan>>,
+    fused: RowCache<Rc<FusedPlan>>,
+    /// Which execution tier program launches run through.
+    tier: ExecTier,
     // harmonic scratch
     hsums: Vec<f64>,
     hsqs: Vec<f64>,
     hx: Vec<f32>,
     hlive: Vec<usize>,
-    // plan-cache events since the last `take_plan_events`
-    hits: u64,
-    misses: u64,
 }
 
 impl Default for EmuState {
@@ -139,37 +252,53 @@ impl Default for EmuState {
 }
 
 impl EmuState {
+    /// Worker state with the process-wide tier
+    /// ([`ExecTier::from_env`]).
     pub fn new() -> Self {
-        let naive = std::env::var("ZMC_EMU_NAIVE")
-            .map(|v| v == "1" || v.eq_ignore_ascii_case("true"))
-            .unwrap_or(false);
+        EmuState::with_tier(ExecTier::from_env())
+    }
+
+    /// Worker state pinned to `tier` (the Session builder's
+    /// `execution_tier` plumbs through here via the device pool).
+    pub fn with_tier(tier: ExecTier) -> Self {
         EmuState {
             ucols: vec![vec![0f32; CHUNK]; MAX_DIM],
             xt: Vec::new(),
             buf: vec![0f32; CHUNK],
             scratch: PlanScratch::new(CHUNK),
+            fscratch: FusedScratch::new(),
             interp: None,
-            plans: HashMap::new(),
-            clock: 0,
-            naive,
+            plans: RowCache::new(RowLedger::Plan),
+            fused: RowCache::new(RowLedger::Fused),
+            tier,
             hsums: Vec::new(),
             hsqs: Vec::new(),
             hx: Vec::new(),
             hlive: Vec::new(),
-            hits: 0,
-            misses: 0,
         }
     }
 
-    /// Plans currently cached by this worker.
-    pub fn cached_plans(&self) -> usize {
-        self.plans.len()
+    /// This worker's execution tier.
+    pub fn tier(&self) -> ExecTier {
+        self.tier
     }
 
-    /// Drain the (hits, misses) accumulated since the last call — the
-    /// engine backend folds these into its [`Metrics`] after each task.
+    /// Lowered program rows currently cached by this worker (plan +
+    /// fused tiers).
+    pub fn cached_plans(&self) -> usize {
+        self.plans.len() + self.fused.len()
+    }
+
+    /// Drain the plan-tier (hits, misses) accumulated since the last
+    /// call — the engine backend folds these into its [`Metrics`]
+    /// after each task.
     pub fn take_plan_events(&mut self) -> (u64, u64) {
-        (std::mem::take(&mut self.hits), std::mem::take(&mut self.misses))
+        self.plans.take_events()
+    }
+
+    /// Fused-tier twin of [`EmuState::take_plan_events`].
+    pub fn take_fused_events(&mut self) -> (u64, u64) {
+        self.fused.take_events()
     }
 
     /// Lend out the naive-path buffers (interpreter stack + mapped
@@ -192,9 +321,9 @@ impl EmuState {
         self.xt = xt;
     }
 
-    /// Fetch (or decode + lower) the plan for one program row. Cache
-    /// hits allocate nothing and skip decoding entirely; every miss is
-    /// ledgered via [`Registry::note_plan_lower`].
+    /// Fetch (or decode + lower) the plan-tier lowering of one program
+    /// row, ledgered via [`Registry::note_plan_lower`] /
+    /// [`Registry::note_plan_hit`].
     fn plan_for(
         &mut self,
         ops: &[i32],
@@ -203,47 +332,26 @@ impl EmuState {
         plen: usize,
         registry: &Registry,
     ) -> Result<Rc<ExecPlan>> {
-        let key = row_hash(ops, iargs, fargs, plen);
-        self.clock += 1;
-        if let Some(e) = self.plans.get_mut(&key) {
-            if e.ops.len() == plen
-                && e.ops[..] == ops[..plen]
-                && e.iargs[..] == iargs[..plen]
-                && e.fbits.iter().zip(&fargs[..plen]).all(|(&b, f)| b == f.to_bits())
-            {
-                e.stamp = self.clock;
-                self.hits += 1;
-                registry.note_plan_hit();
-                return Ok(Rc::clone(&e.plan));
-            }
-            // 64-bit hash collision: evict the stale entry and relower
-            self.plans.remove(&key);
-        }
-        self.misses += 1;
-        registry.note_plan_lower();
-        let prog = decode_program(ops, iargs, fargs, plen)?;
-        let plan = Rc::new(ExecPlan::lower(&prog));
-        if self.plans.len() >= PLAN_CACHE_CAP {
-            let evict = self
-                .plans
-                .iter()
-                .min_by_key(|(_, e)| e.stamp)
-                .map(|(&k, _)| k);
-            if let Some(k) = evict {
-                self.plans.remove(&k);
-            }
-        }
-        self.plans.insert(
-            key,
-            PlanEntry {
-                ops: ops[..plen].to_vec(),
-                iargs: iargs[..plen].to_vec(),
-                fbits: fargs[..plen].iter().map(|f| f.to_bits()).collect(),
-                plan: Rc::clone(&plan),
-                stamp: self.clock,
-            },
-        );
-        Ok(plan)
+        self.plans.get_or_lower(ops, iargs, fargs, plen, registry, || {
+            let prog = decode_program(ops, iargs, fargs, plen)?;
+            Ok(Rc::new(ExecPlan::lower(&prog)))
+        })
+    }
+
+    /// Fused-tier twin of [`EmuState::plan_for`], ledgered via
+    /// [`Registry::note_fused_lower`] / [`Registry::note_fused_hit`].
+    fn fused_for(
+        &mut self,
+        ops: &[i32],
+        iargs: &[i32],
+        fargs: &[f32],
+        plen: usize,
+        registry: &Registry,
+    ) -> Result<Rc<FusedPlan>> {
+        self.fused.get_or_lower(ops, iargs, fargs, plen, registry, || {
+            let prog = decode_program(ops, iargs, fargs, plen)?;
+            Ok(Rc::new(FusedPlan::new(ExecPlan::lower(&prog))))
+        })
     }
 }
 
@@ -418,50 +526,72 @@ fn run_vm_multi(
         let row = f * p..(f + 1) * p;
         let (flo, fhi) = (&lo[f * d..(f + 1) * d], &hi[f * d..(f + 1) * d]);
         let fth = &theta[f * MAX_PARAM..(f + 1) * MAX_PARAM];
-        let (s, q) = if state.naive {
-            let prog = decode_program(
-                &ops[row.clone()],
-                &iargs[row.clone()],
-                &fargs[row],
-                plen,
-            )?;
-            check_dims(prog.dims, d, Some(f))?;
-            let (mut interp, mut xt) = state.take_naive_buffers();
-            let r = moment_sums_naive(
-                &prog,
-                &key,
-                ctr[0],
-                spec.samples,
-                flo,
-                fhi,
-                fth,
-                &mut interp,
-                &mut xt,
-                &mut state.buf,
-            );
-            state.restore_naive_buffers(interp, xt);
-            r
-        } else {
-            let plan = state.plan_for(
-                &ops[row.clone()],
-                &iargs[row.clone()],
-                &fargs[row],
-                plen,
-                registry,
-            )?;
-            check_dims(plan.dims, d, Some(f))?;
-            moment_sums_plan(
-                &plan,
-                &key,
-                ctr[0],
-                spec.samples,
-                flo,
-                fhi,
-                fth,
-                &mut state.ucols,
-                &mut state.scratch,
-                &mut state.buf,
-            )
+        let (s, q) = match state.tier {
+            ExecTier::Naive => {
+                let prog = decode_program(
+                    &ops[row.clone()],
+                    &iargs[row.clone()],
+                    &fargs[row],
+                    plen,
+                )?;
+                check_dims(prog.dims, d, Some(f))?;
+                let (mut interp, mut xt) = state.take_naive_buffers();
+                let r = moment_sums_naive(
+                    &prog,
+                    &key,
+                    ctr[0],
+                    spec.samples,
+                    flo,
+                    fhi,
+                    fth,
+                    &mut interp,
+                    &mut xt,
+                    &mut state.buf,
+                );
+                state.restore_naive_buffers(interp, xt);
+                r
+            }
+            ExecTier::Plan => {
+                let plan = state.plan_for(
+                    &ops[row.clone()],
+                    &iargs[row.clone()],
+                    &fargs[row],
+                    plen,
+                    registry,
+                )?;
+                check_dims(plan.dims, d, Some(f))?;
+                moment_sums_plan(
+                    &plan,
+                    &key,
+                    ctr[0],
+                    spec.samples,
+                    flo,
+                    fhi,
+                    fth,
+                    &mut state.ucols,
+                    &mut state.scratch,
+                    &mut state.buf,
+                )
+            }
+            ExecTier::Fused => {
+                let fp = state.fused_for(
+                    &ops[row.clone()],
+                    &iargs[row.clone()],
+                    &fargs[row],
+                    plen,
+                    registry,
+                )?;
+                check_dims(fp.plan().dims, d, Some(f))?;
+                fp.moment_sums(
+                    &key,
+                    ctr[0],
+                    spec.samples as u32,
+                    flo,
+                    fhi,
+                    fth,
+                    &mut state.fscratch,
+                )
+            }
         };
         out[f * 2] = s as f32;
         out[f * 2 + 1] = q as f32;
@@ -571,55 +701,70 @@ fn run_stratified(
         bail!("emulator: stratified launch with empty program");
     }
     let mut out = vec![0f32; c * 2];
-    if state.naive {
-        let prog = decode_program(ops, iargs, fargs, plen)?;
-        check_dims(prog.dims, d, None)?;
-        let (mut interp, mut xt) = state.take_naive_buffers();
-        for ci in 0..c {
-            let key = StreamKey {
-                seed: [seed[0], seed[1]],
-                stream: streams[ci],
-                trial: ctr[1],
-            };
-            let (s, q) = moment_sums_naive(
-                &prog,
-                &key,
-                ctr[0],
-                spec.samples,
-                &cl[ci * d..(ci + 1) * d],
-                &ch[ci * d..(ci + 1) * d],
-                theta,
-                &mut interp,
-                &mut xt,
-                &mut state.buf,
-            );
-            out[ci * 2] = s as f32;
-            out[ci * 2 + 1] = q as f32;
+    let cube_key = |ci: usize| StreamKey {
+        seed: [seed[0], seed[1]],
+        stream: streams[ci],
+        trial: ctr[1],
+    };
+    match state.tier {
+        ExecTier::Naive => {
+            let prog = decode_program(ops, iargs, fargs, plen)?;
+            check_dims(prog.dims, d, None)?;
+            let (mut interp, mut xt) = state.take_naive_buffers();
+            for ci in 0..c {
+                let (s, q) = moment_sums_naive(
+                    &prog,
+                    &cube_key(ci),
+                    ctr[0],
+                    spec.samples,
+                    &cl[ci * d..(ci + 1) * d],
+                    &ch[ci * d..(ci + 1) * d],
+                    theta,
+                    &mut interp,
+                    &mut xt,
+                    &mut state.buf,
+                );
+                out[ci * 2] = s as f32;
+                out[ci * 2 + 1] = q as f32;
+            }
+            state.restore_naive_buffers(interp, xt);
         }
-        state.restore_naive_buffers(interp, xt);
-    } else {
-        let plan = state.plan_for(ops, iargs, fargs, plen, registry)?;
-        check_dims(plan.dims, d, None)?;
-        for ci in 0..c {
-            let key = StreamKey {
-                seed: [seed[0], seed[1]],
-                stream: streams[ci],
-                trial: ctr[1],
-            };
-            let (s, q) = moment_sums_plan(
-                &plan,
-                &key,
-                ctr[0],
-                spec.samples,
-                &cl[ci * d..(ci + 1) * d],
-                &ch[ci * d..(ci + 1) * d],
-                theta,
-                &mut state.ucols,
-                &mut state.scratch,
-                &mut state.buf,
-            );
-            out[ci * 2] = s as f32;
-            out[ci * 2 + 1] = q as f32;
+        ExecTier::Plan => {
+            let plan = state.plan_for(ops, iargs, fargs, plen, registry)?;
+            check_dims(plan.dims, d, None)?;
+            for ci in 0..c {
+                let (s, q) = moment_sums_plan(
+                    &plan,
+                    &cube_key(ci),
+                    ctr[0],
+                    spec.samples,
+                    &cl[ci * d..(ci + 1) * d],
+                    &ch[ci * d..(ci + 1) * d],
+                    theta,
+                    &mut state.ucols,
+                    &mut state.scratch,
+                    &mut state.buf,
+                );
+                out[ci * 2] = s as f32;
+                out[ci * 2 + 1] = q as f32;
+            }
+        }
+        ExecTier::Fused => {
+            let fp = state.fused_for(ops, iargs, fargs, plen, registry)?;
+            check_dims(fp.plan().dims, d, None)?;
+            for ci in 0..c {
+                let (s, q) = fp.moment_sums(
+                    &cube_key(ci),
+                    ctr[0],
+                    spec.samples as u32,
+                    &cl[ci * d..(ci + 1) * d],
+                    &ch[ci * d..(ci + 1) * d],
+                    theta,
+                    &mut state.fscratch,
+                );
+                out[ci * 2] = s as f32;
+                out[ci * 2 + 1] = q as f32;
+            }
         }
     }
     Ok(out)
@@ -694,10 +839,11 @@ mod tests {
     }
 
     #[test]
-    fn plan_path_bit_identical_to_naive_launches() {
+    fn all_tiers_bit_identical_launches() {
         // the whole launch surface — vm_multi with params/bounds and
         // stratified cubes — must produce the exact same payload bits
-        // through the plan pipeline as through the pre-plan interpreter
+        // through the fused pass, the plan pipeline and the pre-plan
+        // interpreter
         let reg = Registry::emulated();
         let exe = reg.get("vm_multi_f8_s4096").unwrap();
         let fns: Vec<VmFn> = (0..5)
@@ -715,16 +861,23 @@ mod tests {
         let inputs = vm_multi_inputs(exe, rng, &fns).unwrap();
         let spec = reg.get(&exe.name).unwrap();
         let emu = EmuExe::compile(spec).unwrap();
-        let mut plan_state = EmuState::new();
-        plan_state.naive = false;
-        let mut naive_state = EmuState::new();
-        naive_state.naive = true;
-        let a = emu.execute(spec, &inputs, &mut plan_state, &reg).unwrap();
-        let b = emu.execute(spec, &inputs, &mut naive_state, &reg).unwrap();
-        assert_eq!(
-            a.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
-            b.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
-        );
+        let mut states = [
+            EmuState::with_tier(ExecTier::Fused),
+            EmuState::with_tier(ExecTier::Plan),
+            EmuState::with_tier(ExecTier::Naive),
+        ];
+        let outs: Vec<Vec<u32>> = states
+            .iter_mut()
+            .map(|s| {
+                emu.execute(spec, &inputs, s, &reg)
+                    .unwrap()
+                    .iter()
+                    .map(|v| v.to_bits())
+                    .collect()
+            })
+            .collect();
+        assert_eq!(outs[0], outs[1], "fused vs plan");
+        assert_eq!(outs[0], outs[2], "fused vs naive");
 
         let sexe = reg.get("stratified_c16_s256").unwrap();
         let prog = Expr::parse("exp(0-p0*x1)*x2").unwrap().compile().unwrap();
@@ -739,12 +892,18 @@ mod tests {
             stratified_inputs(sexe, srng, &prog, &[1.5], &cubes, &streams)
                 .unwrap();
         let semu = EmuExe::compile(sexe).unwrap();
-        let a = semu.execute(sexe, &sinputs, &mut plan_state, &reg).unwrap();
-        let b = semu.execute(sexe, &sinputs, &mut naive_state, &reg).unwrap();
-        assert_eq!(
-            a.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
-            b.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
-        );
+        let souts: Vec<Vec<u32>> = states
+            .iter_mut()
+            .map(|s| {
+                semu.execute(sexe, &sinputs, s, &reg)
+                    .unwrap()
+                    .iter()
+                    .map(|v| v.to_bits())
+                    .collect()
+            })
+            .collect();
+        assert_eq!(souts[0], souts[1], "fused vs plan (stratified)");
+        assert_eq!(souts[0], souts[2], "fused vs naive (stratified)");
     }
 
     #[test]
@@ -762,8 +921,7 @@ mod tests {
             vm_multi_inputs(exe, rng, std::slice::from_ref(&f)).unwrap();
         let spec = reg.get(&exe.name).unwrap();
         let emu = EmuExe::compile(spec).unwrap();
-        let mut state = EmuState::new();
-        state.naive = false;
+        let mut state = EmuState::with_tier(ExecTier::Plan);
         emu.execute(spec, &inputs, &mut state, &reg).unwrap();
         assert_eq!(state.cached_plans(), 1);
         assert_eq!(state.take_plan_events(), (0, 1));
@@ -772,12 +930,49 @@ mod tests {
         }
         assert_eq!(state.cached_plans(), 1);
         assert_eq!(state.take_plan_events(), (3, 0));
+        // the plan tier never touches the fused cache or its events
+        assert_eq!(state.take_fused_events(), (0, 0));
+    }
+
+    #[test]
+    fn fused_cache_hits_after_first_launch() {
+        // fused-tier mirror of the plan-cache test above, including the
+        // registry's fused ledger rows
+        let reg = Registry::emulated();
+        let exe = reg.get("vm_multi_f8_s4096").unwrap();
+        let f = VmFn {
+            program: Expr::parse("x1*x1 + p0").unwrap().compile().unwrap(),
+            theta: vec![2.0],
+            bounds: vec![(0.0, 1.0)],
+            stream: 4,
+        };
+        let rng = RngCtr { seed: [1, 1], base: 0, trial: 0 };
+        let inputs =
+            vm_multi_inputs(exe, rng, std::slice::from_ref(&f)).unwrap();
+        let spec = reg.get(&exe.name).unwrap();
+        let emu = EmuExe::compile(spec).unwrap();
+        let mut state = EmuState::with_tier(ExecTier::Fused);
+        assert_eq!(state.tier(), ExecTier::Fused);
+        emu.execute(spec, &inputs, &mut state, &reg).unwrap();
+        assert_eq!(state.cached_plans(), 1);
+        assert_eq!(state.take_fused_events(), (0, 1));
+        assert_eq!(reg.fused_lower_count(), 1);
+        for _ in 0..3 {
+            emu.execute(spec, &inputs, &mut state, &reg).unwrap();
+        }
+        assert_eq!(state.cached_plans(), 1);
+        assert_eq!(state.take_fused_events(), (3, 0));
+        assert_eq!(reg.fused_lower_count(), 1);
+        assert_eq!(reg.fused_hit_count(), 3);
+        // the fused tier never touches the plan cache or its events
+        assert_eq!(state.take_plan_events(), (0, 0));
+        assert_eq!(reg.plan_lower_count(), 0);
     }
 
     #[test]
     fn plan_cache_evicts_least_recently_used() {
         let reg = Registry::emulated();
-        let mut state = EmuState::new();
+        let mut state = EmuState::with_tier(ExecTier::Plan);
         // distinct single-constant programs: CONST i
         let mk = |i: usize| {
             let ops = vec![Op::CONST.code()];
@@ -894,6 +1089,12 @@ mod tests {
         let mut state = EmuState::new();
         let err = state
             .plan_for(&[999], &[0], &[0.0], 1, &reg)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("bad opcode"), "{err}");
+        // same rejection through the fused tier's lowering
+        let err = state
+            .fused_for(&[999], &[0], &[0.0], 1, &reg)
             .unwrap_err()
             .to_string();
         assert!(err.contains("bad opcode"), "{err}");

@@ -22,3 +22,88 @@ pub mod device;
 pub mod emulator;
 pub mod launch;
 pub mod registry;
+
+/// Which execution tier the emulator runs program launches through.
+///
+/// Three tiers share one contract — bit-identical `(Σf, Σf²)` moments —
+/// and differ only in how much work they fuse per pass:
+///
+/// | tier    | sample gen            | evaluation        | reduction    |
+/// |---------|-----------------------|-------------------|--------------|
+/// | `Naive` | scalar `point()`      | stack interpreter | buffer fold  |
+/// | `Plan`  | columnar `fill_columns` | `ExecPlan` columns | buffer fold |
+/// | `Fused` | SIMD `fill_blocks`    | lane-block plan   | in-kernel    |
+///
+/// Selected per [`device::DevicePool`] (see the Session builder's
+/// `execution_tier`), or process-wide via `ZMC_EMU_TIER=naive|plan|fused`.
+/// The legacy `ZMC_EMU_NAIVE=1` switch still maps to `Naive` with a
+/// one-time deprecation warning; `ZMC_EMU_TIER` supersedes it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ExecTier {
+    /// Pre-plan stack interpreter — the bit-exact oracle path.
+    Naive,
+    /// Columnar [`crate::vm::ExecPlan`] pipeline over sample columns.
+    Plan,
+    /// Fused lane-batched pass ([`crate::vm::FusedPlan`]) — the default.
+    #[default]
+    Fused,
+}
+
+impl ExecTier {
+    /// Parse a tier name (case-insensitive). `None` on unknown input.
+    pub fn parse(s: &str) -> Option<ExecTier> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "naive" => Some(ExecTier::Naive),
+            "plan" => Some(ExecTier::Plan),
+            "fused" => Some(ExecTier::Fused),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            ExecTier::Naive => "naive",
+            ExecTier::Plan => "plan",
+            ExecTier::Fused => "fused",
+        }
+    }
+
+    /// Resolve the process-wide tier from the environment:
+    /// `ZMC_EMU_TIER` wins, the deprecated `ZMC_EMU_NAIVE=1` maps to
+    /// `Naive` (warning logged once), otherwise `Fused`.
+    pub fn from_env() -> ExecTier {
+        use std::sync::Once;
+        if let Ok(v) = std::env::var("ZMC_EMU_TIER") {
+            if let Some(t) = ExecTier::parse(&v) {
+                return t;
+            }
+            static BAD: Once = Once::new();
+            BAD.call_once(|| {
+                eprintln!(
+                    "warn: ZMC_EMU_TIER={v:?} not one of naive|plan|fused; \
+                     using the default (fused)"
+                );
+            });
+            return ExecTier::Fused;
+        }
+        if let Ok(v) = std::env::var("ZMC_EMU_NAIVE") {
+            if v == "1" || v.eq_ignore_ascii_case("true") {
+                static SHIM: Once = Once::new();
+                SHIM.call_once(|| {
+                    eprintln!(
+                        "warn: ZMC_EMU_NAIVE is deprecated; \
+                         use ZMC_EMU_TIER=naive"
+                    );
+                });
+                return ExecTier::Naive;
+            }
+        }
+        ExecTier::Fused
+    }
+}
+
+impl std::fmt::Display for ExecTier {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}

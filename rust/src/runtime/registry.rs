@@ -85,6 +85,10 @@ pub struct Registry {
     /// lowered to `ExecPlan`s across all workers, and plan-cache hits.
     plan_lowers: AtomicU64,
     plan_hits: AtomicU64,
+    /// Fused ledger: program rows lowered to `FusedPlan`s across all
+    /// workers, and fused-cache hits.
+    fused_lowers: AtomicU64,
+    fused_hits: AtomicU64,
 }
 
 impl Registry {
@@ -125,6 +129,8 @@ impl Registry {
             compiles: AtomicU64::new(0),
             plan_lowers: AtomicU64::new(0),
             plan_hits: AtomicU64::new(0),
+            fused_lowers: AtomicU64::new(0),
+            fused_hits: AtomicU64::new(0),
         })
     }
 
@@ -147,6 +153,8 @@ impl Registry {
             compiles: AtomicU64::new(0),
             plan_lowers: AtomicU64::new(0),
             plan_hits: AtomicU64::new(0),
+            fused_lowers: AtomicU64::new(0),
+            fused_hits: AtomicU64::new(0),
         })
     }
 
@@ -203,6 +211,29 @@ impl Registry {
     /// Plan-cache hits across every worker.
     pub fn plan_hit_count(&self) -> u64 {
         self.plan_hits.load(Ordering::Relaxed)
+    }
+
+    /// Count one program row lowered to a `FusedPlan` (a fused-cache
+    /// miss on some worker).
+    pub fn note_fused_lower(&self) {
+        self.fused_lowers.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count one fused-cache hit.
+    pub fn note_fused_hit(&self) {
+        self.fused_hits.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Program rows lowered for the fused tier across every worker —
+    /// the fused twin of [`Registry::plan_lower_count`], saturating at
+    /// `n_workers x distinct program rows` under warm caches.
+    pub fn fused_lower_count(&self) -> u64 {
+        self.fused_lowers.load(Ordering::Relaxed)
+    }
+
+    /// Fused-cache hits across every worker.
+    pub fn fused_hit_count(&self) -> u64 {
+        self.fused_hits.load(Ordering::Relaxed)
     }
 
     pub fn get(&self, name: &str) -> Result<&ExeSpec> {

@@ -9,7 +9,7 @@
 pub mod halton;
 pub mod philox;
 
-pub use philox::{philox4x32, u01, Philox};
+pub use philox::{philox4x32, philox4x32_lanes, u01, Philox};
 
 use crate::abi::MAX_DIM;
 
@@ -110,6 +110,45 @@ impl StreamKey {
             j += 1;
         }
     }
+
+    /// Fill one `W`-lane block of uniforms structure-of-arrays:
+    /// `blocks[d][i] = point(base + i, dims)[d]` for all `W` lanes,
+    /// bit-identical to per-sample [`StreamKey::point`]. Unlike
+    /// [`StreamKey::fill_columns`] the Philox blocks themselves are
+    /// generated `W` at a time through [`philox4x32_lanes`], so the
+    /// counter rounds autovectorize; this is the fused execution tier's
+    /// sample source. Callers wanting fewer than `W` samples use a
+    /// prefix of each row (trailing lanes hold well-defined uniforms for
+    /// counters past the range — harmless and never read).
+    pub fn fill_blocks<const W: usize>(
+        &self,
+        base: u32,
+        dims: usize,
+        blocks: &mut [[f32; W]],
+    ) {
+        debug_assert!(dims <= MAX_DIM && blocks.len() >= dims);
+        let key = [self.seed[0], self.seed[1]];
+        let mut c0 = [0u32; W];
+        for (i, c) in c0.iter_mut().enumerate() {
+            *c = base.wrapping_add(i as u32);
+        }
+        let mut d0 = 0usize;
+        let mut j = 0u32;
+        while d0 < dims {
+            let words =
+                philox4x32_lanes(&c0, [j, self.stream, self.trial], key);
+            let live = (dims - d0).min(4);
+            for (row, dst) in
+                words.iter().zip(blocks[d0..d0 + live].iter_mut())
+            {
+                for i in 0..W {
+                    dst[i] = u01(row[i]);
+                }
+            }
+            d0 += live;
+            j += 1;
+        }
+    }
 }
 
 /// Affine map from the unit cube to a box, dimension-wise.
@@ -168,6 +207,41 @@ mod tests {
                     );
                 }
             }
+        }
+    }
+
+    #[test]
+    fn fill_blocks_matches_point_bitwise() {
+        let k = StreamKey::new(0xDEAD_BEEF_0000_0007, 11, 2);
+        for dims in [1usize, 3, 4, 5, 8] {
+            const W: usize = 32;
+            let base = u32::MAX - 10; // crosses the counter wraparound
+            let mut blocks = vec![[0f32; W]; dims];
+            k.fill_blocks(base, dims, &mut blocks);
+            for i in 0..W {
+                let p = k.point(base.wrapping_add(i as u32), dims);
+                for d in 0..dims {
+                    assert_eq!(
+                        blocks[d][i].to_bits(),
+                        p[d].to_bits(),
+                        "dims={dims} i={i} d={d}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fill_blocks_matches_fill_columns_bitwise() {
+        let k = StreamKey::new(0x0123_4567_89AB_CDEF, 5, 9);
+        const W: usize = 16;
+        let (base, dims) = (4090u32, 6usize);
+        let mut blocks = vec![[0f32; W]; dims];
+        let mut cols = vec![vec![0f32; W]; dims];
+        k.fill_blocks(base, dims, &mut blocks);
+        k.fill_columns(base, W, dims, &mut cols);
+        for d in 0..dims {
+            assert_eq!(&blocks[d][..], &cols[d][..], "d={d}");
         }
     }
 

@@ -40,6 +40,40 @@ pub fn u01(x: u32) -> f32 {
     (x >> 8) as f32 * (1.0 / 16_777_216.0)
 }
 
+/// `W` Philox-4x32-10 blocks evaluated side by side: lane `i` runs the
+/// counter `[c0[i], c123[0], c123[1], c123[2]]` under `key`. The state
+/// lives in fixed-width lane arrays and every round is a straight-line
+/// loop over `0..W`, so rustc autovectorizes the widening 32x32->64
+/// multiplies; each lane is bit-identical to [`philox4x32`] on the same
+/// counter (asserted against the Random123 vectors in the tests below).
+#[inline]
+pub fn philox4x32_lanes<const W: usize>(
+    c0: &[u32; W],
+    c123: [u32; 3],
+    key: [u32; 2],
+) -> [[u32; W]; 4] {
+    let mut x0 = *c0;
+    let mut x1 = [c123[0]; W];
+    let mut x2 = [c123[1]; W];
+    let mut x3 = [c123[2]; W];
+    let [mut k0, mut k1] = key;
+    for r in 0..ROUNDS {
+        if r > 0 {
+            k0 = k0.wrapping_add(W0);
+            k1 = k1.wrapping_add(W1);
+        }
+        for i in 0..W {
+            let p0 = M0 as u64 * x0[i] as u64;
+            let p1 = M1 as u64 * x2[i] as u64;
+            x0[i] = (p1 >> 32) as u32 ^ x1[i] ^ k0;
+            x1[i] = p1 as u32;
+            x2[i] = (p0 >> 32) as u32 ^ x3[i] ^ k1;
+            x3[i] = p0 as u32;
+        }
+    }
+    [x0, x1, x2, x3]
+}
+
 /// Buffered iterator over one stream's uniforms — convenience for CPU
 /// baselines that consume dimension-major samples.
 pub struct Philox {
@@ -133,6 +167,42 @@ mod tests {
     fn known_answer_vectors() {
         for (ctr, key, want) in load_kat() {
             assert_eq!(philox4x32(ctr, key), want);
+        }
+    }
+
+    #[test]
+    fn lanes_match_known_answer_vectors() {
+        // every KAT counter, replicated across all lanes of the wide
+        // kernel, must reproduce the scalar answer in every lane — and a
+        // mixed-c0 block must match per-lane scalar calls bit-for-bit
+        for (ctr, key, want) in load_kat() {
+            let c0 = [ctr[0]; 8];
+            let got = philox4x32_lanes(&c0, [ctr[1], ctr[2], ctr[3]], key);
+            for lane in 0..8 {
+                for w in 0..4 {
+                    assert_eq!(got[w][lane], want[w], "word {w} lane {lane}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn lanes_match_scalar_on_counter_runs() {
+        // the fused tier's usage pattern: consecutive counters in c0,
+        // broadcast c1..c3 — including a wraparound boundary
+        for base in [0u32, 1000, u32::MAX - 3] {
+            let mut c0 = [0u32; 16];
+            for (i, c) in c0.iter_mut().enumerate() {
+                *c = base.wrapping_add(i as u32);
+            }
+            let key = [0xDEAD_BEEF, 0x1234_5678];
+            let got = philox4x32_lanes(&c0, [3, 7, 11], key);
+            for (lane, &c) in c0.iter().enumerate() {
+                let want = philox4x32([c, 3, 7, 11], key);
+                for w in 0..4 {
+                    assert_eq!(got[w][lane], want[w], "base={base} lane={lane}");
+                }
+            }
         }
     }
 

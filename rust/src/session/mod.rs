@@ -60,6 +60,7 @@ use crate::integrator::harmonic::HarmonicBatch;
 use crate::integrator::spec::IntegralJob;
 use crate::runtime::device::DevicePool;
 use crate::runtime::registry::Registry;
+use crate::runtime::ExecTier;
 
 mod functional;
 mod harmonic;
@@ -163,6 +164,7 @@ pub struct Session {
     registry: Arc<Registry>,
     topology: ExecTopology,
     workers: usize,
+    tier: Option<ExecTier>,
 }
 
 impl Session {
@@ -229,6 +231,13 @@ impl Session {
         self.workers
     }
 
+    /// The emulator execution tier this session's launches run
+    /// through: the builder's pin when set, otherwise the process-wide
+    /// default ([`ExecTier::from_env`]). Moot under PJRT.
+    pub fn execution_tier(&self) -> ExecTier {
+        self.tier.unwrap_or_else(ExecTier::from_env)
+    }
+
     /// `ZMCintegral_multifunctions`: a heterogeneous integrand batch.
     /// The builder borrows `jobs` — nothing is copied on the way to
     /// `.run()`.
@@ -283,6 +292,7 @@ pub struct SessionBuilder {
     source: RegistrySource,
     workers: usize,
     engines: usize,
+    tier: Option<ExecTier>,
 }
 
 impl SessionBuilder {
@@ -291,6 +301,7 @@ impl SessionBuilder {
             source: RegistrySource::Auto("artifacts".into()),
             workers: 1,
             engines: 1,
+            tier: None,
         }
     }
 
@@ -338,9 +349,21 @@ impl SessionBuilder {
         self
     }
 
-    /// Apply a job file's topology (`workers`, `num_engines`).
+    /// Pin every worker of this session to one emulator execution tier
+    /// (default: the process-wide [`ExecTier::from_env`]).
+    pub fn execution_tier(mut self, tier: ExecTier) -> Self {
+        self.tier = Some(tier);
+        self
+    }
+
+    /// Apply a job file's topology (`workers`, `num_engines`) and
+    /// execution tier when the file pins one.
     pub fn job_config(self, cfg: &JobConfig) -> Self {
-        self.workers(cfg.workers).engines(cfg.num_engines)
+        let b = self.workers(cfg.workers).engines(cfg.num_engines);
+        match cfg.tier {
+            Some(t) => b.execution_tier(t),
+            None => b,
+        }
     }
 
     /// Resolve just the registry — no workers are spawned. For
@@ -385,7 +408,10 @@ impl SessionBuilder {
     /// session's lifetime.
     pub fn build(self) -> Result<Session> {
         let registry = Self::resolve(self.source)?;
-        let pool = DevicePool::new(&registry, self.workers)?;
+        let mut pool = DevicePool::new(&registry, self.workers)?;
+        if let Some(t) = self.tier {
+            pool = pool.with_tier(t);
+        }
         let topology = if self.engines <= 1 {
             ExecTopology::Engine(Engine::for_pool(&pool)?)
         } else {
@@ -394,7 +420,12 @@ impl SessionBuilder {
                 self.engines,
             )?)
         };
-        Ok(Session { registry, topology, workers: self.workers })
+        Ok(Session {
+            registry,
+            topology,
+            workers: self.workers,
+            tier: self.tier,
+        })
     }
 }
 
@@ -439,6 +470,27 @@ mod tests {
             .to_string()
             .contains("2 parameter(s)"));
         assert!(Error::TooFewTrials { got: 1 }.to_string().contains(">= 2"));
+    }
+
+    #[test]
+    fn execution_tier_pins_and_round_trips() {
+        let s = Session::builder()
+            .emulated()
+            .execution_tier(ExecTier::Plan)
+            .build()
+            .unwrap();
+        assert_eq!(s.execution_tier(), ExecTier::Plan);
+        // a job file's tier flows through .job_config()
+        let cfg = crate::config::JobConfig::from_json_text(
+            r#"{"tier": "naive",
+                 "functions": [{"expr": "x1", "bounds": [[0, 1]]}]}"#,
+        )
+        .unwrap();
+        let b = SessionBuilder::new().emulated().job_config(&cfg);
+        assert_eq!(b.tier, Some(ExecTier::Naive));
+        // unpinned sessions report the process-wide default
+        let s = Session::builder().emulated().build().unwrap();
+        assert_eq!(s.execution_tier(), ExecTier::from_env());
     }
 
     #[test]

@@ -7,11 +7,13 @@
 //! CPU baseline comparator for the backend benches and (b) the
 //! correctness oracle for property tests.
 
+pub mod fused;
 pub mod interp;
 pub mod opcodes;
 pub mod plan;
 pub mod program;
 
+pub use fused::{FusedPlan, FusedScratch, LANES};
 pub use opcodes::Op;
 pub use plan::{ExecPlan, PlanScratch};
 pub use program::Program;

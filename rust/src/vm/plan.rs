@@ -531,6 +531,29 @@ impl ExecPlan {
         &self.ops
     }
 
+    /// Where the final value lives once the op sequence has run.
+    pub(crate) fn root(&self) -> Src {
+        self.root
+    }
+
+    /// Run the scalar prologue (once per launch, not per lane) into
+    /// `out`, growing it to the plan's slot count if needed.
+    pub(crate) fn eval_scalars(&self, theta: &[f32], out: &mut Vec<f32>) {
+        if out.len() < self.scalars.len() {
+            out.resize(self.scalars.len(), 0.0);
+        }
+        for (i, sop) in self.scalars.iter().enumerate() {
+            let v = match *sop {
+                ScalarOp::Theta(t) => theta[t as usize],
+                ScalarOp::Un(op, a) => unary_f32(op, sval(a, out)),
+                ScalarOp::Bin(op, a, b) => {
+                    binary_f32(op, sval(a, out), sval(b, out))
+                }
+            };
+            out[i] = v;
+        }
+    }
+
     /// Evaluate over `n <= scratch.chunk()` samples given *unit-cube*
     /// uniform columns `u` (dimension-major, `u[d][i]`), per-dimension
     /// bounds `lo`/`hi`, and parameters `theta`. Results land in
@@ -539,7 +562,7 @@ impl ExecPlan {
     #[allow(clippy::too_many_arguments)]
     pub fn run(
         &self,
-        u: &[Vec<f32>],
+        u: &[impl AsRef<[f32]>],
         lo: &[f32],
         hi: &[f32],
         theta: &[f32],
@@ -552,20 +575,7 @@ impl ExecPlan {
         assert!(theta.len() >= self.n_params);
         scratch.ensure(self);
         // scalar prologue: once per launch chunk, not per lane
-        for (i, sop) in self.scalars.iter().enumerate() {
-            let v = match *sop {
-                ScalarOp::Theta(t) => theta[t as usize],
-                ScalarOp::Un(op, a) => {
-                    unary_f32(op, sval(a, &scratch.scalars))
-                }
-                ScalarOp::Bin(op, a, b) => binary_f32(
-                    op,
-                    sval(a, &scratch.scalars),
-                    sval(b, &scratch.scalars),
-                ),
-            };
-            scratch.scalars[i] = v;
-        }
+        self.eval_scalars(theta, &mut scratch.scalars);
         let chunk = scratch.chunk;
         for op in &self.ops {
             exec_op(op, &mut scratch.regs, &scratch.scalars, chunk, n, u, lo, hi);
@@ -664,14 +674,19 @@ fn reg_of(s: Src) -> Option<u16> {
     }
 }
 
+/// Execute one plan op over the first `n` lanes of a `chunk`-wide
+/// register arena. Generic over the uniform-column storage so both the
+/// plan tier (`Vec<f32>` chunks) and the fused tier (`[f32; LANES]`
+/// blocks) run the *same* monomorphized lane loops — the foundation of
+/// the tiers' bit-for-bit agreement.
 #[allow(clippy::too_many_arguments)]
-fn exec_op(
+pub(crate) fn exec_op(
     op: &PlanOp,
     regs: &mut [f32],
     scalars: &[f32],
     chunk: usize,
     n: usize,
-    u: &[Vec<f32>],
+    u: &[impl AsRef<[f32]>],
     lo: &[f32],
     hi: &[f32],
 ) {
@@ -682,7 +697,7 @@ fn exec_op(
             let w = hi[d] - lo[d];
             let row =
                 &mut regs[dst as usize * chunk..dst as usize * chunk + n];
-            for (x, &ui) in row.iter_mut().zip(&u[d][..n]) {
+            for (x, &ui) in row.iter_mut().zip(&u[d].as_ref()[..n]) {
                 *x = l + w * ui;
             }
         }

@@ -287,10 +287,24 @@ mod device_backed {
     use zmc::integrator::spec::IntegralJob;
     use zmc::runtime::device::DevicePool;
     use zmc::runtime::registry::Registry;
+    use zmc::runtime::ExecTier;
 
     fn engine(workers: usize) -> (Arc<Registry>, DeviceEngine) {
         let reg = Arc::new(Registry::emulated());
         let pool = DevicePool::new(&reg, workers).unwrap();
+        (reg, Engine::for_pool(&pool).unwrap())
+    }
+
+    /// Engine pinned to one execution tier (the ledger tests below
+    /// assert per-tier counters, so they must not float with the
+    /// process-wide `ZMC_EMU_TIER` default).
+    fn engine_tiered(
+        workers: usize,
+        tier: ExecTier,
+    ) -> (Arc<Registry>, DeviceEngine) {
+        let reg = Arc::new(Registry::emulated());
+        let pool =
+            DevicePool::new(&reg, workers).unwrap().with_tier(tier);
         (reg, Engine::for_pool(&pool).unwrap())
     }
 
@@ -342,7 +356,7 @@ mod device_backed {
         // the plan-ledger twin of the compile-ledger test above: every
         // distinct program row is decoded + lowered at most once per
         // worker, no matter how many times the batch is resubmitted
-        let (reg, engine) = engine(1);
+        let (reg, engine) = engine_tiered(1, ExecTier::Plan);
         // distinct *program rows* (the constant differs per function —
         // theta alone would share one row and one plan)
         let js: Vec<IntegralJob> = (0..6)
@@ -378,8 +392,73 @@ mod device_backed {
     }
 
     #[test]
+    fn fused_tier_lowers_each_program_row_exactly_once() {
+        // the fused-ledger mirror of the plan-ledger test above: the
+        // default tier caches `FusedPlan`s under its own ledger and
+        // leaves the plan ledger untouched
+        let (reg, engine) = engine_tiered(1, ExecTier::Fused);
+        let js: Vec<IntegralJob> = (0..6)
+            .map(|i| {
+                IntegralJob::parse(
+                    &format!("x1^2 + {}.5", i),
+                    &[(0.0, 1.0)],
+                )
+                .unwrap()
+            })
+            .collect();
+        let first = multifunctions::integrate(&engine, &js, &cfg()).unwrap();
+        assert_eq!(reg.fused_lower_count(), 6);
+        for _ in 0..10 {
+            let again =
+                multifunctions::integrate(&engine, &js, &cfg()).unwrap();
+            assert_eq!(again[0].value, first[0].value);
+        }
+        assert_eq!(
+            reg.fused_lower_count(),
+            6,
+            "repeated integrate() must not re-lower fused rows"
+        );
+        assert!(reg.fused_hit_count() > 0);
+        assert_eq!(engine.metrics().fused_misses(), 6);
+        assert!(engine.metrics().fused_hits() > 0);
+        // the plan-tier ledger never moved
+        assert_eq!(reg.plan_lower_count(), 0);
+        assert_eq!(engine.metrics().plan_misses(), 0);
+    }
+
+    #[test]
+    fn fused_tier_bit_identical_across_engines_and_workers() {
+        // the acceptance invariant: fused moments must not depend on
+        // the topology the batch is sharded over
+        use zmc::session::Session;
+        let js = jobs(10);
+        let run = |workers: usize, engines: usize| {
+            let s = Session::builder()
+                .emulated()
+                .workers(workers)
+                .engines(engines)
+                .execution_tier(ExecTier::Fused)
+                .build()
+                .unwrap();
+            s.multifunctions(&js)
+                .samples(1 << 12)
+                .seed(99)
+                .run()
+                .unwrap()
+        };
+        let base = run(1, 1);
+        for (w, e) in [(3, 1), (1, 4), (2, 2)] {
+            let got = run(w, e);
+            for (g, b) in got.iter().zip(&base) {
+                assert_eq!(g.value.to_bits(), b.value.to_bits());
+                assert_eq!(g.std_err.to_bits(), b.std_err.to_bits());
+            }
+        }
+    }
+
+    #[test]
     fn multi_worker_lowers_each_row_at_most_once_per_worker() {
-        let (reg, engine) = engine(2);
+        let (reg, engine) = engine_tiered(2, ExecTier::Plan);
         let js: Vec<IntegralJob> = (0..8)
             .map(|i| {
                 IntegralJob::parse(

@@ -9,7 +9,9 @@
 //! sanity-bounding against the f64 oracle [`eval_scalar`].
 
 use zmc::abi::{MAX_DIM, MAX_PARAM, STACK};
+use zmc::sampler::StreamKey;
 use zmc::util::proptest::{check, Gen};
+use zmc::vm::fused::{FusedPlan, FusedScratch, LANES};
 use zmc::vm::interp::{eval_scalar, eval_scalar_f32, BatchInterp};
 use zmc::vm::plan::{ExecPlan, PlanScratch};
 use zmc::vm::program::{Instr, Program};
@@ -210,6 +212,176 @@ fn plan_tracks_f64_oracle_on_tame_programs() {
             );
         }
     });
+}
+
+/// The plan-tier moment fold: Philox columns per chunk → `plan.run` →
+/// carried f64 accumulator in sample order. This is exactly what the
+/// emulator's plan tier computes, at an arbitrary `chunk`, so the
+/// fused tier's in-kernel epilogue must reproduce it bit-for-bit.
+#[allow(clippy::too_many_arguments)]
+fn moments_via_plan(
+    plan: &ExecPlan,
+    key: &StreamKey,
+    base: u32,
+    samples: u32,
+    lo: &[f32],
+    hi: &[f32],
+    theta: &[f32],
+    chunk: usize,
+) -> (f64, f64) {
+    let dims = plan.dims;
+    let mut cols = vec![vec![0f32; chunk]; dims];
+    let mut scratch = PlanScratch::new(chunk);
+    let mut out = vec![0f32; chunk];
+    let (mut sum, mut sumsq) = (0f64, 0f64);
+    let mut done = 0u32;
+    while done < samples {
+        let n = ((samples - done) as usize).min(chunk);
+        key.fill_columns(base.wrapping_add(done), n, dims, &mut cols);
+        plan.run(&cols, lo, hi, theta, n, &mut scratch, &mut out);
+        for &v in &out[..n] {
+            let vd = v as f64;
+            sum += vd;
+            sumsq += vd * vd;
+        }
+        done += n as u32;
+    }
+    (sum, sumsq)
+}
+
+/// The naive-tier moment fold: per-sample `point()` uniforms, affine
+/// domain map, the columnar stack oracle [`BatchInterp`], same carried
+/// f64 accumulator.
+fn moments_via_interp(
+    prog: &Program,
+    key: &StreamKey,
+    base: u32,
+    samples: u32,
+    lo: &[f32],
+    hi: &[f32],
+    theta: &[f32],
+) -> (f64, f64) {
+    let dims = prog.dims;
+    let n = samples as usize;
+    let mut xt = vec![vec![0f32; n]; dims];
+    for i in 0..n {
+        let p = key.point(base.wrapping_add(i as u32), dims);
+        for d in 0..dims {
+            xt[d][i] = lo[d] + (hi[d] - lo[d]) * p[d];
+        }
+    }
+    let mut interp = BatchInterp::new(n.max(1));
+    let mut out = vec![0f32; n.max(1)];
+    interp.eval(prog, &xt, theta, n, &mut out);
+    let (mut sum, mut sumsq) = (0f64, 0f64);
+    for &v in &out[..n] {
+        let vd = v as f64;
+        sum += vd;
+        sumsq += vd * vd;
+    }
+    (sum, sumsq)
+}
+
+#[test]
+fn fused_moments_match_plan_and_naive_folds_bitwise() {
+    // the three-way tier differential on random programs: the fused
+    // in-kernel epilogue must equal the plan-tier fold at EVERY chunk
+    // size (the carried accumulator makes chunk boundaries invisible)
+    // and the naive interpreter fold, bit for bit
+    check(0xF05E_D001, 60, |g| {
+        let dims = 1 + g.below(4);
+        let prog = gen_program(g, dims, 2);
+        let fused = FusedPlan::new(ExecPlan::lower(&prog));
+        let plan = ExecPlan::lower(&prog);
+        let theta: Vec<f32> =
+            (0..MAX_PARAM).map(|_| g.range_f32(-2.0, 2.0)).collect();
+        let lo: Vec<f32> =
+            (0..dims).map(|_| g.range_f32(-2.0, 1.0)).collect();
+        let hi: Vec<f32> =
+            lo.iter().map(|&l| l + g.range_f32(0.1, 3.0)).collect();
+        let key = StreamKey::new(
+            g.below(1 << 20) as u64 | 0x5EED_0000_0000,
+            g.below(16) as u32,
+            g.below(3) as u32,
+        );
+        let base = if g.bool() {
+            u32::MAX - 100 // counter wraparound mid-range
+        } else {
+            g.below(1 << 16) as u32
+        };
+        let samples = 1 + g.below(LANES * 3) as u32;
+
+        let mut fs = FusedScratch::new();
+        let (fsum, fsq) = fused
+            .moment_sums(&key, base, samples, &lo, &hi, &theta, &mut fs);
+
+        for chunk in [1usize, 13, 64, LANES, LANES * 2 + 7] {
+            let (psum, psq) = moments_via_plan(
+                &plan, &key, base, samples, &lo, &hi, &theta, chunk,
+            );
+            assert_eq!(
+                fsum.to_bits(),
+                psum.to_bits(),
+                "Σf fused vs plan(chunk={chunk})\n{}",
+                prog.disasm()
+            );
+            assert_eq!(
+                fsq.to_bits(),
+                psq.to_bits(),
+                "Σf² fused vs plan(chunk={chunk})\n{}",
+                prog.disasm()
+            );
+        }
+
+        let (nsum, nsq) = moments_via_interp(
+            &prog, &key, base, samples, &lo, &hi, &theta,
+        );
+        assert_eq!(
+            fsum.to_bits(),
+            nsum.to_bits(),
+            "Σf fused vs naive\n{}",
+            prog.disasm()
+        );
+        assert_eq!(fsq.to_bits(), nsq.to_bits(), "Σf² fused vs naive");
+    });
+}
+
+#[test]
+fn fused_mean_tracks_f64_oracle_on_tame_program() {
+    // gross-drift guard against the f64 scalar oracle: E[f] of a tame
+    // integrand over the fused tier must sit within a loose envelope
+    // of the mean of per-sample f64 evaluations
+    let prog = {
+        // sin(x1) * x2 + p0  (tame everywhere on the unit square)
+        let instrs = vec![
+            Instr::var(0),
+            Instr::new(Op::SIN),
+            Instr::var(1),
+            Instr::new(Op::MUL),
+            Instr::param(0),
+            Instr::new(Op::ADD),
+        ];
+        Program::new(instrs).unwrap()
+    };
+    let fused = FusedPlan::new(ExecPlan::lower(&prog));
+    let key = StreamKey::new(2021, 3, 0);
+    let theta = [0.25f32, 0.0];
+    let (lo, hi) = ([0f32, 0.0], [1f32, 1.0]);
+    let samples = 4096u32;
+    let mut fs = FusedScratch::new();
+    let (fsum, _) = fused
+        .moment_sums(&key, 0, samples, &lo, &hi, &theta, &mut fs);
+    let mut want = 0f64;
+    for i in 0..samples {
+        let p = key.point(i, 2);
+        let x = [p[0] as f64, p[1] as f64];
+        want += eval_scalar(&prog, &x, &[0.25, 0.0]);
+    }
+    let (got, want) = (fsum / samples as f64, want / samples as f64);
+    assert!(
+        (got - want).abs() <= 1e-4 * want.abs().max(1.0),
+        "fused mean {got} vs f64 oracle {want}"
+    );
 }
 
 #[test]
