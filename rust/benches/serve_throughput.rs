@@ -1,0 +1,157 @@
+//! Bench: the service front end's overhead and throughput.
+//!
+//! `zmc serve` exists to amortize session construction across requests,
+//! so the number that matters is the per-job cost of the HTTP hop
+//! itself: the same job run directly on a warm [`Session`] vs POSTed
+//! to a loopback server (sequential, then concurrent clients), plus
+//! the latency of a `GET /v1/jobs/{id}` recall — the pure
+//! request/response path with no integration attached.
+//!
+//! Env knobs: ZMC_SRV_JOBS, ZMC_SRV_SAMPLES, ZMC_SRV_CLIENTS.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+
+use zmc::config::JobConfig;
+use zmc::serve::{ServeConfig, Server};
+use zmc::session::Session;
+use zmc::util::bench::{fmt_s, time, Bench};
+
+fn env(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+/// One blocking request; returns the status code (the streamed body is
+/// read to EOF and discarded — the server finishes the job either way).
+fn roundtrip(addr: SocketAddr, method: &str, path: &str, body: &str) -> u16 {
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.write_all(
+        format!(
+            "{method} {path} HTTP/1.1\r\nhost: b\r\n\
+             content-length: {}\r\n\r\n{body}",
+            body.len()
+        )
+        .as_bytes(),
+    )
+    .unwrap();
+    let mut buf = Vec::new();
+    s.read_to_end(&mut buf).unwrap();
+    let head = std::str::from_utf8(&buf[..buf.len().min(16)]).unwrap_or("");
+    head.split_whitespace().nth(1).and_then(|c| c.parse().ok()).unwrap_or(0)
+}
+
+fn main() -> anyhow::Result<()> {
+    let jobs = env("ZMC_SRV_JOBS", 32);
+    let samples = env("ZMC_SRV_SAMPLES", 1 << 12);
+    let clients = env("ZMC_SRV_CLIENTS", 4).max(1);
+
+    let mut job = JobConfig::from_json_text(&JobConfig::example_json())?;
+    job.samples_per_fn = samples;
+    job.trials = 1;
+    job.target_rel_err = None;
+    job.target_abs_err = None;
+    let body = job.to_json().to_string();
+
+    let mut b = Bench::new("serve_throughput");
+
+    // baseline: the same job on a warm local session, no HTTP
+    let session =
+        Session::builder().artifacts_or_emulator("artifacts").build()?;
+    let t_direct = time(1, 3, || {
+        for _ in 0..jobs {
+            session.run_job(&job).unwrap();
+        }
+    });
+    b.row(
+        "direct_run_job",
+        &[
+            ("jobs", jobs.to_string()),
+            ("samples", samples.to_string()),
+            ("wall", fmt_s(t_direct.mean_s)),
+            ("per_job", fmt_s(t_direct.per(jobs))),
+        ],
+    );
+
+    let server = Server::bind(ServeConfig {
+        addr: "127.0.0.1:0".into(),
+        max_jobs: clients,
+        http_workers: clients + 2,
+        ..Default::default()
+    })?;
+    let addr = server.local_addr()?;
+    let stop = server.stop_handle();
+    let serve_thread = std::thread::spawn(move || server.run());
+
+    // one client, jobs in series: per-job delta vs direct is the
+    // whole HTTP + journal-less bookkeeping overhead
+    let t_seq = time(1, 3, || {
+        for _ in 0..jobs {
+            assert_eq!(roundtrip(addr, "POST", "/v1/jobs", &body), 200);
+        }
+    });
+    let overhead = (t_seq.per(jobs) - t_direct.per(jobs)).max(0.0);
+    b.row(
+        "served_sequential",
+        &[
+            ("jobs", jobs.to_string()),
+            ("wall", fmt_s(t_seq.mean_s)),
+            ("per_job", fmt_s(t_seq.per(jobs))),
+            ("http_overhead_per_job", fmt_s(overhead)),
+        ],
+    );
+
+    // concurrent clients against one shared session
+    let per_client = jobs.div_ceil(clients);
+    let t_conc = time(1, 2, || {
+        let threads: Vec<_> = (0..clients)
+            .map(|_| {
+                let body = body.clone();
+                std::thread::spawn(move || {
+                    for _ in 0..per_client {
+                        assert_eq!(
+                            roundtrip(addr, "POST", "/v1/jobs", &body),
+                            200
+                        );
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+    });
+    let total = per_client * clients;
+    b.row(
+        "served_concurrent",
+        &[
+            ("clients", clients.to_string()),
+            ("jobs", total.to_string()),
+            ("wall", fmt_s(t_conc.mean_s)),
+            ("per_job", fmt_s(t_conc.per(total))),
+            (
+                "jobs_per_s",
+                format!("{:.1}", total as f64 / t_conc.mean_s),
+            ),
+        ],
+    );
+
+    // recall path: no integration, pure request/response
+    let t_get = time(8, 200, || {
+        assert_eq!(roundtrip(addr, "GET", "/v1/jobs/1", ""), 200);
+    });
+    b.row(
+        "recall_get",
+        &[
+            ("per_get", fmt_s(t_get.mean_s)),
+            (
+                "gets_per_s",
+                format!("{:.0}", 1.0 / t_get.mean_s.max(1e-12)),
+            ),
+        ],
+    );
+
+    stop.stop();
+    serve_thread.join().unwrap()?;
+    b.finish();
+    Ok(())
+}

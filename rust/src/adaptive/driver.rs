@@ -77,6 +77,13 @@ struct FnState {
     prev: Option<(f64, u64)>,
 }
 
+/// Per-round estimate snapshots for streaming consumers: called with
+/// `(rounds_so_far, per-function estimates)` after the pilot and after
+/// every refinement round. Snapshots are read-only views of the same
+/// per-stratum moments the loop itself allocates from, so observing a
+/// run never perturbs its results.
+pub type RoundObserver<'a> = &'a mut dyn FnMut(usize, &[Estimate]);
+
 /// Adaptive integration; returns one estimate per job, in order.
 /// See the module docs for the loop; [`integrate_with_report`] exposes
 /// the run diagnostics.
@@ -85,7 +92,19 @@ pub fn integrate<X: LaunchExec + ?Sized>(
     jobs: &[IntegralJob],
     cfg: &MultiConfig,
 ) -> Result<Vec<Estimate>> {
-    Ok(integrate_with_report(exec, jobs, cfg)?.0)
+    Ok(run_loop(exec, jobs, cfg, &mut None)?.0)
+}
+
+/// [`integrate`] with a per-round observer — the streaming hook behind
+/// `zmc run --json` and the server's chunked frames. The final return
+/// value is bit-identical to [`integrate`] with the same config.
+pub fn integrate_observed<X: LaunchExec + ?Sized>(
+    exec: &X,
+    jobs: &[IntegralJob],
+    cfg: &MultiConfig,
+    on_round: RoundObserver<'_>,
+) -> Result<Vec<Estimate>> {
+    Ok(run_loop(exec, jobs, cfg, &mut Some(on_round))?.0)
 }
 
 /// [`integrate`] plus the batch-level [`AdaptiveReport`].
@@ -99,6 +118,18 @@ pub fn integrate_with_report<X: LaunchExec + ?Sized>(
     exec: &X,
     jobs: &[IntegralJob],
     cfg: &MultiConfig,
+) -> Result<(Vec<Estimate>, AdaptiveReport)> {
+    run_loop(exec, jobs, cfg, &mut None)
+}
+
+/// The pilot-then-refine loop itself; both public entry points land
+/// here. `observer` (when present) is called after the pilot and every
+/// refinement round with a pure snapshot of the per-function state.
+fn run_loop<X: LaunchExec + ?Sized>(
+    exec: &X,
+    jobs: &[IntegralJob],
+    cfg: &MultiConfig,
+    observer: &mut Option<RoundObserver<'_>>,
 ) -> Result<(Vec<Estimate>, AdaptiveReport)> {
     let mut report = AdaptiveReport::default();
     if jobs.is_empty() {
@@ -163,6 +194,7 @@ pub fn integrate_with_report<X: LaunchExec + ?Sized>(
         }
         st.prev = Some((err, n));
     }
+    notify(observer, report.rounds, &state);
 
     // ---- refinement rounds ------------------------------------------
     for _ in 0..cfg.max_rounds {
@@ -241,6 +273,7 @@ pub fn integrate_with_report<X: LaunchExec + ?Sized>(
                 &mut report,
                 spent - spent_before,
             );
+            notify(observer, report.rounds, &state);
             break;
         }
         let spent_slots = (spent / slot).max(1) as usize;
@@ -285,19 +318,37 @@ pub fn integrate_with_report<X: LaunchExec + ?Sized>(
             &mut report,
             spent - spent_before,
         );
+        notify(observer, report.rounds, &state);
     }
 
     report.total_samples = spent;
     report.launches = launches;
     report.converged = state.iter().filter(|s| s.converged).count();
-    let ests = state
+    Ok((snapshot(&state), report))
+}
+
+/// Pure per-function estimate snapshot of the current state — the same
+/// partition math the final result uses, so the last observed snapshot
+/// equals the returned estimates exactly.
+fn snapshot(state: &[FnState]) -> Vec<Estimate> {
+    state
         .iter()
         .map(|st| {
-            let (value, std_err, n_samples) = partition_estimate(&st.strata);
+            let (value, std_err, n_samples) =
+                partition_estimate(&st.strata);
             Estimate { value, std_err, n_samples, rounds: st.rounds }
         })
-        .collect();
-    Ok((ests, report))
+        .collect()
+}
+
+fn notify(
+    observer: &mut Option<RoundObserver<'_>>,
+    round: usize,
+    state: &[FnState],
+) {
+    if let Some(cb) = observer.as_mut() {
+        cb(round, &snapshot(state));
+    }
 }
 
 /// Post-round bookkeeping: per-function convergence, stall detection,

@@ -24,4 +24,7 @@ mod driver;
 pub mod strata;
 
 pub use alloc::{apportion, Allocation};
-pub use driver::{integrate, integrate_with_report, AdaptiveReport};
+pub use driver::{
+    integrate, integrate_observed, integrate_with_report, AdaptiveReport,
+    RoundObserver,
+};

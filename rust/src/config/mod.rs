@@ -28,12 +28,42 @@
 //!   tree-search knobs (`divisions`, `trials`, `sigma_mult`, `depth`,
 //!   `max_split_dims`) and takes exactly one function.
 
+use std::collections::BTreeMap;
+
 use anyhow::{anyhow, Context, Result};
 
 use crate::integrator::normal::NormalConfig;
 use crate::integrator::spec::IntegralJob;
 use crate::runtime::ExecTier;
 use crate::util::json::Json;
+
+/// The job-config wire schema version this build reads and writes
+/// (the top-level `"v"` field). Configs without a `"v"` field are
+/// accepted as v1 for compatibility with pre-versioned files; any
+/// other value is a typed [`UnsupportedVersion`] error.
+pub const WIRE_VERSION: i64 = 1;
+
+/// Typed parse error for a job config whose `"v"` field names a schema
+/// version this build does not speak. Recover it from the `anyhow`
+/// chain with `err.downcast_ref::<zmc::config::UnsupportedVersion>()`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct UnsupportedVersion {
+    /// The version the config declared (`i64::MIN` when the field was
+    /// present but not an integer).
+    pub got: i64,
+}
+
+impl std::fmt::Display for UnsupportedVersion {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "unsupported job-config version {} (this build speaks v{})",
+            self.got, WIRE_VERSION
+        )
+    }
+}
+
+impl std::error::Error for UnsupportedVersion {}
 
 /// Which paper class a job file drives (the `"class"` tag).
 #[derive(Debug, Clone, PartialEq)]
@@ -48,6 +78,17 @@ pub enum JobClass {
     },
     /// Stratified sampling + tree search on one integrand.
     Normal(NormalParams),
+}
+
+impl JobClass {
+    /// The wire tag of this class (the `"class"` field's value).
+    pub fn name(&self) -> &'static str {
+        match self {
+            JobClass::Multifunctions => "multifunctions",
+            JobClass::Functional { .. } => "functional",
+            JobClass::Normal(_) => "normal",
+        }
+    }
 }
 
 /// Tree-search knobs of a `"class": "normal"` job file (the JSON
@@ -131,7 +172,24 @@ impl JobConfig {
     }
 
     pub fn from_json_text(text: &str) -> Result<Self> {
-        let j = Json::parse(text).map_err(|e| anyhow!("config: {e}"))?;
+        // the JsonError payload survives the context wrap, so callers
+        // (the server's 400 path) can still type a malformed body
+        let j = Json::parse(text).context("config")?;
+        Self::from_json(&j)
+    }
+
+    /// Parse a job config from an already-parsed [`Json`] value — the
+    /// inverse of [`to_json`](Self::to_json). A `"v"` field naming any
+    /// version other than [`WIRE_VERSION`] is a typed
+    /// [`UnsupportedVersion`] error; a missing `"v"` is accepted as v1
+    /// (pre-versioned files).
+    pub fn from_json(j: &Json) -> Result<Self> {
+        if let Some(v) = j.get("v") {
+            let got = v.as_i64().unwrap_or(i64::MIN);
+            if got != WIRE_VERSION {
+                return Err(UnsupportedVersion { got }.into());
+            }
+        }
         let mut cfg = JobConfig::default();
         if let Some(w) = j.get("workers").and_then(Json::as_usize) {
             cfg.workers = w.max(1);
@@ -210,6 +268,93 @@ impl JobConfig {
         Ok(cfg)
     }
 
+    /// Serialize to the canonical versioned wire form (`"v": 1` plus
+    /// every field, optional ones only when set). Symmetric with
+    /// [`from_json`](Self::from_json): the round trip reproduces the
+    /// config exactly — functions re-parse from their `expr` source
+    /// text, floats print shortest-round-trip decimals.
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        let num = |v: f64| Json::Num(v);
+        m.insert("v".to_string(), num(WIRE_VERSION as f64));
+        m.insert(
+            "class".to_string(),
+            Json::Str(self.class.name().to_string()),
+        );
+        m.insert("workers".to_string(), num(self.workers as f64));
+        m.insert("num_engines".to_string(), num(self.num_engines as f64));
+        m.insert(
+            "samples_per_fn".to_string(),
+            num(self.samples_per_fn as f64),
+        );
+        m.insert("trials".to_string(), num(self.trials as f64));
+        m.insert("seed".to_string(), num(self.seed as f64));
+        if let Some(e) = self.target_rel_err {
+            m.insert("target_rel_err".to_string(), num(e));
+        }
+        if let Some(e) = self.target_abs_err {
+            m.insert("target_abs_err".to_string(), num(e));
+        }
+        if let Some(r) = self.max_rounds {
+            m.insert("max_rounds".to_string(), num(r as f64));
+        }
+        if let Some(t) = self.tier {
+            m.insert("tier".to_string(), Json::Str(t.name().to_string()));
+        }
+        match &self.class {
+            JobClass::Multifunctions => {}
+            JobClass::Functional { axes } => {
+                let axes_json = axes
+                    .iter()
+                    .map(|axis| {
+                        Json::Arr(axis.iter().map(|&v| num(v)).collect())
+                    })
+                    .collect();
+                m.insert("axes".to_string(), Json::Arr(axes_json));
+            }
+            JobClass::Normal(p) => {
+                let mut n = BTreeMap::new();
+                n.insert("divisions".to_string(), num(p.divisions as f64));
+                n.insert("trials".to_string(), num(p.n_trials as f64));
+                n.insert("sigma_mult".to_string(), num(p.sigma_mult));
+                n.insert("depth".to_string(), num(p.depth as f64));
+                n.insert(
+                    "max_split_dims".to_string(),
+                    num(p.max_split_dims as f64),
+                );
+                m.insert("normal".to_string(), Json::Obj(n));
+            }
+        }
+        let fns = self
+            .jobs
+            .iter()
+            .map(|job| {
+                let mut f = BTreeMap::new();
+                f.insert(
+                    "expr".to_string(),
+                    Json::Str(job.source.clone()),
+                );
+                let bounds = job
+                    .bounds
+                    .iter()
+                    .map(|&(lo, hi)| Json::Arr(vec![num(lo), num(hi)]))
+                    .collect();
+                f.insert("bounds".to_string(), Json::Arr(bounds));
+                if !job.theta.is_empty() {
+                    f.insert(
+                        "theta".to_string(),
+                        Json::Arr(
+                            job.theta.iter().map(|&v| num(v)).collect(),
+                        ),
+                    );
+                }
+                Json::Obj(f)
+            })
+            .collect();
+        m.insert("functions".to_string(), Json::Arr(fns));
+        Json::Obj(m)
+    }
+
     /// The example job file of the requested class (`init-config`'s
     /// `--class` flag); `None` for an unknown class name.
     pub fn example_json_for(class: &str) -> Option<String> {
@@ -224,6 +369,7 @@ impl JobConfig {
     /// Example multifunction job file (for `init-config` and reports).
     pub fn example_json() -> String {
         r#"{
+  "v": 1,
   "class": "multifunctions",
   "workers": 1,
   "num_engines": 1,
@@ -243,6 +389,7 @@ impl JobConfig {
     /// Example parameter-scan job file (`"class": "functional"`).
     pub fn example_json_functional() -> String {
         r#"{
+  "v": 1,
   "class": "functional",
   "workers": 1,
   "num_engines": 1,
@@ -261,6 +408,7 @@ impl JobConfig {
     /// Example tree-search job file (`"class": "normal"`).
     pub fn example_json_normal() -> String {
         r#"{
+  "v": 1,
   "class": "normal",
   "workers": 1,
   "seed": 2021,
@@ -271,6 +419,31 @@ impl JobConfig {
 }
 "#
         .to_string()
+    }
+}
+
+/// Wire-level equality: every scalar field plus, per function, the
+/// `(source, bounds, theta)` triple that survives the JSON round trip
+/// (the compiled `Expr`/`Program` are deterministic functions of the
+/// source, so comparing them would be redundant).
+impl PartialEq for JobConfig {
+    fn eq(&self, other: &Self) -> bool {
+        self.class == other.class
+            && self.workers == other.workers
+            && self.num_engines == other.num_engines
+            && self.samples_per_fn == other.samples_per_fn
+            && self.trials == other.trials
+            && self.seed == other.seed
+            && self.target_rel_err == other.target_rel_err
+            && self.target_abs_err == other.target_abs_err
+            && self.max_rounds == other.max_rounds
+            && self.tier == other.tier
+            && self.jobs.len() == other.jobs.len()
+            && self.jobs.iter().zip(&other.jobs).all(|(a, b)| {
+                a.source == b.source
+                    && a.bounds == b.bounds
+                    && a.theta == b.theta
+            })
     }
 }
 
@@ -491,6 +664,52 @@ mod tests {
                  "functions": [{"expr": "x1", "bounds": [[0, 1]]}]}"#
         )
         .is_err());
+    }
+
+    #[test]
+    fn version_field_checked() {
+        // v1 and absent both parse
+        for head in [r#""v": 1, "#, ""] {
+            let text = format!(
+                r#"{{{head}"functions":
+                     [{{"expr": "x1", "bounds": [[0, 1]]}}]}}"#
+            );
+            assert!(JobConfig::from_json_text(&text).is_ok(), "{head}");
+        }
+        // any other version is a *typed* error
+        let err = JobConfig::from_json_text(
+            r#"{"v": 2,
+                 "functions": [{"expr": "x1", "bounds": [[0, 1]]}]}"#,
+        )
+        .unwrap_err();
+        assert_eq!(
+            err.downcast_ref::<UnsupportedVersion>(),
+            Some(&UnsupportedVersion { got: 2 })
+        );
+        // a non-integer version is also typed (got = i64::MIN)
+        let err = JobConfig::from_json_text(
+            r#"{"v": "latest",
+                 "functions": [{"expr": "x1", "bounds": [[0, 1]]}]}"#,
+        )
+        .unwrap_err();
+        assert!(err.is::<UnsupportedVersion>());
+    }
+
+    #[test]
+    fn to_json_round_trips_examples() {
+        for class in ["multifunctions", "functional", "normal"] {
+            let text = JobConfig::example_json_for(class).unwrap();
+            let cfg = JobConfig::from_json_text(&text).unwrap();
+            let wire = cfg.to_json();
+            // the emitted form is versioned
+            assert_eq!(wire.get("v").and_then(Json::as_i64), Some(1));
+            let back = JobConfig::from_json(&wire).unwrap();
+            assert_eq!(cfg, back, "{class}");
+            // and survives a serialize -> parse -> parse cycle
+            let reparsed =
+                JobConfig::from_json_text(&wire.to_string()).unwrap();
+            assert_eq!(cfg, reparsed, "{class}");
+        }
     }
 
     #[test]

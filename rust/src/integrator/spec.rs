@@ -1,10 +1,13 @@
 //! Job definitions and estimate types shared by all integrators.
 
-use anyhow::{anyhow, bail, Result};
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Context, Result};
 
 use crate::abi::{MAX_DIM, MAX_PARAM};
 use crate::expr::Expr;
 use crate::sampler::volume;
+use crate::util::json::Json;
 use crate::vm::program::Program;
 
 /// One integral: an expression, its box domain, and parameter bindings.
@@ -114,6 +117,43 @@ impl Estimate {
     pub fn rel_err(&self) -> f64 {
         self.std_err / self.value.abs()
     }
+
+    /// Wire codec: `{"value", "std_err", "samples", "rounds"}`. The
+    /// one JSON shape an estimate takes everywhere — `zmc run --json`
+    /// lines, the server's stream frames and result recall. Floats ride
+    /// [`Json::from_f64`], so the round-trip through
+    /// [`from_json`](Self::from_json) is bit-exact (non-finite values
+    /// included).
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("value".to_string(), Json::from_f64(self.value));
+        m.insert("std_err".to_string(), Json::from_f64(self.std_err));
+        m.insert("samples".to_string(), Json::Num(self.n_samples as f64));
+        m.insert("rounds".to_string(), Json::Num(self.rounds as f64));
+        Json::Obj(m)
+    }
+
+    /// Parse the [`to_json`](Self::to_json) shape. Extra keys (the
+    /// stream frames' `fn`/`trial`/`round` annotations) are ignored.
+    pub fn from_json(j: &Json) -> Result<Estimate> {
+        let value = j
+            .get("value")
+            .and_then(Json::wire_f64)
+            .context("estimate missing 'value'")?;
+        let std_err = j
+            .get("std_err")
+            .and_then(Json::wire_f64)
+            .context("estimate missing 'std_err'")?;
+        let n_samples = j
+            .get("samples")
+            .and_then(Json::as_i64)
+            .context("estimate missing 'samples'")? as u64;
+        let rounds = j
+            .get("rounds")
+            .and_then(Json::as_i64)
+            .context("estimate missing 'rounds'")? as u32;
+        Ok(Estimate { value, std_err, n_samples, rounds })
+    }
 }
 
 /// `I = {value} ± {std_err} ({n} samples, {r} rounds)` — the one
@@ -199,5 +239,29 @@ mod tests {
             rounds: 1,
         };
         assert!(zero.rel_err().is_infinite());
+    }
+
+    #[test]
+    fn estimate_json_roundtrip() {
+        let e = Estimate {
+            value: -0.0,
+            std_err: 1.0 / 3.0,
+            n_samples: 1 << 40,
+            rounds: 7,
+        };
+        let j = Json::parse(&e.to_json().to_string()).unwrap();
+        let back = Estimate::from_json(&j).unwrap();
+        assert_eq!(back.value.to_bits(), e.value.to_bits());
+        assert_eq!(back.std_err.to_bits(), e.std_err.to_bits());
+        assert_eq!(back.n_samples, e.n_samples);
+        assert_eq!(back.rounds, e.rounds);
+        // extra keys (stream-frame annotations) are ignored
+        let annotated = Json::parse(
+            r#"{"value":1,"std_err":0.5,"samples":8,"rounds":1,"fn":3}"#,
+        )
+        .unwrap();
+        assert!(Estimate::from_json(&annotated).is_ok());
+        // missing keys are an error
+        assert!(Estimate::from_json(&Json::parse("{}").unwrap()).is_err());
     }
 }

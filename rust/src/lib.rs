@@ -109,6 +109,7 @@ pub mod expr;
 pub mod integrator;
 pub mod runtime;
 pub mod sampler;
+pub mod serve;
 pub mod session;
 pub mod stats;
 pub mod util;
@@ -129,6 +130,7 @@ pub mod prelude {
     pub use crate::integrator::spec::{Estimate, IntegralJob};
     pub use crate::runtime::device::DevicePool;
     pub use crate::runtime::registry::Registry;
+    pub use crate::serve::{ServeConfig, Server};
     pub use crate::session::{Session, SessionBuilder};
     pub use crate::vm::program::Program;
 }

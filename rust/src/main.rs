@@ -4,7 +4,10 @@
 //! * `info` — list loaded artifacts and ABI constants
 //! * `integrate` — one integral from an expression string
 //! * `run` — a JSON job file of any class (multifunction batch,
-//!   functional parameter grid, or normal tree search)
+//!   functional parameter grid, or normal tree search); `--json`
+//!   streams the wire frames instead of tables
+//! * `serve` — HTTP front end: the same job files over `POST /v1/jobs`
+//!   with streamed progress, recall, metrics, and restart replay
 //! * `scan` — parameter-grid sweep of one integrand
 //! * `normal` — stratified + tree-search integration
 //! * `fig1` — reproduce the paper's Fig. 1 table
@@ -30,8 +33,10 @@ use zmc::config::{JobClass, JobConfig};
 use zmc::integrator::harmonic::HarmonicBatch;
 use zmc::integrator::{functional, spec::IntegralJob};
 use zmc::runtime::ExecTier;
-use zmc::session::Session;
+use zmc::serve::{ServeConfig, Server};
+use zmc::session::{ErrorPayload, JobOutput, Session};
 use zmc::stats::Welford;
+use zmc::util::json::Json;
 
 fn main() {
     if let Err(e) = run() {
@@ -51,6 +56,7 @@ fn run() -> Result<()> {
         "info" => cmd_info(&flags),
         "integrate" => cmd_integrate(&flags),
         "run" => cmd_run(&flags),
+        "serve" => cmd_serve(&flags),
         "scan" => cmd_scan(&flags),
         "normal" => cmd_normal(&flags),
         "fig1" => cmd_fig1(&flags),
@@ -73,8 +79,12 @@ USAGE: zmc <command> [--flag value]...
 COMMANDS
   info                          list artifacts + ABI
   integrate --expr E --bounds B one integral
-  run --config FILE             job file (any class: multifunctions,
-                                functional grid, or normal tree search)
+  run --config FILE [--json]    job file (any class: multifunctions,
+                                functional grid, or normal tree search);
+                                --json streams wire frames, one JSON
+                                object per line
+  serve [--addr H:P]            HTTP service: POST job files to
+                                /v1/jobs on one warm session
   scan --expr E --bounds B --grid G   parameter sweep (p0 axis)
   normal --expr E --bounds B    stratified + tree search
   fig1                          reproduce paper Fig. 1
@@ -108,6 +118,20 @@ still dominate the error, stopping each one at its target.
   --target-abs-err E   stop at std_err <= E per function
   --max-rounds N       refinement rounds after the pilot [12]
 
+SERVE (zmc serve): a versioned jobs-as-data API over one warm session.
+POST /v1/jobs takes the same JSON job files as `zmc run` and streams
+progress frames (chunked JSON lines) as rounds/trials finish; results
+are bit-identical to `zmc run`. GET /v1/jobs/ID recalls status and
+results; /v1/metrics and /v1/healthz report counters and topology.
+  --addr H:P        bind address         [127.0.0.1:7311]
+  --http-workers N  connection handlers  [4]
+  --max-jobs N      jobs in flight before 429 [2]
+  --queue-cap N     pending connections before 503 [16]
+  --rate-limit R    per-client jobs/sec (burst --rate-burst) [off]
+  --state-dir DIR   append-only job journal; on restart finished
+                    results are recalled and interrupted jobs re-run
+  --max-body N      request-body bound in bytes [1048576]
+
 normal-specific: --divisions K --depth D --sigma-mult S
 fig1-specific:   --n N (series length)
 ",
@@ -119,6 +143,9 @@ fig1-specific:   --n N (series length)
 
 struct Flags(HashMap<String, String>);
 
+/// Flags that take no value (presence = true).
+const BOOL_FLAGS: &[&str] = &["json"];
+
 impl Flags {
     fn parse(args: &[String]) -> Result<Flags> {
         let mut m = HashMap::new();
@@ -126,6 +153,11 @@ impl Flags {
         // allow one positional argument (used by init-config)
         while i < args.len() {
             if let Some(key) = args[i].strip_prefix("--") {
+                if BOOL_FLAGS.contains(&key) {
+                    m.insert(key.to_string(), "true".into());
+                    i += 1;
+                    continue;
+                }
                 let val = args
                     .get(i + 1)
                     .ok_or_else(|| anyhow!("flag --{key} needs a value"))?;
@@ -141,6 +173,10 @@ impl Flags {
 
     fn str(&self, key: &str) -> Option<&str> {
         self.0.get(key).map(String::as_str)
+    }
+
+    fn bool(&self, key: &str) -> bool {
+        self.0.contains_key(key)
     }
 
     fn usize(&self, key: &str, default: usize) -> Result<usize> {
@@ -371,89 +407,87 @@ fn cmd_integrate(flags: &Flags) -> Result<()> {
 
 fn cmd_run(flags: &Flags) -> Result<()> {
     let path = flags.str("config").context("--config required")?;
-    let cfg = JobConfig::from_file(path)?;
-    let workers = flags.usize("workers", cfg.workers)?;
-    let num_engines =
+    let mut cfg = JobConfig::from_file(path)?;
+    // CLI flags override the job file; the merged config is the single
+    // source of truth — it is what `Session::run_job` validates and
+    // runs, so `zmc run` and `POST /v1/jobs` are the same computation
+    cfg.workers = flags.usize("workers", cfg.workers)?;
+    cfg.num_engines =
         flags.usize("num-engines", cfg.num_engines)?.max(1);
-    // CLI flags override the job file's adaptive targets
-    let target_rel =
+    cfg.target_rel_err =
         flags.opt_f64("target-rel-err")?.or(cfg.target_rel_err);
-    let target_abs =
+    cfg.target_abs_err =
         flags.opt_f64("target-abs-err")?.or(cfg.target_abs_err);
-    // surface inapplicable knobs instead of silently dropping them:
-    // the adaptive loop only exists for multifunction batches, and the
-    // tree search has its own per-cube trial count
-    if !matches!(cfg.class, JobClass::Multifunctions)
-        && (target_rel.is_some() || target_abs.is_some())
-    {
-        bail!(
-            "error targets (--target-rel-err/--target-abs-err/\
-             target_*_err fields) apply to the multifunctions class \
-             only"
-        );
-    }
-    if matches!(cfg.class, JobClass::Normal(_)) && cfg.trials > 1 {
-        bail!(
-            "'trials' does not apply to the normal class — set \
-             per-cube trials via the \"normal\" object instead"
-        );
+    if flags.str("max-rounds").is_some() {
+        cfg.max_rounds = Some(flags.usize("max-rounds", 12)?);
     }
     // one session serves whichever class the job file describes
-    let session =
-        make_session_tiered(flags, workers, num_engines, cfg.tier)?;
-    match &cfg.class {
-        JobClass::Multifunctions => run_multifunctions(
-            flags,
-            &session,
-            &cfg,
-            (target_rel, target_abs),
-            workers,
-            num_engines,
-        ),
-        JobClass::Functional { axes } => {
-            run_functional(&session, &cfg, axes)
-        }
-        JobClass::Normal(p) => run_normal_class(&session, &cfg, p),
+    let session = make_session_tiered(
+        flags,
+        cfg.workers,
+        cfg.num_engines,
+        cfg.tier,
+    )?;
+    let t0 = std::time::Instant::now();
+    if flags.bool("json") {
+        // machine mode: the server's wire frames, one per line
+        return match session.run_job_observed(&cfg, &mut |ev| {
+            for frame in ev.frames() {
+                println!("{frame}");
+            }
+        }) {
+            Ok(_) => {
+                println!("{}", run_status_json("done", None));
+                Ok(())
+            }
+            Err(err) => {
+                let payload = ErrorPayload::from_error(&err).to_json();
+                println!("{}", run_status_json("failed", Some(payload)));
+                Err(err)
+            }
+        };
     }
+    let out = session.run_job(&cfg)?;
+    let dt = t0.elapsed();
+    match &cfg.class {
+        JobClass::Multifunctions => {
+            print_multifunctions(&session, &cfg, &out.per_trial, dt)
+        }
+        JobClass::Functional { axes } => {
+            print_functional(&cfg, axes, &out.per_trial, dt)
+        }
+        JobClass::Normal(_) => print_normal_class(&cfg, &out, dt),
+    }
+    Ok(())
 }
 
-fn run_multifunctions(
-    flags: &Flags,
+/// Terminal line of `zmc run --json`: `{"v":1,"status":..}` (+ error).
+fn run_status_json(status: &str, error: Option<Json>) -> Json {
+    let mut m = std::collections::BTreeMap::new();
+    m.insert("v".to_string(), Json::Num(1.0));
+    m.insert("status".to_string(), Json::Str(status.to_string()));
+    if let Some(e) = error {
+        m.insert("error".to_string(), e);
+    }
+    Json::Obj(m)
+}
+
+fn print_multifunctions(
     session: &Session,
     cfg: &JobConfig,
-    (target_rel, target_abs): (Option<f64>, Option<f64>),
-    workers: usize,
-    num_engines: usize,
-) -> Result<()> {
-    let adaptive = target_rel.is_some() || target_abs.is_some();
-    let max_rounds =
-        flags.usize("max-rounds", cfg.max_rounds.unwrap_or(12))?;
-    // a job file may legitimately combine rel+abs targets (stop at
-    // whichever is met) — the free-function semantics — so the
-    // resolved config goes through the builder's escape hatch
-    let mcfg = zmc::integrator::multifunctions::MultiConfig {
-        samples_per_fn: cfg.samples_per_fn,
-        seed: cfg.seed,
-        target_rel_err: target_rel,
-        target_abs_err: target_abs,
-        max_rounds,
-        num_engines,
-        ..Default::default()
-    };
-    let t0 = std::time::Instant::now();
-    let per_trial = session
-        .multifunctions(&cfg.jobs)
-        .config(mcfg)
-        .run_trials(cfg.trials)?;
-    let dt = t0.elapsed();
+    per_trial: &[Vec<zmc::integrator::spec::Estimate>],
+    dt: std::time::Duration,
+) {
+    let adaptive =
+        cfg.target_rel_err.is_some() || cfg.target_abs_err.is_some();
     println!(
         "{} functions x {} trials x {} samples on {} engine(s) x {} \
          worker(s), tier={}: {:.3}s",
         cfg.jobs.len(),
         cfg.trials,
         cfg.samples_per_fn,
-        num_engines,
-        workers,
+        cfg.num_engines,
+        cfg.workers,
         session.execution_tier(),
         dt.as_secs_f64()
     );
@@ -468,7 +502,7 @@ fn run_multifunctions(
     }
     for (i, job) in cfg.jobs.iter().enumerate() {
         let mut w = Welford::new();
-        for t in &per_trial {
+        for t in per_trial {
             w.push(t[i].value);
         }
         let spread =
@@ -496,44 +530,26 @@ fn run_multifunctions(
             );
         }
     }
-    Ok(())
 }
 
-fn run_functional(
-    session: &Session,
+fn print_functional(
     cfg: &JobConfig,
     axes: &[Vec<f64>],
-) -> Result<()> {
+    per_trial: &[Vec<zmc::integrator::spec::Estimate>],
+    dt: std::time::Duration,
+) {
     let thetas = functional::grid(axes);
-    let job = &cfg.jobs[0];
-    let t0 = std::time::Instant::now();
-    // the job file's `trials` means independent repeats here too: all
-    // submitted up front so they interleave across the warm workers
-    let handles: Vec<_> = (0..cfg.trials)
-        .map(|t| {
-            session
-                .functional(job, &thetas)
-                .samples(cfg.samples_per_fn)
-                .seed(cfg.seed)
-                .trial(t)
-                .submit()
-        })
-        .collect::<Result<_>>()?;
-    let per_trial: Vec<Vec<zmc::integrator::spec::Estimate>> = handles
-        .into_iter()
-        .map(|h| h.wait())
-        .collect::<Result<_>>()?;
     println!(
         "scan of {} over {} grid point(s) x {} trial(s): {:.3}s",
-        job.source,
+        cfg.jobs[0].source,
         thetas.len(),
         cfg.trials,
-        t0.elapsed().as_secs_f64()
+        dt.as_secs_f64()
     );
     println!("{:>24}  {:>14}  {:>12}", "theta", "I", "σ");
     for (i, t) in thetas.iter().enumerate() {
         let mut w = Welford::new();
-        for tr in &per_trial {
+        for tr in per_trial {
             w.push(tr[i].value);
         }
         let spread = if cfg.trials > 1 {
@@ -548,7 +564,6 @@ fn run_functional(
             spread
         );
     }
-    Ok(())
 }
 
 fn fmt_theta(theta: &[f64]) -> String {
@@ -557,29 +572,63 @@ fn fmt_theta(theta: &[f64]) -> String {
     format!("[{}]", vals.join(", "))
 }
 
-fn run_normal_class(
-    session: &Session,
+fn print_normal_class(
     cfg: &JobConfig,
-    p: &zmc::config::NormalParams,
-) -> Result<()> {
-    let job = &cfg.jobs[0];
-    let t0 = std::time::Instant::now();
-    let r = session
-        .normal(job)
-        .divisions(p.divisions)
-        .trials(p.n_trials)
-        .sigma_mult(p.sigma_mult)
-        .depth(p.depth)
-        .max_split_dims(p.max_split_dims)
-        .seed(cfg.seed)
-        .run()?;
-    println!("tree-search integral of: {}", job.source);
-    println!("  {}  ({:.3}s)", r.estimate, t0.elapsed().as_secs_f64());
+    out: &JobOutput,
+    dt: std::time::Duration,
+) {
+    println!("tree-search integral of: {}", cfg.jobs[0].source);
+    println!("  {}  ({:.3}s)", out.per_trial[0][0], dt.as_secs_f64());
+    if let Some(r) = &out.normal {
+        println!(
+            "  cubes/level: {:?}  flagged/level: {:?}  launches: {}",
+            r.cubes_per_level, r.flagged_per_level, r.launches
+        );
+    }
+}
+
+/// `zmc serve`: bind, print the routes, serve until killed. Restart
+/// with the same `--state-dir` to recover the journal (finished
+/// results recalled, interrupted jobs re-run bit-identically).
+fn cmd_serve(flags: &Flags) -> Result<()> {
+    let defaults = ServeConfig::default();
+    let engines = flags
+        .usize("engines", flags.usize("num-engines", 1)?)?
+        .max(1);
+    let cfg = ServeConfig {
+        addr: flags
+            .str("addr")
+            .unwrap_or(defaults.addr.as_str())
+            .to_string(),
+        workers: flags.usize("workers", defaults.workers)?,
+        engines,
+        http_workers: flags
+            .usize("http-workers", defaults.http_workers)?
+            .max(1),
+        max_jobs: flags.usize("max-jobs", defaults.max_jobs)?.max(1),
+        queue_cap: flags.usize("queue-cap", defaults.queue_cap)?.max(1),
+        rate_limit: flags.opt_f64("rate-limit")?,
+        rate_burst: flags.f64("rate-burst", defaults.rate_burst)?,
+        state_dir: flags.str("state-dir").map(Into::into),
+        artifacts: flags.str("artifacts").map(str::to_string),
+        tier: parse_tier(flags)?,
+        max_body: flags.usize("max-body", defaults.max_body)?,
+    };
+    let journaled = cfg.state_dir.is_some();
+    let server = Server::bind(cfg)?;
+    let addr = server.local_addr()?;
+    println!("zmc serve listening on http://{addr}");
     println!(
-        "  cubes/level: {:?}  flagged/level: {:?}  launches: {}",
-        r.cubes_per_level, r.flagged_per_level, r.launches
+        "  POST /v1/jobs  GET /v1/jobs/{{id}}  GET /v1/metrics  \
+         GET /v1/healthz"
     );
-    Ok(())
+    if !journaled {
+        eprintln!(
+            "note: no --state-dir; jobs are not journaled and will \
+             not survive a restart"
+        );
+    }
+    server.run()
 }
 
 fn cmd_scan(flags: &Flags) -> Result<()> {

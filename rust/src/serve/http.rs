@@ -1,0 +1,287 @@
+//! Minimal HTTP/1.1 on `std::io` — exactly what the jobs API needs.
+//!
+//! One request per connection (`Connection: close` on every response),
+//! `Content-Length` request bodies, and chunked transfer encoding for
+//! the job stream. Hand-rolled on purpose: the repo vendors no HTTP
+//! dependency, and the wire surface is four routes of line-oriented
+//! JSON, not a framework's worth of protocol.
+
+use std::io::{BufRead, Read, Write};
+
+use crate::util::json::Json;
+
+/// Header count / line-length bounds — a parser this small refuses
+/// pathological requests instead of buffering them.
+const MAX_HEADERS: usize = 64;
+const MAX_LINE: usize = 8 * 1024;
+
+/// A parsed request: method, path, lowercased headers, body.
+#[derive(Debug)]
+pub struct Request {
+    pub method: String,
+    pub path: String,
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl Request {
+    /// First value of `name` (ASCII case-insensitive, stored
+    /// lowercased).
+    pub fn header(&self, name: &str) -> Option<&str> {
+        let name = name.to_ascii_lowercase();
+        self.headers
+            .iter()
+            .find(|(n, _)| *n == name)
+            .map(|(_, v)| v.as_str())
+    }
+}
+
+/// Why a request could not be read. The router maps these straight to
+/// status codes; [`ReadError::Closed`] (peer hung up before a request
+/// line) gets no response at all.
+#[derive(Debug)]
+pub enum ReadError {
+    Closed,
+    /// Malformed request line/headers → 400.
+    Bad(String),
+    /// Declared body over the server's bound → 413.
+    TooLarge { limit: usize },
+    Io(std::io::Error),
+}
+
+impl From<std::io::Error> for ReadError {
+    fn from(e: std::io::Error) -> Self {
+        ReadError::Io(e)
+    }
+}
+
+fn read_line<R: BufRead>(r: &mut R) -> Result<String, ReadError> {
+    let mut line = String::new();
+    r.take(MAX_LINE as u64).read_line(&mut line)?;
+    if line.len() >= MAX_LINE {
+        return Err(ReadError::Bad("header line too long".into()));
+    }
+    while line.ends_with('\n') || line.ends_with('\r') {
+        line.pop();
+    }
+    Ok(line)
+}
+
+/// Read one request. `max_body` bounds the declared `Content-Length`;
+/// anything larger is refused before a single body byte is read.
+pub fn read_request<R: BufRead>(
+    r: &mut R,
+    max_body: usize,
+) -> Result<Request, ReadError> {
+    let start = read_line(r)?;
+    if start.is_empty() {
+        return Err(ReadError::Closed);
+    }
+    let mut parts = start.split_whitespace();
+    let (method, path, version) =
+        match (parts.next(), parts.next(), parts.next()) {
+            (Some(m), Some(p), Some(v)) => (m, p, v),
+            _ => {
+                return Err(ReadError::Bad(format!(
+                    "malformed request line '{start}'"
+                )))
+            }
+        };
+    if !version.starts_with("HTTP/1.") {
+        return Err(ReadError::Bad(format!(
+            "unsupported version '{version}'"
+        )));
+    }
+    let mut headers = Vec::new();
+    loop {
+        let line = read_line(r)?;
+        if line.is_empty() {
+            break;
+        }
+        if headers.len() >= MAX_HEADERS {
+            return Err(ReadError::Bad("too many headers".into()));
+        }
+        let Some((name, value)) = line.split_once(':') else {
+            return Err(ReadError::Bad(format!("malformed header '{line}'")));
+        };
+        headers
+            .push((name.trim().to_ascii_lowercase(), value.trim().into()));
+    }
+    let req = Request {
+        method: method.to_string(),
+        path: path.to_string(),
+        headers,
+        body: vec![],
+    };
+    let len = match req.header("content-length") {
+        None => 0,
+        Some(v) => v.parse::<usize>().map_err(|_| {
+            ReadError::Bad(format!("bad content-length '{v}'"))
+        })?,
+    };
+    if len > max_body {
+        return Err(ReadError::TooLarge { limit: max_body });
+    }
+    let mut body = vec![0u8; len];
+    r.read_exact(&mut body)?;
+    Ok(Request { body, ..req })
+}
+
+/// Reason phrase for the handful of codes the server speaks.
+pub fn status_reason(code: u16) -> &'static str {
+    match code {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        413 => "Payload Too Large",
+        429 => "Too Many Requests",
+        503 => "Service Unavailable",
+        _ => "Internal Server Error",
+    }
+}
+
+/// Write a full response with `Content-Length` framing and
+/// `Connection: close`.
+pub fn write_response<W: Write>(
+    w: &mut W,
+    code: u16,
+    headers: &[(&str, String)],
+    body: &[u8],
+) -> std::io::Result<()> {
+    write!(w, "HTTP/1.1 {} {}\r\n", code, status_reason(code))?;
+    write!(
+        w,
+        "connection: close\r\ncontent-length: {}\r\n",
+        body.len()
+    )?;
+    for (name, value) in headers {
+        write!(w, "{name}: {value}\r\n")?;
+    }
+    w.write_all(b"\r\n")?;
+    w.write_all(body)?;
+    w.flush()
+}
+
+/// Write a JSON body (newline-terminated, `application/json`).
+pub fn write_json<W: Write>(
+    w: &mut W,
+    code: u16,
+    j: &Json,
+) -> std::io::Result<()> {
+    write_json_with(w, code, &[], j)
+}
+
+/// [`write_json`] plus extra headers (the 429 path's `Retry-After`).
+pub fn write_json_with<W: Write>(
+    w: &mut W,
+    code: u16,
+    headers: &[(&str, String)],
+    j: &Json,
+) -> std::io::Result<()> {
+    let mut hs: Vec<(&str, String)> =
+        vec![("content-type", "application/json".into())];
+    hs.extend(headers.iter().map(|(n, v)| (*n, v.clone())));
+    write_response(w, code, &hs, format!("{j}\n").as_bytes())
+}
+
+/// Chunked-encoding JSON-lines stream: one chunk per line, flushed
+/// immediately so clients see each frame as the engine produces it.
+pub struct ChunkedWriter<W: Write> {
+    w: W,
+}
+
+impl<W: Write> ChunkedWriter<W> {
+    /// Write the 200 header block and switch to chunked framing.
+    pub fn start(mut w: W) -> std::io::Result<Self> {
+        write!(
+            w,
+            "HTTP/1.1 200 OK\r\nconnection: close\r\n\
+             content-type: application/x-ndjson\r\n\
+             transfer-encoding: chunked\r\n\r\n"
+        )?;
+        w.flush()?;
+        Ok(ChunkedWriter { w })
+    }
+
+    /// One JSON value as one newline-terminated chunk.
+    pub fn write_line(&mut self, j: &Json) -> std::io::Result<()> {
+        let line = format!("{j}\n");
+        write!(self.w, "{:x}\r\n", line.len())?;
+        self.w.write_all(line.as_bytes())?;
+        self.w.write_all(b"\r\n")?;
+        self.w.flush()
+    }
+
+    /// Terminal zero chunk.
+    pub fn finish(mut self) -> std::io::Result<()> {
+        self.w.write_all(b"0\r\n\r\n")?;
+        self.w.flush()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn parses_request_with_body() {
+        let raw = b"POST /v1/jobs HTTP/1.1\r\nHost: x\r\n\
+                    Content-Length: 4\r\n\r\n{\"a\"";
+        let req = read_request(&mut Cursor::new(&raw[..]), 1024).unwrap();
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.path, "/v1/jobs");
+        assert_eq!(req.header("host"), Some("x"));
+        assert_eq!(req.header("Content-Length"), Some("4"));
+        assert_eq!(req.body, b"{\"a\"");
+    }
+
+    #[test]
+    fn rejects_bad_requests() {
+        let e = read_request(&mut Cursor::new(&b"\r\n"[..]), 10)
+            .unwrap_err();
+        assert!(matches!(e, ReadError::Closed));
+        let e = read_request(&mut Cursor::new(&b"GET /\r\n\r\n"[..]), 10)
+            .unwrap_err();
+        assert!(matches!(e, ReadError::Bad(_)));
+        let e = read_request(
+            &mut Cursor::new(&b"GET / SPDY/9\r\n\r\n"[..]),
+            10,
+        )
+        .unwrap_err();
+        assert!(matches!(e, ReadError::Bad(_)));
+        let raw = b"POST / HTTP/1.1\r\ncontent-length: 99\r\n\r\n";
+        let e = read_request(&mut Cursor::new(&raw[..]), 10).unwrap_err();
+        assert!(matches!(e, ReadError::TooLarge { limit: 10 }));
+    }
+
+    #[test]
+    fn response_framing() {
+        let mut out = Vec::new();
+        write_json_with(
+            &mut out,
+            429,
+            &[("retry-after", "2".into())],
+            &Json::parse(r#"{"e":1}"#).unwrap(),
+        )
+        .unwrap();
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.starts_with("HTTP/1.1 429 Too Many Requests\r\n"));
+        assert!(text.contains("retry-after: 2\r\n"));
+        assert!(text.contains("content-length: 8\r\n"));
+        assert!(text.ends_with("\r\n\r\n{\"e\":1}\n"));
+    }
+
+    #[test]
+    fn chunked_framing() {
+        let mut out = Vec::new();
+        let mut cw = ChunkedWriter::start(&mut out).unwrap();
+        cw.write_line(&Json::parse("[1,2]").unwrap()).unwrap();
+        cw.finish().unwrap();
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.contains("transfer-encoding: chunked\r\n"));
+        // "[1,2]\n" is 6 bytes -> chunk header "6"
+        assert!(text.ends_with("\r\n6\r\n[1,2]\n\r\n0\r\n\r\n"), "{text}");
+    }
+}

@@ -1,0 +1,245 @@
+//! Append-only JSON-lines job journal + restart replay.
+//!
+//! Every accepted job writes a `submit` record before its first
+//! launch and exactly one terminal record (`done`/`failed`) after; a
+//! restarted server replays the file to recover finished results for
+//! `GET /v1/jobs/{id}` recall and to **re-run** jobs that were cut off
+//! mid-flight — jobs are data, and the engine is deterministic, so a
+//! re-run reproduces the lost results bit-for-bit.
+//!
+//! Line shapes (one JSON object per line, `"v": 1` like every other
+//! wire surface):
+//!
+//! ```json
+//! {"v":1,"event":"submit","id":3,"config":{...job config...}}
+//! {"v":1,"event":"done","id":3,"result":{"trials":[[...]]}}
+//! {"v":1,"event":"failed","id":3,"error":{"code":"...","message":"..."}}
+//! ```
+//!
+//! A crash can truncate the final line; [`Journal::load`] skips
+//! unparseable lines instead of refusing the whole file.
+
+use std::collections::BTreeMap;
+use std::fs::{File, OpenOptions};
+use std::io::{BufRead, BufReader, Write};
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+const FILE_NAME: &str = "jobs.jsonl";
+
+/// The append side: owned by a running server, one line per event.
+pub struct Journal {
+    path: PathBuf,
+    file: Mutex<File>,
+}
+
+impl Journal {
+    /// Open (creating `state_dir` and the journal file as needed) for
+    /// appending.
+    pub fn open(state_dir: &Path) -> Result<Journal> {
+        std::fs::create_dir_all(state_dir).with_context(|| {
+            format!("creating state dir {}", state_dir.display())
+        })?;
+        let path = state_dir.join(FILE_NAME);
+        let file = OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(&path)
+            .with_context(|| format!("opening {}", path.display()))?;
+        Ok(Journal { path, file: Mutex::new(file) })
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    pub fn submitted(&self, id: u64, config: &Json) -> Result<()> {
+        self.record("submit", id, ("config", config))
+    }
+
+    pub fn done(&self, id: u64, result: &Json) -> Result<()> {
+        self.record("done", id, ("result", result))
+    }
+
+    pub fn failed(&self, id: u64, error: &Json) -> Result<()> {
+        self.record("failed", id, ("error", error))
+    }
+
+    fn record(
+        &self,
+        event: &str,
+        id: u64,
+        payload: (&str, &Json),
+    ) -> Result<()> {
+        let mut m = BTreeMap::new();
+        m.insert("v".to_string(), Json::Num(1.0));
+        m.insert("event".to_string(), Json::Str(event.to_string()));
+        m.insert("id".to_string(), Json::Num(id as f64));
+        m.insert(payload.0.to_string(), payload.1.clone());
+        let line = format!("{}\n", Json::Obj(m));
+        let mut f = self.file.lock().unwrap();
+        f.write_all(line.as_bytes())?;
+        f.flush()?;
+        Ok(())
+    }
+}
+
+/// One journaled job after replay.
+#[derive(Debug, Clone)]
+pub struct ReplayJob {
+    pub id: u64,
+    pub config: Json,
+    /// `None` = the server died with this job in flight (re-run it).
+    pub outcome: Option<Outcome>,
+}
+
+/// A job's terminal record.
+#[derive(Debug, Clone)]
+pub enum Outcome {
+    Done(Json),
+    Failed(Json),
+}
+
+/// Everything [`Journal::load`] recovered.
+#[derive(Debug, Default)]
+pub struct Replay {
+    /// Jobs in id order.
+    pub jobs: Vec<ReplayJob>,
+    /// First unused job id.
+    pub next_id: u64,
+}
+
+impl Journal {
+    /// Parse the journal under `state_dir` (absent file = empty
+    /// replay). Unparseable lines — a crash-truncated tail — are
+    /// skipped; terminal records without a `submit` are ignored.
+    pub fn load(state_dir: &Path) -> Result<Replay> {
+        let path = state_dir.join(FILE_NAME);
+        let mut jobs: BTreeMap<u64, ReplayJob> = BTreeMap::new();
+        let mut max_id = 0u64;
+        if path.exists() {
+            let f = File::open(&path)
+                .with_context(|| format!("opening {}", path.display()))?;
+            for line in BufReader::new(f).lines() {
+                let line = line?;
+                if line.trim().is_empty() {
+                    continue;
+                }
+                let Ok(j) = Json::parse(&line) else {
+                    continue; // truncated tail
+                };
+                let Some(id) =
+                    j.get("id").and_then(Json::as_i64).filter(|&i| i > 0)
+                else {
+                    continue;
+                };
+                let id = id as u64;
+                match j.get("event").and_then(Json::as_str) {
+                    Some("submit") => {
+                        let Some(config) = j.get("config") else {
+                            continue;
+                        };
+                        max_id = max_id.max(id);
+                        jobs.insert(
+                            id,
+                            ReplayJob {
+                                id,
+                                config: config.clone(),
+                                outcome: None,
+                            },
+                        );
+                    }
+                    Some("done") => {
+                        if let (Some(job), Some(r)) =
+                            (jobs.get_mut(&id), j.get("result"))
+                        {
+                            job.outcome = Some(Outcome::Done(r.clone()));
+                        }
+                    }
+                    Some("failed") => {
+                        if let (Some(job), Some(e)) =
+                            (jobs.get_mut(&id), j.get("error"))
+                        {
+                            job.outcome =
+                                Some(Outcome::Failed(e.clone()));
+                        }
+                    }
+                    _ => {}
+                }
+            }
+        }
+        Ok(Replay {
+            jobs: jobs.into_values().collect(),
+            next_id: max_id + 1,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn temp_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "zmc_journal_{tag}_{}",
+            std::process::id()
+        ));
+        std::fs::remove_dir_all(&dir).ok();
+        dir
+    }
+
+    #[test]
+    fn round_trip_and_unfinished_detection() {
+        let dir = temp_dir("rt");
+        let j = Journal::open(&dir).unwrap();
+        let cfg = Json::parse(r#"{"seed": 7}"#).unwrap();
+        j.submitted(1, &cfg).unwrap();
+        j.done(1, &Json::parse(r#"{"trials":[]}"#).unwrap()).unwrap();
+        j.submitted(2, &cfg).unwrap();
+        j.failed(2, &Json::parse(r#"{"code":"error"}"#).unwrap())
+            .unwrap();
+        j.submitted(3, &cfg).unwrap(); // no terminal: died in flight
+        let replay = Journal::load(&dir).unwrap();
+        assert_eq!(replay.next_id, 4);
+        assert_eq!(replay.jobs.len(), 3);
+        assert!(matches!(replay.jobs[0].outcome, Some(Outcome::Done(_))));
+        assert!(matches!(
+            replay.jobs[1].outcome,
+            Some(Outcome::Failed(_))
+        ));
+        assert!(replay.jobs[2].outcome.is_none());
+        assert_eq!(
+            replay.jobs[2].config.get("seed").and_then(Json::as_i64),
+            Some(7)
+        );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn tolerates_truncated_tail_and_missing_file() {
+        let dir = temp_dir("tail");
+        let empty = Journal::load(&dir).unwrap();
+        assert_eq!(empty.next_id, 1);
+        assert!(empty.jobs.is_empty());
+
+        let j = Journal::open(&dir).unwrap();
+        j.submitted(5, &Json::parse("{}").unwrap()).unwrap();
+        // simulate a crash mid-append
+        let mut f = OpenOptions::new()
+            .append(true)
+            .open(dir.join(FILE_NAME))
+            .unwrap();
+        f.write_all(b"{\"v\":1,\"event\":\"done\",\"id\":5,\"res")
+            .unwrap();
+        drop(f);
+        let replay = Journal::load(&dir).unwrap();
+        assert_eq!(replay.jobs.len(), 1);
+        assert!(replay.jobs[0].outcome.is_none()); // still unfinished
+        assert_eq!(replay.next_id, 6);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,96 @@
+//! Per-client token-bucket rate limiting for the jobs endpoint.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Classic token bucket, one bucket per client key (the peer IP).
+/// Buckets start full at `burst` tokens, refill at `rate` tokens per
+/// second, and each admitted request costs one token; an empty bucket
+/// rejects with the whole-second wait until the next token — the 429
+/// response's `Retry-After` value.
+///
+/// Time is measured against the limiter's construction instant and
+/// injected into [`admit_at`](Self::admit_at) as plain seconds, so
+/// tests exercise refill arithmetic without sleeping.
+pub struct RateLimiter {
+    rate: f64,
+    burst: f64,
+    t0: Instant,
+    buckets: Mutex<HashMap<String, Bucket>>,
+}
+
+struct Bucket {
+    tokens: f64,
+    /// Seconds-since-`t0` of the last refill.
+    last: f64,
+}
+
+impl RateLimiter {
+    /// `rate` requests/second sustained, bursts up to `burst` (both
+    /// clamped to sane minima).
+    pub fn new(rate: f64, burst: f64) -> Self {
+        RateLimiter {
+            rate: rate.max(1e-9),
+            burst: burst.max(1.0),
+            t0: Instant::now(),
+            buckets: Mutex::new(HashMap::new()),
+        }
+    }
+
+    /// Admit or reject a request from `key` now. `Err(secs)` is the
+    /// suggested `Retry-After`.
+    pub fn admit(&self, key: &str) -> Result<(), u64> {
+        self.admit_at(key, self.t0.elapsed().as_secs_f64())
+    }
+
+    /// [`admit`](Self::admit) at an explicit time (seconds since the
+    /// limiter was built) — the test seam.
+    pub fn admit_at(&self, key: &str, now: f64) -> Result<(), u64> {
+        let mut buckets = self.buckets.lock().unwrap();
+        let b = buckets
+            .entry(key.to_string())
+            .or_insert(Bucket { tokens: self.burst, last: now });
+        b.tokens = (b.tokens + (now - b.last).max(0.0) * self.rate)
+            .min(self.burst);
+        b.last = now;
+        if b.tokens >= 1.0 {
+            b.tokens -= 1.0;
+            Ok(())
+        } else {
+            let wait = (1.0 - b.tokens) / self.rate;
+            Err((wait.ceil() as u64).max(1))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn burst_then_refill() {
+        let l = RateLimiter::new(1.0, 2.0);
+        assert!(l.admit_at("a", 0.0).is_ok());
+        assert!(l.admit_at("a", 0.0).is_ok());
+        // bucket empty: one token is a second away
+        assert_eq!(l.admit_at("a", 0.0), Err(1));
+        // half a second refills half a token -> still rejected
+        assert_eq!(l.admit_at("a", 0.5), Err(1));
+        // past one second of refill -> admitted again
+        assert!(l.admit_at("a", 1.6).is_ok());
+    }
+
+    #[test]
+    fn keys_are_independent_and_capped() {
+        let l = RateLimiter::new(0.5, 1.0);
+        assert!(l.admit_at("a", 0.0).is_ok());
+        // a different client has its own bucket
+        assert!(l.admit_at("b", 0.0).is_ok());
+        // retry-after reflects the slow rate: 1 token / 0.5 per sec
+        assert_eq!(l.admit_at("a", 0.0), Err(2));
+        // a long idle stretch never overfills past the burst cap
+        assert!(l.admit_at("a", 1e6).is_ok());
+        assert_eq!(l.admit_at("a", 1e6), Err(2));
+    }
+}

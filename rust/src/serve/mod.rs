@@ -1,0 +1,716 @@
+//! `zmc serve` — integration as a service: a versioned jobs-as-data
+//! wire API over one warm [`Session`].
+//!
+//! The paper's deployment story stops at a Python script per run; this
+//! module turns the repo's job files into a *service*. A hand-rolled
+//! HTTP/1.1 front end (no new dependencies — [`http`] is ~200 lines on
+//! `std::net`) exposes four routes:
+//!
+//! | route | does |
+//! |---|---|
+//! | `POST /v1/jobs` | submit a [`JobConfig`] JSON body; streams per-round/per-trial estimate frames as chunked JSON lines while the job runs, ending in a terminal `status` frame |
+//! | `GET /v1/jobs/{id}` | recall a job's status and (once finished) its result |
+//! | `GET /v1/metrics` | engine metrics + registry ledgers + server counters |
+//! | `GET /v1/healthz` | liveness + session topology |
+//!
+//! Every payload carries `"v": 1` — the same wire version as the job
+//! files themselves ([`crate::config::WIRE_VERSION`]) — and every
+//! estimate frame is the [`Estimate::to_json`] shape, so `zmc run
+//! --json` output, stream frames, and recalled results are one codec.
+//!
+//! All jobs run on **one** shared session: its registry, device
+//! workers, and executable caches stay warm across requests, which is
+//! the entire point of serving (the per-run session build the CLI pays
+//! is amortized to zero). Because the engine is deterministic, results
+//! are bit-identical to `zmc run` with the same config, at any
+//! `--workers`/`--engines` topology, under any request interleaving.
+//!
+//! Production edges: per-client token-bucket rate limiting
+//! ([`limiter`], 429 + `Retry-After`), admission control bounding
+//! concurrent jobs (429) and pending connections (503), a bounded
+//! worker pool with graceful drain on shutdown, and an append-only
+//! job journal ([`journal`]) that replays unfinished jobs on restart —
+//! deterministically reproducing the results a crash threw away.
+
+mod http;
+mod journal;
+mod limiter;
+mod router;
+
+pub use self::journal::{Journal, Outcome, Replay, ReplayJob};
+pub use self::limiter::RateLimiter;
+
+use std::collections::{BTreeMap, VecDeque};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::config::JobConfig;
+use crate::coordinator::progress::Metrics;
+use crate::runtime::ExecTier;
+use crate::session::{ErrorPayload, JobOutput, Session};
+use crate::util::json::Json;
+
+/// Everything `zmc serve` configures.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Bind address (`host:port`; port 0 picks a free one).
+    pub addr: String,
+    /// Device workers per engine of the shared session.
+    pub workers: usize,
+    /// Engines behind the shared session.
+    pub engines: usize,
+    /// Connection-handler threads; each runs at most one job at a
+    /// time, so this also caps streaming clients.
+    pub http_workers: usize,
+    /// Admitted jobs in flight; beyond it `POST /v1/jobs` answers 429
+    /// with `Retry-After`.
+    pub max_jobs: usize,
+    /// Accepted-but-unhandled connections; beyond it the acceptor
+    /// answers 503 immediately.
+    pub queue_cap: usize,
+    /// Per-client sustained job submissions per second (burst size
+    /// [`rate_burst`](Self::rate_burst)); `None` = unlimited.
+    pub rate_limit: Option<f64>,
+    pub rate_burst: f64,
+    /// Journal directory; `None` = no persistence, no restart replay.
+    pub state_dir: Option<PathBuf>,
+    /// Explicit artifact dir (strict load); `None` = `artifacts` with
+    /// emulator fallback, like the CLI.
+    pub artifacts: Option<String>,
+    /// Pin the session's emulator execution tier.
+    pub tier: Option<ExecTier>,
+    /// Request-body bound; larger submissions answer 413.
+    pub max_body: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            addr: "127.0.0.1:7311".into(),
+            workers: 1,
+            engines: 1,
+            http_workers: 4,
+            max_jobs: 2,
+            queue_cap: 16,
+            rate_limit: None,
+            rate_burst: 8.0,
+            state_dir: None,
+            artifacts: None,
+            tier: None,
+            max_body: 1 << 20,
+        }
+    }
+}
+
+/// Server-side request counters (engine metrics live on the session).
+#[derive(Debug, Default)]
+pub struct ServerMetrics {
+    pub accepted: AtomicU64,
+    pub done: AtomicU64,
+    pub failed: AtomicU64,
+    /// 429s from the concurrent-jobs bound.
+    pub rejected_busy: AtomicU64,
+    /// 429s from the per-client rate limiter.
+    pub rejected_rate: AtomicU64,
+    /// 503s from the connection-queue bound.
+    pub rejected_queue: AtomicU64,
+    pub bad_requests: AtomicU64,
+}
+
+impl ServerMetrics {
+    fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        let pairs: [(&str, &AtomicU64); 7] = [
+            ("accepted", &self.accepted),
+            ("done", &self.done),
+            ("failed", &self.failed),
+            ("rejected_busy", &self.rejected_busy),
+            ("rejected_rate", &self.rejected_rate),
+            ("rejected_queue", &self.rejected_queue),
+            ("bad_requests", &self.bad_requests),
+        ];
+        for (k, v) in pairs {
+            m.insert(
+                k.to_string(),
+                Json::Num(v.load(Ordering::Relaxed) as f64),
+            );
+        }
+        Json::Obj(m)
+    }
+}
+
+/// A job's lifecycle state as the API reports it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobStatus {
+    Running,
+    Done,
+    Failed,
+}
+
+impl JobStatus {
+    pub fn name(self) -> &'static str {
+        match self {
+            JobStatus::Running => "running",
+            JobStatus::Done => "done",
+            JobStatus::Failed => "failed",
+        }
+    }
+}
+
+/// Ledger entry behind `GET /v1/jobs/{id}`.
+pub(crate) struct JobEntry {
+    pub status: JobStatus,
+    pub result: Option<Json>,
+    pub error: Option<Json>,
+}
+
+/// Shared state of a running server: the warm session, the job
+/// ledger, and every production-edge mechanism.
+pub(crate) struct ServerState {
+    pub session: Session,
+    pub cfg: ServeConfig,
+    pub jobs: Mutex<BTreeMap<u64, JobEntry>>,
+    next_id: AtomicU64,
+    running: AtomicUsize,
+    pub limiter: Option<RateLimiter>,
+    pub journal: Option<Journal>,
+    pub metrics: ServerMetrics,
+}
+
+/// RAII token for one admitted job slot.
+pub(crate) struct JobSlot<'a>(&'a ServerState);
+
+impl Drop for JobSlot<'_> {
+    fn drop(&mut self) {
+        self.0.running.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+impl ServerState {
+    /// Claim a job slot; `None` = at the `max_jobs` bound (429).
+    pub(crate) fn try_admit(&self) -> Option<JobSlot<'_>> {
+        let cap = self.cfg.max_jobs.max(1);
+        self.running
+            .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |n| {
+                (n < cap).then_some(n + 1)
+            })
+            .ok()
+            .map(|_| JobSlot(self))
+    }
+
+    /// Register a freshly admitted job: ledger entry + journal record.
+    pub(crate) fn create_job(&self, config: &Json) -> u64 {
+        let id = self.next_id.fetch_add(1, Ordering::SeqCst);
+        self.jobs.lock().unwrap().insert(
+            id,
+            JobEntry {
+                status: JobStatus::Running,
+                result: None,
+                error: None,
+            },
+        );
+        self.metrics.accepted.fetch_add(1, Ordering::Relaxed);
+        if let Some(j) = &self.journal {
+            if let Err(e) = j.submitted(id, config) {
+                eprintln!("journal write failed for job {id}: {e:#}");
+            }
+        }
+        id
+    }
+
+    /// Run a parsed job to completion, streaming frames into `sink`
+    /// (round + final estimate frames, then the terminal status
+    /// frame), and record the outcome in the ledger and journal. Sink
+    /// errors never abort the computation — the journal still gets a
+    /// terminal record a restarted server can serve.
+    pub(crate) fn run_and_record(
+        &self,
+        id: u64,
+        cfg: &JobConfig,
+        sink: &mut dyn FnMut(&Json),
+    ) {
+        let outcome = self.session.run_job_observed(cfg, &mut |ev| {
+            for frame in ev.frames() {
+                sink(&with_id(frame, id));
+            }
+        });
+        match outcome {
+            Ok(out) => {
+                let result = result_json(&out);
+                if let Some(j) = &self.journal {
+                    if let Err(e) = j.done(id, &result) {
+                        eprintln!(
+                            "journal write failed for job {id}: {e:#}"
+                        );
+                    }
+                }
+                self.set_status(id, JobStatus::Done, Some(result), None);
+                self.metrics.done.fetch_add(1, Ordering::Relaxed);
+                sink(&status_frame(id, JobStatus::Done, None));
+            }
+            Err(err) => {
+                let payload = ErrorPayload::from_error(&err).to_json();
+                if let Some(j) = &self.journal {
+                    if let Err(e) = j.failed(id, &payload) {
+                        eprintln!(
+                            "journal write failed for job {id}: {e:#}"
+                        );
+                    }
+                }
+                self.set_status(
+                    id,
+                    JobStatus::Failed,
+                    None,
+                    Some(payload.clone()),
+                );
+                self.metrics.failed.fetch_add(1, Ordering::Relaxed);
+                sink(&status_frame(id, JobStatus::Failed, Some(payload)));
+            }
+        }
+    }
+
+    /// Re-run one journaled job that never reached a terminal record.
+    /// No client is attached, so frames go nowhere; the ledger and the
+    /// journal get the deterministic re-computed result.
+    fn replay_job(&self, job: &ReplayJob) {
+        match JobConfig::from_json(&job.config) {
+            Ok(cfg) => self.run_and_record(job.id, &cfg, &mut |_| {}),
+            Err(err) => {
+                let payload = ErrorPayload::from_error(&err).to_json();
+                if let Some(j) = &self.journal {
+                    let _ = j.failed(job.id, &payload);
+                }
+                self.set_status(
+                    job.id,
+                    JobStatus::Failed,
+                    None,
+                    Some(payload),
+                );
+                self.metrics.failed.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+
+    fn set_status(
+        &self,
+        id: u64,
+        status: JobStatus,
+        result: Option<Json>,
+        error: Option<Json>,
+    ) {
+        if let Some(entry) = self.jobs.lock().unwrap().get_mut(&id) {
+            entry.status = status;
+            entry.result = result;
+            entry.error = error;
+        }
+    }
+
+    /// The engine (or cluster) metrics of the shared session.
+    fn engine_metrics(&self) -> &Metrics {
+        match self.session.cluster() {
+            Some(c) => c.metrics(),
+            None => self.session.engine().metrics(),
+        }
+    }
+
+    /// `GET /v1/healthz` body.
+    pub(crate) fn healthz_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("v".to_string(), Json::Num(1.0));
+        m.insert("status".to_string(), Json::Str("ok".into()));
+        m.insert(
+            "engines".to_string(),
+            Json::Num(self.session.num_engines() as f64),
+        );
+        m.insert(
+            "workers".to_string(),
+            Json::Num(self.session.workers() as f64),
+        );
+        m.insert(
+            "tier".to_string(),
+            Json::Str(self.session.execution_tier().name().into()),
+        );
+        m.insert(
+            "jobs".to_string(),
+            Json::Num(self.jobs.lock().unwrap().len() as f64),
+        );
+        Json::Obj(m)
+    }
+
+    /// `GET /v1/metrics` body: server counters + engine metrics +
+    /// registry ledgers.
+    pub(crate) fn metrics_json(&self) -> Json {
+        let em = self.engine_metrics();
+        let mut engine = BTreeMap::new();
+        let counters: [(&str, u64); 8] = [
+            ("tasks_done", em.done()),
+            ("retries", em.retried()),
+            ("failures", em.failed()),
+            ("cancelled", em.cancelled()),
+            ("plan_hits", em.plan_hits()),
+            ("plan_misses", em.plan_misses()),
+            ("fused_hits", em.fused_hits()),
+            ("fused_misses", em.fused_misses()),
+        ];
+        for (k, v) in counters {
+            engine.insert(k.to_string(), Json::Num(v as f64));
+        }
+        engine.insert(
+            "utilization".to_string(),
+            Json::from_f64(em.utilization()),
+        );
+        let reg = self.session.registry();
+        let mut registry = BTreeMap::new();
+        let ledgers: [(&str, u64); 5] = [
+            ("compiles", reg.compile_count()),
+            ("plan_lowers", reg.plan_lower_count()),
+            ("plan_hits", reg.plan_hit_count()),
+            ("fused_lowers", reg.fused_lower_count()),
+            ("fused_hits", reg.fused_hit_count()),
+        ];
+        for (k, v) in ledgers {
+            registry.insert(k.to_string(), Json::Num(v as f64));
+        }
+        let mut m = BTreeMap::new();
+        m.insert("v".to_string(), Json::Num(1.0));
+        m.insert("server".to_string(), self.metrics.to_json());
+        m.insert("engine".to_string(), Json::Obj(engine));
+        m.insert("registry".to_string(), Json::Obj(registry));
+        Json::Obj(m)
+    }
+}
+
+/// Annotate a wire frame with the job id.
+fn with_id(frame: Json, id: u64) -> Json {
+    match frame {
+        Json::Obj(mut m) => {
+            m.insert("id".to_string(), Json::Num(id as f64));
+            Json::Obj(m)
+        }
+        other => other,
+    }
+}
+
+/// The stored/recalled result shape: `{"trials": [[estimate, ..], ..]}`.
+fn result_json(out: &JobOutput) -> Json {
+    let trials = out
+        .per_trial
+        .iter()
+        .map(|ests| {
+            Json::Arr(ests.iter().map(|e| e.to_json()).collect())
+        })
+        .collect();
+    let mut m = BTreeMap::new();
+    m.insert("trials".to_string(), Json::Arr(trials));
+    Json::Obj(m)
+}
+
+/// Terminal stream frame / recall skeleton:
+/// `{"v":1,"id":N,"status":..}` plus the error payload when failed.
+fn status_frame(id: u64, status: JobStatus, error: Option<Json>) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("v".to_string(), Json::Num(1.0));
+    m.insert("id".to_string(), Json::Num(id as f64));
+    m.insert("status".to_string(), Json::Str(status.name().into()));
+    if let Some(e) = error {
+        m.insert("error".to_string(), e);
+    }
+    Json::Obj(m)
+}
+
+/// `{"v":1,"error":{code,message}}` — the body of every non-200.
+pub(crate) fn error_body(payload: &ErrorPayload) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("v".to_string(), Json::Num(1.0));
+    m.insert("error".to_string(), payload.to_json());
+    Json::Obj(m)
+}
+
+/// Bounded handoff between the acceptor and the worker pool.
+struct ConnQueue {
+    inner: Mutex<(VecDeque<TcpStream>, bool)>,
+    cv: Condvar,
+    cap: usize,
+}
+
+impl ConnQueue {
+    fn new(cap: usize) -> Self {
+        ConnQueue {
+            inner: Mutex::new((VecDeque::new(), false)),
+            cv: Condvar::new(),
+            cap: cap.max(1),
+        }
+    }
+
+    /// `Err` hands the stream back when the queue is full or closed
+    /// (the acceptor answers 503 on it).
+    fn push(&self, s: TcpStream) -> Result<(), TcpStream> {
+        let mut g = self.inner.lock().unwrap();
+        if g.1 || g.0.len() >= self.cap {
+            return Err(s);
+        }
+        g.0.push_back(s);
+        self.cv.notify_one();
+        Ok(())
+    }
+
+    /// Block for the next connection; `None` = closed and drained.
+    fn pop(&self) -> Option<TcpStream> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if let Some(s) = g.0.pop_front() {
+                return Some(s);
+            }
+            if g.1 {
+                return None;
+            }
+            g = self.cv.wait(g).unwrap();
+        }
+    }
+
+    fn close(&self) {
+        self.inner.lock().unwrap().1 = true;
+        self.cv.notify_all();
+    }
+}
+
+/// A bound-but-not-yet-running server. [`bind`](Self::bind) resolves
+/// everything that can fail loudly (address, session, journal) before
+/// [`run`](Self::run) starts serving, so callers learn the actual
+/// port (`local_addr`) and can take a [`StopHandle`] first.
+pub struct Server {
+    listener: TcpListener,
+    state: Arc<ServerState>,
+    replays: Vec<ReplayJob>,
+    stop: Arc<AtomicBool>,
+}
+
+/// Signals a running server to stop accepting and drain.
+#[derive(Clone)]
+pub struct StopHandle(Arc<AtomicBool>);
+
+impl StopHandle {
+    pub fn stop(&self) {
+        self.0.store(true, Ordering::SeqCst);
+    }
+}
+
+impl Server {
+    /// Bind the listener, build the shared session, open the journal
+    /// and load its replay state.
+    pub fn bind(cfg: ServeConfig) -> Result<Server> {
+        let listener = TcpListener::bind(&cfg.addr)
+            .with_context(|| format!("binding {}", cfg.addr))?;
+        listener.set_nonblocking(true).context("nonblocking listener")?;
+
+        let mut b = Session::builder()
+            .workers(cfg.workers)
+            .engines(cfg.engines);
+        b = match &cfg.artifacts {
+            Some(dir) => b.artifacts(dir.clone()),
+            None => b.artifacts_or_emulator("artifacts"),
+        };
+        if let Some(t) = cfg.tier {
+            b = b.execution_tier(t);
+        }
+        let session = b.build()?;
+
+        let (journal, replay) = match &cfg.state_dir {
+            Some(dir) => {
+                (Some(Journal::open(dir)?), Journal::load(dir)?)
+            }
+            None => (None, Replay::default()),
+        };
+        let mut jobs = BTreeMap::new();
+        let mut replays = Vec::new();
+        for job in replay.jobs {
+            let entry = match &job.outcome {
+                Some(Outcome::Done(r)) => JobEntry {
+                    status: JobStatus::Done,
+                    result: Some(r.clone()),
+                    error: None,
+                },
+                Some(Outcome::Failed(e)) => JobEntry {
+                    status: JobStatus::Failed,
+                    result: None,
+                    error: Some(e.clone()),
+                },
+                None => {
+                    replays.push(job.clone());
+                    JobEntry {
+                        status: JobStatus::Running,
+                        result: None,
+                        error: None,
+                    }
+                }
+            };
+            jobs.insert(job.id, entry);
+        }
+
+        let limiter = cfg
+            .rate_limit
+            .map(|rate| RateLimiter::new(rate, cfg.rate_burst));
+        let state = Arc::new(ServerState {
+            session,
+            jobs: Mutex::new(jobs),
+            next_id: AtomicU64::new(replay.next_id.max(1)),
+            running: AtomicUsize::new(0),
+            limiter,
+            journal,
+            metrics: ServerMetrics::default(),
+            cfg,
+        });
+        Ok(Server {
+            listener,
+            state,
+            replays,
+            stop: Arc::new(AtomicBool::new(false)),
+        })
+    }
+
+    /// The bound address (reports the picked port for `:0` binds).
+    pub fn local_addr(&self) -> Result<SocketAddr> {
+        Ok(self.listener.local_addr()?)
+    }
+
+    pub fn stop_handle(&self) -> StopHandle {
+        StopHandle(Arc::clone(&self.stop))
+    }
+
+    /// Serve until [`StopHandle::stop`]: spawn the replay thread and
+    /// the worker pool, then accept connections into the bounded
+    /// queue. On stop the queue drains, workers finish their in-flight
+    /// jobs (journaling terminal records), and everything joins.
+    pub fn run(self) -> Result<()> {
+        let queue = Arc::new(ConnQueue::new(self.state.cfg.queue_cap));
+
+        let replay_thread = (!self.replays.is_empty()).then(|| {
+            let state = Arc::clone(&self.state);
+            let jobs = self.replays;
+            std::thread::spawn(move || {
+                for job in &jobs {
+                    state.replay_job(job);
+                }
+            })
+        });
+
+        let workers: Vec<_> = (0..self.state.cfg.http_workers.max(1))
+            .map(|_| {
+                let state = Arc::clone(&self.state);
+                let q = Arc::clone(&queue);
+                std::thread::spawn(move || {
+                    while let Some(stream) = q.pop() {
+                        router::handle_connection(&state, stream);
+                    }
+                })
+            })
+            .collect();
+
+        while !self.stop.load(Ordering::SeqCst) {
+            match self.listener.accept() {
+                Ok((stream, _)) => {
+                    if let Err(mut rejected) = queue.push(stream) {
+                        self.state
+                            .metrics
+                            .rejected_queue
+                            .fetch_add(1, Ordering::Relaxed);
+                        let _ = http::write_json(
+                            &mut rejected,
+                            503,
+                            &error_body(&ErrorPayload::new(
+                                "overloaded",
+                                "connection queue full",
+                            )),
+                        );
+                    }
+                }
+                Err(e)
+                    if e.kind() == std::io::ErrorKind::WouldBlock =>
+                {
+                    std::thread::sleep(Duration::from_millis(10));
+                }
+                Err(e) => {
+                    eprintln!("accept error: {e}");
+                    std::thread::sleep(Duration::from_millis(50));
+                }
+            }
+        }
+
+        queue.close();
+        for w in workers {
+            let _ = w.join();
+        }
+        if let Some(t) = replay_thread {
+            let _ = t.join();
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::integrator::spec::Estimate;
+
+    #[test]
+    fn wire_helpers_shape() {
+        let est = Estimate {
+            value: 0.5,
+            std_err: 0.01,
+            n_samples: 128,
+            rounds: 1,
+        };
+        let out = JobOutput {
+            per_trial: vec![vec![est], vec![est]],
+            normal: None,
+        };
+        let r = result_json(&out);
+        let trials = r.get("trials").and_then(Json::as_arr).unwrap();
+        assert_eq!(trials.len(), 2);
+        let back = Estimate::from_json(&trials[1].as_arr().unwrap()[0])
+            .unwrap();
+        assert_eq!(back, est);
+
+        let f = status_frame(9, JobStatus::Done, None);
+        assert_eq!(f.get("id").and_then(Json::as_i64), Some(9));
+        assert_eq!(f.get("status").and_then(Json::as_str), Some("done"));
+        assert_eq!(f.get("v").and_then(Json::as_i64), Some(1));
+        assert!(f.get("error").is_none());
+
+        let e = error_body(&ErrorPayload::new("bad_json", "nope"));
+        assert_eq!(
+            e.path(&["error", "code"]).and_then(Json::as_str),
+            Some("bad_json")
+        );
+
+        let tagged = with_id(Json::parse(r#"{"value":1}"#).unwrap(), 4);
+        assert_eq!(tagged.get("id").and_then(Json::as_i64), Some(4));
+    }
+
+    #[test]
+    fn conn_queue_bounds_and_close() {
+        let q = ConnQueue::new(1);
+        // no real connections needed to exercise close semantics
+        q.close();
+        assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn admission_is_bounded() {
+        let cfg = ServeConfig {
+            addr: "127.0.0.1:0".into(),
+            max_jobs: 1,
+            ..Default::default()
+        };
+        let srv = Server::bind(cfg).unwrap();
+        let slot = srv.state.try_admit().expect("first slot");
+        assert!(srv.state.try_admit().is_none(), "bound enforced");
+        drop(slot);
+        assert!(srv.state.try_admit().is_some(), "slot released");
+    }
+}

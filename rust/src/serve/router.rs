@@ -1,0 +1,227 @@
+//! Route dispatch: one connection in, one response (or stream) out.
+
+use std::io::BufReader;
+use std::net::TcpStream;
+
+use anyhow::Context;
+
+use crate::config::JobConfig;
+use crate::session::{validate_job, ErrorPayload};
+use crate::util::json::Json;
+
+use super::http::{self, ChunkedWriter, ReadError};
+use super::{error_body, status_frame, JobStatus, ServerState};
+
+use std::sync::atomic::Ordering;
+
+/// Handle one connection end to end. All I/O failures are swallowed:
+/// the peer is gone, and any in-flight job still reaches the ledger
+/// and journal through [`ServerState::run_and_record`].
+pub(crate) fn handle_connection(state: &ServerState, stream: TcpStream) {
+    let peer = stream
+        .peer_addr()
+        .map(|a| a.ip().to_string())
+        .unwrap_or_else(|_| "unknown".to_string());
+    let Ok(reader) = stream.try_clone() else { return };
+    let mut stream = stream;
+    let req = match http::read_request(
+        &mut BufReader::new(reader),
+        state.cfg.max_body,
+    ) {
+        Ok(req) => req,
+        Err(ReadError::Closed) | Err(ReadError::Io(_)) => return,
+        Err(ReadError::Bad(msg)) => {
+            state.metrics.bad_requests.fetch_add(1, Ordering::Relaxed);
+            let _ = http::write_json(
+                &mut stream,
+                400,
+                &error_body(&ErrorPayload::new("bad_request", msg)),
+            );
+            return;
+        }
+        Err(ReadError::TooLarge { limit }) => {
+            state.metrics.bad_requests.fetch_add(1, Ordering::Relaxed);
+            let _ = http::write_json(
+                &mut stream,
+                413,
+                &error_body(&ErrorPayload::new(
+                    "too_large",
+                    format!("request body exceeds {limit} bytes"),
+                )),
+            );
+            return;
+        }
+    };
+
+    let path = req.path.split('?').next().unwrap_or("");
+    match (req.method.as_str(), path) {
+        ("POST", "/v1/jobs") => post_job(state, stream, &req.body, &peer),
+        ("GET", p) if job_id(p).is_some() => {
+            get_job(state, stream, job_id(p).unwrap())
+        }
+        ("GET", "/v1/healthz") => {
+            let _ =
+                http::write_json(&mut stream, 200, &state.healthz_json());
+        }
+        ("GET", "/v1/metrics") => {
+            let _ =
+                http::write_json(&mut stream, 200, &state.metrics_json());
+        }
+        ("GET" | "POST", "/v1/jobs" | "/v1/healthz" | "/v1/metrics") => {
+            let _ = http::write_json(
+                &mut stream,
+                405,
+                &error_body(&ErrorPayload::new(
+                    "method_not_allowed",
+                    format!("{} not allowed on {path}", req.method),
+                )),
+            );
+        }
+        _ => {
+            let _ = http::write_json(
+                &mut stream,
+                404,
+                &error_body(&ErrorPayload::new(
+                    "not_found",
+                    format!("no route {path}"),
+                )),
+            );
+        }
+    }
+}
+
+/// `/v1/jobs/{id}` → `Some(id)`.
+fn job_id(path: &str) -> Option<u64> {
+    path.strip_prefix("/v1/jobs/")?.parse().ok()
+}
+
+/// `POST /v1/jobs`: rate limit → admission → parse+validate → stream.
+fn post_job(
+    state: &ServerState,
+    mut stream: TcpStream,
+    body: &[u8],
+    peer: &str,
+) {
+    if let Some(limiter) = &state.limiter {
+        if let Err(wait) = limiter.admit(peer) {
+            state.metrics.rejected_rate.fetch_add(1, Ordering::Relaxed);
+            let _ = http::write_json_with(
+                &mut stream,
+                429,
+                &[("retry-after", wait.to_string())],
+                &error_body(&ErrorPayload::new(
+                    "rate_limited",
+                    format!("client {peer} over the submission rate"),
+                )),
+            );
+            return;
+        }
+    }
+    let Some(_slot) = state.try_admit() else {
+        state.metrics.rejected_busy.fetch_add(1, Ordering::Relaxed);
+        let _ = http::write_json_with(
+            &mut stream,
+            429,
+            &[("retry-after", "1".to_string())],
+            &error_body(&ErrorPayload::new(
+                "busy",
+                format!(
+                    "{} jobs already in flight",
+                    state.cfg.max_jobs.max(1)
+                ),
+            )),
+        );
+        return;
+    };
+
+    // Everything that can be rejected is rejected before the 200:
+    // once the chunked stream starts, the job runs to a terminal frame.
+    let parsed = std::str::from_utf8(body)
+        .context("request body is not utf-8")
+        .and_then(|text| Ok(Json::parse(text)?))
+        .and_then(|j| Ok((JobConfig::from_json(&j)?, j)));
+    let (cfg, raw) = match parsed {
+        Ok(pair) => pair,
+        Err(err) => {
+            state.metrics.bad_requests.fetch_add(1, Ordering::Relaxed);
+            let _ = http::write_json(
+                &mut stream,
+                400,
+                &error_body(&ErrorPayload::from_error(&err)),
+            );
+            return;
+        }
+    };
+    if let Err(err) = validate_job(&cfg) {
+        state.metrics.bad_requests.fetch_add(1, Ordering::Relaxed);
+        let _ = http::write_json(
+            &mut stream,
+            400,
+            &error_body(&ErrorPayload::from_error(&err)),
+        );
+        return;
+    }
+
+    let id = state.create_job(&raw);
+    let mut cw = match ChunkedWriter::start(stream) {
+        Ok(cw) => cw,
+        Err(_) => {
+            // Peer vanished between accept and headers: the job was
+            // journaled, so run it anyway and record the outcome.
+            state.run_and_record(id, &cfg, &mut |_| {});
+            return;
+        }
+    };
+    let mut live = cw
+        .write_line(&status_frame(id, JobStatus::Running, None))
+        .is_ok();
+    state.run_and_record(id, &cfg, &mut |frame| {
+        if live {
+            live = cw.write_line(frame).is_ok();
+        }
+    });
+    if live {
+        let _ = cw.finish();
+    }
+}
+
+/// `GET /v1/jobs/{id}`: status for running jobs, full result or error
+/// payload for finished ones.
+fn get_job(state: &ServerState, mut stream: TcpStream, id: u64) {
+    let entry = state
+        .jobs
+        .lock()
+        .unwrap()
+        .get(&id)
+        .map(|e| (e.status, e.result.clone(), e.error.clone()));
+    let Some((status, result, error)) = entry else {
+        let _ = http::write_json(
+            &mut stream,
+            404,
+            &error_body(&ErrorPayload::new(
+                "not_found",
+                format!("no job {id}"),
+            )),
+        );
+        return;
+    };
+    let mut body = status_frame(id, status, error);
+    if let (Json::Obj(m), Some(r)) = (&mut body, result) {
+        m.insert("result".to_string(), r);
+    }
+    let _ = http::write_json(&mut stream, 200, &body);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn job_id_parsing() {
+        assert_eq!(job_id("/v1/jobs/17"), Some(17));
+        assert_eq!(job_id("/v1/jobs/"), None);
+        assert_eq!(job_id("/v1/jobs/x"), None);
+        assert_eq!(job_id("/v1/jobs"), None);
+        assert_eq!(job_id("/v1/metrics"), None);
+    }
+}

@@ -1,0 +1,417 @@
+//! Class-independent job execution: run a parsed
+//! [`JobConfig`](crate::config::JobConfig) on a [`Session`], streaming
+//! progress events.
+//!
+//! The CLI's `zmc run` (plain and `--json`) and the server's
+//! `POST /v1/jobs` stream are the same computation over the same wire
+//! schema; this module is that one computation. [`Session::run_job`]
+//! dispatches a config to the class builders with the *exact*
+//! submit/wait choreography of the module-level free functions —
+//! non-adaptive trials submit up front and are awaited in order,
+//! adaptive trials run sequentially on consecutive trial ids — so the
+//! estimates are bit-identical to every other entry point.
+//! [`Session::run_job_observed`] additionally surfaces a [`JobEvent`]
+//! after every adaptive round and every finished trial; observers see
+//! pure snapshots ([`crate::adaptive::RoundObserver`]) and can never
+//! perturb the result.
+
+use anyhow::Result;
+
+use crate::adaptive;
+use crate::config::{JobClass, JobConfig};
+use crate::integrator::functional;
+use crate::integrator::multifunctions::{self, MultiConfig, MultiHandle};
+use crate::integrator::normal::NormalResult;
+use crate::integrator::spec::Estimate;
+use crate::util::json::Json;
+
+use super::multi::validate_multi_config;
+use super::{Error, Session};
+
+/// Everything a finished job produced.
+#[derive(Debug, Clone)]
+pub struct JobOutput {
+    /// `per_trial[t][i]` is function (or grid point) `i` of trial `t`.
+    /// The normal class contributes one trial with one estimate.
+    pub per_trial: Vec<Vec<Estimate>>,
+    /// Tree-search diagnostics (`"class": "normal"` only).
+    pub normal: Option<NormalResult>,
+}
+
+/// One progress event of a running job. Borrows the runner's estimate
+/// buffers; call [`frames`](Self::frames) (or clone) to keep data.
+#[derive(Debug, Clone, Copy)]
+pub enum JobEvent<'a> {
+    /// An adaptive round finished (pilot = round 1): the current
+    /// per-function snapshot. Only the multifunctions class with an
+    /// error target emits these.
+    Round { trial: u32, round: u32, estimates: &'a [Estimate] },
+    /// A trial finished; `estimates` are final for this trial.
+    Trial { trial: u32, estimates: &'a [Estimate] },
+}
+
+impl JobEvent<'_> {
+    /// The event as wire frames: one JSON object per function, the
+    /// [`Estimate::to_json`] shape annotated with `fn`/`trial` and
+    /// either `round` (in-flight snapshot) or `"final": true`
+    /// (finished trial). `zmc run --json` prints these one per line;
+    /// the server streams them as chunked lines with a job `id` added.
+    pub fn frames(&self) -> Vec<Json> {
+        let annotate = |estimates: &[Estimate],
+                        trial: u32,
+                        extra: (&str, Json)| {
+            estimates
+                .iter()
+                .enumerate()
+                .map(|(i, e)| {
+                    let Json::Obj(mut m) = e.to_json() else {
+                        unreachable!("Estimate::to_json is an object");
+                    };
+                    m.insert("fn".to_string(), Json::Num(i as f64));
+                    m.insert("trial".to_string(), Json::Num(trial as f64));
+                    m.insert(extra.0.to_string(), extra.1.clone());
+                    Json::Obj(m)
+                })
+                .collect()
+        };
+        match *self {
+            JobEvent::Round { trial, round, estimates } => annotate(
+                estimates,
+                trial,
+                ("round", Json::Num(round as f64)),
+            ),
+            JobEvent::Trial { trial, estimates } => {
+                annotate(estimates, trial, ("final", Json::Bool(true)))
+            }
+        }
+    }
+}
+
+/// Pre-flight checks shared by [`Session::run_job`] and the server's
+/// 400 path: class-inapplicable options, sampling rules, tree-search
+/// trial minima — every violation a config can carry surfaces here as
+/// a typed [`Error`] *before* any launch is submitted or any response
+/// byte is streamed.
+pub fn validate_job(cfg: &JobConfig) -> Result<()> {
+    if !matches!(cfg.class, JobClass::Multifunctions)
+        && (cfg.target_rel_err.is_some() || cfg.target_abs_err.is_some())
+    {
+        return Err(Error::InapplicableOption {
+            option: "target_rel_err/target_abs_err",
+            class: cfg.class.name(),
+        }
+        .into());
+    }
+    match &cfg.class {
+        JobClass::Multifunctions | JobClass::Functional { .. } => {
+            validate_multi_config(&multi_config(cfg))
+        }
+        JobClass::Normal(p) => {
+            if cfg.trials > 1 {
+                return Err(Error::InapplicableOption {
+                    option: "trials",
+                    class: "normal",
+                }
+                .into());
+            }
+            if p.n_trials < 2 {
+                return Err(
+                    Error::TooFewTrials { got: p.n_trials }.into()
+                );
+            }
+            Ok(())
+        }
+    }
+}
+
+/// The multifunction/functional sampling config a job file resolves
+/// to. `max_rounds: None` keeps the [`MultiConfig`] default, matching
+/// what the fluent builders do when the knob is untouched.
+fn multi_config(cfg: &JobConfig) -> MultiConfig {
+    let defaults = MultiConfig::default();
+    MultiConfig {
+        samples_per_fn: cfg.samples_per_fn,
+        seed: cfg.seed,
+        target_rel_err: cfg.target_rel_err,
+        target_abs_err: cfg.target_abs_err,
+        max_rounds: cfg.max_rounds.unwrap_or(defaults.max_rounds),
+        num_engines: cfg.num_engines,
+        ..defaults
+    }
+}
+
+impl Session {
+    /// Run a job file on this session; estimates are bit-identical to
+    /// the class builders (and free functions) with the same config.
+    /// Class-inapplicable fields are typed
+    /// [`Error::InapplicableOption`]s, raised before any launch.
+    pub fn run_job(&self, cfg: &JobConfig) -> Result<JobOutput> {
+        self.run_job_observed(cfg, &mut |_| {})
+    }
+
+    /// [`run_job`](Self::run_job) with a progress observer: called
+    /// after every adaptive round and every finished trial. Observing
+    /// never changes the returned estimates.
+    pub fn run_job_observed(
+        &self,
+        cfg: &JobConfig,
+        observe: &mut dyn FnMut(JobEvent<'_>),
+    ) -> Result<JobOutput> {
+        validate_job(cfg)?;
+        match &cfg.class {
+            JobClass::Multifunctions => {
+                let mcfg = multi_config(cfg);
+                let per_trial = if mcfg.is_adaptive() {
+                    self.run_adaptive_trials(cfg, &mcfg, observe)?
+                } else {
+                    // mirror integrate_trials: submit every trial up
+                    // front, await in order
+                    let handles: Vec<MultiHandle> = (0..cfg.trials)
+                        .map(|t| {
+                            let c = MultiConfig {
+                                trial: mcfg.trial + t,
+                                ..mcfg.clone()
+                            };
+                            multifunctions::submit(
+                                self.exec(),
+                                &cfg.jobs,
+                                &c,
+                            )
+                        })
+                        .collect::<Result<_>>()?;
+                    wait_trials(handles, observe)?
+                };
+                Ok(JobOutput { per_trial, normal: None })
+            }
+            JobClass::Functional { axes } => {
+                let mcfg = multi_config(cfg);
+                let points = functional::grid(axes);
+                let handles: Vec<MultiHandle> = (0..cfg.trials)
+                    .map(|t| {
+                        let c = MultiConfig {
+                            trial: mcfg.trial + t,
+                            ..mcfg.clone()
+                        };
+                        self.functional(&cfg.jobs[0], &points)
+                            .config(c)
+                            .submit()
+                    })
+                    .collect::<Result<_>>()?;
+                Ok(JobOutput {
+                    per_trial: wait_trials(handles, observe)?,
+                    normal: None,
+                })
+            }
+            JobClass::Normal(p) => {
+                let result = self
+                    .normal(&cfg.jobs[0])
+                    .divisions(p.divisions)
+                    .trials(p.n_trials)
+                    .sigma_mult(p.sigma_mult)
+                    .depth(p.depth)
+                    .max_split_dims(p.max_split_dims)
+                    .seed(cfg.seed)
+                    .run()?;
+                let ests = vec![result.estimate];
+                observe(JobEvent::Trial { trial: 0, estimates: &ests });
+                Ok(JobOutput {
+                    per_trial: vec![ests],
+                    normal: Some(result),
+                })
+            }
+        }
+    }
+
+    /// The adaptive arm of the multifunctions class: trials run
+    /// sequentially on consecutive trial ids (exactly
+    /// `integrate_trials`' choreography), each through the observed
+    /// driver so every round streams.
+    fn run_adaptive_trials(
+        &self,
+        cfg: &JobConfig,
+        mcfg: &MultiConfig,
+        observe: &mut dyn FnMut(JobEvent<'_>),
+    ) -> Result<Vec<Vec<Estimate>>> {
+        let mut per_trial = Vec::with_capacity(cfg.trials as usize);
+        for t in 0..cfg.trials {
+            let c = MultiConfig { trial: mcfg.trial + t, ..mcfg.clone() };
+            let mut on_round = |round: usize, snap: &[Estimate]| {
+                observe(JobEvent::Round {
+                    trial: t,
+                    round: round as u32,
+                    estimates: snap,
+                });
+            };
+            let ests = adaptive::integrate_observed(
+                self.exec(),
+                &cfg.jobs,
+                &c,
+                &mut on_round,
+            )?;
+            observe(JobEvent::Trial { trial: t, estimates: &ests });
+            per_trial.push(ests);
+        }
+        Ok(per_trial)
+    }
+}
+
+/// Await submitted trial handles in submission order, emitting a
+/// [`JobEvent::Trial`] per finished trial.
+fn wait_trials(
+    handles: Vec<MultiHandle>,
+    observe: &mut dyn FnMut(JobEvent<'_>),
+) -> Result<Vec<Vec<Estimate>>> {
+    let mut per_trial = Vec::with_capacity(handles.len());
+    for (t, h) in handles.into_iter().enumerate() {
+        let ests = h.wait()?;
+        observe(JobEvent::Trial {
+            trial: t as u32,
+            estimates: &ests,
+        });
+        per_trial.push(ests);
+    }
+    Ok(per_trial)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::JobConfig;
+
+    fn session() -> Session {
+        Session::builder().emulated().build().unwrap()
+    }
+
+    #[test]
+    fn class_checks_are_typed() {
+        let s = session();
+        let mut cfg = JobConfig::from_json_text(
+            &JobConfig::example_json_functional(),
+        )
+        .unwrap();
+        cfg.target_rel_err = Some(0.01);
+        let err = s.run_job(&cfg).unwrap_err();
+        assert!(matches!(
+            err.downcast_ref::<Error>(),
+            Some(Error::InapplicableOption {
+                class: "functional",
+                ..
+            })
+        ));
+        let mut cfg =
+            JobConfig::from_json_text(&JobConfig::example_json_normal())
+                .unwrap();
+        cfg.trials = 3;
+        let err = s.run_job(&cfg).unwrap_err();
+        assert!(matches!(
+            err.downcast_ref::<Error>(),
+            Some(Error::InapplicableOption {
+                option: "trials",
+                class: "normal",
+            })
+        ));
+    }
+
+    #[test]
+    fn multifunctions_job_matches_builder() {
+        let s = session();
+        let mut cfg =
+            JobConfig::from_json_text(&JobConfig::example_json()).unwrap();
+        cfg.samples_per_fn = 1 << 10;
+        cfg.trials = 2;
+        let out = s.run_job(&cfg).unwrap();
+        assert_eq!(out.per_trial.len(), 2);
+        assert!(out.normal.is_none());
+        let want = s
+            .multifunctions(&cfg.jobs)
+            .samples(cfg.samples_per_fn)
+            .seed(cfg.seed)
+            .run_trials(2)
+            .unwrap();
+        assert_eq!(out.per_trial, want);
+    }
+
+    #[test]
+    fn adaptive_job_streams_rounds_and_matches_builder() {
+        let s = session();
+        let mut cfg =
+            JobConfig::from_json_text(&JobConfig::example_json()).unwrap();
+        cfg.samples_per_fn = 1 << 12;
+        cfg.trials = 1;
+        cfg.target_rel_err = Some(0.05);
+        let mut rounds = 0usize;
+        let mut last: Vec<Estimate> = vec![];
+        let mut finals = 0usize;
+        let out = s
+            .run_job_observed(&cfg, &mut |ev| match ev {
+                JobEvent::Round { estimates, .. } => {
+                    rounds += 1;
+                    last = estimates.to_vec();
+                }
+                JobEvent::Trial { .. } => finals += 1,
+            })
+            .unwrap();
+        assert!(rounds >= 1, "at least the pilot streams");
+        assert_eq!(finals, 1);
+        // the last observed snapshot IS the final result
+        assert_eq!(last, out.per_trial[0]);
+        // and the whole run matches the fluent builder bit-for-bit
+        let want = s
+            .multifunctions(&cfg.jobs)
+            .samples(cfg.samples_per_fn)
+            .seed(cfg.seed)
+            .target_rel_err(0.05)
+            .run()
+            .unwrap();
+        assert_eq!(out.per_trial[0], want);
+    }
+
+    #[test]
+    fn functional_and_normal_jobs_run() {
+        let s = session();
+        let mut cfg = JobConfig::from_json_text(
+            &JobConfig::example_json_functional(),
+        )
+        .unwrap();
+        cfg.samples_per_fn = 1 << 10;
+        let out = s.run_job(&cfg).unwrap();
+        assert_eq!(out.per_trial.len(), 1);
+        assert_eq!(out.per_trial[0].len(), 8); // 4 x 2 grid
+        let cfg =
+            JobConfig::from_json_text(&JobConfig::example_json_normal())
+                .unwrap();
+        let out = s.run_job(&cfg).unwrap();
+        let n = out.normal.expect("tree diagnostics");
+        assert_eq!(out.per_trial[0][0], n.estimate);
+    }
+
+    #[test]
+    fn event_frames_follow_the_wire_shape() {
+        let e = Estimate {
+            value: 1.5,
+            std_err: 0.25,
+            n_samples: 64,
+            rounds: 2,
+        };
+        let ests = [e, e];
+        let frames =
+            JobEvent::Round { trial: 3, round: 2, estimates: &ests }
+                .frames();
+        assert_eq!(frames.len(), 2);
+        assert_eq!(frames[1].get("fn").and_then(Json::as_i64), Some(1));
+        assert_eq!(
+            frames[1].get("trial").and_then(Json::as_i64),
+            Some(3)
+        );
+        assert_eq!(
+            frames[1].get("round").and_then(Json::as_i64),
+            Some(2)
+        );
+        assert!(frames[1].get("final").is_none());
+        assert_eq!(Estimate::from_json(&frames[0]).unwrap(), e);
+        let fin =
+            JobEvent::Trial { trial: 0, estimates: &ests }.frames();
+        assert!(matches!(fin[0].get("final"), Some(Json::Bool(true))));
+        assert!(fin[0].get("round").is_none());
+    }
+}

@@ -64,11 +64,13 @@ use crate::runtime::ExecTier;
 
 mod functional;
 mod harmonic;
+mod job;
 mod multi;
 mod normal;
 
 pub use self::functional::FunctionalBuilder;
 pub use self::harmonic::HarmonicBuilder;
+pub use self::job::{validate_job, JobEvent, JobOutput};
 pub use self::multi::MultiBuilder;
 pub use self::normal::NormalBuilder;
 
@@ -111,6 +113,33 @@ pub enum Error {
         /// The configured trial count.
         got: u32,
     },
+    /// A job-config field that does not apply to the job's class
+    /// (e.g. error targets outside the multifunctions class).
+    InapplicableOption {
+        /// The offending option, in job-file spelling.
+        option: &'static str,
+        /// The class it does not apply to.
+        class: &'static str,
+    },
+}
+
+impl Error {
+    /// Stable machine-readable code for this variant — the `"code"`
+    /// field of the JSON [`ErrorPayload`] the CLI's `--json` exit path
+    /// and the server's 4xx bodies emit. Codes are API: they never
+    /// change meaning, clients switch on them instead of parsing the
+    /// prose `Display` text.
+    pub fn code(&self) -> &'static str {
+        match self {
+            Error::ZeroSamples => "zero_samples",
+            Error::ConflictingTargets => "conflicting_targets",
+            Error::InvalidTarget { .. } => "invalid_target",
+            Error::DimMismatch { .. } => "dim_mismatch",
+            Error::TooManyParams { .. } => "too_many_params",
+            Error::TooFewTrials { .. } => "too_few_trials",
+            Error::InapplicableOption { .. } => "inapplicable_option",
+        }
+    }
 }
 
 impl std::fmt::Display for Error {
@@ -143,11 +172,80 @@ impl std::fmt::Display for Error {
                 "n_trials must be >= 2 for the variance heuristic \
                  (got {got})"
             ),
+            Error::InapplicableOption { option, class } => write!(
+                f,
+                "'{option}' does not apply to the {class} class"
+            ),
         }
     }
 }
 
 impl std::error::Error for Error {}
+
+/// The one JSON error shape clients see: `{"code", "message"}`. The
+/// CLI's `--json` failure exit and every server 4xx/5xx body carry it,
+/// so clients switch on the stable `code` instead of parsing prose.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ErrorPayload {
+    /// Stable machine-readable code ([`Error::code`] for builder
+    /// errors; `"unsupported_version"`, `"bad_json"`, `"error"`, and
+    /// the server's own codes otherwise).
+    pub code: String,
+    /// Human-readable description (the full `anyhow` context chain).
+    pub message: String,
+}
+
+impl ErrorPayload {
+    pub fn new(
+        code: impl Into<String>,
+        message: impl Into<String>,
+    ) -> Self {
+        ErrorPayload { code: code.into(), message: message.into() }
+    }
+
+    /// Classify an `anyhow` error into a payload: typed errors keep
+    /// their stable code (recovered with `downcast_ref` through any
+    /// context wrapping), everything else falls back to `"error"`.
+    pub fn from_error(err: &anyhow::Error) -> Self {
+        let code = if let Some(e) = err.downcast_ref::<Error>() {
+            e.code()
+        } else if err.is::<crate::config::UnsupportedVersion>() {
+            "unsupported_version"
+        } else if err.is::<crate::util::json::JsonError>() {
+            "bad_json"
+        } else {
+            "error"
+        };
+        ErrorPayload { code: code.into(), message: format!("{err:#}") }
+    }
+
+    /// Wire codec: `{"code": .., "message": ..}`.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("code".to_string(), Json::Str(self.code.clone()));
+        m.insert("message".to_string(), Json::Str(self.message.clone()));
+        Json::Obj(m)
+    }
+
+    /// Parse the [`to_json`](Self::to_json) shape.
+    pub fn from_json(j: &crate::util::json::Json) -> Result<Self> {
+        use crate::util::json::Json;
+        use anyhow::Context as _;
+        Ok(ErrorPayload {
+            code: j
+                .get("code")
+                .and_then(Json::as_str)
+                .context("error payload missing 'code'")?
+                .to_string(),
+            message: j
+                .get("message")
+                .and_then(Json::as_str)
+                .context("error payload missing 'message'")?
+                .to_string(),
+        })
+    }
+}
 
 /// The execution surface a session owns: a single persistent engine
 /// or a cluster of them, both behind [`LaunchExec`].
@@ -470,6 +568,66 @@ mod tests {
             .to_string()
             .contains("2 parameter(s)"));
         assert!(Error::TooFewTrials { got: 1 }.to_string().contains(">= 2"));
+    }
+
+    #[test]
+    fn error_codes_are_stable() {
+        let cases: [(Error, &str); 7] = [
+            (Error::ZeroSamples, "zero_samples"),
+            (Error::ConflictingTargets, "conflicting_targets"),
+            (Error::InvalidTarget { value: -1.0 }, "invalid_target"),
+            (Error::DimMismatch { expected: 2, got: 1 }, "dim_mismatch"),
+            (
+                Error::TooManyParams { max: 16, got: 17 },
+                "too_many_params",
+            ),
+            (Error::TooFewTrials { got: 1 }, "too_few_trials"),
+            (
+                Error::InapplicableOption {
+                    option: "trials",
+                    class: "normal",
+                },
+                "inapplicable_option",
+            ),
+        ];
+        for (err, code) in cases {
+            assert_eq!(err.code(), code);
+        }
+    }
+
+    #[test]
+    fn error_payload_classifies_and_round_trips() {
+        // a typed session error keeps its code through context
+        let err: anyhow::Error = Error::ZeroSamples.into();
+        let err = err.context("while validating");
+        let p = ErrorPayload::from_error(&err);
+        assert_eq!(p.code, "zero_samples");
+        assert!(p.message.contains("while validating"));
+
+        // an unknown-version config error is typed too
+        let err = crate::config::JobConfig::from_json_text(
+            r#"{"v": 9, "functions": []}"#,
+        )
+        .unwrap_err();
+        assert_eq!(
+            ErrorPayload::from_error(&err).code,
+            "unsupported_version"
+        );
+
+        // malformed JSON types as bad_json
+        let err =
+            crate::config::JobConfig::from_json_text("{nope").unwrap_err();
+        assert_eq!(ErrorPayload::from_error(&err).code, "bad_json");
+
+        // untyped errors fall back to "error"
+        let plain = anyhow::anyhow!("something else");
+        assert_eq!(ErrorPayload::from_error(&plain).code, "error");
+
+        // codec round trip
+        let p = ErrorPayload::new("queue_full", "try later \"soon\"");
+        let j = crate::util::json::Json::parse(&p.to_json().to_string())
+            .unwrap();
+        assert_eq!(ErrorPayload::from_json(&j).unwrap(), p);
     }
 
     #[test]

@@ -96,6 +96,42 @@ impl Json {
         }
         Some(cur)
     }
+
+    // ---- lossless f64 wire encoding -------------------------------------
+
+    /// Encode an `f64` losslessly for the wire: finite values become
+    /// JSON numbers (the serializer prints the shortest round-tripping
+    /// decimal, so every finite bit pattern survives, including
+    /// `-0.0`), non-finite values become the string tokens `"NaN"` /
+    /// `"inf"` / `"-inf"` — JSON has no number syntax for them. Decode
+    /// with [`Json::wire_f64`]. NaN payload bits collapse to the
+    /// canonical quiet NaN on the way back.
+    pub fn from_f64(v: f64) -> Json {
+        if v.is_finite() {
+            Json::Num(v)
+        } else if v.is_nan() {
+            Json::Str("NaN".into())
+        } else if v > 0.0 {
+            Json::Str("inf".into())
+        } else {
+            Json::Str("-inf".into())
+        }
+    }
+
+    /// Decode a [`Json::from_f64`] value: a plain number or one of the
+    /// non-finite string tokens.
+    pub fn wire_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(n) => Some(*n),
+            Json::Str(s) => match s.as_str() {
+                "NaN" => Some(f64::NAN),
+                "inf" => Some(f64::INFINITY),
+                "-inf" => Some(f64::NEG_INFINITY),
+                _ => None,
+            },
+            _ => None,
+        }
+    }
 }
 
 #[derive(Debug, Clone)]
@@ -322,7 +358,11 @@ impl fmt::Display for Json {
             Json::Null => write!(f, "null"),
             Json::Bool(b) => write!(f, "{b}"),
             Json::Num(n) => {
-                if n.fract() == 0.0 && n.abs() < 9e15 {
+                if *n == 0.0 && n.is_sign_negative() {
+                    // "-0" keeps the sign bit; the integer path below
+                    // would print "0" and lose it on re-parse
+                    write!(f, "-0")
+                } else if n.fract() == 0.0 && n.abs() < 9e15 {
                     write!(f, "{}", *n as i64)
                 } else {
                     write!(f, "{n}")
@@ -420,6 +460,42 @@ mod tests {
         let v = Json::parse(src).unwrap();
         let v2 = Json::parse(&v.to_string()).unwrap();
         assert_eq!(v, v2);
+    }
+
+    #[test]
+    fn negative_zero_keeps_its_sign() {
+        assert_eq!(Json::Num(-0.0).to_string(), "-0");
+        let back = Json::parse("-0").unwrap().as_f64().unwrap();
+        assert!(back == 0.0 && back.is_sign_negative());
+        assert_eq!(Json::Num(0.0).to_string(), "0");
+    }
+
+    #[test]
+    fn f64_wire_tokens() {
+        assert_eq!(Json::from_f64(f64::NAN).to_string(), "\"NaN\"");
+        assert_eq!(Json::from_f64(f64::INFINITY).to_string(), "\"inf\"");
+        assert_eq!(
+            Json::from_f64(f64::NEG_INFINITY).to_string(),
+            "\"-inf\""
+        );
+        assert_eq!(Json::from_f64(1.5), Json::Num(1.5));
+        assert!(Json::Str("garbage".into()).wire_f64().is_none());
+        assert!(Json::Null.wire_f64().is_none());
+    }
+
+    #[test]
+    fn f64_wire_roundtrip_bits() {
+        crate::util::proptest::check(0xB17E, 2000, |g| {
+            let v = f64::from_bits(g.next_u64());
+            let parsed =
+                Json::parse(&Json::from_f64(v).to_string()).unwrap();
+            let back = parsed.wire_f64().unwrap();
+            if v.is_nan() {
+                assert!(back.is_nan());
+            } else {
+                assert_eq!(back.to_bits(), v.to_bits(), "{v:?}");
+            }
+        });
     }
 
     #[test]

@@ -43,7 +43,7 @@ fn help_lists_commands() {
     let out = zmc().arg("help").output().unwrap();
     assert!(out.status.success());
     let text = String::from_utf8_lossy(&out.stdout);
-    for cmd in ["integrate", "fig1", "normal", "scan", "run"] {
+    for cmd in ["integrate", "fig1", "normal", "scan", "run", "serve"] {
         assert!(text.contains(cmd), "help missing '{cmd}'");
     }
 }
@@ -225,6 +225,56 @@ fn init_config_then_run() {
     assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
     let text = String::from_utf8_lossy(&out.stdout);
     assert!(text.contains("2 functions x 2 trials"));
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn run_json_streams_wire_frames() {
+    if !device_ok() {
+        return;
+    }
+    let dir = std::env::temp_dir().join(format!(
+        "zmc_cli_json_{}",
+        std::process::id()
+    ));
+    std::fs::create_dir_all(&dir).unwrap();
+    let cfg = dir.join("job.json");
+    let out = zmc()
+        .args(["init-config", cfg.to_str().unwrap()])
+        .output()
+        .unwrap();
+    assert!(out.status.success());
+    let text = std::fs::read_to_string(&cfg)
+        .unwrap()
+        .replace("262144", "8192")
+        .replace("\"trials\": 10", "\"trials\": 2");
+    std::fs::write(&cfg, text).unwrap();
+    let out = zmc()
+        .args(with_artifacts(&[
+            "run",
+            "--config",
+            cfg.to_str().unwrap(),
+            "--json",
+        ]))
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    let lines: Vec<&str> = text.lines().collect();
+    // every stdout line is one wire frame; nothing human-formatted leaks
+    for l in &lines {
+        assert!(l.starts_with('{') && l.ends_with('}'), "not a frame: {l}");
+    }
+    // example config: 2 functions x 2 trials -> 4 final frames
+    assert_eq!(
+        lines.iter().filter(|l| l.contains("\"final\":true")).count(),
+        4,
+        "{text}"
+    );
+    assert!(
+        lines.last().unwrap().contains("\"status\":\"done\""),
+        "{text}"
+    );
     std::fs::remove_dir_all(&dir).ok();
 }
 

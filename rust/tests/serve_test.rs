@@ -1,0 +1,677 @@
+//! End-to-end tests of `zmc serve`: a real server on a loopback port,
+//! driven by a hand-rolled HTTP client.
+//!
+//! The load-bearing assertions are bit-identity ones: estimates
+//! streamed over `POST /v1/jobs`, recalled via `GET /v1/jobs/{id}`,
+//! and recomputed by journal replay after a simulated crash must all
+//! equal `Session::run_job` on the same config exactly — the service
+//! is a transport, never a perturbation. The production edges (429
+//! busy, 429 rate-limited, 400 typed rejections, 404/405/413) are
+//! exercised against the same live server.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+use zmc::config::JobConfig;
+use zmc::integrator::spec::Estimate;
+use zmc::serve::{Journal, ServeConfig, Server, StopHandle};
+use zmc::session::{ErrorPayload, Session};
+use zmc::util::json::Json;
+use zmc::util::proptest::{check, Gen};
+
+// ------------------------------------------------------------ harness
+
+/// A server on an OS-assigned loopback port, stopped (and its workers
+/// drained) on drop.
+struct TestServer {
+    addr: SocketAddr,
+    stop: StopHandle,
+    thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl TestServer {
+    fn start(mut cfg: ServeConfig) -> TestServer {
+        cfg.addr = "127.0.0.1:0".into();
+        let server = Server::bind(cfg).unwrap();
+        let addr = server.local_addr().unwrap();
+        let stop = server.stop_handle();
+        let thread =
+            std::thread::spawn(move || server.run().unwrap());
+        TestServer { addr, stop, thread: Some(thread) }
+    }
+}
+
+impl Drop for TestServer {
+    fn drop(&mut self) {
+        self.stop.stop();
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+/// A session built exactly as the server builds its own, so local
+/// results are the bit-identity reference.
+fn local_session() -> Session {
+    Session::builder()
+        .artifacts_or_emulator("artifacts")
+        .build()
+        .unwrap()
+}
+
+fn temp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("zmc_serve_{tag}_{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    dir
+}
+
+// ------------------------------------------------------- mini client
+
+struct Response {
+    status: u16,
+    headers: Vec<(String, String)>,
+    body: String,
+}
+
+impl Response {
+    fn header(&self, name: &str) -> Option<&str> {
+        self.headers
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, v)| v.as_str())
+    }
+
+    fn json(&self) -> Json {
+        Json::parse(self.body.trim()).unwrap()
+    }
+
+    /// The streamed body as parsed JSON lines.
+    fn lines(&self) -> Vec<Json> {
+        self.body
+            .lines()
+            .filter(|l| !l.trim().is_empty())
+            .map(|l| Json::parse(l).unwrap())
+            .collect()
+    }
+
+    fn error_code(&self) -> String {
+        self.json()
+            .path(&["error", "code"])
+            .and_then(Json::as_str)
+            .unwrap()
+            .to_string()
+    }
+}
+
+fn raw_request(method: &str, path: &str, body: Option<&str>) -> String {
+    match body {
+        Some(b) => format!(
+            "{method} {path} HTTP/1.1\r\nhost: t\r\n\
+             content-length: {}\r\n\r\n{b}",
+            b.len()
+        ),
+        None => format!("{method} {path} HTTP/1.1\r\nhost: t\r\n\r\n"),
+    }
+}
+
+/// One full request/response cycle (waits for the job when POSTing).
+fn request(
+    addr: SocketAddr,
+    method: &str,
+    path: &str,
+    body: Option<&str>,
+) -> Response {
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.write_all(raw_request(method, path, body).as_bytes()).unwrap();
+    let mut buf = Vec::new();
+    s.read_to_end(&mut buf).unwrap();
+    parse_response(&buf)
+}
+
+fn get(addr: SocketAddr, path: &str) -> Response {
+    request(addr, "GET", path, None)
+}
+
+fn post_job(addr: SocketAddr, body: &str) -> Response {
+    request(addr, "POST", "/v1/jobs", Some(body))
+}
+
+fn parse_response(buf: &[u8]) -> Response {
+    let text = String::from_utf8(buf.to_vec()).unwrap();
+    let (head, body) = text.split_once("\r\n\r\n").unwrap();
+    let mut lines = head.lines();
+    let status: u16 = lines
+        .next()
+        .unwrap()
+        .split_whitespace()
+        .nth(1)
+        .unwrap()
+        .parse()
+        .unwrap();
+    let headers: Vec<(String, String)> = lines
+        .map(|l| {
+            let (n, v) = l.split_once(':').unwrap();
+            (n.trim().to_ascii_lowercase(), v.trim().to_string())
+        })
+        .collect();
+    let chunked = headers
+        .iter()
+        .any(|(n, v)| n == "transfer-encoding" && v == "chunked");
+    let body =
+        if chunked { dechunk(body) } else { body.to_string() };
+    Response { status, headers, body }
+}
+
+/// Reassemble a chunked body (sizes are hex, ASCII payload).
+fn dechunk(s: &str) -> String {
+    let mut out = String::new();
+    let mut rest = s;
+    loop {
+        let Some((size_line, tail)) = rest.split_once("\r\n") else {
+            break;
+        };
+        let Ok(size) = usize::from_str_radix(size_line.trim(), 16)
+        else {
+            break;
+        };
+        if size == 0 || tail.len() < size {
+            break;
+        }
+        out.push_str(&tail[..size]);
+        rest = tail[size..].strip_prefix("\r\n").unwrap_or(&tail[size..]);
+    }
+    out
+}
+
+/// Incremental stream reader: lets a test act mid-job (e.g. submit a
+/// competing request while the first still holds the job slot).
+struct JobStream {
+    reader: BufReader<TcpStream>,
+}
+
+impl JobStream {
+    fn post(addr: SocketAddr, body: &str) -> JobStream {
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.write_all(raw_request("POST", "/v1/jobs", Some(body)).as_bytes())
+            .unwrap();
+        let mut reader = BufReader::new(s);
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.starts_with("HTTP/1.1 200"), "{line}");
+        loop {
+            line.clear();
+            reader.read_line(&mut line).unwrap();
+            if line == "\r\n" {
+                break;
+            }
+        }
+        JobStream { reader }
+    }
+
+    /// Next streamed JSON line, `None` at the terminal zero chunk.
+    fn next_line(&mut self) -> Option<Json> {
+        let mut size_line = String::new();
+        if self.reader.read_line(&mut size_line).unwrap() == 0 {
+            return None;
+        }
+        let size = usize::from_str_radix(size_line.trim(), 16).ok()?;
+        if size == 0 {
+            return None;
+        }
+        let mut chunk = vec![0u8; size];
+        self.reader.read_exact(&mut chunk).unwrap();
+        let mut crlf = [0u8; 2];
+        self.reader.read_exact(&mut crlf).unwrap();
+        Some(Json::parse(String::from_utf8(chunk).unwrap().trim()).unwrap())
+    }
+}
+
+// -------------------------------------------------------- job configs
+
+fn small_multi() -> JobConfig {
+    let mut c =
+        JobConfig::from_json_text(&JobConfig::example_json()).unwrap();
+    c.samples_per_fn = 1 << 10;
+    c.trials = 2;
+    c.target_rel_err = None;
+    c.target_abs_err = None;
+    c
+}
+
+fn small_functional() -> JobConfig {
+    let mut c = JobConfig::from_json_text(
+        &JobConfig::example_json_functional(),
+    )
+    .unwrap();
+    c.samples_per_fn = 1 << 10;
+    c
+}
+
+fn small_normal() -> JobConfig {
+    JobConfig::from_json_text(&JobConfig::example_json_normal()).unwrap()
+}
+
+/// An adaptive job with an unreachable target: runs its full round
+/// budget, streaming a frame per round — the deterministic way to hold
+/// the job slot while a test pokes the server from the side.
+fn slow_adaptive() -> JobConfig {
+    let mut c = small_multi();
+    c.trials = 1;
+    c.samples_per_fn = 1 << 14;
+    c.target_rel_err = Some(1e-12);
+    c.max_rounds = Some(12);
+    c
+}
+
+/// `per_trial[t][i]` reconstructed from a stream's `"final": true`
+/// frames — the client-side view of the job's result.
+fn finals_per_trial(frames: &[Json]) -> Vec<Vec<Estimate>> {
+    let mut per_trial: Vec<Vec<(i64, Estimate)>> = Vec::new();
+    for f in frames {
+        if !matches!(f.get("final"), Some(Json::Bool(true))) {
+            continue;
+        }
+        let t = f.get("trial").and_then(Json::as_usize).unwrap();
+        let i = f.get("fn").and_then(Json::as_i64).unwrap();
+        let e = Estimate::from_json(f).unwrap();
+        if per_trial.len() <= t {
+            per_trial.resize(t + 1, Vec::new());
+        }
+        per_trial[t].push((i, e));
+    }
+    per_trial
+        .into_iter()
+        .map(|mut fns| {
+            fns.sort_by_key(|(i, _)| *i);
+            fns.into_iter().map(|(_, e)| e).collect()
+        })
+        .collect()
+}
+
+/// Estimates from a recall body's `result.trials` array.
+fn recalled_trials(body: &Json) -> Vec<Vec<Estimate>> {
+    body.path(&["result", "trials"])
+        .and_then(Json::as_arr)
+        .unwrap()
+        .iter()
+        .map(|t| {
+            t.as_arr()
+                .unwrap()
+                .iter()
+                .map(|e| Estimate::from_json(e).unwrap())
+                .collect()
+        })
+        .collect()
+}
+
+// -------------------------------------------------------------- tests
+
+#[test]
+fn healthz_and_metrics_report_topology_and_counters() {
+    let srv = TestServer::start(ServeConfig::default());
+    let h = get(srv.addr, "/v1/healthz").json();
+    assert_eq!(h.path(&["status"]).and_then(Json::as_str), Some("ok"));
+    assert_eq!(h.get("v").and_then(Json::as_i64), Some(1));
+    assert_eq!(h.get("engines").and_then(Json::as_i64), Some(1));
+
+    let body = small_normal().to_json().to_string();
+    assert_eq!(post_job(srv.addr, &body).status, 200);
+    let m = get(srv.addr, "/v1/metrics").json();
+    assert_eq!(
+        m.path(&["server", "accepted"]).and_then(Json::as_i64),
+        Some(1)
+    );
+    assert_eq!(
+        m.path(&["server", "done"]).and_then(Json::as_i64),
+        Some(1)
+    );
+    assert!(m.path(&["engine", "tasks_done"]).is_some());
+    assert!(m.path(&["registry", "compiles"]).is_some());
+}
+
+#[test]
+fn streamed_job_is_bit_identical_and_recallable() {
+    let srv = TestServer::start(ServeConfig::default());
+    let cfg = small_multi();
+    let resp = post_job(srv.addr, &cfg.to_json().to_string());
+    assert_eq!(resp.status, 200);
+    assert_eq!(
+        resp.header("content-type"),
+        Some("application/x-ndjson")
+    );
+    let frames = resp.lines();
+    let id = frames[0].get("id").and_then(Json::as_i64).unwrap();
+    assert_eq!(
+        frames[0].get("status").and_then(Json::as_str),
+        Some("running")
+    );
+    let last = frames.last().unwrap();
+    assert_eq!(last.get("status").and_then(Json::as_str), Some("done"));
+    assert_eq!(last.get("id").and_then(Json::as_i64), Some(id));
+    // every estimate frame carries the id and the codec fields
+    assert!(frames[1..frames.len() - 1]
+        .iter()
+        .all(|f| f.get("id").and_then(Json::as_i64) == Some(id)));
+
+    let streamed = finals_per_trial(&frames);
+    let want = local_session().run_job(&cfg).unwrap();
+    assert_eq!(streamed, want.per_trial, "stream diverged from local");
+
+    let recall = get(srv.addr, &format!("/v1/jobs/{id}"));
+    assert_eq!(recall.status, 200);
+    let body = recall.json();
+    assert_eq!(
+        body.get("status").and_then(Json::as_str),
+        Some("done")
+    );
+    assert_eq!(recalled_trials(&body), want.per_trial);
+}
+
+#[test]
+fn all_three_classes_round_trip_bit_identically() {
+    let srv = TestServer::start(ServeConfig::default());
+    let local = local_session();
+    for cfg in [small_multi(), small_functional(), small_normal()] {
+        let resp = post_job(srv.addr, &cfg.to_json().to_string());
+        assert_eq!(resp.status, 200, "{}: {}", cfg.class.name(), resp.body);
+        let frames = resp.lines();
+        assert_eq!(
+            frames.last().unwrap().get("status").and_then(Json::as_str),
+            Some("done"),
+            "{}",
+            cfg.class.name()
+        );
+        let want = local.run_job(&cfg).unwrap();
+        assert_eq!(
+            finals_per_trial(&frames),
+            want.per_trial,
+            "{} diverged over the wire",
+            cfg.class.name()
+        );
+    }
+}
+
+#[test]
+fn adaptive_job_streams_rounds_before_finals() {
+    let srv = TestServer::start(ServeConfig::default());
+    let mut cfg = small_multi();
+    cfg.trials = 1;
+    cfg.samples_per_fn = 1 << 12;
+    cfg.target_rel_err = Some(0.05);
+    let resp = post_job(srv.addr, &cfg.to_json().to_string());
+    assert_eq!(resp.status, 200);
+    let frames = resp.lines();
+    let rounds = frames
+        .iter()
+        .filter(|f| f.get("round").is_some())
+        .count();
+    assert!(rounds >= cfg.jobs.len(), "pilot round streams per fn");
+    assert_eq!(
+        finals_per_trial(&frames),
+        local_session().run_job(&cfg).unwrap().per_trial
+    );
+}
+
+#[test]
+fn invalid_jobs_are_rejected_with_typed_codes() {
+    let srv = TestServer::start(ServeConfig {
+        max_body: 4096,
+        ..ServeConfig::default()
+    });
+    // malformed JSON
+    let r = post_job(srv.addr, "not json");
+    assert_eq!(r.status, 400);
+    assert_eq!(r.error_code(), "bad_json");
+    // wrong wire version
+    let mut v2 = small_multi().to_json();
+    if let Json::Obj(m) = &mut v2 {
+        m.insert("v".to_string(), Json::Num(2.0));
+    }
+    let r = post_job(srv.addr, &v2.to_string());
+    assert_eq!(r.status, 400);
+    assert_eq!(r.error_code(), "unsupported_version");
+    // class-inapplicable option
+    let mut bad = small_normal();
+    bad.trials = 3;
+    let r = post_job(srv.addr, &bad.to_json().to_string());
+    assert_eq!(r.status, 400);
+    assert_eq!(r.error_code(), "inapplicable_option");
+    // unknown job / route / method / oversized body
+    let r = get(srv.addr, "/v1/jobs/999");
+    assert_eq!(r.status, 404);
+    assert_eq!(r.error_code(), "not_found");
+    assert_eq!(get(srv.addr, "/v2/jobs").status, 404);
+    let r = request(srv.addr, "POST", "/v1/metrics", Some("{}"));
+    assert_eq!(r.status, 405);
+    // oversized: declare a too-large body without sending it (the
+    // server rejects on the declaration, before reading a body byte)
+    let mut s = TcpStream::connect(srv.addr).unwrap();
+    s.write_all(
+        b"POST /v1/jobs HTTP/1.1\r\nhost: t\r\n\
+          content-length: 8192\r\n\r\n",
+    )
+    .unwrap();
+    let mut buf = Vec::new();
+    s.read_to_end(&mut buf).unwrap();
+    let r = parse_response(&buf);
+    assert_eq!(r.status, 413);
+    assert_eq!(r.error_code(), "too_large");
+    // none of the rejections created a job
+    let m = get(srv.addr, "/v1/metrics").json();
+    assert_eq!(
+        m.path(&["server", "accepted"]).and_then(Json::as_i64),
+        Some(0)
+    );
+    // the three 400s and the 413 count; 404/405 routing misses don't
+    assert_eq!(
+        m.path(&["server", "bad_requests"]).and_then(Json::as_i64),
+        Some(4)
+    );
+}
+
+#[test]
+fn full_server_answers_429_busy_with_retry_after() {
+    let srv = TestServer::start(ServeConfig {
+        max_jobs: 1,
+        http_workers: 2,
+        ..ServeConfig::default()
+    });
+    let mut stream =
+        JobStream::post(srv.addr, &slow_adaptive().to_json().to_string());
+    // the accepted frame proves the slot is held before we poke again
+    let first = stream.next_line().unwrap();
+    assert_eq!(
+        first.get("status").and_then(Json::as_str),
+        Some("running")
+    );
+    let r = post_job(srv.addr, "{}");
+    assert_eq!(r.status, 429);
+    assert_eq!(r.error_code(), "busy");
+    assert_eq!(r.header("retry-after"), Some("1"));
+    // drain the slow job; its stream still ends in a clean terminal
+    let mut last = first;
+    while let Some(l) = stream.next_line() {
+        last = l;
+    }
+    assert_eq!(last.get("status").and_then(Json::as_str), Some("done"));
+    // the slot frees once the job finishes (poll: release is
+    // microseconds after the terminal frame, not atomic with it)
+    let t0 = Instant::now();
+    loop {
+        let r = post_job(srv.addr, "{}");
+        if r.status == 400 {
+            break; // admitted past the slot check, rejected on parse
+        }
+        assert_eq!(r.status, 429);
+        assert!(
+            t0.elapsed() < Duration::from_secs(5),
+            "job slot never released"
+        );
+        std::thread::sleep(Duration::from_millis(10));
+    }
+}
+
+#[test]
+fn rate_limiter_answers_429_with_retry_after() {
+    let srv = TestServer::start(ServeConfig {
+        rate_limit: Some(0.01),
+        rate_burst: 1.0,
+        ..ServeConfig::default()
+    });
+    // burst of 1: the first request consumes it (limiter runs before
+    // parsing, so a 400 still spends the token)...
+    assert_eq!(post_job(srv.addr, "{}").status, 400);
+    // ...and the second is rate-limited with the refill wait
+    let r = post_job(srv.addr, "{}");
+    assert_eq!(r.status, 429);
+    assert_eq!(r.error_code(), "rate_limited");
+    let wait: u64 = r.header("retry-after").unwrap().parse().unwrap();
+    assert!(wait >= 1, "retry-after {wait}");
+    let m = get(srv.addr, "/v1/metrics").json();
+    assert_eq!(
+        m.path(&["server", "rejected_rate"]).and_then(Json::as_i64),
+        Some(1)
+    );
+}
+
+#[test]
+fn journal_replays_interrupted_jobs_bit_identically() {
+    let dir = temp_dir("replay");
+    let cfg = small_multi();
+    // simulate a server that accepted job 1 and died mid-flight: the
+    // journal holds a submit record with no terminal
+    {
+        let j = Journal::open(&dir).unwrap();
+        j.submitted(1, &cfg.to_json()).unwrap();
+    }
+    let srv = TestServer::start(ServeConfig {
+        state_dir: Some(dir.clone()),
+        ..ServeConfig::default()
+    });
+    // the replay thread re-runs job 1; poll until it lands
+    let t0 = Instant::now();
+    let body = loop {
+        let r = get(srv.addr, "/v1/jobs/1");
+        assert_eq!(r.status, 200, "journaled job must be known");
+        let b = r.json();
+        match b.get("status").and_then(Json::as_str) {
+            Some("done") => break b,
+            Some("running") => {
+                assert!(
+                    t0.elapsed() < Duration::from_secs(60),
+                    "replay never finished"
+                );
+                std::thread::sleep(Duration::from_millis(20));
+            }
+            other => panic!("unexpected status {other:?}"),
+        }
+    };
+    let want = local_session().run_job(&cfg).unwrap();
+    assert_eq!(
+        recalled_trials(&body),
+        want.per_trial,
+        "replayed result diverged"
+    );
+    // ids continue after the journaled ones
+    let resp = post_job(srv.addr, &small_normal().to_json().to_string());
+    let frames = resp.lines();
+    assert_eq!(frames[0].get("id").and_then(Json::as_i64), Some(2));
+    drop(srv);
+
+    // a second restart recalls both results straight from the journal
+    let srv = TestServer::start(ServeConfig {
+        state_dir: Some(dir.clone()),
+        ..ServeConfig::default()
+    });
+    let body = get(srv.addr, "/v1/jobs/1").json();
+    assert_eq!(body.get("status").and_then(Json::as_str), Some("done"));
+    assert_eq!(recalled_trials(&body), want.per_trial);
+    assert_eq!(
+        get(srv.addr, "/v1/jobs/2")
+            .json()
+            .get("status")
+            .and_then(Json::as_str),
+        Some("done")
+    );
+    drop(srv);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+// ------------------------------------------------- codec round trips
+
+fn wild_f64(g: &mut Gen) -> f64 {
+    match g.below(8) {
+        0 => 0.0,
+        1 => -0.0,
+        2 => f64::INFINITY,
+        3 => f64::NEG_INFINITY,
+        4 => g.range_f64(-1.0, 1.0) * 1e-300,
+        5 => g.range_f64(-1.0, 1.0) * 1e300,
+        6 => g.range_i64(-1_000_000, 1_000_000) as f64,
+        _ => g.range_f64(-1e6, 1e6),
+    }
+}
+
+#[test]
+fn estimate_codec_round_trips_bit_exactly() {
+    check(0xE57, 300, |g| {
+        let e = Estimate {
+            value: wild_f64(g),
+            std_err: wild_f64(g).abs(),
+            n_samples: g.next_u64() >> 14,
+            rounds: g.below(1 << 16) as u32,
+        };
+        let back = Estimate::from_json(&e.to_json()).unwrap();
+        assert_eq!(back.value.to_bits(), e.value.to_bits());
+        assert_eq!(back.std_err.to_bits(), e.std_err.to_bits());
+        assert_eq!(back.n_samples, e.n_samples);
+        assert_eq!(back.rounds, e.rounds);
+    });
+}
+
+#[test]
+fn job_config_codec_round_trips() {
+    let examples: [fn() -> String; 3] = [
+        JobConfig::example_json,
+        JobConfig::example_json_functional,
+        JobConfig::example_json_normal,
+    ];
+    check(0xC0F, 100, |g| {
+        let mut c =
+            JobConfig::from_json_text(&examples[g.below(3)]()).unwrap();
+        c.samples_per_fn = 1 << (6 + g.below(10));
+        // seeds ride the wire as f64 — stay within exact-integer range
+        c.seed = g.next_u64() >> 12;
+        c.workers = 1 + g.below(4);
+        c.num_engines = 1 + g.below(4);
+        if matches!(c.class, zmc::config::JobClass::Multifunctions) {
+            c.trials = 1 + g.below(5) as u32;
+            if g.bool() {
+                c.target_rel_err = Some(g.range_f64(1e-4, 0.5));
+            }
+            if g.bool() {
+                c.max_rounds = Some(1 + g.below(20));
+            }
+        }
+        let back = JobConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(back, c);
+    });
+}
+
+#[test]
+fn error_payload_codec_round_trips() {
+    let chars: Vec<char> =
+        "ab\"\\\n\t{}[]:,€ 0".chars().collect();
+    check(0xEA7, 200, |g| {
+        let mut rand_str = |g: &mut Gen| -> String {
+            (0..g.below(24)).map(|_| *g.choose(&chars)).collect()
+        };
+        let p = ErrorPayload::new(rand_str(g), rand_str(g));
+        let back = ErrorPayload::from_json(&p.to_json()).unwrap();
+        assert_eq!(back.code, p.code);
+        assert_eq!(back.message, p.message);
+    });
+}
