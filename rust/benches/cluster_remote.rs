@@ -1,0 +1,144 @@
+//! Bench: what the TCP hop costs — the same multifunction launch batch
+//! run on an in-process engine, on a pure-remote cluster (one proxy
+//! into a loopback `zmc worker`), and on a mixed 1-local + 1-remote
+//! cluster. The workload and results are bit-identical across the
+//! three (asserted below); only the transport differs, so the wall
+//! delta prices frame encode/decode + loopback round trips + the
+//! heartbeat thread.
+//!
+//! Loopback wall time is noisy, so the bench gates on correctness
+//! (bit-equal outputs) and reports per-launch transport overhead for
+//! the JSON trend line rather than asserting a latency bound.
+//!
+//! Env knobs: ZMC_REM_FUNCS, ZMC_REM_SAMPLES, ZMC_REM_REPS.
+
+use std::net::TcpListener;
+use std::sync::Arc;
+use std::time::Instant;
+
+use zmc::cluster::{serve_worker, DeviceCluster, LaunchExec, RemoteConfig};
+use zmc::engine::Engine;
+use zmc::integrator::multifunctions::{self, MultiConfig};
+use zmc::integrator::spec::IntegralJob;
+use zmc::runtime::device::DevicePool;
+use zmc::runtime::registry::Registry;
+use zmc::util::bench::{fmt_s, Bench};
+
+fn env(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn workload(n: usize) -> Vec<IntegralJob> {
+    let forms: [(&str, usize); 4] = [
+        ("p0*x1^2 + sin(p1*x1)", 1),
+        ("p0*abs(x1+x2-1)", 2),
+        ("exp(-p0*(x1*x1+x2*x2))", 2),
+        ("cos(p0*(x1+x2+x3))", 3),
+    ];
+    (0..n)
+        .map(|i| {
+            let (src, dims) = forms[i % forms.len()];
+            let bounds = vec![(0.0, 1.0); dims];
+            let theta = vec![1.0 + i as f64 * 0.01, 0.5];
+            IntegralJob::with_params(src, &bounds, &theta).unwrap()
+        })
+        .collect()
+}
+
+fn main() -> anyhow::Result<()> {
+    let n_funcs = env("ZMC_REM_FUNCS", 32);
+    let samples = env("ZMC_REM_SAMPLES", 1 << 14);
+    let reps = env("ZMC_REM_REPS", 3).max(1);
+
+    let registry = Arc::new(
+        Registry::load("artifacts").unwrap_or_else(|_| Registry::emulated()),
+    );
+    let pool = DevicePool::new(&registry, 1)?;
+    let jobs = workload(n_funcs);
+    let cfg = MultiConfig {
+        samples_per_fn: samples,
+        seed: 7,
+        ..Default::default()
+    };
+    let (tasks, _exe) = multifunctions::build_tasks(&registry, &jobs, &cfg)?;
+    let n_launches = tasks.len();
+
+    // one worker host on loopback backs every remote topology below
+    let worker_engine = Engine::for_pool(&pool)?;
+    let w = serve_worker(TcpListener::bind("127.0.0.1:0")?, worker_engine)?;
+    let addr = w.addr().to_string();
+
+    let local = Engine::for_pool(&pool)?;
+    let remote = DeviceCluster::for_pool_with_remote_config(
+        &pool,
+        0,
+        std::slice::from_ref(&addr),
+        RemoteConfig::default(),
+    )?;
+    let mixed = DeviceCluster::for_pool_with_remote_config(
+        &pool,
+        1,
+        std::slice::from_ref(&addr),
+        RemoteConfig::default(),
+    )?;
+
+    let topologies: [(&str, &dyn LaunchExec); 3] =
+        [("local", &local), ("remote_1", &remote), ("mixed_1_1", &mixed)];
+
+    let mut b = Bench::new("cluster_remote");
+    let mut walls: Vec<(&str, f64)> = Vec::new();
+    let mut reference: Option<Vec<(u64, Vec<u32>)>> = None;
+    for (name, exec) in topologies {
+        // warm pass: executable compiles + TCP connects are lifetime
+        // cost, not per-launch cost
+        exec.submit_launches(tasks.clone(), 3)?.wait()?;
+        let t0 = Instant::now();
+        let mut outs = Vec::new();
+        for _ in 0..reps {
+            outs = exec.submit_launches(tasks.clone(), 3)?.wait()?;
+        }
+        let wall = t0.elapsed().as_secs_f64() / reps as f64;
+        // the gate: the transport may cost time but never bits
+        let bits: Vec<(u64, Vec<u32>)> = outs
+            .iter()
+            .map(|o| {
+                (o.tag, o.data.iter().map(|x| x.to_bits()).collect())
+            })
+            .collect();
+        match &reference {
+            None => reference = Some(bits),
+            Some(base) => assert_eq!(
+                base, &bits,
+                "{name}: outputs must be bit-identical to local"
+            ),
+        }
+        walls.push((name, wall));
+        b.row(
+            name,
+            &[
+                ("funcs", n_funcs.to_string()),
+                ("launches", n_launches.to_string()),
+                ("reps", reps.to_string()),
+                ("wall", fmt_s(wall)),
+                (
+                    "per_launch",
+                    fmt_s(wall / n_launches.max(1) as f64),
+                ),
+            ],
+        );
+    }
+    // transport overhead per launch: remote wall minus local wall,
+    // amortized over the batch (negative noise clamps to 0)
+    let local_wall = walls[0].1;
+    for &(name, wall) in &walls[1..] {
+        b.row(
+            &format!("{name}_overhead"),
+            &[(
+                "per_launch_overhead",
+                fmt_s((wall - local_wall).max(0.0) / n_launches.max(1) as f64),
+            )],
+        );
+    }
+    b.finish();
+    Ok(())
+}

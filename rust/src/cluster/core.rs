@@ -1,23 +1,30 @@
-//! The cluster: N persistent engines behind one `submit()` surface.
+//! The cluster: N persistent engine nodes behind one `submit()`
+//! surface.
 //!
-//! Each engine models one device/host — its workers and their warm
-//! executable caches are private to it, exactly as in the single-engine
-//! path. [`Cluster::submit`] shards the ordered task list contiguously
-//! across the live engines ([`crate::cluster::plan::ShardPlan`]), fans
-//! the shards out as independent engine jobs, and the returned
-//! [`ClusterHandle`] stitches per-shard results back at their original
-//! positions, so `wait()` yields results in task order no matter how
-//! many engines ran them.
+//! A node is either a **local** [`Engine`] (one device/host in this
+//! process — its workers and their warm executable caches are private
+//! to it) or a **remote** [`RemoteEngine`] proxy for an engine hosted
+//! by a `zmc worker` process on another machine, reached over the
+//! cluster wire protocol. The two are interchangeable here: sharding
+//! is placement-free (every task bakes its Philox counter range into
+//! its inputs), so [`Cluster::submit`] shards the ordered task list
+//! contiguously across the live nodes
+//! ([`crate::cluster::plan::ShardPlan`]), fans the non-empty shards
+//! out as independent node jobs, and the returned [`ClusterHandle`]
+//! stitches per-shard results back at their original positions —
+//! `wait()` yields results in task order no matter how many nodes of
+//! either kind ran them.
 //!
 //! Fault policy (the Ray node-loss model): a shard job that fails
-//! because its engine **died** (every worker exited —
-//! [`Engine::is_dead`]) marks that engine dead and requeues the whole
-//! shard onto the next surviving engine; idempotent Philox task
+//! because its node **died** (every worker exited — [`Engine::is_dead`]
+//! — or the remote connection closed / heartbeat timed out —
+//! [`RemoteEngine::is_dead`]) marks that node dead and requeues the
+//! whole shard onto the next surviving node; idempotent Philox task
 //! addressing makes the rerun bit-exact. A job that fails on a *live*
-//! engine (a task drained its retry budget — a deterministic error
+//! node (a task drained its retry budget — a deterministic error
 //! would fail anywhere) surfaces its error directly, like the
 //! single-engine path. Every requeue is counted on the cluster's
-//! [`Metrics`] (`failure` + `retry`). With every engine dead the error
+//! [`Metrics`] (`failure` + `retry`). With every node dead the error
 //! of the last shard surfaces to the caller.
 
 use std::ops::Range;
@@ -27,28 +34,90 @@ use std::sync::{Arc, Weak};
 use anyhow::{anyhow, Result};
 
 use crate::cluster::plan::ShardPlan;
+use crate::cluster::remote::{RemoteConfig, RemoteEngine, RemoteHandle};
+use crate::cluster::wire::Wire;
 use crate::coordinator::progress::Metrics;
 use crate::engine::{Backend, DeviceBackend, Engine, JobHandle};
 use crate::runtime::device::DevicePool;
 use crate::runtime::registry::Registry;
 
-/// One engine plus its liveness flag (cleared on shard failure).
-struct EngineSlot<B: Backend> {
-    engine: Engine<B>,
+/// One cluster node: a local engine or a remote proxy. Everything the
+/// cluster needs from a node — submit a task batch, probe death — is
+/// identical across the two, so shard planning and requeue never look
+/// inside.
+enum Node<B: Backend> {
+    Local(Engine<B>),
+    Remote(RemoteEngine<B::Task, B::Out>),
+}
+
+impl<B> Node<B>
+where
+    B: Backend + Send + Sync + 'static,
+    B::Task: Wire + Clone + Send + Sync + 'static,
+    B::Out: Wire + Send + 'static,
+{
+    fn submit_with_retries(
+        &self,
+        tasks: Vec<B::Task>,
+        max_retries: u32,
+    ) -> Result<NodeHandle<B::Task, B::Out>> {
+        match self {
+            Node::Local(e) => Ok(NodeHandle::Local(
+                e.submit_with_retries(tasks, max_retries)?,
+            )),
+            Node::Remote(r) => Ok(NodeHandle::Remote(
+                r.submit_with_retries(tasks, max_retries)?,
+            )),
+        }
+    }
+
+    fn is_dead(&self) -> bool {
+        match self {
+            Node::Local(e) => e.is_dead(),
+            Node::Remote(r) => r.is_dead(),
+        }
+    }
+}
+
+/// Handle to one shard job on either node kind.
+enum NodeHandle<T, R> {
+    Local(JobHandle<T, R>),
+    Remote(RemoteHandle<R>),
+}
+
+impl<T, R> NodeHandle<T, R> {
+    fn wait(self) -> Result<Vec<R>> {
+        match self {
+            NodeHandle::Local(h) => h.wait(),
+            NodeHandle::Remote(h) => h.wait(),
+        }
+    }
+
+    fn is_done(&self) -> bool {
+        match self {
+            NodeHandle::Local(h) => h.is_done(),
+            NodeHandle::Remote(h) => h.is_done(),
+        }
+    }
+}
+
+/// One node plus its liveness flag (cleared on shard failure).
+struct NodeSlot<B: Backend> {
+    node: Node<B>,
     alive: AtomicBool,
 }
 
 /// State shared between the cluster and its in-flight handles.
 pub(crate) struct ClusterShared<B: Backend> {
-    slots: Vec<EngineSlot<B>>,
+    slots: Vec<NodeSlot<B>>,
     metrics: Arc<Metrics>,
 }
 
 impl<B> ClusterShared<B>
 where
     B: Backend + Send + Sync + 'static,
-    B::Task: Clone + Send + Sync + 'static,
-    B::Out: Send + 'static,
+    B::Task: Wire + Clone + Send + Sync + 'static,
+    B::Out: Wire + Send + 'static,
 {
     fn alive_indices(&self) -> Vec<usize> {
         (0..self.slots.len())
@@ -60,17 +129,17 @@ where
         self.slots[i].alive.store(false, Ordering::Relaxed);
     }
 
-    /// Submit `tasks` to the first live engine at or after `preferred`
-    /// (wrapping); an engine whose submit fails synchronously is marked
+    /// Submit `tasks` to the first live node at or after `preferred`
+    /// (wrapping); a node whose submit fails synchronously is marked
     /// dead and skipped, counted on the cluster metrics exactly like a
-    /// mid-round death (`failure` for the engine, `retry` for moving
-    /// the shard on). Errors when no live engine accepts the shard.
+    /// mid-round death (`failure` for the node, `retry` for moving
+    /// the shard on). Errors when no live node accepts the shard.
     fn submit_to_alive(
         &self,
         tasks: &[B::Task],
         preferred: usize,
         max_retries: u32,
-    ) -> Result<(usize, JobHandle<B::Task, B::Out>)> {
+    ) -> Result<(usize, NodeHandle<B::Task, B::Out>)> {
         let n = self.slots.len();
         let mut last_err: Option<anyhow::Error> = None;
         for off in 0..n {
@@ -79,7 +148,7 @@ where
             if !slot.alive.load(Ordering::Relaxed) {
                 continue;
             }
-            match slot.engine.submit_with_retries(tasks.to_vec(), max_retries)
+            match slot.node.submit_with_retries(tasks.to_vec(), max_retries)
             {
                 Ok(h) => return Ok((i, h)),
                 Err(e) => {
@@ -97,22 +166,28 @@ where
     }
 }
 
-/// A pool of N persistent engines with centralized shard planning and
-/// result reduction. A 1-engine cluster is the plain engine path: one
-/// shard covering the whole task list, no extra merge step.
+/// A pool of N persistent engine nodes (local and/or remote) with
+/// centralized shard planning and result reduction. A 1-node cluster
+/// is the plain engine path: one shard covering the whole task list,
+/// no extra merge step.
 pub struct Cluster<B: Backend> {
     shared: Arc<ClusterShared<B>>,
     default_retries: u32,
+    /// Artifact registry for device clusters whose nodes may all be
+    /// remote (a remote node carries no local registry handle);
+    /// `None` for generic/mock clusters and when a local engine can
+    /// answer instead.
+    registry: Option<Arc<Registry>>,
 }
 
 impl<B> Cluster<B>
 where
     B: Backend + Send + Sync + 'static,
-    B::Task: Clone + Send + Sync + 'static,
-    B::Out: Send + 'static,
+    B::Task: Wire + Clone + Send + Sync + 'static,
+    B::Out: Wire + Send + 'static,
 {
-    /// Assemble a cluster from already-spawned engines (each brings its
-    /// own fault plan and per-engine metrics).
+    /// Assemble a cluster from already-spawned local engines (each
+    /// brings its own fault plan and per-engine metrics).
     pub fn from_engines(engines: Vec<Engine<B>>) -> Result<Cluster<B>> {
         Cluster::with_metrics(engines, Arc::new(Metrics::new()))
     }
@@ -124,24 +199,56 @@ where
         engines: Vec<Engine<B>>,
         metrics: Arc<Metrics>,
     ) -> Result<Cluster<B>> {
-        if engines.is_empty() {
+        Cluster::with_remotes(engines, Vec::new(), metrics)
+    }
+
+    /// Assemble a mixed cluster: local engines first, then remote
+    /// proxies. Either list may be empty, but not both — a pure-remote
+    /// cluster is how a coordinator host with no device of its own
+    /// drives a fleet of `zmc worker` machines.
+    pub fn with_remotes(
+        engines: Vec<Engine<B>>,
+        remotes: Vec<RemoteEngine<B::Task, B::Out>>,
+        metrics: Arc<Metrics>,
+    ) -> Result<Cluster<B>> {
+        if engines.is_empty() && remotes.is_empty() {
             return Err(anyhow!("cluster needs >= 1 engine"));
         }
+        // locals first: `engine(i)` keeps indexing local engines and
+        // shard placement prefers in-process nodes for small plans
         let slots = engines
             .into_iter()
-            .map(|engine| EngineSlot { engine, alive: AtomicBool::new(true) })
+            .map(Node::Local)
+            .chain(remotes.into_iter().map(Node::Remote))
+            .map(|node| NodeSlot { node, alive: AtomicBool::new(true) })
             .collect();
         Ok(Cluster {
             shared: Arc::new(ClusterShared { slots, metrics }),
             default_retries: 3,
+            registry: None,
         })
     }
 
+    /// Total nodes, local + remote.
     pub fn n_engines(&self) -> usize {
         self.shared.slots.len()
     }
 
-    /// Engines not yet marked dead by a shard failure.
+    /// Local in-process engines (stored before any remotes).
+    pub fn n_local(&self) -> usize {
+        self.shared
+            .slots
+            .iter()
+            .filter(|s| matches!(s.node, Node::Local(_)))
+            .count()
+    }
+
+    /// Remote worker connections.
+    pub fn n_remote(&self) -> usize {
+        self.n_engines() - self.n_local()
+    }
+
+    /// Nodes not yet marked dead by a shard failure.
     pub fn n_alive(&self) -> usize {
         self.shared.alive_indices().len()
     }
@@ -151,18 +258,28 @@ where
         &self.shared.metrics
     }
 
+    /// The i-th **local** engine (locals occupy the low indices).
+    /// Panics on a remote node's index — remote engines expose no
+    /// in-process surface beyond submit.
     pub fn engine(&self, i: usize) -> &Engine<B> {
-        &self.shared.slots[i].engine
+        match &self.shared.slots[i].node {
+            Node::Local(e) => e,
+            Node::Remote(r) => panic!(
+                "cluster node {i} is remote ({}); only local engines \
+                 can be borrowed",
+                r.peer()
+            ),
+        }
     }
 
-    /// Shard `tasks` across the live engines and fan them out; returns
+    /// Shard `tasks` across the live nodes and fan them out; returns
     /// immediately with the stitching handle.
     pub fn submit(&self, tasks: Vec<B::Task>) -> Result<ClusterHandle<B>> {
         self.submit_with_retries(tasks, self.default_retries)
     }
 
     /// `submit` with an explicit per-shard-job retry budget (passed
-    /// through to each engine).
+    /// through to each node's engine).
     pub fn submit_with_retries(
         &self,
         tasks: Vec<B::Task>,
@@ -174,16 +291,16 @@ where
         }
         let plan = ShardPlan::contiguous(tasks.len(), alive.len());
         let mut shards = Vec::new();
-        for (k, range) in plan.iter().enumerate() {
-            if range.is_empty() {
-                continue;
-            }
-            let (engine, handle) = self.shared.submit_to_alive(
+        // empty shards (more nodes than tasks) are skipped at dispatch:
+        // shipping a zero-task job to a remote node would be a wasted
+        // round-trip, and even locally it is a pointless queue cycle
+        for (k, range) in plan.nonempty() {
+            let (node, handle) = self.shared.submit_to_alive(
                 &tasks[range.clone()],
                 alive[k],
                 max_retries,
             )?;
-            shards.push(ShardState { range, engine, handle: Some(handle) });
+            shards.push(ShardState { range, node, handle: Some(handle) });
         }
         Ok(ClusterHandle {
             tasks,
@@ -199,20 +316,21 @@ where
     }
 }
 
-/// One in-flight shard: its task range, the engine currently running
-/// it, and the engine job handle.
+/// One in-flight shard: its task range, the node currently running
+/// it, and the node job handle.
 struct ShardState<B: Backend> {
     range: Range<usize>,
-    engine: usize,
-    handle: Option<JobHandle<B::Task, B::Out>>,
+    node: usize,
+    handle: Option<NodeHandle<B::Task, B::Out>>,
 }
 
 /// Handle to one sharded submission. `wait()` awaits the shards in
-/// order, requeues any shard whose engine died onto a survivor, and
+/// order, requeues any shard whose node died onto a survivor, and
 /// returns results at their original task positions — the same
 /// contract as the single engine's [`JobHandle`]. Dropping the handle
 /// un-awaited cancels every outstanding shard job (each engine purges
-/// its queue), exactly like dropping a `JobHandle`.
+/// its queue; remote nodes are sent a best-effort cancel frame),
+/// exactly like dropping a `JobHandle`.
 pub struct ClusterHandle<B: Backend> {
     /// The full ordered task list, retained so a failed shard can be
     /// requeued verbatim (tasks are idempotent: Philox addressing is
@@ -230,17 +348,17 @@ pub struct ClusterHandle<B: Backend> {
 impl<B> ClusterHandle<B>
 where
     B: Backend + Send + Sync + 'static,
-    B::Task: Clone + Send + Sync + 'static,
-    B::Out: Send + 'static,
+    B::Task: Wire + Clone + Send + Sync + 'static,
+    B::Out: Wire + Send + 'static,
 {
     /// Block until every shard landed; results in task order. A shard
-    /// whose **engine died** is requeued onto the next surviving engine
+    /// whose **node died** is requeued onto the next surviving node
     /// (whole-shard rerun — exact, because tasks are idempotent); a
-    /// shard job that failed on a *healthy* engine (a task drained its
+    /// shard job that failed on a *healthy* node (a task drained its
     /// retry budget) surfaces its error directly, exactly like the
     /// single-engine path — rerunning a deterministic failure elsewhere
     /// would only cascade-kill the cluster. The requeue error surfaces
-    /// only when no engine is left to take the shard.
+    /// only when no node is left to take the shard.
     pub fn wait(mut self) -> Result<Vec<B::Out>> {
         let n = self.tasks.len();
         let mut results: Vec<Option<B::Out>> =
@@ -259,21 +377,21 @@ where
                                 )
                             },
                         )?;
-                        // engine alive ⇒ the job itself failed (task
+                        // node alive ⇒ the job itself failed (task
                         // error past its retry budget): not a placement
-                        // problem, so don't burn the other engines on it
-                        if !shared.slots[s.engine].engine.is_dead() {
+                        // problem, so don't burn the other nodes on it
+                        if !shared.slots[s.node].node.is_dead() {
                             return Err(err.context(format!(
                                 "shard {:?} failed on live engine {}",
-                                s.range, s.engine
+                                s.range, s.node
                             )));
                         }
-                        shared.mark_dead(s.engine);
+                        shared.mark_dead(s.node);
                         shared.metrics.failure();
-                        let (engine, h) = shared
+                        let (node, h) = shared
                             .submit_to_alive(
                                 &self.tasks[s.range.clone()],
-                                s.engine + 1,
+                                s.node + 1,
                                 self.max_retries,
                             )
                             .map_err(|e| {
@@ -281,11 +399,11 @@ where
                                     "no live engines left to requeue \
                                      shard {:?} (engine {} failed: \
                                      {err})",
-                                    s.range, s.engine
+                                    s.range, s.node
                                 ))
                             })?;
                         shared.metrics.retry();
-                        s.engine = engine;
+                        s.node = node;
                         handle = h;
                     }
                 }
@@ -329,19 +447,69 @@ where
 pub type DeviceCluster = Cluster<DeviceBackend>;
 
 impl Cluster<DeviceBackend> {
-    /// N engines over the same artifact registry, each with the pool's
-    /// worker topology (`pool.n_devices` workers per engine) — one
-    /// engine per device/host of the paper's cluster.
+    /// N local engines over the same artifact registry, each with the
+    /// pool's worker topology (`pool.n_devices` workers per engine) —
+    /// one engine per device of the paper's single-host cluster.
     pub fn for_pool(pool: &DevicePool, n_engines: usize) -> Result<Self> {
-        let engines = (0..n_engines.max(1))
-            .map(|_| Engine::for_pool(pool))
-            .collect::<Result<Vec<_>>>()?;
-        Cluster::from_engines(engines)
+        Self::for_pool_with_remotes(pool, n_engines.max(1), &[])
     }
 
-    /// The artifact registry the cluster's engines execute from.
+    /// `n_local` in-process engines plus one remote proxy per address
+    /// in `remotes` (`host:port` of a running `zmc worker`), with
+    /// default transport tuning. `n_local` may be 0 when at least one
+    /// remote is given.
+    pub fn for_pool_with_remotes(
+        pool: &DevicePool,
+        n_local: usize,
+        remotes: &[String],
+    ) -> Result<Self> {
+        Self::for_pool_with_remote_config(
+            pool,
+            n_local,
+            remotes,
+            RemoteConfig::default(),
+        )
+    }
+
+    /// [`Cluster::for_pool_with_remotes`] with explicit transport
+    /// tuning (tests shorten the heartbeat to fail fast).
+    pub fn for_pool_with_remote_config(
+        pool: &DevicePool,
+        n_local: usize,
+        remotes: &[String],
+        rcfg: RemoteConfig,
+    ) -> Result<Self> {
+        let engines = (0..n_local)
+            .map(|_| Engine::for_pool(pool))
+            .collect::<Result<Vec<_>>>()?;
+        let proxies = remotes
+            .iter()
+            .map(|addr| RemoteEngine::connect(addr, rcfg.clone()))
+            .collect::<Result<Vec<_>>>()?;
+        let mut cluster = Cluster::with_remotes(
+            engines,
+            proxies,
+            Arc::new(Metrics::new()),
+        )?;
+        // remote nodes carry no registry handle, so the cluster keeps
+        // its own: LaunchExec::registry works even when all-remote
+        cluster.registry = Some(Arc::clone(&pool.registry));
+        Ok(cluster)
+    }
+
+    /// The artifact registry the cluster's tasks are built against.
     pub fn registry(&self) -> &Registry {
-        self.shared.slots[0].engine.registry()
+        if let Some(r) = &self.registry {
+            return r;
+        }
+        for slot in &self.shared.slots {
+            if let Node::Local(e) = &slot.node {
+                return e.registry();
+            }
+        }
+        unreachable!(
+            "cluster built without a registry and without local engines"
+        )
     }
 }
 
@@ -505,5 +673,102 @@ mod tests {
         drop(h); // each shard's JobHandle cancels its engine job
         let h2 = c.submit((0..6).collect()).unwrap();
         assert_eq!(h2.wait().unwrap().len(), 6);
+    }
+
+    // -- mixed local/remote clusters over a loopback worker ------------
+
+    use crate::cluster::remote::{serve_worker, RemoteConfig, RemoteEngine};
+    use std::net::TcpListener;
+    use std::time::Duration;
+
+    fn loopback_worker() -> crate::cluster::remote::WorkerServer {
+        let engine = Engine::new(Mock, EngineConfig::new(2)).unwrap();
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        serve_worker(listener, engine).unwrap()
+    }
+
+    fn proxy(
+        w: &crate::cluster::remote::WorkerServer,
+    ) -> RemoteEngine<u64, u64> {
+        RemoteEngine::connect(
+            &w.addr().to_string(),
+            RemoteConfig {
+                ping_interval: Duration::from_millis(20),
+                ping_timeout: Duration::from_millis(500),
+                ..Default::default()
+            },
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn mixed_cluster_matches_local_results() {
+        let tasks: Vec<u64> = (0..97).collect();
+        let want = expect(&tasks);
+        let w = loopback_worker();
+        for n_remote in [1, 2] {
+            let engines =
+                vec![Engine::new(Mock, EngineConfig::new(1)).unwrap()];
+            let remotes: Vec<_> =
+                (0..n_remote).map(|_| proxy(&w)).collect();
+            let c = Cluster::with_remotes(
+                engines,
+                remotes,
+                Arc::new(Metrics::new()),
+            )
+            .unwrap();
+            assert_eq!(c.n_local(), 1);
+            assert_eq!(c.n_remote(), n_remote);
+            assert_eq!(c.run(tasks.clone()).unwrap(), want);
+        }
+        assert_eq!(
+            w.stats().empty_submits.load(Ordering::Relaxed),
+            0
+        );
+    }
+
+    #[test]
+    fn pure_remote_cluster_works() {
+        let w = loopback_worker();
+        let remotes = vec![proxy(&w), proxy(&w)];
+        let c = Cluster::with_remotes(
+            Vec::new(),
+            remotes,
+            Arc::new(Metrics::new()),
+        )
+        .unwrap();
+        assert_eq!(c.n_local(), 0);
+        assert_eq!(c.n_remote(), 2);
+        let tasks: Vec<u64> = (0..31).collect();
+        assert_eq!(c.run(tasks.clone()).unwrap(), expect(&tasks));
+    }
+
+    #[test]
+    fn killed_worker_shard_requeues_onto_local_survivor() {
+        let metrics = Arc::new(Metrics::new());
+        let w = loopback_worker();
+        let c = Cluster::with_remotes(
+            vec![Engine::new(Mock, EngineConfig::new(1)).unwrap()],
+            vec![proxy(&w)],
+            Arc::clone(&metrics),
+        )
+        .unwrap();
+        // sever the worker before the round; both interleavings
+        // converge: if the proxy's reader already saw the EOF the
+        // remote submit fails synchronously (marked dead in
+        // submit_to_alive), otherwise the submit lands in the dead
+        // socket and the shard fails mid-round (requeued by wait()) —
+        // either way the shard reruns on the local survivor exactly
+        w.kill();
+        std::thread::sleep(Duration::from_millis(20));
+        let tasks: Vec<u64> = (0..40).collect();
+        let out = c.run(tasks.clone()).unwrap();
+        assert_eq!(out, expect(&tasks));
+        assert_eq!(c.n_alive(), 1);
+        assert!(
+            metrics.retried() >= 1 || metrics.failed() >= 1,
+            "{}",
+            metrics.summary()
+        );
     }
 }

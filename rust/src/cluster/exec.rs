@@ -87,7 +87,10 @@ impl LaunchExec for DeviceEngine {
 
 impl LaunchExec for DeviceCluster {
     fn registry(&self) -> &Registry {
-        self.engine(0).backend().registry()
+        // the cluster's own accessor: answers from a local engine or
+        // the stored pool registry (a pure-remote cluster has no
+        // local engine to borrow one from)
+        self.registry()
     }
 
     fn submit_launches(

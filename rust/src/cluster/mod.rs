@@ -24,6 +24,16 @@
 //! driver's Neyman step ([`crate::adaptive`]) sees merged moments only
 //! and never knows how many engines sampled them.
 //!
+//! The same machinery spans hosts: [`wire`] defines a versioned
+//! length-prefixed binary frame protocol (bit-exact float transport),
+//! [`remote`] hosts an engine behind a TCP accept loop
+//! ([`remote::serve_worker`], the `zmc worker` subcommand) and proxies
+//! it client-side as a [`RemoteEngine`] with heartbeat death
+//! detection, and [`Cluster`] mixes local and remote nodes behind the
+//! unchanged submit surface — a killed worker host mid-round feeds the
+//! same whole-shard requeue path, so survivors still produce
+//! bit-identical results.
+//!
 //! [`sim`] keeps the original discrete-event scaling model (virtual
 //! devices, measured per-chunk durations) used by the C2 figure;
 //! `benches/cluster_scaling.rs` drives the *real* cluster and prices
@@ -33,10 +43,16 @@ pub mod core;
 pub mod exec;
 pub mod plan;
 pub mod reduce;
+pub mod remote;
 pub mod sim;
+pub mod wire;
 
 pub use self::core::{Cluster, ClusterHandle, DeviceCluster};
 pub use self::exec::{ExecHandle, LaunchExec};
 pub use self::plan::ShardPlan;
 pub use self::reduce::reduce_tagged;
+pub use self::remote::{
+    serve_worker, RemoteConfig, RemoteEngine, RemoteHandle, WorkerServer,
+};
 pub use self::sim::{scaling_sweep, simulate, SimResult};
+pub use self::wire::{Frame, Wire, WireError};

@@ -53,6 +53,20 @@ impl ShardPlan {
         self.ranges.iter().cloned()
     }
 
+    /// Non-empty shards with their original shard indices — what
+    /// dispatch should iterate: an empty shard (more engines than
+    /// tasks) must never become a submitted job, which for a remote
+    /// engine would be a wasted round-trip per empty shard.
+    pub fn nonempty(
+        &self,
+    ) -> impl Iterator<Item = (usize, Range<usize>)> + '_ {
+        self.ranges
+            .iter()
+            .cloned()
+            .enumerate()
+            .filter(|(_, r)| !r.is_empty())
+    }
+
     /// Largest shard size — the balance bound the scaling bench prices.
     pub fn max_shard_len(&self) -> usize {
         self.ranges.iter().map(|r| r.len()).max().unwrap_or(0)
@@ -105,6 +119,20 @@ mod tests {
         let lens: Vec<usize> = plan.iter().map(|r| r.len()).collect();
         assert_eq!(lens[..3], [1, 1, 1]);
         assert!(lens[3..].iter().all(|&l| l == 0));
+    }
+
+    #[test]
+    fn nonempty_skips_empties_and_keeps_indices() {
+        let plan = ShardPlan::contiguous(3, 8);
+        let got: Vec<(usize, Range<usize>)> = plan.nonempty().collect();
+        assert_eq!(got, vec![(0, 0..1), (1, 1..2), (2, 2..3)]);
+        // a full plan passes through untouched
+        let plan = ShardPlan::contiguous(10, 4);
+        assert_eq!(plan.nonempty().count(), 4);
+        assert!(plan
+            .nonempty()
+            .zip(plan.iter().enumerate())
+            .all(|((ka, ra), (kb, rb))| ka == kb && ra == rb));
     }
 
     #[test]

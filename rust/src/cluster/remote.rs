@@ -1,0 +1,898 @@
+//! Remote engines over TCP: the worker host (`serve_worker`) exposes a
+//! local [`Engine`] behind an accept loop speaking the
+//! [`wire`](super::wire) frame protocol, and [`RemoteEngine`] is the
+//! client-side proxy whose submit surface matches `Engine` closely
+//! enough for [`Cluster`](super::Cluster) to mix local and remote
+//! nodes transparently.
+//!
+//! Failure model: the transport never retries on its own. A dead
+//! connection (EOF, write error, or heartbeat timeout) marks the
+//! proxy dead and fails every pending job; the cluster's existing
+//! whole-shard requeue path then resubmits the shard to a survivor.
+//! Because every task bakes its Philox counter range into its inputs,
+//! the requeued shard recomputes bit-identical results wherever it
+//! lands — the transport only has to detect death, not preserve
+//! progress.
+//!
+//! Death detection is two-tier:
+//! - **instant**: the reader thread sees EOF / a socket error the
+//!   moment the peer closes (a killed process closes its sockets);
+//! - **heartbeat**: a pinger thread sends [`Frame::Ping`] every
+//!   [`RemoteConfig::ping_interval`] and declares death when no pong
+//!   arrives within [`RemoteConfig::ping_timeout`] — this catches
+//!   hung hosts and dead network paths where TCP would block for
+//!   minutes before noticing.
+
+use std::collections::HashMap;
+use std::io::BufReader;
+use std::marker::PhantomData;
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{self, RecvTimeoutError};
+use std::sync::{Arc, Condvar, Mutex, Weak};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::engine::core::{lock_ok, wait_ok, Backend, Engine, JobHandle};
+
+use super::wire::{Frame, Wire};
+
+/// Transport tuning knobs. Defaults suit LAN workers; tests inject
+/// short timeouts to make hung-host detection fast.
+#[derive(Debug, Clone)]
+pub struct RemoteConfig {
+    /// How often the proxy pings the worker.
+    pub ping_interval: Duration,
+    /// Silence (no pong, no result) after which the worker is
+    /// declared dead. Should be several multiples of `ping_interval`.
+    pub ping_timeout: Duration,
+    /// Connection attempts before `connect` gives up (covers the
+    /// worker still starting up).
+    pub connect_retries: u32,
+    /// Backoff between connection attempts, doubled each retry up to
+    /// 8× the base.
+    pub connect_backoff: Duration,
+}
+
+impl Default for RemoteConfig {
+    fn default() -> Self {
+        RemoteConfig {
+            ping_interval: Duration::from_millis(250),
+            ping_timeout: Duration::from_secs(2),
+            connect_retries: 20,
+            connect_backoff: Duration::from_millis(50),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// client side: RemoteEngine proxy
+// ---------------------------------------------------------------------------
+
+/// One in-flight remote job: result slot + wakeup for `wait`.
+struct Pending<R> {
+    result: Mutex<Option<std::result::Result<Vec<R>, String>>>,
+    cv: Condvar,
+}
+
+impl<R> Pending<R> {
+    fn new() -> Self {
+        Pending { result: Mutex::new(None), cv: Condvar::new() }
+    }
+
+    /// First completion wins; later ones (e.g. a result racing the
+    /// death sweep) are dropped.
+    fn complete(&self, res: std::result::Result<Vec<R>, String>) {
+        let mut slot = lock_ok(&self.result);
+        if slot.is_none() {
+            *slot = Some(res);
+            self.cv.notify_all();
+        }
+    }
+
+    fn is_done(&self) -> bool {
+        lock_ok(&self.result).is_some()
+    }
+}
+
+struct RemoteShared<R> {
+    peer: String,
+    /// Write half; one whole-frame `write_all` per lock hold, so
+    /// submit/ping/cancel frames never interleave.
+    writer: Mutex<TcpStream>,
+    /// Socket handle kept for `shutdown` — unblocks the reader thread
+    /// on drop and on heartbeat death.
+    sock: TcpStream,
+    pending: Mutex<HashMap<u64, Arc<Pending<R>>>>,
+    next_id: AtomicU64,
+    dead: AtomicBool,
+    stop: AtomicBool,
+    /// Last proof of life from the worker (pong or any result frame),
+    /// as millis since `born`.
+    last_alive_ms: AtomicU64,
+    born: Instant,
+}
+
+impl<R> RemoteShared<R> {
+    fn touch(&self) {
+        let ms = self.born.elapsed().as_millis() as u64;
+        self.last_alive_ms.store(ms, Ordering::Relaxed);
+    }
+
+    fn silence(&self) -> Duration {
+        let last = self.last_alive_ms.load(Ordering::Relaxed);
+        let now = self.born.elapsed().as_millis() as u64;
+        Duration::from_millis(now.saturating_sub(last))
+    }
+
+    /// Declare the worker dead: fail every pending job and unblock
+    /// the reader. Idempotent; the `dead` flag is set *before* any
+    /// job observes its failure, so `Cluster` always sees
+    /// `is_dead() == true` when a shard comes back with an error.
+    fn mark_dead(&self, why: &str) {
+        if self.dead.swap(true, Ordering::SeqCst) {
+            return;
+        }
+        let _ = self.sock.shutdown(Shutdown::Both);
+        let jobs: Vec<Arc<Pending<R>>> =
+            lock_ok(&self.pending).drain().map(|(_, j)| j).collect();
+        for job in jobs {
+            job.complete(Err(format!(
+                "remote engine {}: {why}",
+                self.peer
+            )));
+        }
+    }
+
+    fn complete_id(
+        &self,
+        id: u64,
+        res: std::result::Result<Vec<R>, String>,
+    ) {
+        if let Some(job) = lock_ok(&self.pending).remove(&id) {
+            job.complete(res);
+        }
+    }
+}
+
+/// Client-side proxy for an engine hosted by a `zmc worker` process.
+/// Generic over the task/result payload so the transport is testable
+/// against mock backends; production uses
+/// `RemoteEngine<LaunchTask, TaggedOutput>`.
+pub struct RemoteEngine<T, R> {
+    shared: Arc<RemoteShared<R>>,
+    reader: Option<thread::JoinHandle<()>>,
+    pinger: Option<thread::JoinHandle<()>>,
+    _task: PhantomData<fn(T) -> T>,
+}
+
+impl<T, R> RemoteEngine<T, R>
+where
+    T: Wire,
+    R: Wire + Send + 'static,
+{
+    /// Connect to a worker, retrying with backoff while it starts up.
+    pub fn connect(addr: &str, cfg: RemoteConfig) -> Result<Self> {
+        let mut backoff = cfg.connect_backoff;
+        let mut last_err = None;
+        for _ in 0..cfg.connect_retries.max(1) {
+            match TcpStream::connect(addr) {
+                Ok(stream) => return Self::from_stream(stream, addr, &cfg),
+                Err(e) => {
+                    last_err = Some(e);
+                    thread::sleep(backoff);
+                    backoff =
+                        (backoff * 2).min(cfg.connect_backoff * 8);
+                }
+            }
+        }
+        Err(anyhow!(last_err.unwrap())).with_context(|| {
+            format!(
+                "connecting to remote worker {addr} \
+                 ({} attempts)",
+                cfg.connect_retries.max(1)
+            )
+        })
+    }
+
+    fn from_stream(
+        stream: TcpStream,
+        addr: &str,
+        cfg: &RemoteConfig,
+    ) -> Result<Self> {
+        stream.set_nodelay(true).ok();
+        let writer = stream
+            .try_clone()
+            .context("cloning worker socket for writes")?;
+        let read_half = stream
+            .try_clone()
+            .context("cloning worker socket for reads")?;
+        let shared = Arc::new(RemoteShared::<R> {
+            peer: addr.to_string(),
+            writer: Mutex::new(writer),
+            sock: stream,
+            pending: Mutex::new(HashMap::new()),
+            next_id: AtomicU64::new(1),
+            dead: AtomicBool::new(false),
+            stop: AtomicBool::new(false),
+            last_alive_ms: AtomicU64::new(0),
+            born: Instant::now(),
+        });
+        shared.touch();
+
+        let reader = {
+            let shared = Arc::clone(&shared);
+            thread::Builder::new()
+                .name(format!("zmc-remote-rx-{addr}"))
+                .spawn(move || reader_loop::<T, R>(shared, read_half))
+                .context("spawning remote reader thread")?
+        };
+        let pinger = {
+            let shared = Arc::clone(&shared);
+            let cfg = cfg.clone();
+            thread::Builder::new()
+                .name(format!("zmc-remote-ping-{addr}"))
+                .spawn(move || ping_loop::<T, R>(shared, cfg))
+                .context("spawning remote heartbeat thread")?
+        };
+
+        Ok(RemoteEngine {
+            shared,
+            reader: Some(reader),
+            pinger: Some(pinger),
+            _task: PhantomData,
+        })
+    }
+
+    /// Address this proxy connected to.
+    pub fn peer(&self) -> &str {
+        &self.shared.peer
+    }
+
+    /// True once the connection is closed, errored, or heartbeat
+    /// timed out. Mirrors `Engine::is_dead` for the cluster's
+    /// dead-node requeue decision.
+    pub fn is_dead(&self) -> bool {
+        self.shared.dead.load(Ordering::SeqCst)
+    }
+
+    /// Ship a task batch to the worker as one engine job. Mirrors
+    /// `Engine::submit_with_retries`; the retry budget applies on the
+    /// worker's engine (task-level retries stay local to the host).
+    pub fn submit_with_retries(
+        &self,
+        tasks: Vec<T>,
+        max_retries: u32,
+    ) -> Result<RemoteHandle<R>> {
+        if self.is_dead() {
+            bail!("remote engine {} is dead", self.shared.peer);
+        }
+        let id = self.shared.next_id.fetch_add(1, Ordering::Relaxed);
+        let job = Arc::new(Pending::new());
+        lock_ok(&self.shared.pending).insert(id, Arc::clone(&job));
+
+        let frame = Frame::<T, R>::Submit { id, max_retries, tasks };
+        let wrote = {
+            let mut w = lock_ok(&self.shared.writer);
+            frame.write_to(&mut *w)
+        };
+        if let Err(e) = wrote {
+            self.shared.mark_dead(&format!("send failed: {e}"));
+        } else if self.is_dead() {
+            // death raced the insert: the sweep may have missed this
+            // job, so fail it explicitly rather than hang its waiter
+            self.shared
+                .complete_id(id, Err(format!(
+                    "remote engine {} died during submit",
+                    self.shared.peer
+                )));
+        }
+        if self.is_dead() {
+            // the pending entry (if any) was already failed above
+            let _ = lock_ok(&self.shared.pending).remove(&id);
+            bail!(
+                "remote engine {} died during submit",
+                self.shared.peer
+            );
+        }
+        Ok(RemoteHandle {
+            id,
+            job,
+            shared: Arc::downgrade(&self.shared),
+            waited: false,
+        })
+    }
+}
+
+impl<T, R> Drop for RemoteEngine<T, R> {
+    fn drop(&mut self) {
+        self.shared.stop.store(true, Ordering::SeqCst);
+        let _ = self.shared.sock.shutdown(Shutdown::Both);
+        if let Some(h) = self.reader.take() {
+            let _ = h.join();
+        }
+        if let Some(h) = self.pinger.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn reader_loop<T, R>(shared: Arc<RemoteShared<R>>, stream: TcpStream)
+where
+    T: Wire,
+    R: Wire,
+{
+    let mut rd = BufReader::new(stream);
+    loop {
+        match Frame::<T, R>::read_from(&mut rd) {
+            Ok(Some(Frame::Pong { .. })) => shared.touch(),
+            Ok(Some(Frame::Result { id, outs })) => {
+                shared.touch();
+                shared.complete_id(id, Ok(outs));
+            }
+            Ok(Some(Frame::Error { id, msg })) => {
+                shared.touch();
+                shared.complete_id(id, Err(msg));
+            }
+            // Ping/Submit/Cancel from a worker are protocol noise;
+            // still proof the peer is alive
+            Ok(Some(_)) => shared.touch(),
+            Ok(None) => {
+                shared.mark_dead("connection closed by worker");
+                return;
+            }
+            Err(e) => {
+                if shared.stop.load(Ordering::SeqCst) {
+                    // local shutdown raced the read; not a failure
+                    shared.mark_dead("proxy shut down");
+                } else {
+                    shared.mark_dead(&format!("read failed: {e:#}"));
+                }
+                return;
+            }
+        }
+        if shared.stop.load(Ordering::SeqCst) {
+            shared.mark_dead("proxy shut down");
+            return;
+        }
+    }
+}
+
+fn ping_loop<T, R>(shared: Arc<RemoteShared<R>>, cfg: RemoteConfig)
+where
+    T: Wire,
+    R: Wire,
+{
+    let step = Duration::from_millis(25).min(cfg.ping_interval);
+    let mut nonce = 0u64;
+    let mut since_ping = Duration::ZERO;
+    loop {
+        if shared.stop.load(Ordering::SeqCst)
+            || shared.dead.load(Ordering::SeqCst)
+        {
+            return;
+        }
+        if shared.silence() > cfg.ping_timeout {
+            shared.mark_dead(&format!(
+                "heartbeat timeout ({}ms without a pong)",
+                cfg.ping_timeout.as_millis()
+            ));
+            return;
+        }
+        if since_ping >= cfg.ping_interval {
+            since_ping = Duration::ZERO;
+            nonce += 1;
+            let wrote = {
+                let mut w = lock_ok(&shared.writer);
+                Frame::<T, R>::Ping { nonce }.write_to(&mut *w)
+            };
+            if let Err(e) = wrote {
+                shared.mark_dead(&format!("ping failed: {e}"));
+                return;
+            }
+        }
+        thread::sleep(step);
+        since_ping += step;
+    }
+}
+
+/// Handle to one remote job; mirrors `JobHandle`'s wait/is_done/Drop
+/// contract (dropping an unawaited handle sends a best-effort cancel).
+pub struct RemoteHandle<R> {
+    id: u64,
+    job: Arc<Pending<R>>,
+    shared: Weak<RemoteShared<R>>,
+    waited: bool,
+}
+
+impl<R> RemoteHandle<R> {
+    /// Block until the worker answers (or the connection dies).
+    pub fn wait(mut self) -> Result<Vec<R>> {
+        self.waited = true;
+        let mut slot = lock_ok(&self.job.result);
+        loop {
+            if let Some(res) = slot.take() {
+                return res.map_err(|msg| anyhow!(msg));
+            }
+            slot = wait_ok(&self.job.cv, slot);
+        }
+    }
+
+    pub fn is_done(&self) -> bool {
+        self.job.is_done()
+    }
+}
+
+impl<R> Drop for RemoteHandle<R> {
+    fn drop(&mut self) {
+        if self.waited || self.job.is_done() {
+            return;
+        }
+        if let Some(shared) = self.shared.upgrade() {
+            let _ = lock_ok(&shared.pending).remove(&self.id);
+            if !shared.dead.load(Ordering::SeqCst) {
+                let mut w = lock_ok(&shared.writer);
+                let _ = Frame::<u64, R>::Cancel { id: self.id }
+                    .write_to(&mut *w);
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// server side: worker host
+// ---------------------------------------------------------------------------
+
+/// Counters exposed by a [`WorkerServer`] — the cluster tests assert
+/// `empty_submits == 0` (empty shards must be skipped at dispatch,
+/// never shipped).
+#[derive(Debug, Default)]
+pub struct WorkerStats {
+    pub connections: AtomicU64,
+    pub submits: AtomicU64,
+    pub empty_submits: AtomicU64,
+    pub tasks: AtomicU64,
+}
+
+/// A running worker host: TCP accept loop in front of one local
+/// engine. Connections multiplex jobs; each gets its own service
+/// thread so one slow peer cannot stall another.
+pub struct WorkerServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    conns: Arc<Mutex<Vec<TcpStream>>>,
+    stats: Arc<WorkerStats>,
+    accept: Option<thread::JoinHandle<()>>,
+}
+
+impl WorkerServer {
+    /// Bound address (use port 0 in tests to get an ephemeral port).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    pub fn stats(&self) -> &WorkerStats {
+        &self.stats
+    }
+
+    /// Abrupt shutdown: sever every client connection mid-flight and
+    /// stop accepting. Clients observe EOF instantly — this is the
+    /// "kill the worker host mid-round" test hook (in production the
+    /// same effect comes from the process dying).
+    pub fn kill(&self) {
+        self.stop.store(true, Ordering::SeqCst);
+        for s in lock_ok(&self.conns).drain(..) {
+            let _ = s.shutdown(Shutdown::Both);
+        }
+    }
+
+    /// Block until the server is stopped (the `zmc worker` foreground
+    /// mode). Returns after [`kill`](Self::kill) from another thread
+    /// or process signal teardown.
+    pub fn join(mut self) {
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for WorkerServer {
+    fn drop(&mut self) {
+        self.kill();
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Host `engine` behind `listener`. Returns immediately; the accept
+/// loop and per-connection service threads run in the background until
+/// the server is killed or dropped.
+pub fn serve_worker<B>(
+    listener: TcpListener,
+    engine: Engine<B>,
+) -> Result<WorkerServer>
+where
+    B: Backend + Send + Sync + 'static,
+    B::Task: Wire + Clone + Send + Sync + 'static,
+    B::Out: Wire + Send + 'static,
+{
+    listener
+        .set_nonblocking(true)
+        .context("setting worker listener non-blocking")?;
+    let addr = listener
+        .local_addr()
+        .context("reading worker listener address")?;
+    let stop = Arc::new(AtomicBool::new(false));
+    let conns: Arc<Mutex<Vec<TcpStream>>> =
+        Arc::new(Mutex::new(Vec::new()));
+    let stats = Arc::new(WorkerStats::default());
+    let engine = Arc::new(engine);
+
+    let accept = {
+        let stop = Arc::clone(&stop);
+        let conns = Arc::clone(&conns);
+        let stats = Arc::clone(&stats);
+        thread::Builder::new()
+            .name("zmc-worker-accept".to_string())
+            .spawn(move || {
+                accept_loop(listener, engine, stop, conns, stats)
+            })
+            .context("spawning worker accept thread")?
+    };
+
+    Ok(WorkerServer { addr, stop, conns, stats, accept: Some(accept) })
+}
+
+fn accept_loop<B>(
+    listener: TcpListener,
+    engine: Arc<Engine<B>>,
+    stop: Arc<AtomicBool>,
+    conns: Arc<Mutex<Vec<TcpStream>>>,
+    stats: Arc<WorkerStats>,
+) where
+    B: Backend + Send + Sync + 'static,
+    B::Task: Wire + Clone + Send + Sync + 'static,
+    B::Out: Wire + Send + 'static,
+{
+    while !stop.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((stream, peer)) => {
+                stream.set_nodelay(true).ok();
+                stats.connections.fetch_add(1, Ordering::Relaxed);
+                if let Ok(clone) = stream.try_clone() {
+                    lock_ok(&conns).push(clone);
+                }
+                let engine = Arc::clone(&engine);
+                let stop = Arc::clone(&stop);
+                let stats = Arc::clone(&stats);
+                // service threads are detached: they exit when their
+                // socket closes (kill/Drop shuts every socket down)
+                let _ = thread::Builder::new()
+                    .name(format!("zmc-worker-conn-{peer}"))
+                    .spawn(move || {
+                        serve_conn(stream, engine, stop, stats)
+                    });
+            }
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock =>
+            {
+                thread::sleep(Duration::from_millis(5));
+            }
+            Err(_) => thread::sleep(Duration::from_millis(5)),
+        }
+    }
+}
+
+/// Service one client connection: a blocking reader thread feeds
+/// frames through a channel; this loop answers pings immediately,
+/// submits jobs to the engine, and polls in-flight handles so results
+/// stream back as soon as each job finishes (heartbeats keep flowing
+/// while jobs run — the whole point of the two-thread split).
+fn serve_conn<B>(
+    stream: TcpStream,
+    engine: Arc<Engine<B>>,
+    stop: Arc<AtomicBool>,
+    stats: Arc<WorkerStats>,
+) where
+    B: Backend + Send + Sync + 'static,
+    B::Task: Wire + Clone + Send + Sync + 'static,
+    B::Out: Wire + Send + 'static,
+{
+    type Fr<B> =
+        Frame<<B as Backend>::Task, <B as Backend>::Out>;
+
+    let Ok(read_half) = stream.try_clone() else { return };
+    let (tx, rx) = mpsc::channel::<Fr<B>>();
+    let reader = thread::spawn(move || {
+        let mut rd = BufReader::new(read_half);
+        loop {
+            match Frame::read_from(&mut rd) {
+                Ok(Some(frame)) => {
+                    if tx.send(frame).is_err() {
+                        return;
+                    }
+                }
+                // EOF or corrupt frame: stop reading; the service
+                // loop sees the channel hang up and tears down
+                Ok(None) | Err(_) => return,
+            }
+        }
+    });
+
+    let mut write = stream;
+    let mut inflight: Vec<(u64, JobHandle<B::Task, B::Out>)> =
+        Vec::new();
+    'serve: loop {
+        match rx.recv_timeout(Duration::from_millis(2)) {
+            Ok(Frame::Ping { nonce }) => {
+                if Fr::<B>::Pong { nonce }.write_to(&mut write).is_err()
+                {
+                    break 'serve;
+                }
+            }
+            Ok(Frame::Submit { id, max_retries, tasks }) => {
+                stats.submits.fetch_add(1, Ordering::Relaxed);
+                if tasks.is_empty() {
+                    stats
+                        .empty_submits
+                        .fetch_add(1, Ordering::Relaxed);
+                }
+                stats
+                    .tasks
+                    .fetch_add(tasks.len() as u64, Ordering::Relaxed);
+                match engine.submit_with_retries(tasks, max_retries) {
+                    Ok(h) => inflight.push((id, h)),
+                    Err(e) => {
+                        let frame = Fr::<B>::Error {
+                            id,
+                            msg: format!("{e:#}"),
+                        };
+                        if frame.write_to(&mut write).is_err() {
+                            break 'serve;
+                        }
+                    }
+                }
+            }
+            Ok(Frame::Cancel { id }) => {
+                // dropping the handle cancels + purges engine-side
+                inflight.retain(|(jid, _)| *jid != id);
+            }
+            Ok(_) => {} // Pong/Result/Error from a client: ignore
+            Err(RecvTimeoutError::Timeout) => {}
+            Err(RecvTimeoutError::Disconnected) => break 'serve,
+        }
+
+        let mut i = 0;
+        while i < inflight.len() {
+            if !inflight[i].1.is_done() {
+                i += 1;
+                continue;
+            }
+            let (id, handle) = inflight.swap_remove(i);
+            let frame = match handle.wait() {
+                Ok(outs) => Fr::<B>::Result { id, outs },
+                Err(e) => {
+                    Fr::<B>::Error { id, msg: format!("{e:#}") }
+                }
+            };
+            if frame.write_to(&mut write).is_err() {
+                break 'serve;
+            }
+        }
+
+        if stop.load(Ordering::SeqCst) && inflight.is_empty() {
+            break 'serve;
+        }
+    }
+    // closing the socket unblocks the reader thread (same underlying
+    // socket as the clone it reads from)
+    let _ = write.shutdown(Shutdown::Both);
+    drop(write);
+    let _ = reader.join();
+    // any still-inflight handles drop here -> engine-side cancel
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::Metrics;
+    use crate::engine::core::{EngineConfig, FaultPlan};
+
+    /// Mock backend over the same `u64 -> u64` function the cluster
+    /// core tests use, so remote results are directly comparable.
+    struct Mock;
+
+    impl Backend for Mock {
+        type Task = u64;
+        type Out = u64;
+        type Ctx = ();
+
+        fn make_ctx(&self, _worker: usize) -> Result<()> {
+            Ok(())
+        }
+
+        fn run(&self, _ctx: &(), task: &u64) -> Result<u64> {
+            Ok(task * 31 + 7)
+        }
+    }
+
+    fn worker(n_workers: usize) -> WorkerServer {
+        let engine = Engine::new(
+            Mock,
+            EngineConfig { n_workers, ..Default::default() },
+        )
+        .unwrap();
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        serve_worker(listener, engine).unwrap()
+    }
+
+    fn fast_cfg() -> RemoteConfig {
+        RemoteConfig {
+            ping_interval: Duration::from_millis(20),
+            ping_timeout: Duration::from_millis(250),
+            connect_retries: 10,
+            connect_backoff: Duration::from_millis(10),
+        }
+    }
+
+    fn connect(w: &WorkerServer) -> RemoteEngine<u64, u64> {
+        RemoteEngine::connect(&w.addr().to_string(), fast_cfg())
+            .unwrap()
+    }
+
+    #[test]
+    fn loopback_submit_round_trips() {
+        let w = worker(2);
+        let eng = connect(&w);
+        let tasks: Vec<u64> = (0..40).collect();
+        let outs = eng
+            .submit_with_retries(tasks.clone(), 0)
+            .unwrap()
+            .wait()
+            .unwrap();
+        let want: Vec<u64> =
+            tasks.iter().map(|t| t * 31 + 7).collect();
+        assert_eq!(outs, want);
+        assert_eq!(w.stats().submits.load(Ordering::Relaxed), 1);
+        assert_eq!(w.stats().empty_submits.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn multiple_jobs_multiplex_one_connection() {
+        let w = worker(2);
+        let eng = connect(&w);
+        let handles: Vec<_> = (0..6)
+            .map(|k| {
+                let tasks: Vec<u64> =
+                    (k * 10..k * 10 + 10).collect();
+                (tasks.clone(),
+                 eng.submit_with_retries(tasks, 0).unwrap())
+            })
+            .collect();
+        for (tasks, h) in handles {
+            let want: Vec<u64> =
+                tasks.iter().map(|t| t * 31 + 7).collect();
+            assert_eq!(h.wait().unwrap(), want);
+        }
+    }
+
+    #[test]
+    fn worker_kill_fails_pending_and_marks_dead() {
+        struct Stuck;
+        impl Backend for Stuck {
+            type Task = u64;
+            type Out = u64;
+            type Ctx = ();
+            fn make_ctx(&self, _w: usize) -> Result<()> {
+                Ok(())
+            }
+            fn run(&self, _ctx: &(), _task: &u64) -> Result<u64> {
+                thread::sleep(Duration::from_secs(30));
+                Ok(0)
+            }
+        }
+        let engine = Engine::new(
+            Stuck,
+            EngineConfig { n_workers: 1, ..Default::default() },
+        )
+        .unwrap();
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let w = serve_worker(listener, engine).unwrap();
+        let eng: RemoteEngine<u64, u64> =
+            RemoteEngine::connect(&w.addr().to_string(), fast_cfg())
+                .unwrap();
+        let h = eng.submit_with_retries(vec![1, 2, 3], 0).unwrap();
+        assert!(!h.is_done());
+        w.kill();
+        let err = h.wait().unwrap_err().to_string();
+        assert!(err.contains("remote engine"), "{err}");
+        assert!(eng.is_dead());
+        assert!(eng.submit_with_retries(vec![4], 0).is_err());
+    }
+
+    #[test]
+    fn heartbeat_detects_hung_host() {
+        // a listener that accepts and then never reads or writes —
+        // TCP stays "connected", only the heartbeat can notice
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let hold = thread::spawn(move || {
+            let conn = listener.accept().map(|(s, _)| s);
+            thread::sleep(Duration::from_secs(2));
+            drop(conn);
+        });
+        let eng: RemoteEngine<u64, u64> =
+            RemoteEngine::connect(&addr.to_string(), fast_cfg())
+                .unwrap();
+        let h = eng.submit_with_retries(vec![9], 0).unwrap();
+        let err = h.wait().unwrap_err().to_string();
+        assert!(err.contains("heartbeat timeout"), "{err}");
+        assert!(eng.is_dead());
+        hold.join().unwrap();
+    }
+
+    #[test]
+    fn live_engine_task_failure_is_not_death() {
+        struct BadThirteen;
+        impl Backend for BadThirteen {
+            type Task = u64;
+            type Out = u64;
+            type Ctx = ();
+            fn make_ctx(&self, _w: usize) -> Result<()> {
+                Ok(())
+            }
+            fn run(&self, _ctx: &(), task: &u64) -> Result<u64> {
+                if *task == 13 {
+                    bail!("unlucky task");
+                }
+                Ok(task * 31 + 7)
+            }
+        }
+        let engine = Engine::with_policy(
+            BadThirteen,
+            EngineConfig { n_workers: 2, ..Default::default() },
+            FaultPlan::none(),
+            Arc::new(Metrics::new()),
+        )
+        .unwrap();
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let w = serve_worker(listener, engine).unwrap();
+        let eng: RemoteEngine<u64, u64> =
+            RemoteEngine::connect(&w.addr().to_string(), fast_cfg())
+                .unwrap();
+        let err = eng
+            .submit_with_retries(vec![12, 13, 14], 0)
+            .unwrap()
+            .wait()
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("unlucky"), "{err}");
+        // the worker host is fine: not dead, next job succeeds
+        assert!(!eng.is_dead());
+        let outs = eng
+            .submit_with_retries(vec![1], 0)
+            .unwrap()
+            .wait()
+            .unwrap();
+        assert_eq!(outs, vec![38]);
+    }
+
+    #[test]
+    fn dropped_handle_cancels_without_killing_connection() {
+        let w = worker(1);
+        let eng = connect(&w);
+        let h = eng.submit_with_retries(vec![5], 0).unwrap();
+        drop(h);
+        // connection still serves new jobs after the cancel
+        let outs = eng
+            .submit_with_retries(vec![2], 0)
+            .unwrap()
+            .wait()
+            .unwrap();
+        assert_eq!(outs, vec![69]);
+        assert!(!eng.is_dead());
+    }
+}

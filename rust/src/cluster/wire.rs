@@ -1,0 +1,753 @@
+//! Binary wire format for the cluster transport: versioned,
+//! length-prefixed frames carrying task batches and result batches
+//! between a [`crate::cluster::RemoteEngine`] proxy and a `zmc worker`
+//! host.
+//!
+//! Layout of one frame (all integers little-endian):
+//!
+//! ```text
+//! +------+---------+------+-------------+-----------+
+//! | "ZMCW" | version | type | payload len | payload  |
+//! |  4 B   |  u16    | u8   |    u32      |  len B   |
+//! +------+---------+------+-------------+-----------+
+//! ```
+//!
+//! The payload is the [`Wire`]-encoded body of one [`Frame`] variant.
+//! Floats travel as raw IEEE-754 bit patterns (`f32::to_bits` /
+//! `f64::to_bits`), so a task executed remotely sees **bit-identical**
+//! inputs and the caller sees bit-identical outputs — the same
+//! lossless-codec discipline `util::json::wire_f64` established for
+//! the JSON surface, in a compact binary form (a `LaunchTask` is
+//! mostly `Vec<f32>` payloads; base-10 round-tripping them would cost
+//! ~3× the bytes for zero fidelity gain).
+//!
+//! Every decode failure is a typed [`WireError`] (truncated frame, bad
+//! magic, unknown version, unknown message type, oversized payload,
+//! trailing bytes), recoverable from an `anyhow` chain with
+//! `err.downcast_ref::<WireError>()` — the transport tests assert on
+//! the variants, and the worker drops a connection on the first
+//! malformed frame instead of guessing at resynchronization.
+
+use std::io::{Read, Write};
+use std::time::Duration;
+
+use crate::engine::{LaunchTask, TaggedOutput};
+use crate::runtime::launch::Value;
+
+/// Leading frame bytes; anything else on the socket is not this
+/// protocol (catches HTTP requests, random port scans, stream
+/// desynchronization).
+pub const WIRE_MAGIC: [u8; 4] = *b"ZMCW";
+
+/// Version of the frame layout + payload encodings this build speaks.
+/// Bump on any incompatible change; a worker answering a newer client
+/// fails with a typed [`WireError::BadVersion`] instead of
+/// misinterpreting bytes.
+pub const WIRE_VERSION: u16 = 1;
+
+/// Upper bound on one frame's payload (64 MiB). A length prefix above
+/// it is treated as stream corruption, not an allocation request.
+pub const MAX_PAYLOAD: u32 = 64 << 20;
+
+const HEADER_LEN: usize = 4 + 2 + 1 + 4;
+
+/// Typed decode failures of the cluster wire format.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum WireError {
+    /// The buffer ended before the value it should contain.
+    Truncated {
+        /// Bytes the decoder needed next.
+        need: usize,
+        /// Bytes that were left.
+        have: usize,
+    },
+    /// The frame does not start with [`WIRE_MAGIC`].
+    BadMagic {
+        got: [u8; 4],
+    },
+    /// The frame declares a version this build does not speak.
+    BadVersion {
+        got: u16,
+    },
+    /// Unknown message-type byte.
+    BadTag {
+        got: u8,
+    },
+    /// Unknown enum discriminant inside a payload (e.g. a `Value`
+    /// dtype byte).
+    BadDiscriminant {
+        what: &'static str,
+        got: u8,
+    },
+    /// Payload length prefix above [`MAX_PAYLOAD`].
+    TooLarge {
+        got: u32,
+        max: u32,
+    },
+    /// Bytes were left over after the payload decoded completely.
+    Trailing {
+        extra: usize,
+    },
+}
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WireError::Truncated { need, have } => write!(
+                f,
+                "truncated frame: needed {need} more byte(s), had {have}"
+            ),
+            WireError::BadMagic { got } => {
+                write!(f, "bad frame magic {got:02x?} (expected \"ZMCW\")")
+            }
+            WireError::BadVersion { got } => write!(
+                f,
+                "unsupported wire version {got} (this build speaks v{})",
+                WIRE_VERSION
+            ),
+            WireError::BadTag { got } => {
+                write!(f, "unknown frame type {got}")
+            }
+            WireError::BadDiscriminant { what, got } => {
+                write!(f, "unknown {what} discriminant {got}")
+            }
+            WireError::TooLarge { got, max } => write!(
+                f,
+                "frame payload of {got} bytes exceeds the {max}-byte cap"
+            ),
+            WireError::Trailing { extra } => {
+                write!(f, "{extra} trailing byte(s) after frame payload")
+            }
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
+
+/// Cursor over one frame's payload bytes.
+pub struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        Reader { buf, pos: 0 }
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], WireError> {
+        if self.remaining() < n {
+            return Err(WireError::Truncated {
+                need: n,
+                have: self.remaining(),
+            });
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn u8(&mut self) -> Result<u8, WireError> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn u32(&mut self) -> Result<u32, WireError> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    pub fn u64(&mut self) -> Result<u64, WireError> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes([
+            b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7],
+        ]))
+    }
+
+    /// A length prefix that must also fit in the bytes that remain —
+    /// rejects absurd lengths before any allocation.
+    fn len_prefix(&mut self, unit: usize) -> Result<usize, WireError> {
+        let n = self.u32()? as usize;
+        let need = n.saturating_mul(unit.max(1));
+        if need > self.remaining() {
+            return Err(WireError::Truncated {
+                need,
+                have: self.remaining(),
+            });
+        }
+        Ok(n)
+    }
+}
+
+/// A value that travels inside a frame payload. Encoding is
+/// infallible (append to a buffer); decoding reports typed
+/// [`WireError`]s.
+pub trait Wire: Sized {
+    fn encode(&self, out: &mut Vec<u8>);
+    fn decode(r: &mut Reader<'_>) -> Result<Self, WireError>;
+}
+
+impl Wire for u32 {
+    fn encode(&self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&self.to_le_bytes());
+    }
+
+    fn decode(r: &mut Reader<'_>) -> Result<Self, WireError> {
+        r.u32()
+    }
+}
+
+impl Wire for u64 {
+    fn encode(&self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&self.to_le_bytes());
+    }
+
+    fn decode(r: &mut Reader<'_>) -> Result<Self, WireError> {
+        r.u64()
+    }
+}
+
+impl Wire for f32 {
+    /// Raw IEEE-754 bits: bit-exact for every value incl. NaN payloads
+    /// and -0.0.
+    fn encode(&self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&self.to_bits().to_le_bytes());
+    }
+
+    fn decode(r: &mut Reader<'_>) -> Result<Self, WireError> {
+        Ok(f32::from_bits(r.u32()?))
+    }
+}
+
+impl Wire for String {
+    fn encode(&self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&(self.len() as u32).to_le_bytes());
+        out.extend_from_slice(self.as_bytes());
+    }
+
+    fn decode(r: &mut Reader<'_>) -> Result<Self, WireError> {
+        let n = r.len_prefix(1)?;
+        let b = r.take(n)?;
+        // executable names and error messages only; lossy keeps the
+        // decode total without a dedicated utf-8 error variant
+        Ok(String::from_utf8_lossy(b).into_owned())
+    }
+}
+
+impl Wire for Duration {
+    fn encode(&self, out: &mut Vec<u8>) {
+        (self.as_nanos() as u64).encode(out);
+    }
+
+    fn decode(r: &mut Reader<'_>) -> Result<Self, WireError> {
+        Ok(Duration::from_nanos(r.u64()?))
+    }
+}
+
+impl<T: Wire> Wire for Vec<T> {
+    fn encode(&self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&(self.len() as u32).to_le_bytes());
+        for item in self {
+            item.encode(out);
+        }
+    }
+
+    fn decode(r: &mut Reader<'_>) -> Result<Self, WireError> {
+        // every Wire value occupies >= 1 byte, so the prefix is
+        // bounded by the remaining payload before any allocation
+        let n = r.len_prefix(1)?;
+        let mut v = Vec::with_capacity(n);
+        for _ in 0..n {
+            v.push(T::decode(r)?);
+        }
+        Ok(v)
+    }
+}
+
+impl Wire for Value {
+    /// dtype byte (0 = F32, 1 = I32, 2 = U32) + element count + raw
+    /// little-endian element bytes.
+    fn encode(&self, out: &mut Vec<u8>) {
+        match self {
+            Value::F32(v) => {
+                out.push(0);
+                out.extend_from_slice(&(v.len() as u32).to_le_bytes());
+                for x in v {
+                    out.extend_from_slice(&x.to_bits().to_le_bytes());
+                }
+            }
+            Value::I32(v) => {
+                out.push(1);
+                out.extend_from_slice(&(v.len() as u32).to_le_bytes());
+                for x in v {
+                    out.extend_from_slice(&x.to_le_bytes());
+                }
+            }
+            Value::U32(v) => {
+                out.push(2);
+                out.extend_from_slice(&(v.len() as u32).to_le_bytes());
+                for x in v {
+                    out.extend_from_slice(&x.to_le_bytes());
+                }
+            }
+        }
+    }
+
+    fn decode(r: &mut Reader<'_>) -> Result<Self, WireError> {
+        let dtype = r.u8()?;
+        let n = r.len_prefix(4)?;
+        Ok(match dtype {
+            0 => {
+                let mut v = Vec::with_capacity(n);
+                for _ in 0..n {
+                    v.push(f32::from_bits(r.u32()?));
+                }
+                Value::F32(v)
+            }
+            1 => {
+                let mut v = Vec::with_capacity(n);
+                for _ in 0..n {
+                    v.push(r.u32()? as i32);
+                }
+                Value::I32(v)
+            }
+            2 => {
+                let mut v = Vec::with_capacity(n);
+                for _ in 0..n {
+                    v.push(r.u32()?);
+                }
+                Value::U32(v)
+            }
+            got => {
+                return Err(WireError::BadDiscriminant {
+                    what: "Value dtype",
+                    got,
+                })
+            }
+        })
+    }
+}
+
+impl Wire for LaunchTask {
+    fn encode(&self, out: &mut Vec<u8>) {
+        self.exe.encode(out);
+        self.tag.encode(out);
+        self.inputs.encode(out);
+    }
+
+    fn decode(r: &mut Reader<'_>) -> Result<Self, WireError> {
+        Ok(LaunchTask {
+            exe: String::decode(r)?,
+            tag: u64::decode(r)?,
+            inputs: Vec::<Value>::decode(r)?,
+        })
+    }
+}
+
+impl Wire for TaggedOutput {
+    fn encode(&self, out: &mut Vec<u8>) {
+        self.tag.encode(out);
+        self.data.encode(out);
+        self.device_time.encode(out);
+    }
+
+    fn decode(r: &mut Reader<'_>) -> Result<Self, WireError> {
+        Ok(TaggedOutput {
+            tag: u64::decode(r)?,
+            data: Vec::<f32>::decode(r)?,
+            device_time: Duration::decode(r)?,
+        })
+    }
+}
+
+/// One message of the worker protocol, generic over the task/result
+/// payload types so the transport is testable with mock backends and
+/// production-typed with `LaunchTask`/`TaggedOutput`.
+///
+/// Protocol shape: the client sends `Submit` (a whole shard as one
+/// job), `Cancel`, and periodic `Ping`s; the worker answers `Pong`
+/// immediately (also while jobs run — heartbeats must flow during long
+/// rounds) and exactly one `Result` or `Error` per submitted job id.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Frame<T, R> {
+    /// Liveness probe; `nonce` is echoed back.
+    Ping { nonce: u64 },
+    /// Answer to [`Frame::Ping`].
+    Pong { nonce: u64 },
+    /// Run `tasks` as one engine job with the given retry budget.
+    Submit { id: u64, max_retries: u32, tasks: Vec<T> },
+    /// Successful job completion: outputs in task order.
+    Result { id: u64, outs: Vec<R> },
+    /// Job failure (the engine's error text).
+    Error { id: u64, msg: String },
+    /// Best-effort cancellation of a submitted job.
+    Cancel { id: u64 },
+}
+
+const TAG_PING: u8 = 1;
+const TAG_PONG: u8 = 2;
+const TAG_SUBMIT: u8 = 3;
+const TAG_RESULT: u8 = 4;
+const TAG_ERROR: u8 = 5;
+const TAG_CANCEL: u8 = 6;
+
+impl<T: Wire, R: Wire> Frame<T, R> {
+    fn tag(&self) -> u8 {
+        match self {
+            Frame::Ping { .. } => TAG_PING,
+            Frame::Pong { .. } => TAG_PONG,
+            Frame::Submit { .. } => TAG_SUBMIT,
+            Frame::Result { .. } => TAG_RESULT,
+            Frame::Error { .. } => TAG_ERROR,
+            Frame::Cancel { .. } => TAG_CANCEL,
+        }
+    }
+
+    /// Header + payload as one buffer (a single `write_all`, so a
+    /// frame is never interleaved with another writer's bytes).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut payload = Vec::new();
+        match self {
+            Frame::Ping { nonce } | Frame::Pong { nonce } => {
+                nonce.encode(&mut payload);
+            }
+            Frame::Submit { id, max_retries, tasks } => {
+                id.encode(&mut payload);
+                max_retries.encode(&mut payload);
+                tasks.encode(&mut payload);
+            }
+            Frame::Result { id, outs } => {
+                id.encode(&mut payload);
+                outs.encode(&mut payload);
+            }
+            Frame::Error { id, msg } => {
+                id.encode(&mut payload);
+                msg.encode(&mut payload);
+            }
+            Frame::Cancel { id } => {
+                id.encode(&mut payload);
+            }
+        }
+        let mut out = Vec::with_capacity(HEADER_LEN + payload.len());
+        out.extend_from_slice(&WIRE_MAGIC);
+        out.extend_from_slice(&WIRE_VERSION.to_le_bytes());
+        out.push(self.tag());
+        out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        out.extend_from_slice(&payload);
+        out
+    }
+
+    /// Write one frame (single syscall-sized `write_all` + flush).
+    pub fn write_to(&self, w: &mut impl Write) -> std::io::Result<()> {
+        w.write_all(&self.to_bytes())?;
+        w.flush()
+    }
+
+    /// Decode one payload given its already-validated type byte.
+    pub fn decode_payload(
+        tag: u8,
+        payload: &[u8],
+    ) -> Result<Self, WireError> {
+        let mut r = Reader::new(payload);
+        let frame = match tag {
+            TAG_PING => Frame::Ping { nonce: u64::decode(&mut r)? },
+            TAG_PONG => Frame::Pong { nonce: u64::decode(&mut r)? },
+            TAG_SUBMIT => Frame::Submit {
+                id: u64::decode(&mut r)?,
+                max_retries: u32::decode(&mut r)?,
+                tasks: Vec::<T>::decode(&mut r)?,
+            },
+            TAG_RESULT => Frame::Result {
+                id: u64::decode(&mut r)?,
+                outs: Vec::<R>::decode(&mut r)?,
+            },
+            TAG_ERROR => Frame::Error {
+                id: u64::decode(&mut r)?,
+                msg: String::decode(&mut r)?,
+            },
+            TAG_CANCEL => Frame::Cancel { id: u64::decode(&mut r)? },
+            got => return Err(WireError::BadTag { got }),
+        };
+        if r.remaining() != 0 {
+            return Err(WireError::Trailing { extra: r.remaining() });
+        }
+        Ok(frame)
+    }
+
+    /// Parse one frame from a byte buffer (header validation +
+    /// payload decode) — the pure core of [`read_from`](Self::read_from),
+    /// used directly by the corruption tests.
+    pub fn from_bytes(buf: &[u8]) -> Result<Self, WireError> {
+        if buf.len() < HEADER_LEN {
+            return Err(WireError::Truncated {
+                need: HEADER_LEN,
+                have: buf.len(),
+            });
+        }
+        let magic = [buf[0], buf[1], buf[2], buf[3]];
+        if magic != WIRE_MAGIC {
+            return Err(WireError::BadMagic { got: magic });
+        }
+        let version = u16::from_le_bytes([buf[4], buf[5]]);
+        if version != WIRE_VERSION {
+            return Err(WireError::BadVersion { got: version });
+        }
+        let tag = buf[6];
+        let len =
+            u32::from_le_bytes([buf[7], buf[8], buf[9], buf[10]]);
+        if len > MAX_PAYLOAD {
+            return Err(WireError::TooLarge { got: len, max: MAX_PAYLOAD });
+        }
+        let body = &buf[HEADER_LEN..];
+        if body.len() < len as usize {
+            return Err(WireError::Truncated {
+                need: len as usize,
+                have: body.len(),
+            });
+        }
+        if body.len() > len as usize {
+            return Err(WireError::Trailing {
+                extra: body.len() - len as usize,
+            });
+        }
+        Self::decode_payload(tag, body)
+    }
+
+    /// Read one frame from a stream. `Ok(None)` is a clean EOF **at a
+    /// frame boundary** (the peer closed); EOF inside a frame is a
+    /// typed [`WireError::Truncated`]. Decode failures carry the
+    /// `WireError` through the `anyhow` chain for `downcast_ref`.
+    pub fn read_from(
+        rd: &mut impl Read,
+    ) -> anyhow::Result<Option<Self>> {
+        use anyhow::Context as _;
+        let mut header = [0u8; HEADER_LEN];
+        // distinguish boundary EOF (fine) from mid-header EOF (corrupt)
+        let mut got = 0usize;
+        while got < HEADER_LEN {
+            match rd.read(&mut header[got..]) {
+                Ok(0) => {
+                    if got == 0 {
+                        return Ok(None);
+                    }
+                    return Err(WireError::Truncated {
+                        need: HEADER_LEN,
+                        have: got,
+                    }
+                    .into());
+                }
+                Ok(n) => got += n,
+                Err(e)
+                    if e.kind()
+                        == std::io::ErrorKind::Interrupted => {}
+                Err(e) => {
+                    return Err(anyhow::Error::from(e)
+                        .context("reading frame header"))
+                }
+            }
+        }
+        let magic = [header[0], header[1], header[2], header[3]];
+        if magic != WIRE_MAGIC {
+            return Err(WireError::BadMagic { got: magic }.into());
+        }
+        let version = u16::from_le_bytes([header[4], header[5]]);
+        if version != WIRE_VERSION {
+            return Err(WireError::BadVersion { got: version }.into());
+        }
+        let tag = header[6];
+        let len = u32::from_le_bytes([
+            header[7], header[8], header[9], header[10],
+        ]);
+        if len > MAX_PAYLOAD {
+            return Err(
+                WireError::TooLarge { got: len, max: MAX_PAYLOAD }.into()
+            );
+        }
+        let mut payload = vec![0u8; len as usize];
+        rd.read_exact(&mut payload).map_err(|e| {
+            if e.kind() == std::io::ErrorKind::UnexpectedEof {
+                anyhow::Error::from(WireError::Truncated {
+                    need: len as usize,
+                    have: 0,
+                })
+            } else {
+                anyhow::Error::from(e)
+            }
+            .context("reading frame payload")
+        })?;
+        Ok(Some(Self::decode_payload(tag, &payload)?))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    type MockFrame = Frame<u64, u64>;
+
+    fn round_trip(f: &MockFrame) -> MockFrame {
+        MockFrame::from_bytes(&f.to_bytes()).unwrap()
+    }
+
+    #[test]
+    fn frames_round_trip() {
+        let frames = [
+            MockFrame::Ping { nonce: 7 },
+            MockFrame::Pong { nonce: u64::MAX },
+            MockFrame::Submit {
+                id: 3,
+                max_retries: 2,
+                tasks: vec![1, 2, 3, u64::MAX],
+            },
+            MockFrame::Result { id: 3, outs: vec![] },
+            MockFrame::Error { id: 9, msg: "boom — bad".into() },
+            MockFrame::Cancel { id: 11 },
+        ];
+        for f in &frames {
+            assert_eq!(&round_trip(f), f, "{f:?}");
+        }
+    }
+
+    #[test]
+    fn value_codec_is_bit_exact() {
+        let vals = [
+            Value::F32(vec![0.0, -0.0, 1.5, f32::NAN, f32::INFINITY]),
+            Value::I32(vec![i32::MIN, -1, 0, i32::MAX]),
+            Value::U32(vec![0, 1, u32::MAX]),
+            Value::F32(vec![]),
+        ];
+        for v in &vals {
+            let mut buf = Vec::new();
+            v.encode(&mut buf);
+            let back = Value::decode(&mut Reader::new(&buf)).unwrap();
+            match (v, &back) {
+                (Value::F32(a), Value::F32(b)) => {
+                    assert_eq!(a.len(), b.len());
+                    for (x, y) in a.iter().zip(b) {
+                        assert_eq!(x.to_bits(), y.to_bits());
+                    }
+                }
+                (Value::I32(a), Value::I32(b)) => assert_eq!(a, b),
+                (Value::U32(a), Value::U32(b)) => assert_eq!(a, b),
+                _ => panic!("dtype changed in flight"),
+            }
+        }
+    }
+
+    #[test]
+    fn launch_task_round_trips() {
+        let task = LaunchTask {
+            exe: "vm_multi_f8_s4096".into(),
+            tag: 42,
+            inputs: vec![
+                Value::U32(vec![1, 2, 3, 4]),
+                Value::F32(vec![0.25, -1.0e-20, 3.5e20]),
+            ],
+        };
+        let f = Frame::<LaunchTask, TaggedOutput>::Submit {
+            id: 1,
+            max_retries: 3,
+            tasks: vec![task.clone()],
+        };
+        let back =
+            Frame::<LaunchTask, TaggedOutput>::from_bytes(&f.to_bytes())
+                .unwrap();
+        let Frame::Submit { tasks, .. } = back else {
+            panic!("wrong frame");
+        };
+        assert_eq!(tasks[0].exe, task.exe);
+        assert_eq!(tasks[0].tag, task.tag);
+        assert_eq!(tasks[0].inputs.len(), 2);
+    }
+
+    #[test]
+    fn corrupt_frames_are_typed_errors() {
+        let good = MockFrame::Ping { nonce: 5 }.to_bytes();
+
+        // truncation at every prefix length
+        for cut in 0..good.len() {
+            let err = MockFrame::from_bytes(&good[..cut]).unwrap_err();
+            assert!(
+                matches!(err, WireError::Truncated { .. }),
+                "cut={cut}: {err}"
+            );
+        }
+
+        let mut bad = good.clone();
+        bad[0] = b'X';
+        assert!(matches!(
+            MockFrame::from_bytes(&bad).unwrap_err(),
+            WireError::BadMagic { .. }
+        ));
+
+        let mut bad = good.clone();
+        bad[4] = 9;
+        assert_eq!(
+            MockFrame::from_bytes(&bad).unwrap_err(),
+            WireError::BadVersion { got: 9 }
+        );
+
+        let mut bad = good.clone();
+        bad[6] = 77;
+        assert_eq!(
+            MockFrame::from_bytes(&bad).unwrap_err(),
+            WireError::BadTag { got: 77 }
+        );
+
+        let mut bad = good.clone();
+        bad.push(0);
+        assert_eq!(
+            MockFrame::from_bytes(&bad).unwrap_err(),
+            WireError::Trailing { extra: 1 }
+        );
+    }
+
+    #[test]
+    fn oversized_length_prefix_rejected_before_allocation() {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&WIRE_MAGIC);
+        buf.extend_from_slice(&WIRE_VERSION.to_le_bytes());
+        buf.push(1); // Ping
+        buf.extend_from_slice(&(MAX_PAYLOAD + 1).to_le_bytes());
+        assert!(matches!(
+            MockFrame::from_bytes(&buf).unwrap_err(),
+            WireError::TooLarge { .. }
+        ));
+
+        // an inner Vec length prefix larger than the payload is a
+        // Truncated error, not an allocation attempt
+        let mut payload = Vec::new();
+        3u64.encode(&mut payload); // id
+        2u32.encode(&mut payload); // max_retries
+        payload.extend_from_slice(&u32::MAX.to_le_bytes()); // task count
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&WIRE_MAGIC);
+        buf.extend_from_slice(&WIRE_VERSION.to_le_bytes());
+        buf.push(3); // Submit
+        buf.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        buf.extend_from_slice(&payload);
+        assert!(matches!(
+            MockFrame::from_bytes(&buf).unwrap_err(),
+            WireError::Truncated { .. }
+        ));
+    }
+
+    #[test]
+    fn stream_reader_distinguishes_eof_kinds() {
+        let bytes = MockFrame::Cancel { id: 4 }.to_bytes();
+        // boundary EOF after a complete frame -> Ok(None)
+        let mut rd = std::io::Cursor::new(bytes.clone());
+        assert!(MockFrame::read_from(&mut rd).unwrap().is_some());
+        assert!(MockFrame::read_from(&mut rd).unwrap().is_none());
+        // EOF mid-frame -> typed Truncated through the anyhow chain
+        let mut rd = std::io::Cursor::new(bytes[..5].to_vec());
+        let err = MockFrame::read_from(&mut rd).unwrap_err();
+        assert!(
+            err.downcast_ref::<WireError>().is_some(),
+            "untyped: {err:#}"
+        );
+    }
+}

@@ -130,6 +130,10 @@ pub struct JobConfig {
     /// Engines in the cluster (1 = single-engine path); each engine
     /// gets `workers` workers. Results are bit-identical at any value.
     pub num_engines: usize,
+    /// Remote worker hosts (`"remotes": ["host:port", ..]` — addresses
+    /// of running `zmc worker` processes) joined into the cluster
+    /// alongside the local engines. Empty = all-local execution.
+    pub remotes: Vec<String>,
     pub samples_per_fn: usize,
     pub trials: u32,
     pub seed: u64,
@@ -152,6 +156,7 @@ impl Default for JobConfig {
             class: JobClass::Multifunctions,
             workers: 1,
             num_engines: 1,
+            remotes: Vec::new(),
             samples_per_fn: 1 << 18,
             trials: 1,
             seed: 2021,
@@ -196,6 +201,20 @@ impl JobConfig {
         }
         if let Some(n) = j.get("num_engines").and_then(Json::as_usize) {
             cfg.num_engines = n.max(1);
+        }
+        if let Some(rs) = j.get("remotes").and_then(Json::as_arr) {
+            for (i, r) in rs.iter().enumerate() {
+                cfg.remotes.push(
+                    r.as_str()
+                        .with_context(|| {
+                            format!(
+                                "remotes[{i}] must be a \"host:port\" \
+                                 string"
+                            )
+                        })?
+                        .to_string(),
+                );
+            }
         }
         if let Some(s) = j.get("samples_per_fn").and_then(Json::as_usize) {
             cfg.samples_per_fn = s;
@@ -283,6 +302,17 @@ impl JobConfig {
         );
         m.insert("workers".to_string(), num(self.workers as f64));
         m.insert("num_engines".to_string(), num(self.num_engines as f64));
+        if !self.remotes.is_empty() {
+            m.insert(
+                "remotes".to_string(),
+                Json::Arr(
+                    self.remotes
+                        .iter()
+                        .map(|r| Json::Str(r.clone()))
+                        .collect(),
+                ),
+            );
+        }
         m.insert(
             "samples_per_fn".to_string(),
             num(self.samples_per_fn as f64),
@@ -431,6 +461,7 @@ impl PartialEq for JobConfig {
         self.class == other.class
             && self.workers == other.workers
             && self.num_engines == other.num_engines
+            && self.remotes == other.remotes
             && self.samples_per_fn == other.samples_per_fn
             && self.trials == other.trials
             && self.seed == other.seed
@@ -642,6 +673,32 @@ mod tests {
         )
         .unwrap();
         assert_eq!(cfg.num_engines, 1);
+    }
+
+    #[test]
+    fn remotes_parsed_and_round_tripped() {
+        let cfg = JobConfig::from_json_text(
+            r#"{"remotes": ["10.0.0.2:7777", "worker-b:7777"],
+                 "functions": [{"expr": "x1", "bounds": [[0, 1]]}]}"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.remotes, vec!["10.0.0.2:7777", "worker-b:7777"]);
+        // the wire form carries remotes and the round trip is exact
+        let back = JobConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(cfg, back);
+        // absent -> all-local, and to_json omits the empty field
+        let cfg = JobConfig::from_json_text(
+            r#"{"functions": [{"expr": "x1", "bounds": [[0, 1]]}]}"#,
+        )
+        .unwrap();
+        assert!(cfg.remotes.is_empty());
+        assert!(cfg.to_json().get("remotes").is_none());
+        // non-string entries are a hard error
+        assert!(JobConfig::from_json_text(
+            r#"{"remotes": [7777],
+                 "functions": [{"expr": "x1", "bounds": [[0, 1]]}]}"#
+        )
+        .is_err());
     }
 
     #[test]

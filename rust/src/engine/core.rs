@@ -29,6 +29,39 @@ use anyhow::{anyhow, Error, Result};
 use crate::coordinator::fault::{FaultPlan, Verdict};
 use crate::coordinator::progress::Metrics;
 
+/// Poison-tolerant lock. Every critical section in this module (and in
+/// the queue/ledger code that reuses these helpers) only mutates state
+/// that is consistent at each statement boundary — push/pop a queue
+/// entry, bump a counter, set an `Option` — so a panic on another
+/// thread while it held the lock leaves repair-safe state behind and
+/// must not cascade into poisoning every other worker and the whole
+/// server. The panic itself is surfaced separately (through `Metrics`
+/// and job failure), never swallowed by this recovery.
+pub(crate) fn lock_ok<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
+/// Condvar wait with the same poison recovery as [`lock_ok`].
+pub(crate) fn wait_ok<'a, T>(
+    cv: &Condvar,
+    guard: std::sync::MutexGuard<'a, T>,
+) -> std::sync::MutexGuard<'a, T> {
+    cv.wait(guard)
+        .unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
+/// Best-effort text of a caught panic payload (panics carry `&str` or
+/// `String` in practice).
+pub(crate) fn panic_message(
+    payload: &(dyn std::any::Any + Send),
+) -> String {
+    payload
+        .downcast_ref::<&str>()
+        .map(|s| s.to_string())
+        .or_else(|| payload.downcast_ref::<String>().cloned())
+        .unwrap_or_else(|| "non-string panic payload".to_string())
+}
+
 /// How a worker executes tasks: context factory plus task runner.
 ///
 /// `Ctx` is created on the worker's own thread and never crosses
@@ -115,7 +148,7 @@ impl<T, R> JobState<T, R> {
     /// concurrent `wait()` that just checked the flag.
     pub(crate) fn cancel(&self) {
         self.cancelled.store(true, Ordering::Relaxed);
-        drop(self.inner.lock().unwrap());
+        drop(lock_ok(&self.inner));
         self.done_cv.notify_all();
     }
 
@@ -123,14 +156,14 @@ impl<T, R> JobState<T, R> {
         if self.is_cancelled() {
             return true;
         }
-        let inner = self.inner.lock().unwrap();
+        let inner = lock_ok(&self.inner);
         inner.remaining == 0 || inner.fatal.is_some()
     }
 
     /// Block until every task succeeded (results in task order) or the
     /// job failed fatally or was cancelled.
     pub(crate) fn wait(&self) -> Result<Vec<R>> {
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = lock_ok(&self.inner);
         loop {
             if let Some(msg) = &inner.fatal {
                 return Err(Error::msg(msg.clone()));
@@ -145,13 +178,13 @@ impl<T, R> JobState<T, R> {
             if self.is_cancelled() {
                 return Err(anyhow!("job was cancelled"));
             }
-            inner = self.done_cv.wait(inner).unwrap();
+            inner = wait_ok(&self.done_cv, inner);
         }
     }
 
     /// Mark the job failed (first failure wins) and wake waiters.
     fn fail(&self, msg: String) {
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = lock_ok(&self.inner);
         if inner.fatal.is_none() && inner.remaining > 0 {
             inner.fatal = Some(msg);
             drop(inner);
@@ -190,7 +223,7 @@ impl<T, R> Shared<T, R> {
 
     /// Enqueue every task of `job`; fails if the engine is down.
     pub(crate) fn enqueue(&self, job: &Arc<JobState<T, R>>) -> Result<()> {
-        let mut q = self.queue.lock().unwrap();
+        let mut q = lock_ok(&self.queue);
         if q.shutdown {
             return Err(anyhow!("engine is shut down"));
         }
@@ -207,14 +240,14 @@ impl<T, R> Shared<T, R> {
 
     /// Ask workers to exit once the queue drains, and wake them all.
     pub(crate) fn begin_shutdown(&self) {
-        self.queue.lock().unwrap().shutdown = true;
+        lock_ok(&self.queue).shutdown = true;
         self.task_cv.notify_all();
     }
 
     /// Pop the next task, blocking on the condvar while the queue is
     /// empty. `None` means shutdown (queued work is drained first).
     fn next_item(&self) -> Option<(Arc<JobState<T, R>>, usize)> {
-        let mut q = self.queue.lock().unwrap();
+        let mut q = lock_ok(&self.queue);
         loop {
             if let Some(item) = q.items.pop_front() {
                 return Some(item);
@@ -222,7 +255,7 @@ impl<T, R> Shared<T, R> {
             if q.shutdown {
                 return None;
             }
-            q = self.task_cv.wait(q).unwrap();
+            q = wait_ok(&self.task_cv, q);
         }
     }
 
@@ -230,19 +263,19 @@ impl<T, R> Shared<T, R> {
     /// many entries were dropped; the at-most-one in-hand task per
     /// worker is not touched — its result is discarded on completion.
     pub(crate) fn purge(&self, job: &Arc<JobState<T, R>>) -> u64 {
-        let mut q = self.queue.lock().unwrap();
+        let mut q = lock_ok(&self.queue);
         let before = q.items.len();
         q.items.retain(|(j, _)| !Arc::ptr_eq(j, job));
         (before - q.items.len()) as u64
     }
 
     fn push_front(&self, item: (Arc<JobState<T, R>>, usize)) {
-        self.queue.lock().unwrap().items.push_front(item);
+        lock_ok(&self.queue).items.push_front(item);
         self.task_cv.notify_one();
     }
 
     fn push_back(&self, item: (Arc<JobState<T, R>>, usize)) {
-        self.queue.lock().unwrap().items.push_back(item);
+        lock_ok(&self.queue).items.push_back(item);
         self.task_cv.notify_one();
     }
 }
@@ -267,7 +300,7 @@ fn requeue_or_abort<T, R>(
     metrics: &Metrics,
 ) {
     let attempts = {
-        let mut inner = job.inner.lock().unwrap();
+        let mut inner = lock_ok(&job.inner);
         inner.attempts[idx] += 1;
         inner.attempts[idx]
     };
@@ -310,7 +343,7 @@ pub(crate) fn worker_loop<B: Backend>(
         // Discard leftovers of jobs that already failed or were
         // cancelled (purge races the queue pop, so entries of a
         // cancelled job may still surface here).
-        if job.is_cancelled() || job.inner.lock().unwrap().fatal.is_some() {
+        if job.is_cancelled() || lock_ok(&job.inner).fatal.is_some() {
             continue;
         }
         match fault.judge(w, my_attempts) {
@@ -329,10 +362,21 @@ pub(crate) fn worker_loop<B: Backend>(
         }
         my_attempts += 1;
         let t0 = Instant::now();
-        match backend.run(&ctx, &job.tasks[idx]) {
-            Ok(out) => {
-                busy += t0.elapsed();
-                let mut inner = job.inner.lock().unwrap();
+        // A panicking task must not unwind through the worker thread:
+        // that would kill the worker silently (no exit_worker
+        // bookkeeping — live_workers never reaches 0, so outstanding
+        // jobs hang instead of failing) and poison any lock the panic
+        // crossed. Catch it and treat it as a failed attempt with the
+        // panic text as the error.
+        let run = std::panic::catch_unwind(
+            std::panic::AssertUnwindSafe(|| {
+                backend.run(&ctx, &job.tasks[idx])
+            }),
+        );
+        busy += t0.elapsed();
+        match run {
+            Ok(Ok(out)) => {
+                let mut inner = lock_ok(&job.inner);
                 if inner.results[idx].is_none() {
                     inner.results[idx] = Some(out);
                     inner.remaining -= 1;
@@ -343,10 +387,23 @@ pub(crate) fn worker_loop<B: Backend>(
                     }
                 }
             }
-            Err(e) => {
-                busy += t0.elapsed();
+            Ok(Err(e)) => {
                 metrics.failure();
                 requeue_or_abort(shared, &job, idx, &e.to_string(), metrics);
+            }
+            Err(payload) => {
+                let msg = panic_message(payload.as_ref());
+                metrics.failure();
+                metrics.record_worker_error(format!(
+                    "worker {w}: task {idx} panicked: {msg}"
+                ));
+                requeue_or_abort(
+                    shared,
+                    &job,
+                    idx,
+                    &format!("panicked: {msg}"),
+                    metrics,
+                );
             }
         }
     }
@@ -369,7 +426,7 @@ fn exit_worker<T, R>(
         metrics.record_worker(busy, total);
     }
     let orphans = {
-        let mut q = shared.queue.lock().unwrap();
+        let mut q = lock_ok(&shared.queue);
         q.live_workers -= 1;
         if q.live_workers == 0 {
             q.dead = true;
@@ -380,7 +437,7 @@ fn exit_worker<T, R>(
     };
     if let Some(items) = orphans {
         for (job, _) in items {
-            let remaining = job.inner.lock().unwrap().remaining;
+            let remaining = lock_ok(&job.inner).remaining;
             job.fail(format!(
                 "all workers exited with {remaining} tasks unfinished{}",
                 context_failure_note(metrics)
@@ -564,7 +621,7 @@ where
     /// from a healthy engine whose job legitimately failed (surface
     /// the error).
     pub fn is_dead(&self) -> bool {
-        self.shared.queue.lock().unwrap().dead
+        lock_ok(&self.shared.queue).dead
     }
 }
 
@@ -709,6 +766,88 @@ mod tests {
         fn run(&self, _ctx: &(), t: &u64) -> Result<u64> {
             Ok(*t)
         }
+    }
+
+    /// Serializes tests that swap the process-global panic hook, so a
+    /// concurrent take/set/restore cannot leave the silencer installed.
+    static PANIC_HOOK_LOCK: Mutex<()> = Mutex::new(());
+
+    /// Panics on task 13; everything else follows `Mock`.
+    struct PanicThirteen;
+
+    impl Backend for PanicThirteen {
+        type Ctx = ();
+        type Task = u64;
+        type Out = u64;
+
+        fn make_ctx(&self, _w: usize) -> Result<()> {
+            Ok(())
+        }
+
+        fn run(&self, _ctx: &(), t: &u64) -> Result<u64> {
+            assert!(*t != 13, "task 13 exploded");
+            Ok(t.wrapping_mul(31).wrapping_add(7))
+        }
+    }
+
+    #[test]
+    fn task_panic_fails_job_without_killing_engine() {
+        // silence the default panic-hook backtrace spam for the
+        // intentional panics below; the hook is process-global, so
+        // take care to restore it
+        let _serial = lock_ok(&PANIC_HOOK_LOCK);
+        let hook = std::panic::take_hook();
+        std::panic::set_hook(Box::new(|_| {}));
+        let result = std::panic::catch_unwind(|| {
+            let e = Engine::new(
+                PanicThirteen,
+                EngineConfig { n_workers: 2, max_retries: 0 },
+            )
+            .unwrap();
+            let err = e
+                .submit((0..20).collect())
+                .unwrap()
+                .wait()
+                .unwrap_err()
+                .to_string();
+            assert!(err.contains("panicked"), "{err}");
+            assert!(err.contains("task 13 exploded"), "{err}");
+            // the panic is surfaced through Metrics, and the engine —
+            // including both workers — keeps serving jobs
+            assert!(!e.metrics().worker_errors().is_empty());
+            assert!(!e.is_dead());
+            let ok: Vec<u64> = (0..13).collect();
+            assert_eq!(e.run(ok.clone()).unwrap(), expect(&ok));
+        });
+        std::panic::set_hook(hook);
+        result.unwrap();
+    }
+
+    #[test]
+    fn task_panic_is_retried_like_a_failure() {
+        // one panic consumes one attempt; with a retry budget the
+        // task keeps panicking and the job fails after the budget —
+        // the retry counter proves the requeue path ran
+        let _serial = lock_ok(&PANIC_HOOK_LOCK);
+        let hook = std::panic::take_hook();
+        std::panic::set_hook(Box::new(|_| {}));
+        let result = std::panic::catch_unwind(|| {
+            let e = Engine::new(
+                PanicThirteen,
+                EngineConfig { n_workers: 1, max_retries: 2 },
+            )
+            .unwrap();
+            let err = e
+                .submit(vec![13])
+                .unwrap()
+                .wait()
+                .unwrap_err()
+                .to_string();
+            assert!(err.contains("after 3 attempts"), "{err}");
+            assert_eq!(e.metrics().retried(), 2);
+        });
+        std::panic::set_hook(hook);
+        result.unwrap();
     }
 
     #[test]

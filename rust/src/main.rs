@@ -8,6 +8,8 @@
 //!   streams the wire frames instead of tables
 //! * `serve` — HTTP front end: the same job files over `POST /v1/jobs`
 //!   with streamed progress, recall, metrics, and restart replay
+//! * `worker` — host an engine behind a TCP accept loop for multi-host
+//!   clusters; clients join it with `--remote host:port`
 //! * `scan` — parameter-grid sweep of one integrand
 //! * `normal` — stratified + tree-search integration
 //! * `fig1` — reproduce the paper's Fig. 1 table
@@ -57,6 +59,7 @@ fn run() -> Result<()> {
         "integrate" => cmd_integrate(&flags),
         "run" => cmd_run(&flags),
         "serve" => cmd_serve(&flags),
+        "worker" => cmd_worker(&flags),
         "scan" => cmd_scan(&flags),
         "normal" => cmd_normal(&flags),
         "fig1" => cmd_fig1(&flags),
@@ -85,6 +88,8 @@ COMMANDS
                                 object per line
   serve [--addr H:P]            HTTP service: POST job files to
                                 /v1/jobs on one warm session
+  worker --listen H:P           host an engine for remote clusters
+                                (join it with --remote H:P)
   scan --expr E --bounds B --grid G   parameter sweep (p0 axis)
   normal --expr E --bounds B    stratified + tree search
   fig1                          reproduce paper Fig. 1
@@ -110,6 +115,16 @@ COMMON FLAGS
 MULTI-ENGINE (integrate/run/normal): --num-engines N shards every
 batch contiguously across N persistent engines (disjoint Philox
 counter ranges, centralized merge) — results are bit-identical to N=1.
+
+MULTI-HOST (integrate/run/serve): start `zmc worker --listen H:P` on
+each remote host, then add --remote H:P,H:P,.. (or a job-file
+\"remotes\" array) to join them into the cluster alongside the local
+engines. Shards fan out over TCP with heartbeat death detection; a
+host that dies mid-round has its whole shard requeued onto a survivor,
+and every topology (local, remote, mixed) is bit-identical.
+  --remote H:P,..   comma-separated zmc worker addresses [none]
+worker-specific:
+  --listen H:P      bind address for the worker (required)
 
 ADAPTIVE (integrate/run): setting an error target switches to the
 pilot-then-refine loop — the sample budget flows to the functions that
@@ -275,29 +290,48 @@ fn session_builder(flags: &Flags) -> zmc::session::SessionBuilder {
 /// One session per CLI invocation: every subcommand's batches share
 /// the same warm workers and executable caches. `--num-engines N > 1`
 /// puts a cluster of N engines (each with `workers` workers) behind
-/// the same builders — results are bit-identical at any value.
+/// the same builders, and `--remote H:P,..` joins running `zmc worker`
+/// hosts into that cluster — results are bit-identical at any
+/// topology.
 fn make_session(
     flags: &Flags,
     workers: usize,
     num_engines: usize,
 ) -> Result<Session> {
-    make_session_tiered(flags, workers, num_engines, None)
+    make_session_tiered(flags, workers, num_engines, None, &[])
 }
 
-/// `make_session` with a job-file execution tier as the fallback when
-/// no `--tier` flag is given (CLI wins, file second, env default last).
+/// `make_session` with a job file's execution tier and remote list as
+/// the fallback when the `--tier` / `--remote` flags are absent (CLI
+/// wins, file second, env/empty default last).
 fn make_session_tiered(
     flags: &Flags,
     workers: usize,
     num_engines: usize,
     file_tier: Option<ExecTier>,
+    file_remotes: &[String],
 ) -> Result<Session> {
     let mut b =
         session_builder(flags).workers(workers).engines(num_engines);
+    let remotes = parse_remotes(flags)
+        .unwrap_or_else(|| file_remotes.to_vec());
+    b = b.remote_engines(remotes);
     if let Some(t) = parse_tier(flags)?.or(file_tier) {
         b = b.execution_tier(t);
     }
     b.build()
+}
+
+/// `--remote H:P,H:P,..` → the worker addresses to join; `None` when
+/// the flag is absent (so a job file's `remotes` can apply instead).
+fn parse_remotes(flags: &Flags) -> Option<Vec<String>> {
+    flags.str("remote").map(|s| {
+        s.split(',')
+            .map(str::trim)
+            .filter(|a| !a.is_empty())
+            .map(str::to_string)
+            .collect()
+    })
 }
 
 fn parse_tier(flags: &Flags) -> Result<Option<ExecTier>> {
@@ -414,6 +448,9 @@ fn cmd_run(flags: &Flags) -> Result<()> {
     cfg.workers = flags.usize("workers", cfg.workers)?;
     cfg.num_engines =
         flags.usize("num-engines", cfg.num_engines)?.max(1);
+    if let Some(remotes) = parse_remotes(flags) {
+        cfg.remotes = remotes;
+    }
     cfg.target_rel_err =
         flags.opt_f64("target-rel-err")?.or(cfg.target_rel_err);
     cfg.target_abs_err =
@@ -427,6 +464,7 @@ fn cmd_run(flags: &Flags) -> Result<()> {
         cfg.workers,
         cfg.num_engines,
         cfg.tier,
+        &cfg.remotes,
     )?;
     let t0 = std::time::Instant::now();
     if flags.bool("json") {
@@ -613,6 +651,7 @@ fn cmd_serve(flags: &Flags) -> Result<()> {
         artifacts: flags.str("artifacts").map(str::to_string),
         tier: parse_tier(flags)?,
         max_body: flags.usize("max-body", defaults.max_body)?,
+        remotes: parse_remotes(flags).unwrap_or_default(),
     };
     let journaled = cfg.state_dir.is_some();
     let server = Server::bind(cfg)?;
@@ -629,6 +668,35 @@ fn cmd_serve(flags: &Flags) -> Result<()> {
         );
     }
     server.run()
+}
+
+/// `zmc worker`: host one persistent engine behind a TCP accept loop.
+/// Clients on other hosts join it into their clusters with
+/// `--remote H:P` (or a job-file `"remotes"` entry); the process
+/// serves until killed. Emulated registries are deterministic across
+/// processes, so a remote shard is bit-identical to a local one.
+fn cmd_worker(flags: &Flags) -> Result<()> {
+    let listen = flags
+        .str("listen")
+        .context("--listen H:P required (e.g. --listen 0.0.0.0:7411)")?;
+    let workers = flags.usize("workers", 1)?.max(1);
+    let reg = session_builder(flags).load_registry()?;
+    let mut pool = zmc::runtime::device::DevicePool::new(&reg, workers)?;
+    if let Some(t) = parse_tier(flags)? {
+        pool = pool.with_tier(t);
+    }
+    let engine = zmc::engine::Engine::for_pool(&pool)?;
+    let listener = std::net::TcpListener::bind(listen)
+        .with_context(|| format!("binding worker listener on {listen}"))?;
+    let server = zmc::cluster::serve_worker(listener, engine)?;
+    println!(
+        "zmc worker listening on {} ({} device worker(s))",
+        server.addr(),
+        workers
+    );
+    println!("  join it with: zmc run --remote {}", server.addr());
+    server.join();
+    Ok(())
 }
 
 fn cmd_scan(flags: &Flags) -> Result<()> {

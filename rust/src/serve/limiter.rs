@@ -4,11 +4,20 @@ use std::collections::HashMap;
 use std::sync::Mutex;
 use std::time::Instant;
 
+use crate::engine::core::lock_ok;
+
 /// Classic token bucket, one bucket per client key (the peer IP).
 /// Buckets start full at `burst` tokens, refill at `rate` tokens per
 /// second, and each admitted request costs one token; an empty bucket
 /// rejects with the whole-second wait until the next token — the 429
 /// response's `Retry-After` value.
+///
+/// The bucket map is **bounded by the live client set**, not by every
+/// IP ever seen: a periodic sweep evicts buckets that have been idle
+/// long enough to refill completely. A refill-complete bucket is
+/// indistinguishable from a fresh one (`tokens == burst`), so eviction
+/// never changes an admit decision — it only caps memory on a server
+/// exposed to IP churn.
 ///
 /// Time is measured against the limiter's construction instant and
 /// injected into [`admit_at`](Self::admit_at) as plain seconds, so
@@ -17,7 +26,13 @@ pub struct RateLimiter {
     rate: f64,
     burst: f64,
     t0: Instant,
-    buckets: Mutex<HashMap<String, Bucket>>,
+    state: Mutex<Buckets>,
+}
+
+struct Buckets {
+    map: HashMap<String, Bucket>,
+    /// Seconds-since-`t0` of the last eviction sweep.
+    last_sweep: f64,
 }
 
 struct Bucket {
@@ -34,7 +49,10 @@ impl RateLimiter {
             rate: rate.max(1e-9),
             burst: burst.max(1.0),
             t0: Instant::now(),
-            buckets: Mutex::new(HashMap::new()),
+            state: Mutex::new(Buckets {
+                map: HashMap::new(),
+                last_sweep: 0.0,
+            }),
         }
     }
 
@@ -47,20 +65,39 @@ impl RateLimiter {
     /// [`admit`](Self::admit) at an explicit time (seconds since the
     /// limiter was built) — the test seam.
     pub fn admit_at(&self, key: &str, now: f64) -> Result<(), u64> {
-        let mut buckets = self.buckets.lock().unwrap();
-        let b = buckets
+        let mut state = lock_ok(&self.state);
+        // sweep at most once per full-refill period: an O(n) pass
+        // amortized over at least n token grants
+        let sweep_every = (self.burst / self.rate).max(1.0);
+        if now - state.last_sweep >= sweep_every {
+            state.last_sweep = now;
+            let (rate, burst) = (self.rate, self.burst);
+            // idle >= time-to-full ⇒ the bucket is full again, i.e.
+            // exactly the state a brand-new entry would start in
+            state
+                .map
+                .retain(|_, b| now - b.last < (burst - b.tokens) / rate);
+        }
+        let (rate, burst) = (self.rate, self.burst);
+        let b = state
+            .map
             .entry(key.to_string())
-            .or_insert(Bucket { tokens: self.burst, last: now });
-        b.tokens = (b.tokens + (now - b.last).max(0.0) * self.rate)
-            .min(self.burst);
+            .or_insert(Bucket { tokens: burst, last: now });
+        b.tokens =
+            (b.tokens + (now - b.last).max(0.0) * rate).min(burst);
         b.last = now;
         if b.tokens >= 1.0 {
             b.tokens -= 1.0;
             Ok(())
         } else {
-            let wait = (1.0 - b.tokens) / self.rate;
+            let wait = (1.0 - b.tokens) / rate;
             Err((wait.ceil() as u64).max(1))
         }
+    }
+
+    /// Buckets currently retained (test seam for the eviction sweep).
+    pub fn n_buckets(&self) -> usize {
+        lock_ok(&self.state).map.len()
     }
 }
 
@@ -92,5 +129,44 @@ mod tests {
         // a long idle stretch never overfills past the burst cap
         assert!(l.admit_at("a", 1e6).is_ok());
         assert_eq!(l.admit_at("a", 1e6), Err(2));
+    }
+
+    #[test]
+    fn key_churn_does_not_retain_every_bucket() {
+        // rate 1/s, burst 2 -> full refill takes 2 s; clients arrive
+        // 10 s apart, so each sweep can evict everyone idle before it
+        let l = RateLimiter::new(1.0, 2.0);
+        for k in 0..1000u32 {
+            let now = 10.0 * k as f64;
+            assert!(l.admit_at(&format!("ip-{k}"), now).is_ok());
+            assert!(
+                l.n_buckets() <= 2,
+                "retained {} buckets after {} distinct keys",
+                l.n_buckets(),
+                k + 1
+            );
+        }
+    }
+
+    #[test]
+    fn eviction_never_changes_admit_decisions() {
+        // a client that drained its bucket and waited a *partial*
+        // refill must keep its debt across sweeps triggered by others
+        let l = RateLimiter::new(1.0, 2.0);
+        assert!(l.admit_at("slow", 0.0).is_ok());
+        assert!(l.admit_at("slow", 0.0).is_ok());
+        assert_eq!(l.admit_at("slow", 0.0), Err(1));
+        // another key triggers a sweep at t=3; "slow" updated at t=0
+        // with 0 tokens needs 2 s to refill, so 3 s idle evicts it —
+        // but an evicted-then-recreated bucket is full, exactly what
+        // 3 s of refill (capped at burst) would have produced anyway
+        assert!(l.admit_at("other", 3.0).is_ok());
+        assert!(l.admit_at("slow", 3.0).is_ok());
+        assert!(l.admit_at("slow", 3.0).is_ok());
+        assert_eq!(l.admit_at("slow", 3.0), Err(1));
+        // partial refill is preserved: at t=3.5 "slow" (last=3.0,
+        // 0 tokens) is NOT refill-complete, so a sweep cannot evict
+        // it and its half-token debt stands
+        assert_eq!(l.admit_at("slow", 3.5), Err(1));
     }
 }

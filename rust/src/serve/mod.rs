@@ -51,6 +51,7 @@ use anyhow::{Context, Result};
 
 use crate::config::JobConfig;
 use crate::coordinator::progress::Metrics;
+use crate::engine::core::{lock_ok, panic_message, wait_ok};
 use crate::runtime::ExecTier;
 use crate::session::{ErrorPayload, JobOutput, Session};
 use crate::util::json::Json;
@@ -64,6 +65,9 @@ pub struct ServeConfig {
     pub workers: usize,
     /// Engines behind the shared session.
     pub engines: usize,
+    /// Remote worker addresses (`host:port` of running `zmc worker`
+    /// processes) added to the shared session's cluster.
+    pub remotes: Vec<String>,
     /// Connection-handler threads; each runs at most one job at a
     /// time, so this also caps streaming clients.
     pub http_workers: usize,
@@ -94,6 +98,7 @@ impl Default for ServeConfig {
             addr: "127.0.0.1:7311".into(),
             workers: 1,
             engines: 1,
+            remotes: Vec::new(),
             http_workers: 4,
             max_jobs: 2,
             queue_cap: 16,
@@ -206,7 +211,7 @@ impl ServerState {
     /// Register a freshly admitted job: ledger entry + journal record.
     pub(crate) fn create_job(&self, config: &Json) -> u64 {
         let id = self.next_id.fetch_add(1, Ordering::SeqCst);
-        self.jobs.lock().unwrap().insert(
+        lock_ok(&self.jobs).insert(
             id,
             JobEntry {
                 status: JobStatus::Running,
@@ -234,10 +239,24 @@ impl ServerState {
         cfg: &JobConfig,
         sink: &mut dyn FnMut(&Json),
     ) {
-        let outcome = self.session.run_job_observed(cfg, &mut |ev| {
-            for frame in ev.frames() {
-                sink(&with_id(frame, id));
-            }
+        // A panic inside the job runner (engine, reducer, codec) must
+        // fail *this job*, not unwind through the HTTP worker thread
+        // and shrink the pool until the server is dead. The panic text
+        // becomes the job's error payload so clients see the cause.
+        let outcome = std::panic::catch_unwind(
+            std::panic::AssertUnwindSafe(|| {
+                self.session.run_job_observed(cfg, &mut |ev| {
+                    for frame in ev.frames() {
+                        sink(&with_id(frame, id));
+                    }
+                })
+            }),
+        )
+        .unwrap_or_else(|payload| {
+            Err(anyhow::anyhow!(
+                "job panicked: {}",
+                panic_message(payload.as_ref())
+            ))
         });
         match outcome {
             Ok(out) => {
@@ -303,7 +322,7 @@ impl ServerState {
         result: Option<Json>,
         error: Option<Json>,
     ) {
-        if let Some(entry) = self.jobs.lock().unwrap().get_mut(&id) {
+        if let Some(entry) = lock_ok(&self.jobs).get_mut(&id) {
             entry.status = status;
             entry.result = result;
             entry.error = error;
@@ -336,8 +355,12 @@ impl ServerState {
             Json::Str(self.session.execution_tier().name().into()),
         );
         m.insert(
+            "remote_engines".to_string(),
+            Json::Num(self.session.num_remote_engines() as f64),
+        );
+        m.insert(
             "jobs".to_string(),
-            Json::Num(self.jobs.lock().unwrap().len() as f64),
+            Json::Num(lock_ok(&self.jobs).len() as f64),
         );
         Json::Obj(m)
     }
@@ -450,7 +473,7 @@ impl ConnQueue {
     /// `Err` hands the stream back when the queue is full or closed
     /// (the acceptor answers 503 on it).
     fn push(&self, s: TcpStream) -> Result<(), TcpStream> {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = lock_ok(&self.inner);
         if g.1 || g.0.len() >= self.cap {
             return Err(s);
         }
@@ -461,7 +484,7 @@ impl ConnQueue {
 
     /// Block for the next connection; `None` = closed and drained.
     fn pop(&self) -> Option<TcpStream> {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = lock_ok(&self.inner);
         loop {
             if let Some(s) = g.0.pop_front() {
                 return Some(s);
@@ -469,12 +492,12 @@ impl ConnQueue {
             if g.1 {
                 return None;
             }
-            g = self.cv.wait(g).unwrap();
+            g = wait_ok(&self.cv, g);
         }
     }
 
     fn close(&self) {
-        self.inner.lock().unwrap().1 = true;
+        lock_ok(&self.inner).1 = true;
         self.cv.notify_all();
     }
 }
@@ -510,7 +533,8 @@ impl Server {
 
         let mut b = Session::builder()
             .workers(cfg.workers)
-            .engines(cfg.engines);
+            .engines(cfg.engines)
+            .remote_engines(cfg.remotes.iter().cloned());
         b = match &cfg.artifacts {
             Some(dir) => b.artifacts(dir.clone()),
             None => b.artifacts_or_emulator("artifacts"),

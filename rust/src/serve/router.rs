@@ -188,10 +188,7 @@ fn post_job(
 /// `GET /v1/jobs/{id}`: status for running jobs, full result or error
 /// payload for finished ones.
 fn get_job(state: &ServerState, mut stream: TcpStream, id: u64) {
-    let entry = state
-        .jobs
-        .lock()
-        .unwrap()
+    let entry = crate::engine::core::lock_ok(&state.jobs)
         .get(&id)
         .map(|e| (e.status, e.result.clone(), e.error.clone()));
     let Some((status, result, error)) = entry else {

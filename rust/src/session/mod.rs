@@ -324,6 +324,16 @@ impl Session {
         }
     }
 
+    /// Remote worker connections behind this session (0 unless built
+    /// with `.remote_engines`). Counted inside [`num_engines`]
+    /// (Self::num_engines), not in addition to it.
+    pub fn num_remote_engines(&self) -> usize {
+        match &self.topology {
+            ExecTopology::Engine(_) => 0,
+            ExecTopology::Cluster(c) => c.n_remote(),
+        }
+    }
+
     /// Device workers per engine.
     pub fn workers(&self) -> usize {
         self.workers
@@ -390,6 +400,7 @@ pub struct SessionBuilder {
     source: RegistrySource,
     workers: usize,
     engines: usize,
+    remotes: Vec<String>,
     tier: Option<ExecTier>,
 }
 
@@ -399,6 +410,7 @@ impl SessionBuilder {
             source: RegistrySource::Auto("artifacts".into()),
             workers: 1,
             engines: 1,
+            remotes: Vec::new(),
             tier: None,
         }
     }
@@ -447,6 +459,22 @@ impl SessionBuilder {
         self
     }
 
+    /// Remote worker hosts (`host:port` of running `zmc worker`
+    /// processes) joined into the session's cluster alongside its
+    /// local engines. Any remotes force a [`DeviceCluster`] topology;
+    /// at least one local engine is always kept so [`Session::engine`]
+    /// (the harmonic fast path) stays valid. Bit-identity holds across
+    /// topologies: the same task list yields the same estimates whether
+    /// it runs locally, remotely, or mixed.
+    pub fn remote_engines<I, S>(mut self, addrs: I) -> Self
+    where
+        I: IntoIterator<Item = S>,
+        S: Into<String>,
+    {
+        self.remotes.extend(addrs.into_iter().map(Into::into));
+        self
+    }
+
     /// Pin every worker of this session to one emulator execution tier
     /// (default: the process-wide [`ExecTier::from_env`]).
     pub fn execution_tier(mut self, tier: ExecTier) -> Self {
@@ -454,10 +482,13 @@ impl SessionBuilder {
         self
     }
 
-    /// Apply a job file's topology (`workers`, `num_engines`) and
-    /// execution tier when the file pins one.
+    /// Apply a job file's topology (`workers`, `num_engines`,
+    /// `remotes`) and execution tier when the file pins one.
     pub fn job_config(self, cfg: &JobConfig) -> Self {
-        let b = self.workers(cfg.workers).engines(cfg.num_engines);
+        let b = self
+            .workers(cfg.workers)
+            .engines(cfg.num_engines)
+            .remote_engines(cfg.remotes.iter().cloned());
         match cfg.tier {
             Some(t) => b.execution_tier(t),
             None => b,
@@ -510,7 +541,15 @@ impl SessionBuilder {
         if let Some(t) = self.tier {
             pool = pool.with_tier(t);
         }
-        let topology = if self.engines <= 1 {
+        let topology = if !self.remotes.is_empty() {
+            // remotes force a cluster; keep >= 1 local engine so
+            // Session::engine() (the harmonic fast path) stays valid
+            ExecTopology::Cluster(DeviceCluster::for_pool_with_remotes(
+                &pool,
+                self.engines,
+                &self.remotes,
+            )?)
+        } else if self.engines <= 1 {
             ExecTopology::Engine(Engine::for_pool(&pool)?)
         } else {
             ExecTopology::Cluster(DeviceCluster::for_pool(
@@ -663,5 +702,8 @@ mod tests {
             Session::builder().emulated().engines(3).build().unwrap();
         assert_eq!(c.num_engines(), 3);
         assert!(c.cluster().is_some());
+        // no remotes configured anywhere above
+        assert_eq!(s.num_remote_engines(), 0);
+        assert_eq!(c.num_remote_engines(), 0);
     }
 }

@@ -1,0 +1,559 @@
+//! Multi-host cluster transport verification over loopback TCP:
+//!
+//! * **wire codec** — random `LaunchTask`/`TaggedOutput` frames survive
+//!   the byte round trip losslessly (floats as raw IEEE-754 bits, so
+//!   NaN payloads included), and every corruption — truncation, bad
+//!   magic, unknown version, unknown tag, oversized length prefix,
+//!   trailing bytes — rejects with the matching typed [`WireError`];
+//! * **bit-exactness** — for shard counts 1..8, a pure-remote cluster
+//!   (k proxies into one `zmc worker` loop) and a mixed cluster
+//!   (1 local engine + k remotes) reproduce the single-engine
+//!   `Estimate`s and merged `MomentSum`s bit-for-bit, for all three
+//!   integration classes (multifunction batch, functional grid scan,
+//!   normal tree search);
+//! * **fault tolerance** — a worker host killed mid-round (and a hung
+//!   host caught only by the heartbeat) has its whole shard requeued
+//!   onto a survivor, the batch completes with the exact fault-free
+//!   results, and the cluster `Metrics` records the requeue;
+//! * **dispatch hygiene** — empty shards (more nodes than tasks) never
+//!   reach a worker (`WorkerStats::empty_submits` stays 0).
+//!
+//! Emulator-only (`--features pjrt` skips: synthetic HLO bodies, and
+//! the emulated registry is what makes the remote side deterministic).
+#![cfg(not(feature = "pjrt"))]
+
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use zmc::cluster::{
+    reduce_tagged, serve_worker, DeviceCluster, Frame, LaunchExec,
+    RemoteConfig, Wire, WireError, WorkerServer,
+};
+use zmc::engine::{DeviceEngine, Engine, LaunchTask, TaggedOutput};
+use zmc::integrator::multifunctions::{self, MultiConfig};
+use zmc::integrator::normal::{self, NormalConfig};
+use zmc::integrator::spec::{Estimate, IntegralJob};
+use zmc::integrator::functional;
+use zmc::runtime::device::DevicePool;
+use zmc::runtime::launch::Value;
+use zmc::runtime::registry::Registry;
+use zmc::session::Session;
+use zmc::util::proptest::{check, Gen};
+
+type DeviceFrame = Frame<LaunchTask, TaggedOutput>;
+
+// ------------------------------------------------------------ fixtures
+
+fn emulated_pool() -> DevicePool {
+    let reg = Arc::new(Registry::emulated());
+    DevicePool::new(&reg, 1).unwrap()
+}
+
+fn engine() -> DeviceEngine {
+    Engine::for_pool(&emulated_pool()).unwrap()
+}
+
+/// A worker host on an ephemeral loopback port, serving a 1-worker
+/// emulated device engine. The emulated registry is a pure function of
+/// the build, so its results are bit-identical to any local engine's.
+fn worker() -> WorkerServer {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    serve_worker(listener, engine()).unwrap()
+}
+
+/// Transport tuning for tests: fast heartbeats, fail fast.
+fn fast_rcfg() -> RemoteConfig {
+    RemoteConfig {
+        ping_interval: Duration::from_millis(20),
+        ping_timeout: Duration::from_millis(400),
+        ..Default::default()
+    }
+}
+
+/// `n_local` in-process engines + one proxy per address, short
+/// heartbeats.
+fn cluster_with(n_local: usize, addrs: &[String]) -> DeviceCluster {
+    DeviceCluster::for_pool_with_remote_config(
+        &emulated_pool(),
+        n_local,
+        addrs,
+        fast_rcfg(),
+    )
+    .unwrap()
+}
+
+fn job_pool() -> Vec<IntegralJob> {
+    let u1 = [(0.0, 1.0)];
+    let u2 = [(0.0, 1.0), (0.0, 1.0)];
+    let u3 = [(0.0, 1.0), (0.0, 1.0), (0.0, 1.0)];
+    vec![
+        IntegralJob::parse("x1^2 + 1", &u1).unwrap(),
+        IntegralJob::parse("sin(x1)*x2", &u2).unwrap(),
+        IntegralJob::with_params("exp(-p0*(x1+x2))", &u2, &[1.5]).unwrap(),
+        IntegralJob::parse("x1*x2*x3 + cos(x2)", &u3).unwrap(),
+    ]
+}
+
+fn assert_estimates_bit_identical(
+    a: &[Estimate],
+    b: &[Estimate],
+    ctx: &str,
+) {
+    assert_eq!(a.len(), b.len(), "{ctx}");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(
+            x.value.to_bits(),
+            y.value.to_bits(),
+            "{ctx}: fn {i} value {} vs {}",
+            x.value,
+            y.value
+        );
+        assert_eq!(
+            x.std_err.to_bits(),
+            y.std_err.to_bits(),
+            "{ctx}: fn {i} std_err"
+        );
+        assert_eq!(x.n_samples, y.n_samples, "{ctx}: fn {i} n_samples");
+    }
+}
+
+// ----------------------------------------------------------- the codec
+
+fn random_value(g: &mut Gen) -> Value {
+    let n = g.below(5);
+    match g.below(3) {
+        // arbitrary bit patterns: the codec must be lossless even for
+        // NaN/Inf payloads, so equality is asserted on re-encoded bytes
+        0 => Value::F32(
+            (0..n).map(|_| f32::from_bits(g.next_u32())).collect(),
+        ),
+        1 => Value::I32((0..n).map(|_| g.next_u32() as i32).collect()),
+        _ => Value::U32((0..n).map(|_| g.next_u32()).collect()),
+    }
+}
+
+fn random_task(g: &mut Gen) -> LaunchTask {
+    LaunchTask {
+        exe: format!("vm_multi_f8_s{}", 1 << (10 + g.below(4))),
+        tag: g.next_u64(),
+        inputs: (0..g.below(4)).map(|_| random_value(g)).collect(),
+    }
+}
+
+fn random_out(g: &mut Gen) -> TaggedOutput {
+    TaggedOutput {
+        tag: g.next_u64(),
+        data: (0..g.below(6))
+            .map(|_| f32::from_bits(g.next_u32()))
+            .collect(),
+        device_time: Duration::from_nanos(g.next_u64() >> 20),
+    }
+}
+
+#[test]
+fn wire_frames_round_trip_losslessly() {
+    check(0x31BE_C0DE, 40, |g: &mut Gen| {
+        let frame: DeviceFrame = match g.below(6) {
+            0 => Frame::Ping { nonce: g.next_u64() },
+            1 => Frame::Pong { nonce: g.next_u64() },
+            2 => Frame::Submit {
+                id: g.next_u64(),
+                max_retries: g.next_u32() % 8,
+                tasks: (0..g.below(4)).map(|_| random_task(g)).collect(),
+            },
+            3 => Frame::Result {
+                id: g.next_u64(),
+                outs: (0..g.below(4)).map(|_| random_out(g)).collect(),
+            },
+            4 => Frame::Error {
+                id: g.next_u64(),
+                msg: "worker 0: bad artifact ✗".to_string(),
+            },
+            _ => Frame::Cancel { id: g.next_u64() },
+        };
+        let bytes = frame.to_bytes();
+        let back = DeviceFrame::from_bytes(&bytes).unwrap();
+        // byte-level equality is NaN-proof and asserts the encoding
+        // itself is canonical (decode ∘ encode = identity on bytes)
+        assert_eq!(back.to_bytes(), bytes);
+    });
+}
+
+#[test]
+fn bare_wire_values_round_trip() {
+    check(0x57A7_10AD, 40, |g: &mut Gen| {
+        let task = random_task(g);
+        let mut buf = Vec::new();
+        task.encode(&mut buf);
+        let mut r = zmc::cluster::wire::Reader::new(&buf);
+        let back = LaunchTask::decode(&mut r).unwrap();
+        assert_eq!(r.remaining(), 0);
+        let mut buf2 = Vec::new();
+        back.encode(&mut buf2);
+        assert_eq!(buf2, buf);
+    });
+}
+
+#[test]
+fn corrupt_frames_reject_with_typed_errors() {
+    let frame: DeviceFrame = Frame::Submit {
+        id: 7,
+        max_retries: 3,
+        tasks: vec![LaunchTask {
+            exe: "vm_multi_f8_s4096".into(),
+            tag: 42,
+            inputs: vec![Value::F32(vec![1.0, -0.5])],
+        }],
+    };
+    let bytes = frame.to_bytes();
+
+    // every strict prefix is a truncation, never a panic or a garbage
+    // decode
+    for cut in 0..bytes.len() {
+        match DeviceFrame::from_bytes(&bytes[..cut]) {
+            Err(WireError::Truncated { .. }) => {}
+            other => panic!("prefix {cut}: expected Truncated, got {other:?}"),
+        }
+    }
+
+    // bad magic
+    let mut b = bytes.clone();
+    b[0] = b'X';
+    assert!(matches!(
+        DeviceFrame::from_bytes(&b),
+        Err(WireError::BadMagic { got }) if got[0] == b'X'
+    ));
+
+    // unknown version
+    let mut b = bytes.clone();
+    b[4] = 0x77;
+    b[5] = 0x77;
+    assert_eq!(
+        DeviceFrame::from_bytes(&b),
+        Err(WireError::BadVersion { got: 0x7777 })
+    );
+
+    // unknown message type
+    let mut b = bytes.clone();
+    b[6] = 99;
+    assert_eq!(
+        DeviceFrame::from_bytes(&b),
+        Err(WireError::BadTag { got: 99 })
+    );
+
+    // oversized length prefix is corruption, not an allocation request
+    let mut b = bytes.clone();
+    b[7..11].copy_from_slice(&u32::MAX.to_le_bytes());
+    assert!(matches!(
+        DeviceFrame::from_bytes(&b),
+        Err(WireError::TooLarge { .. })
+    ));
+
+    // trailing bytes after the declared payload
+    let mut b = bytes.clone();
+    b.push(0);
+    assert_eq!(
+        DeviceFrame::from_bytes(&b),
+        Err(WireError::Trailing { extra: 1 })
+    );
+}
+
+#[test]
+fn stream_reads_type_eof_and_truncation() {
+    use std::io::Cursor;
+    // clean EOF at a frame boundary is not an error: Ok(None)
+    let mut empty = Cursor::new(Vec::<u8>::new());
+    assert!(DeviceFrame::read_from(&mut empty).unwrap().is_none());
+
+    // EOF mid-frame is a typed truncation, recoverable through anyhow
+    let frame: DeviceFrame = Frame::Ping { nonce: 0xDEAD };
+    let bytes = frame.to_bytes();
+    for cut in [3, 7, bytes.len() - 1] {
+        let mut half = Cursor::new(bytes[..cut].to_vec());
+        let err = DeviceFrame::read_from(&mut half).unwrap_err();
+        assert!(
+            matches!(
+                err.downcast_ref::<WireError>(),
+                Some(WireError::Truncated { .. })
+            ),
+            "cut {cut}: {err:#}"
+        );
+    }
+
+    // two frames back to back parse in order, then a clean EOF
+    let mut two = frame.to_bytes();
+    two.extend_from_slice(&DeviceFrame::to_bytes(&Frame::Cancel {
+        id: 5,
+    }));
+    let mut rd = Cursor::new(two);
+    assert!(matches!(
+        DeviceFrame::read_from(&mut rd).unwrap(),
+        Some(Frame::Ping { nonce: 0xDEAD })
+    ));
+    assert!(matches!(
+        DeviceFrame::read_from(&mut rd).unwrap(),
+        Some(Frame::Cancel { id: 5 })
+    ));
+    assert!(DeviceFrame::read_from(&mut rd).unwrap().is_none());
+}
+
+// ------------------------------------------------- bit-identity sweeps
+
+/// The tentpole property: pure-remote and mixed clusters reproduce the
+/// single-engine multifunction estimates AND the merged `MomentSum`s
+/// bit-for-bit at every shard count 1..8. One worker process backs all
+/// the proxies — placement is free, so fanning k shards into the same
+/// host is indistinguishable from k hosts.
+#[test]
+fn remote_and_mixed_clusters_bit_identical_for_shard_counts_1_to_8() {
+    let jobs = job_pool();
+    let cfg = MultiConfig {
+        // 9 launches of 4096 samples → shards stay non-trivial up to 8
+        samples_per_fn: 9 << 12,
+        seed: 20_26,
+        exe: Some("vm_multi_f8_s4096".into()),
+        ..Default::default()
+    };
+    let reference = engine();
+    let base = multifunctions::integrate(&reference, &jobs, &cfg).unwrap();
+
+    let reg = Arc::new(Registry::emulated());
+    let (tasks, exe) =
+        multifunctions::build_tasks(&reg, &jobs, &cfg).unwrap();
+    let (n_fns, samples) = (exe.n_fns, exe.samples as u64);
+    let outs = LaunchExec::submit_launches(&reference, tasks.clone(), 3)
+        .unwrap()
+        .wait()
+        .unwrap();
+    let base_moments = reduce_tagged(outs, n_fns, samples, jobs.len());
+
+    let w = worker();
+    let addr = w.addr().to_string();
+    for k in 1..=8usize {
+        // pure remote: k proxies, no local engine at all
+        let remote = cluster_with(0, &vec![addr.clone(); k]);
+        assert_eq!((remote.n_local(), remote.n_remote()), (0, k));
+        let got =
+            multifunctions::integrate(&remote, &jobs, &cfg).unwrap();
+        assert_estimates_bit_identical(
+            &base,
+            &got,
+            &format!("{k} remote shards"),
+        );
+
+        // mixed: 1 local + k remotes
+        let mixed = cluster_with(1, &vec![addr.clone(); k]);
+        assert_eq!((mixed.n_local(), mixed.n_remote()), (1, k));
+        let got = multifunctions::integrate(&mixed, &jobs, &cfg).unwrap();
+        assert_estimates_bit_identical(
+            &base,
+            &got,
+            &format!("1 local + {k} remote shards"),
+        );
+
+        // one layer down: the merged moments match exactly too
+        let outs = LaunchExec::submit_launches(&mixed, tasks.clone(), 3)
+            .unwrap()
+            .wait()
+            .unwrap();
+        let merged = reduce_tagged(outs, n_fns, samples, jobs.len());
+        assert_eq!(base_moments, merged, "moments at {k} remotes");
+    }
+    assert_eq!(w.stats().empty_submits.load(Ordering::Relaxed), 0);
+}
+
+/// The other two paper classes ride the same `LaunchExec` surface:
+/// a functional grid scan and a normal tree search are bit-identical
+/// on local, pure-remote, and mixed topologies.
+#[test]
+fn functional_and_normal_classes_bit_identical_over_remote() {
+    let w = worker();
+    let addr = w.addr().to_string();
+    let local = engine();
+    let remote = cluster_with(0, &vec![addr.clone(); 2]);
+    let mixed = cluster_with(1, &vec![addr.clone(); 2]);
+
+    // functional: one integrand over a 6-point parameter grid
+    let u2 = [(0.0, 1.0), (0.0, 1.0)];
+    let job =
+        IntegralJob::with_params("cos(p0*(x1+x2)) + p1*x1", &u2, &[1.0, 0.5])
+            .unwrap();
+    let thetas: Vec<Vec<f64>> = [0.5, 1.0, 2.0]
+        .iter()
+        .flat_map(|&a| [[a, 0.25], [a, 0.75]])
+        .map(|t| t.to_vec())
+        .collect();
+    let cfg = MultiConfig {
+        samples_per_fn: 2 << 12,
+        seed: 909,
+        ..Default::default()
+    };
+    let base = functional::scan(&local, &job, &thetas, &cfg).unwrap();
+    for (exec, ctx) in [
+        (&remote as &dyn LaunchExec, "pure remote"),
+        (&mixed as &dyn LaunchExec, "mixed"),
+    ] {
+        let got = functional::scan(exec, &job, &thetas, &cfg).unwrap();
+        assert_estimates_bit_identical(&base, &got, ctx);
+    }
+
+    // normal: stratified sampling + tree search
+    let ncfg = NormalConfig {
+        initial_divisions: 3,
+        n_trials: 3,
+        max_depth: 1,
+        seed: 1717,
+        ..Default::default()
+    };
+    let job = IntegralJob::parse("sin(x1)*x2 + 1", &u2).unwrap();
+    let base = normal::integrate(&local, &job, &ncfg).unwrap();
+    for (exec, ctx) in [
+        (&remote as &dyn LaunchExec, "pure remote"),
+        (&mixed as &dyn LaunchExec, "mixed"),
+    ] {
+        let got = normal::integrate(exec, &job, &ncfg).unwrap();
+        assert_eq!(
+            base.estimate.value.to_bits(),
+            got.estimate.value.to_bits(),
+            "{ctx}: estimate"
+        );
+        assert_eq!(
+            base.estimate.std_err.to_bits(),
+            got.estimate.std_err.to_bits(),
+            "{ctx}: std_err"
+        );
+        assert_eq!(base.cubes_per_level, got.cubes_per_level, "{ctx}");
+        assert_eq!(base.flagged_per_level, got.flagged_per_level, "{ctx}");
+        assert_eq!(base.launches, got.launches, "{ctx}");
+    }
+}
+
+/// End-to-end through the Session facade: `.remote_engines([addr])`
+/// builds a mixed cluster, the topology accessors report it, and the
+/// fluent-builder results match an all-local session bit-for-bit.
+#[test]
+fn session_remote_engines_end_to_end() {
+    let w = worker();
+    let local = Session::builder().emulated().build().unwrap();
+    let s = Session::builder()
+        .emulated()
+        .remote_engines([w.addr().to_string()])
+        .build()
+        .unwrap();
+    assert_eq!(s.num_engines(), 2, "1 local + 1 remote");
+    assert_eq!(s.num_remote_engines(), 1);
+    assert!(s.cluster().is_some());
+    assert_eq!(s.cluster().unwrap().n_remote(), 1);
+
+    let jobs = job_pool();
+    let base = local
+        .multifunctions(&jobs)
+        .samples(4 << 12)
+        .seed(31)
+        .run()
+        .unwrap();
+    let got =
+        s.multifunctions(&jobs).samples(4 << 12).seed(31).run().unwrap();
+    assert_estimates_bit_identical(&base, &got, "session remote");
+}
+
+// ------------------------------------------------------- fault paths
+
+/// Kill the worker host mid-round: its shard must be requeued onto the
+/// local survivor, the batch must complete with the exact fault-free
+/// results, and the cluster metrics must record the requeue.
+#[test]
+fn worker_host_killed_mid_round_requeues_shard_exactly() {
+    let jobs = job_pool();
+    let cfg = MultiConfig {
+        samples_per_fn: 16 << 12,
+        seed: 40_40,
+        exe: Some("vm_multi_f8_s4096".into()),
+        ..Default::default()
+    };
+    let clean = multifunctions::integrate(&engine(), &jobs, &cfg).unwrap();
+
+    let w = worker();
+    let c = cluster_with(1, &[w.addr().to_string()]);
+    let handle = multifunctions::submit(&c, &jobs, &cfg).unwrap();
+    // the remote shard (8 launches) is in flight now; severing the
+    // connection forces the whole-shard requeue path. If the shard
+    // somehow races to completion first the submit-side path of a
+    // *later* batch would count instead, so assert on the requeue
+    // metrics rather than the interleaving.
+    w.kill();
+    let got = handle.wait().unwrap();
+    assert_estimates_bit_identical(&clean, &got, "after worker kill");
+    assert_eq!(c.n_alive(), 1, "dead remote node must be retired");
+    assert!(
+        c.metrics().retried() >= 1,
+        "cluster metrics must record the shard requeue: {}",
+        c.metrics().summary()
+    );
+}
+
+/// A hung host — TCP accepted, then silence — is caught by the
+/// heartbeat (no pong within `ping_timeout`), not by a socket error,
+/// and feeds the same requeue path with the same exact results.
+#[test]
+fn hung_host_heartbeat_timeout_feeds_requeue() {
+    // a listener that accepts and then never reads nor writes
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let held: Arc<Mutex<Vec<TcpStream>>> = Arc::default();
+    let sink = Arc::clone(&held);
+    std::thread::spawn(move || {
+        for conn in listener.incoming().flatten() {
+            sink.lock().unwrap().push(conn);
+        }
+    });
+
+    let jobs = job_pool();
+    let cfg = MultiConfig {
+        samples_per_fn: 4 << 12,
+        seed: 51_51,
+        exe: Some("vm_multi_f8_s4096".into()),
+        ..Default::default()
+    };
+    let clean = multifunctions::integrate(&engine(), &jobs, &cfg).unwrap();
+
+    let c = cluster_with(1, &[addr]);
+    assert_eq!(c.n_alive(), 2);
+    let got = multifunctions::integrate(&c, &jobs, &cfg).unwrap();
+    assert_estimates_bit_identical(&clean, &got, "after heartbeat death");
+    assert_eq!(c.n_alive(), 1, "hung node must be declared dead");
+    assert!(
+        c.metrics().retried() >= 1,
+        "heartbeat death must be a counted requeue: {}",
+        c.metrics().summary()
+    );
+    drop(held);
+}
+
+/// More nodes than tasks: the empty shards are skipped at dispatch and
+/// no zero-task submit ever crosses the wire.
+#[test]
+fn empty_shards_never_reach_the_worker() {
+    let jobs = job_pool()[..2].to_vec();
+    let cfg = MultiConfig {
+        // 2 launches over a 5-node cluster → 3 empty shards
+        samples_per_fn: 2 << 12,
+        seed: 7,
+        exe: Some("vm_multi_f8_s4096".into()),
+        ..Default::default()
+    };
+    let reg = Arc::new(Registry::emulated());
+    let (tasks, _) = multifunctions::build_tasks(&reg, &jobs, &cfg).unwrap();
+    assert_eq!(tasks.len(), 2);
+
+    let w = worker();
+    let c = cluster_with(1, &vec![w.addr().to_string(); 4]);
+    assert_eq!(c.n_engines(), 5);
+    let h = c.submit_with_retries(tasks, 3).unwrap();
+    assert_eq!(h.n_shards(), 2, "only non-empty shards dispatched");
+    assert_eq!(h.wait().unwrap().len(), 2);
+    assert_eq!(w.stats().empty_submits.load(Ordering::Relaxed), 0);
+    assert!(w.stats().submits.load(Ordering::Relaxed) >= 1);
+}
