@@ -10,11 +10,17 @@
 //! (bit-equal outputs) and reports per-launch transport overhead for
 //! the JSON trend line rather than asserting a latency bound.
 //!
-//! Env knobs: ZMC_REM_FUNCS, ZMC_REM_SAMPLES, ZMC_REM_REPS.
+//! A final leg prices resilience: the worker is killed and restarted
+//! on the same port, and the bench reports the time until the mixed
+//! cluster's reconnect supervisor has rejoined it — gated, as above,
+//! on the post-rejoin round staying bit-identical.
+//!
+//! Env knobs: ZMC_REM_FUNCS, ZMC_REM_SAMPLES, ZMC_REM_REPS,
+//! ZMC_REM_REJOINS (0 skips the rejoin leg).
 
 use std::net::TcpListener;
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use zmc::cluster::{serve_worker, DeviceCluster, LaunchExec, RemoteConfig};
 use zmc::engine::Engine;
@@ -139,6 +145,61 @@ fn main() -> anyhow::Result<()> {
             )],
         );
     }
+
+    // rejoin leg: bounce the worker and time kill → rebind → rejoined
+    // (reconnect counted, node alive again), then gate on the next
+    // round still being bit-exact. Reuses the mixed cluster, whose
+    // default RemoteConfig has the reconnect supervisor on.
+    let rejoins = env("ZMC_REM_REJOINS", 1);
+    let mut host = Some(w);
+    for rep in 0..rejoins {
+        let current = host.take().expect("worker host");
+        let port_addr = current.addr();
+        let before = mixed.metrics().reconnects();
+        current.kill();
+        current.join();
+        let t0 = Instant::now();
+        let deadline = Duration::from_secs(60);
+        let next = loop {
+            match TcpListener::bind(port_addr) {
+                Ok(l) => break serve_worker(l, Engine::for_pool(&pool)?)?,
+                Err(_) if t0.elapsed() < deadline => {
+                    std::thread::sleep(Duration::from_millis(10));
+                }
+                Err(e) => anyhow::bail!("rejoin {rep}: rebind: {e}"),
+            }
+        };
+        while mixed.metrics().reconnects() <= before || mixed.n_alive() < 2 {
+            anyhow::ensure!(
+                t0.elapsed() < deadline,
+                "rejoin {rep}: worker never rejoined: {}",
+                mixed.metrics().summary()
+            );
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        let rejoin_wall = t0.elapsed().as_secs_f64();
+        let outs = mixed.submit_launches(tasks.clone(), 3)?.wait()?;
+        let bits: Vec<(u64, Vec<u32>)> = outs
+            .iter()
+            .map(|o| {
+                (o.tag, o.data.iter().map(|x| x.to_bits()).collect())
+            })
+            .collect();
+        assert_eq!(
+            reference.as_ref(),
+            Some(&bits),
+            "rejoin {rep}: post-bounce outputs must stay bit-identical"
+        );
+        b.row(
+            &format!("rejoin_{rep}"),
+            &[
+                ("time_to_rejoin", fmt_s(rejoin_wall)),
+                ("reconnects", mixed.metrics().reconnects().to_string()),
+            ],
+        );
+        host = Some(next);
+    }
+
     b.finish();
     Ok(())
 }

@@ -1,0 +1,392 @@
+//! Deterministic transport fault injection for the cluster wire.
+//!
+//! A [`FaultPlan`] is a *seeded schedule* of faults keyed by
+//! `(connection index, data-frame index)`: connection indices are
+//! handed out in connect order (reconnects get fresh indices), and
+//! frame indices count the frames a connection actually ships in
+//! order — heartbeat `Ping`/`Pong` frames are excluded because their
+//! timing is wall-clock, not program order, and counting them would
+//! make the schedule racy. Frame 0 of every connection is its
+//! `Hello`, frame 1 its first `Submit`, and so on.
+//!
+//! The plan is threaded through the [`Transport`] trait, the one seam
+//! every client-side frame write crosses. Production uses
+//! [`DirectTcp`] (a plain `write_all` + flush); tests and `ZMC_CHAOS`
+//! wrap the same socket in a [`ChaosTcp`] that consults the plan
+//! before each send. Every fault class degrades to something the
+//! transport already survives — a dead connection (whole-shard
+//! requeue + reconnect) or a latency spike — so results stay
+//! bit-identical to a fault-free run; `tests/chaos_test.rs` proves
+//! it for each class.
+//!
+//! Schedule text format (the `ZMC_CHAOS` env var and
+//! [`FaultPlan::parse`]):
+//!
+//! ```text
+//! ZMC_CHAOS="drop@0:1,corrupt@0:3,hang@1:2"   # class@conn:frame
+//! ZMC_CHAOS="seeded:42:5"                     # seeded:<seed>:<events>
+//! ```
+//!
+//! There is deliberately no randomness source in this module beyond
+//! splitmix64 of the caller's seed: the same plan replays the same
+//! faults at the same frames on every run.
+
+use std::collections::BTreeMap;
+use std::io::{self, Write};
+use std::net::{Shutdown, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use super::wire::{TAG_PING, TAG_PONG};
+
+/// One scheduled transport fault.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Fault {
+    /// Sever the connection instead of sending the frame.
+    Drop,
+    /// Sleep this long, then send the frame normally (a latency
+    /// spike; never affects results or liveness accounting).
+    Delay(Duration),
+    /// Send only the first `n` bytes of the frame, then sever — the
+    /// peer sees a typed mid-frame truncation.
+    Truncate(usize),
+    /// XOR one byte of the frame (`offset` is taken modulo the frame
+    /// length) — the peer sees a typed decode error, never a wrong
+    /// value, because the frame checksum covers everything past the
+    /// version field.
+    Corrupt { offset: usize, xor: u8 },
+    /// Write nothing, keep the socket open, and swallow every later
+    /// frame on this connection — a peer gone catatonic, detected by
+    /// heartbeat silence.
+    Hang,
+}
+
+/// A deterministic schedule of [`Fault`]s, keyed by connection and
+/// data-frame index. Shared (via `Arc`) between every connection a
+/// cluster opens so connection indices are globally ordered.
+#[derive(Debug, Default)]
+pub struct FaultPlan {
+    events: BTreeMap<(u64, u64), Fault>,
+    next_conn: AtomicU64,
+}
+
+impl FaultPlan {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Schedule `fault` at data-frame `frame` of connection `conn`
+    /// (builder style).
+    pub fn event(mut self, conn: u64, frame: u64, fault: Fault) -> Self {
+        self.events.insert((conn, frame), fault);
+        self
+    }
+
+    /// A pseudo-random schedule of `events` faults derived entirely
+    /// from `seed` — same seed, same schedule, every run. Faults land
+    /// on connections 0..3 and data frames 1.. (never frame 0, so an
+    /// initial handshake always completes and cluster construction
+    /// cannot fail before the plan gets a chance to bite).
+    pub fn seeded(seed: u64, events: usize) -> Self {
+        let mut plan = FaultPlan::new();
+        let mut s = seed;
+        for _ in 0..events {
+            s = splitmix64(s);
+            let conn = s % 3;
+            let frame = 1 + (splitmix64(s ^ 0xA5A5) % 6);
+            let h = splitmix64(s ^ 0x5A5A);
+            let fault = match h % 5 {
+                0 => Fault::Drop,
+                1 => Fault::Delay(Duration::from_millis(5 + h % 40)),
+                2 => Fault::Truncate((h % 20) as usize),
+                3 => Fault::Corrupt {
+                    offset: ((h >> 8) % 64) as usize,
+                    xor: ((h >> 16) as u8) | 1,
+                },
+                _ => Fault::Hang,
+            };
+            plan.events.insert((conn, frame), fault);
+        }
+        plan
+    }
+
+    /// The plan described by `ZMC_CHAOS`, if the variable is set and
+    /// parses (a malformed schedule is reported and ignored — chaos
+    /// is a debugging knob, not a correctness input).
+    pub fn from_env() -> Option<Arc<FaultPlan>> {
+        let spec = std::env::var("ZMC_CHAOS").ok()?;
+        match Self::parse(&spec) {
+            Ok(p) => Some(Arc::new(p)),
+            Err(e) => {
+                eprintln!("note: ignoring ZMC_CHAOS ({e})");
+                None
+            }
+        }
+    }
+
+    /// Parse a schedule: either `seeded:<seed>:<events>` or a
+    /// comma-separated list of `class@conn:frame` entries with class
+    /// one of `drop|delay|truncate|corrupt|hang`. List entries take
+    /// their parameters (delay length, truncation point, corrupted
+    /// byte) from a hash of their position, so the text form stays
+    /// one token per event.
+    pub fn parse(spec: &str) -> Result<FaultPlan, String> {
+        let spec = spec.trim();
+        if let Some(rest) = spec.strip_prefix("seeded:") {
+            let (seed, events) = rest
+                .split_once(':')
+                .ok_or("expected seeded:<seed>:<events>")?;
+            let seed: u64 = seed
+                .parse()
+                .map_err(|_| format!("bad seed `{seed}`"))?;
+            let events: usize = events
+                .parse()
+                .map_err(|_| format!("bad event count `{events}`"))?;
+            return Ok(Self::seeded(seed, events));
+        }
+        let mut plan = FaultPlan::new();
+        for part in spec.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let (class, at) = part
+                .split_once('@')
+                .ok_or_else(|| format!("`{part}`: expected class@conn:frame"))?;
+            let (conn, frame) = at
+                .split_once(':')
+                .ok_or_else(|| format!("`{part}`: expected class@conn:frame"))?;
+            let conn: u64 = conn
+                .parse()
+                .map_err(|_| format!("`{part}`: bad connection index"))?;
+            let frame: u64 = frame
+                .parse()
+                .map_err(|_| format!("`{part}`: bad frame index"))?;
+            let h = splitmix64(conn.rotate_left(32) ^ frame);
+            let fault = match class {
+                "drop" => Fault::Drop,
+                "delay" => Fault::Delay(Duration::from_millis(50)),
+                "truncate" => Fault::Truncate((h % 11) as usize),
+                "corrupt" => Fault::Corrupt {
+                    offset: ((h >> 8) % 97) as usize,
+                    xor: (h as u8) | 1,
+                },
+                "hang" => Fault::Hang,
+                other => return Err(format!("unknown fault class `{other}`")),
+            };
+            plan.events.insert((conn, frame), fault);
+        }
+        if plan.events.is_empty() {
+            return Err("empty schedule".into());
+        }
+        Ok(plan)
+    }
+
+    /// The fault scheduled for data frame `frame` of connection
+    /// `conn`, if any.
+    pub fn fault_for(&self, conn: u64, frame: u64) -> Option<Fault> {
+        self.events.get(&(conn, frame)).copied()
+    }
+
+    /// Number of scheduled events.
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Hand out the next connection index (connect order, shared
+    /// across every connection built against this plan).
+    pub(crate) fn next_conn(&self) -> u64 {
+        self.next_conn.fetch_add(1, Ordering::SeqCst)
+    }
+}
+
+/// How one connection's encoded frames reach the wire — the seam the
+/// fault layer hooks. Exactly one frame per call; an `Err` means the
+/// connection is unusable and is handled like any socket failure
+/// (death detection, whole-shard requeue, reconnect).
+pub trait Transport: Send + Sync {
+    fn send(&self, stream: &mut TcpStream, frame: &[u8]) -> io::Result<()>;
+}
+
+/// The production transport: one `write_all` + flush per frame.
+#[derive(Debug, Default)]
+pub struct DirectTcp;
+
+impl Transport for DirectTcp {
+    fn send(&self, stream: &mut TcpStream, frame: &[u8]) -> io::Result<()> {
+        stream.write_all(frame)?;
+        stream.flush()
+    }
+}
+
+/// A [`Transport`] that consults a [`FaultPlan`] before each send.
+/// Holds this connection's index (allocated from the plan at
+/// construction) and counts the data frames it ships.
+pub struct ChaosTcp {
+    plan: Arc<FaultPlan>,
+    conn: u64,
+    data_frames: AtomicU64,
+    hung: AtomicBool,
+}
+
+impl ChaosTcp {
+    pub fn new(plan: Arc<FaultPlan>) -> Self {
+        let conn = plan.next_conn();
+        ChaosTcp {
+            plan,
+            conn,
+            data_frames: AtomicU64::new(0),
+            hung: AtomicBool::new(false),
+        }
+    }
+
+    /// The connection index this transport was assigned.
+    pub fn conn(&self) -> u64 {
+        self.conn
+    }
+}
+
+impl Transport for ChaosTcp {
+    fn send(&self, stream: &mut TcpStream, frame: &[u8]) -> io::Result<()> {
+        if self.hung.load(Ordering::SeqCst) {
+            // a hung peer writes nothing, forever — heartbeats too
+            return Ok(());
+        }
+        let tag = frame.get(6).copied().unwrap_or(0);
+        if tag == TAG_PING || tag == TAG_PONG {
+            // heartbeats are wall-clock, not program order; they ride
+            // outside the schedule so frame indices stay deterministic
+            return DirectTcp.send(stream, frame);
+        }
+        let idx = self.data_frames.fetch_add(1, Ordering::SeqCst);
+        match self.plan.fault_for(self.conn, idx) {
+            None => DirectTcp.send(stream, frame),
+            Some(Fault::Delay(d)) => {
+                std::thread::sleep(d);
+                DirectTcp.send(stream, frame)
+            }
+            Some(Fault::Drop) => {
+                let _ = stream.shutdown(Shutdown::Both);
+                Err(io::Error::new(
+                    io::ErrorKind::ConnectionReset,
+                    "chaos: injected connection drop",
+                ))
+            }
+            Some(Fault::Truncate(n)) => {
+                let n = n.min(frame.len());
+                stream.write_all(&frame[..n])?;
+                let _ = stream.flush();
+                let _ = stream.shutdown(Shutdown::Both);
+                Err(io::Error::new(
+                    io::ErrorKind::ConnectionReset,
+                    "chaos: injected mid-frame truncation",
+                ))
+            }
+            Some(Fault::Corrupt { offset, xor }) => {
+                let mut bytes = frame.to_vec();
+                let i = offset % bytes.len().max(1);
+                bytes[i] ^= if xor == 0 { 1 } else { xor };
+                DirectTcp.send(stream, &bytes)
+            }
+            Some(Fault::Hang) => {
+                self.hung.store(true, Ordering::SeqCst);
+                Ok(())
+            }
+        }
+    }
+}
+
+/// splitmix64 — the repo vendors no rand crate, so chaos schedules
+/// and reconnect jitter both derive from this tiny bijective mixer.
+pub(crate) fn splitmix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    x ^ (x >> 31)
+}
+
+/// Exponential backoff with deterministic jitter: `base · 2^attempt`
+/// capped at `cap`, then scaled into [75%, 125%] by a hash of
+/// `(salt, attempt)` — decorrelated across peers (salt the peer
+/// address), reproducible across runs.
+pub(crate) fn backoff_delay(
+    attempt: u32,
+    base: Duration,
+    cap: Duration,
+    salt: u64,
+) -> Duration {
+    let exp = base.saturating_mul(1u32 << attempt.min(16));
+    let capped = exp.min(cap);
+    let h = splitmix64(salt ^ u64::from(attempt).wrapping_mul(0x9e37_79b9));
+    let pct = 75 + (h % 51); // 75..=125
+    capped.mul_f64(pct as f64 / 100.0).min(cap)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn seeded_schedules_are_reproducible() {
+        let a = FaultPlan::seeded(42, 8);
+        let b = FaultPlan::seeded(42, 8);
+        assert_eq!(a.events, b.events);
+        assert!(!a.is_empty());
+        // never frame 0: the initial handshake always completes
+        assert!(a.events.keys().all(|&(_, frame)| frame >= 1));
+        let c = FaultPlan::seeded(43, 8);
+        assert_ne!(a.events, c.events, "seed must matter");
+    }
+
+    #[test]
+    fn parse_explicit_schedule() {
+        let p = FaultPlan::parse("drop@0:1, corrupt@1:3,hang@2:2").unwrap();
+        assert_eq!(p.len(), 3);
+        assert_eq!(p.fault_for(0, 1), Some(Fault::Drop));
+        assert!(matches!(p.fault_for(1, 3), Some(Fault::Corrupt { .. })));
+        assert_eq!(p.fault_for(2, 2), Some(Fault::Hang));
+        assert_eq!(p.fault_for(0, 0), None);
+    }
+
+    #[test]
+    fn parse_seeded_and_errors() {
+        let p = FaultPlan::parse("seeded:7:4").unwrap();
+        assert!(!p.is_empty());
+        assert!(FaultPlan::parse("").is_err());
+        assert!(FaultPlan::parse("warp@0:1").is_err());
+        assert!(FaultPlan::parse("drop@x:1").is_err());
+        assert!(FaultPlan::parse("drop@1").is_err());
+        assert!(FaultPlan::parse("seeded:banana:4").is_err());
+    }
+
+    #[test]
+    fn connection_indices_are_ordered() {
+        let p = FaultPlan::new();
+        assert_eq!(p.next_conn(), 0);
+        assert_eq!(p.next_conn(), 1);
+        assert_eq!(p.next_conn(), 2);
+    }
+
+    #[test]
+    fn backoff_grows_caps_and_jitters_deterministically() {
+        let base = Duration::from_millis(10);
+        let cap = Duration::from_millis(500);
+        let d0 = backoff_delay(0, base, cap, 99);
+        let d5 = backoff_delay(5, base, cap, 99);
+        let d20 = backoff_delay(20, base, cap, 99);
+        assert!(d0 >= base.mul_f64(0.74) && d0 <= base.mul_f64(1.26));
+        assert!(d5 > d0);
+        assert!(d20 <= cap, "{d20:?} exceeds cap");
+        assert_eq!(d5, backoff_delay(5, base, cap, 99), "jitter must replay");
+        assert_ne!(
+            backoff_delay(5, base, cap, 1),
+            backoff_delay(5, base, cap, 2),
+            "salt decorrelates peers"
+        );
+    }
+}

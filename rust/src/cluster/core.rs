@@ -119,9 +119,24 @@ where
     B::Task: Wire + Clone + Send + Sync + 'static,
     B::Out: Wire + Send + 'static,
 {
+    /// Live node indices. A slot marked dead whose node reports
+    /// healthy again — a remote proxy revived by its reconnect
+    /// supervisor; local engines never recover — is flipped back
+    /// alive here, so the next submission's shard plan includes the
+    /// rejoined host.
     fn alive_indices(&self) -> Vec<usize> {
         (0..self.slots.len())
-            .filter(|&i| self.slots[i].alive.load(Ordering::Relaxed))
+            .filter(|&i| {
+                let slot = &self.slots[i];
+                if slot.alive.load(Ordering::Relaxed) {
+                    return true;
+                }
+                if !slot.node.is_dead() {
+                    slot.alive.store(true, Ordering::Relaxed);
+                    return true;
+                }
+                false
+            })
             .collect()
     }
 
@@ -479,18 +494,30 @@ impl Cluster<DeviceBackend> {
         remotes: &[String],
         rcfg: RemoteConfig,
     ) -> Result<Self> {
+        let metrics = Arc::new(Metrics::new());
         let engines = (0..n_local)
             .map(|_| Engine::for_pool(pool))
             .collect::<Result<Vec<_>>>()?;
+        // every production connect proves artifact parity: the Hello
+        // digest comes from the pool's registry unless the caller
+        // already pinned one
+        let rcfg = if rcfg.digest == 0 {
+            RemoteConfig { digest: pool.registry.digest(), ..rcfg }
+        } else {
+            rcfg
+        };
         let proxies = remotes
             .iter()
-            .map(|addr| RemoteEngine::connect(addr, rcfg.clone()))
+            .map(|addr| {
+                RemoteEngine::connect_with_metrics(
+                    addr,
+                    rcfg.clone(),
+                    Arc::clone(&metrics),
+                )
+            })
             .collect::<Result<Vec<_>>>()?;
-        let mut cluster = Cluster::with_remotes(
-            engines,
-            proxies,
-            Arc::new(Metrics::new()),
-        )?;
+        let mut cluster =
+            Cluster::with_remotes(engines, proxies, metrics)?;
         // remote nodes carry no registry handle, so the cluster keeps
         // its own: LaunchExec::registry works even when all-remote
         cluster.registry = Some(Arc::clone(&pool.registry));
@@ -770,5 +797,74 @@ mod tests {
             "{}",
             metrics.summary()
         );
+    }
+
+    #[test]
+    fn restarted_worker_rejoins_the_shard_plan() {
+        use std::time::Instant;
+
+        let metrics = Arc::new(Metrics::new());
+        let w = loopback_worker();
+        let addr = w.addr();
+        let remote: RemoteEngine<u64, u64> =
+            RemoteEngine::connect_with_metrics(
+                &addr.to_string(),
+                RemoteConfig {
+                    ping_interval: Duration::from_millis(20),
+                    ping_timeout: Duration::from_millis(300),
+                    reconnect_backoff: Duration::from_millis(20),
+                    reconnect_cap: Duration::from_millis(100),
+                    reconnect_retries: 100,
+                    ..Default::default()
+                },
+                Arc::clone(&metrics),
+            )
+            .unwrap();
+        let c = Cluster::with_remotes(
+            vec![Engine::new(Mock, EngineConfig::new(1)).unwrap()],
+            vec![remote],
+            Arc::clone(&metrics),
+        )
+        .unwrap();
+
+        // kill the worker: the round survives on the local engine and
+        // the remote slot is marked dead
+        w.kill();
+        drop(w);
+        let tasks: Vec<u64> = (0..40).collect();
+        assert_eq!(c.run(tasks.clone()).unwrap(), expect(&tasks));
+        assert_eq!(c.n_alive(), 1);
+
+        // restart a worker on the same port: the supervisor
+        // re-handshakes and the node rejoins the next shard plan
+        let deadline = Instant::now() + Duration::from_secs(10);
+        let _w2 = loop {
+            match TcpListener::bind(addr) {
+                Ok(l) => {
+                    let engine =
+                        Engine::new(Mock, EngineConfig::new(2)).unwrap();
+                    break serve_worker(l, engine).unwrap();
+                }
+                Err(e) => {
+                    assert!(
+                        Instant::now() < deadline,
+                        "could not rebind {addr}: {e}"
+                    );
+                    std::thread::sleep(Duration::from_millis(10));
+                }
+            }
+        };
+        while c.n_alive() < 2 {
+            assert!(
+                Instant::now() < deadline,
+                "remote node never rejoined ({})",
+                metrics.summary()
+            );
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        assert!(metrics.reconnects() >= 1, "{}", metrics.summary());
+        // the revived node serves subsequent rounds
+        assert_eq!(c.run(tasks.clone()).unwrap(), expect(&tasks));
+        assert_eq!(c.n_alive(), 2);
     }
 }

@@ -39,6 +39,7 @@
 //! `benches/cluster_scaling.rs` drives the *real* cluster and prices
 //! its shard plan with the same measured-time approach.
 
+pub mod chaos;
 pub mod core;
 pub mod exec;
 pub mod plan;
@@ -47,12 +48,16 @@ pub mod remote;
 pub mod sim;
 pub mod wire;
 
+// the transport fault plan is re-exported under a qualified name so it
+// never shadows the engine-level `crate::engine::core::FaultPlan`
+pub use self::chaos::{Fault, FaultPlan as WireFaultPlan};
 pub use self::core::{Cluster, ClusterHandle, DeviceCluster};
 pub use self::exec::{ExecHandle, LaunchExec};
 pub use self::plan::ShardPlan;
 pub use self::reduce::reduce_tagged;
 pub use self::remote::{
-    serve_worker, RemoteConfig, RemoteEngine, RemoteHandle, WorkerServer,
+    serve_worker, serve_worker_with_digest, HandshakeError, RemoteConfig,
+    RemoteEngine, RemoteHandle, WorkerServer,
 };
 pub use self::sim::{scaling_sweep, simulate, SimResult};
 pub use self::wire::{Frame, Wire, WireError};

@@ -22,6 +22,25 @@
 //!   arrives within [`RemoteConfig::ping_timeout`] — this catches
 //!   hung hosts and dead network paths where TCP would block for
 //!   minutes before noticing.
+//!
+//! Death is no longer permanent: every connection opens with a
+//! [`Frame::Hello`]/[`Frame::HelloAck`] handshake (wire-version range
+//! + registry digest, so a mismatched worker is a typed
+//! [`HandshakeError`] at connect time), and a proxy built by
+//! [`RemoteEngine::connect`] runs a supervisor thread that, when the
+//! connection dies, retries the connect with exponential backoff +
+//! deterministic jitter up to [`RemoteConfig::reconnect_retries`]
+//! attempts per outage, re-handshakes, and swaps the fresh connection
+//! in behind the same proxy. In-flight jobs on the dead connection
+//! still fail fast onto the cluster's whole-shard requeue path; the
+//! reconnect only makes the *next* submit land on the revived host.
+//!
+//! Every client-side frame write crosses the
+//! [`Transport`](super::chaos::Transport) seam, so a
+//! [`FaultPlan`](super::chaos::FaultPlan) in
+//! [`RemoteConfig::chaos`] can deterministically drop, delay,
+//! truncate, corrupt, or hang any scheduled frame — see
+//! `cluster/chaos.rs` and `tests/chaos_test.rs`.
 
 use std::collections::HashMap;
 use std::io::BufReader;
@@ -35,9 +54,11 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Context, Result};
 
+use crate::coordinator::Metrics;
 use crate::engine::core::{lock_ok, wait_ok, Backend, Engine, JobHandle};
 
-use super::wire::{Frame, Wire};
+use super::chaos::{backoff_delay, splitmix64, ChaosTcp, DirectTcp, FaultPlan, Transport};
+use super::wire::{Frame, Wire, WIRE_VERSION, WIRE_VERSION_MIN};
 
 /// Transport tuning knobs. Defaults suit LAN workers; tests inject
 /// short timeouts to make hung-host detection fast.
@@ -47,6 +68,8 @@ pub struct RemoteConfig {
     pub ping_interval: Duration,
     /// Silence (no pong, no result) after which the worker is
     /// declared dead. Should be several multiples of `ping_interval`.
+    /// Also bounds how long the connect-time handshake waits for a
+    /// `HelloAck` before declaring the peer silent.
     pub ping_timeout: Duration,
     /// Connection attempts before `connect` gives up (covers the
     /// worker still starting up).
@@ -54,6 +77,24 @@ pub struct RemoteConfig {
     /// Backoff between connection attempts, doubled each retry up to
     /// 8× the base.
     pub connect_backoff: Duration,
+    /// Registry digest presented in the `Hello` (0 = unchecked, for
+    /// registry-less mock transports). The cluster fills this from
+    /// `Registry::digest()` so both sides prove they hold the same
+    /// artifacts before any task ships.
+    pub digest: u64,
+    /// Reconnect-and-resume: when the connection dies, a supervisor
+    /// thread re-establishes it with backoff and the proxy rejoins
+    /// the shard plan. `false` restores permanent death.
+    pub reconnect: bool,
+    /// First reconnect delay; doubles per failed attempt.
+    pub reconnect_backoff: Duration,
+    /// Upper bound on one reconnect delay (the backoff cap).
+    pub reconnect_cap: Duration,
+    /// Reconnect attempts per outage before the proxy stays dead.
+    pub reconnect_retries: u32,
+    /// Deterministic fault-injection schedule applied to every
+    /// connection this config opens (tests / `ZMC_CHAOS`).
+    pub chaos: Option<Arc<FaultPlan>>,
 }
 
 impl Default for RemoteConfig {
@@ -63,9 +104,50 @@ impl Default for RemoteConfig {
             ping_timeout: Duration::from_secs(2),
             connect_retries: 20,
             connect_backoff: Duration::from_millis(50),
+            digest: 0,
+            reconnect: true,
+            reconnect_backoff: Duration::from_millis(100),
+            reconnect_cap: Duration::from_secs(5),
+            reconnect_retries: 30,
+            chaos: None,
         }
     }
 }
+
+/// Typed connect-time handshake failures — permanent conditions (the
+/// peer speaks the wrong protocol version or holds different
+/// artifacts), distinguished from transient connect errors so callers
+/// fail fast instead of retrying into the same wall.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum HandshakeError {
+    /// No overlap between our supported wire-version range and what
+    /// the worker chose (0 = the worker found no overlap either).
+    VersionMismatch { ours_min: u16, ours_max: u16, theirs: u16 },
+    /// The worker's registry digest differs from ours: its artifacts
+    /// have drifted and results could silently diverge.
+    DigestMismatch { ours: u64, theirs: u64 },
+}
+
+impl std::fmt::Display for HandshakeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            HandshakeError::VersionMismatch { ours_min, ours_max, theirs } => {
+                write!(
+                    f,
+                    "wire-version mismatch: we speak v{ours_min}..=v{ours_max}, \
+                     worker answered v{theirs}"
+                )
+            }
+            HandshakeError::DigestMismatch { ours, theirs } => write!(
+                f,
+                "registry digest mismatch: ours {ours:#018x}, worker \
+                 {theirs:#018x} — artifacts have drifted between hosts"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for HandshakeError {}
 
 // ---------------------------------------------------------------------------
 // client side: RemoteEngine proxy
@@ -102,6 +184,9 @@ struct RemoteShared<R> {
     /// Write half; one whole-frame `write_all` per lock hold, so
     /// submit/ping/cancel frames never interleave.
     writer: Mutex<TcpStream>,
+    /// The seam every outgoing frame crosses — `DirectTcp` in
+    /// production, `ChaosTcp` under a fault plan.
+    transport: Arc<dyn Transport>,
     /// Socket handle kept for `shutdown` — unblocks the reader thread
     /// on drop and on heartbeat death.
     sock: TcpStream,
@@ -116,6 +201,13 @@ struct RemoteShared<R> {
 }
 
 impl<R> RemoteShared<R> {
+    /// Ship one encoded frame through the transport under the writer
+    /// lock (frames never interleave).
+    fn send_frame(&self, bytes: &[u8]) -> std::io::Result<()> {
+        let mut w = lock_ok(&self.writer);
+        self.transport.send(&mut w, bytes)
+    }
+
     fn touch(&self) {
         let ms = self.born.elapsed().as_millis() as u64;
         self.last_alive_ms.store(ms, Ordering::Relaxed);
@@ -157,14 +249,42 @@ impl<R> RemoteShared<R> {
     }
 }
 
+/// One established connection epoch: shared state plus its service
+/// threads. The reconnect supervisor swaps a whole `Conn` in behind
+/// the proxy, so jobs submitted on the old epoch keep their
+/// death-path semantics while new submits land on the fresh socket.
+struct Conn<R> {
+    shared: Arc<RemoteShared<R>>,
+    reader: Option<thread::JoinHandle<()>>,
+    pinger: Option<thread::JoinHandle<()>>,
+}
+
+impl<R> Conn<R> {
+    /// Stop this epoch's threads and close its socket. Idempotent;
+    /// joins are quick because death ends both loops.
+    fn teardown(&mut self) {
+        self.shared.stop.store(true, Ordering::SeqCst);
+        let _ = self.shared.sock.shutdown(Shutdown::Both);
+        if let Some(h) = self.reader.take() {
+            let _ = h.join();
+        }
+        if let Some(h) = self.pinger.take() {
+            let _ = h.join();
+        }
+    }
+}
+
 /// Client-side proxy for an engine hosted by a `zmc worker` process.
 /// Generic over the task/result payload so the transport is testable
 /// against mock backends; production uses
 /// `RemoteEngine<LaunchTask, TaggedOutput>`.
 pub struct RemoteEngine<T, R> {
-    shared: Arc<RemoteShared<R>>,
-    reader: Option<thread::JoinHandle<()>>,
-    pinger: Option<thread::JoinHandle<()>>,
+    peer: String,
+    /// Current connection epoch; replaced wholesale on reconnect.
+    conn: Arc<Mutex<Conn<R>>>,
+    /// Proxy-lifetime stop flag (ends the supervisor on drop).
+    stop: Arc<AtomicBool>,
+    supervisor: Option<thread::JoinHandle<()>>,
     _task: PhantomData<fn(T) -> T>,
 }
 
@@ -174,13 +294,34 @@ where
     R: Wire + Send + 'static,
 {
     /// Connect to a worker, retrying with backoff while it starts up.
+    /// A typed [`HandshakeError`] (version or digest mismatch) fails
+    /// immediately — retrying into the same wall cannot help.
     pub fn connect(addr: &str, cfg: RemoteConfig) -> Result<Self> {
+        Self::connect_with_metrics(addr, cfg, Arc::new(Metrics::new()))
+    }
+
+    /// Like [`connect`](Self::connect), with reconnect events
+    /// accounted on the caller's [`Metrics`] (the cluster passes its
+    /// own, so `reconnects`/`reconnect_failures` show up in the same
+    /// summary as retries and failures).
+    pub fn connect_with_metrics(
+        addr: &str,
+        cfg: RemoteConfig,
+        metrics: Arc<Metrics>,
+    ) -> Result<Self> {
         let mut backoff = cfg.connect_backoff;
         let mut last_err = None;
         for _ in 0..cfg.connect_retries.max(1) {
-            match TcpStream::connect(addr) {
-                Ok(stream) => return Self::from_stream(stream, addr, &cfg),
+            match Self::establish(addr, &cfg) {
+                Ok(conn) => {
+                    return Ok(Self::from_conn(addr, cfg, conn, metrics))
+                }
                 Err(e) => {
+                    if e.downcast_ref::<HandshakeError>().is_some() {
+                        return Err(e.context(format!(
+                            "connecting to remote worker {addr}"
+                        )));
+                    }
                     last_err = Some(e);
                     thread::sleep(backoff);
                     backoff =
@@ -188,7 +329,7 @@ where
                 }
             }
         }
-        Err(anyhow!(last_err.unwrap())).with_context(|| {
+        Err(last_err.unwrap()).with_context(|| {
             format!(
                 "connecting to remote worker {addr} \
                  ({} attempts)",
@@ -197,21 +338,86 @@ where
         })
     }
 
-    fn from_stream(
-        stream: TcpStream,
-        addr: &str,
-        cfg: &RemoteConfig,
-    ) -> Result<Self> {
+    /// One full connection attempt: TCP connect, transport setup,
+    /// `Hello`/`HelloAck` under a read deadline (a silent peer or a
+    /// clean EOF mid-handshake is a connect *failure*, never a hang),
+    /// then spawn the reader and heartbeat threads.
+    fn establish(addr: &str, cfg: &RemoteConfig) -> Result<Conn<R>> {
+        let stream = TcpStream::connect(addr)
+            .with_context(|| format!("connecting to {addr}"))?;
         stream.set_nodelay(true).ok();
-        let writer = stream
+        let mut writer = stream
             .try_clone()
             .context("cloning worker socket for writes")?;
         let read_half = stream
             .try_clone()
             .context("cloning worker socket for reads")?;
+        let transport: Arc<dyn Transport> = match &cfg.chaos {
+            Some(plan) => Arc::new(ChaosTcp::new(Arc::clone(plan))),
+            None => Arc::new(DirectTcp),
+        };
+
+        // clones share the underlying socket, so this deadline also
+        // governs reads on `read_half` until cleared below
+        let deadline = cfg.ping_timeout.max(Duration::from_millis(50));
+        stream
+            .set_read_timeout(Some(deadline))
+            .context("setting handshake read deadline")?;
+        let hello = Frame::<T, R>::Hello {
+            min_version: WIRE_VERSION_MIN,
+            max_version: WIRE_VERSION,
+            digest: cfg.digest,
+        };
+        transport
+            .send(&mut writer, &hello.to_bytes())
+            .with_context(|| format!("sending Hello to {addr}"))?;
+        let mut rd = BufReader::new(read_half);
+        match Frame::<T, R>::read_from(&mut rd) {
+            Ok(Some(Frame::HelloAck { version, digest })) => {
+                if version < WIRE_VERSION_MIN || version > WIRE_VERSION
+                {
+                    return Err(HandshakeError::VersionMismatch {
+                        ours_min: WIRE_VERSION_MIN,
+                        ours_max: WIRE_VERSION,
+                        theirs: version,
+                    }
+                    .into());
+                }
+                if cfg.digest != 0
+                    && digest != 0
+                    && digest != cfg.digest
+                {
+                    return Err(HandshakeError::DigestMismatch {
+                        ours: cfg.digest,
+                        theirs: digest,
+                    }
+                    .into());
+                }
+            }
+            Ok(Some(Frame::Error { msg, .. })) => {
+                bail!("worker {addr} rejected the handshake: {msg}")
+            }
+            Ok(Some(_)) => bail!(
+                "worker {addr} answered the Hello with a \
+                 non-handshake frame"
+            ),
+            Ok(None) => bail!(
+                "worker {addr} closed the connection mid-handshake"
+            ),
+            Err(e) => {
+                return Err(e.context(format!(
+                    "waiting for HelloAck from {addr}"
+                )))
+            }
+        }
+        stream
+            .set_read_timeout(None)
+            .context("clearing handshake read deadline")?;
+
         let shared = Arc::new(RemoteShared::<R> {
             peer: addr.to_string(),
             writer: Mutex::new(writer),
+            transport,
             sock: stream,
             pending: Mutex::new(HashMap::new()),
             next_id: AtomicU64::new(1),
@@ -226,7 +432,7 @@ where
             let shared = Arc::clone(&shared);
             thread::Builder::new()
                 .name(format!("zmc-remote-rx-{addr}"))
-                .spawn(move || reader_loop::<T, R>(shared, read_half))
+                .spawn(move || reader_loop::<T, R>(shared, rd))
                 .context("spawning remote reader thread")?
         };
         let pinger = {
@@ -237,25 +443,59 @@ where
                 .spawn(move || ping_loop::<T, R>(shared, cfg))
                 .context("spawning remote heartbeat thread")?
         };
+        Ok(Conn { shared, reader: Some(reader), pinger: Some(pinger) })
+    }
 
-        Ok(RemoteEngine {
-            shared,
-            reader: Some(reader),
-            pinger: Some(pinger),
+    fn from_conn(
+        addr: &str,
+        cfg: RemoteConfig,
+        conn: Conn<R>,
+        metrics: Arc<Metrics>,
+    ) -> Self {
+        let conn = Arc::new(Mutex::new(conn));
+        let stop = Arc::new(AtomicBool::new(false));
+        let supervisor = if cfg.reconnect && cfg.reconnect_retries > 0
+        {
+            let addr_owned = addr.to_string();
+            let conn2 = Arc::clone(&conn);
+            let stop2 = Arc::clone(&stop);
+            thread::Builder::new()
+                .name(format!("zmc-remote-sup-{addr}"))
+                .spawn(move || {
+                    supervisor_loop::<T, R>(
+                        addr_owned, cfg, conn2, stop2, metrics,
+                    )
+                })
+                .ok()
+        } else {
+            None
+        };
+        RemoteEngine {
+            peer: addr.to_string(),
+            conn,
+            stop,
+            supervisor,
             _task: PhantomData,
-        })
+        }
+    }
+
+    /// The current connection epoch.
+    fn current(&self) -> Arc<RemoteShared<R>> {
+        Arc::clone(&lock_ok(&self.conn).shared)
     }
 
     /// Address this proxy connected to.
     pub fn peer(&self) -> &str {
-        &self.shared.peer
+        &self.peer
     }
 
-    /// True once the connection is closed, errored, or heartbeat
-    /// timed out. Mirrors `Engine::is_dead` for the cluster's
-    /// dead-node requeue decision.
+    /// True while the *current* connection is closed, errored, or
+    /// heartbeat timed out. Flips back to `false` once the reconnect
+    /// supervisor establishes a fresh connection — the cluster's
+    /// alive-set scan uses exactly this to let a revived host rejoin
+    /// the shard plan.
     pub fn is_dead(&self) -> bool {
-        self.shared.dead.load(Ordering::SeqCst)
+        self.current().dead.load(Ordering::SeqCst)
     }
 
     /// Ship a task batch to the worker as one engine job. Mirrors
@@ -266,41 +506,37 @@ where
         tasks: Vec<T>,
         max_retries: u32,
     ) -> Result<RemoteHandle<R>> {
-        if self.is_dead() {
-            bail!("remote engine {} is dead", self.shared.peer);
+        let shared = self.current();
+        if shared.dead.load(Ordering::SeqCst) {
+            bail!("remote engine {} is dead", shared.peer);
         }
-        let id = self.shared.next_id.fetch_add(1, Ordering::Relaxed);
+        let id = shared.next_id.fetch_add(1, Ordering::Relaxed);
         let job = Arc::new(Pending::new());
-        lock_ok(&self.shared.pending).insert(id, Arc::clone(&job));
+        lock_ok(&shared.pending).insert(id, Arc::clone(&job));
 
         let frame = Frame::<T, R>::Submit { id, max_retries, tasks };
-        let wrote = {
-            let mut w = lock_ok(&self.shared.writer);
-            frame.write_to(&mut *w)
-        };
-        if let Err(e) = wrote {
-            self.shared.mark_dead(&format!("send failed: {e}"));
-        } else if self.is_dead() {
+        if let Err(e) = shared.send_frame(&frame.to_bytes()) {
+            shared.mark_dead(&format!("send failed: {e}"));
+        } else if shared.dead.load(Ordering::SeqCst) {
             // death raced the insert: the sweep may have missed this
             // job, so fail it explicitly rather than hang its waiter
-            self.shared
-                .complete_id(id, Err(format!(
+            shared.complete_id(
+                id,
+                Err(format!(
                     "remote engine {} died during submit",
-                    self.shared.peer
-                )));
-        }
-        if self.is_dead() {
-            // the pending entry (if any) was already failed above
-            let _ = lock_ok(&self.shared.pending).remove(&id);
-            bail!(
-                "remote engine {} died during submit",
-                self.shared.peer
+                    shared.peer
+                )),
             );
+        }
+        if shared.dead.load(Ordering::SeqCst) {
+            // the pending entry (if any) was already failed above
+            let _ = lock_ok(&shared.pending).remove(&id);
+            bail!("remote engine {} died during submit", shared.peer);
         }
         Ok(RemoteHandle {
             id,
             job,
-            shared: Arc::downgrade(&self.shared),
+            shared: Arc::downgrade(&shared),
             waited: false,
         })
     }
@@ -308,23 +544,104 @@ where
 
 impl<T, R> Drop for RemoteEngine<T, R> {
     fn drop(&mut self) {
-        self.shared.stop.store(true, Ordering::SeqCst);
-        let _ = self.shared.sock.shutdown(Shutdown::Both);
-        if let Some(h) = self.reader.take() {
+        self.stop.store(true, Ordering::SeqCst);
+        {
+            // unblock the current epoch's threads; the supervisor
+            // checks `stop` before and after every sleep
+            let conn = lock_ok(&self.conn);
+            conn.shared.stop.store(true, Ordering::SeqCst);
+            let _ = conn.shared.sock.shutdown(Shutdown::Both);
+        }
+        if let Some(h) = self.supervisor.take() {
             let _ = h.join();
         }
-        if let Some(h) = self.pinger.take() {
-            let _ = h.join();
-        }
+        lock_ok(&self.conn).teardown();
     }
 }
 
-fn reader_loop<T, R>(shared: Arc<RemoteShared<R>>, stream: TcpStream)
-where
+/// Sleep in small steps so a proxy drop never waits out a backoff.
+fn sleep_unless_stopped(stop: &AtomicBool, total: Duration) {
+    let step = Duration::from_millis(10);
+    let mut slept = Duration::ZERO;
+    while slept < total {
+        if stop.load(Ordering::SeqCst) {
+            return;
+        }
+        let s = step.min(total - slept);
+        thread::sleep(s);
+        slept += s;
+    }
+}
+
+/// Watch one proxy's connection; after death, re-establish it with
+/// exponential backoff + deterministic jitter (salted by the peer
+/// address) up to `reconnect_retries` attempts per outage, then swap
+/// the fresh epoch in. Exits when the attempt budget drains (the
+/// proxy stays dead) or the proxy is dropped.
+fn supervisor_loop<T, R>(
+    addr: String,
+    cfg: RemoteConfig,
+    conn: Arc<Mutex<Conn<R>>>,
+    stop: Arc<AtomicBool>,
+    metrics: Arc<Metrics>,
+) where
+    T: Wire,
+    R: Wire + Send + 'static,
+{
+    let salt = addr
+        .bytes()
+        .fold(0u64, |h, b| splitmix64(h ^ u64::from(b)));
+    let poll = Duration::from_millis(20);
+    loop {
+        if stop.load(Ordering::SeqCst) {
+            return;
+        }
+        if !lock_ok(&conn).shared.dead.load(Ordering::SeqCst) {
+            thread::sleep(poll);
+            continue;
+        }
+        let mut fresh = None;
+        for attempt in 0..cfg.reconnect_retries {
+            sleep_unless_stopped(
+                &stop,
+                backoff_delay(
+                    attempt,
+                    cfg.reconnect_backoff,
+                    cfg.reconnect_cap,
+                    salt,
+                ),
+            );
+            if stop.load(Ordering::SeqCst) {
+                return;
+            }
+            match RemoteEngine::<T, R>::establish(&addr, &cfg) {
+                Ok(c) => {
+                    fresh = Some(c);
+                    break;
+                }
+                Err(_) => metrics.reconnect_failure(),
+            }
+        }
+        let Some(new_conn) = fresh else {
+            // attempt budget drained: this outage is final
+            return;
+        };
+        metrics.reconnect();
+        let mut old = {
+            let mut guard = lock_ok(&conn);
+            std::mem::replace(&mut *guard, new_conn)
+        };
+        old.teardown();
+    }
+}
+
+fn reader_loop<T, R>(
+    shared: Arc<RemoteShared<R>>,
+    mut rd: BufReader<TcpStream>,
+) where
     T: Wire,
     R: Wire,
 {
-    let mut rd = BufReader::new(stream);
     loop {
         match Frame::<T, R>::read_from(&mut rd) {
             Ok(Some(Frame::Pong { .. })) => shared.touch(),
@@ -384,11 +701,8 @@ where
         if since_ping >= cfg.ping_interval {
             since_ping = Duration::ZERO;
             nonce += 1;
-            let wrote = {
-                let mut w = lock_ok(&shared.writer);
-                Frame::<T, R>::Ping { nonce }.write_to(&mut *w)
-            };
-            if let Err(e) = wrote {
+            let bytes = Frame::<T, R>::Ping { nonce }.to_bytes();
+            if let Err(e) = shared.send_frame(&bytes) {
                 shared.mark_dead(&format!("ping failed: {e}"));
                 return;
             }
@@ -433,9 +747,9 @@ impl<R> Drop for RemoteHandle<R> {
         if let Some(shared) = self.shared.upgrade() {
             let _ = lock_ok(&shared.pending).remove(&self.id);
             if !shared.dead.load(Ordering::SeqCst) {
-                let mut w = lock_ok(&shared.writer);
-                let _ = Frame::<u64, R>::Cancel { id: self.id }
-                    .write_to(&mut *w);
+                let bytes =
+                    Frame::<u64, R>::Cancel { id: self.id }.to_bytes();
+                let _ = shared.send_frame(&bytes);
             }
         }
     }
@@ -454,6 +768,9 @@ pub struct WorkerStats {
     pub submits: AtomicU64,
     pub empty_submits: AtomicU64,
     pub tasks: AtomicU64,
+    /// `Cancel` frames honored (a client dropped a job's handle; the
+    /// matching in-flight engine job was dropped, purging its queue).
+    pub cancels: AtomicU64,
 }
 
 /// A running worker host: TCP accept loop in front of one local
@@ -509,10 +826,28 @@ impl Drop for WorkerServer {
 
 /// Host `engine` behind `listener`. Returns immediately; the accept
 /// loop and per-connection service threads run in the background until
-/// the server is killed or dropped.
+/// the server is killed or dropped. Handshakes with digest 0
+/// (unchecked) — production workers use
+/// [`serve_worker_with_digest`] so clients can verify artifact parity.
 pub fn serve_worker<B>(
     listener: TcpListener,
     engine: Engine<B>,
+) -> Result<WorkerServer>
+where
+    B: Backend + Send + Sync + 'static,
+    B::Task: Wire + Clone + Send + Sync + 'static,
+    B::Out: Wire + Send + 'static,
+{
+    serve_worker_with_digest(listener, engine, 0)
+}
+
+/// [`serve_worker`] with a registry digest answered in every
+/// `HelloAck`, letting clients reject this worker at connect time if
+/// its artifacts drifted from theirs.
+pub fn serve_worker_with_digest<B>(
+    listener: TcpListener,
+    engine: Engine<B>,
+    digest: u64,
 ) -> Result<WorkerServer>
 where
     B: Backend + Send + Sync + 'static,
@@ -538,7 +873,9 @@ where
         thread::Builder::new()
             .name("zmc-worker-accept".to_string())
             .spawn(move || {
-                accept_loop(listener, engine, stop, conns, stats)
+                accept_loop(
+                    listener, engine, stop, conns, stats, digest,
+                )
             })
             .context("spawning worker accept thread")?
     };
@@ -552,6 +889,7 @@ fn accept_loop<B>(
     stop: Arc<AtomicBool>,
     conns: Arc<Mutex<Vec<TcpStream>>>,
     stats: Arc<WorkerStats>,
+    digest: u64,
 ) where
     B: Backend + Send + Sync + 'static,
     B::Task: Wire + Clone + Send + Sync + 'static,
@@ -573,7 +911,7 @@ fn accept_loop<B>(
                 let _ = thread::Builder::new()
                     .name(format!("zmc-worker-conn-{peer}"))
                     .spawn(move || {
-                        serve_conn(stream, engine, stop, stats)
+                        serve_conn(stream, engine, stop, stats, digest)
                     });
             }
             Err(e)
@@ -596,6 +934,7 @@ fn serve_conn<B>(
     engine: Arc<Engine<B>>,
     stop: Arc<AtomicBool>,
     stats: Arc<WorkerStats>,
+    digest: u64,
 ) where
     B: Backend + Send + Sync + 'static,
     B::Task: Wire + Clone + Send + Sync + 'static,
@@ -633,6 +972,17 @@ fn serve_conn<B>(
                     break 'serve;
                 }
             }
+            Ok(Frame::Hello { min_version, max_version, .. }) => {
+                // the worker answers permissively: offer the best
+                // overlap (or 0 for "none") and let the client decide
+                let lo = min_version.max(WIRE_VERSION_MIN);
+                let hi = max_version.min(WIRE_VERSION);
+                let version = if lo <= hi { hi } else { 0 };
+                let ack = Fr::<B>::HelloAck { version, digest };
+                if ack.write_to(&mut write).is_err() {
+                    break 'serve;
+                }
+            }
             Ok(Frame::Submit { id, max_retries, tasks }) => {
                 stats.submits.fetch_add(1, Ordering::Relaxed);
                 if tasks.is_empty() {
@@ -658,7 +1008,11 @@ fn serve_conn<B>(
             }
             Ok(Frame::Cancel { id }) => {
                 // dropping the handle cancels + purges engine-side
+                let before = inflight.len();
                 inflight.retain(|(jid, _)| *jid != id);
+                if inflight.len() < before {
+                    stats.cancels.fetch_add(1, Ordering::Relaxed);
+                }
             }
             Ok(_) => {} // Pong/Result/Error from a client: ignore
             Err(RecvTimeoutError::Timeout) => {}
@@ -735,6 +1089,10 @@ mod tests {
             ping_timeout: Duration::from_millis(250),
             connect_retries: 10,
             connect_backoff: Duration::from_millis(10),
+            reconnect_backoff: Duration::from_millis(10),
+            reconnect_cap: Duration::from_millis(40),
+            reconnect_retries: 3,
+            ..Default::default()
         }
     }
 
@@ -815,23 +1173,245 @@ mod tests {
 
     #[test]
     fn heartbeat_detects_hung_host() {
-        // a listener that accepts and then never reads or writes —
-        // TCP stays "connected", only the heartbeat can notice
+        // a listener that completes the handshake and then never
+        // reads or writes again — TCP stays "connected", only the
+        // heartbeat can notice
         let listener = TcpListener::bind("127.0.0.1:0").unwrap();
         let addr = listener.local_addr().unwrap();
         let hold = thread::spawn(move || {
-            let conn = listener.accept().map(|(s, _)| s);
+            let (mut s, _) = listener.accept().unwrap();
+            let mut rd = BufReader::new(s.try_clone().unwrap());
+            match Frame::<u64, u64>::read_from(&mut rd) {
+                Ok(Some(Frame::Hello { .. })) => {}
+                other => panic!("expected Hello, got {other:?}"),
+            }
+            Frame::<u64, u64>::HelloAck {
+                version: WIRE_VERSION,
+                digest: 0,
+            }
+            .write_to(&mut s)
+            .unwrap();
             thread::sleep(Duration::from_secs(2));
-            drop(conn);
+            drop(s);
         });
+        let cfg = RemoteConfig { reconnect: false, ..fast_cfg() };
         let eng: RemoteEngine<u64, u64> =
-            RemoteEngine::connect(&addr.to_string(), fast_cfg())
-                .unwrap();
+            RemoteEngine::connect(&addr.to_string(), cfg).unwrap();
         let h = eng.submit_with_retries(vec![9], 0).unwrap();
         let err = h.wait().unwrap_err().to_string();
         assert!(err.contains("heartbeat timeout"), "{err}");
         assert!(eng.is_dead());
         hold.join().unwrap();
+    }
+
+    #[test]
+    fn handshake_rejects_version_mismatch() {
+        // a "worker" that answers the Hello with a version outside
+        // our range: connect must fail fast with the typed error,
+        // not burn its retry budget
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let fake = thread::spawn(move || {
+            let (mut s, _) = listener.accept().unwrap();
+            let mut rd = BufReader::new(s.try_clone().unwrap());
+            let _ = Frame::<u64, u64>::read_from(&mut rd);
+            Frame::<u64, u64>::HelloAck { version: 0, digest: 0 }
+                .write_to(&mut s)
+                .unwrap();
+            thread::sleep(Duration::from_millis(200));
+        });
+        let start = Instant::now();
+        let err = RemoteEngine::<u64, u64>::connect(
+            &addr.to_string(),
+            fast_cfg(),
+        )
+        .unwrap_err();
+        assert!(
+            err.chain().any(|c| c
+                .to_string()
+                .contains("wire-version mismatch")),
+            "{err:#}"
+        );
+        // fail-fast: nowhere near 10 retries x backoff
+        assert!(start.elapsed() < Duration::from_secs(2));
+        fake.join().unwrap();
+    }
+
+    #[test]
+    fn handshake_rejects_digest_mismatch() {
+        let engine = Engine::new(
+            Mock,
+            EngineConfig { n_workers: 1, ..Default::default() },
+        )
+        .unwrap();
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let w = serve_worker_with_digest(listener, engine, 7).unwrap();
+        let cfg = RemoteConfig { digest: 8, ..fast_cfg() };
+        let err = RemoteEngine::<u64, u64>::connect(
+            &w.addr().to_string(),
+            cfg,
+        )
+        .unwrap_err();
+        assert!(
+            err.chain().any(|c| c
+                .to_string()
+                .contains("registry digest mismatch")),
+            "{err:#}"
+        );
+        // matching digest connects fine
+        let cfg = RemoteConfig { digest: 7, ..fast_cfg() };
+        let eng: RemoteEngine<u64, u64> =
+            RemoteEngine::connect(&w.addr().to_string(), cfg)
+                .unwrap();
+        let outs =
+            eng.submit_with_retries(vec![1], 0).unwrap().wait().unwrap();
+        assert_eq!(outs, vec![38]);
+    }
+
+    #[test]
+    fn eof_mid_handshake_is_connect_failure_not_hang() {
+        // accept and immediately close: the client sees a clean EOF
+        // where the HelloAck should be
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let slam = thread::spawn(move || {
+            for _ in 0..3 {
+                if let Ok((s, _)) = listener.accept() {
+                    drop(s);
+                }
+            }
+        });
+        let cfg = RemoteConfig {
+            connect_retries: 3,
+            ..fast_cfg()
+        };
+        let start = Instant::now();
+        let err = RemoteEngine::<u64, u64>::connect(
+            &addr.to_string(),
+            cfg,
+        )
+        .unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(
+            msg.contains("mid-handshake")
+                || msg.contains("HelloAck"),
+            "{msg}"
+        );
+        assert!(start.elapsed() < Duration::from_secs(5));
+        drop(slam); // listener thread may still be in accept()
+    }
+
+    #[test]
+    fn worker_restart_reconnects_and_serves() {
+        let w = worker(1);
+        let addr = w.addr();
+        let metrics = Arc::new(Metrics::new());
+        let eng: RemoteEngine<u64, u64> =
+            RemoteEngine::connect_with_metrics(
+                &addr.to_string(),
+                RemoteConfig {
+                    reconnect_retries: 100,
+                    ..fast_cfg()
+                },
+                Arc::clone(&metrics),
+            )
+            .unwrap();
+        assert_eq!(
+            eng.submit_with_retries(vec![1], 0)
+                .unwrap()
+                .wait()
+                .unwrap(),
+            vec![38]
+        );
+
+        // kill the worker (clients see EOF), then restart one on the
+        // same port — the supervisor should re-handshake and revive
+        w.kill();
+        w.join();
+        let deadline = Instant::now() + Duration::from_secs(10);
+        loop {
+            // rebinding can race the old listener's close
+            match TcpListener::bind(addr) {
+                Ok(l) => {
+                    let engine = Engine::new(
+                        Mock,
+                        EngineConfig {
+                            n_workers: 1,
+                            ..Default::default()
+                        },
+                    )
+                    .unwrap();
+                    let _w2 = serve_worker(l, engine).unwrap();
+                    while eng.is_dead() {
+                        assert!(
+                            Instant::now() < deadline,
+                            "proxy never revived"
+                        );
+                        thread::sleep(Duration::from_millis(10));
+                    }
+                    assert!(metrics.reconnects() >= 1);
+                    let outs = eng
+                        .submit_with_retries(vec![2], 0)
+                        .unwrap()
+                        .wait()
+                        .unwrap();
+                    assert_eq!(outs, vec![69]);
+                    return;
+                }
+                Err(_) if Instant::now() < deadline => {
+                    thread::sleep(Duration::from_millis(10))
+                }
+                Err(e) => panic!("could not rebind {addr}: {e}"),
+            }
+        }
+    }
+
+    #[test]
+    fn cancel_frame_purges_worker_side_job() {
+        struct Slow;
+        impl Backend for Slow {
+            type Task = u64;
+            type Out = u64;
+            type Ctx = ();
+            fn make_ctx(&self, _w: usize) -> Result<()> {
+                Ok(())
+            }
+            fn run(&self, _ctx: &(), task: &u64) -> Result<u64> {
+                thread::sleep(Duration::from_millis(150));
+                Ok(task * 31 + 7)
+            }
+        }
+        let engine = Engine::new(
+            Slow,
+            EngineConfig { n_workers: 1, ..Default::default() },
+        )
+        .unwrap();
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let w = serve_worker(listener, engine).unwrap();
+        let eng: RemoteEngine<u64, u64> =
+            RemoteEngine::connect(&w.addr().to_string(), fast_cfg())
+                .unwrap();
+        let h = eng.submit_with_retries(vec![1, 2, 3, 4], 0).unwrap();
+        // let the Submit land worker-side before cancelling
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while w.stats().submits.load(Ordering::Relaxed) == 0 {
+            assert!(Instant::now() < deadline, "submit never landed");
+            thread::sleep(Duration::from_millis(5));
+        }
+        drop(h); // sends Cancel
+        while w.stats().cancels.load(Ordering::Relaxed) == 0 {
+            assert!(Instant::now() < deadline, "cancel never honored");
+            thread::sleep(Duration::from_millis(5));
+        }
+        assert_eq!(w.stats().cancels.load(Ordering::Relaxed), 1);
+        // the connection is still healthy for new work
+        let outs = eng
+            .submit_with_retries(vec![2], 0)
+            .unwrap()
+            .wait()
+            .unwrap();
+        assert_eq!(outs, vec![69]);
+        assert!(!eng.is_dead());
     }
 
     #[test]

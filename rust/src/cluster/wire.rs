@@ -6,11 +6,18 @@
 //! Layout of one frame (all integers little-endian):
 //!
 //! ```text
-//! +------+---------+------+-------------+-----------+
-//! | "ZMCW" | version | type | payload len | payload  |
-//! |  4 B   |  u16    | u8   |    u32      |  len B   |
-//! +------+---------+------+-------------+-----------+
+//! +--------+---------+------+-------------+----------+----------+
+//! | "ZMCW" | version | type | payload len | checksum | payload  |
+//! |  4 B   |  u16    | u8   |    u32      |   u32    |  len B   |
+//! +--------+---------+------+-------------+----------+----------+
 //! ```
+//!
+//! The checksum is FNV-1a/32 over the type byte, the length prefix,
+//! and the payload. It exists for *fault detection*, not security: a
+//! single flipped bit anywhere past the version field decodes as a
+//! typed [`WireError::BadChecksum`] instead of a silently wrong
+//! float (every per-byte FNV step is a bijection of the running
+//! state, so one corrupted byte always changes the final hash).
 //!
 //! The payload is the [`Wire`]-encoded body of one [`Frame`] variant.
 //! Floats travel as raw IEEE-754 bit patterns (`f32::to_bits` /
@@ -42,14 +49,35 @@ pub const WIRE_MAGIC: [u8; 4] = *b"ZMCW";
 /// Version of the frame layout + payload encodings this build speaks.
 /// Bump on any incompatible change; a worker answering a newer client
 /// fails with a typed [`WireError::BadVersion`] instead of
-/// misinterpreting bytes.
-pub const WIRE_VERSION: u16 = 1;
+/// misinterpreting bytes. v2 added the per-frame integrity checksum
+/// and the `Hello`/`HelloAck` handshake.
+pub const WIRE_VERSION: u16 = 2;
+
+/// Oldest frame version this build still speaks. Together with
+/// [`WIRE_VERSION`] it forms the range a [`Frame::Hello`] advertises;
+/// the worker picks the highest version both ranges contain.
+pub const WIRE_VERSION_MIN: u16 = 2;
 
 /// Upper bound on one frame's payload (64 MiB). A length prefix above
 /// it is treated as stream corruption, not an allocation request.
 pub const MAX_PAYLOAD: u32 = 64 << 20;
 
-const HEADER_LEN: usize = 4 + 2 + 1 + 4;
+const HEADER_LEN: usize = 4 + 2 + 1 + 4 + 4;
+
+/// FNV-1a/32 over the frame type byte, the payload length prefix and
+/// the payload bytes — the integrity word stored in the header.
+fn checksum(tag: u8, payload: &[u8]) -> u32 {
+    const PRIME: u32 = 0x0100_0193;
+    let mut h: u32 = 0x811c_9dc5;
+    h = (h ^ u32::from(tag)).wrapping_mul(PRIME);
+    for &b in &(payload.len() as u32).to_le_bytes() {
+        h = (h ^ u32::from(b)).wrapping_mul(PRIME);
+    }
+    for &b in payload {
+        h = (h ^ u32::from(b)).wrapping_mul(PRIME);
+    }
+    h
+}
 
 /// Typed decode failures of the cluster wire format.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -88,6 +116,13 @@ pub enum WireError {
     Trailing {
         extra: usize,
     },
+    /// The frame body does not hash to the checksum in its header —
+    /// bit corruption somewhere between the type byte and the last
+    /// payload byte.
+    BadChecksum {
+        want: u32,
+        got: u32,
+    },
 }
 
 impl std::fmt::Display for WireError {
@@ -118,6 +153,11 @@ impl std::fmt::Display for WireError {
             WireError::Trailing { extra } => {
                 write!(f, "{extra} trailing byte(s) after frame payload")
             }
+            WireError::BadChecksum { want, got } => write!(
+                f,
+                "frame checksum mismatch: header says {want:#010x}, \
+                 body hashes to {got:#010x}"
+            ),
         }
     }
 }
@@ -385,14 +425,25 @@ pub enum Frame<T, R> {
     Error { id: u64, msg: String },
     /// Best-effort cancellation of a submitted job.
     Cancel { id: u64 },
+    /// First frame on every connection, client → worker: the wire
+    /// versions the client speaks and the FNV-1a digest of its
+    /// registry (0 = unchecked, for registry-less mock transports).
+    Hello { min_version: u16, max_version: u16, digest: u64 },
+    /// Worker's answer to [`Frame::Hello`]: the highest version both
+    /// ranges contain (0 = no overlap) and the worker's own registry
+    /// digest. The *client* decides rejection, so every typed
+    /// handshake failure surfaces at connect time on the caller.
+    HelloAck { version: u16, digest: u64 },
 }
 
-const TAG_PING: u8 = 1;
-const TAG_PONG: u8 = 2;
+pub(crate) const TAG_PING: u8 = 1;
+pub(crate) const TAG_PONG: u8 = 2;
 const TAG_SUBMIT: u8 = 3;
 const TAG_RESULT: u8 = 4;
 const TAG_ERROR: u8 = 5;
 const TAG_CANCEL: u8 = 6;
+const TAG_HELLO: u8 = 7;
+const TAG_HELLO_ACK: u8 = 8;
 
 impl<T: Wire, R: Wire> Frame<T, R> {
     fn tag(&self) -> u8 {
@@ -403,6 +454,8 @@ impl<T: Wire, R: Wire> Frame<T, R> {
             Frame::Result { .. } => TAG_RESULT,
             Frame::Error { .. } => TAG_ERROR,
             Frame::Cancel { .. } => TAG_CANCEL,
+            Frame::Hello { .. } => TAG_HELLO,
+            Frame::HelloAck { .. } => TAG_HELLO_ACK,
         }
     }
 
@@ -430,12 +483,24 @@ impl<T: Wire, R: Wire> Frame<T, R> {
             Frame::Cancel { id } => {
                 id.encode(&mut payload);
             }
+            Frame::Hello { min_version, max_version, digest } => {
+                u32::from(*min_version).encode(&mut payload);
+                u32::from(*max_version).encode(&mut payload);
+                digest.encode(&mut payload);
+            }
+            Frame::HelloAck { version, digest } => {
+                u32::from(*version).encode(&mut payload);
+                digest.encode(&mut payload);
+            }
         }
         let mut out = Vec::with_capacity(HEADER_LEN + payload.len());
         out.extend_from_slice(&WIRE_MAGIC);
         out.extend_from_slice(&WIRE_VERSION.to_le_bytes());
         out.push(self.tag());
         out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        out.extend_from_slice(
+            &checksum(self.tag(), &payload).to_le_bytes(),
+        );
         out.extend_from_slice(&payload);
         out
     }
@@ -469,6 +534,15 @@ impl<T: Wire, R: Wire> Frame<T, R> {
                 msg: String::decode(&mut r)?,
             },
             TAG_CANCEL => Frame::Cancel { id: u64::decode(&mut r)? },
+            TAG_HELLO => Frame::Hello {
+                min_version: u32::decode(&mut r)? as u16,
+                max_version: u32::decode(&mut r)? as u16,
+                digest: u64::decode(&mut r)?,
+            },
+            TAG_HELLO_ACK => Frame::HelloAck {
+                version: u32::decode(&mut r)? as u16,
+                digest: u64::decode(&mut r)?,
+            },
             got => return Err(WireError::BadTag { got }),
         };
         if r.remaining() != 0 {
@@ -501,6 +575,8 @@ impl<T: Wire, R: Wire> Frame<T, R> {
         if len > MAX_PAYLOAD {
             return Err(WireError::TooLarge { got: len, max: MAX_PAYLOAD });
         }
+        let want =
+            u32::from_le_bytes([buf[11], buf[12], buf[13], buf[14]]);
         let body = &buf[HEADER_LEN..];
         if body.len() < len as usize {
             return Err(WireError::Truncated {
@@ -512,6 +588,10 @@ impl<T: Wire, R: Wire> Frame<T, R> {
             return Err(WireError::Trailing {
                 extra: body.len() - len as usize,
             });
+        }
+        let got = checksum(tag, body);
+        if got != want {
+            return Err(WireError::BadChecksum { want, got });
         }
         Self::decode_payload(tag, body)
     }
@@ -566,6 +646,9 @@ impl<T: Wire, R: Wire> Frame<T, R> {
                 WireError::TooLarge { got: len, max: MAX_PAYLOAD }.into()
             );
         }
+        let want = u32::from_le_bytes([
+            header[11], header[12], header[13], header[14],
+        ]);
         let mut payload = vec![0u8; len as usize];
         rd.read_exact(&mut payload).map_err(|e| {
             if e.kind() == std::io::ErrorKind::UnexpectedEof {
@@ -578,6 +661,10 @@ impl<T: Wire, R: Wire> Frame<T, R> {
             }
             .context("reading frame payload")
         })?;
+        let got = checksum(tag, &payload);
+        if got != want {
+            return Err(WireError::BadChecksum { want, got }.into());
+        }
         Ok(Some(Self::decode_payload(tag, &payload)?))
     }
 }
@@ -605,6 +692,15 @@ mod tests {
             MockFrame::Result { id: 3, outs: vec![] },
             MockFrame::Error { id: 9, msg: "boom — bad".into() },
             MockFrame::Cancel { id: 11 },
+            MockFrame::Hello {
+                min_version: WIRE_VERSION_MIN,
+                max_version: WIRE_VERSION,
+                digest: 0xdead_beef_cafe_f00d,
+            },
+            MockFrame::HelloAck {
+                version: WIRE_VERSION,
+                digest: u64::MAX,
+            },
         ];
         for f in &frames {
             assert_eq!(&round_trip(f), f, "{f:?}");
@@ -690,12 +786,14 @@ mod tests {
             WireError::BadVersion { got: 9 }
         );
 
+        // the type byte is under the checksum, so flipping it is
+        // caught as corruption, not misread as another frame kind
         let mut bad = good.clone();
         bad[6] = 77;
-        assert_eq!(
+        assert!(matches!(
             MockFrame::from_bytes(&bad).unwrap_err(),
-            WireError::BadTag { got: 77 }
-        );
+            WireError::BadChecksum { .. }
+        ));
 
         let mut bad = good.clone();
         bad.push(0);
@@ -706,12 +804,53 @@ mod tests {
     }
 
     #[test]
+    fn unknown_tag_with_valid_checksum_is_bad_tag() {
+        // a *well-formed* frame of an unknown type (version skew, not
+        // corruption) still surfaces as BadTag
+        let payload = Vec::new();
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&WIRE_MAGIC);
+        buf.extend_from_slice(&WIRE_VERSION.to_le_bytes());
+        buf.push(99);
+        buf.extend_from_slice(&0u32.to_le_bytes());
+        buf.extend_from_slice(&checksum(99, &payload).to_le_bytes());
+        assert_eq!(
+            MockFrame::from_bytes(&buf).unwrap_err(),
+            WireError::BadTag { got: 99 }
+        );
+    }
+
+    #[test]
+    fn every_single_bit_flip_is_a_typed_error() {
+        // the property FaultPlan::Corrupt leans on: one flipped bit
+        // anywhere in the frame is *always* a typed decode error,
+        // never a silently different frame
+        let good = MockFrame::Submit {
+            id: 5,
+            max_retries: 2,
+            tasks: vec![0, 1, u64::MAX, 0x0123_4567_89ab_cdef],
+        }
+        .to_bytes();
+        for i in 0..good.len() {
+            for bit in 0..8u8 {
+                let mut bad = good.clone();
+                bad[i] ^= 1 << bit;
+                assert!(
+                    MockFrame::from_bytes(&bad).is_err(),
+                    "byte {i} bit {bit}: corruption decoded cleanly"
+                );
+            }
+        }
+    }
+
+    #[test]
     fn oversized_length_prefix_rejected_before_allocation() {
         let mut buf = Vec::new();
         buf.extend_from_slice(&WIRE_MAGIC);
         buf.extend_from_slice(&WIRE_VERSION.to_le_bytes());
         buf.push(1); // Ping
         buf.extend_from_slice(&(MAX_PAYLOAD + 1).to_le_bytes());
+        buf.extend_from_slice(&0u32.to_le_bytes()); // checksum slot
         assert!(matches!(
             MockFrame::from_bytes(&buf).unwrap_err(),
             WireError::TooLarge { .. }
@@ -728,6 +867,7 @@ mod tests {
         buf.extend_from_slice(&WIRE_VERSION.to_le_bytes());
         buf.push(3); // Submit
         buf.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        buf.extend_from_slice(&checksum(3, &payload).to_le_bytes());
         buf.extend_from_slice(&payload);
         assert!(matches!(
             MockFrame::from_bytes(&buf).unwrap_err(),

@@ -134,6 +134,14 @@ pub struct JobConfig {
     /// of running `zmc worker` processes) joined into the cluster
     /// alongside the local engines. Empty = all-local execution.
     pub remotes: Vec<String>,
+    /// Reconnect attempts before a dead remote host is abandoned
+    /// (`"reconnect_retries"`; 0 disables the reconnect supervisor,
+    /// `None` defers to the transport default).
+    pub reconnect_retries: Option<u32>,
+    /// Base reconnect backoff in milliseconds, doubled per attempt
+    /// with deterministic jitter (`"reconnect_backoff_ms"`; `None`
+    /// defers to the transport default).
+    pub reconnect_backoff_ms: Option<u64>,
     pub samples_per_fn: usize,
     pub trials: u32,
     pub seed: u64,
@@ -157,6 +165,8 @@ impl Default for JobConfig {
             workers: 1,
             num_engines: 1,
             remotes: Vec::new(),
+            reconnect_retries: None,
+            reconnect_backoff_ms: None,
             samples_per_fn: 1 << 18,
             trials: 1,
             seed: 2021,
@@ -215,6 +225,16 @@ impl JobConfig {
                         .to_string(),
                 );
             }
+        }
+        if let Some(r) =
+            j.get("reconnect_retries").and_then(Json::as_usize)
+        {
+            cfg.reconnect_retries = Some(r as u32);
+        }
+        if let Some(b) =
+            j.get("reconnect_backoff_ms").and_then(Json::as_usize)
+        {
+            cfg.reconnect_backoff_ms = Some(b as u64);
         }
         if let Some(s) = j.get("samples_per_fn").and_then(Json::as_usize) {
             cfg.samples_per_fn = s;
@@ -312,6 +332,12 @@ impl JobConfig {
                         .collect(),
                 ),
             );
+        }
+        if let Some(r) = self.reconnect_retries {
+            m.insert("reconnect_retries".to_string(), num(r as f64));
+        }
+        if let Some(b) = self.reconnect_backoff_ms {
+            m.insert("reconnect_backoff_ms".to_string(), num(b as f64));
         }
         m.insert(
             "samples_per_fn".to_string(),
@@ -462,6 +488,8 @@ impl PartialEq for JobConfig {
             && self.workers == other.workers
             && self.num_engines == other.num_engines
             && self.remotes == other.remotes
+            && self.reconnect_retries == other.reconnect_retries
+            && self.reconnect_backoff_ms == other.reconnect_backoff_ms
             && self.samples_per_fn == other.samples_per_fn
             && self.trials == other.trials
             && self.seed == other.seed
@@ -699,6 +727,29 @@ mod tests {
                  "functions": [{"expr": "x1", "bounds": [[0, 1]]}]}"#
         )
         .is_err());
+    }
+
+    #[test]
+    fn reconnect_knobs_parsed_and_round_tripped() {
+        let cfg = JobConfig::from_json_text(
+            r#"{"remotes": ["10.0.0.2:7777"],
+                 "reconnect_retries": 12, "reconnect_backoff_ms": 250,
+                 "functions": [{"expr": "x1", "bounds": [[0, 1]]}]}"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.reconnect_retries, Some(12));
+        assert_eq!(cfg.reconnect_backoff_ms, Some(250));
+        let back = JobConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(cfg, back);
+        // absent -> defer to the transport defaults, omitted on emit
+        let cfg = JobConfig::from_json_text(
+            r#"{"functions": [{"expr": "x1", "bounds": [[0, 1]]}]}"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.reconnect_retries, None);
+        assert_eq!(cfg.reconnect_backoff_ms, None);
+        assert!(cfg.to_json().get("reconnect_retries").is_none());
+        assert!(cfg.to_json().get("reconnect_backoff_ms").is_none());
     }
 
     #[test]

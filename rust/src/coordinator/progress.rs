@@ -23,6 +23,12 @@ pub struct Metrics {
     pub fused_hits: AtomicU64,
     /// Fused-plan cache misses (row decoded + lowered fused).
     pub fused_misses: AtomicU64,
+    /// Remote engines re-established after their host died (each is
+    /// one successful reconnect + re-handshake by the supervisor).
+    pub reconnects: AtomicU64,
+    /// Failed reconnect attempts (the supervisor's backoff loop keeps
+    /// counting until it succeeds or drains its retry budget).
+    pub reconnect_failures: AtomicU64,
     /// (busy, total) wall time per worker, filled at worker exit.
     worker_times: Mutex<Vec<(Duration, Duration)>>,
     /// Context-construction failures (worker never joined the pool).
@@ -95,6 +101,26 @@ impl Metrics {
         self.fused_misses.load(Ordering::Relaxed)
     }
 
+    /// Count one successful remote-engine reconnect.
+    pub fn reconnect(&self) {
+        self.reconnects.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count one failed reconnect attempt.
+    pub fn reconnect_failure(&self) {
+        self.reconnect_failures.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Successful remote-engine reconnects.
+    pub fn reconnects(&self) -> u64 {
+        self.reconnects.load(Ordering::Relaxed)
+    }
+
+    /// Failed reconnect attempts.
+    pub fn reconnect_failures(&self) -> u64 {
+        self.reconnect_failures.load(Ordering::Relaxed)
+    }
+
     pub fn record_worker(&self, busy: Duration, total: Duration) {
         self.worker_times.lock().unwrap().push((busy, total));
     }
@@ -150,7 +176,7 @@ impl Metrics {
         format!(
             "tasks={} retries={} failures={} cancelled={} \
              plan_hits={} plan_misses={} fused_hits={} fused_misses={} \
-             utilization={:.0}%",
+             reconnects={} reconnect_failures={} utilization={:.0}%",
             self.done(),
             self.retried(),
             self.failed(),
@@ -159,6 +185,8 @@ impl Metrics {
             self.plan_misses(),
             self.fused_hits(),
             self.fused_misses(),
+            self.reconnects(),
+            self.reconnect_failures(),
             self.utilization() * 100.0
         )
     }
@@ -191,6 +219,14 @@ mod tests {
         assert_eq!(m.fused_hits(), 4);
         assert_eq!(m.fused_misses(), 2);
         assert!(m.summary().contains("fused_hits=4 fused_misses=2"));
+        m.reconnect();
+        m.reconnect_failure();
+        m.reconnect_failure();
+        assert_eq!(m.reconnects(), 1);
+        assert_eq!(m.reconnect_failures(), 2);
+        assert!(m
+            .summary()
+            .contains("reconnects=1 reconnect_failures=2"));
     }
 
     #[test]

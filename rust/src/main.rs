@@ -119,12 +119,25 @@ counter ranges, centralized merge) — results are bit-identical to N=1.
 MULTI-HOST (integrate/run/serve): start `zmc worker --listen H:P` on
 each remote host, then add --remote H:P,H:P,.. (or a job-file
 \"remotes\" array) to join them into the cluster alongside the local
-engines. Shards fan out over TCP with heartbeat death detection; a
-host that dies mid-round has its whole shard requeued onto a survivor,
-and every topology (local, remote, mixed) is bit-identical.
+engines. Connections open with a Hello handshake (wire-version range
++ registry digest), so a worker running different artifacts is
+rejected with a typed error at connect time. Shards fan out over TCP
+with heartbeat death detection; a host that dies mid-round has its
+whole shard requeued onto a survivor while a supervisor reconnects
+with jittered exponential backoff — a bounced worker rejoins the
+shard plan and serves later rounds. Every topology (local, remote,
+mixed, mid-bounce) is bit-identical. ZMC_CHAOS=\"drop@0:1,..\" (or
+\"seeded:S:N\") injects deterministic transport faults for drills.
   --remote H:P,..   comma-separated zmc worker addresses [none]
+  --reconnect-retries N     reconnect attempts before a dead host is
+                            abandoned (0 disables) [30]
+  --reconnect-backoff-ms N  base reconnect backoff, doubled per
+                            attempt with deterministic jitter [100]
 worker-specific:
   --listen H:P      bind address for the worker (required)
+  --bind-retries N  re-bind attempts when the port is still held by
+                    a previous worker instance [10]
+  --bind-backoff-ms N  pause between bind attempts [200]
 
 ADAPTIVE (integrate/run): setting an error target switches to the
 pilot-then-refine loop — the sample budget flows to the functions that
@@ -146,6 +159,8 @@ results; /v1/metrics and /v1/healthz report counters and topology.
   --state-dir DIR   append-only job journal; on restart finished
                     results are recalled and interrupted jobs re-run
   --max-body N      request-body bound in bytes [1048576]
+  --read-timeout-ms N  idle-client read deadline, answered 408
+                    (0 disables the slowloris guard) [10000]
 
 normal-specific: --divisions K --depth D --sigma-mult S
 fig1-specific:   --n N (series length)
@@ -298,28 +313,57 @@ fn make_session(
     workers: usize,
     num_engines: usize,
 ) -> Result<Session> {
-    make_session_tiered(flags, workers, num_engines, None, &[])
+    make_session_tiered(flags, workers, num_engines, None)
 }
 
-/// `make_session` with a job file's execution tier and remote list as
-/// the fallback when the `--tier` / `--remote` flags are absent (CLI
-/// wins, file second, env/empty default last).
+/// `make_session` with a job file's execution tier, remote list, and
+/// reconnect tuning as the fallback when the corresponding flags are
+/// absent (CLI wins, file second, transport default last).
 fn make_session_tiered(
     flags: &Flags,
     workers: usize,
     num_engines: usize,
-    file_tier: Option<ExecTier>,
-    file_remotes: &[String],
+    file: Option<&JobConfig>,
 ) -> Result<Session> {
     let mut b =
         session_builder(flags).workers(workers).engines(num_engines);
-    let remotes = parse_remotes(flags)
-        .unwrap_or_else(|| file_remotes.to_vec());
+    let remotes = parse_remotes(flags).unwrap_or_else(|| {
+        file.map(|c| c.remotes.clone()).unwrap_or_default()
+    });
     b = b.remote_engines(remotes);
-    if let Some(t) = parse_tier(flags)?.or(file_tier) {
+    b = b.remote_config(parse_remote_config(flags, file)?);
+    if let Some(t) = parse_tier(flags)?.or(file.and_then(|c| c.tier)) {
         b = b.execution_tier(t);
     }
     b.build()
+}
+
+/// `--reconnect-retries` / `--reconnect-backoff-ms` over the job
+/// file's knobs over the default transport tuning (the registry
+/// digest and any `ZMC_CHAOS` plan are filled in by the session
+/// builder).
+fn parse_remote_config(
+    flags: &Flags,
+    file: Option<&JobConfig>,
+) -> Result<zmc::cluster::RemoteConfig> {
+    let defaults = zmc::cluster::RemoteConfig::default();
+    let file_retries = file.and_then(|c| c.reconnect_retries);
+    let file_backoff_ms = file.and_then(|c| c.reconnect_backoff_ms);
+    let retries = flags.usize(
+        "reconnect-retries",
+        file_retries.unwrap_or(defaults.reconnect_retries) as usize,
+    )? as u32;
+    let backoff = std::time::Duration::from_millis(flags.u64(
+        "reconnect-backoff-ms",
+        file_backoff_ms
+            .unwrap_or(defaults.reconnect_backoff.as_millis() as u64),
+    )?);
+    Ok(zmc::cluster::RemoteConfig {
+        reconnect_retries: retries,
+        reconnect: retries > 0,
+        reconnect_backoff: backoff,
+        ..defaults
+    })
 }
 
 /// `--remote H:P,H:P,..` → the worker addresses to join; `None` when
@@ -463,8 +507,7 @@ fn cmd_run(flags: &Flags) -> Result<()> {
         flags,
         cfg.workers,
         cfg.num_engines,
-        cfg.tier,
-        &cfg.remotes,
+        Some(&cfg),
     )?;
     let t0 = std::time::Instant::now();
     if flags.bool("json") {
@@ -652,6 +695,10 @@ fn cmd_serve(flags: &Flags) -> Result<()> {
         tier: parse_tier(flags)?,
         max_body: flags.usize("max-body", defaults.max_body)?,
         remotes: parse_remotes(flags).unwrap_or_default(),
+        read_timeout: std::time::Duration::from_millis(flags.u64(
+            "read-timeout-ms",
+            defaults.read_timeout.as_millis() as u64,
+        )?),
     };
     let journaled = cfg.state_dir.is_some();
     let server = Server::bind(cfg)?;
@@ -686,13 +733,43 @@ fn cmd_worker(flags: &Flags) -> Result<()> {
         pool = pool.with_tier(t);
     }
     let engine = zmc::engine::Engine::for_pool(&pool)?;
-    let listener = std::net::TcpListener::bind(listen)
-        .with_context(|| format!("binding worker listener on {listen}"))?;
-    let server = zmc::cluster::serve_worker(listener, engine)?;
+    // a bounced worker may race its predecessor's lingering socket for
+    // the port: retry the bind so `kill + restart` on the same address
+    // just works
+    let bind_retries = flags.usize("bind-retries", 10)?;
+    let bind_backoff =
+        std::time::Duration::from_millis(flags.u64("bind-backoff-ms", 200)?);
+    let mut attempt = 0;
+    let listener = loop {
+        match std::net::TcpListener::bind(listen) {
+            Ok(l) => break l,
+            Err(e) if attempt < bind_retries => {
+                attempt += 1;
+                eprintln!(
+                    "note: bind {listen} failed ({e}); \
+                     retry {attempt}/{bind_retries}"
+                );
+                std::thread::sleep(bind_backoff);
+            }
+            Err(e) => {
+                return Err(e).with_context(|| {
+                    format!("binding worker listener on {listen}")
+                })
+            }
+        }
+    };
+    // advertise the registry digest so clients with drifted artifacts
+    // are rejected at the handshake instead of computing garbage
+    let digest = reg.digest();
+    let server = zmc::cluster::serve_worker_with_digest(
+        listener, engine, digest,
+    )?;
     println!(
-        "zmc worker listening on {} ({} device worker(s))",
+        "zmc worker listening on {} ({} device worker(s), registry \
+         digest {:#018x})",
         server.addr(),
-        workers
+        workers,
+        digest
     );
     println!("  join it with: zmc run --remote {}", server.addr());
     server.join();

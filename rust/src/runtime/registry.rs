@@ -176,6 +176,50 @@ impl Registry {
             .expect("emulated registry is non-empty")
     }
 
+    /// FNV-1a/64 over the identity of every executable this registry
+    /// holds — names, kinds, tensor specs, geometry, and the HLO text
+    /// itself (the artifact content). Two hosts with the same digest
+    /// will launch the same programs and produce bit-identical
+    /// outputs; the cluster `Hello` handshake exchanges digests so a
+    /// worker with drifted artifacts is rejected at connect time
+    /// instead of silently diverging. `BTreeMap` iteration order
+    /// makes the digest independent of load order.
+    pub fn digest(&self) -> u64 {
+        const PRIME: u64 = 0x0000_0100_0000_01b3;
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        let mut eat = |bytes: &[u8]| {
+            for &b in bytes {
+                h = (h ^ u64::from(b)).wrapping_mul(PRIME);
+            }
+            // field separator so ("ab","c") != ("a","bc")
+            h = (h ^ 0xff).wrapping_mul(PRIME);
+        };
+        for (name, s) in &self.exes {
+            eat(name.as_bytes());
+            eat(&[match s.kind {
+                ExeKind::Harmonic => 0,
+                ExeKind::VmMulti => 1,
+                ExeKind::Stratified => 2,
+            }]);
+            for t in s.inputs.iter().chain(&s.outputs) {
+                eat(t.name.as_bytes());
+                eat(&[match t.dtype {
+                    DType::F32 => 0,
+                    DType::I32 => 1,
+                    DType::U32 => 2,
+                }]);
+                for d in &t.shape {
+                    eat(&(*d as u64).to_le_bytes());
+                }
+            }
+            for v in [s.samples, s.n_fns, s.n_cubes, s.dims, s.tile] {
+                eat(&(v as u64).to_le_bytes());
+            }
+            eat(s.hlo_text.as_bytes());
+        }
+        h
+    }
+
     /// Count one executable compilation (called by device runtimes).
     pub fn note_compile(&self) {
         self.compiles.fetch_add(1, Ordering::Relaxed);
@@ -593,6 +637,21 @@ mod tests {
         reg.note_plan_hit();
         assert_eq!(reg.plan_lower_count(), 1);
         assert_eq!(reg.plan_hit_count(), 2);
+    }
+
+    #[test]
+    fn digest_is_stable_and_content_sensitive() {
+        let a = Registry::emulated().digest();
+        let b = Registry::emulated().digest();
+        assert_eq!(a, b, "same specs, same digest");
+        assert_ne!(a, 0, "0 is the 'unchecked' sentinel on the wire");
+        // one byte of HLO drift must change the digest
+        let mut specs: Vec<ExeSpec> =
+            Registry::emulated().iter().cloned().collect();
+        specs[0].hlo_text.push('x');
+        let drifted =
+            Registry::from_specs("<emulated>", specs).unwrap().digest();
+        assert_ne!(a, drifted, "artifact drift must change the digest");
     }
 
     #[test]

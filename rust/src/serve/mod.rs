@@ -90,6 +90,11 @@ pub struct ServeConfig {
     pub tier: Option<ExecTier>,
     /// Request-body bound; larger submissions answer 413.
     pub max_body: usize,
+    /// Per-read deadline on client sockets: an idle or drip-feeding
+    /// connection (slowloris) is answered 408 and closed instead of
+    /// pinning an http worker forever. `Duration::ZERO` disables the
+    /// guard.
+    pub read_timeout: Duration,
 }
 
 impl Default for ServeConfig {
@@ -108,6 +113,7 @@ impl Default for ServeConfig {
             artifacts: None,
             tier: None,
             max_body: 1 << 20,
+            read_timeout: Duration::from_secs(10),
         }
     }
 }
@@ -638,6 +644,11 @@ impl Server {
         while !self.stop.load(Ordering::SeqCst) {
             match self.listener.accept() {
                 Ok((stream, _)) => {
+                    let deadline = self.state.cfg.read_timeout;
+                    if deadline > Duration::ZERO {
+                        let _ =
+                            stream.set_read_timeout(Some(deadline));
+                    }
                     if let Err(mut rejected) = queue.push(stream) {
                         self.state
                             .metrics
@@ -722,6 +733,29 @@ mod tests {
         // no real connections needed to exercise close semantics
         q.close();
         assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn idle_connection_times_out_with_408() {
+        use std::io::Read;
+        let cfg = ServeConfig {
+            addr: "127.0.0.1:0".into(),
+            read_timeout: Duration::from_millis(80),
+            ..Default::default()
+        };
+        let srv = Server::bind(cfg).unwrap();
+        let addr = srv.local_addr().unwrap();
+        let stop = srv.stop_handle();
+        let t = std::thread::spawn(move || srv.run().unwrap());
+        // connect and send nothing: the read deadline must fire and
+        // the server answers 408 instead of waiting forever
+        let mut c = TcpStream::connect(addr).unwrap();
+        let mut buf = String::new();
+        c.read_to_string(&mut buf).unwrap();
+        assert!(buf.starts_with("HTTP/1.1 408"), "{buf}");
+        assert!(buf.contains("timeout"), "{buf}");
+        stop.stop();
+        t.join().unwrap();
     }
 
     #[test]

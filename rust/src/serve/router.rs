@@ -29,7 +29,29 @@ pub(crate) fn handle_connection(state: &ServerState, stream: TcpStream) {
         state.cfg.max_body,
     ) {
         Ok(req) => req,
-        Err(ReadError::Closed) | Err(ReadError::Io(_)) => return,
+        Err(ReadError::Closed) => return,
+        // an idle or drip-feeding client tripped the read deadline
+        // (`ServeConfig::read_timeout`): tell it so and hang up, so a
+        // slowloris cannot pin an http worker
+        Err(ReadError::Io(e))
+            if matches!(
+                e.kind(),
+                std::io::ErrorKind::WouldBlock
+                    | std::io::ErrorKind::TimedOut
+            ) =>
+        {
+            state.metrics.bad_requests.fetch_add(1, Ordering::Relaxed);
+            let _ = http::write_json(
+                &mut stream,
+                408,
+                &error_body(&ErrorPayload::new(
+                    "timeout",
+                    "request not received within the read timeout",
+                )),
+            );
+            return;
+        }
+        Err(ReadError::Io(_)) => return,
         Err(ReadError::Bad(msg)) => {
             state.metrics.bad_requests.fetch_add(1, Ordering::Relaxed);
             let _ = http::write_json(

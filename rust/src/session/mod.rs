@@ -53,7 +53,8 @@ use std::sync::Arc;
 
 use anyhow::Result;
 
-use crate::cluster::{DeviceCluster, LaunchExec};
+use crate::cluster::chaos::FaultPlan as WireFaultPlan;
+use crate::cluster::{DeviceCluster, LaunchExec, RemoteConfig};
 use crate::config::JobConfig;
 use crate::engine::{DeviceEngine, Engine};
 use crate::integrator::harmonic::HarmonicBatch;
@@ -402,6 +403,8 @@ pub struct SessionBuilder {
     engines: usize,
     remotes: Vec<String>,
     tier: Option<ExecTier>,
+    remote_config: Option<RemoteConfig>,
+    fault_plan: Option<Arc<WireFaultPlan>>,
 }
 
 impl SessionBuilder {
@@ -412,6 +415,8 @@ impl SessionBuilder {
             engines: 1,
             remotes: Vec::new(),
             tier: None,
+            remote_config: None,
+            fault_plan: None,
         }
     }
 
@@ -482,13 +487,50 @@ impl SessionBuilder {
         self
     }
 
+    /// Transport tuning for the session's remote engines (heartbeat
+    /// cadence, reconnect backoff/budget). Only consulted when
+    /// [`remote_engines`](Self::remote_engines) adds at least one
+    /// worker; the registry digest is filled in automatically at
+    /// build time unless this config pins one.
+    pub fn remote_config(mut self, cfg: RemoteConfig) -> Self {
+        self.remote_config = Some(cfg);
+        self
+    }
+
+    /// Deterministic transport fault injection for the session's
+    /// remote connections (tests; the `ZMC_CHAOS` env var offers the
+    /// same schedule format without code changes). An explicit plan
+    /// here wins over the env var.
+    pub fn fault_plan(mut self, plan: Arc<WireFaultPlan>) -> Self {
+        self.fault_plan = Some(plan);
+        self
+    }
+
     /// Apply a job file's topology (`workers`, `num_engines`,
-    /// `remotes`) and execution tier when the file pins one.
+    /// `remotes`), reconnect tuning, and execution tier when the file
+    /// pins them.
     pub fn job_config(self, cfg: &JobConfig) -> Self {
-        let b = self
+        let mut b = self
             .workers(cfg.workers)
             .engines(cfg.num_engines)
             .remote_engines(cfg.remotes.iter().cloned());
+        if cfg.reconnect_retries.is_some()
+            || cfg.reconnect_backoff_ms.is_some()
+        {
+            let defaults = RemoteConfig::default();
+            let retries = cfg
+                .reconnect_retries
+                .unwrap_or(defaults.reconnect_retries);
+            b = b.remote_config(RemoteConfig {
+                reconnect_retries: retries,
+                reconnect: retries > 0,
+                reconnect_backoff: cfg
+                    .reconnect_backoff_ms
+                    .map(std::time::Duration::from_millis)
+                    .unwrap_or(defaults.reconnect_backoff),
+                ..defaults
+            });
+        }
         match cfg.tier {
             Some(t) => b.execution_tier(t),
             None => b,
@@ -544,11 +586,20 @@ impl SessionBuilder {
         let topology = if !self.remotes.is_empty() {
             // remotes force a cluster; keep >= 1 local engine so
             // Session::engine() (the harmonic fast path) stays valid
-            ExecTopology::Cluster(DeviceCluster::for_pool_with_remotes(
-                &pool,
-                self.engines,
-                &self.remotes,
-            )?)
+            let mut rcfg = self.remote_config.unwrap_or_default();
+            if rcfg.chaos.is_none() {
+                rcfg.chaos = self
+                    .fault_plan
+                    .or_else(WireFaultPlan::from_env);
+            }
+            ExecTopology::Cluster(
+                DeviceCluster::for_pool_with_remote_config(
+                    &pool,
+                    self.engines,
+                    &self.remotes,
+                    rcfg,
+                )?,
+            )
         } else if self.engines <= 1 {
             ExecTopology::Engine(Engine::for_pool(&pool)?)
         } else {

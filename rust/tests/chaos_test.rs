@@ -1,0 +1,498 @@
+//! Deterministic fault-injection verification: the chaos suite.
+//!
+//! A seeded [`FaultPlan`] schedules transport faults — drop, delay,
+//! truncate, corrupt, hang — at exact `(connection, frame)` points,
+//! and for **every** fault class a mixed local+remote cluster must
+//! reproduce the fault-free single-engine `Estimate`s bit-for-bit:
+//! lethal faults degrade to a whole-shard requeue (counted in the
+//! cluster `Metrics`) plus a supervised reconnect, while a latency
+//! spike costs nothing. On top of the class-by-class sweep:
+//!
+//! * a seeded schedule replays identically and survives two batches;
+//! * the `Session::builder().fault_plan(..)` knob threads a plan all
+//!   the way to the transport;
+//! * a worker killed and restarted on the same port rejoins the shard
+//!   plan and serves later rounds (`reconnects` accounted);
+//! * proptest fuzzing — random bit flips, truncations, and trailing
+//!   garbage on random frames always decode to a typed [`WireError`],
+//!   never a wrong frame;
+//! * a peer that closes cleanly mid-handshake is a connect *failure*,
+//!   not a hang.
+//!
+//! Emulator-only (`--features pjrt` skips): the emulated registry is
+//! what makes remote results bit-identical to local ones.
+#![cfg(not(feature = "pjrt"))]
+
+use std::net::TcpListener;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use zmc::cluster::{
+    reduce_tagged, serve_worker, DeviceCluster, Fault, Frame, LaunchExec,
+    RemoteConfig, RemoteEngine, WireError, WireFaultPlan, WorkerServer,
+};
+use zmc::engine::{DeviceEngine, Engine, LaunchTask, TaggedOutput};
+use zmc::integrator::multifunctions::{self, MultiConfig};
+use zmc::integrator::spec::{Estimate, IntegralJob};
+use zmc::runtime::device::DevicePool;
+use zmc::runtime::launch::Value;
+use zmc::runtime::registry::Registry;
+use zmc::session::Session;
+use zmc::util::proptest::{check, Gen};
+
+type DeviceFrame = Frame<LaunchTask, TaggedOutput>;
+
+// ------------------------------------------------------------ fixtures
+
+fn emulated_pool() -> DevicePool {
+    let reg = Arc::new(Registry::emulated());
+    DevicePool::new(&reg, 1).unwrap()
+}
+
+fn engine() -> DeviceEngine {
+    Engine::for_pool(&emulated_pool()).unwrap()
+}
+
+fn worker() -> WorkerServer {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    serve_worker(listener, engine()).unwrap()
+}
+
+/// Fast heartbeats and an eager reconnect supervisor, with `plan`
+/// wired into the transport.
+fn chaos_rcfg(plan: Option<Arc<WireFaultPlan>>) -> RemoteConfig {
+    RemoteConfig {
+        ping_interval: Duration::from_millis(20),
+        ping_timeout: Duration::from_millis(400),
+        reconnect_backoff: Duration::from_millis(20),
+        reconnect_cap: Duration::from_millis(100),
+        reconnect_retries: 200,
+        chaos: plan,
+        ..Default::default()
+    }
+}
+
+/// 1 local engine + 1 remote proxy with `plan` on the wire.
+fn chaos_cluster(plan: Arc<WireFaultPlan>, addr: &str) -> DeviceCluster {
+    DeviceCluster::for_pool_with_remote_config(
+        &emulated_pool(),
+        1,
+        &[addr.to_string()],
+        chaos_rcfg(Some(plan)),
+    )
+    .unwrap()
+}
+
+fn job_pool() -> Vec<IntegralJob> {
+    let u1 = [(0.0, 1.0)];
+    let u2 = [(0.0, 1.0), (0.0, 1.0)];
+    vec![
+        IntegralJob::parse("x1^2 + 1", &u1).unwrap(),
+        IntegralJob::parse("sin(x1)*x2", &u2).unwrap(),
+        IntegralJob::with_params("exp(-p0*(x1+x2))", &u2, &[1.5]).unwrap(),
+    ]
+}
+
+fn multi_cfg(seed: u64) -> MultiConfig {
+    MultiConfig {
+        // 8 launches of 4096 samples: both shards are non-trivial, so
+        // the remote shard is in flight when the fault fires
+        samples_per_fn: 8 << 12,
+        seed,
+        exe: Some("vm_multi_f8_s4096".into()),
+        ..Default::default()
+    }
+}
+
+fn assert_estimates_bit_identical(
+    a: &[Estimate],
+    b: &[Estimate],
+    ctx: &str,
+) {
+    assert_eq!(a.len(), b.len(), "{ctx}");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(
+            x.value.to_bits(),
+            y.value.to_bits(),
+            "{ctx}: fn {i} value {} vs {}",
+            x.value,
+            y.value
+        );
+        assert_eq!(
+            x.std_err.to_bits(),
+            y.std_err.to_bits(),
+            "{ctx}: fn {i} std_err"
+        );
+        assert_eq!(x.n_samples, y.n_samples, "{ctx}: fn {i} n_samples");
+    }
+}
+
+/// Spin until `pred` holds or `deadline` elapses; panic with `what`
+/// on timeout.
+fn wait_for(what: &str, deadline: Duration, mut pred: impl FnMut() -> bool) {
+    let t0 = Instant::now();
+    while !pred() {
+        assert!(t0.elapsed() < deadline, "timed out waiting for {what}");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+}
+
+// ----------------------------------------------- the class-by-class sweep
+
+/// The tentpole property: every fault class, injected at the first
+/// Submit of the remote connection (conn 0, data frame 1) *and* at
+/// the first Submit of the reconnected connection (conn 1, frame 1),
+/// leaves both the `Estimate`s and the merged `MomentSum`s
+/// bit-identical to a fault-free single-engine run. Lethal classes
+/// must be *accounted* — a whole-shard requeue plus a reconnect in
+/// the cluster metrics — and a latency spike must cost nothing.
+#[test]
+fn every_fault_class_is_bit_identical_to_fault_free() {
+    let jobs = job_pool();
+    let cfg = multi_cfg(61_61);
+    let reference = engine();
+    let clean =
+        multifunctions::integrate(&reference, &jobs, &cfg).unwrap();
+    let reg = Arc::new(Registry::emulated());
+    let (tasks, exe) =
+        multifunctions::build_tasks(&reg, &jobs, &cfg).unwrap();
+    let (n_fns, samples) = (exe.n_fns, exe.samples as u64);
+    let outs = LaunchExec::submit_launches(&reference, tasks.clone(), 3)
+        .unwrap()
+        .wait()
+        .unwrap();
+    let base_moments = reduce_tagged(outs, n_fns, samples, jobs.len());
+
+    let classes: [(&str, Fault, bool); 5] = [
+        ("drop", Fault::Drop, true),
+        ("delay", Fault::Delay(Duration::from_millis(30)), false),
+        ("truncate", Fault::Truncate(9), true),
+        ("corrupt", Fault::Corrupt { offset: 18, xor: 0x40 }, true),
+        ("hang", Fault::Hang, true),
+    ];
+    for (name, fault, lethal) in classes {
+        let w = worker();
+        let plan = Arc::new(
+            WireFaultPlan::new().event(0, 1, fault).event(1, 1, fault),
+        );
+        let c = chaos_cluster(plan, &w.addr().to_string());
+        let got = multifunctions::integrate(&c, &jobs, &cfg).unwrap();
+        assert_estimates_bit_identical(&clean, &got, name);
+
+        // one layer down: the moments batch rides the cluster too —
+        // for lethal classes it lands on the reconnected connection,
+        // whose first Submit is also faulted
+        let outs = LaunchExec::submit_launches(&c, tasks.clone(), 3)
+            .unwrap()
+            .wait()
+            .unwrap();
+        let merged = reduce_tagged(outs, n_fns, samples, jobs.len());
+        assert_eq!(base_moments, merged, "{name}: merged moments");
+
+        let m = c.metrics();
+        if lethal {
+            assert!(
+                m.retried() >= 1,
+                "{name}: shard requeue must be counted: {}",
+                m.summary()
+            );
+            wait_for(
+                &format!("{name}: reconnect accounting"),
+                Duration::from_secs(10),
+                || c.metrics().reconnects() >= 1,
+            );
+        } else {
+            assert_eq!(
+                m.retried(),
+                0,
+                "{name}: a latency spike is not a death: {}",
+                m.summary()
+            );
+            assert_eq!(m.reconnects(), 0, "{name}: {}", m.summary());
+        }
+    }
+}
+
+/// After an injected drop the supervisor reconnects to the (still
+/// alive) worker on a fresh connection index — which the plan leaves
+/// clean — the node revives, and a second round runs fault-free.
+#[test]
+fn injected_drop_reconnects_and_revives_the_node() {
+    let jobs = job_pool();
+    let cfg = multi_cfg(62_62);
+    let clean = multifunctions::integrate(&engine(), &jobs, &cfg).unwrap();
+
+    let w = worker();
+    let plan = Arc::new(WireFaultPlan::new().event(0, 1, Fault::Drop));
+    let c = chaos_cluster(plan, &w.addr().to_string());
+    let got = multifunctions::integrate(&c, &jobs, &cfg).unwrap();
+    assert_estimates_bit_identical(&clean, &got, "round 1 under drop");
+
+    wait_for("reconnect + revival", Duration::from_secs(10), || {
+        c.metrics().reconnects() >= 1 && c.n_alive() == 2
+    });
+    let got = multifunctions::integrate(&c, &jobs, &cfg).unwrap();
+    assert_estimates_bit_identical(&clean, &got, "round 2 after rejoin");
+    assert_eq!(
+        c.metrics().reconnect_failures(),
+        0,
+        "worker never went away, so no attempt may fail: {}",
+        c.metrics().summary()
+    );
+}
+
+/// A seeded schedule is a pure function of its seed, and a cluster
+/// riding one (faults across connections 0..3) still reproduces two
+/// consecutive batches bit-for-bit.
+#[test]
+fn seeded_schedule_replays_and_stays_bit_identical() {
+    let a = WireFaultPlan::seeded(0xC0FFEE, 5);
+    let b = WireFaultPlan::seeded(0xC0FFEE, 5);
+    assert_eq!(a.len(), b.len());
+    for conn in 0..4 {
+        for frame in 0..8 {
+            assert_eq!(
+                a.fault_for(conn, frame),
+                b.fault_for(conn, frame),
+                "schedule must replay at ({conn}, {frame})"
+            );
+        }
+    }
+
+    let jobs = job_pool();
+    let cfg = multi_cfg(63_63);
+    let clean = multifunctions::integrate(&engine(), &jobs, &cfg).unwrap();
+    let w = worker();
+    let c = chaos_cluster(Arc::new(a), &w.addr().to_string());
+    for round in 1..=2 {
+        let got = multifunctions::integrate(&c, &jobs, &cfg).unwrap();
+        assert_estimates_bit_identical(
+            &clean,
+            &got,
+            &format!("seeded storm, round {round}"),
+        );
+    }
+}
+
+/// `Session::builder().fault_plan(..)` reaches the transport: a
+/// corrupted Submit costs a counted requeue, never a wrong estimate.
+#[test]
+fn session_fault_plan_threads_to_the_transport() {
+    let w = worker();
+    let plan = Arc::new(
+        WireFaultPlan::new()
+            .event(0, 1, Fault::Corrupt { offset: 20, xor: 0xFF }),
+    );
+    let local = Session::builder().emulated().build().unwrap();
+    let s = Session::builder()
+        .emulated()
+        .remote_engines([w.addr().to_string()])
+        .remote_config(chaos_rcfg(None))
+        .fault_plan(plan)
+        .build()
+        .unwrap();
+
+    let jobs = job_pool();
+    let base = local
+        .multifunctions(&jobs)
+        .samples(4 << 12)
+        .seed(77)
+        .run()
+        .unwrap();
+    let got =
+        s.multifunctions(&jobs).samples(4 << 12).seed(77).run().unwrap();
+    assert_estimates_bit_identical(&base, &got, "session fault plan");
+    let m = s.cluster().unwrap().metrics();
+    assert!(
+        m.retried() >= 1,
+        "the corrupted shard must be a counted requeue: {}",
+        m.summary()
+    );
+}
+
+// --------------------------------------------------- worker bounce
+
+/// Kill a worker, restart it on the same port, and the supervisor
+/// rejoins it to the shard plan: `reconnects` is accounted, the node
+/// is alive again, and the next rounds are bit-identical.
+#[test]
+fn killed_then_restarted_worker_rejoins_and_serves() {
+    let w = worker();
+    let port_addr = w.addr();
+    let addr = port_addr.to_string();
+
+    let local = Session::builder().emulated().build().unwrap();
+    let s = Session::builder()
+        .emulated()
+        .remote_engines([addr])
+        .remote_config(chaos_rcfg(None))
+        .build()
+        .unwrap();
+    let jobs = job_pool();
+    let base = local
+        .multifunctions(&jobs)
+        .samples(4 << 12)
+        .seed(88)
+        .run()
+        .unwrap();
+    let got =
+        s.multifunctions(&jobs).samples(4 << 12).seed(88).run().unwrap();
+    assert_estimates_bit_identical(&base, &got, "before the bounce");
+
+    w.kill();
+    w.join();
+    // restart on the same port (the listener may linger briefly)
+    let deadline = Instant::now() + Duration::from_secs(10);
+    let w2 = loop {
+        match TcpListener::bind(port_addr) {
+            Ok(l) => break serve_worker(l, engine()).unwrap(),
+            Err(e) => {
+                assert!(Instant::now() < deadline, "rebind: {e}");
+                std::thread::sleep(Duration::from_millis(20));
+            }
+        }
+    };
+
+    let c = s.cluster().unwrap();
+    wait_for("worker rejoin", Duration::from_secs(10), || {
+        c.metrics().reconnects() >= 1 && c.n_alive() == 2
+    });
+    for round in 1..=2 {
+        let got = s
+            .multifunctions(&jobs)
+            .samples(4 << 12)
+            .seed(88)
+            .run()
+            .unwrap();
+        assert_estimates_bit_identical(
+            &base,
+            &got,
+            &format!("post-bounce round {round}"),
+        );
+    }
+    assert!(w2.stats().submits.load(std::sync::atomic::Ordering::Relaxed) >= 1);
+}
+
+// ------------------------------------------------------- wire fuzzing
+
+fn random_value(g: &mut Gen) -> Value {
+    let n = g.below(5);
+    match g.below(3) {
+        0 => Value::F32(
+            (0..n).map(|_| f32::from_bits(g.next_u32())).collect(),
+        ),
+        1 => Value::I32((0..n).map(|_| g.next_u32() as i32).collect()),
+        _ => Value::U32((0..n).map(|_| g.next_u32()).collect()),
+    }
+}
+
+fn random_frame(g: &mut Gen) -> DeviceFrame {
+    match g.below(6) {
+        0 => Frame::Submit {
+            id: g.next_u64(),
+            max_retries: g.next_u32() % 8,
+            tasks: (0..g.below(3))
+                .map(|_| LaunchTask {
+                    exe: format!("vm_multi_f8_s{}", 1 << (10 + g.below(4))),
+                    tag: g.next_u64(),
+                    inputs: (0..g.below(3)).map(|_| random_value(g)).collect(),
+                })
+                .collect(),
+        },
+        1 => Frame::Result {
+            id: g.next_u64(),
+            outs: vec![],
+        },
+        2 => Frame::Error {
+            id: g.next_u64(),
+            msg: "chaos fuzz ✗".to_string(),
+        },
+        3 => Frame::Cancel { id: g.next_u64() },
+        4 => Frame::Hello {
+            min_version: g.next_u32() as u16,
+            max_version: g.next_u32() as u16,
+            digest: g.next_u64(),
+        },
+        _ => Frame::HelloAck {
+            version: g.next_u32() as u16,
+            digest: g.next_u64(),
+        },
+    }
+}
+
+/// Random single-bit flips, truncations, and trailing garbage on
+/// random frames: decoding always yields a *typed* [`WireError`] —
+/// never a panic, never a silently wrong frame. (The checksum covers
+/// tag, length, and payload, so no single flip can slip through.)
+#[test]
+fn fuzzed_corruption_is_a_typed_error_never_a_wrong_frame() {
+    check(0xFA11_5EED, 60, |g: &mut Gen| {
+        let bytes = random_frame(g).to_bytes();
+        match g.below(3) {
+            0 => {
+                let mut b = bytes.clone();
+                let i = g.below(b.len());
+                b[i] ^= 1u8 << g.below(8);
+                let err = DeviceFrame::from_bytes(&b).unwrap_err();
+                // exercise the error type: every variant displays
+                assert!(!err.to_string().is_empty(), "flip at {i}");
+            }
+            1 => {
+                let cut = g.below(bytes.len());
+                assert!(
+                    matches!(
+                        DeviceFrame::from_bytes(&bytes[..cut]),
+                        Err(WireError::Truncated { .. })
+                    ),
+                    "cut at {cut}"
+                );
+            }
+            _ => {
+                let mut b = bytes.clone();
+                let extra = 1 + g.below(16);
+                for _ in 0..extra {
+                    b.push(g.next_u32() as u8);
+                }
+                assert!(matches!(
+                    DeviceFrame::from_bytes(&b),
+                    Err(WireError::Trailing { .. })
+                ));
+            }
+        }
+    });
+}
+
+/// A peer that accepts and then closes cleanly before answering the
+/// handshake is a connect *failure* with a useful message — bounded
+/// in time, never a hang.
+#[test]
+fn clean_eof_mid_handshake_fails_connect_without_hanging() {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let t = std::thread::spawn(move || {
+        for conn in listener.incoming().take(2).flatten() {
+            drop(conn);
+        }
+    });
+
+    let t0 = Instant::now();
+    let cfg = RemoteConfig {
+        connect_retries: 2,
+        connect_backoff: Duration::from_millis(10),
+        ping_timeout: Duration::from_millis(200),
+        reconnect: false,
+        ..Default::default()
+    };
+    let err = RemoteEngine::<LaunchTask, TaggedOutput>::connect(&addr, cfg)
+        .unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(
+        msg.contains("mid-handshake") || msg.contains("HelloAck"),
+        "unexpected failure shape: {msg}"
+    );
+    assert!(
+        t0.elapsed() < Duration::from_secs(5),
+        "mid-handshake EOF must fail fast, not hang"
+    );
+    t.join().unwrap();
+}
