@@ -27,7 +27,7 @@ use anyhow::Result;
 
 use crate::adaptive::alloc::{apportion, Allocation};
 use crate::adaptive::strata::{partition_estimate, Stratum};
-use crate::cluster::{reduce_tagged, LaunchExec};
+use crate::cluster::{fold_tagged, LaunchExec};
 use crate::engine::LaunchTask;
 use crate::integrator::multifunctions::{split_seed, MultiConfig};
 use crate::integrator::spec::{Estimate, IntegralJob};
@@ -481,10 +481,15 @@ fn run_remapped<X: LaunchExec + ?Sized>(
         });
     }
     *launches += tasks.len();
-    let outs = exec.submit_launches(tasks, cfg.max_retries)?.wait()?;
     // centralized reduce: merged per-slot moments feed the (also
-    // centralized) allocation step of the next round
-    Ok(reduce_tagged(outs, exe.n_fns, exe.samples as u64, slots.len()))
+    // centralized) allocation step of the next round; folding results
+    // as they land (in task order) is bit-identical to collecting the
+    // full output list first and avoids buffering O(launches) outputs
+    let mut moments = vec![MomentSum::new(); slots.len()];
+    exec.submit_launches(tasks, cfg.max_retries)?.wait_each(&mut |out| {
+        fold_tagged(&mut moments, &out, exe.n_fns, exe.samples as u64)
+    })?;
+    Ok(moments)
 }
 
 #[cfg(test)]

@@ -1,0 +1,533 @@
+//! Columnar batch storage: struct-of-arrays jobs and results.
+//!
+//! The boxed path represents an N-function batch as `Vec<IntegralJob>`
+//! — per function a `String`, an `Expr` tree, a `Program` vec, a
+//! bounds vec and a theta vec, roughly a dozen heap allocations each.
+//! At 10⁵–10⁶ functions that is the dominant memory and allocation
+//! cost, before a single sample is drawn. [`BatchJobs`] stores the
+//! same batch as a handful of contiguous columns: one interned
+//! [`dedup`](super::dedup) class table (each class carries its
+//! HALT-padded device rows exactly once) plus per-function `u32`
+//! class ids, `f64` theta rows, `f32` bound rows and volumes.
+//! [`BatchResults`] is the mirror on the way out — `f64` columns for
+//! value/std-err, `u64`/`u32` columns for samples/rounds, and the
+//! merged [`MomentSum`] column — with iterator views yielding the same
+//! [`Estimate`] values the boxed path returns, so downstream callers
+//! are unchanged.
+//!
+//! Layout notes: theta rows are padded to the batch-wide widest class
+//! with zeros and bound rows with `(0, 1)` — exactly the defaults the
+//! launch builder fills unused slots with, so padding is
+//! indistinguishable from the boxed path's shorter rows and the
+//! per-launch inputs come out byte-identical.
+
+use anyhow::{bail, Result};
+
+use crate::abi::{MAX_PARAM, MAX_PROG};
+use crate::batch::dedup::{
+    canonical_program, classify, extended_theta_into, ClassTable,
+};
+use crate::integrator::spec::{Estimate, IntegralJob};
+use crate::runtime::launch::{RngCtr, Value};
+use crate::runtime::registry::ExeSpec;
+use crate::sampler::volume;
+use crate::stats::MomentSum;
+use crate::vm::program::Program;
+
+/// One deduped program class: the canonical (or verbatim) program plus
+/// its device rows, materialized once per class instead of once per
+/// function.
+pub(crate) struct BatchClass {
+    pub program: Program,
+    plen: i32,
+    ops: Vec<i32>,
+    iargs: Vec<i32>,
+    fargs: Vec<f32>,
+}
+
+impl BatchClass {
+    fn new(program: Program) -> Self {
+        let plen = program.len() as i32;
+        let (ops, iargs, fargs) = program.device_rows();
+        BatchClass { program, plen, ops, iargs, fargs }
+    }
+}
+
+/// A columnar batch of integrands: the million-function counterpart of
+/// `&[IntegralJob]`. Built either from boxed jobs
+/// ([`BatchJobs::from_jobs`]) or directly as a parameter scan
+/// ([`BatchJobs::scan`] / [`BatchJobs::scan_with`]) without ever
+/// materializing per-function boxes.
+pub struct BatchJobs {
+    classes: Vec<BatchClass>,
+    class_of: Vec<u32>,
+    /// Extended theta rows (real params ++ hoisted constants),
+    /// row-major with stride `theta_stride`, zero-padded.
+    theta: Vec<f64>,
+    theta_stride: usize,
+    /// Bound rows as f32 (converted once at build; the boxed path
+    /// converts identically per launch), `(0, 1)`-padded. When
+    /// `shared_bounds` one row serves every function.
+    lo: Vec<f32>,
+    hi: Vec<f32>,
+    bounds_stride: usize,
+    shared_bounds: bool,
+    /// Per-function domain volumes (one entry when `shared_bounds`).
+    volumes: Vec<f64>,
+    /// Max per-function dimensionality — drives executable selection
+    /// exactly like the boxed path's `jobs.map(dims).max()`.
+    max_dims: usize,
+    n: usize,
+}
+
+impl BatchJobs {
+    /// Columnarize a boxed job set, interning structurally-equal
+    /// programs (modulo constants) into shared classes. The batch is
+    /// semantically identical to `jobs` — executing it yields
+    /// bit-identical estimates.
+    pub fn from_jobs(jobs: &[IntegralJob]) -> Result<BatchJobs> {
+        // width pass: strides must be known before columns can fill
+        let mut theta_stride = 0usize;
+        let mut bounds_stride = 0usize;
+        for (i, j) in jobs.iter().enumerate() {
+            if j.theta.len() > MAX_PARAM {
+                bail!("batch fn {i}: {} params > {MAX_PARAM}", j.theta.len());
+            }
+            if j.program.dims > j.bounds.len() {
+                bail!(
+                    "batch fn {i}: program reads x{} but only {} bounds \
+                     given",
+                    j.program.dims,
+                    j.bounds.len()
+                );
+            }
+            let canon = classify(&j.program, j.theta.len());
+            theta_stride = theta_stride.max(canon.theta_width());
+            bounds_stride = bounds_stride.max(j.bounds.len());
+        }
+
+        let n = jobs.len();
+        let mut table = ClassTable::new();
+        let mut classes: Vec<BatchClass> = Vec::new();
+        let mut class_of = Vec::with_capacity(n);
+        let mut theta = vec![0.0f64; n * theta_stride];
+        let mut lo = vec![0.0f32; n * bounds_stride];
+        let mut hi = vec![1.0f32; n * bounds_stride];
+        let mut volumes = Vec::with_capacity(n);
+        let mut max_dims = 0usize;
+        for (i, j) in jobs.iter().enumerate() {
+            let canon = classify(&j.program, j.theta.len());
+            let cls = match table.intern(canon.key.clone()) {
+                Ok(existing) => existing,
+                Err(fresh) => {
+                    let program = if canon.verbatim {
+                        j.program.clone()
+                    } else {
+                        canonical_program(&j.program, canon.base)
+                    };
+                    classes.push(BatchClass::new(program));
+                    fresh
+                }
+            };
+            class_of.push(cls);
+            extended_theta_into(
+                &mut theta[i * theta_stride..(i + 1) * theta_stride],
+                &canon,
+                &j.program,
+                &j.theta,
+            );
+            for (d, &(l, h)) in j.bounds.iter().enumerate() {
+                lo[i * bounds_stride + d] = l as f32;
+                hi[i * bounds_stride + d] = h as f32;
+            }
+            volumes.push(j.volume());
+            max_dims = max_dims.max(j.dims());
+        }
+        Ok(BatchJobs {
+            classes,
+            class_of,
+            theta,
+            theta_stride,
+            lo,
+            hi,
+            bounds_stride,
+            shared_bounds: false,
+            volumes,
+            max_dims,
+            n,
+        })
+    }
+
+    /// Parameter scan: `n` instances of one integrand, theta row `i`
+    /// produced by `fill(i, row)` into a `job.theta.len()`-wide slice
+    /// (pre-zeroed). This is the 10⁵–10⁶ fast path — one class, no
+    /// per-function boxes, O(columns) memory total.
+    pub fn scan_with(
+        job: &IntegralJob,
+        n: usize,
+        mut fill: impl FnMut(usize, &mut [f64]),
+    ) -> Result<BatchJobs> {
+        let width = job.theta.len();
+        if width > MAX_PARAM {
+            bail!("scan: {} params > {MAX_PARAM}", width);
+        }
+        if job.program.dims > job.bounds.len() {
+            bail!(
+                "scan: program reads x{} but only {} bounds given",
+                job.program.dims,
+                job.bounds.len()
+            );
+        }
+        let canon = classify(&job.program, width);
+        let program = if canon.verbatim {
+            job.program.clone()
+        } else {
+            canonical_program(&job.program, canon.base)
+        };
+        let theta_stride = canon.theta_width();
+        // the hoisted-constant tail is identical for every row
+        let mut tail = vec![0.0f64; theta_stride];
+        extended_theta_into(&mut tail, &canon, &job.program, &job.theta);
+        let consts = &tail[canon.base..];
+
+        let mut theta = vec![0.0f64; n * theta_stride];
+        for i in 0..n {
+            let row = &mut theta[i * theta_stride..(i + 1) * theta_stride];
+            fill(i, &mut row[..width]);
+            row[canon.base..].copy_from_slice(consts);
+        }
+        let bounds_stride = job.bounds.len();
+        let mut lo = vec![0.0f32; bounds_stride];
+        let mut hi = vec![1.0f32; bounds_stride];
+        for (d, &(l, h)) in job.bounds.iter().enumerate() {
+            lo[d] = l as f32;
+            hi[d] = h as f32;
+        }
+        Ok(BatchJobs {
+            classes: vec![BatchClass::new(program)],
+            class_of: vec![0; n],
+            theta,
+            theta_stride,
+            lo,
+            hi,
+            bounds_stride,
+            shared_bounds: true,
+            volumes: vec![volume(&job.bounds)],
+            max_dims: job.dims(),
+            n,
+        })
+    }
+
+    /// [`BatchJobs::scan_with`] from explicit theta rows (each must be
+    /// `job.theta.len()` long).
+    pub fn scan(job: &IntegralJob, thetas: &[Vec<f64>]) -> Result<BatchJobs> {
+        let width = job.theta.len();
+        for (i, t) in thetas.iter().enumerate() {
+            if t.len() != width {
+                bail!(
+                    "scan point {i}: {} params, expected {width}",
+                    t.len()
+                );
+            }
+        }
+        Self::scan_with(job, thetas.len(), |i, row| {
+            row.copy_from_slice(&thetas[i]);
+        })
+    }
+
+    /// Functions in the batch.
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// Distinct program classes after dedup (what the plan/fused
+    /// caches and registry ledgers actually see).
+    pub fn n_classes(&self) -> usize {
+        self.classes.len()
+    }
+
+    /// Functions folded into an already-interned class: programs that
+    /// never reach the caches because a structural twin already did.
+    /// (Saturating: a zero-function scan still carries its one class.)
+    pub fn n_folded(&self) -> usize {
+        self.n.saturating_sub(self.classes.len())
+    }
+
+    /// Max per-function dimensionality (executable selection).
+    pub fn dims(&self) -> usize {
+        self.max_dims
+    }
+
+    /// Resident column bytes (jobs side) — what the streaming bench
+    /// compares against peak allocation to assert the watermark bound.
+    pub fn approx_bytes(&self) -> usize {
+        self.theta.len() * 8
+            + (self.lo.len() + self.hi.len()) * 4
+            + self.class_of.len() * 4
+            + self.volumes.len() * 8
+            + self.classes.len() * (MAX_PROG * 12 + 64)
+    }
+
+    pub(crate) fn volume(&self, i: usize) -> f64 {
+        if self.shared_bounds {
+            self.volumes[0]
+        } else {
+            self.volumes[i]
+        }
+    }
+
+    /// Build the `vm_multi` inputs for the launch block starting at
+    /// function `start` — the column-direct mirror of
+    /// `runtime::launch::vm_multi_inputs` over `VmFn` boxes, producing
+    /// byte-identical tensors (asserted by `tests/batch_test.rs` via
+    /// end-to-end bit-equality with the boxed path).
+    pub(crate) fn block_inputs(
+        &self,
+        exe: &ExeSpec,
+        rng: RngCtr,
+        start: usize,
+        stream_base: u32,
+    ) -> Result<Vec<Value>> {
+        let (n, d, p) = (exe.n_fns, exe.dims, MAX_PROG);
+        if self.bounds_stride > d {
+            bail!(
+                "batch: {} bound dims > executable dims {d}",
+                self.bounds_stride
+            );
+        }
+        debug_assert!(self.theta_stride <= MAX_PARAM);
+        let count = self.n.saturating_sub(start).min(n);
+        let mut streams = vec![0u32; n];
+        let mut plens = vec![0i32; n];
+        let mut ops = vec![0i32; n * p];
+        let mut iargs = vec![0i32; n * p];
+        let mut fargs = vec![0f32; n * p];
+        let mut theta = vec![0f32; n * MAX_PARAM];
+        let mut lo = vec![0f32; n * d];
+        let mut hi = vec![1f32; n * d];
+        for k in 0..count {
+            let i = start + k;
+            let cls = &self.classes[self.class_of[i] as usize];
+            streams[k] = stream_base + i as u32;
+            plens[k] = cls.plen;
+            ops[k * p..(k + 1) * p].copy_from_slice(&cls.ops);
+            iargs[k * p..(k + 1) * p].copy_from_slice(&cls.iargs);
+            fargs[k * p..(k + 1) * p].copy_from_slice(&cls.fargs);
+            let trow = &self.theta[i * self.theta_stride..];
+            for j in 0..self.theta_stride {
+                theta[k * MAX_PARAM + j] = trow[j] as f32;
+            }
+            let b = if self.shared_bounds { 0 } else { i };
+            let (lrow, hrow) = (
+                &self.lo[b * self.bounds_stride..],
+                &self.hi[b * self.bounds_stride..],
+            );
+            for j in 0..self.bounds_stride {
+                lo[k * d + j] = lrow[j];
+                hi[k * d + j] = hrow[j];
+            }
+        }
+        Ok(vec![
+            Value::U32(vec![rng.seed[0], rng.seed[1]]),
+            Value::U32(vec![rng.base, rng.trial]),
+            Value::U32(streams),
+            Value::I32(plens),
+            Value::I32(ops),
+            Value::I32(iargs),
+            Value::F32(fargs),
+            Value::F32(theta),
+            Value::F32(lo),
+            Value::F32(hi),
+        ])
+    }
+}
+
+/// Columnar results: one row per function, same values the boxed path
+/// produces (`Estimate` per function plus the merged moment sums),
+/// without a million boxed allocations.
+pub struct BatchResults {
+    values: Vec<f64>,
+    std_errs: Vec<f64>,
+    n_samples: Vec<u64>,
+    rounds: Vec<u32>,
+    moments: Vec<MomentSum>,
+}
+
+impl BatchResults {
+    /// Finalize merged moments into estimate columns (the streaming
+    /// reducer hands its accumulators straight in).
+    pub(crate) fn from_moments(
+        moments: Vec<MomentSum>,
+        jobs: &BatchJobs,
+    ) -> BatchResults {
+        let n = moments.len();
+        let mut values = Vec::with_capacity(n);
+        let mut std_errs = Vec::with_capacity(n);
+        let mut n_samples = Vec::with_capacity(n);
+        let mut rounds = Vec::with_capacity(n);
+        for (i, m) in moments.iter().enumerate() {
+            let (value, std_err) = m.estimate(jobs.volume(i));
+            values.push(value);
+            std_errs.push(std_err);
+            n_samples.push(m.n);
+            rounds.push(1);
+        }
+        BatchResults { values, std_errs, n_samples, rounds, moments }
+    }
+
+    /// Columnarize an existing estimate list (no moment column — the
+    /// boxed/adaptive paths discard per-function moment sums after
+    /// estimation). This is how the serve layer stores finished-job
+    /// results for recall: four flat columns instead of a boxed
+    /// `Estimate` (or JSON node) per function.
+    pub fn from_estimates(ests: &[Estimate]) -> BatchResults {
+        let mut values = Vec::with_capacity(ests.len());
+        let mut std_errs = Vec::with_capacity(ests.len());
+        let mut n_samples = Vec::with_capacity(ests.len());
+        let mut rounds = Vec::with_capacity(ests.len());
+        for e in ests {
+            values.push(e.value);
+            std_errs.push(e.std_err);
+            n_samples.push(e.n_samples);
+            rounds.push(e.rounds);
+        }
+        BatchResults { values, std_errs, n_samples, rounds, moments: vec![] }
+    }
+
+    pub fn len(&self) -> usize {
+        self.values.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.values.is_empty()
+    }
+
+    /// Function `i`'s estimate — identical to what the boxed path's
+    /// `Vec<Estimate>` holds at index `i`.
+    pub fn get(&self, i: usize) -> Estimate {
+        Estimate {
+            value: self.values[i],
+            std_err: self.std_errs[i],
+            n_samples: self.n_samples[i],
+            rounds: self.rounds[i],
+        }
+    }
+
+    /// Function `i`'s merged `(n, Σf, Σf²)` accumulator.
+    ///
+    /// Panics if these results carry no moment column
+    /// ([`from_estimates`](Self::from_estimates) builds none — only
+    /// streaming runs keep the accumulators).
+    pub fn moment(&self, i: usize) -> MomentSum {
+        self.moments[i]
+    }
+
+    /// Iterator view for existing `Estimate`-based callers.
+    pub fn iter(&self) -> impl Iterator<Item = Estimate> + '_ {
+        (0..self.len()).map(|i| self.get(i))
+    }
+
+    /// Materialize boxed estimates (compat shim for small batches).
+    pub fn to_estimates(&self) -> Vec<Estimate> {
+        self.iter().collect()
+    }
+
+    /// Resident column bytes (results side).
+    pub fn approx_bytes(&self) -> usize {
+        self.values.len() * (8 + 8 + 8 + 4 + 24)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn scan_jobs(n: usize) -> (IntegralJob, Vec<IntegralJob>) {
+        let base = IntegralJob::with_params(
+            "p0*x1*x2 + 0.5",
+            &[(0.0, 1.0), (0.0, 2.0)],
+            &[1.0],
+        )
+        .unwrap();
+        let boxed: Vec<IntegralJob> = (0..n)
+            .map(|i| base.bind(&[1.0 + i as f64 * 0.25]).unwrap())
+            .collect();
+        (base, boxed)
+    }
+
+    #[test]
+    fn scan_and_from_jobs_agree() {
+        let (base, boxed) = scan_jobs(17);
+        let a = BatchJobs::from_jobs(&boxed).unwrap();
+        let b = BatchJobs::scan_with(&base, 17, |i, row| {
+            row[0] = 1.0 + i as f64 * 0.25;
+        })
+        .unwrap();
+        assert_eq!(a.len(), 17);
+        assert_eq!(a.n_classes(), 1);
+        assert_eq!(a.n_folded(), 16);
+        assert_eq!(b.n_classes(), 1);
+        assert_eq!(a.theta_stride, b.theta_stride);
+        assert_eq!(a.theta, b.theta);
+        assert_eq!(a.dims(), b.dims());
+        assert_eq!(a.volume(3), b.volume(3));
+        // identical block inputs from either construction
+        let exe = crate::runtime::registry::Registry::emulated()
+            .pick(crate::runtime::registry::ExeKind::VmMulti, 64, 2)
+            .unwrap()
+            .clone();
+        let rng = RngCtr { seed: [1, 2], base: 0, trial: 0 };
+        let ia = a.block_inputs(&exe, rng, 0, 7).unwrap();
+        let ib = b.block_inputs(&exe, rng, 0, 7).unwrap();
+        for (x, y) in ia.iter().zip(&ib) {
+            match (x, y) {
+                (Value::F32(u), Value::F32(v)) => assert_eq!(u, v),
+                (Value::I32(u), Value::I32(v)) => assert_eq!(u, v),
+                (Value::U32(u), Value::U32(v)) => assert_eq!(u, v),
+                _ => panic!("dtype mismatch"),
+            }
+        }
+    }
+
+    #[test]
+    fn heterogeneous_batch_keeps_classes_apart() {
+        let j1 = IntegralJob::parse("x1*x1", &[(0.0, 1.0)]).unwrap();
+        let j2 = IntegralJob::parse("x1*x1 + 2.0", &[(0.0, 1.0)]).unwrap();
+        let j3 = IntegralJob::parse("x1*x1 + 9.0", &[(0.0, 1.0)]).unwrap();
+        let b = BatchJobs::from_jobs(&[j1, j2, j3]).unwrap();
+        assert_eq!(b.n_classes(), 2); // j2/j3 fold, j1 stays its own
+        assert_eq!(b.n_folded(), 1);
+    }
+
+    #[test]
+    fn scan_rejects_bad_theta_width() {
+        let (base, _) = scan_jobs(1);
+        assert!(BatchJobs::scan(&base, &[vec![1.0, 2.0]]).is_err());
+        assert!(BatchJobs::scan(&base, &[vec![1.0]]).is_ok());
+    }
+
+    #[test]
+    fn results_columns_roundtrip_estimates() {
+        let (base, _) = scan_jobs(3);
+        let jobs = BatchJobs::scan(&base, &[vec![1.0], vec![2.0], vec![3.0]])
+            .unwrap();
+        let mut m = MomentSum::new();
+        m.push(0.5);
+        m.push(1.5);
+        let res =
+            BatchResults::from_moments(vec![m, MomentSum::new(), m], &jobs);
+        assert_eq!(res.len(), 3);
+        let (v, e) = m.estimate(jobs.volume(0));
+        assert_eq!(res.get(0).value, v);
+        assert_eq!(res.get(0).std_err, e);
+        assert_eq!(res.get(0).n_samples, 2);
+        assert_eq!(res.get(0).rounds, 1);
+        assert_eq!(res.moment(2), m);
+        assert_eq!(res.to_estimates().len(), 3);
+        assert_eq!(res.iter().count(), 3);
+    }
+}

@@ -1,0 +1,268 @@
+//! Hash-consed program dedup: structural program identity **modulo
+//! constant operands**.
+//!
+//! A parameter-scan batch of 10⁶ functions is typically one integrand
+//! body instantiated with 10⁶ constant vectors. Shipping 10⁶ distinct
+//! program rows defeats every cache below us — the per-worker
+//! `ExecPlan`/`FusedPlan` LRUs key on the row bytes (constants
+//! included), so each function is a miss and a fresh lowering. This
+//! module folds such a batch onto its canonical shape: every `CONST`
+//! occurrence is rewritten to a fresh `PARAM` slot after the
+//! function's real parameters, and the constant values move into the
+//! per-function theta vector. All members of a class then share **one**
+//! program row — one LRU entry, one lowering, one ledger line — while
+//! their constants ride the theta column that is per-function anyway.
+//!
+//! Bit-exactness: `CONST` and `PARAM` are both `Push` opcodes with
+//! identical stack effect, and every execution tier (naive interpreter,
+//! `ExecPlan`, fused) evaluates a pushed constant and a pushed theta
+//! slot through the same scalar path — constant folding and uniform
+//! hoisting in `vm/plan.rs` use the interpreter's own f32 kernels for
+//! both. Rewriting `CONST c` to `PARAM j` with `theta[j] = c as f64`
+//! (exact f32→f64→f32 round trip) therefore produces bit-identical
+//! per-lane results on every tier; `tests/batch_test.rs` asserts it
+//! end-to-end against the boxed oracle.
+//!
+//! Functions whose real parameters plus constants would overflow
+//! `MAX_PARAM` theta slots keep their **verbatim** program (no
+//! rewrite); they still dedup against byte-identical programs, which
+//! covers the scan-over-theta case where the program carries no
+//! varying constants at all.
+
+use std::collections::HashMap;
+
+use crate::abi::MAX_PARAM;
+use crate::vm::opcodes::Op;
+use crate::vm::program::{Instr, Program};
+
+/// Exact structural identity of a program class. Two functions share a
+/// class iff their keys are equal — a `HashMap` key, not a lossy hash,
+/// so near-collision programs (same shape, one differing non-constant
+/// operand) can never be merged by accident.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub(crate) struct ClassKey {
+    /// Verbatim classes keep constant bits in `shape`; canonical
+    /// classes mask them out (that is the dedup).
+    verbatim: bool,
+    /// First theta slot available for hoisted constants
+    /// (`max(theta_len, program.n_params)`); part of the identity
+    /// because it fixes the rewritten `PARAM` indices.
+    base: usize,
+    /// Per-instruction `(opcode, iarg, farg bits)`; `farg` of a
+    /// `CONST` is masked to 0 in canonical keys.
+    shape: Vec<(i32, i32, u32)>,
+}
+
+/// One function's dedup decision: which class it belongs to and how to
+/// build that class's program / this function's extended theta.
+pub(crate) struct Canon {
+    pub key: ClassKey,
+    /// First hoisted-constant theta slot (== original theta width for
+    /// verbatim classes).
+    pub base: usize,
+    /// Constants hoisted into theta (0 for verbatim classes).
+    pub n_consts: usize,
+    pub verbatim: bool,
+}
+
+impl Canon {
+    /// Width of this function's extended theta row.
+    pub fn theta_width(&self) -> usize {
+        self.base + self.n_consts
+    }
+}
+
+/// Classify one function. `theta_len` is the function's bound
+/// parameter count; the canonical rewrite allocates constant slots
+/// after `max(theta_len, program.n_params)` so slots the program reads
+/// as zero padding today still read zero padding afterwards.
+pub(crate) fn classify(program: &Program, theta_len: usize) -> Canon {
+    let base = theta_len.max(program.n_params);
+    let n_consts =
+        program.instrs().iter().filter(|i| i.op == Op::CONST).count();
+    let verbatim = base + n_consts > MAX_PARAM;
+    let shape = program
+        .instrs()
+        .iter()
+        .map(|i| {
+            let farg = if !verbatim && i.op == Op::CONST {
+                0
+            } else {
+                i.farg.to_bits()
+            };
+            (i.op.code(), i.iarg, farg)
+        })
+        .collect();
+    Canon {
+        key: ClassKey { verbatim, base, shape },
+        base,
+        n_consts: if verbatim { 0 } else { n_consts },
+        verbatim,
+    }
+}
+
+/// Build the class's canonical program: each `CONST` occurrence `k`
+/// (in order of appearance) becomes `PARAM(base + k)`. Only called for
+/// non-verbatim classes, whose width was already checked against
+/// `MAX_PARAM`, so revalidation cannot fail (same length, same stack
+/// profile, in-range indices).
+pub(crate) fn canonical_program(program: &Program, base: usize) -> Program {
+    let mut k = 0usize;
+    let instrs: Vec<Instr> = program
+        .instrs()
+        .iter()
+        .map(|i| {
+            if i.op == Op::CONST {
+                let slot = base + k;
+                k += 1;
+                Instr::param(slot)
+            } else {
+                *i
+            }
+        })
+        .collect();
+    Program::new(instrs)
+        .expect("CONST->PARAM rewrite preserves program validity")
+}
+
+/// Write one function's extended theta row: the original theta, zero
+/// padding up to `base`, then each hoisted constant as f64 (exact
+/// round trip back to f32 at launch build). `out` must be at least
+/// `canon.theta_width()` wide; trailing slots are left untouched (the
+/// caller's columns are zero-initialized, matching the launch
+/// builder's own zero fill).
+pub(crate) fn extended_theta_into(
+    out: &mut [f64],
+    canon: &Canon,
+    program: &Program,
+    theta: &[f64],
+) {
+    out[..theta.len()].copy_from_slice(theta);
+    if !canon.verbatim {
+        let mut k = 0usize;
+        for i in program.instrs() {
+            if i.op == Op::CONST {
+                out[canon.base + k] = i.farg as f64;
+                k += 1;
+            }
+        }
+    }
+}
+
+/// Interning table: class key → dense class index.
+#[derive(Default)]
+pub(crate) struct ClassTable {
+    map: HashMap<ClassKey, u32>,
+}
+
+impl ClassTable {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Intern a key; `Ok(existing)` or `Err(new_index)` when the
+    /// caller must materialize the class program for `new_index`.
+    pub fn intern(&mut self, key: ClassKey) -> Result<u32, u32> {
+        let next = self.map.len() as u32;
+        match self.map.entry(key) {
+            std::collections::hash_map::Entry::Occupied(e) => Ok(*e.get()),
+            std::collections::hash_map::Entry::Vacant(v) => {
+                v.insert(next);
+                Err(next)
+            }
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::expr::Expr;
+
+    fn prog(src: &str) -> Program {
+        Expr::parse(src).unwrap().compile().unwrap()
+    }
+
+    #[test]
+    fn constants_fold_into_one_class() {
+        // same shape, different constants: one canonical class
+        let a = classify(&prog("2.5*x1 + 1.0"), 0);
+        let b = classify(&prog("7.0*x1 + 3.5"), 0);
+        assert!(!a.verbatim);
+        assert_eq!(a.key, b.key);
+        assert_eq!(a.base, 0);
+        // structurally different programs stay apart
+        let c = classify(&prog("2.5*x2 + 1.0"), 0);
+        assert_ne!(a.key, c.key);
+        let d = classify(&prog("2.5*x1 - 1.0"), 0);
+        assert_ne!(a.key, d.key);
+    }
+
+    #[test]
+    fn theta_width_separates_classes() {
+        // same program shape bound with different theta widths must
+        // not share a class: the rewritten PARAM indices differ
+        let a = classify(&prog("p0*x1 + 2.0"), 1);
+        let b = classify(&prog("p0*x1 + 2.0"), 3);
+        assert_ne!(a.key, b.key);
+        assert_eq!(a.base, 1);
+        assert_eq!(b.base, 3);
+    }
+
+    #[test]
+    fn canonical_program_rewrites_consts_in_order() {
+        let p = prog("2.0*x1 + 3.0");
+        let canon = classify(&p, 1); // one real param slot reserved
+        assert_eq!(canon.n_consts, 2);
+        let cp = canonical_program(&p, canon.base);
+        assert_eq!(cp.len(), p.len());
+        assert!(cp.instrs().iter().all(|i| i.op != Op::CONST));
+        let params: Vec<i32> = cp
+            .instrs()
+            .iter()
+            .filter(|i| i.op == Op::PARAM)
+            .map(|i| i.iarg)
+            .collect();
+        assert_eq!(params, vec![1, 2]);
+
+        let mut theta = vec![0.0f64; canon.theta_width()];
+        extended_theta_into(&mut theta, &canon, &p, &[9.0]);
+        assert_eq!(theta, vec![9.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn overflow_falls_back_to_verbatim() {
+        // 17 constants summed: base 0 + 17 consts > MAX_PARAM=16
+        let many = (0..17)
+            .map(|i| format!("{}.5", i))
+            .collect::<Vec<_>>()
+            .join("+");
+        let p = prog(&many);
+        let canon = classify(&p, 0);
+        assert!(canon.verbatim);
+        assert_eq!(canon.n_consts, 0);
+        assert_eq!(canon.theta_width(), 0);
+        // byte-identical programs still share the verbatim class
+        let again = classify(&prog(&many), 0);
+        assert_eq!(canon.key, again.key);
+        // a one-constant difference splits verbatim classes
+        let other = many.replace("16.5", "16.25");
+        assert_ne!(canon.key, classify(&prog(&other), 0).key);
+    }
+
+    #[test]
+    fn interning_assigns_dense_indices() {
+        let mut t = ClassTable::new();
+        let a = classify(&prog("x1+1.0"), 0);
+        let b = classify(&prog("x1+2.0"), 0);
+        let c = classify(&prog("x1*x1"), 0);
+        assert_eq!(t.intern(a.key.clone()), Err(0));
+        assert_eq!(t.intern(b.key), Ok(0)); // folded into a's class
+        assert_eq!(t.intern(c.key), Err(1));
+        assert_eq!(t.len(), 2);
+    }
+}

@@ -1,0 +1,33 @@
+//! Million-integrand batch subsystem: columnar jobs, hash-consed
+//! program dedup, streaming reduction.
+//!
+//! The boxed multifunction path ([`crate::integrator::multifunctions`])
+//! is comfortable at the paper's 10³ scale but carries three O(batch)
+//! costs that wall it off from 10⁵–10⁶ functions: per-function boxed
+//! jobs (a dozen heap allocations each), per-function program rows
+//! (defeating every program-keyed cache below), and
+//! materialize-everything execution (all launch inputs built up front,
+//! all outputs collected before reduction). This module removes all
+//! three without changing a single sampled bit:
+//!
+//! * [`dedup`] — hash-consed program identity *modulo constants*: a
+//!   parameter scan's 10⁶ programs collapse to one canonical program
+//!   whose constants ride the per-function theta column, so plan/fused
+//!   LRUs and registry ledgers see **one** program;
+//! * [`columnar`] — [`BatchJobs`]/[`BatchResults`], struct-of-arrays
+//!   batches with iterator views yielding ordinary
+//!   [`crate::integrator::spec::Estimate`]s;
+//! * [`stream`] — bounded-watermark submission with as-they-land
+//!   [`crate::cluster::fold_tagged`] reduction: peak memory is
+//!   O(columns + watermark), not O(batch).
+//!
+//! The boxed path stays untouched as the bit-exact oracle at small n;
+//! `tests/batch_test.rs` holds the two paths bitwise equal across
+//! execution tiers, engine counts and watermarks.
+
+pub mod columnar;
+pub(crate) mod dedup;
+pub mod stream;
+
+pub use self::columnar::{BatchJobs, BatchResults};
+pub use self::stream::{integrate, BatchConfig, DEFAULT_WATERMARK};

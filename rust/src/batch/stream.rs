@@ -1,0 +1,154 @@
+//! Streaming execution of a columnar batch: bounded-window submission
+//! with as-they-land reduction.
+//!
+//! The boxed path materializes **all** launch inputs up front
+//! (`build_tasks`) and collects **all** launch outputs before reducing
+//! — both O(batch) in memory, which is exactly what breaks at 10⁶
+//! functions. This driver walks the identical global task sequence
+//! (function blocks outer, sample chunks inner) through a
+//! double-buffered window loop: submit window *k+1*, then drain window
+//! *k* result-by-result through [`fold_tagged`] into the per-function
+//! [`MomentSum`] column. At most two windows of launch tasks exist at
+//! any moment, so peak memory is
+//! `O(columns + watermark · launch_bytes)` — independent of the batch
+//! size — while the device never idles between windows.
+//!
+//! Bit-identity with the boxed oracle holds because nothing about the
+//! arithmetic changed, only its residency: tasks carry the same Philox
+//! `(stream, base, trial)` addressing in the same global order, engine
+//! and cluster handles both deliver results in task order (shards are
+//! contiguous and drained ascending), and folding one output at a time
+//! performs the per-slot merges in the very sequence `reduce_tagged`
+//! would. `tests/batch_test.rs` asserts estimates and merged moments
+//! bitwise against the boxed path across tiers, engine counts and
+//! watermarks.
+
+use anyhow::Result;
+
+use crate::batch::columnar::{BatchJobs, BatchResults};
+use crate::cluster::{fold_tagged, ExecHandle, LaunchExec};
+use crate::engine::LaunchTask;
+use crate::integrator::multifunctions::split_seed;
+use crate::runtime::launch::RngCtr;
+use crate::runtime::registry::ExeKind;
+use crate::stats::MomentSum;
+
+/// Default in-flight watermark: launch tasks per submission window.
+/// Two windows ride the engine at once (one draining, one queued), so
+/// the default bounds in-flight launch memory to 64 launches' worth of
+/// inputs/outputs regardless of batch size.
+pub const DEFAULT_WATERMARK: usize = 32;
+
+/// Options for a streaming batch run — the one-shot subset of
+/// [`crate::integrator::multifunctions::MultiConfig`] plus the
+/// watermark. (Adaptive targets refine per-function sample counts and
+/// are a boxed-path feature; a parameter scan wants uniform budgets.)
+#[derive(Debug, Clone)]
+pub struct BatchConfig {
+    /// Samples per function (rounded up to whole launches).
+    pub samples_per_fn: usize,
+    pub seed: u64,
+    /// Independent-repeat id.
+    pub trial: u32,
+    /// First Philox stream id; function i uses `stream_base + i`.
+    pub stream_base: u32,
+    /// Per-window retry budget on the engine.
+    pub max_retries: u32,
+    /// Force a specific executable (default: best fit by dims+samples).
+    pub exe: Option<String>,
+    /// Max launch tasks per submission window (≥ 1); at most two
+    /// windows are in flight. Any value yields bit-identical results —
+    /// this knob trades peak memory against submission overhead.
+    pub watermark: usize,
+}
+
+impl Default for BatchConfig {
+    fn default() -> Self {
+        BatchConfig {
+            samples_per_fn: 1 << 20,
+            seed: 2021,
+            trial: 0,
+            stream_base: 0,
+            max_retries: 3,
+            exe: None,
+            watermark: DEFAULT_WATERMARK,
+        }
+    }
+}
+
+/// Integrate a columnar batch through an engine or cluster with
+/// streaming reduction; returns columnar results (one estimate row per
+/// function, in order) bit-identical to the boxed
+/// [`crate::integrator::multifunctions::integrate`] on the same jobs.
+pub fn integrate<X: LaunchExec + ?Sized>(
+    exec: &X,
+    jobs: &BatchJobs,
+    cfg: &BatchConfig,
+) -> Result<BatchResults> {
+    if jobs.is_empty() {
+        return Ok(BatchResults::from_moments(Vec::new(), jobs));
+    }
+    let reg = exec.registry();
+    let exe = match &cfg.exe {
+        Some(name) => reg.get(name)?,
+        None => reg.pick(ExeKind::VmMulti, cfg.samples_per_fn, jobs.dims())?,
+    };
+    let n_chunks = cfg.samples_per_fn.div_ceil(exe.samples).max(1);
+    let n_blocks = jobs.len().div_ceil(exe.n_fns);
+    let total = n_blocks * n_chunks;
+    let watermark = cfg.watermark.max(1);
+
+    // one ledger line per batch run: how many programs the caches
+    // actually see vs how many the dedup folded away
+    let (unique, folded) = (jobs.n_classes() as u64, jobs.n_folded() as u64);
+    reg.note_dedup(unique, folded);
+    exec.metrics().record_dedup_events(unique, folded);
+
+    // Global task index t enumerates the boxed path's exact sequence:
+    // block b = t / n_chunks (outer), chunk c = t % n_chunks (inner).
+    let window = |t0: usize, t1: usize| -> Result<Vec<LaunchTask>> {
+        (t0..t1)
+            .map(|t| {
+                let (b, c) = (t / n_chunks, t % n_chunks);
+                let rng = RngCtr {
+                    seed: split_seed(cfg.seed),
+                    base: (c * exe.samples) as u32,
+                    trial: cfg.trial,
+                };
+                Ok(LaunchTask {
+                    exe: exe.name.clone(),
+                    tag: b as u64,
+                    inputs: jobs.block_inputs(
+                        exe,
+                        rng,
+                        b * exe.n_fns,
+                        cfg.stream_base,
+                    )?,
+                })
+            })
+            .collect()
+    };
+
+    let mut moments = vec![MomentSum::new(); jobs.len()];
+    let mut draining: Option<ExecHandle> = None;
+    let mut t = 0usize;
+    while t < total || draining.is_some() {
+        // keep the next window queued before draining the current one,
+        // so workers never starve at a window boundary
+        let next = if t < total {
+            let hi = (t + watermark).min(total);
+            let tasks = window(t, hi)?;
+            t = hi;
+            Some(exec.submit_launches(tasks, cfg.max_retries)?)
+        } else {
+            None
+        };
+        if let Some(h) = draining.take() {
+            h.wait_each(&mut |out| {
+                fold_tagged(&mut moments, &out, exe.n_fns, exe.samples as u64)
+            })?;
+        }
+        draining = next;
+    }
+    Ok(BatchResults::from_moments(moments, jobs))
+}

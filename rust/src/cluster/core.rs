@@ -379,50 +379,12 @@ where
         let mut results: Vec<Option<B::Out>> =
             (0..n).map(|_| None).collect();
         for s in self.shards.iter_mut() {
-            let mut handle =
-                s.handle.take().expect("unawaited shard has a handle");
-            let outs = loop {
-                match handle.wait() {
-                    Ok(outs) => break outs,
-                    Err(err) => {
-                        let shared = self.shared.upgrade().ok_or_else(
-                            || {
-                                anyhow!(
-                                    "cluster dropped with shards in flight"
-                                )
-                            },
-                        )?;
-                        // node alive ⇒ the job itself failed (task
-                        // error past its retry budget): not a placement
-                        // problem, so don't burn the other nodes on it
-                        if !shared.slots[s.node].node.is_dead() {
-                            return Err(err.context(format!(
-                                "shard {:?} failed on live engine {}",
-                                s.range, s.node
-                            )));
-                        }
-                        shared.mark_dead(s.node);
-                        shared.metrics.failure();
-                        let (node, h) = shared
-                            .submit_to_alive(
-                                &self.tasks[s.range.clone()],
-                                s.node + 1,
-                                self.max_retries,
-                            )
-                            .map_err(|e| {
-                                e.context(format!(
-                                    "no live engines left to requeue \
-                                     shard {:?} (engine {} failed: \
-                                     {err})",
-                                    s.range, s.node
-                                ))
-                            })?;
-                        shared.metrics.retry();
-                        s.node = node;
-                        handle = h;
-                    }
-                }
-            };
+            let outs = Self::resolve_shard(
+                &self.shared,
+                &self.tasks,
+                self.max_retries,
+                s,
+            )?;
             for (slot, out) in
                 results[s.range.clone()].iter_mut().zip(outs)
             {
@@ -433,6 +395,86 @@ where
             .into_iter()
             .map(|r| r.expect("every shard covers its range"))
             .collect())
+    }
+
+    /// Stream results to `sink` **in task order** as shards complete,
+    /// without accumulating the full result vector: each shard's
+    /// outputs are flushed (and freed) before the next shard is
+    /// awaited, so peak memory is O(largest shard), not O(batch).
+    /// Shard ranges are contiguous and ascending
+    /// ([`ShardPlan::contiguous`]), so flushing shards in order yields
+    /// exactly the task order `wait()` returns — the fold is
+    /// bit-identical. Dead-node requeue behaves exactly as in
+    /// [`ClusterHandle::wait`]; on error the caller should discard its
+    /// partial fold.
+    pub fn wait_each(
+        mut self,
+        sink: &mut dyn FnMut(B::Out),
+    ) -> Result<()> {
+        let mut shards = std::mem::take(&mut self.shards);
+        for s in shards.iter_mut() {
+            let outs = Self::resolve_shard(
+                &self.shared,
+                &self.tasks,
+                self.max_retries,
+                s,
+            )?;
+            for out in outs {
+                sink(out);
+            }
+        }
+        Ok(())
+    }
+
+    /// Await one shard, requeueing it across surviving nodes until it
+    /// lands or no node is left (the shared fault policy of `wait` /
+    /// `wait_each`; see [`ClusterHandle::wait`] for the rationale).
+    fn resolve_shard(
+        shared: &Weak<ClusterShared<B>>,
+        tasks: &[B::Task],
+        max_retries: u32,
+        s: &mut ShardState<B>,
+    ) -> Result<Vec<B::Out>> {
+        let mut handle =
+            s.handle.take().expect("unawaited shard has a handle");
+        loop {
+            match handle.wait() {
+                Ok(outs) => return Ok(outs),
+                Err(err) => {
+                    let shared = shared.upgrade().ok_or_else(|| {
+                        anyhow!("cluster dropped with shards in flight")
+                    })?;
+                    // node alive ⇒ the job itself failed (task
+                    // error past its retry budget): not a placement
+                    // problem, so don't burn the other nodes on it
+                    if !shared.slots[s.node].node.is_dead() {
+                        return Err(err.context(format!(
+                            "shard {:?} failed on live engine {}",
+                            s.range, s.node
+                        )));
+                    }
+                    shared.mark_dead(s.node);
+                    shared.metrics.failure();
+                    let (node, h) = shared
+                        .submit_to_alive(
+                            &tasks[s.range.clone()],
+                            s.node + 1,
+                            max_retries,
+                        )
+                        .map_err(|e| {
+                            e.context(format!(
+                                "no live engines left to requeue \
+                                 shard {:?} (engine {} failed: \
+                                 {err})",
+                                s.range, s.node
+                            ))
+                        })?;
+                    shared.metrics.retry();
+                    s.node = node;
+                    handle = h;
+                }
+            }
+        }
     }
 
     /// Non-blocking completion probe across all shards.

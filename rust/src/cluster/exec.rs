@@ -17,6 +17,7 @@
 use anyhow::Result;
 
 use crate::cluster::core::{ClusterHandle, DeviceCluster};
+use crate::coordinator::progress::Metrics;
 use crate::engine::{DeviceBackend, DeviceEngine, DeviceHandle, LaunchTask, TaggedOutput};
 use crate::runtime::registry::Registry;
 
@@ -33,6 +34,22 @@ impl ExecHandle {
         match self {
             ExecHandle::Engine(h) => h.wait(),
             ExecHandle::Cluster(h) => h.wait(),
+        }
+    }
+
+    /// Stream outputs to `sink` **in task order** as they land,
+    /// without accumulating the full `Vec<TaggedOutput>`: the engine
+    /// path flushes per task, the cluster path per shard. The fold
+    /// order is bit-identical to `wait()` + iterating the vec; peak
+    /// memory is O(in-flight), not O(batch). This is what the batch
+    /// subsystem's streaming reduction drains through.
+    pub fn wait_each(
+        self,
+        sink: &mut dyn FnMut(TaggedOutput),
+    ) -> Result<()> {
+        match self {
+            ExecHandle::Engine(h) => h.wait_each(sink),
+            ExecHandle::Cluster(h) => h.wait_each(sink),
         }
     }
 
@@ -63,6 +80,12 @@ pub trait LaunchExec {
     /// The artifact registry launches are resolved against.
     fn registry(&self) -> &Registry;
 
+    /// The execution metrics sink for this topology (the engine's own
+    /// counters, or the cluster-level sink for a cluster). Lets layers
+    /// above record per-run events — e.g. the batch subsystem's dedup
+    /// fold counts — without knowing the topology.
+    fn metrics(&self) -> &Metrics;
+
     /// Enqueue `tasks`; returns immediately with a waitable handle.
     fn submit_launches(
         &self,
@@ -74,6 +97,10 @@ pub trait LaunchExec {
 impl LaunchExec for DeviceEngine {
     fn registry(&self) -> &Registry {
         self.backend().registry()
+    }
+
+    fn metrics(&self) -> &Metrics {
+        self.metrics()
     }
 
     fn submit_launches(
@@ -91,6 +118,10 @@ impl LaunchExec for DeviceCluster {
         // the stored pool registry (a pure-remote cluster has no
         // local engine to borrow one from)
         self.registry()
+    }
+
+    fn metrics(&self) -> &Metrics {
+        self.metrics()
     }
 
     fn submit_launches(

@@ -54,7 +54,7 @@ pub use self::chaos::{Fault, FaultPlan as WireFaultPlan};
 pub use self::core::{Cluster, ClusterHandle, DeviceCluster};
 pub use self::exec::{ExecHandle, LaunchExec};
 pub use self::plan::ShardPlan;
-pub use self::reduce::reduce_tagged;
+pub use self::reduce::{fold_tagged, reduce_tagged};
 pub use self::remote::{
     serve_worker, serve_worker_with_digest, HandshakeError, RemoteConfig,
     RemoteEngine, RemoteHandle, WorkerServer,

@@ -32,20 +32,35 @@ pub fn reduce_tagged(
 ) -> Vec<MomentSum> {
     let mut moments = vec![MomentSum::new(); n_slots];
     for out in outs {
-        let start = out.tag as usize * n_fns;
-        for k in 0..n_fns {
-            let slot = start + k;
-            if slot >= n_slots {
-                break;
-            }
-            moments[slot].merge(&MomentSum::from_device(
-                samples_per_row,
-                out.data[k * 2],
-                out.data[k * 2 + 1],
-            ));
-        }
+        fold_tagged(&mut moments, &out, n_fns, samples_per_row);
     }
     moments
+}
+
+/// Fold **one** tagged output into the slot accumulators — the
+/// streaming unit of [`reduce_tagged`]. Calling this per output in
+/// task order is bit-identical to reducing the collected vector (the
+/// per-slot merge sequence is the same), which is how the batch
+/// subsystem's streaming reduction flushes results as they land
+/// instead of accumulating O(batch) outputs first.
+pub fn fold_tagged(
+    moments: &mut [MomentSum],
+    out: &TaggedOutput,
+    n_fns: usize,
+    samples_per_row: u64,
+) {
+    let start = out.tag as usize * n_fns;
+    for k in 0..n_fns {
+        let slot = start + k;
+        if slot >= moments.len() {
+            break;
+        }
+        moments[slot].merge(&MomentSum::from_device(
+            samples_per_row,
+            out.data[k * 2],
+            out.data[k * 2 + 1],
+        ));
+    }
 }
 
 #[cfg(test)]

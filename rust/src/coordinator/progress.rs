@@ -23,6 +23,13 @@ pub struct Metrics {
     pub fused_hits: AtomicU64,
     /// Fused-plan cache misses (row decoded + lowered fused).
     pub fused_misses: AtomicU64,
+    /// Canonical program classes executed by the batch subsystem's
+    /// dedup path (one per structural equivalence class per run).
+    pub dedup_unique: AtomicU64,
+    /// Functions the batch dedup folded into an already-counted class
+    /// (batch size minus classes, summed across runs) — each is one
+    /// program the plan/fused caches and the registry never saw.
+    pub dedup_folded: AtomicU64,
     /// Remote engines re-established after their host died (each is
     /// one successful reconnect + re-handshake by the supervisor).
     pub reconnects: AtomicU64,
@@ -101,6 +108,28 @@ impl Metrics {
         self.fused_misses.load(Ordering::Relaxed)
     }
 
+    /// Fold one batch run's dedup outcome in: `unique` canonical
+    /// classes actually executed, `folded` functions that shared one
+    /// of them (recorded by the batch subsystem per run).
+    pub fn record_dedup_events(&self, unique: u64, folded: u64) {
+        if unique > 0 {
+            self.dedup_unique.fetch_add(unique, Ordering::Relaxed);
+        }
+        if folded > 0 {
+            self.dedup_folded.fetch_add(folded, Ordering::Relaxed);
+        }
+    }
+
+    /// Canonical program classes executed via the batch dedup path.
+    pub fn dedup_unique(&self) -> u64 {
+        self.dedup_unique.load(Ordering::Relaxed)
+    }
+
+    /// Functions folded away by batch dedup (never compiled/cached).
+    pub fn dedup_folded(&self) -> u64 {
+        self.dedup_folded.load(Ordering::Relaxed)
+    }
+
     /// Count one successful remote-engine reconnect.
     pub fn reconnect(&self) {
         self.reconnects.fetch_add(1, Ordering::Relaxed);
@@ -176,6 +205,7 @@ impl Metrics {
         format!(
             "tasks={} retries={} failures={} cancelled={} \
              plan_hits={} plan_misses={} fused_hits={} fused_misses={} \
+             dedup_unique={} dedup_folded={} \
              reconnects={} reconnect_failures={} utilization={:.0}%",
             self.done(),
             self.retried(),
@@ -185,6 +215,8 @@ impl Metrics {
             self.plan_misses(),
             self.fused_hits(),
             self.fused_misses(),
+            self.dedup_unique(),
+            self.dedup_folded(),
             self.reconnects(),
             self.reconnect_failures(),
             self.utilization() * 100.0
@@ -219,6 +251,11 @@ mod tests {
         assert_eq!(m.fused_hits(), 4);
         assert_eq!(m.fused_misses(), 2);
         assert!(m.summary().contains("fused_hits=4 fused_misses=2"));
+        m.record_dedup_events(2, 98);
+        m.record_dedup_events(1, 0);
+        assert_eq!(m.dedup_unique(), 3);
+        assert_eq!(m.dedup_folded(), 98);
+        assert!(m.summary().contains("dedup_unique=3 dedup_folded=98"));
         m.reconnect();
         m.reconnect_failure();
         m.reconnect_failure();

@@ -182,6 +182,55 @@ impl<T, R> JobState<T, R> {
         }
     }
 
+    /// Drain results **incrementally in task order**: each result is
+    /// handed to `f` as soon as it (and every earlier task) has
+    /// finished, instead of accumulating the whole `Vec<R>` first.
+    /// This is the engine half of the batch subsystem's streaming
+    /// reduction — peak memory is O(tasks-in-flight), not O(job).
+    ///
+    /// The sink runs outside the job lock (ready results are taken in
+    /// batches), so a slow sink never blocks the workers. Results
+    /// already sunk are not returned again on error: a fatal failure
+    /// or cancellation surfaces as `Err` after whatever ordered prefix
+    /// was delivered, and the caller discards its partial fold.
+    pub(crate) fn for_each(
+        &self,
+        f: &mut dyn FnMut(R),
+    ) -> Result<()> {
+        let n = self.tasks.len();
+        let mut next = 0usize;
+        let mut batch = Vec::new();
+        let mut inner = lock_ok(&self.inner);
+        loop {
+            while next < n && inner.results[next].is_some() {
+                batch.push(
+                    inner.results[next]
+                        .take()
+                        .expect("checked is_some above"),
+                );
+                next += 1;
+            }
+            if !batch.is_empty() {
+                drop(inner);
+                for r in batch.drain(..) {
+                    f(r);
+                }
+                inner = lock_ok(&self.inner);
+                continue; // more may have landed while sinking
+            }
+            if next == n {
+                return Ok(());
+            }
+            if let Some(msg) = &inner.fatal {
+                return Err(Error::msg(msg.clone()));
+            }
+            if self.is_cancelled() {
+                return Err(anyhow!("job was cancelled"));
+            }
+            inner = wait_ok(&self.done_cv, inner);
+        }
+    }
+
     /// Mark the job failed (first failure wins) and wake waiters.
     fn fail(&self, msg: String) {
         let mut inner = lock_ok(&self.inner);
@@ -381,10 +430,12 @@ pub(crate) fn worker_loop<B: Backend>(
                     inner.results[idx] = Some(out);
                     inner.remaining -= 1;
                     metrics.task_done();
-                    if inner.remaining == 0 {
-                        drop(inner);
-                        job.done_cv.notify_all();
-                    }
+                    drop(inner);
+                    // notify per result (not just on the last one) so
+                    // incremental drains (`for_each`) wake as each task
+                    // lands; `wait()` just rechecks `remaining` and
+                    // sleeps again, which is cheap on an uncontended cv
+                    job.done_cv.notify_all();
                 }
             }
             Ok(Err(e)) => {
@@ -464,6 +515,19 @@ impl<T, R> JobHandle<T, R> {
     /// Block until the job finishes; returns results in task order.
     pub fn wait(self) -> Result<Vec<R>> {
         self.job.wait()
+    }
+
+    /// Stream results to `sink` **incrementally in task order** as they
+    /// complete, without accumulating a `Vec<R>`. Bit-identical fold
+    /// order to `wait()` + iterating the returned vec; peak memory is
+    /// O(tasks-in-flight). On failure or cancellation the error is
+    /// returned after whatever ordered prefix was already sunk — the
+    /// caller should discard its partial fold.
+    pub fn wait_each(
+        self,
+        sink: &mut dyn FnMut(R),
+    ) -> Result<()> {
+        self.job.for_each(sink)
     }
 
     /// Non-blocking completion probe (done, failed, or cancelled).

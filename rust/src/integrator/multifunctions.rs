@@ -25,7 +25,7 @@
 use anyhow::Result;
 
 use crate::adaptive::Allocation;
-use crate::cluster::{reduce_tagged, ExecHandle, LaunchExec};
+use crate::cluster::{fold_tagged, ExecHandle, LaunchExec};
 use crate::engine::LaunchTask;
 use crate::integrator::spec::{Estimate, IntegralJob};
 use crate::runtime::launch::{vm_multi_inputs, RngCtr, VmFn};
@@ -113,19 +113,20 @@ pub struct MultiHandle {
 }
 
 impl MultiHandle {
-    /// Block until every launch landed; the centralized reducer
-    /// ([`reduce_tagged`]) merges `(Σf, Σf²)` per function across
-    /// chunks — and across cluster shards — into estimates.
+    /// Block until every launch landed; results are folded into the
+    /// per-function `(Σf, Σf²)` accumulators **as they complete**
+    /// (engine and cluster handles deliver them in task order, so the
+    /// streamed fold is bit-identical to collecting everything and
+    /// reducing — see [`fold_tagged`]) instead of buffering O(launches)
+    /// outputs first.
     pub fn wait(self) -> Result<Vec<Estimate>> {
-        let moments = match self.inner {
-            Some(handle) => reduce_tagged(
-                handle.wait()?,
-                self.n_fns,
-                self.samples as u64,
-                self.volumes.len(),
-            ),
-            None => vec![MomentSum::new(); self.volumes.len()],
-        };
+        let mut moments = vec![MomentSum::new(); self.volumes.len()];
+        if let Some(handle) = self.inner {
+            let (n_fns, samples) = (self.n_fns, self.samples as u64);
+            handle.wait_each(&mut |out| {
+                fold_tagged(&mut moments, &out, n_fns, samples)
+            })?;
+        }
         Ok(moments
             .iter()
             .zip(&self.volumes)

@@ -101,6 +101,7 @@
 
 pub mod adaptive;
 pub mod analytic;
+pub mod batch;
 pub mod cluster;
 pub mod config;
 pub mod coordinator;
@@ -118,6 +119,7 @@ pub mod vm;
 /// Convenience re-exports for the common workflow.
 pub mod prelude {
     pub use crate::adaptive::Allocation;
+    pub use crate::batch::{BatchConfig, BatchJobs, BatchResults};
     pub use crate::cluster::{
         Cluster, ClusterHandle, DeviceCluster, ExecHandle, LaunchExec,
         ShardPlan,

@@ -161,6 +161,10 @@ results; /v1/metrics and /v1/healthz report counters and topology.
   --max-body N      request-body bound in bytes [1048576]
   --read-timeout-ms N  idle-client read deadline, answered 408
                     (0 disables the slowloris guard) [10000]
+  --max-recall N    recall bound in estimates: GET /v1/jobs/ID answers
+                    413 when the stored result is larger [1048576]
+  --journal-keep N  finished jobs kept when the journal compacts on
+                    restart (unfinished jobs always replay) [256]
 
 normal-specific: --divisions K --depth D --sigma-mult S
 fig1-specific:   --n N (series length)
@@ -405,6 +409,17 @@ fn cmd_info(flags: &Flags) -> Result<()> {
         "execution tier: {tier} (select with --tier or ZMC_EMU_TIER; \
          lane width {})",
         zmc::vm::LANES
+    );
+    println!(
+        "ledgers: compiles={} plan_lowers={} plan_hits={} \
+         fused_lowers={} fused_hits={} dedup_unique={} dedup_folded={}",
+        reg.compile_count(),
+        reg.plan_lower_count(),
+        reg.plan_hit_count(),
+        reg.fused_lower_count(),
+        reg.fused_hit_count(),
+        reg.dedup_unique_count(),
+        reg.dedup_folded_count()
     );
     for e in reg.iter() {
         println!(
@@ -699,6 +714,9 @@ fn cmd_serve(flags: &Flags) -> Result<()> {
             "read-timeout-ms",
             defaults.read_timeout.as_millis() as u64,
         )?),
+        max_recall: flags.usize("max-recall", defaults.max_recall)?,
+        journal_keep: flags
+            .usize("journal-keep", defaults.journal_keep)?,
     };
     let journaled = cfg.state_dir.is_some();
     let server = Server::bind(cfg)?;

@@ -89,6 +89,11 @@ pub struct Registry {
     /// workers, and fused-cache hits.
     fused_lowers: AtomicU64,
     fused_hits: AtomicU64,
+    /// Batch-dedup ledger: canonical program classes the batch
+    /// subsystem actually executed, and functions it folded into an
+    /// existing class (programs the caches above never had to see).
+    dedup_unique: AtomicU64,
+    dedup_folded: AtomicU64,
 }
 
 impl Registry {
@@ -131,6 +136,8 @@ impl Registry {
             plan_hits: AtomicU64::new(0),
             fused_lowers: AtomicU64::new(0),
             fused_hits: AtomicU64::new(0),
+            dedup_unique: AtomicU64::new(0),
+            dedup_folded: AtomicU64::new(0),
         })
     }
 
@@ -155,6 +162,8 @@ impl Registry {
             plan_hits: AtomicU64::new(0),
             fused_lowers: AtomicU64::new(0),
             fused_hits: AtomicU64::new(0),
+            dedup_unique: AtomicU64::new(0),
+            dedup_folded: AtomicU64::new(0),
         })
     }
 
@@ -280,6 +289,33 @@ impl Registry {
         self.fused_hits.load(Ordering::Relaxed)
     }
 
+    /// Fold one batch run's dedup outcome into the ledger: `unique`
+    /// canonical classes executed, `folded` functions that shared one
+    /// (recorded by `crate::batch` per columnar run).
+    pub fn note_dedup(&self, unique: u64, folded: u64) {
+        if unique > 0 {
+            self.dedup_unique.fetch_add(unique, Ordering::Relaxed);
+        }
+        if folded > 0 {
+            self.dedup_folded.fetch_add(folded, Ordering::Relaxed);
+        }
+    }
+
+    /// Canonical program classes executed via the batch dedup path
+    /// since this registry was loaded — the dedup twin of
+    /// [`Registry::plan_lower_count`]: with a parameter-scan batch this
+    /// stays at the number of distinct program *shapes*, not functions.
+    pub fn dedup_unique_count(&self) -> u64 {
+        self.dedup_unique.load(Ordering::Relaxed)
+    }
+
+    /// Functions folded into an already-counted canonical class (their
+    /// programs never reached the plan/fused caches or the compile
+    /// ledger).
+    pub fn dedup_folded_count(&self) -> u64 {
+        self.dedup_folded.load(Ordering::Relaxed)
+    }
+
     pub fn get(&self, name: &str) -> Result<&ExeSpec> {
         self.exes
             .get(name)
@@ -348,7 +384,12 @@ fn tensor(name: &str, dtype: DType, shape: &[usize]) -> TensorSpec {
     TensorSpec { name: name.into(), dtype, shape: shape.to_vec() }
 }
 
-fn vm_multi_spec(
+/// Synthetic `vm_multi` spec (emulator-executable; no HLO on disk).
+/// Public so benches/tests can register custom geometries — e.g. the
+/// small-sample, wide-function shapes the batch-throughput bench uses —
+/// via [`Registry::from_specs`] without hand-writing the tensor
+/// signature that `check_inputs` validates against.
+pub fn vm_multi_spec(
     name: &str,
     n_fns: usize,
     samples: usize,

@@ -214,6 +214,20 @@ impl<W: Write> ChunkedWriter<W> {
         self.w.flush()
     }
 
+    /// A raw body fragment as one chunk — no newline appended. The
+    /// streaming recall path writes one large JSON document through
+    /// here in bounded pieces, so the server never materializes the
+    /// full body (the OOM guard for million-estimate results).
+    pub fn write_part(&mut self, part: &str) -> std::io::Result<()> {
+        if part.is_empty() {
+            return Ok(()); // an empty chunk would terminate the stream
+        }
+        write!(self.w, "{:x}\r\n", part.len())?;
+        self.w.write_all(part.as_bytes())?;
+        self.w.write_all(b"\r\n")?;
+        self.w.flush()
+    }
+
     /// Terminal zero chunk.
     pub fn finish(mut self) -> std::io::Result<()> {
         self.w.write_all(b"0\r\n\r\n")?;
@@ -284,5 +298,20 @@ mod tests {
         assert!(text.contains("transfer-encoding: chunked\r\n"));
         // "[1,2]\n" is 6 bytes -> chunk header "6"
         assert!(text.ends_with("\r\n6\r\n[1,2]\n\r\n0\r\n\r\n"), "{text}");
+    }
+
+    #[test]
+    fn chunked_parts_concatenate_without_newlines() {
+        let mut out = Vec::new();
+        let mut cw = ChunkedWriter::start(&mut out).unwrap();
+        cw.write_part("{\"a\":").unwrap();
+        cw.write_part("").unwrap(); // must NOT terminate the stream
+        cw.write_part("1}").unwrap();
+        cw.finish().unwrap();
+        let text = String::from_utf8(out).unwrap();
+        assert!(
+            text.ends_with("\r\n5\r\n{\"a\":\r\n2\r\n1}\r\n0\r\n\r\n"),
+            "{text}"
+        );
     }
 }

@@ -14,10 +14,18 @@
 //! {"v":1,"event":"submit","id":3,"config":{...job config...}}
 //! {"v":1,"event":"done","id":3,"result":{"trials":[[...]]}}
 //! {"v":1,"event":"failed","id":3,"error":{"code":"...","message":"..."}}
+//! {"v":1,"event":"seq","id":12}
 //! ```
 //!
 //! A crash can truncate the final line; [`Journal::load`] skips
 //! unparseable lines instead of refusing the whole file.
+//!
+//! Append-only means unbounded: a long-lived server rewrites the file
+//! on restart ([`Journal::compact`]) down to its unfinished jobs plus
+//! the last N finished ones. The `seq` record pins the id counter so
+//! pruned ids are never reissued, and the rewrite goes through a tmp
+//! file and an atomic rename — a crash mid-compaction leaves either
+//! the old journal or the new one, never a torn hybrid.
 
 use std::collections::BTreeMap;
 use std::fs::{File, OpenOptions};
@@ -75,17 +83,28 @@ impl Journal {
         id: u64,
         payload: (&str, &Json),
     ) -> Result<()> {
-        let mut m = BTreeMap::new();
-        m.insert("v".to_string(), Json::Num(1.0));
-        m.insert("event".to_string(), Json::Str(event.to_string()));
-        m.insert("id".to_string(), Json::Num(id as f64));
-        m.insert(payload.0.to_string(), payload.1.clone());
-        let line = format!("{}\n", Json::Obj(m));
+        let line = event_line(event, id, Some(payload));
         let mut f = self.file.lock().unwrap();
         f.write_all(line.as_bytes())?;
         f.flush()?;
         Ok(())
     }
+}
+
+/// One journal line, newline-terminated.
+fn event_line(
+    event: &str,
+    id: u64,
+    payload: Option<(&str, &Json)>,
+) -> String {
+    let mut m = BTreeMap::new();
+    m.insert("v".to_string(), Json::Num(1.0));
+    m.insert("event".to_string(), Json::Str(event.to_string()));
+    m.insert("id".to_string(), Json::Num(id as f64));
+    if let Some((k, v)) = payload {
+        m.insert(k.to_string(), v.clone());
+    }
+    format!("{}\n", Json::Obj(m))
 }
 
 /// One journaled job after replay.
@@ -168,6 +187,9 @@ impl Journal {
                                 Some(Outcome::Failed(e.clone()));
                         }
                     }
+                    // compaction's id pin: ids up to here were issued
+                    // even though their records are gone
+                    Some("seq") => max_id = max_id.max(id),
                     _ => {}
                 }
             }
@@ -176,6 +198,78 @@ impl Journal {
             jobs: jobs.into_values().collect(),
             next_id: max_id + 1,
         })
+    }
+
+    /// Rewrite the journal down to every unfinished job (those get
+    /// re-run on restart) plus the last `keep` finished ones, and
+    /// return the correspondingly pruned replay. A `seq` record pins
+    /// the id counter so pruned ids are never reissued. The rewrite is
+    /// tmp-file + atomic rename: a crash mid-compaction leaves either
+    /// the old journal or the new one on disk (a stale `.tmp` is
+    /// truncated by the next compaction and never loaded). When
+    /// nothing is over the bound the file is left untouched.
+    pub fn compact(
+        state_dir: &Path,
+        replay: Replay,
+        keep: usize,
+    ) -> Result<Replay> {
+        let path = state_dir.join(FILE_NAME);
+        let finished = replay
+            .jobs
+            .iter()
+            .filter(|job| job.outcome.is_some())
+            .count();
+        if !path.exists() || finished <= keep {
+            return Ok(replay);
+        }
+        let next_id = replay.next_id;
+        // jobs are in id order, so dropping the first (finished -
+        // keep) finished ones keeps the most recent `keep`
+        let mut drop_left = finished - keep;
+        let jobs: Vec<ReplayJob> = replay
+            .jobs
+            .into_iter()
+            .filter(|job| {
+                if job.outcome.is_some() && drop_left > 0 {
+                    drop_left -= 1;
+                    false
+                } else {
+                    true
+                }
+            })
+            .collect();
+
+        let tmp = state_dir.join(format!("{FILE_NAME}.tmp"));
+        let mut f = File::create(&tmp)
+            .with_context(|| format!("creating {}", tmp.display()))?;
+        let max_id = next_id.saturating_sub(1);
+        if max_id > 0 {
+            f.write_all(event_line("seq", max_id, None).as_bytes())?;
+        }
+        for job in &jobs {
+            f.write_all(
+                event_line("submit", job.id, Some(("config", &job.config)))
+                    .as_bytes(),
+            )?;
+            match &job.outcome {
+                Some(Outcome::Done(r)) => f.write_all(
+                    event_line("done", job.id, Some(("result", r)))
+                        .as_bytes(),
+                )?,
+                Some(Outcome::Failed(e)) => f.write_all(
+                    event_line("failed", job.id, Some(("error", e)))
+                        .as_bytes(),
+                )?,
+                None => {}
+            }
+        }
+        f.sync_all()
+            .with_context(|| format!("syncing {}", tmp.display()))?;
+        drop(f);
+        std::fs::rename(&tmp, &path).with_context(|| {
+            format!("renaming {} over {}", tmp.display(), path.display())
+        })?;
+        Ok(Replay { jobs, next_id })
     }
 }
 
@@ -216,6 +310,102 @@ mod tests {
             replay.jobs[2].config.get("seed").and_then(Json::as_i64),
             Some(7)
         );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn compaction_bounds_history_and_pins_ids() {
+        let dir = temp_dir("compact");
+        let j = Journal::open(&dir).unwrap();
+        let cfg = Json::parse(r#"{"seed":1}"#).unwrap();
+        let res = Json::parse(r#"{"trials":[]}"#).unwrap();
+        for id in 1..=10u64 {
+            j.submitted(id, &cfg).unwrap();
+            j.done(id, &res).unwrap();
+        }
+        j.submitted(11, &cfg).unwrap(); // died in flight
+        drop(j);
+
+        let replay = Journal::load(&dir).unwrap();
+        let compacted = Journal::compact(&dir, replay, 3).unwrap();
+        let ids: Vec<u64> =
+            compacted.jobs.iter().map(|job| job.id).collect();
+        // the last 3 finished jobs plus the unfinished one survive
+        assert_eq!(ids, vec![8, 9, 10, 11]);
+        assert_eq!(compacted.next_id, 12);
+
+        // the rewritten file reloads to the same state: pruned ids
+        // stay retired via the seq record
+        let reloaded = Journal::load(&dir).unwrap();
+        assert_eq!(reloaded.next_id, 12);
+        assert_eq!(
+            reloaded.jobs.iter().map(|job| job.id).collect::<Vec<_>>(),
+            ids
+        );
+        assert!(matches!(
+            reloaded.jobs[0].outcome,
+            Some(Outcome::Done(_))
+        ));
+        assert!(reloaded.jobs[3].outcome.is_none());
+
+        // under the bound: a second compaction is a no-op
+        let before = std::fs::read(dir.join(FILE_NAME)).unwrap();
+        let again = Journal::compact(&dir, reloaded, 3).unwrap();
+        assert_eq!(again.jobs.len(), 4);
+        assert_eq!(before, std::fs::read(dir.join(FILE_NAME)).unwrap());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn seq_record_pins_ids_even_when_everything_is_pruned() {
+        let dir = temp_dir("seq");
+        let j = Journal::open(&dir).unwrap();
+        let cfg = Json::parse("{}").unwrap();
+        let res = Json::parse(r#"{"trials":[]}"#).unwrap();
+        for id in 1..=5u64 {
+            j.submitted(id, &cfg).unwrap();
+            j.done(id, &res).unwrap();
+        }
+        drop(j);
+        let replay = Journal::load(&dir).unwrap();
+        let compacted = Journal::compact(&dir, replay, 0).unwrap();
+        assert!(compacted.jobs.is_empty());
+        assert_eq!(compacted.next_id, 6);
+        let reloaded = Journal::load(&dir).unwrap();
+        assert!(reloaded.jobs.is_empty());
+        assert_eq!(reloaded.next_id, 6, "ids must never be reissued");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn crash_mid_compaction_leaves_a_loadable_journal() {
+        let dir = temp_dir("crash");
+        let j = Journal::open(&dir).unwrap();
+        let cfg = Json::parse(r#"{"seed":9}"#).unwrap();
+        let res = Json::parse(r#"{"trials":[]}"#).unwrap();
+        for id in 1..=4u64 {
+            j.submitted(id, &cfg).unwrap();
+            j.done(id, &res).unwrap();
+        }
+        drop(j);
+        // simulate a crash before the rename: a torn tmp file next to
+        // an intact journal
+        let tmp = dir.join(format!("{FILE_NAME}.tmp"));
+        std::fs::write(&tmp, b"{\"v\":1,\"event\":\"seq\",\"i").unwrap();
+        // the torn tmp is never loaded...
+        let replay = Journal::load(&dir).unwrap();
+        assert_eq!(replay.jobs.len(), 4);
+        assert_eq!(replay.next_id, 5);
+        // ...and the next compaction truncates it and completes
+        let compacted = Journal::compact(&dir, replay, 1).unwrap();
+        assert_eq!(
+            compacted.jobs.iter().map(|job| job.id).collect::<Vec<_>>(),
+            vec![4]
+        );
+        assert!(!tmp.exists(), "tmp renamed over the journal");
+        let reloaded = Journal::load(&dir).unwrap();
+        assert_eq!(reloaded.jobs.len(), 1);
+        assert_eq!(reloaded.next_id, 5);
         std::fs::remove_dir_all(&dir).ok();
     }
 

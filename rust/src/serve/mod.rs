@@ -49,9 +49,11 @@ use std::time::Duration;
 
 use anyhow::{Context, Result};
 
+use crate::batch::BatchResults;
 use crate::config::JobConfig;
 use crate::coordinator::progress::Metrics;
 use crate::engine::core::{lock_ok, panic_message, wait_ok};
+use crate::integrator::spec::Estimate;
 use crate::runtime::ExecTier;
 use crate::session::{ErrorPayload, JobOutput, Session};
 use crate::util::json::Json;
@@ -95,6 +97,13 @@ pub struct ServeConfig {
     /// pinning an http worker forever. `Duration::ZERO` disables the
     /// guard.
     pub read_timeout: Duration,
+    /// Estimate-count bound on `GET /v1/jobs/{id}` recall; a stored
+    /// result with more total estimates answers 413 instead of
+    /// streaming gigabytes to a casual poll.
+    pub max_recall: usize,
+    /// Finished jobs kept when the journal is compacted on restart
+    /// (unfinished jobs are always kept).
+    pub journal_keep: usize,
 }
 
 impl Default for ServeConfig {
@@ -114,6 +123,8 @@ impl Default for ServeConfig {
             tier: None,
             max_body: 1 << 20,
             read_timeout: Duration::from_secs(10),
+            max_recall: 1 << 20,
+            journal_keep: 256,
         }
     }
 }
@@ -173,10 +184,60 @@ impl JobStatus {
     }
 }
 
+/// A finished job's result held for recall — columnar
+/// ([`BatchResults`] per trial), not a JSON tree. A million-estimate
+/// result is four `f64`/`u64` columns (~32 bytes each) instead of a
+/// million boxed `Json::Obj` maps, and recall serializes estimates
+/// straight from the columns through a bounded buffer.
+pub(crate) struct StoredResult {
+    trials: Vec<BatchResults>,
+}
+
+impl StoredResult {
+    pub(crate) fn from_output(out: &JobOutput) -> StoredResult {
+        StoredResult {
+            trials: out
+                .per_trial
+                .iter()
+                .map(|ests| BatchResults::from_estimates(ests))
+                .collect(),
+        }
+    }
+
+    /// Rebuild columns from a journaled `{"trials": [[est, ..], ..]}`
+    /// body; `None` on any shape mismatch (the job then recalls as
+    /// status-only rather than poisoning the ledger).
+    pub(crate) fn from_result_json(j: &Json) -> Option<StoredResult> {
+        let trials = j
+            .get("trials")
+            .and_then(Json::as_arr)?
+            .iter()
+            .map(|t| {
+                let ests = t
+                    .as_arr()?
+                    .iter()
+                    .map(|e| Estimate::from_json(e).ok())
+                    .collect::<Option<Vec<_>>>()?;
+                Some(BatchResults::from_estimates(&ests))
+            })
+            .collect::<Option<Vec<_>>>()?;
+        Some(StoredResult { trials })
+    }
+
+    pub(crate) fn trials(&self) -> &[BatchResults] {
+        &self.trials
+    }
+
+    /// Total estimates across trials — the `max_recall` unit.
+    pub(crate) fn n_estimates(&self) -> usize {
+        self.trials.iter().map(BatchResults::len).sum()
+    }
+}
+
 /// Ledger entry behind `GET /v1/jobs/{id}`.
 pub(crate) struct JobEntry {
     pub status: JobStatus,
-    pub result: Option<Json>,
+    pub result: Option<Arc<StoredResult>>,
     pub error: Option<Json>,
 }
 
@@ -266,15 +327,18 @@ impl ServerState {
         });
         match outcome {
             Ok(out) => {
-                let result = result_json(&out);
                 if let Some(j) = &self.journal {
-                    if let Err(e) = j.done(id, &result) {
+                    // The JSON tree is transient — built for the
+                    // append, dropped before the ledger stores the
+                    // columnar form.
+                    if let Err(e) = j.done(id, &result_json(&out)) {
                         eprintln!(
                             "journal write failed for job {id}: {e:#}"
                         );
                     }
                 }
-                self.set_status(id, JobStatus::Done, Some(result), None);
+                let stored = Arc::new(StoredResult::from_output(&out));
+                self.set_status(id, JobStatus::Done, Some(stored), None);
                 self.metrics.done.fetch_add(1, Ordering::Relaxed);
                 sink(&status_frame(id, JobStatus::Done, None));
             }
@@ -325,7 +389,7 @@ impl ServerState {
         &self,
         id: u64,
         status: JobStatus,
-        result: Option<Json>,
+        result: Option<Arc<StoredResult>>,
         error: Option<Json>,
     ) {
         if let Some(entry) = lock_ok(&self.jobs).get_mut(&id) {
@@ -376,7 +440,7 @@ impl ServerState {
     pub(crate) fn metrics_json(&self) -> Json {
         let em = self.engine_metrics();
         let mut engine = BTreeMap::new();
-        let counters: [(&str, u64); 8] = [
+        let counters: [(&str, u64); 10] = [
             ("tasks_done", em.done()),
             ("retries", em.retried()),
             ("failures", em.failed()),
@@ -385,6 +449,8 @@ impl ServerState {
             ("plan_misses", em.plan_misses()),
             ("fused_hits", em.fused_hits()),
             ("fused_misses", em.fused_misses()),
+            ("dedup_unique", em.dedup_unique()),
+            ("dedup_folded", em.dedup_folded()),
         ];
         for (k, v) in counters {
             engine.insert(k.to_string(), Json::Num(v as f64));
@@ -395,12 +461,14 @@ impl ServerState {
         );
         let reg = self.session.registry();
         let mut registry = BTreeMap::new();
-        let ledgers: [(&str, u64); 5] = [
+        let ledgers: [(&str, u64); 7] = [
             ("compiles", reg.compile_count()),
             ("plan_lowers", reg.plan_lower_count()),
             ("plan_hits", reg.plan_hit_count()),
             ("fused_lowers", reg.fused_lower_count()),
             ("fused_hits", reg.fused_hit_count()),
+            ("dedup_unique", reg.dedup_unique_count()),
+            ("dedup_folded", reg.dedup_folded_count()),
         ];
         for (k, v) in ledgers {
             registry.insert(k.to_string(), Json::Num(v as f64));
@@ -550,9 +618,18 @@ impl Server {
         }
         let session = b.build()?;
 
+        // Load, compact, then open: compaction rewrites `jobs.jsonl`
+        // to the unfinished jobs plus the last `journal_keep` finished
+        // ones (atomically, via tmp + rename), so the journal cannot
+        // grow without bound across restarts. The append handle is
+        // opened only after the rewrite so it points at the compact
+        // file.
         let (journal, replay) = match &cfg.state_dir {
             Some(dir) => {
-                (Some(Journal::open(dir)?), Journal::load(dir)?)
+                let replay = Journal::load(dir)?;
+                let replay =
+                    Journal::compact(dir, replay, cfg.journal_keep)?;
+                (Some(Journal::open(dir)?), replay)
             }
             None => (None, Replay::default()),
         };
@@ -562,7 +639,8 @@ impl Server {
             let entry = match &job.outcome {
                 Some(Outcome::Done(r)) => JobEntry {
                     status: JobStatus::Done,
-                    result: Some(r.clone()),
+                    result: StoredResult::from_result_json(r)
+                        .map(Arc::new),
                     error: None,
                 },
                 Some(Outcome::Failed(e)) => JobEntry {
@@ -725,6 +803,34 @@ mod tests {
 
         let tagged = with_id(Json::parse(r#"{"value":1}"#).unwrap(), 4);
         assert_eq!(tagged.get("id").and_then(Json::as_i64), Some(4));
+    }
+
+    #[test]
+    fn stored_result_round_trips_columns() {
+        let est = Estimate {
+            value: 1.25,
+            std_err: 0.5,
+            n_samples: 64,
+            rounds: 2,
+        };
+        let out = JobOutput {
+            per_trial: vec![vec![est; 3], vec![est; 2]],
+            normal: None,
+        };
+        let s = StoredResult::from_output(&out);
+        assert_eq!(s.n_estimates(), 5);
+        assert_eq!(s.trials().len(), 2);
+        assert_eq!(s.trials()[0].get(2), est);
+        // journaled JSON → columns → same estimates
+        let back =
+            StoredResult::from_result_json(&result_json(&out)).unwrap();
+        assert_eq!(back.n_estimates(), 5);
+        assert_eq!(back.trials()[1].get(1), est);
+        // malformed journal bodies degrade to status-only recall
+        assert!(StoredResult::from_result_json(
+            &Json::parse("{}").unwrap()
+        )
+        .is_none());
     }
 
     #[test]

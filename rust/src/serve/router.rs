@@ -10,7 +10,9 @@ use crate::session::{validate_job, ErrorPayload};
 use crate::util::json::Json;
 
 use super::http::{self, ChunkedWriter, ReadError};
-use super::{error_body, status_frame, JobStatus, ServerState};
+use super::{
+    error_body, status_frame, JobStatus, ServerState, StoredResult,
+};
 
 use std::sync::atomic::Ordering;
 
@@ -207,8 +209,8 @@ fn post_job(
     }
 }
 
-/// `GET /v1/jobs/{id}`: status for running jobs, full result or error
-/// payload for finished ones.
+/// `GET /v1/jobs/{id}`: status for running jobs, streamed result or
+/// error payload for finished ones.
 fn get_job(state: &ServerState, mut stream: TcpStream, id: u64) {
     let entry = crate::engine::core::lock_ok(&state.jobs)
         .get(&id)
@@ -224,11 +226,80 @@ fn get_job(state: &ServerState, mut stream: TcpStream, id: u64) {
         );
         return;
     };
-    let mut body = status_frame(id, status, error);
-    if let (Json::Obj(m), Some(r)) = (&mut body, result) {
-        m.insert("result".to_string(), r);
+    let Some(result) = result else {
+        // running, failed, or done with no recallable result: the
+        // status frame (plus any error payload) is the whole story
+        let _ = http::write_json(
+            &mut stream,
+            200,
+            &status_frame(id, status, error),
+        );
+        return;
+    };
+    if result.n_estimates() > state.cfg.max_recall {
+        let _ = http::write_json(
+            &mut stream,
+            413,
+            &error_body(&ErrorPayload::new(
+                "result_too_large",
+                format!(
+                    "result holds {} estimates, over the recall \
+                     bound {}",
+                    result.n_estimates(),
+                    state.cfg.max_recall
+                ),
+            )),
+        );
+        return;
     }
-    let _ = http::write_json(&mut stream, 200, &body);
+    stream_result(stream, id, status, &result);
+}
+
+/// Bytes buffered before a chunk is flushed on the recall stream.
+const RECALL_FLUSH: usize = 32 * 1024;
+
+/// Stream a finished job's result as one chunked JSON document,
+/// serialized straight from the stored columns through a bounded
+/// buffer — recall memory is O(buffer), never O(result), which is
+/// what lets a server recall 10⁶-estimate batches it could not
+/// afford to materialize as one `String`.
+fn stream_result(
+    stream: TcpStream,
+    id: u64,
+    status: JobStatus,
+    result: &StoredResult,
+) {
+    let Ok(mut cw) = ChunkedWriter::start(stream) else { return };
+    // The envelope is the status frame with a `result` key spliced in
+    // before the closing brace, so the streamed body parses to the
+    // same object shape the ledger used to materialize.
+    let frame = status_frame(id, status, None).to_string();
+    let mut buf = String::with_capacity(2 * RECALL_FLUSH);
+    buf.push_str(frame.strip_suffix('}').unwrap_or(&frame));
+    buf.push_str(",\"result\":{\"trials\":[");
+    for (t, trial) in result.trials().iter().enumerate() {
+        if t > 0 {
+            buf.push(',');
+        }
+        buf.push('[');
+        for (i, est) in trial.iter().enumerate() {
+            if i > 0 {
+                buf.push(',');
+            }
+            buf.push_str(&est.to_json().to_string());
+            if buf.len() >= RECALL_FLUSH {
+                if cw.write_part(&buf).is_err() {
+                    return;
+                }
+                buf.clear();
+            }
+        }
+        buf.push(']');
+    }
+    buf.push_str("]}}\n");
+    if cw.write_part(&buf).is_ok() {
+        let _ = cw.finish();
+    }
 }
 
 #[cfg(test)]

@@ -1,0 +1,113 @@
+//! Fluent builder for columnar batch runs (the 10⁵–10⁶ regime).
+
+use anyhow::Result;
+
+use crate::batch::{self, BatchConfig, BatchJobs, BatchResults};
+
+use super::{Error, Session};
+
+/// Chainable configuration for a streaming columnar batch — the
+/// million-integrand counterpart of [`super::MultiBuilder`]. Terminate
+/// with [`run`](Self::run); results are bit-identical to the boxed
+/// `multifunctions` path on the same jobs and config.
+#[must_use = "builders do nothing until .run()"]
+pub struct BatchBuilder<'s> {
+    session: &'s Session,
+    jobs: &'s BatchJobs,
+    cfg: BatchConfig,
+}
+
+impl<'s> BatchBuilder<'s> {
+    pub(crate) fn new(session: &'s Session, jobs: &'s BatchJobs) -> Self {
+        BatchBuilder { session, jobs, cfg: BatchConfig::default() }
+    }
+
+    /// Samples per function (rounded up to whole launches).
+    pub fn samples(mut self, n: usize) -> Self {
+        self.cfg.samples_per_fn = n;
+        self
+    }
+
+    /// RNG seed shared by the batch.
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.cfg.seed = seed;
+        self
+    }
+
+    /// Independent-repeat id.
+    pub fn trial(mut self, trial: u32) -> Self {
+        self.cfg.trial = trial;
+        self
+    }
+
+    /// First Philox stream id; function `i` uses `stream_base + i`.
+    pub fn stream_base(mut self, stream: u32) -> Self {
+        self.cfg.stream_base = stream;
+        self
+    }
+
+    /// Per-window retry budget on the engine.
+    pub fn max_retries(mut self, n: u32) -> Self {
+        self.cfg.max_retries = n;
+        self
+    }
+
+    /// Force a specific executable (default: best fit by
+    /// dims + samples).
+    pub fn exe(mut self, name: impl Into<String>) -> Self {
+        self.cfg.exe = Some(name.into());
+        self
+    }
+
+    /// In-flight watermark: launch tasks per submission window (at
+    /// most two windows ride the engine). Any value is bit-identical;
+    /// it trades peak memory against submission overhead.
+    pub fn watermark(mut self, n: usize) -> Self {
+        self.cfg.watermark = n;
+        self
+    }
+
+    /// Replace the whole [`BatchConfig`] (escape hatch mirroring
+    /// [`super::MultiBuilder::config`]).
+    pub fn config(mut self, cfg: BatchConfig) -> Self {
+        self.cfg = cfg;
+        self
+    }
+
+    /// Integrate with streaming reduction; one estimate row per
+    /// function, in order.
+    pub fn run(self) -> Result<BatchResults> {
+        if self.cfg.samples_per_fn == 0 {
+            return Err(Error::ZeroSamples.into());
+        }
+        batch::integrate(self.session.exec(), self.jobs, &self.cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::integrator::spec::IntegralJob;
+
+    #[test]
+    fn zero_samples_is_rejected_before_submission() {
+        let s = Session::builder().emulated().build().unwrap();
+        let job =
+            IntegralJob::parse("x1*x1", &[(0.0, 1.0)]).unwrap();
+        let jobs = BatchJobs::scan(&job, &[]).unwrap();
+        let err = s.batch(&jobs).samples(0).run().unwrap_err();
+        assert_eq!(
+            err.downcast_ref::<Error>(),
+            Some(&Error::ZeroSamples)
+        );
+    }
+
+    #[test]
+    fn empty_batch_runs_to_empty_results() {
+        let s = Session::builder().emulated().build().unwrap();
+        let job = IntegralJob::parse("x1", &[(0.0, 1.0)]).unwrap();
+        let jobs = BatchJobs::scan(&job, &[]).unwrap();
+        let res = s.batch(&jobs).samples(1024).run().unwrap();
+        assert!(res.is_empty());
+    }
+}

@@ -63,12 +63,14 @@ use crate::runtime::device::DevicePool;
 use crate::runtime::registry::Registry;
 use crate::runtime::ExecTier;
 
+mod batch;
 mod functional;
 mod harmonic;
 mod job;
 mod multi;
 mod normal;
 
+pub use self::batch::BatchBuilder;
 pub use self::functional::FunctionalBuilder;
 pub use self::harmonic::HarmonicBuilder;
 pub use self::job::{validate_job, JobEvent, JobOutput};
@@ -355,6 +357,17 @@ impl Session {
         jobs: &'a [IntegralJob],
     ) -> MultiBuilder<'a> {
         MultiBuilder::new(self, jobs)
+    }
+
+    /// Columnar batch execution for the 10⁵–10⁶ regime: deduped
+    /// programs, struct-of-arrays jobs/results, bounded-watermark
+    /// streaming reduction ([`crate::batch`]). Bit-identical to
+    /// [`multifunctions`](Self::multifunctions) on the same jobs.
+    pub fn batch<'a>(
+        &'a self,
+        jobs: &'a crate::batch::BatchJobs,
+    ) -> BatchBuilder<'a> {
+        BatchBuilder::new(self, jobs)
     }
 
     /// `ZMCintegral_functional`: one integrand over a parameter grid

@@ -1,0 +1,253 @@
+//! Batch-subsystem acceptance tests: hash-consed dedup + columnar
+//! jobs + streaming reduction must be **bit-identical** to the boxed
+//! multifunctions path — at every execution tier, engine count, and
+//! watermark — while the dedup ledger proves the caches saw one
+//! canonical program instead of one per function.
+//!
+//! Device-backed throughout (CPU emulator registry); skipped under
+//! `--features pjrt` like the other emulator suites.
+
+#![cfg(not(feature = "pjrt"))]
+
+use zmc::batch::BatchJobs;
+use zmc::integrator::spec::{Estimate, IntegralJob};
+use zmc::runtime::ExecTier;
+use zmc::session::Session;
+use zmc::util::proptest::{check, Gen};
+
+const TIERS: [ExecTier; 3] =
+    [ExecTier::Naive, ExecTier::Plan, ExecTier::Fused];
+const ENGINES: [usize; 3] = [1, 2, 4];
+
+fn session(tier: ExecTier, engines: usize) -> Session {
+    Session::builder()
+        .emulated()
+        .workers(2)
+        .engines(engines)
+        .execution_tier(tier)
+        .build()
+        .unwrap()
+}
+
+fn assert_bit_identical(got: &[Estimate], want: &[Estimate], ctx: &str) {
+    assert_eq!(got.len(), want.len(), "{ctx}: result count");
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        assert_eq!(
+            g.value.to_bits(),
+            w.value.to_bits(),
+            "{ctx}: fn {i} value {} vs {}",
+            g.value,
+            w.value
+        );
+        assert_eq!(
+            g.std_err.to_bits(),
+            w.std_err.to_bits(),
+            "{ctx}: fn {i} std_err"
+        );
+        assert_eq!(g.n_samples, w.n_samples, "{ctx}: fn {i} n_samples");
+    }
+}
+
+/// A parameter scan written the adversarial way: the parameter is a
+/// *literal constant* in each source string, so every function is a
+/// distinct `Program` that only dedup canonicalization can fold.
+fn constant_scan(consts: &[f64]) -> Vec<IntegralJob> {
+    consts
+        .iter()
+        .map(|c| {
+            IntegralJob::parse(
+                &format!("x1*x1*{c:.12} + {c:.12}"),
+                &[(0.0, 1.0)],
+            )
+            .unwrap()
+        })
+        .collect()
+}
+
+#[test]
+fn columnar_matches_boxed_at_every_tier_and_engine_count() {
+    // near-collision constants: equal, off-by-one-ulp-ish, and far
+    let consts =
+        [0.5, 0.5, 0.500000000001, 1.25, 2.0, 0.499999999999, 3.75];
+    let jobs = constant_scan(&consts);
+    let jb = BatchJobs::from_jobs(&jobs).unwrap();
+    assert!(jb.n_classes() < jobs.len(), "constants must fold");
+    for tier in TIERS {
+        for engines in ENGINES {
+            let ctx = format!("tier={tier:?} engines={engines}");
+            let s = session(tier, engines);
+            let want = s
+                .multifunctions(&jobs)
+                .samples(1 << 10)
+                .seed(7)
+                .run()
+                .unwrap();
+            let got = s
+                .batch(&jb)
+                .samples(1 << 10)
+                .seed(7)
+                .run()
+                .unwrap();
+            assert_bit_identical(&got.to_estimates(), &want, &ctx);
+        }
+    }
+}
+
+#[test]
+fn random_scans_dedup_bit_identically_to_boxed() {
+    check(0xBA7C4, 12, |g: &mut Gen| {
+        let n = 3 + g.below(9);
+        // constants with deliberate exact and near collisions
+        let mut consts = Vec::with_capacity(n);
+        for i in 0..n {
+            let c: f64 = match g.below(4) {
+                0 if i > 0 => consts[i - 1],
+                1 if i > 0 => consts[i - 1] + 1e-7,
+                _ => g.range_f64(0.125, 3.0),
+            };
+            consts.push(c);
+        }
+        let jobs = constant_scan(&consts);
+        let tier = TIERS[g.below(3)];
+        let engines = ENGINES[g.below(3)];
+        let seed = g.next_u64() >> 1;
+        let ctx = format!("tier={tier:?} engines={engines} seed={seed}");
+        let s = session(tier, engines);
+        let want = s
+            .multifunctions(&jobs)
+            .samples(512)
+            .seed(seed)
+            .run()
+            .unwrap();
+        let jb = BatchJobs::from_jobs(&jobs).unwrap();
+        let got =
+            s.batch(&jb).samples(512).seed(seed).run().unwrap();
+        assert_bit_identical(&got.to_estimates(), &want, &ctx);
+    });
+}
+
+#[test]
+fn scan_builder_matches_boxed_per_theta_binding() {
+    // the intended 10⁶-regime entry point: one template, a theta
+    // column — against the boxed path on the individually bound jobs
+    let base = IntegralJob::with_params(
+        "sin(x1*p0) + x2*p1",
+        &[(0.0, 1.0), (0.0, 2.0)],
+        &[0.0, 0.0],
+    )
+    .unwrap();
+    let thetas: Vec<Vec<f64>> =
+        (0..11).map(|i| vec![0.3 + i as f64 * 0.17, i as f64]).collect();
+    let boxed: Vec<IntegralJob> =
+        thetas.iter().map(|t| base.bind(t).unwrap()).collect();
+    let jb = BatchJobs::scan(&base, &thetas).unwrap();
+    assert_eq!(jb.n_classes(), 1);
+    assert_eq!(jb.n_folded(), thetas.len() - 1);
+    for engines in [1, 4] {
+        let s = session(ExecTier::Fused, engines);
+        let want = s
+            .multifunctions(&boxed)
+            .samples(1 << 11)
+            .seed(42)
+            .run()
+            .unwrap();
+        let got =
+            s.batch(&jb).samples(1 << 11).seed(42).run().unwrap();
+        assert_bit_identical(
+            &got.to_estimates(),
+            &want,
+            &format!("scan engines={engines}"),
+        );
+    }
+}
+
+#[test]
+fn watermark_choice_is_invisible_in_results() {
+    let jobs = constant_scan(&[
+        0.25, 0.5, 0.75, 1.0, 1.25, 1.5, 1.75, 2.0, 2.25, 2.5, 2.75,
+        3.0,
+    ]);
+    let jb = BatchJobs::from_jobs(&jobs).unwrap();
+    let s = session(ExecTier::Fused, 2);
+    let run = |wm: usize| {
+        s.batch(&jb)
+            .samples(1 << 11)
+            .seed(3)
+            .watermark(wm)
+            .run()
+            .unwrap()
+    };
+    let base = run(1);
+    for wm in [2, 7, zmc::batch::DEFAULT_WATERMARK, 10_000] {
+        let r = run(wm);
+        assert_bit_identical(
+            &r.to_estimates(),
+            &base.to_estimates(),
+            &format!("watermark={wm}"),
+        );
+        // merged moment columns, not just the derived estimates
+        for i in 0..r.len() {
+            let (a, b) = (r.moment(i), base.moment(i));
+            assert_eq!(a.n, b.n, "watermark={wm}: fn {i} moment n");
+            assert_eq!(
+                a.sum.to_bits(),
+                b.sum.to_bits(),
+                "watermark={wm}: fn {i} moment sum"
+            );
+            assert_eq!(
+                a.sumsq.to_bits(),
+                b.sumsq.to_bits(),
+                "watermark={wm}: fn {i} moment sumsq"
+            );
+        }
+    }
+}
+
+#[test]
+fn dedup_ledger_counts_unique_and_folded_programs() {
+    // mirrors the plan/fused ledger tests in engine_test.rs: the
+    // registry ledger and the engine metrics must both record how many
+    // canonical programs the caches saw vs how many dedup folded away.
+    // 7 constant-variants (one class) + 1 structurally distinct
+    // program = exactly one 8-slot block, no padding.
+    let mut jobs = constant_scan(&[
+        0.5, 1.0, 1.5, 2.0, 2.5, 3.0, 3.5,
+    ]);
+    jobs.push(IntegralJob::parse("sin(x1)", &[(0.0, 1.0)]).unwrap());
+    let jb = BatchJobs::from_jobs(&jobs).unwrap();
+    assert_eq!(jb.n_classes(), 2);
+    assert_eq!(jb.n_folded(), 6);
+
+    let s = Session::builder()
+        .emulated()
+        .workers(1)
+        .execution_tier(ExecTier::Fused)
+        .build()
+        .unwrap();
+    assert_eq!(s.registry().dedup_unique_count(), 0);
+    assert_eq!(s.registry().dedup_folded_count(), 0);
+
+    s.batch(&jb).samples(512).run().unwrap();
+    assert_eq!(s.registry().dedup_unique_count(), 2);
+    assert_eq!(s.registry().dedup_folded_count(), 6);
+    let em = s.engine().metrics();
+    assert_eq!(em.dedup_unique(), 2);
+    assert_eq!(em.dedup_folded(), 6);
+    // the payoff the ledger certifies: one fused lowering per
+    // canonical program on one worker — not one per function
+    assert_eq!(
+        s.registry().fused_lower_count(),
+        2,
+        "caches must see the canonical program, not 8 variants"
+    );
+
+    // each batch run ledgers its own dedup events
+    s.batch(&jb).samples(512).run().unwrap();
+    assert_eq!(s.registry().dedup_unique_count(), 4);
+    assert_eq!(s.registry().dedup_folded_count(), 12);
+    assert_eq!(
+        s.registry().fused_lower_count(),
+        2,
+        "re-running the batch must hit the warm fused cache"
+    );
+}

@@ -58,6 +58,23 @@ fn concurrent_submissions_match_serial() {
 }
 
 #[test]
+fn wait_each_streams_outputs_in_task_order() {
+    // the streaming-reduction keystone: however 4 workers race through
+    // the queue, wait_each must deliver results in submission order —
+    // one at a time, never materializing the full output vector
+    let engine = Engine::new(Mock, EngineConfig::new(4)).unwrap();
+    for round in 0..4u64 {
+        let base = round * 10_000;
+        let tasks: Vec<u64> = (base..base + 200).collect();
+        let want: Vec<u64> = tasks.iter().map(|&t| mock_out(t)).collect();
+        let h = engine.submit(tasks).unwrap();
+        let mut got = Vec::new();
+        h.wait_each(&mut |o| got.push(o)).unwrap();
+        assert_eq!(got, want, "wait_each must drain in task order");
+    }
+}
+
+#[test]
 fn engine_fault_policy_retries_transiently() {
     let metrics = Arc::new(Metrics::new());
     let engine = Engine::with_policy(

@@ -600,6 +600,61 @@ fn journal_replays_interrupted_jobs_bit_identically() {
     std::fs::remove_dir_all(&dir).ok();
 }
 
+#[test]
+fn recall_cap_answers_413_result_too_large() {
+    // max_recall of 1 estimate: small_multi (2 trials) always exceeds
+    // it, so recall must refuse rather than stream the stored columns
+    let srv = TestServer::start(ServeConfig {
+        max_recall: 1,
+        ..ServeConfig::default()
+    });
+    let resp = post_job(srv.addr, &small_multi().to_json().to_string());
+    assert_eq!(resp.status, 200);
+    let frames = resp.lines();
+    assert_eq!(
+        frames.last().unwrap().get("status").and_then(Json::as_str),
+        Some("done"),
+        "the job itself still runs and streams"
+    );
+    let id = frames[0].get("id").and_then(Json::as_i64).unwrap();
+    let r = get(srv.addr, &format!("/v1/jobs/{id}"));
+    assert_eq!(r.status, 413);
+    assert_eq!(r.error_code(), "result_too_large");
+}
+
+#[test]
+fn journal_compaction_prunes_finished_jobs_but_keeps_ids() {
+    let dir = temp_dir("compact");
+    {
+        let srv = TestServer::start(ServeConfig {
+            state_dir: Some(dir.clone()),
+            ..ServeConfig::default()
+        });
+        let resp =
+            post_job(srv.addr, &small_normal().to_json().to_string());
+        assert_eq!(
+            resp.lines().last().unwrap().get("status").and_then(Json::as_str),
+            Some("done")
+        );
+    }
+    // restart with keep=0: the finished job's records compact away on
+    // bind, but the seq record keeps its id retired
+    let srv = TestServer::start(ServeConfig {
+        state_dir: Some(dir.clone()),
+        journal_keep: 0,
+        ..ServeConfig::default()
+    });
+    assert_eq!(get(srv.addr, "/v1/jobs/1").status, 404);
+    let resp = post_job(srv.addr, &small_normal().to_json().to_string());
+    assert_eq!(
+        resp.lines()[0].get("id").and_then(Json::as_i64),
+        Some(2),
+        "compaction must never reissue a pruned id"
+    );
+    drop(srv);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
 // ------------------------------------------------- codec round trips
 
 fn wild_f64(g: &mut Gen) -> f64 {
